@@ -1,0 +1,94 @@
+//! Auto-scaling demo: the paper's headline claim, as a timeline.
+//!
+//! An 8-machine plant starts with one compute node. A burst of jobs
+//! arrives; the autoscaler powers up machines, the new containers
+//! self-register, the hostfile grows, jobs drain, then sustained
+//! idleness shrinks the pool back to the minimum.
+//!
+//! Run with: `cargo run --release --example autoscale_demo`
+
+use vhpc::cluster::head::JobKind;
+use vhpc::cluster::vcluster::{NodeState, VirtualCluster};
+use vhpc::config::ClusterSpec;
+use vhpc::sim::SimTime;
+
+fn print_row(vc: &VirtualCluster, label: &str) {
+    let states: String = (1..vc.state.spec.machines)
+        .map(|i| match vc.node_state(vhpc::util::ids::MachineId::new(i)) {
+            NodeState::Off => '.',
+            NodeState::Booting => 'b',
+            NodeState::StartingEngine => 'e',
+            NodeState::Deploying => 'd',
+            NodeState::Ready => 'R',
+        })
+        .collect();
+    println!(
+        "t={:>9}  nodes=[{states}]  ready={}  queued={}  done={}   {label}",
+        vc.now().to_string(),
+        vc.ready_compute_nodes(),
+        vc.state.head.queue.len(),
+        vc.completed_jobs().len(),
+    );
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut spec = ClusterSpec::paper_testbed();
+    spec.machines = 8;
+    spec.machine_spec.boot_time = SimTime::from_secs(60);
+    spec.autoscale.min_nodes = 1;
+    spec.autoscale.max_nodes = 7;
+    spec.autoscale.interval = SimTime::from_secs(5);
+    spec.autoscale.cooldown = SimTime::from_secs(20);
+    spec.autoscale.idle_timeout = SimTime::from_secs(180);
+
+    let mut vc = VirtualCluster::new(spec)?;
+    vc.start();
+    vc.advance_until(SimTime::from_secs(600), |st| {
+        st.node_states.iter().skip(1).any(|s| *s == NodeState::Ready)
+    });
+    print_row(&vc, "<- initial node up");
+
+    // burst: 5 jobs of 24 ranks each (2 nodes' worth apiece)
+    for i in 0..5 {
+        vc.submit(
+            &format!("burst-{i}"),
+            24,
+            JobKind::Synthetic { duration: SimTime::from_secs(45) },
+        );
+    }
+    print_row(&vc, "<- burst of 5x24-rank jobs submitted");
+
+    let mut last_ready = vc.ready_compute_nodes();
+    let mut last_done = 0;
+    for _ in 0..400 {
+        vc.advance(SimTime::from_secs(10));
+        let ready = vc.ready_compute_nodes();
+        let done = vc.completed_jobs().len();
+        if ready != last_ready || done != last_done {
+            let label = if ready > last_ready {
+                "<- scaled up"
+            } else if ready < last_ready {
+                "<- scaled down"
+            } else {
+                "<- job completed"
+            };
+            print_row(&vc, label);
+            last_ready = ready;
+            last_done = done;
+        }
+        if done == 5 && ready == 1 {
+            break;
+        }
+    }
+    print_row(&vc, "<- final state");
+    anyhow::ensure!(vc.completed_jobs().len() == 5, "not all jobs finished");
+    anyhow::ensure!(vc.ready_compute_nodes() == 1, "did not scale back to min");
+
+    println!("\nscale actions taken:");
+    for (t, a) in &vc.state.autoscaler.actions {
+        println!("  t={t}  {a:?}");
+    }
+    println!("\nmetrics:\n{}", vc.metrics().render());
+    println!("autoscale_demo OK");
+    Ok(())
+}

@@ -1,0 +1,86 @@
+//! End-to-end driver (EXPERIMENTS.md §E2E): the full system on a real
+//! workload.
+//!
+//! Brings up the auto-scaling virtual cluster, submits a 16-domain
+//! Jacobi heat-diffusion solve (the paper's Fig. 8 job, 256×256 global
+//! grid), and prints the residual curve plus the comm/compute breakdown.
+//! Every layer is exercised: Pallas kernel → JAX model → HLO artifact →
+//! PJRT execution from the Rust MPI ranks → virtual fabric → consul
+//! discovery → autoscaled provisioning.
+//!
+//! Run with: `cargo run --release --example heat_cluster`
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use vhpc::cluster::vcluster::VirtualCluster;
+use vhpc::config::ClusterSpec;
+use vhpc::mpi::launcher::LaunchPlan;
+use vhpc::runtime::Runtime;
+use vhpc::sim::SimTime;
+use vhpc::workloads::jacobi::{run_jacobi, serial_jacobi, stitch, JacobiSpec};
+
+fn main() -> anyhow::Result<()> {
+    let spec = ClusterSpec::paper_testbed();
+    let mut vc = VirtualCluster::new(spec)?;
+    vc.start();
+    anyhow::ensure!(
+        vc.advance_until(SimTime::from_secs(600), |st| st.head.slots_available() >= 16),
+        "cluster never offered 16 slots"
+    );
+    println!("cluster up at t={}; hostfile:\n{}", vc.now(), vc.hostfile());
+
+    // Build the launch plan straight from the rendered hostfile.
+    let hostfile = vc.state.head.hostfile().expect("hostfile");
+    let plan = LaunchPlan {
+        hostfile,
+        n_ranks: 16,
+        ip_to_container: HashMap::from_iter(
+            vc.state.ip_to_container.iter().map(|(k, v)| (*k, *v)),
+        ),
+        fabric: Arc::clone(&vc.state.fabric),
+        eager_threshold: 64 * 1024,
+    };
+    let jspec = JacobiSpec {
+        px: 4,
+        py: 4,
+        tile: 64,
+        steps: 400,
+        check_every: 20,
+        tol: 1e-4,
+        artifacts: Runtime::default_dir(),
+    };
+    let (gh, gw) = jspec.global_shape();
+    println!(
+        "running 16-domain Jacobi: global {gh}x{gw}, tiles {}x{}, up to {} steps",
+        jspec.tile, jspec.tile, jspec.steps
+    );
+    let report = run_jacobi(&plan, &jspec)?;
+
+    println!("\nresidual curve (step, global squared residual):");
+    for (step, res) in &report.residual_curve {
+        println!("  {step:>5}  {res:.6e}");
+    }
+    println!("\nsteps run:            {}", report.steps_run);
+    println!("final residual:       {:.6e}", report.final_residual);
+    println!("wall clock:           {:.3}s", report.wall.as_secs_f64());
+    println!("compute (max rank):   {:.3}s", report.compute_wall_max.as_secs_f64());
+    println!("virtual comm time:    {}", report.comm_time);
+    println!("MPI traffic:          {} msgs, {}",
+        report.total_msgs, vhpc::util::format_bytes(report.total_bytes));
+    let steps = report.steps_run as f64;
+    println!("steps/sec (wall):     {:.1}", steps / report.wall.as_secs_f64());
+
+    // Validate against the serial oracle on the same global grid.
+    print!("\nvalidating against serial oracle... ");
+    let got = stitch(&report.ranks, 4, 4, 64);
+    let (want, _) = serial_jacobi(gh, gw, report.steps_run);
+    let max_err = got
+        .iter()
+        .zip(&want)
+        .map(|(g, w)| (g - w).abs())
+        .fold(0f32, f32::max);
+    anyhow::ensure!(max_err < 1e-4, "max |err| = {max_err}");
+    println!("OK (max |err| = {max_err:.2e})");
+    println!("heat_cluster OK");
+    Ok(())
+}

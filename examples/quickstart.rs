@@ -1,0 +1,67 @@
+//! Quickstart: the paper's workflow in ~80 lines.
+//!
+//! 1. Parse the Fig. 2 Dockerfile and build the compute-node image.
+//! 2. Bring up the Fig. 4 deployment: head on blade01, node02/node03 on
+//!    blade02/blade03, all self-registering through consul.
+//! 3. Watch consul-template render the MPI hostfile (Fig. 5).
+//! 4. Run a 16-rank MPI job (Fig. 8) — real PJRT compute per rank.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use vhpc::cluster::head::{JobKind, JobState};
+use vhpc::cluster::vcluster::VirtualCluster;
+use vhpc::config::ClusterSpec;
+use vhpc::dockyard::{Dockerfile, ImageStore};
+use vhpc::sim::SimTime;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. the image (Fig. 2) ---
+    let df = Dockerfile::parse(Dockerfile::paper_compute_node())?;
+    let mut store = ImageStore::with_base_images();
+    let image = store.build(&df, "nchc/mpi-computenode:latest")?;
+    println!("[1] built {} — {} layers:", image.reference, image.layers.len());
+    for l in &image.layers {
+        println!("      {}  {}", l.digest().short(), l.created_by);
+    }
+
+    // --- 2. the cluster (Fig. 4: 3 blades, bridge0, 3 consul servers) ---
+    let spec = ClusterSpec::paper_testbed();
+    println!(
+        "\n[2] powering up '{}': {}x {} ({} cores, {}), bridge={}",
+        spec.name,
+        spec.machines,
+        spec.machine_spec.model,
+        spec.machine_spec.total_cores(),
+        vhpc::util::format_bytes(spec.machine_spec.memory_bytes),
+        spec.bridge.name()
+    );
+    let mut vc = VirtualCluster::new(spec)?;
+    vc.start();
+    let up = vc.advance_until(SimTime::from_secs(600), |st| {
+        st.head.hostfile().map(|h| h.hosts.len()) == Some(2)
+    });
+    anyhow::ensure!(up, "cluster did not come up");
+    println!("    cluster ready at t={} (virtual)", vc.now());
+
+    // --- 3. the hostfile (Fig. 5) ---
+    println!("\n[3] consul-template rendered hostfile:\n{}", vc.hostfile());
+
+    // --- 4. the MPI job (Fig. 8: 16 domains on 2 containers) ---
+    println!("[4] submitting 16-rank Jacobi job (4x4 domains, 64^2 tiles)...");
+    vc.submit("fig8", 16, JobKind::Jacobi { px: 4, py: 4, tile: 64, steps: 100 });
+    let done = vc.advance_until(SimTime::from_secs(3600), |st| !st.head.completed.is_empty());
+    anyhow::ensure!(done, "job did not finish");
+    let rec = &vc.completed_jobs()[0];
+    match (&rec.state, rec.result) {
+        (JobState::Done { started, finished }, Some((steps, residual))) => {
+            println!(
+                "    done: {steps} steps, residual {residual:.3e}, ran {} (virtual)",
+                finished.saturating_sub(*started)
+            );
+        }
+        other => anyhow::bail!("unexpected job outcome: {other:?}"),
+    }
+    println!("\nmetrics:\n{}", vc.metrics().render());
+    println!("quickstart OK");
+    Ok(())
+}

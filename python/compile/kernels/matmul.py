@@ -1,0 +1,64 @@
+"""L1: Pallas blocked matmul kernel (the MXU-path workload).
+
+Used by the GEMM/"linpack-proxy" MPI workload: each rank multiplies its
+local panel. Tiles are 128x128 to match the MXU systolic array shape;
+the K reduction is the innermost grid dimension with an accumulator
+revisited across k steps (standard Pallas pattern).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE = 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pick_tile(n: int, prefer: int) -> int:
+    t = min(prefer, n)
+    while n % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def matmul(a: jax.Array, b: jax.Array, tile: int = DEFAULT_TILE):
+    """C = A @ B with (tm, tk) x (tk, tn) Pallas tiles, f32 accumulate."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    tm = _pick_tile(m, tile)
+    tk = _pick_tile(k, tile)
+    tn = _pick_tile(n, tile)
+    grid = (m // tm, n // tn, k // tk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def vmem_bytes(tile: int) -> int:
+    """Per-program VMEM estimate: A tile + B tile + C accumulator."""
+    return 3 * tile * tile * 4

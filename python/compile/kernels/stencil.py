@@ -1,0 +1,95 @@
+"""L1: Pallas 2-D Jacobi stencil kernel.
+
+The per-rank compute hot-spot of the virtual cluster's MPI workload
+(Fig. 8's "16-domain MPI job"): one Jacobi relaxation step of the 2-D
+Laplace/heat equation on a halo-padded local domain.
+
+    u'[i, j] = 0.25 * (u[i-1, j] + u[i+1, j] + u[i, j-1] + u[i, j+1])
+
+The kernel runs over a (H/bh, W/bw) grid of output tiles. The padded
+input stays un-blocked (whole-array ref) and each program loads its
+(bh+2, bw+2) window — the canonical halo pattern. Per-tile squared
+residual partial sums come out as a (H/bh, W/bw) array so the scalar
+reduction can be fused at L2 without cross-program accumulation.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): each block is sized so
+tile + halo fits comfortably in VMEM (bh=bw=64 → 66*66*4 B ≈ 17 KB input
+window + 16 KB output, far under the ~16 MB budget; larger tiles up to
+512 still fit). The 5-point stencil is VPU element-wise work; interpret
+mode is mandatory on CPU (Mosaic custom-calls cannot run on the CPU
+plugin).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile edge. Local domains in the benches are multiples of 32.
+DEFAULT_BLOCK = 64
+
+
+def _jacobi_kernel(padded_ref, out_ref, res_ref, *, bh: int, bw: int):
+    """One output tile: load the (bh+2, bw+2) halo window, relax, and
+    emit the tile plus its squared-residual partial sum."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    window = padded_ref[pl.dslice(i * bh, bh + 2), pl.dslice(j * bw, bw + 2)]
+    center = window[1:-1, 1:-1]
+    north = window[:-2, 1:-1]
+    south = window[2:, 1:-1]
+    west = window[1:-1, :-2]
+    east = window[1:-1, 2:]
+    new = 0.25 * (north + south + west + east)
+    out_ref[...] = new
+    diff = new - center
+    res_ref[0, 0] = jnp.sum(diff * diff)
+
+
+def _pick_block(n: int, prefer: int) -> int:
+    """Largest divisor of n that is <= prefer (tiles must cover exactly)."""
+    b = min(prefer, n)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def jacobi_step(padded: jax.Array, block: int = DEFAULT_BLOCK):
+    """One Jacobi step on a halo-padded (H+2, W+2) f32 grid.
+
+    Returns ``(new_interior, residual_partials)`` where ``new_interior``
+    is (H, W) and ``residual_partials`` is the per-tile squared-residual
+    sums of shape (H/bh, W/bw).
+    """
+    hp, wp = padded.shape
+    h, w = hp - 2, wp - 2
+    bh = _pick_block(h, block)
+    bw = _pick_block(w, block)
+    gh, gw = h // bh, w // bw
+    kernel = functools.partial(_jacobi_kernel, bh=bh, bw=bw)
+    return pl.pallas_call(
+        kernel,
+        grid=(gh, gw),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=[
+            pl.BlockSpec((bh, bw), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, w), jnp.float32),
+            jax.ShapeDtypeStruct((gh, gw), jnp.float32),
+        ],
+        interpret=True,
+    )(padded)
+
+
+def vmem_bytes(block: int) -> int:
+    """Estimated per-program VMEM footprint (input window + output tile +
+    residual cell), for DESIGN.md's TPU-viability estimate."""
+    win = (block + 2) * (block + 2) * 4
+    out = block * block * 4
+    return win + out + 4

@@ -1,0 +1,64 @@
+"""L2: the JAX compute graphs the Rust MPI ranks execute via PJRT.
+
+These are the functions `aot.py` lowers to HLO text. Each calls the L1
+Pallas kernels, so kernel + glue lower into a single HLO module that the
+`xla` crate's CPU PJRT client can compile and run.
+
+Entry points
+------------
+``jacobi_step(padded)``  -> (new_interior, residual_sq)
+    One distributed-solver step on a rank's halo-padded local domain.
+    The Rust side performs the halo exchange between calls (MPI over the
+    virtual fabric), so the artifact is exchange-agnostic.
+
+``jacobi_sweep(padded, steps=K)``  -> (final_padded, residual_sq)
+    K fused steps on a *single* domain with fixed (Dirichlet) boundary —
+    used by the serial oracle and by perf measurements to amortize
+    dispatch. Boundary rows/cols are preserved each step.
+
+``gemm(a, b)`` -> C
+    Local panel multiply for the GEMM workload.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import matmul as matmul_kernel
+from compile.kernels import stencil
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def jacobi_step(padded: jax.Array, block: int = stencil.DEFAULT_BLOCK):
+    """One Jacobi step: Pallas tile sweep + fused residual reduction."""
+    new, partials = stencil.jacobi_step(padded, block=block)
+    return new, jnp.sum(partials)
+
+
+def _repad(padded: jax.Array, interior: jax.Array) -> jax.Array:
+    """Write a new interior back into the fixed boundary frame."""
+    return padded.at[1:-1, 1:-1].set(interior)
+
+
+@functools.partial(jax.jit, static_argnames=("steps", "block"), donate_argnums=0)
+def jacobi_sweep(
+    padded: jax.Array, steps: int, block: int = stencil.DEFAULT_BLOCK
+):
+    """K fused Jacobi steps with fixed boundary; returns last residual."""
+
+    def body(_, carry):
+        grid, _res = carry
+        new, res = jacobi_step(grid, block=block)
+        return _repad(grid, new), res
+
+    init = (padded, jnp.float32(0.0))
+    final, res = jax.lax.fori_loop(0, steps, body, init)
+    return final, res
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def gemm(a: jax.Array, b: jax.Array, tile: int = matmul_kernel.DEFAULT_TILE):
+    return matmul_kernel.matmul(a, b, tile=tile)

@@ -1,0 +1,119 @@
+//! Ext-B — auto-scaling response (the abstract's headline feature,
+//! quantified).
+//!
+//! A burst of jobs hits a one-node cluster. We measure time-to-capacity
+//! (submit → enough ready nodes), the machine-count trace, and compare
+//! against a statically provisioned baseline (min = max = demand) and a
+//! no-autoscaler cluster that can never run the burst.
+
+use vhpc::bench::{banner, print_table};
+use vhpc::cluster::head::JobKind;
+use vhpc::cluster::vcluster::VirtualCluster;
+use vhpc::config::ClusterSpec;
+use vhpc::sim::SimTime;
+
+struct Outcome {
+    time_to_capacity: Option<f64>,
+    all_done_at: Option<f64>,
+    peak_nodes: usize,
+    final_nodes: usize,
+}
+
+fn run(boot_secs: u64, autoscale: bool, min_nodes: u32) -> Outcome {
+    let mut spec = ClusterSpec::paper_testbed();
+    spec.machines = 8;
+    spec.machine_spec.boot_time = SimTime::from_secs(boot_secs);
+    spec.autoscale.enabled = autoscale;
+    spec.autoscale.min_nodes = min_nodes;
+    spec.autoscale.max_nodes = 7;
+    spec.autoscale.interval = SimTime::from_secs(5);
+    spec.autoscale.cooldown = SimTime::from_secs(10);
+    spec.autoscale.idle_timeout = SimTime::from_secs(120);
+    let mut vc = VirtualCluster::new(spec).unwrap();
+    vc.start();
+    vc.advance_until(SimTime::from_secs(600), |st| {
+        st.node_states.iter().skip(1).filter(|s| **s == vhpc::cluster::vcluster::NodeState::Ready).count()
+            >= min_nodes as usize
+    });
+
+    // burst: 4 jobs x 36 ranks => needs 3 nodes each
+    let t_submit = vc.now();
+    for i in 0..4 {
+        vc.submit(
+            &format!("burst-{i}"),
+            36,
+            JobKind::Synthetic { duration: SimTime::from_secs(60) },
+        );
+    }
+    let mut time_to_capacity = None;
+    let mut all_done_at = None;
+    let mut peak = 0usize;
+    let deadline = t_submit + SimTime::from_secs(3600);
+    while vc.now() < deadline {
+        vc.advance(SimTime::from_secs(5));
+        let ready = vc.ready_compute_nodes();
+        peak = peak.max(ready);
+        if time_to_capacity.is_none() && vc.state.head.slots_available() >= 36 {
+            time_to_capacity = Some(vc.now().saturating_sub(t_submit).as_secs_f64());
+        }
+        if vc.completed_jobs().len() == 4 {
+            all_done_at = Some(vc.now().saturating_sub(t_submit).as_secs_f64());
+            break;
+        }
+    }
+    // drain the idle period to observe scale-down
+    vc.advance(SimTime::from_secs(400));
+    Outcome {
+        time_to_capacity,
+        all_done_at,
+        peak_nodes: peak,
+        final_nodes: vc.ready_compute_nodes(),
+    }
+}
+
+fn main() {
+    banner("Ext-B — autoscaler response to a 4x36-rank burst (8 machines)");
+    let configs: Vec<(String, u64, bool, u32)> = vec![
+        ("autoscale, 90s boot".into(), 90, true, 1),
+        ("autoscale, 30s boot".into(), 30, true, 1),
+        ("static 3 nodes (pre-provisioned)".into(), 90, false, 3),
+        ("static 1 node (no autoscaler)".into(), 90, false, 1),
+    ];
+    let mut rows = Vec::new();
+    let mut outcomes = Vec::new();
+    for (name, boot, auto_on, min) in &configs {
+        let o = run(*boot, *auto_on, *min);
+        rows.push(vec![
+            name.clone(),
+            o.time_to_capacity.map(|t| format!("{t:.0}s")).unwrap_or("never".into()),
+            o.all_done_at.map(|t| format!("{t:.0}s")).unwrap_or("never".into()),
+            o.peak_nodes.to_string(),
+            o.final_nodes.to_string(),
+        ]);
+        outcomes.push(o);
+    }
+    print_table(
+        &["configuration", "time to 36 slots", "burst drained", "peak nodes", "nodes after idle"],
+        &rows,
+    );
+
+    // shape assertions
+    let auto90 = &outcomes[0];
+    let auto30 = &outcomes[1];
+    let static3 = &outcomes[2];
+    let static1 = &outcomes[3];
+    assert!(auto90.time_to_capacity.is_some(), "autoscaler must reach capacity");
+    assert!(auto90.all_done_at.is_some(), "autoscaler must drain the burst");
+    // capacity time is dominated by provisioning latency (boot time)
+    assert!(
+        auto30.time_to_capacity.unwrap() < auto90.time_to_capacity.unwrap(),
+        "faster boot must reach capacity sooner"
+    );
+    // static pre-provisioned runs immediately; autoscale pays boot latency
+    assert!(static3.time_to_capacity.unwrap() <= auto90.time_to_capacity.unwrap());
+    // without autoscaling and only 1 node, 36-rank jobs can never run
+    assert!(static1.all_done_at.is_none(), "1 static node must starve the burst");
+    // autoscaler returns to min after idleness
+    assert_eq!(auto90.final_nodes, 1, "must scale back to min after idle");
+    println!("\next_autoscale OK (reaches capacity, drains burst, scales back)");
+}

@@ -1,0 +1,123 @@
+//! Ext-A — strong scaling of the Jacobi job (the interconnect
+//! performance study the paper's conclusion promises).
+//!
+//! Fixed 256×256 global grid, rank counts 1/4/16/64 (tiles 256/128/64/32
+//! — all shipped artifacts), bridge0 vs docker0.
+//!
+//! Time model: communication is the *virtual* fabric time actually
+//! charged by the MPI layer during the real run. Compute is *modeled*
+//! at a calibrated stencil rate for the testbed CPU (Xeon E5-2630,
+//! ~2 GFLOP/s effective per core on a memory-bound 5-point stencil) —
+//! the interpret-mode Pallas wall-clock is NOT a proxy for testbed
+//! compute (per-call interpreter overhead dominates; see DESIGN.md
+//! §Perf), so it is reported only as a reference column.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use vhpc::bench::{banner, print_table};
+use vhpc::hw::rack::Plant;
+use vhpc::hw::MachineSpec;
+use vhpc::mpi::hostfile::Hostfile;
+use vhpc::mpi::launcher::LaunchPlan;
+use vhpc::runtime::Runtime;
+use vhpc::util::ids::{ContainerId, MachineId};
+use vhpc::vnet::addr::Ipv4;
+use vhpc::vnet::bridge::BridgeMode;
+use vhpc::vnet::fabric::Fabric;
+use vhpc::workloads::jacobi::{run_jacobi, JacobiSpec};
+
+/// Effective stencil rate per core (flops/sec): 5-point Jacobi is
+/// memory-bound; ~2 GFLOP/s on a 2.3 GHz Sandy Bridge core.
+const STENCIL_FLOPS_PER_SEC: f64 = 2.0e9;
+/// flops per cell per step (3 adds + 1 mul + residual 2).
+const FLOPS_PER_CELL: f64 = 6.0;
+
+fn plan(mode: BridgeMode, n_ranks: usize) -> LaunchPlan {
+    let plant = Plant::uniform(3, MachineSpec::dell_m620(), 3);
+    let mut fabric = Fabric::from_plant(&plant, mode);
+    let mut ip_to_container = HashMap::new();
+    let mut hf = String::new();
+    let slots = n_ranks.div_ceil(3).max(1);
+    for i in 0..3u32 {
+        let c = ContainerId::new(i);
+        fabric.place(c, MachineId::new(i));
+        let ip = Ipv4::new(10, 10, 0, (i + 2) as u8);
+        ip_to_container.insert(ip, c);
+        hf.push_str(&format!("{ip} slots={slots}\n"));
+    }
+    LaunchPlan {
+        hostfile: Hostfile::parse(&hf).unwrap(),
+        n_ranks,
+        ip_to_container,
+        fabric: Arc::new(Mutex::new(fabric)),
+        eager_threshold: 64 * 1024,
+    }
+}
+
+fn main() {
+    banner("Ext-A — strong scaling, 256x256 grid, 100 steps");
+    let configs = [(1usize, 1usize, 256usize), (2, 2, 128), (4, 4, 64), (8, 8, 32)];
+    let steps = 100;
+    let mut rows = Vec::new();
+    let mut shares: HashMap<usize, f64> = HashMap::new();
+    let mut totals: HashMap<(usize, &str), f64> = HashMap::new();
+    for &(px, py, tile) in &configs {
+        let n = px * py;
+        let spec = JacobiSpec {
+            px,
+            py,
+            tile,
+            steps,
+            check_every: steps,
+            tol: 0.0,
+            artifacts: Runtime::default_dir(),
+        };
+        let rb = run_jacobi(&plan(BridgeMode::Bridge0, n), &spec).unwrap();
+        let rn = run_jacobi(&plan(BridgeMode::Docker0, n), &spec).unwrap();
+        // modeled compute: per-rank tile work per step, perfectly parallel
+        let compute = (tile * tile) as f64 * FLOPS_PER_CELL * steps as f64 / STENCIL_FLOPS_PER_SEC;
+        let comm_b = rb.comm_time.as_secs_f64();
+        let comm_n = rn.comm_time.as_secs_f64();
+        let total_b = compute + comm_b;
+        let total_n = compute + comm_n;
+        shares.insert(n, comm_b / total_b);
+        totals.insert((n, "b"), total_b);
+        totals.insert((n, "n"), total_n);
+        rows.push(vec![
+            n.to_string(),
+            format!("{tile}^2"),
+            format!("{:.1}ms", compute * 1e3),
+            format!("{:.2}ms", comm_b * 1e3),
+            format!("{:.1}%", 100.0 * comm_b / total_b),
+            format!("{:.2}x", totals[&(1, "b")] / total_b),
+            format!("{:.2}ms", comm_n * 1e3),
+            format!("{:.1}%", 100.0 * comm_n / total_n),
+            format!("{:.3}s", rb.compute_wall_max.as_secs_f64()),
+        ]);
+    }
+    print_table(
+        &[
+            "ranks",
+            "tile",
+            "compute*",
+            "comm(b0)",
+            "share",
+            "speedup",
+            "comm(d0)",
+            "share",
+            "interp wall(ref)",
+        ],
+        &rows,
+    );
+    println!("* modeled at {:.1} GFLOP/s/core effective stencil rate", STENCIL_FLOPS_PER_SEC / 1e9);
+
+    // strong-scaling shape: comm share rises as ranks grow
+    assert!(shares[&64] > shares[&4], "comm share must grow: {shares:?}");
+    assert!(shares[&16] > shares[&1], "comm share must grow: {shares:?}");
+    // docker0 pays more total time than bridge0 at every scale
+    for &(px, py, _) in &configs[1..] {
+        let n = px * py;
+        assert!(totals[&(n, "n")] > totals[&(n, "b")], "docker0 must cost more at n={n}");
+    }
+    println!("\next_scaling OK (comm share rises with ranks; docker0 pays more)");
+}

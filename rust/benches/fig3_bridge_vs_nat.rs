@@ -1,0 +1,97 @@
+//! Fig. 3 — cross-host container communication: docker0 (NAT) vs the
+//! paper's customized bridge0, plus host networking as the upper bound.
+//!
+//! Regenerates the figure's motivation as numbers: a ping-pong sweep of
+//! message sizes between containers on different blades, per bridge
+//! mode. Expected shape: bridge0 ≈ host ≫ docker0, with the NAT gap
+//! growing with message size.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use vhpc::bench::{banner, print_table};
+use vhpc::hw::rack::Plant;
+use vhpc::mpi::hostfile::Hostfile;
+use vhpc::mpi::launcher::LaunchPlan;
+use vhpc::util::ids::{ContainerId, MachineId};
+use vhpc::vnet::addr::Ipv4;
+use vhpc::vnet::bridge::BridgeMode;
+use vhpc::vnet::fabric::Fabric;
+use vhpc::workloads::ring::ping_pong;
+
+fn plan(mode: BridgeMode) -> LaunchPlan {
+    let plant = Plant::paper_testbed();
+    let mut fabric = Fabric::from_plant(&plant, mode);
+    let c0 = ContainerId::new(0);
+    let c1 = ContainerId::new(1);
+    fabric.place(c0, MachineId::new(1));
+    fabric.place(c1, MachineId::new(2));
+    let mut ip_to_container = HashMap::new();
+    ip_to_container.insert(Ipv4::parse("10.10.0.2").unwrap(), c0);
+    ip_to_container.insert(Ipv4::parse("10.10.0.3").unwrap(), c1);
+    LaunchPlan {
+        hostfile: Hostfile::parse("10.10.0.2 slots=1\n10.10.0.3 slots=1\n").unwrap(),
+        n_ranks: 2,
+        ip_to_container,
+        fabric: Arc::new(Mutex::new(fabric)),
+        eager_threshold: 64 * 1024,
+    }
+}
+
+fn main() {
+    let sizes: Vec<usize> =
+        vec![64, 1024, 4096, 16 << 10, 64 << 10, 256 << 10, 1 << 20, 4 << 20, 16 << 20, 64 << 20];
+    let modes = [BridgeMode::Docker0, BridgeMode::Bridge0, BridgeMode::Host];
+
+    let mut results: HashMap<&str, Vec<vhpc::workloads::ring::PingPongPoint>> = HashMap::new();
+    for mode in modes {
+        let p = plan(mode);
+        results.insert(mode.name(), ping_pong(&p, &sizes, 8).unwrap());
+    }
+
+    banner("Fig. 3 — one-way latency by bridge mode (cross-host)");
+    let mut rows = Vec::new();
+    for (i, &bytes) in sizes.iter().enumerate() {
+        rows.push(vec![
+            format!("{bytes}"),
+            results["docker0"][i].one_way.to_string(),
+            results["bridge0"][i].one_way.to_string(),
+            results["host"][i].one_way.to_string(),
+            format!(
+                "{:.2}x",
+                results["docker0"][i].one_way.as_nanos() as f64
+                    / results["bridge0"][i].one_way.as_nanos() as f64
+            ),
+        ]);
+    }
+    print_table(&["bytes", "docker0(NAT)", "bridge0", "host", "NAT penalty"], &rows);
+
+    banner("Fig. 3 — effective bandwidth (MB/s)");
+    let mut rows = Vec::new();
+    for (i, &bytes) in sizes.iter().enumerate() {
+        rows.push(vec![
+            format!("{bytes}"),
+            format!("{:.1}", results["docker0"][i].bandwidth / 1e6),
+            format!("{:.1}", results["bridge0"][i].bandwidth / 1e6),
+            format!("{:.1}", results["host"][i].bandwidth / 1e6),
+        ]);
+    }
+    print_table(&["bytes", "docker0(NAT)", "bridge0", "host"], &rows);
+
+    // shape assertions
+    for i in 0..sizes.len() {
+        assert!(
+            results["docker0"][i].one_way > results["bridge0"][i].one_way,
+            "NAT must be slower at every size"
+        );
+        assert!(results["bridge0"][i].one_way >= results["host"][i].one_way);
+    }
+    let small_gap = results["docker0"][0].one_way.as_nanos() - results["bridge0"][0].one_way.as_nanos();
+    let large_gap = results["docker0"][sizes.len() - 1].one_way.as_nanos()
+        - results["bridge0"][sizes.len() - 1].one_way.as_nanos();
+    assert!(large_gap > small_gap, "NAT gap must grow with size");
+    // bridge0 approaches 10GbE line rate on big transfers
+    let line = 10e9 / 8.0;
+    let last = &results["bridge0"][sizes.len() - 1];
+    assert!(last.bandwidth / line > 0.8, "bridge0 bw {:.0} too low", last.bandwidth);
+    println!("\nfig3_bridge_vs_nat OK (bridge0 ~ host >> docker0, gap grows with size)");
+}

@@ -1,0 +1,128 @@
+//! §Perf probe — decomposes the MPI+PJRT hot path so the optimization
+//! loop (EXPERIMENTS.md §Perf) has numbers to chase.
+//!
+//! Phases measured:
+//!   p2p     — real wall time per send+recv pair (256 B eager message)
+//!   halo    — per-step halo pack/exchange/unpack for a 64² tile
+//!   pjrt    — per-step jacobi_step PJRT execution (interpret mode)
+//!   e2e     — full 16-rank × 50-step job wall vs sum of parts
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+use vhpc::bench::{banner, print_table, time};
+use vhpc::hw::rack::Plant;
+use vhpc::mpi::comm::MpiWorldBuilder;
+use vhpc::mpi::hostfile::Hostfile;
+use vhpc::mpi::launcher::LaunchPlan;
+use vhpc::runtime::Runtime;
+use vhpc::util::ids::{ContainerId, MachineId};
+use vhpc::vnet::addr::Ipv4;
+use vhpc::vnet::bridge::BridgeMode;
+use vhpc::vnet::fabric::Fabric;
+use vhpc::workloads::jacobi::{run_jacobi, JacobiSpec};
+
+fn fabric_pair() -> Arc<Mutex<Fabric>> {
+    let plant = Plant::paper_testbed();
+    let mut fabric = Fabric::from_plant(&plant, BridgeMode::Bridge0);
+    fabric.place(ContainerId::new(0), MachineId::new(1));
+    fabric.place(ContainerId::new(1), MachineId::new(2));
+    Arc::new(Mutex::new(fabric))
+}
+
+fn main() {
+    banner("perf probe — L3 hot-path decomposition");
+    let mut rows = Vec::new();
+
+    // --- p2p message overhead (real wall time of the machinery) ---
+    {
+        let comms = MpiWorldBuilder::new(2).fabric(fabric_pair()).build();
+        let mut it = comms.into_iter();
+        let mut c0 = it.next().unwrap();
+        let mut c1 = it.next().unwrap();
+        let payload = vec![0u8; 256];
+        let h = std::thread::spawn(move || {
+            for i in 0..20_000u64 {
+                c1.recv(0, i);
+            }
+            c1.stats.clone()
+        });
+        let n = 20_000u64;
+        let t0 = Instant::now();
+        for i in 0..n {
+            c0.send(1, i, &payload);
+        }
+        let send_side = t0.elapsed();
+        h.join().unwrap();
+        rows.push(vec![
+            "send(256B) wall".into(),
+            format!("{:.0}ns/msg", send_side.as_nanos() as f64 / n as f64),
+        ]);
+    }
+
+    // --- PJRT step cost (the L1/L2 kernel through the runtime) ---
+    {
+        let rt = Runtime::load(Runtime::default_dir()).expect("artifacts");
+        let padded = vec![1.0f32; 66 * 66];
+        rt.jacobi_step("jacobi_step_64", &padded).unwrap(); // compile
+        let s = time(3, 50, || {
+            rt.jacobi_step("jacobi_step_64", &padded).unwrap();
+        });
+        rows.push(vec![
+            "pjrt jacobi_step_64".into(),
+            format!("{:.2}ms/step", s.mean.as_secs_f64() * 1e3),
+        ]);
+        // the fused-sweep artifact amortizes dispatch: 100 steps/call
+        let s = time(1, 5, || {
+            rt.jacobi_sweep("jacobi_sweep_128_k100", &vec![1.0f32; 130 * 130])
+                .unwrap();
+        });
+        rows.push(vec![
+            "pjrt jacobi_sweep_128_k100".into(),
+            format!("{:.3}ms/step (fused)", s.mean.as_secs_f64() * 1e3 / 100.0),
+        ]);
+    }
+
+    // --- end-to-end 16-rank job ---
+    {
+        let mut ip_to_container = HashMap::new();
+        let plant = Plant::paper_testbed();
+        let mut fabric = Fabric::from_plant(&plant, BridgeMode::Bridge0);
+        for i in 0..2u32 {
+            let c = ContainerId::new(i);
+            fabric.place(c, MachineId::new(i + 1));
+            ip_to_container.insert(Ipv4::new(10, 10, 0, (i + 2) as u8), c);
+        }
+        let plan = LaunchPlan {
+            hostfile: Hostfile::parse("10.10.0.2 slots=12\n10.10.0.3 slots=12\n").unwrap(),
+            n_ranks: 16,
+            ip_to_container,
+            fabric: Arc::new(Mutex::new(fabric)),
+            eager_threshold: 64 * 1024,
+        };
+        let spec = JacobiSpec {
+            px: 4,
+            py: 4,
+            tile: 64,
+            steps: 50,
+            check_every: 50,
+            tol: 0.0,
+            artifacts: Runtime::default_dir(),
+        };
+        let report = run_jacobi(&plan, &spec).unwrap();
+        let wall = report.wall.as_secs_f64();
+        let compute = report.compute_wall_max.as_secs_f64();
+        rows.push(vec!["e2e 16r x 50 steps wall".into(), format!("{wall:.3}s")]);
+        rows.push(vec!["  compute (max rank)".into(), format!("{compute:.3}s")]);
+        rows.push(vec![
+            "  L3 overhead (wall - compute)".into(),
+            format!("{:.3}s ({:.0}%)", wall - compute, 100.0 * (wall - compute) / wall),
+        ]);
+        rows.push(vec![
+            "  msgs / bytes".into(),
+            format!("{} / {}", report.total_msgs, vhpc::util::format_bytes(report.total_bytes)),
+        ]);
+    }
+    print_table(&["phase", "cost"], &rows);
+    println!("\nperf_probe done");
+}

@@ -1,0 +1,67 @@
+//! Table I — hardware spec of the testbed.
+//!
+//! Regenerates the paper's Table I from the modeled `MachineSpec` and
+//! asserts the model matches the published numbers.
+
+use vhpc::bench::{banner, print_table};
+use vhpc::hw::rack::Plant;
+use vhpc::hw::MachineSpec;
+use vhpc::util::format_bytes;
+
+fn main() {
+    banner("Table I — physical machine specification (modeled)");
+    let spec = MachineSpec::dell_m620();
+    let rows = vec![
+        vec!["System Model".into(), spec.model.clone(), "Dell M620".into()],
+        vec![
+            "CPU".into(),
+            format!(
+                "Intel Xeon E5-2630 {:.2}GHz x {} ({} cores)",
+                spec.clock_ghz,
+                spec.sockets,
+                spec.total_cores()
+            ),
+            "Intel(R) Xeon E5-2630 2.30GHz X 2".into(),
+        ],
+        vec!["Memory".into(), format_bytes(spec.memory_bytes), "64GB".into()],
+        vec![
+            "HDD".into(),
+            format!("SAS {} 10Krpm", format_bytes(spec.disk_bytes)),
+            "SAS 146GB 10Krpm".into(),
+        ],
+        vec!["Network".into(), spec.nic.name.into(), "10GbE".into()],
+        vec![
+            "Boot time (modeled)".into(),
+            spec.boot_time.to_string(),
+            "(not reported)".into(),
+        ],
+    ];
+    print_table(&["field", "modeled", "paper Table I"], &rows);
+
+    // assertions: the model must agree with the paper
+    assert_eq!(spec.model, "Dell M620");
+    assert_eq!(spec.clock_ghz, 2.30);
+    assert_eq!(spec.sockets, 2);
+    assert_eq!(spec.memory_bytes, 64 << 30);
+    assert_eq!(spec.disk_bytes, 146 << 30);
+    assert_eq!(spec.nic.name, "10GbE");
+
+    banner("testbed topology (Fig. 4)");
+    let plant = Plant::paper_testbed();
+    let rows: Vec<Vec<String>> = plant
+        .machines
+        .iter()
+        .map(|m| {
+            vec![
+                m.hostname.clone(),
+                m.spec.model.clone(),
+                format!("{} cores", m.spec.total_cores()),
+                format_bytes(m.spec.memory_bytes),
+                m.spec.nic.name.to_string(),
+            ]
+        })
+        .collect();
+    print_table(&["host", "model", "cpu", "memory", "nic"], &rows);
+    assert_eq!(plant.machines.len(), 3);
+    println!("\ntable1_hardware OK");
+}

@@ -1,0 +1,93 @@
+//! Tiny benchmark harness (criterion is not in the offline crate set).
+//!
+//! Used by the `rust/benches/*.rs` targets (all `harness = false`): each
+//! bench regenerates one of the paper's tables/figures as aligned text.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over repeated timings.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+}
+
+/// Time `f` for `iters` iterations after `warmup` discarded runs.
+pub fn time<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<Duration> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let total: Duration = samples.iter().sum();
+    let pick = |p: f64| samples[((p * (samples.len() - 1) as f64).round() as usize).min(samples.len() - 1)];
+    Stats {
+        iters,
+        mean: total / iters as u32,
+        min: samples[0],
+        max: *samples.last().unwrap(),
+        p50: pick(0.50),
+        p99: pick(0.99),
+    }
+}
+
+/// Print an aligned table: each column sized to its widest cell.
+pub fn print_table(headers: &[&str], rows: &[Vec<String>]) {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let line = |cells: Vec<String>| {
+        let mut s = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!("{:>w$}  ", c, w = widths[i]));
+        }
+        println!("{}", s.trim_end());
+    };
+    line(headers.iter().map(|h| h.to_string()).collect());
+    line(widths.iter().map(|w| "-".repeat(*w)).collect());
+    for row in rows {
+        line(row.clone());
+    }
+}
+
+/// Section banner for bench output.
+pub fn banner(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_produces_ordered_stats() {
+        let s = time(1, 20, || std::thread::sleep(Duration::from_micros(50)));
+        assert_eq!(s.iters, 20);
+        assert!(s.min <= s.p50);
+        assert!(s.p50 <= s.p99);
+        assert!(s.p99 <= s.max);
+        assert!(s.mean >= Duration::from_micros(40));
+    }
+
+    #[test]
+    fn table_renders_without_panic() {
+        print_table(
+            &["a", "long-header"],
+            &[vec!["1".into(), "2".into()], vec!["333333".into(), "4".into()]],
+        );
+    }
+}

@@ -1,0 +1,232 @@
+//! Hand-rolled CLI (no clap in the offline crate set).
+//!
+//! ```text
+//! vhpc up         [--config F] [--machines N] [--sim-seconds S]
+//! vhpc run        [--ranks N] [--tile T] [--steps K] [--bridge MODE]
+//! vhpc build      [--dockerfile F]
+//! vhpc bench-net  [--bridge MODE]
+//! vhpc version
+//! ```
+
+use crate::cluster::head::JobKind;
+use crate::cluster::vcluster::VirtualCluster;
+use crate::config::ClusterSpec;
+use crate::dockyard::{Dockerfile, ImageStore};
+use crate::sim::SimTime;
+use std::collections::HashMap;
+
+/// Parse `--key value` pairs after the subcommand.
+fn parse_flags(args: &[String]) -> Result<HashMap<String, String>, String> {
+    let mut flags = HashMap::new();
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        let key = a
+            .strip_prefix("--")
+            .ok_or_else(|| format!("expected --flag, got {a}"))?;
+        let val = it.next().ok_or_else(|| format!("--{key} needs a value"))?;
+        flags.insert(key.to_string(), val.clone());
+    }
+    Ok(flags)
+}
+
+fn flag<T: std::str::FromStr>(
+    flags: &HashMap<String, String>,
+    key: &str,
+    default: T,
+) -> Result<T, String> {
+    match flags.get(key) {
+        Some(v) => v.parse().map_err(|_| format!("bad value for --{key}: {v}")),
+        None => Ok(default),
+    }
+}
+
+fn load_spec(flags: &HashMap<String, String>) -> Result<ClusterSpec, String> {
+    let mut spec = match flags.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+            ClusterSpec::from_text(&text).map_err(|e| e.to_string())?
+        }
+        None => ClusterSpec::paper_testbed(),
+    };
+    if let Some(m) = flags.get("machines") {
+        spec.machines = m.parse().map_err(|_| "bad --machines".to_string())?;
+        spec.autoscale.max_nodes = spec.machines.saturating_sub(1).max(1);
+    }
+    if let Some(b) = flags.get("bridge") {
+        spec.bridge = match b.as_str() {
+            "docker0" => crate::vnet::BridgeMode::Docker0,
+            "bridge0" => crate::vnet::BridgeMode::Bridge0,
+            "host" => crate::vnet::BridgeMode::Host,
+            other => return Err(format!("unknown bridge mode {other}")),
+        };
+    }
+    Ok(spec)
+}
+
+fn cmd_up(flags: HashMap<String, String>) -> Result<(), String> {
+    let spec = load_spec(&flags)?;
+    let sim_secs: u64 = flag(&flags, "sim-seconds", 300u64)?;
+    println!("bringing up '{}' ({} machines, {} consul servers, {})",
+        spec.name, spec.machines, spec.consul_servers, spec.bridge.name());
+    let mut vc = VirtualCluster::new(spec).map_err(|e| e.to_string())?;
+    vc.start();
+    vc.advance(SimTime::from_secs(sim_secs));
+    println!("t={} ready compute nodes: {}", vc.now(), vc.ready_compute_nodes());
+    println!("--- hostfile ---\n{}", vc.hostfile());
+    println!("--- metrics ---\n{}", vc.metrics().render());
+    Ok(())
+}
+
+fn cmd_run(flags: HashMap<String, String>) -> Result<(), String> {
+    let spec = load_spec(&flags)?;
+    let ranks: usize = flag(&flags, "ranks", 16usize)?;
+    let tile: usize = flag(&flags, "tile", 64usize)?;
+    let steps: usize = flag(&flags, "steps", 200usize)?;
+    // factor ranks into a near-square grid
+    let mut px = (ranks as f64).sqrt() as usize;
+    while ranks % px != 0 {
+        px -= 1;
+    }
+    let py = ranks / px;
+    let mut vc = VirtualCluster::new(spec).map_err(|e| e.to_string())?;
+    vc.start();
+    if !vc.advance_until(SimTime::from_secs(600), |st| {
+        st.head.slots_available() >= ranks as u32
+    }) {
+        return Err(format!(
+            "cluster never reached {ranks} slots (have {})",
+            vc.state.head.slots_available()
+        ));
+    }
+    println!("cluster up at t={}, hostfile:\n{}", vc.now(), vc.hostfile());
+    vc.submit("cli-jacobi", ranks as u32, JobKind::Jacobi { px, py, tile, steps });
+    if !vc.advance_until(SimTime::from_secs(3600), |st| !st.head.completed.is_empty()) {
+        return Err("job did not complete".into());
+    }
+    let rec = &vc.completed_jobs()[0];
+    println!("job {} -> {:?}", rec.spec.name, rec.state);
+    if let Some((steps_run, residual)) = rec.result {
+        println!("jacobi: {steps_run} steps, final residual {residual:.3e}");
+    }
+    println!("--- metrics ---\n{}", vc.metrics().render());
+    Ok(())
+}
+
+fn cmd_build(flags: HashMap<String, String>) -> Result<(), String> {
+    let text = match flags.get("dockerfile") {
+        Some(path) => std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?,
+        None => Dockerfile::paper_compute_node().to_string(),
+    };
+    let df = Dockerfile::parse(&text).map_err(|e| e.to_string())?;
+    let mut store = ImageStore::with_base_images();
+    let image = store
+        .build(&df, "nchc/mpi-computenode:latest")
+        .map_err(|e| e.to_string())?;
+    println!("built {} ({} layers, {} total)", image.reference, image.layers.len(),
+        crate::util::format_bytes(image.total_size()));
+    for l in &image.layers {
+        println!("  {}  {:>10}  {}", l.digest().short(),
+            crate::util::format_bytes(l.size_bytes()), l.created_by);
+    }
+    Ok(())
+}
+
+fn cmd_bench_net(flags: HashMap<String, String>) -> Result<(), String> {
+    use crate::hw::rack::Plant;
+    use crate::mpi::hostfile::Hostfile;
+    use crate::mpi::launcher::LaunchPlan;
+    use crate::util::ids::{ContainerId, MachineId};
+    use crate::vnet::addr::Ipv4;
+    use crate::vnet::fabric::Fabric;
+    use crate::workloads::ring::ping_pong;
+    use std::sync::{Arc, Mutex};
+
+    let spec = load_spec(&flags)?;
+    let plant = Plant::paper_testbed();
+    let mut fabric = Fabric::from_plant(&plant, spec.bridge);
+    fabric.place(ContainerId::new(0), MachineId::new(1));
+    fabric.place(ContainerId::new(1), MachineId::new(2));
+    let mut ip_to_container = std::collections::HashMap::new();
+    ip_to_container.insert(Ipv4::parse("10.10.0.2").unwrap(), ContainerId::new(0));
+    ip_to_container.insert(Ipv4::parse("10.10.0.3").unwrap(), ContainerId::new(1));
+    let plan = LaunchPlan {
+        hostfile: Hostfile::parse("10.10.0.2 slots=1\n10.10.0.3 slots=1\n").unwrap(),
+        n_ranks: 2,
+        ip_to_container,
+        fabric: Arc::new(Mutex::new(fabric)),
+        eager_threshold: 64 * 1024,
+    };
+    let sizes = [64usize, 1024, 16 * 1024, 256 * 1024, 4 << 20, 64 << 20];
+    println!("mode={}  (cross-host rank0<->rank1)", spec.bridge.name());
+    println!("{:>12} {:>14} {:>14}", "bytes", "one-way", "MB/s");
+    for p in ping_pong(&plan, &sizes, 8).map_err(|e| e.to_string())? {
+        println!("{:>12} {:>14} {:>14.1}", p.bytes, p.one_way.to_string(), p.bandwidth / 1e6);
+    }
+    Ok(())
+}
+
+/// Entry point used by the `vhpc` binary. Returns the process exit code.
+pub fn main() -> i32 {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match args.split_first() {
+        Some((c, r)) => (c.as_str(), r),
+        None => ("help", &[][..]),
+    };
+    let result = match cmd {
+        "version" | "--version" => {
+            println!("vhpc {}", env!("CARGO_PKG_VERSION"));
+            Ok(())
+        }
+        "up" => parse_flags(rest).and_then(cmd_up),
+        "run" => parse_flags(rest).and_then(cmd_run),
+        "build" => parse_flags(rest).and_then(cmd_build),
+        "bench-net" => parse_flags(rest).and_then(cmd_bench_net),
+        "help" | "--help" | "-h" => {
+            println!(
+                "vhpc — virtual HPC cluster with auto-scaling (Yu & Huang 2015 reproduction)\n\n\
+                 usage:\n  vhpc up        [--config F] [--machines N] [--sim-seconds S] [--bridge MODE]\n  \
+                 vhpc run       [--ranks N] [--tile T] [--steps K] [--bridge MODE]\n  \
+                 vhpc build     [--dockerfile F]\n  \
+                 vhpc bench-net [--bridge docker0|bridge0|host]\n  \
+                 vhpc version"
+            );
+            Ok(())
+        }
+        other => Err(format!("unknown subcommand {other} (try `vhpc help`)")),
+    };
+    match result {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flag_parser() {
+        let flags = parse_flags(&["--a".into(), "1".into(), "--b".into(), "x".into()]).unwrap();
+        assert_eq!(flags["a"], "1");
+        assert_eq!(flag(&flags, "a", 0u32).unwrap(), 1);
+        assert_eq!(flag(&flags, "missing", 7u32).unwrap(), 7);
+        assert!(flag::<u32>(&flags, "b", 0).is_err());
+        assert!(parse_flags(&["positional".into()]).is_err());
+        assert!(parse_flags(&["--dangling".into()]).is_err());
+    }
+
+    #[test]
+    fn load_spec_overrides() {
+        let mut flags = HashMap::new();
+        flags.insert("machines".to_string(), "6".to_string());
+        flags.insert("bridge".to_string(), "docker0".to_string());
+        let spec = load_spec(&flags).unwrap();
+        assert_eq!(spec.machines, 6);
+        assert_eq!(spec.bridge, crate::vnet::BridgeMode::Docker0);
+        flags.insert("bridge".to_string(), "nope".to_string());
+        assert!(load_spec(&flags).is_err());
+    }
+}

@@ -1,0 +1,235 @@
+//! Auto-scaling policy (the paper's headline feature): grow the node
+//! pool when demand outruns capacity, shrink after sustained idleness —
+//! with bounds, cooldown and hysteresis. Pure: `decide()` maps an
+//! observation to an action; the cluster executes it.
+
+use crate::config::AutoscaleConfig;
+use crate::sim::SimTime;
+
+/// What the policy sees each interval.
+#[derive(Debug, Clone, Copy)]
+pub struct Observation {
+    pub now: SimTime,
+    /// Nodes registered + passing health checks.
+    pub ready_nodes: u32,
+    /// Nodes between power-on and registration.
+    pub provisioning_nodes: u32,
+    /// Slots demanded by queued + running jobs.
+    pub demanded_slots: u32,
+    pub slots_per_node: u32,
+}
+
+/// The policy's verdict.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleAction {
+    None,
+    /// Power up `n` more machines.
+    Up(u32),
+    /// Retire `n` idle nodes.
+    Down(u32),
+}
+
+/// Stateful policy wrapper (cooldown + idle tracking).
+#[derive(Debug, Clone)]
+pub struct Autoscaler {
+    pub config: AutoscaleConfig,
+    last_action_at: Option<SimTime>,
+    idle_since: Option<SimTime>,
+    /// Decisions taken (for the benches).
+    pub actions: Vec<(SimTime, ScaleAction)>,
+}
+
+impl Autoscaler {
+    pub fn new(config: AutoscaleConfig) -> Self {
+        Self { config, last_action_at: None, idle_since: None, actions: Vec::new() }
+    }
+
+    /// Target node count for a demand level.
+    pub fn target_nodes(&self, demanded_slots: u32, slots_per_node: u32) -> u32 {
+        let needed = demanded_slots.div_ceil(slots_per_node.max(1));
+        needed.clamp(self.config.min_nodes, self.config.max_nodes)
+    }
+
+    fn in_cooldown(&self, now: SimTime) -> bool {
+        match self.last_action_at {
+            Some(t) => now.saturating_sub(t) < self.config.cooldown,
+            None => false,
+        }
+    }
+
+    /// Evaluate the policy.
+    pub fn decide(&mut self, obs: Observation) -> ScaleAction {
+        if !self.config.enabled {
+            return ScaleAction::None;
+        }
+        // idle tracking (demand == 0)
+        if obs.demanded_slots == 0 {
+            if self.idle_since.is_none() {
+                self.idle_since = Some(obs.now);
+            }
+        } else {
+            self.idle_since = None;
+        }
+
+        let target = self.target_nodes(obs.demanded_slots, obs.slots_per_node);
+        let have = obs.ready_nodes + obs.provisioning_nodes;
+
+        let action = if have < target {
+            if self.in_cooldown(obs.now) {
+                ScaleAction::None
+            } else {
+                ScaleAction::Up(target - have)
+            }
+        } else if obs.ready_nodes > target {
+            // scale down only after sustained idleness (hysteresis)
+            let idle_long_enough = self
+                .idle_since
+                .map(|t| obs.now.saturating_sub(t) >= self.config.idle_timeout)
+                .unwrap_or(false);
+            if idle_long_enough && !self.in_cooldown(obs.now) {
+                ScaleAction::Down(obs.ready_nodes - target)
+            } else {
+                ScaleAction::None
+            }
+        } else {
+            ScaleAction::None
+        };
+
+        if action != ScaleAction::None {
+            self.last_action_at = Some(obs.now);
+            self.actions.push((obs.now, action));
+        }
+        action
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn config() -> AutoscaleConfig {
+        AutoscaleConfig {
+            enabled: true,
+            min_nodes: 1,
+            max_nodes: 8,
+            interval: SimTime::from_secs(5),
+            cooldown: SimTime::from_secs(30),
+            idle_timeout: SimTime::from_secs(120),
+        }
+    }
+
+    fn obs(now_s: u64, ready: u32, prov: u32, demand: u32) -> Observation {
+        Observation {
+            now: SimTime::from_secs(now_s),
+            ready_nodes: ready,
+            provisioning_nodes: prov,
+            demanded_slots: demand,
+            slots_per_node: 12,
+        }
+    }
+
+    #[test]
+    fn scales_up_to_meet_demand() {
+        let mut a = Autoscaler::new(config());
+        // 40 slots / 12 per node => 4 nodes; have 1
+        assert_eq!(a.decide(obs(0, 1, 0, 40)), ScaleAction::Up(3));
+    }
+
+    #[test]
+    fn respects_max_bound() {
+        let mut a = Autoscaler::new(config());
+        assert_eq!(a.decide(obs(0, 0, 0, 12_000)), ScaleAction::Up(8));
+    }
+
+    #[test]
+    fn respects_min_bound_on_idle() {
+        let mut a = Autoscaler::new(config());
+        // idle with 3 ready: wait for idle_timeout, then drop to min=1
+        assert_eq!(a.decide(obs(0, 3, 0, 0)), ScaleAction::None);
+        assert_eq!(a.decide(obs(60, 3, 0, 0)), ScaleAction::None);
+        assert_eq!(a.decide(obs(121, 3, 0, 0)), ScaleAction::Down(2));
+    }
+
+    #[test]
+    fn cooldown_suppresses_consecutive_actions() {
+        let mut a = Autoscaler::new(config());
+        assert_eq!(a.decide(obs(0, 1, 0, 40)), ScaleAction::Up(3));
+        // still short: cooldown blocks another Up
+        assert_eq!(a.decide(obs(5, 1, 1, 40)), ScaleAction::None);
+        // after cooldown it fires again
+        assert_eq!(a.decide(obs(31, 1, 1, 40)), ScaleAction::Up(2));
+    }
+
+    #[test]
+    fn provisioning_nodes_count_toward_capacity() {
+        let mut a = Autoscaler::new(config());
+        assert_eq!(a.decide(obs(0, 1, 3, 40)), ScaleAction::None);
+    }
+
+    #[test]
+    fn new_demand_resets_idle_clock() {
+        let mut a = Autoscaler::new(config());
+        a.decide(obs(0, 3, 0, 0));
+        a.decide(obs(100, 3, 0, 24)); // burst arrives: idle reset
+        assert_eq!(a.decide(obs(130, 3, 0, 0)), ScaleAction::None); // only 30s idle
+        assert_eq!(a.decide(obs(260, 3, 0, 0)), ScaleAction::Down(2));
+    }
+
+    #[test]
+    fn disabled_policy_never_acts() {
+        let mut cfg = config();
+        cfg.enabled = false;
+        let mut a = Autoscaler::new(cfg);
+        assert_eq!(a.decide(obs(0, 0, 0, 999)), ScaleAction::None);
+    }
+
+    /// Property: across random demand traces, (ready+provisioning) never
+    /// targeted beyond [min, max], and actions never fire inside cooldown.
+    #[test]
+    fn prop_bounds_and_cooldown_hold() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(99);
+        for _ in 0..50 {
+            let mut a = Autoscaler::new(config());
+            let mut ready = 1u32;
+            let mut prov = 0u32;
+            let mut last_action: Option<SimTime> = None;
+            for step in 0..200u64 {
+                let now = SimTime::from_secs(step * 5);
+                let demand = (rng.gen_range(20) * 10) as u32;
+                let action = a.decide(Observation {
+                    now,
+                    ready_nodes: ready,
+                    provisioning_nodes: prov,
+                    demanded_slots: demand,
+                    slots_per_node: 12,
+                });
+                match action {
+                    ScaleAction::Up(n) => {
+                        assert!(ready + prov + n <= a.config.max_nodes, "over max");
+                        prov += n;
+                    }
+                    ScaleAction::Down(n) => {
+                        assert!(ready - n >= a.config.min_nodes, "under min");
+                        ready -= n;
+                    }
+                    ScaleAction::None => {}
+                }
+                if action != ScaleAction::None {
+                    if let Some(t) = last_action {
+                        assert!(
+                            now.saturating_sub(t) >= a.config.cooldown,
+                            "acted inside cooldown"
+                        );
+                    }
+                    last_action = Some(now);
+                }
+                // provisioning completes stochastically
+                if prov > 0 && rng.gen_bool(0.4) {
+                    prov -= 1;
+                    ready += 1;
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,184 @@
+//! Head-node state: the job queue and the consul-template hostfile
+//! watcher (the paper's Fig. 5 loop lives here).
+
+use crate::consul::template::{Template, TemplateWatcher};
+use crate::mpi::hostfile::Hostfile;
+use crate::sim::SimTime;
+use crate::util::ids::JobId;
+use std::collections::VecDeque;
+
+/// What kind of work a job is.
+#[derive(Debug, Clone)]
+pub enum JobKind {
+    /// Real distributed Jacobi solve (PJRT compute on rank threads).
+    Jacobi { px: usize, py: usize, tile: usize, steps: usize },
+    /// Synthetic job with a fixed virtual duration (for control-plane
+    /// benches where real compute would only add noise).
+    Synthetic { duration: SimTime },
+}
+
+/// A submitted job.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub id: JobId,
+    pub name: String,
+    pub ranks: u32,
+    pub kind: JobKind,
+}
+
+/// Lifecycle.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobState {
+    Queued,
+    Running { started: SimTime },
+    Done { started: SimTime, finished: SimTime },
+    Failed { reason: String },
+}
+
+/// Completed-job record.
+#[derive(Debug, Clone)]
+pub struct JobRecord {
+    pub spec: JobSpec,
+    pub state: JobState,
+    /// For Jacobi jobs: (steps, final residual).
+    pub result: Option<(usize, f32)>,
+    pub queued_at: SimTime,
+}
+
+/// The head container's state.
+pub struct Head {
+    pub watcher: TemplateWatcher,
+    pub hostfile_text: String,
+    /// When the hostfile last changed.
+    pub hostfile_updated_at: SimTime,
+    pub hostfile_renders: u64,
+    pub queue: VecDeque<(JobSpec, SimTime)>,
+    pub running: Option<JobRecord>,
+    pub completed: Vec<JobRecord>,
+    pub poll_interval: SimTime,
+}
+
+impl Default for Head {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Head {
+    pub fn new() -> Self {
+        Self {
+            watcher: TemplateWatcher::new(Template::mpi_hostfile()),
+            hostfile_text: String::new(),
+            hostfile_updated_at: SimTime::ZERO,
+            hostfile_renders: 0,
+            queue: VecDeque::new(),
+            running: None,
+            completed: Vec::new(),
+            poll_interval: SimTime::from_millis(200),
+        }
+    }
+
+    /// Parse the current hostfile (None when empty/invalid).
+    pub fn hostfile(&self) -> Option<Hostfile> {
+        Hostfile::parse(&self.hostfile_text).ok()
+    }
+
+    /// Total MPI slots currently advertised.
+    pub fn slots_available(&self) -> u32 {
+        self.hostfile().map(|h| h.total_slots()).unwrap_or(0)
+    }
+
+    /// Slots demanded by queued + running jobs.
+    pub fn demanded_slots(&self) -> u32 {
+        let q: u32 = self.queue.iter().map(|(j, _)| j.ranks).sum();
+        let r = self
+            .running
+            .as_ref()
+            .map(|j| j.spec.ranks)
+            .unwrap_or(0);
+        q + r
+    }
+
+    pub fn submit(&mut self, spec: JobSpec, now: SimTime) {
+        self.queue.push_back((spec, now));
+    }
+
+    /// Pop the next runnable job if enough slots are advertised.
+    pub fn next_runnable(&mut self, now: SimTime) -> Option<JobRecord> {
+        if self.running.is_some() {
+            return None;
+        }
+        let slots = self.slots_available();
+        match self.queue.front() {
+            Some((job, _)) if job.ranks <= slots => {
+                let (spec, queued_at) = self.queue.pop_front().unwrap();
+                Some(JobRecord {
+                    spec,
+                    state: JobState::Running { started: now },
+                    result: None,
+                    queued_at,
+                })
+            }
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(id: u32, ranks: u32) -> JobSpec {
+        JobSpec {
+            id: JobId::new(id),
+            name: format!("job{id}"),
+            ranks,
+            kind: JobKind::Synthetic { duration: SimTime::from_secs(10) },
+        }
+    }
+
+    #[test]
+    fn jobs_wait_for_slots() {
+        let mut h = Head::new();
+        h.submit(job(0, 16), SimTime::ZERO);
+        assert!(h.next_runnable(SimTime::ZERO).is_none(), "no hostfile yet");
+        h.hostfile_text = "10.10.0.2 slots=12\n10.10.0.3 slots=12\n".into();
+        let r = h.next_runnable(SimTime::from_secs(1)).unwrap();
+        assert_eq!(r.spec.id, JobId::new(0));
+        assert!(matches!(r.state, JobState::Running { .. }));
+    }
+
+    #[test]
+    fn one_job_at_a_time() {
+        let mut h = Head::new();
+        h.hostfile_text = "10.10.0.2 slots=24\n".into();
+        h.submit(job(0, 4), SimTime::ZERO);
+        h.submit(job(1, 4), SimTime::ZERO);
+        let r = h.next_runnable(SimTime::ZERO).unwrap();
+        h.running = Some(r);
+        assert!(h.next_runnable(SimTime::ZERO).is_none());
+    }
+
+    #[test]
+    fn demanded_slots_counts_queue_and_running() {
+        let mut h = Head::new();
+        h.submit(job(0, 16), SimTime::ZERO);
+        h.submit(job(1, 8), SimTime::ZERO);
+        assert_eq!(h.demanded_slots(), 24);
+        h.hostfile_text = "10.10.0.2 slots=24\n".into();
+        let r = h.next_runnable(SimTime::ZERO).unwrap();
+        h.running = Some(r);
+        assert_eq!(h.demanded_slots(), 24);
+    }
+
+    #[test]
+    fn fifo_order_holds() {
+        let mut h = Head::new();
+        h.hostfile_text = "10.10.0.2 slots=32\n".into();
+        h.submit(job(0, 32), SimTime::ZERO);
+        h.submit(job(1, 1), SimTime::ZERO);
+        // head-of-line blocks even though job1 would fit
+        let r = h.next_runnable(SimTime::ZERO).unwrap();
+        assert_eq!(r.spec.id, JobId::new(0));
+    }
+}

@@ -1,0 +1,138 @@
+//! Minimal metrics registry: counters, gauges and value histograms.
+
+use std::collections::BTreeMap;
+
+/// A recorded distribution.
+#[derive(Debug, Clone, Default)]
+pub struct Histogram {
+    values: Vec<f64>,
+}
+
+impl Histogram {
+    pub fn record(&mut self, v: f64) {
+        self.values.push(v);
+    }
+    pub fn count(&self) -> usize {
+        self.values.len()
+    }
+    pub fn mean(&self) -> f64 {
+        if self.values.is_empty() {
+            0.0
+        } else {
+            self.values.iter().sum::<f64>() / self.values.len() as f64
+        }
+    }
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.values.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.values.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+        sorted[idx.min(sorted.len() - 1)]
+    }
+    pub fn max(&self) -> f64 {
+        self.values.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+}
+
+/// The registry.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&mut self, name: &str) {
+        self.add(name, 1);
+    }
+    pub fn add(&mut self, name: &str, v: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += v;
+    }
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn set_gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+    pub fn gauge(&self, name: &str) -> f64 {
+        self.gauges.get(name).copied().unwrap_or(0.0)
+    }
+
+    pub fn observe(&mut self, name: &str, v: f64) {
+        self.histograms.entry(name.to_string()).or_default().record(v);
+    }
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+
+    /// Text dump (for the CLI's `metrics` subcommand).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.counters {
+            out.push_str(&format!("counter {k} {v}\n"));
+        }
+        for (k, v) in &self.gauges {
+            out.push_str(&format!("gauge {k} {v}\n"));
+        }
+        for (k, h) in &self.histograms {
+            out.push_str(&format!(
+                "histogram {k} count={} mean={:.3} p50={:.3} p99={:.3}\n",
+                h.count(),
+                h.mean(),
+                h.percentile(50.0),
+                h.percentile(99.0)
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges() {
+        let mut m = Metrics::new();
+        m.inc("pulls");
+        m.add("pulls", 2);
+        assert_eq!(m.counter("pulls"), 3);
+        assert_eq!(m.counter("missing"), 0);
+        m.set_gauge("nodes", 3.0);
+        assert_eq!(m.gauge("nodes"), 3.0);
+    }
+
+    #[test]
+    fn histogram_stats() {
+        let mut m = Metrics::new();
+        for v in 1..=100 {
+            m.observe("lat", v as f64);
+        }
+        let h = m.histogram("lat").unwrap();
+        assert_eq!(h.count(), 100);
+        assert!((h.mean() - 50.5).abs() < 1e-9);
+        assert!((49.0..=51.0).contains(&h.percentile(50.0)));
+        assert_eq!(h.percentile(99.0), 99.0);
+        assert_eq!(h.max(), 100.0);
+    }
+
+    #[test]
+    fn render_contains_everything() {
+        let mut m = Metrics::new();
+        m.inc("a");
+        m.set_gauge("b", 2.0);
+        m.observe("c", 1.0);
+        let s = m.render();
+        assert!(s.contains("counter a 1"));
+        assert!(s.contains("gauge b 2"));
+        assert!(s.contains("histogram c count=1"));
+    }
+}

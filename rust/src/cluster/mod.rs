@@ -1,0 +1,19 @@
+//! The paper's system: a virtual HPC cluster with auto-scaling.
+//!
+//! [`vcluster::VirtualCluster`] composes every substrate — machines
+//! (`hw`), the container engines (`dockyard`), the network (`vnet`),
+//! service discovery (`consul`) and the MPI runtime (`mpi` + `runtime`) —
+//! behind the workflow the paper describes: power up machines, deploy
+//! containers from the Fig. 2 image, containers self-register, the head
+//! node's consul-template keeps the hostfile fresh, jobs run via mpirun,
+//! and the autoscaler grows/shrinks the node pool with demand.
+
+pub mod autoscaler;
+pub mod head;
+pub mod metrics;
+pub mod vcluster;
+
+pub use autoscaler::{Autoscaler, ScaleAction};
+pub use head::{JobSpec, JobState};
+pub use metrics::Metrics;
+pub use vcluster::{NodeState, VirtualCluster};

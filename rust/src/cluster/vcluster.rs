@@ -1,0 +1,680 @@
+//! VirtualCluster: the paper's system, end to end.
+//!
+//! Composes the physical plant, per-machine container engines, the
+//! registry, the consul deployment and the head node, and drives the
+//! whole control plane on the discrete-event engine (`sim::Engine`).
+//! The provisioning pipeline for a node is exactly the paper's (§IV):
+//!
+//! ```text
+//! power on ──boot──▶ dockerd up ──pull+extract──▶ container running
+//!        ──agent join + register──▶ in catalog ──template──▶ hostfile
+//! ```
+//!
+//! MPI jobs run with *real* PJRT compute on rank threads; their duration
+//! (virtual comm + real compute) is charged back into virtual time.
+
+use crate::cluster::autoscaler::{Autoscaler, Observation, ScaleAction};
+use crate::cluster::head::{Head, JobKind, JobRecord, JobSpec, JobState};
+use crate::cluster::metrics::Metrics;
+use crate::config::ClusterSpec;
+use crate::consul::catalog::ServiceEntry;
+use crate::consul::ConsulCluster;
+use crate::dockyard::engine::{Engine as DockerEngine, RunSpec};
+use crate::dockyard::{Dockerfile, ImageStore, Registry};
+use crate::hw::rack::Plant;
+use crate::hw::PowerState;
+use crate::mpi::launcher::LaunchPlan;
+use crate::runtime::Runtime;
+use crate::sim::{Engine, SimTime};
+use crate::util::ids::{AgentId, ContainerId, JobId, MachineId};
+use crate::vnet::addr::Ipv4;
+use crate::vnet::fabric::Fabric;
+use crate::workloads::jacobi::{run_jacobi, JacobiSpec};
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Provisioning state of one machine slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeState {
+    Off,
+    Booting,
+    StartingEngine,
+    Deploying,
+    Ready,
+}
+
+impl NodeState {
+    pub fn is_provisioning(&self) -> bool {
+        matches!(self, NodeState::Booting | NodeState::StartingEngine | NodeState::Deploying)
+    }
+}
+
+/// Everything the event handlers mutate.
+pub struct ClusterState {
+    pub spec: ClusterSpec,
+    pub plant: Plant,
+    pub engines: Vec<DockerEngine>,
+    pub registry: Registry,
+    pub consul: ConsulCluster,
+    pub fabric: Arc<Mutex<Fabric>>,
+    pub head: Head,
+    pub autoscaler: Autoscaler,
+    pub metrics: Metrics,
+    pub node_states: Vec<NodeState>,
+    /// machine -> its compute (or head) container id.
+    pub containers: Vec<Option<ContainerId>>,
+    /// container ip -> container (for mpirun).
+    pub ip_to_container: HashMap<Ipv4, ContainerId>,
+    next_container: u32,
+    next_job: u32,
+    /// When each machine's provisioning began (for Fig. 6 timing).
+    provision_started: Vec<Option<SimTime>>,
+    /// Health-check TTL.
+    pub health_ttl: SimTime,
+    /// Artifacts dir for Jacobi jobs.
+    pub artifacts: std::path::PathBuf,
+}
+
+/// The facade: state + event engine.
+pub struct VirtualCluster {
+    pub state: ClusterState,
+    engine: Engine<ClusterState>,
+}
+
+type Ev = Engine<ClusterState>;
+
+impl VirtualCluster {
+    pub fn new(spec: ClusterSpec) -> Result<Self> {
+        let plant = Plant::uniform(spec.machines as usize, spec.machine_spec.clone(), 16);
+        let fabric = Arc::new(Mutex::new(Fabric::from_plant(&plant, spec.bridge)));
+
+        // Build the image the paper's Dockerfile describes and push it.
+        let mut registry = Registry::docker_hub();
+        let df = Dockerfile::parse(&spec.dockerfile)
+            .map_err(|e| anyhow!("dockerfile: {e}"))?;
+        let mut builder = ImageStore::with_base_images();
+        let image = builder
+            .build(&df, spec.image.clone())
+            .map_err(|e| anyhow!("image build: {e}"))?;
+        registry.push(image);
+
+        let engines = (0..spec.machines)
+            .map(|i| DockerEngine::new(MachineId::new(i), spec.bridge))
+            .collect();
+
+        let mut consul = ConsulCluster::new(spec.consul_servers, spec.seed);
+        // control-plane RPC delay from the fabric's machine-level model
+        {
+            let f = fabric.lock().unwrap();
+            consul.rpc_delay = f.control_msg_time(MachineId::new(0), MachineId::new(1.min(spec.machines - 1)), 256);
+        }
+
+        let n = spec.machines as usize;
+        let state = ClusterState {
+            autoscaler: Autoscaler::new(spec.autoscale.clone()),
+            spec,
+            plant,
+            engines,
+            registry,
+            consul,
+            fabric,
+            head: Head::new(),
+            metrics: Metrics::new(),
+            node_states: vec![NodeState::Off; n],
+            containers: vec![None; n],
+            ip_to_container: HashMap::new(),
+            next_container: 0,
+            next_job: 0,
+            provision_started: vec![None; n],
+            health_ttl: SimTime::from_secs(30),
+            artifacts: Runtime::default_dir(),
+        };
+        Ok(Self { state, engine: Engine::new() })
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.engine.now()
+    }
+
+    /// Bring the cluster up: head on machine 0, plus the autoscaler's
+    /// minimum node count on the following machines. Also starts the
+    /// periodic control loops (template poll, scheduler, autoscaler).
+    pub fn start(&mut self) {
+        let min = self.state.spec.autoscale.min_nodes.min(self.state.spec.machines - 1);
+        Self::provision_machine(&mut self.state, &mut self.engine, MachineId::new(0));
+        for m in 1..=min {
+            Self::provision_machine(&mut self.state, &mut self.engine, MachineId::new(m));
+        }
+        // control loops
+        let poll = self.state.head.poll_interval;
+        self.engine.schedule_after(poll, Self::template_poll_event);
+        self.engine
+            .schedule_after(SimTime::from_secs(1), Self::scheduler_event);
+        let interval = self.state.spec.autoscale.interval;
+        self.engine.schedule_after(interval, Self::autoscale_event);
+    }
+
+    /// Advance virtual time by `dt`, firing all due control-plane events.
+    pub fn advance(&mut self, dt: SimTime) {
+        let until = self.engine.now() + dt;
+        self.engine.run_until(&mut self.state, until);
+        self.state.consul.advance(until);
+    }
+
+    /// Advance until `pred` holds or `timeout` elapses. True on success.
+    pub fn advance_until(
+        &mut self,
+        timeout: SimTime,
+        mut pred: impl FnMut(&ClusterState) -> bool,
+    ) -> bool {
+        let deadline = self.engine.now() + timeout;
+        while self.engine.now() < deadline {
+            if pred(&self.state) {
+                return true;
+            }
+            let step = SimTime::from_millis(100).min(deadline.saturating_sub(self.engine.now()));
+            if step == SimTime::ZERO {
+                break;
+            }
+            self.advance(step);
+        }
+        pred(&self.state)
+    }
+
+    // ---------- provisioning pipeline ----------
+
+    fn provision_machine(st: &mut ClusterState, eng: &mut Ev, m: MachineId) {
+        let idx = m.raw() as usize;
+        if st.node_states[idx] != NodeState::Off {
+            return;
+        }
+        let machine = st.plant.machine_mut(m);
+        let boot = match machine.power_on() {
+            Ok(b) => b,
+            Err(_) => return,
+        };
+        st.node_states[idx] = NodeState::Booting;
+        st.provision_started[idx] = Some(eng.now());
+        st.metrics.inc("machines_powered_on");
+        eng.schedule_after(boot, move |st, eng| Self::boot_done(st, eng, m));
+    }
+
+    fn boot_done(st: &mut ClusterState, eng: &mut Ev, m: MachineId) {
+        let idx = m.raw() as usize;
+        st.plant.machine_mut(m).boot_complete().expect("booting");
+        st.node_states[idx] = NodeState::StartingEngine;
+        // dockerd startup
+        eng.schedule_after(SimTime::from_secs(2), move |st, eng| {
+            Self::engine_up(st, eng, m)
+        });
+    }
+
+    fn engine_up(st: &mut ClusterState, eng: &mut Ev, m: MachineId) {
+        let idx = m.raw() as usize;
+        st.node_states[idx] = NodeState::Deploying;
+        let cid = ContainerId::new(st.next_container);
+        st.next_container += 1;
+        let name = if idx == 0 { "head".to_string() } else { format!("node{:02}", idx + 1) };
+        let image = st.spec.image.clone();
+        let cores = st.spec.slots_per_node.min(st.plant.machine(m).spec.total_cores());
+        let spec = RunSpec { cores, memory: 32 << 30 };
+        // split borrows: engine i vs machine m
+        let machine = &mut st.plant.machines[idx];
+        let receipt = match st.engines[idx].run(cid, &name, &image, spec, machine, &mut st.registry) {
+            Ok(r) => r,
+            Err(e) => {
+                st.metrics.inc("deploy_failures");
+                log::warn!("deploy on {m} failed: {e}");
+                st.node_states[idx] = NodeState::Off;
+                st.plant.machine_mut(m).power_off();
+                return;
+            }
+        };
+        st.metrics.add("bytes_pulled", receipt.pulled_bytes);
+        st.metrics
+            .observe("pull_seconds", receipt.pull_time.as_secs_f64());
+        let ip = st.engines[idx].container(cid).unwrap().ip.unwrap();
+        st.containers[idx] = Some(cid);
+        st.ip_to_container.insert(ip, cid);
+        st.fabric.lock().unwrap().place(cid, m);
+        eng.schedule_after(receipt.total(), move |st, eng| {
+            Self::container_up(st, eng, m, cid, ip)
+        });
+    }
+
+    fn container_up(st: &mut ClusterState, eng: &mut Ev, m: MachineId, cid: ContainerId, ip: Ipv4) {
+        let idx = m.raw() as usize;
+        st.consul.advance(eng.now());
+        // consul agent in the container joins gossip (seed: head agent 0)
+        let agent = AgentId::new(cid.raw());
+        let seed = if idx == 0 { None } else { Some(AgentId::new(st.containers[0].map(|c| c.raw()).unwrap_or(0))) };
+        st.consul.agent_join(agent, seed, st.spec.seed ^ cid.raw() as u64);
+        // compute nodes register the hpc service; the head does not run
+        // MPI ranks in the paper's deployment (head + node02/node03 do —
+        // we register compute nodes only, matching Fig. 5's hostfile).
+        if idx != 0 {
+            let entry = ServiceEntry {
+                node: format!("node{:02}", idx + 1),
+                address: ip,
+                port: 22,
+                slots: st.spec.slots_per_node,
+                tags: vec!["hpc".into(), "mpi".into()],
+            };
+            let ttl = st.health_ttl;
+            st.consul.register_service("hpc", &entry, ttl);
+        }
+        st.node_states[idx] = NodeState::Ready;
+        if let Some(t0) = st.provision_started[idx] {
+            st.metrics
+                .observe("provision_seconds", (eng.now().saturating_sub(t0)).as_secs_f64());
+        }
+        st.metrics.inc("nodes_ready");
+        // heartbeat loop
+        let ttl = st.health_ttl;
+        eng.schedule_after(
+            SimTime::from_nanos(ttl.as_nanos() / 3),
+            move |st, eng| Self::heartbeat(st, eng, m, idx),
+        );
+    }
+
+    fn heartbeat(st: &mut ClusterState, eng: &mut Ev, m: MachineId, idx: usize) {
+        if st.node_states[idx] != NodeState::Ready {
+            return; // retired or dead: stop refreshing
+        }
+        if st.plant.machine(m).power != PowerState::On {
+            return;
+        }
+        st.consul.advance(eng.now());
+        let node = format!("node{:02}", idx + 1);
+        st.consul.refresh_health(&node);
+        let ttl = st.health_ttl;
+        eng.schedule_after(
+            SimTime::from_nanos(ttl.as_nanos() / 3),
+            move |st, eng| Self::heartbeat(st, eng, m, idx),
+        );
+    }
+
+    // ---------- control loops ----------
+
+    fn template_poll_event(st: &mut ClusterState, eng: &mut Ev) {
+        st.consul.advance(eng.now());
+        // health-gate the catalog before rendering, consul-template style:
+        // critical nodes must drop out of the hostfile.
+        let healthy = st.consul.healthy_instances("hpc");
+        let all = crate::consul::catalog::Catalog::list(st.consul.kv(), "hpc");
+        for e in &all {
+            if !healthy.iter().any(|h| h.node == e.node) {
+                st.consul.deregister_service("hpc", &e.node);
+            }
+        }
+        if let Some(output) = st.head.watcher.poll(st.consul.kv()) {
+            st.head.hostfile_text = output.to_string();
+            st.head.hostfile_updated_at = eng.now();
+            st.head.hostfile_renders += 1;
+            st.metrics.inc("hostfile_renders");
+        }
+        let poll = st.head.poll_interval;
+        eng.schedule_after(poll, Self::template_poll_event);
+    }
+
+    fn scheduler_event(st: &mut ClusterState, eng: &mut Ev) {
+        st.consul.advance(eng.now());
+        if let Some(mut record) = st.head.next_runnable(eng.now()) {
+            let started = eng.now();
+            let duration = match &record.spec.kind {
+                JobKind::Synthetic { duration } => *duration,
+                JobKind::Jacobi { px, py, tile, steps } => {
+                    match Self::run_jacobi_job(st, *px, *py, *tile, *steps) {
+                        Ok((report_dur, steps_run, residual)) => {
+                            record.result = Some((steps_run, residual));
+                            report_dur
+                        }
+                        Err(e) => {
+                            record.state = JobState::Failed { reason: e.to_string() };
+                            st.metrics.inc("jobs_failed");
+                            st.head.completed.push(record);
+                            eng.schedule_after(SimTime::from_secs(1), Self::scheduler_event);
+                            return;
+                        }
+                    }
+                }
+            };
+            st.metrics.inc("jobs_started");
+            st.metrics.observe(
+                "job_queue_seconds",
+                started.saturating_sub(record.queued_at).as_secs_f64(),
+            );
+            st.head.running = Some(record);
+            eng.schedule_after(duration, move |st: &mut ClusterState, eng: &mut Ev| {
+                let mut record = st.head.running.take().expect("running job");
+                record.state = JobState::Done { started, finished: eng.now() };
+                st.metrics.inc("jobs_completed");
+                st.head.completed.push(record);
+            });
+        }
+        eng.schedule_after(SimTime::from_secs(1), Self::scheduler_event);
+    }
+
+    fn run_jacobi_job(
+        st: &mut ClusterState,
+        px: usize,
+        py: usize,
+        tile: usize,
+        steps: usize,
+    ) -> Result<(SimTime, usize, f32)> {
+        let hostfile = st
+            .head
+            .hostfile()
+            .ok_or_else(|| anyhow!("no hostfile rendered yet"))?;
+        let plan = LaunchPlan {
+            hostfile,
+            n_ranks: px * py,
+            ip_to_container: st.ip_to_container.clone(),
+            fabric: st.fabric.clone(),
+            eager_threshold: 64 * 1024,
+        };
+        let spec = JacobiSpec {
+            px,
+            py,
+            tile,
+            steps,
+            check_every: 20.min(steps),
+            tol: 1e-6,
+            artifacts: st.artifacts.clone(),
+        };
+        let report = run_jacobi(&plan, &spec).map_err(|e| anyhow!("{e}"))?;
+        let duration = report.comm_time + SimTime::from_secs_f64(report.compute_wall_max.as_secs_f64());
+        st.metrics
+            .observe("job_comm_seconds", report.comm_time.as_secs_f64());
+        st.metrics.observe(
+            "job_compute_seconds",
+            report.compute_wall_max.as_secs_f64(),
+        );
+        st.metrics.add("job_bytes", report.total_bytes);
+        Ok((duration, report.steps_run, report.final_residual))
+    }
+
+    fn autoscale_event(st: &mut ClusterState, eng: &mut Ev) {
+        st.consul.advance(eng.now());
+        let ready = st
+            .node_states
+            .iter()
+            .skip(1)
+            .filter(|s| **s == NodeState::Ready)
+            .count() as u32;
+        let provisioning = st
+            .node_states
+            .iter()
+            .skip(1)
+            .filter(|s| s.is_provisioning())
+            .count() as u32;
+        let obs = Observation {
+            now: eng.now(),
+            ready_nodes: ready,
+            provisioning_nodes: provisioning,
+            demanded_slots: st.head.demanded_slots(),
+            slots_per_node: st.spec.slots_per_node,
+        };
+        match st.autoscaler.decide(obs) {
+            ScaleAction::Up(n) => {
+                let mut started = 0;
+                for i in 1..st.spec.machines {
+                    if started == n {
+                        break;
+                    }
+                    if st.node_states[i as usize] == NodeState::Off {
+                        Self::provision_machine(st, eng, MachineId::new(i));
+                        started += 1;
+                    }
+                }
+                st.metrics.add("scale_up_nodes", started as u64);
+            }
+            ScaleAction::Down(n) => {
+                let mut stopped = 0;
+                for i in (1..st.spec.machines).rev() {
+                    if stopped == n {
+                        break;
+                    }
+                    let idx = i as usize;
+                    if st.node_states[idx] == NodeState::Ready {
+                        Self::retire_node(st, eng.now(), MachineId::new(i));
+                        stopped += 1;
+                    }
+                }
+                st.metrics.add("scale_down_nodes", stopped as u64);
+            }
+            ScaleAction::None => {}
+        }
+        let interval = st.spec.spec_autoscale_interval();
+        eng.schedule_after(interval, Self::autoscale_event);
+    }
+
+    fn retire_node(st: &mut ClusterState, now: SimTime, m: MachineId) {
+        let idx = m.raw() as usize;
+        st.consul.advance(now);
+        let node = format!("node{:02}", idx + 1);
+        st.consul.deregister_service("hpc", &node);
+        if let Some(cid) = st.containers[idx].take() {
+            let _ = st.engines[idx].stop(cid, 0);
+            let machine = &mut st.plant.machines[idx];
+            let _ = st.engines[idx].remove(cid, machine);
+            st.consul.agent_remove(AgentId::new(cid.raw()));
+            if let Some(ip) = st.ip_to_container.iter().find(|(_, c)| **c == cid).map(|(ip, _)| *ip) {
+                st.ip_to_container.remove(&ip);
+            }
+            st.fabric.lock().unwrap().unplace(cid);
+        }
+        st.plant.machine_mut(m).power_off();
+        st.node_states[idx] = NodeState::Off;
+        st.metrics.inc("nodes_retired");
+    }
+
+    // ---------- public operations ----------
+
+    /// Submit a job to the head node.
+    pub fn submit(&mut self, name: &str, ranks: u32, kind: JobKind) -> JobId {
+        let id = JobId::new(self.state.next_job);
+        self.state.next_job += 1;
+        let spec = JobSpec { id, name: name.to_string(), ranks, kind };
+        let now = self.engine.now();
+        self.state.head.submit(spec, now);
+        self.state.metrics.inc("jobs_submitted");
+        id
+    }
+
+    /// Hard-kill a machine (power loss): the container vanishes, the
+    /// health check expires and the node drops out of the hostfile.
+    pub fn kill_machine(&mut self, m: MachineId) {
+        let idx = m.raw() as usize;
+        if let Some(cid) = self.state.containers[idx].take() {
+            self.state.consul.agent_remove(AgentId::new(cid.raw()));
+            if let Some(ip) = self
+                .state
+                .ip_to_container
+                .iter()
+                .find(|(_, c)| **c == cid)
+                .map(|(ip, _)| *ip)
+            {
+                self.state.ip_to_container.remove(&ip);
+            }
+            self.state.fabric.lock().unwrap().unplace(cid);
+        }
+        self.state.plant.machine_mut(m).power_off();
+        self.state.node_states[idx] = NodeState::Off;
+        self.state.metrics.inc("machines_killed");
+    }
+
+    /// Explicitly provision one more machine (manual scale-up).
+    pub fn power_on(&mut self, m: MachineId) {
+        Self::provision_machine(&mut self.state, &mut self.engine, m);
+    }
+
+    pub fn hostfile(&self) -> &str {
+        &self.state.head.hostfile_text
+    }
+
+    pub fn ready_compute_nodes(&self) -> usize {
+        self.state
+            .node_states
+            .iter()
+            .skip(1)
+            .filter(|s| **s == NodeState::Ready)
+            .count()
+    }
+
+    pub fn node_state(&self, m: MachineId) -> NodeState {
+        self.state.node_states[m.raw() as usize]
+    }
+
+    pub fn completed_jobs(&self) -> &[JobRecord] {
+        &self.state.head.completed
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.state.metrics
+    }
+}
+
+impl ClusterSpec {
+    fn spec_autoscale_interval(&self) -> SimTime {
+        self.autoscale.interval
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_spec(machines: u32) -> ClusterSpec {
+        let mut spec = ClusterSpec::paper_testbed();
+        spec.machines = machines;
+        spec.machine_spec.boot_time = SimTime::from_secs(5);
+        spec.autoscale.min_nodes = 2;
+        spec.autoscale.max_nodes = machines - 1;
+        spec.autoscale.interval = SimTime::from_secs(2);
+        spec.autoscale.cooldown = SimTime::from_secs(4);
+        spec.autoscale.idle_timeout = SimTime::from_secs(60);
+        spec
+    }
+
+    #[test]
+    fn cluster_comes_up_and_renders_hostfile() {
+        let mut vc = VirtualCluster::new(fast_spec(3)).unwrap();
+        vc.start();
+        let ok = vc.advance_until(SimTime::from_secs(300), |st| {
+            st.head.hostfile().map(|h| h.hosts.len()) == Some(2)
+        });
+        assert!(ok, "hostfile never reached 2 nodes: {:?}", vc.hostfile());
+        assert_eq!(vc.ready_compute_nodes(), 2);
+        let hf = vc.state.head.hostfile().unwrap();
+        assert_eq!(hf.total_slots(), 24);
+        // the hostfile contains the containers' bridge0 IPs
+        for h in &hf.hosts {
+            assert!(vc.state.ip_to_container.contains_key(&h.addr));
+        }
+        assert!(vc.metrics().counter("hostfile_renders") >= 1);
+        assert!(vc.metrics().counter("bytes_pulled") > 0);
+    }
+
+    #[test]
+    fn synthetic_job_runs_to_completion() {
+        let mut vc = VirtualCluster::new(fast_spec(3)).unwrap();
+        vc.start();
+        vc.submit(
+            "hello",
+            16,
+            JobKind::Synthetic { duration: SimTime::from_secs(30) },
+        );
+        let ok = vc.advance_until(SimTime::from_secs(600), |st| !st.head.completed.is_empty());
+        assert!(ok, "job never completed");
+        let rec = &vc.completed_jobs()[0];
+        assert!(matches!(rec.state, JobState::Done { .. }));
+        if let JobState::Done { started, finished } = rec.state {
+            assert_eq!(finished.saturating_sub(started), SimTime::from_secs(30));
+        }
+    }
+
+    #[test]
+    fn autoscaler_grows_for_demand_beyond_min() {
+        let mut spec = fast_spec(5);
+        spec.autoscale.min_nodes = 1;
+        spec.autoscale.max_nodes = 4;
+        let mut vc = VirtualCluster::new(spec).unwrap();
+        vc.start();
+        // demand 36 slots = 3 nodes; min is 1
+        vc.submit(
+            "big",
+            36,
+            JobKind::Synthetic { duration: SimTime::from_secs(10) },
+        );
+        let ok = vc.advance_until(SimTime::from_secs(600), |st| {
+            st.node_states.iter().skip(1).filter(|s| **s == NodeState::Ready).count() >= 3
+        });
+        assert!(ok, "never scaled to 3 nodes");
+        assert!(vc.metrics().counter("scale_up_nodes") >= 2);
+        // and the job eventually runs
+        let ok = vc.advance_until(SimTime::from_secs(600), |st| !st.head.completed.is_empty());
+        assert!(ok, "queued job never ran after scale-up");
+    }
+
+    #[test]
+    fn dead_machine_leaves_the_hostfile() {
+        let mut spec = fast_spec(3);
+        spec.autoscale.enabled = false; // no self-healing in this test
+        let mut vc = VirtualCluster::new(spec).unwrap();
+        vc.start();
+        assert!(vc.advance_until(SimTime::from_secs(300), |st| {
+            st.head.hostfile().map(|h| h.hosts.len()) == Some(2)
+        }));
+        vc.kill_machine(MachineId::new(2));
+        // after TTL expiry + template poll the node disappears
+        let ok = vc.advance_until(SimTime::from_secs(120), |st| {
+            st.head.hostfile().map(|h| h.hosts.len()) == Some(1)
+        });
+        assert!(ok, "dead node still in hostfile: {}", vc.hostfile());
+    }
+
+    #[test]
+    fn autoscaler_replaces_dead_machine() {
+        // With autoscaling on and min_nodes=2, a killed machine is
+        // re-provisioned automatically (self-healing).
+        let mut vc = VirtualCluster::new(fast_spec(3)).unwrap();
+        vc.start();
+        assert!(vc.advance_until(SimTime::from_secs(300), |st| {
+            st.head.hostfile().map(|h| h.hosts.len()) == Some(2)
+        }));
+        let powered_before = vc.metrics().counter("machines_powered_on");
+        vc.kill_machine(MachineId::new(2));
+        let ok = vc.advance_until(SimTime::from_secs(300), |st| {
+            st.node_states[2] == NodeState::Ready
+        });
+        assert!(ok, "machine 2 never re-provisioned");
+        assert!(vc.metrics().counter("machines_powered_on") > powered_before);
+        assert!(vc.advance_until(SimTime::from_secs(60), |st| {
+            st.head.hostfile().map(|h| h.hosts.len()) == Some(2)
+        }));
+    }
+
+    #[test]
+    fn scale_down_after_idle() {
+        let mut spec = fast_spec(4);
+        spec.autoscale.min_nodes = 1;
+        spec.autoscale.max_nodes = 3;
+        spec.autoscale.idle_timeout = SimTime::from_secs(30);
+        let mut vc = VirtualCluster::new(spec).unwrap();
+        vc.start();
+        vc.submit(
+            "burst",
+            36,
+            JobKind::Synthetic { duration: SimTime::from_secs(5) },
+        );
+        assert!(vc.advance_until(SimTime::from_secs(600), |st| !st.head.completed.is_empty()));
+        // idle now: should fall back toward min_nodes
+        let ok = vc.advance_until(SimTime::from_secs(600), |st| {
+            st.node_states.iter().skip(1).filter(|s| **s == NodeState::Ready).count() == 1
+        });
+        assert!(ok, "never scaled down to min");
+        assert!(vc.metrics().counter("nodes_retired") >= 1);
+    }
+}

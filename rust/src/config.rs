@@ -1,0 +1,380 @@
+//! Cluster configuration: a hand-rolled TOML-subset parser (no serde in
+//! the offline crate set) plus the typed `ClusterSpec` the launcher and
+//! examples consume.
+//!
+//! Supported syntax: `[section]` headers, `key = value` with string
+//! (`"x"`), integer, float, boolean and `["a", "b"]` string-list values,
+//! `#` comments.
+
+use crate::hw::{MachineSpec, NicSpec};
+use crate::sim::SimTime;
+use crate::util::bytes::parse_bytes;
+use crate::vnet::bridge::BridgeMode;
+use std::collections::BTreeMap;
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq)]
+pub enum ConfigError {
+    #[error("line {0}: syntax error: {1}")]
+    Syntax(usize, String),
+    #[error("[{0}] {1}: {2}")]
+    BadValue(String, String, String),
+}
+
+/// A parsed raw value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    List(Vec<String>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// section -> key -> value.
+pub type RawConfig = BTreeMap<String, BTreeMap<String, Value>>;
+
+fn parse_value(line_no: usize, s: &str) -> Result<Value, ConfigError> {
+    let s = s.trim();
+    if let Some(inner) = s.strip_prefix('"') {
+        let end = inner
+            .rfind('"')
+            .ok_or_else(|| ConfigError::Syntax(line_no, "unterminated string".into()))?;
+        return Ok(Value::Str(inner[..end].to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('[') {
+        if !s.ends_with(']') {
+            return Err(ConfigError::Syntax(line_no, "unterminated list".into()));
+        }
+        let inner = &s[1..s.len() - 1];
+        let mut items = Vec::new();
+        for item in inner.split(',') {
+            let item = item.trim();
+            if item.is_empty() {
+                continue;
+            }
+            let item = item
+                .strip_prefix('"')
+                .and_then(|i| i.strip_suffix('"'))
+                .ok_or_else(|| ConfigError::Syntax(line_no, "list items must be strings".into()))?;
+            items.push(item.to_string());
+        }
+        return Ok(Value::List(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(ConfigError::Syntax(line_no, format!("cannot parse value: {s}")))
+}
+
+/// Parse raw config text.
+pub fn parse(text: &str) -> Result<RawConfig, ConfigError> {
+    let mut out: RawConfig = BTreeMap::new();
+    let mut section = String::from("root");
+    for (i, raw) in text.lines().enumerate() {
+        let line_no = i + 1;
+        let line = match raw.find('#') {
+            // don't strip # inside strings — cheap check: only strip if no quote before it
+            Some(pos) if !raw[..pos].contains('"') => &raw[..pos],
+            _ => raw,
+        }
+        .trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let name = name
+                .strip_suffix(']')
+                .ok_or_else(|| ConfigError::Syntax(line_no, "bad section header".into()))?;
+            section = name.trim().to_string();
+            out.entry(section.clone()).or_default();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| ConfigError::Syntax(line_no, "expected key = value".into()))?;
+        let value = parse_value(line_no, v)?;
+        out.entry(section.clone())
+            .or_default()
+            .insert(k.trim().to_string(), value);
+    }
+    Ok(out)
+}
+
+/// Autoscaling policy knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AutoscaleConfig {
+    pub enabled: bool,
+    pub min_nodes: u32,
+    pub max_nodes: u32,
+    /// Seconds between scale decisions.
+    pub interval: SimTime,
+    /// Cooldown after any scaling action.
+    pub cooldown: SimTime,
+    /// Scale down after this long with an empty queue.
+    pub idle_timeout: SimTime,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        Self {
+            enabled: true,
+            min_nodes: 2,
+            max_nodes: 3,
+            interval: SimTime::from_secs(5),
+            cooldown: SimTime::from_secs(30),
+            idle_timeout: SimTime::from_secs(300),
+        }
+    }
+}
+
+/// The full cluster description.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub name: String,
+    pub machines: u32,
+    pub machine_spec: MachineSpec,
+    pub bridge: BridgeMode,
+    pub consul_servers: u32,
+    pub image: String,
+    pub dockerfile: String,
+    /// MPI slots each compute container advertises.
+    pub slots_per_node: u32,
+    pub seed: u64,
+    pub autoscale: AutoscaleConfig,
+}
+
+impl Default for ClusterSpec {
+    fn default() -> Self {
+        Self::paper_testbed()
+    }
+}
+
+impl ClusterSpec {
+    /// The paper's exact deployment: 3 Dell M620 blades, bridge0,
+    /// 3 consul servers, the Fig. 2 image, 12 slots per node.
+    pub fn paper_testbed() -> Self {
+        Self {
+            name: "nchc-virtual-hpc".into(),
+            machines: 3,
+            machine_spec: MachineSpec::dell_m620(),
+            bridge: BridgeMode::Bridge0,
+            consul_servers: 3,
+            image: "nchc/mpi-computenode:latest".into(),
+            dockerfile: crate::dockyard::Dockerfile::paper_compute_node().to_string(),
+            slots_per_node: 12,
+            seed: 42,
+            autoscale: AutoscaleConfig::default(),
+        }
+    }
+
+    /// Build from config text (missing keys fall back to the testbed).
+    pub fn from_text(text: &str) -> Result<Self, ConfigError> {
+        let raw = parse(text)?;
+        let mut spec = Self::paper_testbed();
+        if let Some(c) = raw.get("cluster") {
+            if let Some(v) = c.get("name") {
+                spec.name = req_str("cluster", "name", v)?;
+            }
+            if let Some(v) = c.get("machines") {
+                spec.machines = req_int("cluster", "machines", v)? as u32;
+            }
+            if let Some(v) = c.get("bridge") {
+                spec.bridge = match req_str("cluster", "bridge", v)?.as_str() {
+                    "docker0" => BridgeMode::Docker0,
+                    "bridge0" => BridgeMode::Bridge0,
+                    "host" => BridgeMode::Host,
+                    other => {
+                        return Err(ConfigError::BadValue(
+                            "cluster".into(),
+                            "bridge".into(),
+                            format!("unknown mode {other}"),
+                        ))
+                    }
+                };
+            }
+            if let Some(v) = c.get("consul_servers") {
+                spec.consul_servers = req_int("cluster", "consul_servers", v)? as u32;
+            }
+            if let Some(v) = c.get("slots_per_node") {
+                spec.slots_per_node = req_int("cluster", "slots_per_node", v)? as u32;
+            }
+            if let Some(v) = c.get("seed") {
+                spec.seed = req_int("cluster", "seed", v)? as u64;
+            }
+            if let Some(v) = c.get("image") {
+                spec.image = req_str("cluster", "image", v)?;
+            }
+        }
+        if let Some(m) = raw.get("machine") {
+            if let Some(v) = m.get("memory") {
+                let s = req_str("machine", "memory", v)?;
+                spec.machine_spec.memory_bytes = parse_bytes(&s).ok_or_else(|| {
+                    ConfigError::BadValue("machine".into(), "memory".into(), s)
+                })?;
+            }
+            if let Some(v) = m.get("cores_per_socket") {
+                spec.machine_spec.cores_per_socket =
+                    req_int("machine", "cores_per_socket", v)? as u32;
+            }
+            if let Some(v) = m.get("sockets") {
+                spec.machine_spec.sockets = req_int("machine", "sockets", v)? as u32;
+            }
+            if let Some(v) = m.get("boot_secs") {
+                spec.machine_spec.boot_time =
+                    SimTime::from_secs(req_int("machine", "boot_secs", v)? as u64);
+            }
+            if let Some(v) = m.get("nic") {
+                spec.machine_spec.nic = match req_str("machine", "nic", v)?.as_str() {
+                    "10GbE" => NicSpec::ten_gbe(),
+                    "1GbE" => NicSpec::one_gbe(),
+                    "IB-FDR" => NicSpec::infiniband_fdr(),
+                    other => {
+                        return Err(ConfigError::BadValue(
+                            "machine".into(),
+                            "nic".into(),
+                            format!("unknown nic {other}"),
+                        ))
+                    }
+                };
+            }
+        }
+        if let Some(a) = raw.get("autoscale") {
+            if let Some(v) = a.get("enabled") {
+                spec.autoscale.enabled = v.as_bool().ok_or_else(|| {
+                    ConfigError::BadValue("autoscale".into(), "enabled".into(), format!("{v:?}"))
+                })?;
+            }
+            if let Some(v) = a.get("min_nodes") {
+                spec.autoscale.min_nodes = req_int("autoscale", "min_nodes", v)? as u32;
+            }
+            if let Some(v) = a.get("max_nodes") {
+                spec.autoscale.max_nodes = req_int("autoscale", "max_nodes", v)? as u32;
+            }
+            if let Some(v) = a.get("cooldown_secs") {
+                spec.autoscale.cooldown =
+                    SimTime::from_secs(req_int("autoscale", "cooldown_secs", v)? as u64);
+            }
+            if let Some(v) = a.get("idle_timeout_secs") {
+                spec.autoscale.idle_timeout =
+                    SimTime::from_secs(req_int("autoscale", "idle_timeout_secs", v)? as u64);
+            }
+        }
+        Ok(spec)
+    }
+}
+
+fn req_str(section: &str, key: &str, v: &Value) -> Result<String, ConfigError> {
+    v.as_str()
+        .map(str::to_string)
+        .ok_or_else(|| ConfigError::BadValue(section.into(), key.into(), format!("{v:?} is not a string")))
+}
+
+fn req_int(section: &str, key: &str, v: &Value) -> Result<i64, ConfigError> {
+    v.as_int()
+        .ok_or_else(|| ConfigError::BadValue(section.into(), key.into(), format!("{v:?} is not an int")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_values() {
+        let raw = parse(
+            "# comment\n[cluster]\nname = \"x\"\nmachines = 5\nratio = 1.5\non = true\nlist = [\"a\", \"b\"]\n",
+        )
+        .unwrap();
+        let c = &raw["cluster"];
+        assert_eq!(c["name"], Value::Str("x".into()));
+        assert_eq!(c["machines"], Value::Int(5));
+        assert_eq!(c["ratio"], Value::Float(1.5));
+        assert_eq!(c["on"], Value::Bool(true));
+        assert_eq!(c["list"], Value::List(vec!["a".into(), "b".into()]));
+    }
+
+    #[test]
+    fn syntax_errors() {
+        assert!(matches!(parse("[oops\n"), Err(ConfigError::Syntax(1, _))));
+        assert!(matches!(parse("novalue\n"), Err(ConfigError::Syntax(1, _))));
+        assert!(matches!(parse("k = \"open\n"), Err(ConfigError::Syntax(1, _))));
+        assert!(matches!(parse("k = @@@\n"), Err(ConfigError::Syntax(1, _))));
+    }
+
+    #[test]
+    fn paper_testbed_defaults() {
+        let s = ClusterSpec::paper_testbed();
+        assert_eq!(s.machines, 3);
+        assert_eq!(s.consul_servers, 3);
+        assert_eq!(s.slots_per_node, 12);
+        assert_eq!(s.bridge, BridgeMode::Bridge0);
+        assert_eq!(s.machine_spec.model, "Dell M620");
+    }
+
+    #[test]
+    fn spec_from_text_overrides() {
+        let spec = ClusterSpec::from_text(
+            "[cluster]\nmachines = 8\nbridge = \"docker0\"\nslots_per_node = 4\n\
+             [machine]\nmemory = \"32GB\"\nnic = \"1GbE\"\nboot_secs = 10\n\
+             [autoscale]\nmin_nodes = 1\nmax_nodes = 8\ncooldown_secs = 5\n",
+        )
+        .unwrap();
+        assert_eq!(spec.machines, 8);
+        assert_eq!(spec.bridge, BridgeMode::Docker0);
+        assert_eq!(spec.machine_spec.memory_bytes, 32 << 30);
+        assert_eq!(spec.machine_spec.nic.name, "1GbE");
+        assert_eq!(spec.machine_spec.boot_time, SimTime::from_secs(10));
+        assert_eq!(spec.autoscale.min_nodes, 1);
+        assert_eq!(spec.autoscale.max_nodes, 8);
+        assert_eq!(spec.autoscale.cooldown, SimTime::from_secs(5));
+    }
+
+    #[test]
+    fn bad_enum_values_error() {
+        assert!(matches!(
+            ClusterSpec::from_text("[cluster]\nbridge = \"wat\"\n"),
+            Err(ConfigError::BadValue(..))
+        ));
+        assert!(matches!(
+            ClusterSpec::from_text("[machine]\nnic = \"token-ring\"\n"),
+            Err(ConfigError::BadValue(..))
+        ));
+    }
+}

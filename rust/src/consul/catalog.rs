@@ -1,0 +1,154 @@
+//! Service catalog: register/deregister/list service instances.
+//!
+//! Stored in the KV under `service/<name>/<node>` so it rides the Raft
+//! replication for free (consul does the same internally). Entries
+//! encode address/port/tags in a flat `k=v;` format — no serde offline.
+
+use super::kv::KvStore;
+use super::raft::Command;
+use crate::vnet::addr::Ipv4;
+
+/// One registered service instance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServiceEntry {
+    pub node: String,
+    pub address: Ipv4,
+    pub port: u16,
+    /// MPI slots advertised by the node (meta field the hostfile uses).
+    pub slots: u32,
+    pub tags: Vec<String>,
+}
+
+impl ServiceEntry {
+    fn encode(&self) -> String {
+        format!(
+            "addr={};port={};slots={};tags={}",
+            self.address,
+            self.port,
+            self.slots,
+            self.tags.join(",")
+        )
+    }
+
+    fn decode(node: &str, s: &str) -> Option<Self> {
+        let mut address = None;
+        let mut port = None;
+        let mut slots = 1u32;
+        let mut tags = Vec::new();
+        for part in s.split(';') {
+            let (k, v) = part.split_once('=')?;
+            match k {
+                "addr" => address = Ipv4::parse(v).ok(),
+                "port" => port = v.parse().ok(),
+                "slots" => slots = v.parse().ok()?,
+                "tags" => {
+                    tags = v
+                        .split(',')
+                        .filter(|t| !t.is_empty())
+                        .map(str::to_string)
+                        .collect()
+                }
+                _ => {}
+            }
+        }
+        Some(Self { node: node.to_string(), address: address?, port: port?, slots, tags })
+    }
+}
+
+/// Catalog operations expressed as raft commands + kv reads.
+pub struct Catalog;
+
+impl Catalog {
+    fn key(service: &str, node: &str) -> String {
+        format!("service/{service}/{node}")
+    }
+
+    /// The command that registers an instance.
+    pub fn register_cmd(service: &str, entry: &ServiceEntry) -> Command {
+        Command::Set { key: Self::key(service, &entry.node), value: entry.encode() }
+    }
+
+    /// The command that deregisters an instance.
+    pub fn deregister_cmd(service: &str, node: &str) -> Command {
+        Command::Delete { key: Self::key(service, node) }
+    }
+
+    /// List instances of a service, sorted by node name.
+    pub fn list(kv: &KvStore, service: &str) -> Vec<ServiceEntry> {
+        let prefix = format!("service/{service}/");
+        kv.list_prefix(&prefix)
+            .into_iter()
+            .filter_map(|(k, v)| {
+                let node = &k[prefix.len()..];
+                ServiceEntry::decode(node, v)
+            })
+            .collect()
+    }
+
+    /// Watch cursor for a service (changes when membership changes).
+    pub fn watch_index(kv: &KvStore, service: &str) -> u64 {
+        kv.prefix_index(&format!("service/{service}/"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(node: &str, last_octet: u8, slots: u32) -> ServiceEntry {
+        ServiceEntry {
+            node: node.into(),
+            address: Ipv4::new(10, 10, 0, last_octet),
+            port: 22,
+            slots,
+            tags: vec!["hpc".into(), "mpi".into()],
+        }
+    }
+
+    #[test]
+    fn register_list_roundtrip() {
+        let mut kv = KvStore::new();
+        kv.apply(&Catalog::register_cmd("hpc", &entry("node03", 3, 12)));
+        kv.apply(&Catalog::register_cmd("hpc", &entry("node02", 2, 12)));
+        let list = Catalog::list(&kv, "hpc");
+        assert_eq!(list.len(), 2);
+        assert_eq!(list[0].node, "node02"); // sorted
+        assert_eq!(list[0].address, Ipv4::new(10, 10, 0, 2));
+        assert_eq!(list[0].slots, 12);
+        assert_eq!(list[0].tags, vec!["hpc", "mpi"]);
+    }
+
+    #[test]
+    fn deregister_removes() {
+        let mut kv = KvStore::new();
+        kv.apply(&Catalog::register_cmd("hpc", &entry("node02", 2, 1)));
+        kv.apply(&Catalog::deregister_cmd("hpc", "node02"));
+        assert!(Catalog::list(&kv, "hpc").is_empty());
+    }
+
+    #[test]
+    fn services_are_namespaced() {
+        let mut kv = KvStore::new();
+        kv.apply(&Catalog::register_cmd("hpc", &entry("a", 2, 1)));
+        kv.apply(&Catalog::register_cmd("web", &entry("b", 3, 1)));
+        assert_eq!(Catalog::list(&kv, "hpc").len(), 1);
+        assert_eq!(Catalog::list(&kv, "web").len(), 1);
+    }
+
+    #[test]
+    fn watch_index_bumps_on_membership_change() {
+        let mut kv = KvStore::new();
+        kv.apply(&Catalog::register_cmd("hpc", &entry("a", 2, 1)));
+        let i1 = Catalog::watch_index(&kv, "hpc");
+        kv.apply(&Catalog::register_cmd("web", &entry("x", 9, 1)));
+        assert_eq!(Catalog::watch_index(&kv, "hpc"), i1, "other service must not wake hpc watchers");
+        kv.apply(&Catalog::register_cmd("hpc", &entry("b", 3, 1)));
+        assert!(Catalog::watch_index(&kv, "hpc") > i1);
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(ServiceEntry::decode("n", "not-a-record").is_none());
+        assert!(ServiceEntry::decode("n", "addr=999.1.1.1;port=22").is_none());
+    }
+}

@@ -1,0 +1,573 @@
+//! SWIM-style gossip membership (what consul's LAN serf layer does).
+//!
+//! Every protocol period a member probes one random peer; a missing ack
+//! triggers indirect probes through `k` relays, then suspicion, then
+//! death. Membership updates (join/suspect/dead/alive) piggyback on all
+//! probe traffic with a retransmit budget of `λ·log₂(n)`, giving the
+//! O(log n) dissemination the Fig. 7 bench measures.
+//!
+//! Pure state machine: `tick`/`on_message` return `(to, Msg)` batches;
+//! the driver owns delivery, delay and loss.
+
+use crate::sim::SimTime;
+use crate::util::ids::AgentId;
+use crate::util::Rng;
+use std::collections::HashMap;
+
+/// Health state of a member, with SWIM incarnation numbers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemberState {
+    Alive,
+    Suspect,
+    Dead,
+}
+
+/// A disseminated update.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Update {
+    pub agent: AgentId,
+    pub state: MemberState,
+    pub incarnation: u64,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    Ping { updates: Vec<Update> },
+    Ack { updates: Vec<Update> },
+    /// Ask `via` to probe `target` on our behalf.
+    PingReq { target: AgentId, updates: Vec<Update> },
+    /// Relay result for an indirect probe.
+    IndirectAck { target: AgentId, updates: Vec<Update> },
+    /// Push-pull anti-entropy (serf's periodic full state sync): the
+    /// sender's complete membership view.
+    SyncReq { state: Vec<Update> },
+    SyncResp { state: Vec<Update> },
+}
+
+#[derive(Debug, Clone)]
+struct MemberInfo {
+    state: MemberState,
+    incarnation: u64,
+    /// When the member entered Suspect (for the suspicion timeout).
+    suspect_since: SimTime,
+}
+
+#[derive(Debug, Clone)]
+struct PendingProbe {
+    target: AgentId,
+    sent_at: SimTime,
+    indirect: bool,
+}
+
+/// One gossip member (a consul agent).
+pub struct GossipNode {
+    pub id: AgentId,
+    members: HashMap<AgentId, MemberInfo>,
+    incarnation: u64,
+    /// Updates queued for piggybacking: (update, remaining retransmits).
+    outbox: Vec<(Update, u32)>,
+    probe: Option<PendingProbe>,
+    /// Indirect-probe relays we owe an answer: target -> requesters.
+    pending_relays: HashMap<AgentId, Vec<AgentId>>,
+    next_probe_at: SimTime,
+    next_sync_at: SimTime,
+    rng: Rng,
+    pub protocol_period: SimTime,
+    pub ack_timeout: SimTime,
+    pub suspicion_timeout: SimTime,
+    /// Push-pull full-state sync cadence (serf defaults to 30s; we use
+    /// 10s — the paper-scale clusters are small).
+    pub sync_interval: SimTime,
+    pub indirect_relays: usize,
+    /// λ in the retransmit budget λ·log2(n).
+    pub retransmit_mult: u32,
+}
+
+impl GossipNode {
+    pub fn new(id: AgentId, seed: u64) -> Self {
+        Self {
+            id,
+            members: HashMap::new(),
+            incarnation: 0,
+            outbox: Vec::new(),
+            probe: None,
+            pending_relays: HashMap::new(),
+            next_probe_at: SimTime::ZERO,
+            next_sync_at: SimTime::ZERO,
+            rng: Rng::new(seed ^ ((id.raw() as u64 + 1) * 0xA5A5)),
+            protocol_period: SimTime::from_millis(1000),
+            ack_timeout: SimTime::from_millis(300),
+            suspicion_timeout: SimTime::from_millis(3000),
+            sync_interval: SimTime::from_millis(10_000),
+            indirect_relays: 3,
+            retransmit_mult: 3,
+        }
+    }
+
+    /// Members (including self is NOT tracked here).
+    pub fn alive_members(&self) -> Vec<AgentId> {
+        let mut v: Vec<AgentId> = self
+            .members
+            .iter()
+            .filter(|(_, m)| m.state == MemberState::Alive)
+            .map(|(&a, _)| a)
+            .collect();
+        v.sort();
+        v
+    }
+
+    pub fn member_state(&self, a: AgentId) -> Option<MemberState> {
+        self.members.get(&a).map(|m| m.state)
+    }
+
+    pub fn member_count(&self) -> usize {
+        self.members.len()
+    }
+
+    fn retransmit_budget(&self) -> u32 {
+        let n = (self.members.len() + 1).max(2) as f64;
+        self.retransmit_mult * (n.log2().ceil() as u32).max(1)
+    }
+
+    fn queue_update(&mut self, u: Update) {
+        let budget = self.retransmit_budget();
+        self.outbox.push((u, budget));
+    }
+
+    /// Take up to `max` piggyback updates, decrementing budgets.
+    fn take_piggyback(&mut self, max: usize) -> Vec<Update> {
+        let mut out = Vec::new();
+        for (u, remaining) in self.outbox.iter_mut() {
+            if out.len() >= max {
+                break;
+            }
+            if *remaining > 0 {
+                out.push(*u);
+                *remaining -= 1;
+            }
+        }
+        self.outbox.retain(|(_, r)| *r > 0);
+        out
+    }
+
+    /// Join via a seed member: learn it, announce ourselves.
+    pub fn join(&mut self, seed: AgentId, now: SimTime) -> Vec<(AgentId, Msg)> {
+        self.members.insert(
+            seed,
+            MemberInfo { state: MemberState::Alive, incarnation: 0, suspect_since: SimTime::ZERO },
+        );
+        self.queue_update(Update {
+            agent: self.id,
+            state: MemberState::Alive,
+            incarnation: self.incarnation,
+        });
+        self.next_probe_at = now; // probe immediately
+        let updates = self.take_piggyback(8);
+        vec![(seed, Msg::Ping { updates })]
+    }
+
+    /// Merge a received update per SWIM precedence rules.
+    fn apply_update(&mut self, u: Update, now: SimTime) {
+        if u.agent == self.id {
+            // refute suspicion about ourselves with a higher incarnation
+            if u.state != MemberState::Alive && u.incarnation >= self.incarnation {
+                self.incarnation = u.incarnation + 1;
+                self.queue_update(Update {
+                    agent: self.id,
+                    state: MemberState::Alive,
+                    incarnation: self.incarnation,
+                });
+            }
+            return;
+        }
+        let entry = self.members.get(&u.agent);
+        let accept = match entry {
+            None => true,
+            Some(m) => {
+                u.incarnation > m.incarnation
+                    || (u.incarnation == m.incarnation && rank(u.state) > rank(m.state))
+            }
+        };
+        fn rank(s: MemberState) -> u8 {
+            match s {
+                MemberState::Alive => 0,
+                MemberState::Suspect => 1,
+                MemberState::Dead => 2,
+            }
+        }
+        if accept {
+            let changed = entry.map(|m| (m.state, m.incarnation)) != Some((u.state, u.incarnation));
+            self.members.insert(
+                u.agent,
+                MemberInfo {
+                    state: u.state,
+                    incarnation: u.incarnation,
+                    suspect_since: now,
+                },
+            );
+            if changed {
+                self.queue_update(u); // keep disseminating
+            }
+        }
+    }
+
+    fn apply_updates(&mut self, updates: Vec<Update>, now: SimTime) {
+        for u in updates {
+            self.apply_update(u, now);
+        }
+    }
+
+    fn random_member(&mut self, state: MemberState, exclude: &[AgentId]) -> Option<AgentId> {
+        let candidates: Vec<AgentId> = self
+            .members
+            .iter()
+            .filter(|(a, m)| m.state == state && !exclude.contains(a))
+            .map(|(&a, _)| a)
+            .collect();
+        self.rng.choose(&candidates).copied()
+    }
+
+    /// Periodic driver hook.
+    pub fn tick(&mut self, now: SimTime) -> Vec<(AgentId, Msg)> {
+        let mut out = Vec::new();
+
+        // 1. expire suspicions
+        let expired: Vec<AgentId> = self
+            .members
+            .iter()
+            .filter(|(_, m)| {
+                m.state == MemberState::Suspect
+                    && now.saturating_sub(m.suspect_since) >= self.suspicion_timeout
+            })
+            .map(|(&a, _)| a)
+            .collect();
+        for a in expired {
+            let inc = self.members[&a].incarnation;
+            self.apply_update(
+                Update { agent: a, state: MemberState::Dead, incarnation: inc },
+                now,
+            );
+        }
+
+        // 2. probe timeout -> indirect probe, then suspicion
+        if let Some(p) = self.probe.clone() {
+            if now.saturating_sub(p.sent_at) >= self.ack_timeout {
+                if !p.indirect {
+                    // fan out ping-reqs through k relays
+                    let mut relays = Vec::new();
+                    for _ in 0..self.indirect_relays {
+                        if let Some(r) =
+                            self.random_member(MemberState::Alive, &[p.target])
+                        {
+                            if !relays.contains(&r) {
+                                relays.push(r);
+                            }
+                        }
+                    }
+                    if relays.is_empty() {
+                        self.suspect(p.target, now);
+                        self.probe = None;
+                    } else {
+                        for r in relays {
+                            let updates = self.take_piggyback(6);
+                            out.push((r, Msg::PingReq { target: p.target, updates }));
+                        }
+                        self.probe = Some(PendingProbe { indirect: true, sent_at: now, ..p });
+                    }
+                } else {
+                    self.suspect(p.target, now);
+                    self.probe = None;
+                }
+            }
+        }
+
+        // 3. push-pull anti-entropy each sync interval
+        if now >= self.next_sync_at {
+            self.next_sync_at = now + self.sync_interval;
+            if let Some(peer) = self.random_member(MemberState::Alive, &[]) {
+                out.push((peer, Msg::SyncReq { state: self.full_state() }));
+            }
+        }
+
+        // 4. new probe each protocol period
+        if now >= self.next_probe_at {
+            self.next_probe_at = now + self.protocol_period;
+            if self.probe.is_none() {
+                if let Some(target) = self.random_member(MemberState::Alive, &[]) {
+                    self.probe = Some(PendingProbe { target, sent_at: now, indirect: false });
+                    let updates = self.take_piggyback(6);
+                    out.push((target, Msg::Ping { updates }));
+                }
+            }
+        }
+        out
+    }
+
+    /// Complete membership snapshot (incl. self) for push-pull sync.
+    fn full_state(&self) -> Vec<Update> {
+        let mut state: Vec<Update> = self
+            .members
+            .iter()
+            .map(|(&agent, m)| Update { agent, state: m.state, incarnation: m.incarnation })
+            .collect();
+        state.push(Update {
+            agent: self.id,
+            state: MemberState::Alive,
+            incarnation: self.incarnation,
+        });
+        state
+    }
+
+    fn suspect(&mut self, target: AgentId, now: SimTime) {
+        if let Some(m) = self.members.get(&target) {
+            if m.state == MemberState::Alive {
+                let inc = m.incarnation;
+                self.apply_update(
+                    Update { agent: target, state: MemberState::Suspect, incarnation: inc },
+                    now,
+                );
+            }
+        }
+    }
+
+    pub fn on_message(&mut self, now: SimTime, from: AgentId, msg: Msg) -> Vec<(AgentId, Msg)> {
+        // hearing from someone proves they are alive
+        let heard = Update {
+            agent: from,
+            state: MemberState::Alive,
+            incarnation: self
+                .members
+                .get(&from)
+                .map(|m| m.incarnation)
+                .unwrap_or(0),
+        };
+        self.apply_update(heard, now);
+        match msg {
+            Msg::Ping { updates } => {
+                self.apply_updates(updates, now);
+                let reply = self.take_piggyback(6);
+                vec![(from, Msg::Ack { updates: reply })]
+            }
+            Msg::Ack { updates } => {
+                self.apply_updates(updates, now);
+                if let Some(p) = &self.probe {
+                    if p.target == from {
+                        self.probe = None;
+                    }
+                }
+                // if we probed `from` on someone's behalf, relay the ack
+                let mut out = Vec::new();
+                if let Some(requesters) = self.pending_relays.remove(&from) {
+                    for r in requesters {
+                        let updates = self.take_piggyback(4);
+                        out.push((r, Msg::IndirectAck { target: from, updates }));
+                    }
+                }
+                out
+            }
+            Msg::PingReq { target, updates } => {
+                self.apply_updates(updates, now);
+                // probe the target on the requester's behalf; the
+                // IndirectAck goes out only when the target acks us.
+                self.pending_relays.entry(target).or_default().push(from);
+                let fwd = self.take_piggyback(6);
+                vec![(target, Msg::Ping { updates: fwd })]
+            }
+            Msg::IndirectAck { target, updates } => {
+                self.apply_updates(updates, now);
+                if let Some(p) = &self.probe {
+                    if p.target == target {
+                        self.probe = None;
+                    }
+                }
+                Vec::new()
+            }
+            Msg::SyncReq { state } => {
+                let mine = self.full_state();
+                self.apply_updates(state, now);
+                vec![(from, Msg::SyncResp { state: mine })]
+            }
+            Msg::SyncResp { state } => {
+                self.apply_updates(state, now);
+                Vec::new()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::VecDeque;
+
+    /// Deterministic driver with uniform delay and optional per-agent drop.
+    struct Net {
+        nodes: Vec<GossipNode>,
+        now: SimTime,
+        inflight: VecDeque<(SimTime, AgentId, AgentId, Msg)>,
+        delay: SimTime,
+        dead: Vec<AgentId>, // crashed agents: drop all their traffic
+    }
+
+    impl Net {
+        fn new(n: u32, seed: u64) -> Self {
+            let nodes = (0..n).map(|i| GossipNode::new(AgentId::new(i), seed)).collect();
+            Self {
+                nodes,
+                now: SimTime::ZERO,
+                inflight: VecDeque::new(),
+                delay: SimTime::from_micros(200),
+                dead: Vec::new(),
+            }
+        }
+
+        fn boot_all_via_seed(&mut self) {
+            for i in 1..self.nodes.len() {
+                let now = self.now;
+                let msgs = self.nodes[i].join(AgentId::new(0), now);
+                self.send(AgentId::new(i as u32), msgs);
+            }
+        }
+
+        fn send(&mut self, from: AgentId, msgs: Vec<(AgentId, Msg)>) {
+            for (to, m) in msgs {
+                self.inflight.push_back((self.now + self.delay, from, to, m));
+            }
+        }
+
+        fn run(&mut self, steps: u32, step: SimTime) {
+            for _ in 0..steps {
+                self.now = self.now + step;
+                let mut due = Vec::new();
+                while let Some(&(at, ..)) = self.inflight.front() {
+                    if at <= self.now {
+                        due.push(self.inflight.pop_front().unwrap());
+                    } else {
+                        break;
+                    }
+                }
+                for (_, from, to, msg) in due {
+                    if self.dead.contains(&to) || self.dead.contains(&from) {
+                        continue;
+                    }
+                    let now = self.now;
+                    let out = self.nodes[to.raw() as usize].on_message(now, from, msg);
+                    self.send(to, out);
+                }
+                for i in 0..self.nodes.len() {
+                    let id = AgentId::new(i as u32);
+                    if self.dead.contains(&id) {
+                        continue;
+                    }
+                    let now = self.now;
+                    let out = self.nodes[i].tick(now);
+                    self.send(id, out);
+                }
+            }
+        }
+
+        /// Does every live node see every other live node as Alive?
+        fn converged(&self) -> bool {
+            let live: Vec<AgentId> = (0..self.nodes.len() as u32)
+                .map(AgentId::new)
+                .filter(|a| !self.dead.contains(a))
+                .collect();
+            for &a in &live {
+                let n = &self.nodes[a.raw() as usize];
+                for &b in &live {
+                    if a != b && n.member_state(b) != Some(MemberState::Alive) {
+                        return false;
+                    }
+                }
+            }
+            true
+        }
+    }
+
+    #[test]
+    fn membership_converges() {
+        for n in [3u32, 8, 16] {
+            let mut net = Net::new(n, 42);
+            net.boot_all_via_seed();
+            net.run(30_000, SimTime::from_millis(10)); // 5 min sim
+            assert!(net.converged(), "n={n} did not converge");
+        }
+    }
+
+    #[test]
+    fn convergence_time_scales_sublinearly() {
+        // Fig. 7's shape: time-to-converge grows ~log n, not ~n.
+        let time_to_converge = |n: u32| -> f64 {
+            let mut net = Net::new(n, 7);
+            net.boot_all_via_seed();
+            for step in 0..60_000u32 {
+                net.run(1, SimTime::from_millis(10));
+                if net.converged() {
+                    return (step as f64) * 0.01;
+                }
+            }
+            panic!("n={n} never converged");
+        };
+        let t4 = time_to_converge(4);
+        let t32 = time_to_converge(32);
+        // SWIM disseminates in O(log n) protocol periods (1s each here):
+        // 32 nodes should converge within ~2·λ·log2(32) periods, nowhere
+        // near linear-in-n.
+        assert!(t4 < 5.0, "t4={t4}s");
+        assert!(t32 < 32.0, "t32={t32}s (linear or worse)");
+    }
+
+    #[test]
+    fn crashed_member_is_eventually_dead() {
+        let mut net = Net::new(6, 13);
+        net.boot_all_via_seed();
+        net.run(20_000, SimTime::from_millis(10));
+        assert!(net.converged());
+        let victim = AgentId::new(3);
+        net.dead.push(victim);
+        net.run(60_000, SimTime::from_millis(10));
+        for i in 0..6u32 {
+            if i == 3 {
+                continue;
+            }
+            let st = net.nodes[i as usize].member_state(victim);
+            assert!(
+                matches!(st, Some(MemberState::Dead) | Some(MemberState::Suspect)),
+                "node {i} still sees victim as {st:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn update_precedence_rules() {
+        let mut n = GossipNode::new(AgentId::new(0), 1);
+        let a = AgentId::new(1);
+        let now = SimTime::from_secs(1);
+        n.apply_update(Update { agent: a, state: MemberState::Alive, incarnation: 2 }, now);
+        // older incarnation loses
+        n.apply_update(Update { agent: a, state: MemberState::Dead, incarnation: 1 }, now);
+        assert_eq!(n.member_state(a), Some(MemberState::Alive));
+        // same incarnation: suspect beats alive
+        n.apply_update(Update { agent: a, state: MemberState::Suspect, incarnation: 2 }, now);
+        assert_eq!(n.member_state(a), Some(MemberState::Suspect));
+        // higher incarnation alive refutes
+        n.apply_update(Update { agent: a, state: MemberState::Alive, incarnation: 3 }, now);
+        assert_eq!(n.member_state(a), Some(MemberState::Alive));
+    }
+
+    #[test]
+    fn self_suspicion_is_refuted() {
+        let mut n = GossipNode::new(AgentId::new(0), 1);
+        let now = SimTime::from_secs(1);
+        n.apply_update(
+            Update { agent: AgentId::new(0), state: MemberState::Suspect, incarnation: 0 },
+            now,
+        );
+        // incarnation bumped and an alive update queued
+        assert_eq!(n.incarnation, 1);
+        let pig = n.take_piggyback(8);
+        assert!(pig
+            .iter()
+            .any(|u| u.agent == AgentId::new(0) && u.state == MemberState::Alive && u.incarnation == 1));
+    }
+}

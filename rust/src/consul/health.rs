@@ -1,0 +1,121 @@
+//! TTL health checks: an agent must refresh its check within the TTL or
+//! the instance goes critical and drops out of catalog listings — this is
+//! what makes "power off a machine, the node leaves the hostfile" work.
+
+use crate::sim::SimTime;
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CheckStatus {
+    Passing,
+    Critical,
+}
+
+#[derive(Debug, Clone)]
+struct Check {
+    ttl: SimTime,
+    last_refresh: SimTime,
+}
+
+/// Health-check registry (one per consul server cluster).
+#[derive(Debug, Clone, Default)]
+pub struct HealthRegistry {
+    checks: HashMap<String, Check>, // key: node name
+}
+
+impl HealthRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register (or re-register) a TTL check for a node.
+    pub fn register(&mut self, node: impl Into<String>, ttl: SimTime, now: SimTime) {
+        self.checks.insert(node.into(), Check { ttl, last_refresh: now });
+    }
+
+    pub fn deregister(&mut self, node: &str) {
+        self.checks.remove(node);
+    }
+
+    /// Agent heartbeat.
+    pub fn refresh(&mut self, node: &str, now: SimTime) -> bool {
+        match self.checks.get_mut(node) {
+            Some(c) => {
+                c.last_refresh = now;
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn status(&self, node: &str, now: SimTime) -> Option<CheckStatus> {
+        self.checks.get(node).map(|c| {
+            if now.saturating_sub(c.last_refresh) <= c.ttl {
+                CheckStatus::Passing
+            } else {
+                CheckStatus::Critical
+            }
+        })
+    }
+
+    /// Nodes currently passing.
+    pub fn passing(&self, now: SimTime) -> Vec<&str> {
+        let mut v: Vec<&str> = self
+            .checks
+            .iter()
+            .filter(|(_, c)| now.saturating_sub(c.last_refresh) <= c.ttl)
+            .map(|(n, _)| n.as_str())
+            .collect();
+        v.sort();
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.checks.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.checks.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_until_ttl_expires() {
+        let mut h = HealthRegistry::new();
+        let ttl = SimTime::from_secs(10);
+        h.register("node02", ttl, SimTime::ZERO);
+        assert_eq!(h.status("node02", SimTime::from_secs(5)), Some(CheckStatus::Passing));
+        assert_eq!(h.status("node02", SimTime::from_secs(10)), Some(CheckStatus::Passing));
+        assert_eq!(h.status("node02", SimTime::from_secs(11)), Some(CheckStatus::Critical));
+    }
+
+    #[test]
+    fn refresh_extends() {
+        let mut h = HealthRegistry::new();
+        h.register("n", SimTime::from_secs(10), SimTime::ZERO);
+        assert!(h.refresh("n", SimTime::from_secs(9)));
+        assert_eq!(h.status("n", SimTime::from_secs(18)), Some(CheckStatus::Passing));
+        assert!(!h.refresh("ghost", SimTime::ZERO));
+    }
+
+    #[test]
+    fn passing_list_filters_critical() {
+        let mut h = HealthRegistry::new();
+        h.register("a", SimTime::from_secs(10), SimTime::ZERO);
+        h.register("b", SimTime::from_secs(10), SimTime::ZERO);
+        h.refresh("b", SimTime::from_secs(20));
+        assert_eq!(h.passing(SimTime::from_secs(25)), vec!["b"]);
+    }
+
+    #[test]
+    fn deregister_removes() {
+        let mut h = HealthRegistry::new();
+        h.register("a", SimTime::from_secs(1), SimTime::ZERO);
+        h.deregister("a");
+        assert_eq!(h.status("a", SimTime::ZERO), None);
+        assert!(h.is_empty());
+    }
+}

@@ -1,0 +1,149 @@
+//! The replicated key/value store applied from the Raft log.
+//!
+//! Versioned like consul's: a global `ModifyIndex` bumps on every write,
+//! and each key remembers the index of its last change. Watchers (the
+//! template engine) poll `modify_index()` — consul's blocking query,
+//! collapsed to its observable effect.
+
+use super::raft::Command;
+use std::collections::BTreeMap;
+
+/// One stored value.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KvEntry {
+    pub value: String,
+    pub modify_index: u64,
+}
+
+/// The state machine.
+#[derive(Debug, Clone, Default)]
+pub struct KvStore {
+    data: BTreeMap<String, KvEntry>,
+    modify_index: u64,
+}
+
+impl KvStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Apply a committed raft command.
+    pub fn apply(&mut self, cmd: &Command) {
+        match cmd {
+            Command::Set { key, value } => {
+                self.modify_index += 1;
+                self.data.insert(
+                    key.clone(),
+                    KvEntry { value: value.clone(), modify_index: self.modify_index },
+                );
+            }
+            Command::Delete { key } => {
+                if self.data.remove(key).is_some() {
+                    self.modify_index += 1;
+                }
+            }
+            Command::Noop => {}
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.data.get(key).map(|e| e.value.as_str())
+    }
+
+    pub fn entry(&self, key: &str) -> Option<&KvEntry> {
+        self.data.get(key)
+    }
+
+    /// All pairs under a prefix, sorted by key.
+    pub fn list_prefix(&self, prefix: &str) -> Vec<(&str, &str)> {
+        self.data
+            .range(prefix.to_string()..)
+            .take_while(|(k, _)| k.starts_with(prefix))
+            .map(|(k, e)| (k.as_str(), e.value.as_str()))
+            .collect()
+    }
+
+    /// Highest modify index under a prefix (watch cursor).
+    pub fn prefix_index(&self, prefix: &str) -> u64 {
+        self.data
+            .range(prefix.to_string()..)
+            .take_while(|(k, _)| k.starts_with(prefix))
+            .map(|(_, e)| e.modify_index)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Global modify index.
+    pub fn modify_index(&self) -> u64 {
+        self.modify_index
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn set(kv: &mut KvStore, k: &str, v: &str) {
+        kv.apply(&Command::Set { key: k.into(), value: v.into() });
+    }
+
+    #[test]
+    fn set_get_delete() {
+        let mut kv = KvStore::new();
+        set(&mut kv, "a", "1");
+        assert_eq!(kv.get("a"), Some("1"));
+        set(&mut kv, "a", "2");
+        assert_eq!(kv.get("a"), Some("2"));
+        kv.apply(&Command::Delete { key: "a".into() });
+        assert_eq!(kv.get("a"), None);
+    }
+
+    #[test]
+    fn modify_index_monotonic() {
+        let mut kv = KvStore::new();
+        set(&mut kv, "a", "1");
+        let i1 = kv.modify_index();
+        set(&mut kv, "b", "1");
+        let i2 = kv.modify_index();
+        assert!(i2 > i1);
+        // delete of a missing key does NOT bump the index
+        kv.apply(&Command::Delete { key: "zz".into() });
+        assert_eq!(kv.modify_index(), i2);
+        kv.apply(&Command::Noop);
+        assert_eq!(kv.modify_index(), i2);
+    }
+
+    #[test]
+    fn prefix_listing_sorted() {
+        let mut kv = KvStore::new();
+        set(&mut kv, "service/hpc/node03", "10.10.0.3");
+        set(&mut kv, "service/hpc/node02", "10.10.0.2");
+        set(&mut kv, "service/web/x", "1.2.3.4");
+        let hpc = kv.list_prefix("service/hpc/");
+        assert_eq!(
+            hpc,
+            vec![
+                ("service/hpc/node02", "10.10.0.2"),
+                ("service/hpc/node03", "10.10.0.3")
+            ]
+        );
+    }
+
+    #[test]
+    fn prefix_index_tracks_changes_under_prefix_only() {
+        let mut kv = KvStore::new();
+        set(&mut kv, "service/hpc/a", "1");
+        let before = kv.prefix_index("service/hpc/");
+        set(&mut kv, "other/x", "1");
+        assert_eq!(kv.prefix_index("service/hpc/"), before);
+        set(&mut kv, "service/hpc/b", "1");
+        assert!(kv.prefix_index("service/hpc/") > before);
+    }
+}

@@ -1,0 +1,28 @@
+//! consul — the service-discovery and configuration substrate (§III-C).
+//!
+//! The paper runs a distributed Consul service (3 servers, HA) with an
+//! agent baked into every HPC container; containers self-register, and
+//! the head node renders the MPI hostfile through consul-template. This
+//! module implements the protocols behind that behaviour:
+//!
+//! * [`gossip`] — SWIM-style membership: periodic probe, indirect
+//!   probe-req, suspicion, piggybacked dissemination.
+//! * [`raft`] — leader election + replicated log for the server quorum.
+//! * [`kv`] — the replicated key/value store (ModifyIndex versioning).
+//! * [`catalog`] — service registry (register/deregister/list) over kv.
+//! * [`health`] — TTL health checks gating catalog listings.
+//! * [`template`] — consul-template: watch + render (the hostfile path).
+//! * [`service`] — the facade tying servers + agents to the sim engine.
+
+pub mod catalog;
+pub mod gossip;
+pub mod health;
+pub mod kv;
+pub mod raft;
+pub mod service;
+pub mod template;
+
+pub use catalog::{Catalog, ServiceEntry};
+pub use kv::KvStore;
+pub use service::ConsulCluster;
+pub use template::Template;

@@ -1,0 +1,593 @@
+//! Raft: leader election + log replication for the consul server quorum.
+//!
+//! A pure state machine: `tick(now)` and `on_message(now, msg)` return
+//! outbound messages; the driver (test harness or `service::ConsulCluster`)
+//! owns delivery and time. Implements the core of the Raft paper —
+//! randomized election timeouts, term/vote safety, AppendEntries
+//! consistency check, commit-on-majority — enough to give the KV store
+//! real HA semantics (leader failover included).
+
+use crate::sim::SimTime;
+use crate::util::Rng;
+
+pub type NodeId = u32;
+pub type Term = u64;
+
+/// A replicated command (the KV layer's operations).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Command {
+    Set { key: String, value: String },
+    Delete { key: String },
+    Noop,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct LogEntry {
+    pub term: Term,
+    pub command: Command,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    RequestVote { term: Term, candidate: NodeId, last_log_index: u64, last_log_term: Term },
+    VoteResponse { term: Term, granted: bool },
+    AppendEntries {
+        term: Term,
+        leader: NodeId,
+        prev_log_index: u64,
+        prev_log_term: Term,
+        entries: Vec<LogEntry>,
+        leader_commit: u64,
+    },
+    AppendResponse { term: Term, success: bool, match_index: u64 },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    Follower,
+    Candidate,
+    Leader,
+}
+
+/// One Raft server.
+pub struct RaftNode {
+    pub id: NodeId,
+    pub peers: Vec<NodeId>,
+    pub role: Role,
+    pub term: Term,
+    pub voted_for: Option<NodeId>,
+    pub log: Vec<LogEntry>, // 1-based indexing via helpers
+    pub commit_index: u64,
+    last_applied: u64,
+    // leader volatile state
+    next_index: Vec<u64>,
+    match_index: Vec<u64>,
+    // candidate volatile state
+    votes: u32,
+    // timers
+    election_deadline: SimTime,
+    heartbeat_due: SimTime,
+    rng: Rng,
+    pub election_timeout_min: SimTime,
+    pub election_timeout_max: SimTime,
+    pub heartbeat_interval: SimTime,
+}
+
+impl RaftNode {
+    pub fn new(id: NodeId, peers: Vec<NodeId>, seed: u64) -> Self {
+        let mut node = Self {
+            id,
+            peers,
+            role: Role::Follower,
+            term: 0,
+            voted_for: None,
+            log: Vec::new(),
+            commit_index: 0,
+            last_applied: 0,
+            next_index: Vec::new(),
+            match_index: Vec::new(),
+            votes: 0,
+            election_deadline: SimTime::ZERO,
+            heartbeat_due: SimTime::ZERO,
+            rng: Rng::new(seed ^ (id as u64 + 1) * 0x9E37),
+            election_timeout_min: SimTime::from_millis(150),
+            election_timeout_max: SimTime::from_millis(300),
+            heartbeat_interval: SimTime::from_millis(50),
+        };
+        node.reset_election_timer(SimTime::ZERO);
+        node
+    }
+
+    fn last_log_index(&self) -> u64 {
+        self.log.len() as u64
+    }
+    fn last_log_term(&self) -> Term {
+        self.log.last().map(|e| e.term).unwrap_or(0)
+    }
+    fn term_at(&self, index: u64) -> Term {
+        if index == 0 {
+            0
+        } else {
+            self.log[(index - 1) as usize].term
+        }
+    }
+
+    fn reset_election_timer(&mut self, now: SimTime) {
+        let span = self
+            .election_timeout_max
+            .saturating_sub(self.election_timeout_min)
+            .as_nanos();
+        let jitter = if span == 0 { 0 } else { self.rng.gen_range(span) };
+        self.election_deadline = now + self.election_timeout_min + SimTime::from_nanos(jitter);
+    }
+
+    fn become_follower(&mut self, term: Term, now: SimTime) {
+        self.role = Role::Follower;
+        if term > self.term {
+            self.term = term;
+            self.voted_for = None;
+        }
+        self.reset_election_timer(now);
+    }
+
+    fn become_leader(&mut self, now: SimTime) -> Vec<(NodeId, Message)> {
+        self.role = Role::Leader;
+        let n = self.peers.len();
+        self.next_index = vec![self.last_log_index() + 1; n];
+        self.match_index = vec![0; n];
+        self.heartbeat_due = now; // heartbeat immediately
+        self.broadcast_append(now)
+    }
+
+    fn start_election(&mut self, now: SimTime) -> Vec<(NodeId, Message)> {
+        self.role = Role::Candidate;
+        self.term += 1;
+        self.voted_for = Some(self.id);
+        self.votes = 1;
+        self.reset_election_timer(now);
+        if self.votes >= self.majority() {
+            // single-node cluster: win immediately
+            return self.become_leader(now);
+        }
+        let msg = Message::RequestVote {
+            term: self.term,
+            candidate: self.id,
+            last_log_index: self.last_log_index(),
+            last_log_term: self.last_log_term(),
+        };
+        self.peers.iter().map(|&p| (p, msg.clone())).collect()
+    }
+
+    fn append_for_peer(&self, peer_slot: usize) -> Message {
+        let next = self.next_index[peer_slot];
+        let prev_log_index = next - 1;
+        let prev_log_term = self.term_at(prev_log_index);
+        let entries: Vec<LogEntry> = self.log[(next as usize - 1).min(self.log.len())..].to_vec();
+        Message::AppendEntries {
+            term: self.term,
+            leader: self.id,
+            prev_log_index,
+            prev_log_term,
+            entries,
+            leader_commit: self.commit_index,
+        }
+    }
+
+    fn broadcast_append(&mut self, now: SimTime) -> Vec<(NodeId, Message)> {
+        self.heartbeat_due = now + self.heartbeat_interval;
+        (0..self.peers.len())
+            .map(|i| (self.peers[i], self.append_for_peer(i)))
+            .collect()
+    }
+
+    /// Majority size for the cluster (peers + self).
+    fn majority(&self) -> u32 {
+        (self.peers.len() as u32 + 1) / 2 + 1
+    }
+
+    /// Leader API: append a client command. Returns its log index, or
+    /// None if this node is not the leader.
+    pub fn propose(&mut self, command: Command, now: SimTime) -> Option<(u64, Vec<(NodeId, Message)>)> {
+        if self.role != Role::Leader {
+            return None;
+        }
+        self.log.push(LogEntry { term: self.term, command });
+        let index = self.last_log_index();
+        // single-node cluster commits immediately
+        self.advance_commit();
+        Some((index, self.broadcast_append(now)))
+    }
+
+    fn advance_commit(&mut self) {
+        if self.role != Role::Leader {
+            return;
+        }
+        for n in (self.commit_index + 1..=self.last_log_index()).rev() {
+            if self.term_at(n) != self.term {
+                continue;
+            }
+            let replicas = 1 + self
+                .match_index
+                .iter()
+                .filter(|&&m| m >= n)
+                .count() as u32;
+            if replicas >= self.majority() {
+                self.commit_index = n;
+                break;
+            }
+        }
+    }
+
+    /// Timer-driven behaviour. Call regularly (e.g. every 10 ms).
+    pub fn tick(&mut self, now: SimTime) -> Vec<(NodeId, Message)> {
+        match self.role {
+            Role::Leader => {
+                if now >= self.heartbeat_due {
+                    self.broadcast_append(now)
+                } else {
+                    Vec::new()
+                }
+            }
+            _ => {
+                if now >= self.election_deadline {
+                    self.start_election(now)
+                } else {
+                    Vec::new()
+                }
+            }
+        }
+    }
+
+    /// Message-driven behaviour.
+    pub fn on_message(&mut self, now: SimTime, from: NodeId, msg: Message) -> Vec<(NodeId, Message)> {
+        match msg {
+            Message::RequestVote { term, candidate, last_log_index, last_log_term } => {
+                if term > self.term {
+                    self.become_follower(term, now);
+                }
+                let log_ok = last_log_term > self.last_log_term()
+                    || (last_log_term == self.last_log_term()
+                        && last_log_index >= self.last_log_index());
+                let grant = term == self.term
+                    && log_ok
+                    && (self.voted_for.is_none() || self.voted_for == Some(candidate));
+                if grant {
+                    self.voted_for = Some(candidate);
+                    self.reset_election_timer(now);
+                }
+                vec![(from, Message::VoteResponse { term: self.term, granted: grant })]
+            }
+            Message::VoteResponse { term, granted } => {
+                if term > self.term {
+                    self.become_follower(term, now);
+                    return Vec::new();
+                }
+                if self.role == Role::Candidate && term == self.term && granted {
+                    self.votes += 1;
+                    if self.votes >= self.majority() {
+                        return self.become_leader(now);
+                    }
+                }
+                Vec::new()
+            }
+            Message::AppendEntries { term, leader: _, prev_log_index, prev_log_term, entries, leader_commit } => {
+                if term > self.term || (term == self.term && self.role != Role::Follower) {
+                    self.become_follower(term, now);
+                }
+                if term < self.term {
+                    return vec![(
+                        from,
+                        Message::AppendResponse { term: self.term, success: false, match_index: 0 },
+                    )];
+                }
+                self.reset_election_timer(now);
+                // consistency check
+                if prev_log_index > self.last_log_index()
+                    || (prev_log_index > 0 && self.term_at(prev_log_index) != prev_log_term)
+                {
+                    return vec![(
+                        from,
+                        Message::AppendResponse { term: self.term, success: false, match_index: 0 },
+                    )];
+                }
+                // append, truncating conflicts
+                let mut idx = prev_log_index as usize;
+                for e in entries {
+                    if idx < self.log.len() {
+                        if self.log[idx].term != e.term {
+                            self.log.truncate(idx);
+                            self.log.push(e);
+                        }
+                    } else {
+                        self.log.push(e);
+                    }
+                    idx += 1;
+                }
+                if leader_commit > self.commit_index {
+                    self.commit_index = leader_commit.min(self.last_log_index());
+                }
+                vec![(
+                    from,
+                    Message::AppendResponse {
+                        term: self.term,
+                        success: true,
+                        match_index: self.last_log_index(),
+                    },
+                )]
+            }
+            Message::AppendResponse { term, success, match_index } => {
+                if term > self.term {
+                    self.become_follower(term, now);
+                    return Vec::new();
+                }
+                if self.role != Role::Leader || term != self.term {
+                    return Vec::new();
+                }
+                let slot = match self.peers.iter().position(|&p| p == from) {
+                    Some(s) => s,
+                    None => return Vec::new(),
+                };
+                if success {
+                    self.match_index[slot] = self.match_index[slot].max(match_index);
+                    self.next_index[slot] = self.match_index[slot] + 1;
+                    self.advance_commit();
+                    Vec::new()
+                } else {
+                    // back off and retry
+                    self.next_index[slot] = self.next_index[slot].saturating_sub(1).max(1);
+                    vec![(from, self.append_for_peer(slot))]
+                }
+            }
+        }
+    }
+
+    /// Drain newly committed entries (apply to the state machine).
+    pub fn take_applied(&mut self) -> Vec<LogEntry> {
+        let mut out = Vec::new();
+        while self.last_applied < self.commit_index {
+            out.push(self.log[self.last_applied as usize].clone());
+            self.last_applied += 1;
+        }
+        out
+    }
+
+    pub fn is_leader(&self) -> bool {
+        self.role == Role::Leader
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod harness {
+    //! Deterministic in-memory raft cluster driver for tests.
+    use super::*;
+    use std::collections::VecDeque;
+
+    pub struct Net {
+        pub nodes: Vec<RaftNode>,
+        pub now: SimTime,
+        /// (deliver_at, from, to, msg)
+        pub inflight: VecDeque<(SimTime, NodeId, NodeId, Message)>,
+        pub delay: SimTime,
+        /// Nodes currently partitioned away.
+        pub down: Vec<NodeId>,
+    }
+
+    impl Net {
+        pub fn new(n: u32, seed: u64) -> Self {
+            let ids: Vec<NodeId> = (0..n).collect();
+            let nodes = ids
+                .iter()
+                .map(|&id| {
+                    let peers: Vec<NodeId> = ids.iter().copied().filter(|&p| p != id).collect();
+                    RaftNode::new(id, peers, seed)
+                })
+                .collect();
+            Self {
+                nodes,
+                now: SimTime::ZERO,
+                inflight: VecDeque::new(),
+                delay: SimTime::from_millis(5),
+                down: Vec::new(),
+            }
+        }
+
+        pub fn send_all(&mut self, from: NodeId, msgs: Vec<(NodeId, Message)>) {
+            for (to, m) in msgs {
+                self.inflight.push_back((self.now + self.delay, from, to, m));
+            }
+        }
+
+        /// Advance time in `step` increments for `steps` iterations.
+        pub fn run(&mut self, steps: u32, step: SimTime) {
+            for _ in 0..steps {
+                self.now = self.now + step;
+                // deliver due messages
+                let mut pending: Vec<(SimTime, NodeId, NodeId, Message)> = Vec::new();
+                while let Some(&(at, ..)) = self.inflight.front() {
+                    if at <= self.now {
+                        pending.push(self.inflight.pop_front().unwrap());
+                    } else {
+                        break;
+                    }
+                }
+                for (_, from, to, msg) in pending {
+                    if self.down.contains(&to) || self.down.contains(&from) {
+                        continue;
+                    }
+                    let now = self.now;
+                    let out = self.nodes[to as usize].on_message(now, from, msg);
+                    self.send_all(to, out);
+                }
+                // tick everyone
+                for id in 0..self.nodes.len() as u32 {
+                    if self.down.contains(&id) {
+                        continue;
+                    }
+                    let now = self.now;
+                    let out = self.nodes[id as usize].tick(now);
+                    self.send_all(id, out);
+                }
+            }
+        }
+
+        pub fn leaders(&self) -> Vec<NodeId> {
+            self.nodes
+                .iter()
+                .filter(|n| n.is_leader() && !self.down.contains(&n.id))
+                .map(|n| n.id)
+                .collect()
+        }
+
+        pub fn run_until_leader(&mut self) -> NodeId {
+            for _ in 0..5000 {
+                self.run(1, SimTime::from_millis(10));
+                let l = self.leaders();
+                if l.len() == 1 {
+                    return l[0];
+                }
+            }
+            panic!("no leader elected");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::harness::Net;
+    use super::*;
+
+    #[test]
+    fn elects_exactly_one_leader() {
+        for seed in [1u64, 7, 42, 99] {
+            let mut net = Net::new(3, seed);
+            let leader = net.run_until_leader();
+            assert_eq!(net.leaders(), vec![leader]);
+        }
+    }
+
+    #[test]
+    fn leaders_per_term_unique() {
+        // Election safety: run a while, track (term -> leader) pairs.
+        let mut net = Net::new(5, 3);
+        let mut seen: std::collections::HashMap<Term, NodeId> = Default::default();
+        for _ in 0..2000 {
+            net.run(1, SimTime::from_millis(10));
+            for n in &net.nodes {
+                if n.is_leader() {
+                    if let Some(&prev) = seen.get(&n.term) {
+                        assert_eq!(prev, n.id, "two leaders in term {}", n.term);
+                    } else {
+                        seen.insert(n.term, n.id);
+                    }
+                }
+            }
+        }
+        assert!(!seen.is_empty());
+    }
+
+    #[test]
+    fn replicates_and_commits() {
+        let mut net = Net::new(3, 11);
+        let leader = net.run_until_leader();
+        let now = net.now;
+        let (idx, msgs) = net.nodes[leader as usize]
+            .propose(Command::Set { key: "k".into(), value: "v".into() }, now)
+            .unwrap();
+        net.send_all(leader, msgs);
+        net.run(50, SimTime::from_millis(10));
+        assert!(net.nodes[leader as usize].commit_index >= idx);
+        // all live nodes applied it
+        for n in &mut net.nodes {
+            let applied = n.take_applied();
+            assert!(applied
+                .iter()
+                .any(|e| matches!(&e.command, Command::Set { key, .. } if key == "k")));
+        }
+    }
+
+    #[test]
+    fn failover_elects_new_leader_and_preserves_log() {
+        let mut net = Net::new(3, 5);
+        let leader = net.run_until_leader();
+        let now = net.now;
+        let (_, msgs) = net.nodes[leader as usize]
+            .propose(Command::Set { key: "a".into(), value: "1".into() }, now)
+            .unwrap();
+        net.send_all(leader, msgs);
+        net.run(50, SimTime::from_millis(10));
+        // kill the leader
+        net.down.push(leader);
+        let new_leader = net.run_until_leader();
+        assert_ne!(new_leader, leader);
+        // the committed entry must survive on the new leader
+        assert!(net.nodes[new_leader as usize]
+            .log
+            .iter()
+            .any(|e| matches!(&e.command, Command::Set { key, .. } if key == "a")));
+        // and the new leader can commit new entries
+        let now = net.now;
+        let (idx2, msgs) = net.nodes[new_leader as usize]
+            .propose(Command::Set { key: "b".into(), value: "2".into() }, now)
+            .unwrap();
+        net.send_all(new_leader, msgs);
+        net.run(100, SimTime::from_millis(10));
+        assert!(net.nodes[new_leader as usize].commit_index >= idx2);
+    }
+
+    #[test]
+    fn follower_rejects_stale_term() {
+        let mut n = RaftNode::new(0, vec![1], 1);
+        n.term = 5;
+        let out = n.on_message(
+            SimTime::from_millis(1),
+            1,
+            Message::AppendEntries {
+                term: 3,
+                leader: 1,
+                prev_log_index: 0,
+                prev_log_term: 0,
+                entries: vec![],
+                leader_commit: 0,
+            },
+        );
+        assert!(matches!(
+            out[0].1,
+            Message::AppendResponse { success: false, term: 5, .. }
+        ));
+    }
+
+    #[test]
+    fn log_consistency_check_rejects_gaps() {
+        let mut n = RaftNode::new(0, vec![1], 1);
+        let out = n.on_message(
+            SimTime::from_millis(1),
+            1,
+            Message::AppendEntries {
+                term: 1,
+                leader: 1,
+                prev_log_index: 7, // we have nothing
+                prev_log_term: 1,
+                entries: vec![LogEntry { term: 1, command: Command::Noop }],
+                leader_commit: 0,
+            },
+        );
+        assert!(matches!(out[0].1, Message::AppendResponse { success: false, .. }));
+    }
+
+    #[test]
+    fn single_node_cluster_self_commits() {
+        let mut n = RaftNode::new(0, vec![], 1);
+        // immediately becomes candidate then leader on tick
+        let mut now = SimTime::ZERO;
+        for _ in 0..100 {
+            now = now + SimTime::from_millis(10);
+            n.tick(now);
+            if n.is_leader() {
+                break;
+            }
+        }
+        assert!(n.is_leader());
+        let (idx, _) = n.propose(Command::Noop, now).unwrap();
+        assert_eq!(n.commit_index, idx);
+    }
+}

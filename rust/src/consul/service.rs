@@ -1,0 +1,384 @@
+//! ConsulCluster: the running service — a Raft server quorum (HA, §III-C)
+//! plus the gossip agent pool, driven by virtual time.
+//!
+//! The provisioner calls `advance(now)` whenever sim time moves; writes
+//! (service registration) go through the Raft leader and become visible
+//! in `kv()` once committed, exactly like consul's consistent reads.
+
+use super::catalog::{Catalog, ServiceEntry};
+use super::gossip::{GossipNode, Msg as GossipMsg};
+use super::health::HealthRegistry;
+use super::kv::KvStore;
+use super::raft::{Command, Message as RaftMsg, RaftNode};
+use crate::sim::SimTime;
+use crate::util::ids::AgentId;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq)]
+pub enum ConsulError {
+    #[error("no raft leader elected yet")]
+    NoLeader,
+    #[error("unknown agent {0}")]
+    UnknownAgent(AgentId),
+}
+
+enum Wire {
+    Raft { from: u32, to: u32, msg: RaftMsg },
+    Gossip { from: AgentId, to: AgentId, msg: GossipMsg },
+}
+
+/// One consul server: raft + its applied kv replica.
+pub struct Server {
+    pub raft: RaftNode,
+    pub kv: KvStore,
+}
+
+/// The whole consul deployment.
+pub struct ConsulCluster {
+    pub servers: Vec<Server>,
+    agents: HashMap<AgentId, GossipNode>,
+    queue: BinaryHeap<Reverse<(SimTime, u64, usize)>>,
+    payloads: Vec<Option<Wire>>,
+    free_slots: VecDeque<usize>,
+    seq: u64,
+    now: SimTime,
+    next_tick: SimTime,
+    /// Raft/gossip RPC one-way delay (set from the fabric by the cluster).
+    pub rpc_delay: SimTime,
+    /// Server/agent tick granularity.
+    pub tick_interval: SimTime,
+    pub health: HealthRegistry,
+    /// Writes waiting for a leader.
+    backlog: VecDeque<Command>,
+    /// Statistics.
+    pub raft_msgs: u64,
+    pub gossip_msgs: u64,
+}
+
+impl ConsulCluster {
+    /// `n_servers` raft servers (the paper runs a 3-server HA quorum).
+    pub fn new(n_servers: u32, seed: u64) -> Self {
+        let ids: Vec<u32> = (0..n_servers).collect();
+        let servers = ids
+            .iter()
+            .map(|&id| Server {
+                raft: RaftNode::new(
+                    id,
+                    ids.iter().copied().filter(|&p| p != id).collect(),
+                    seed,
+                ),
+                kv: KvStore::new(),
+            })
+            .collect();
+        Self {
+            servers,
+            agents: HashMap::new(),
+            queue: BinaryHeap::new(),
+            payloads: Vec::new(),
+            free_slots: VecDeque::new(),
+            seq: 0,
+            now: SimTime::ZERO,
+            next_tick: SimTime::ZERO,
+            rpc_delay: SimTime::from_micros(200),
+            tick_interval: SimTime::from_millis(10),
+            health: HealthRegistry::new(),
+            backlog: VecDeque::new(),
+            raft_msgs: 0,
+            gossip_msgs: 0,
+        }
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    fn push(&mut self, at: SimTime, wire: Wire) {
+        let slot = match self.free_slots.pop_front() {
+            Some(s) => {
+                self.payloads[s] = Some(wire);
+                s
+            }
+            None => {
+                self.payloads.push(Some(wire));
+                self.payloads.len() - 1
+            }
+        };
+        self.queue.push(Reverse((at, self.seq, slot)));
+        self.seq += 1;
+    }
+
+    fn send_raft(&mut self, from: u32, msgs: Vec<(u32, RaftMsg)>) {
+        for (to, msg) in msgs {
+            self.raft_msgs += 1;
+            self.push(self.now + self.rpc_delay, Wire::Raft { from, to, msg });
+        }
+    }
+
+    fn send_gossip(&mut self, from: AgentId, msgs: Vec<(AgentId, GossipMsg)>) {
+        for (to, msg) in msgs {
+            self.gossip_msgs += 1;
+            self.push(self.now + self.rpc_delay, Wire::Gossip { from, to, msg });
+        }
+    }
+
+    fn apply_committed(&mut self) {
+        for s in &mut self.servers {
+            for entry in s.raft.take_applied() {
+                s.kv.apply(&entry.command);
+            }
+        }
+    }
+
+    /// Drive all protocol activity up to `to`.
+    pub fn advance(&mut self, to: SimTime) {
+        while self.now < to {
+            // next interesting instant: message delivery or tick
+            let next_msg = self.queue.peek().map(|Reverse((t, ..))| *t);
+            let next = match next_msg {
+                Some(t) if t <= self.next_tick => t,
+                _ => self.next_tick,
+            };
+            if next > to {
+                break;
+            }
+            self.now = next;
+
+            // deliver everything due now
+            while let Some(&Reverse((t, _, slot))) = self.queue.peek() {
+                if t > self.now {
+                    break;
+                }
+                self.queue.pop();
+                let wire = self.payloads[slot].take().expect("payload");
+                self.free_slots.push_back(slot);
+                match wire {
+                    Wire::Raft { from, to, msg } => {
+                        if (to as usize) < self.servers.len() {
+                            let now = self.now;
+                            let out = self.servers[to as usize].raft.on_message(now, from, msg);
+                            self.send_raft(to, out);
+                        }
+                    }
+                    Wire::Gossip { from, to, msg } => {
+                        if let Some(agent) = self.agents.get_mut(&to) {
+                            let now = self.now;
+                            let out = agent.on_message(now, from, msg);
+                            self.send_gossip(to, out);
+                        }
+                    }
+                }
+            }
+
+            // ticks
+            if self.now >= self.next_tick {
+                self.next_tick = self.now + self.tick_interval;
+                for i in 0..self.servers.len() {
+                    let now = self.now;
+                    let out = self.servers[i].raft.tick(now);
+                    self.send_raft(i as u32, out);
+                }
+                let ids: Vec<AgentId> = self.agents.keys().copied().collect();
+                for id in ids {
+                    let now = self.now;
+                    let out = self.agents.get_mut(&id).unwrap().tick(now);
+                    self.send_gossip(id, out);
+                }
+                // retry backlog once a leader exists
+                if let Some(l) = self.leader_index() {
+                    while let Some(cmd) = self.backlog.pop_front() {
+                        let now = self.now;
+                        if let Some((_, msgs)) = self.servers[l].raft.propose(cmd.clone(), now) {
+                            self.send_raft(l as u32, msgs);
+                        } else {
+                            self.backlog.push_front(cmd);
+                            break;
+                        }
+                    }
+                }
+            }
+            self.apply_committed();
+        }
+        self.now = self.now.max(to);
+        self.apply_committed();
+    }
+
+    /// Advance until a leader exists; returns the election time.
+    pub fn advance_until_leader(&mut self, deadline: SimTime) -> Result<SimTime, ConsulError> {
+        while self.now < deadline {
+            if self.leader_index().is_some() {
+                return Ok(self.now);
+            }
+            let next = self.now + self.tick_interval;
+            self.advance(next);
+        }
+        self.leader_index().map(|_| self.now).ok_or(ConsulError::NoLeader)
+    }
+
+    pub fn leader_index(&self) -> Option<usize> {
+        self.servers.iter().position(|s| s.raft.is_leader())
+    }
+
+    /// The consistent view (leader's kv; falls back to server 0).
+    pub fn kv(&self) -> &KvStore {
+        let idx = self.leader_index().unwrap_or(0);
+        &self.servers[idx].kv
+    }
+
+    /// Submit a write (queued until a leader exists, like retry loops in
+    /// real consul clients).
+    pub fn submit(&mut self, cmd: Command) {
+        match self.leader_index() {
+            Some(l) => {
+                let now = self.now;
+                if let Some((_, msgs)) = self.servers[l].raft.propose(cmd.clone(), now) {
+                    self.send_raft(l as u32, msgs);
+                } else {
+                    self.backlog.push_back(cmd);
+                }
+            }
+            None => self.backlog.push_back(cmd),
+        }
+    }
+
+    /// Register a service instance + its TTL health check.
+    pub fn register_service(&mut self, service: &str, entry: &ServiceEntry, ttl: SimTime) {
+        self.submit(Catalog::register_cmd(service, entry));
+        self.health.register(entry.node.clone(), ttl, self.now);
+    }
+
+    pub fn deregister_service(&mut self, service: &str, node: &str) {
+        self.submit(Catalog::deregister_cmd(service, node));
+        self.health.deregister(node);
+    }
+
+    /// Healthy instances of a service (catalog ∩ passing checks).
+    pub fn healthy_instances(&self, service: &str) -> Vec<ServiceEntry> {
+        let passing: Vec<&str> = self.health.passing(self.now);
+        Catalog::list(self.kv(), service)
+            .into_iter()
+            .filter(|e| passing.contains(&e.node.as_str()))
+            .collect()
+    }
+
+    // ----- gossip agent pool -----
+
+    /// Create an agent and join via a seed agent (or standalone if none).
+    pub fn agent_join(&mut self, id: AgentId, seed_agent: Option<AgentId>, seed: u64) {
+        let mut node = GossipNode::new(id, seed);
+        if let Some(s) = seed_agent {
+            let now = self.now;
+            let msgs = node.join(s, now);
+            self.agents.insert(id, node);
+            self.send_gossip(id, msgs);
+        } else {
+            self.agents.insert(id, node);
+        }
+    }
+
+    pub fn agent_remove(&mut self, id: AgentId) {
+        self.agents.remove(&id);
+    }
+
+    pub fn agent(&self, id: AgentId) -> Option<&GossipNode> {
+        self.agents.get(&id)
+    }
+
+    pub fn agent_count(&self) -> usize {
+        self.agents.len()
+    }
+
+    /// Heartbeat an agent's health check.
+    pub fn refresh_health(&mut self, node: &str) {
+        let now = self.now;
+        self.health.refresh(node, now);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vnet::addr::Ipv4;
+
+    fn entry(node: &str, oct: u8) -> ServiceEntry {
+        ServiceEntry {
+            node: node.into(),
+            address: Ipv4::new(10, 10, 0, oct),
+            port: 22,
+            slots: 12,
+            tags: vec![],
+        }
+    }
+
+    #[test]
+    fn elects_leader_and_commits_registration() {
+        let mut c = ConsulCluster::new(3, 42);
+        let t = c.advance_until_leader(SimTime::from_secs(30)).unwrap();
+        assert!(t < SimTime::from_secs(5), "election took {t}");
+        c.register_service("hpc", &entry("node02", 2), SimTime::from_secs(30));
+        c.advance(c.now() + SimTime::from_secs(1));
+        let list = Catalog::list(c.kv(), "hpc");
+        assert_eq!(list.len(), 1);
+        assert_eq!(list[0].node, "node02");
+    }
+
+    #[test]
+    fn writes_before_leader_are_backlogged() {
+        let mut c = ConsulCluster::new(3, 7);
+        c.register_service("hpc", &entry("node02", 2), SimTime::from_secs(30));
+        c.register_service("hpc", &entry("node03", 3), SimTime::from_secs(30));
+        c.advance(SimTime::from_secs(10));
+        assert_eq!(Catalog::list(c.kv(), "hpc").len(), 2);
+    }
+
+    #[test]
+    fn replicas_converge() {
+        let mut c = ConsulCluster::new(3, 9);
+        c.advance_until_leader(SimTime::from_secs(30)).unwrap();
+        c.register_service("hpc", &entry("a", 2), SimTime::from_secs(30));
+        c.advance(c.now() + SimTime::from_secs(2));
+        for s in &c.servers {
+            assert_eq!(Catalog::list(&s.kv, "hpc").len(), 1, "replica divergence");
+        }
+    }
+
+    #[test]
+    fn health_gates_instances() {
+        let mut c = ConsulCluster::new(1, 3);
+        c.advance_until_leader(SimTime::from_secs(30)).unwrap();
+        c.register_service("hpc", &entry("node02", 2), SimTime::from_secs(5));
+        c.advance(c.now() + SimTime::from_secs(1));
+        assert_eq!(c.healthy_instances("hpc").len(), 1);
+        // stop heartbeating: after TTL the instance drops out
+        c.advance(c.now() + SimTime::from_secs(10));
+        assert_eq!(c.healthy_instances("hpc").len(), 0);
+        // but a refresh brings it back
+        c.refresh_health("node02");
+        assert_eq!(c.healthy_instances("hpc").len(), 1);
+    }
+
+    #[test]
+    fn agents_gossip_membership() {
+        let mut c = ConsulCluster::new(1, 11);
+        c.agent_join(AgentId::new(0), None, 11);
+        c.agent_join(AgentId::new(1), Some(AgentId::new(0)), 11);
+        c.agent_join(AgentId::new(2), Some(AgentId::new(0)), 11);
+        c.advance(SimTime::from_secs(30));
+        let a0 = c.agent(AgentId::new(0)).unwrap();
+        assert_eq!(a0.alive_members().len(), 2);
+        let a2 = c.agent(AgentId::new(2)).unwrap();
+        assert!(a2.alive_members().contains(&AgentId::new(1)));
+    }
+
+    #[test]
+    fn deregister_removes_from_catalog() {
+        let mut c = ConsulCluster::new(3, 13);
+        c.advance_until_leader(SimTime::from_secs(30)).unwrap();
+        c.register_service("hpc", &entry("a", 2), SimTime::from_secs(30));
+        c.advance(c.now() + SimTime::from_secs(1));
+        c.deregister_service("hpc", "a");
+        c.advance(c.now() + SimTime::from_secs(1));
+        assert!(Catalog::list(c.kv(), "hpc").is_empty());
+    }
+}

@@ -1,0 +1,335 @@
+//! consul-template: render templates from catalog/kv state, re-rendering
+//! when the watched data changes (§IV, Fig. 5 — the hostfile pipeline).
+//!
+//! Grammar subset (all the paper's use case needs, plus kv lookups):
+//!
+//! ```text
+//! {{range service "hpc"}}{{.Node}} {{.Address}} slots={{.Slots}}
+//! {{end}}
+//! {{key "config/mpi/btl"}}
+//! ```
+
+use super::catalog::Catalog;
+use super::kv::KvStore;
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq)]
+pub enum TemplateError {
+    #[error("unterminated directive at byte {0}")]
+    Unterminated(usize),
+    #[error("unknown directive: {0}")]
+    Unknown(String),
+    #[error("{{end}} without open range")]
+    StrayEnd,
+    #[error("range not closed")]
+    UnclosedRange,
+    #[error("unknown field {0} (expected .Node/.Address/.Port/.Slots)")]
+    UnknownField(String),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Node {
+    Text(String),
+    Key(String),
+    Range { service: String, body: Vec<RangeNode> },
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum RangeNode {
+    Text(String),
+    Field(Field),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Field {
+    Node,
+    Address,
+    Port,
+    Slots,
+}
+
+/// A compiled template.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Template {
+    nodes: Vec<Node>,
+    source: String,
+}
+
+fn split_directives(text: &str) -> Result<Vec<Result<String, String>>, TemplateError> {
+    // Ok(text-chunk) | Err(directive-content)
+    let mut out = Vec::new();
+    let mut rest = text;
+    let mut offset = 0;
+    while let Some(start) = rest.find("{{") {
+        if start > 0 {
+            out.push(Ok(rest[..start].to_string()));
+        }
+        let after = &rest[start + 2..];
+        let end = after
+            .find("}}")
+            .ok_or(TemplateError::Unterminated(offset + start))?;
+        out.push(Err(after[..end].trim().to_string()));
+        offset += start + 2 + end + 2;
+        rest = &after[end + 2..];
+    }
+    if !rest.is_empty() {
+        out.push(Ok(rest.to_string()));
+    }
+    Ok(out)
+}
+
+fn parse_quoted(directive: &str, keyword: &str) -> Option<String> {
+    let rest = directive.strip_prefix(keyword)?.trim();
+    let rest = rest.strip_prefix('"')?;
+    let end = rest.find('"')?;
+    Some(rest[..end].to_string())
+}
+
+impl Template {
+    /// Compile template text.
+    pub fn parse(text: &str) -> Result<Self, TemplateError> {
+        let parts = split_directives(text)?;
+        let mut nodes = Vec::new();
+        let mut open_range: Option<(String, Vec<RangeNode>)> = None;
+
+        for part in parts {
+            match part {
+                Ok(text) => match &mut open_range {
+                    Some((_, body)) => body.push(RangeNode::Text(text)),
+                    None => nodes.push(Node::Text(text)),
+                },
+                Err(directive) => {
+                    if let Some(service) = parse_quoted(&directive, "range service") {
+                        if open_range.is_some() {
+                            return Err(TemplateError::Unknown("nested range".into()));
+                        }
+                        open_range = Some((service, Vec::new()));
+                    } else if directive == "end" {
+                        let (service, body) =
+                            open_range.take().ok_or(TemplateError::StrayEnd)?;
+                        nodes.push(Node::Range { service, body });
+                    } else if let Some(key) = parse_quoted(&directive, "key") {
+                        match &mut open_range {
+                            Some(_) => {
+                                return Err(TemplateError::Unknown(
+                                    "key inside range".into(),
+                                ))
+                            }
+                            None => nodes.push(Node::Key(key)),
+                        }
+                    } else if let Some(field) = directive.strip_prefix('.') {
+                        let f = match field {
+                            "Node" => Field::Node,
+                            "Address" => Field::Address,
+                            "Port" => Field::Port,
+                            "Slots" => Field::Slots,
+                            other => return Err(TemplateError::UnknownField(other.into())),
+                        };
+                        match &mut open_range {
+                            Some((_, body)) => body.push(RangeNode::Field(f)),
+                            None => {
+                                return Err(TemplateError::Unknown(format!(
+                                    "field .{field} outside range"
+                                )))
+                            }
+                        }
+                    } else {
+                        return Err(TemplateError::Unknown(directive));
+                    }
+                }
+            }
+        }
+        if open_range.is_some() {
+            return Err(TemplateError::UnclosedRange);
+        }
+        Ok(Self { nodes, source: text.to_string() })
+    }
+
+    /// The services this template watches (for change detection).
+    pub fn watched_services(&self) -> Vec<&str> {
+        self.nodes
+            .iter()
+            .filter_map(|n| match n {
+                Node::Range { service, .. } => Some(service.as_str()),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Render against the KV/catalog state.
+    pub fn render(&self, kv: &KvStore) -> String {
+        let mut out = String::new();
+        for node in &self.nodes {
+            match node {
+                Node::Text(t) => out.push_str(t),
+                Node::Key(k) => out.push_str(kv.get(k).unwrap_or("")),
+                Node::Range { service, body } => {
+                    for entry in Catalog::list(kv, service) {
+                        for rn in body {
+                            match rn {
+                                RangeNode::Text(t) => out.push_str(t),
+                                RangeNode::Field(Field::Node) => out.push_str(&entry.node),
+                                RangeNode::Field(Field::Address) => {
+                                    out.push_str(&entry.address.to_string())
+                                }
+                                RangeNode::Field(Field::Port) => {
+                                    out.push_str(&entry.port.to_string())
+                                }
+                                RangeNode::Field(Field::Slots) => {
+                                    out.push_str(&entry.slots.to_string())
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// The canonical MPI hostfile template from the paper's scheme.
+    pub fn mpi_hostfile() -> Self {
+        Self::parse("{{range service \"hpc\"}}{{.Address}} slots={{.Slots}}\n{{end}}")
+            .expect("builtin template")
+    }
+}
+
+/// A watching renderer: re-renders when the watch index moves.
+#[derive(Debug, Clone)]
+pub struct TemplateWatcher {
+    pub template: Template,
+    last_index: u64,
+    pub renders: u64,
+    pub last_output: String,
+}
+
+impl TemplateWatcher {
+    pub fn new(template: Template) -> Self {
+        Self { template, last_index: 0, renders: 0, last_output: String::new() }
+    }
+
+    /// Poll: returns Some(output) when the watched data changed.
+    pub fn poll(&mut self, kv: &KvStore) -> Option<&str> {
+        let idx = self
+            .template
+            .watched_services()
+            .iter()
+            .map(|s| Catalog::watch_index(kv, s))
+            .max()
+            .unwrap_or_else(|| kv.modify_index());
+        if idx != self.last_index {
+            self.last_index = idx;
+            self.renders += 1;
+            self.last_output = self.template.render(kv);
+            Some(&self.last_output)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::consul::catalog::ServiceEntry;
+    use crate::consul::raft::Command;
+    use crate::vnet::addr::Ipv4;
+
+    fn kv_with_nodes(nodes: &[(&str, u8, u32)]) -> KvStore {
+        let mut kv = KvStore::new();
+        for (node, oct, slots) in nodes {
+            let e = ServiceEntry {
+                node: node.to_string(),
+                address: Ipv4::new(10, 10, 0, *oct),
+                port: 22,
+                slots: *slots,
+                tags: vec![],
+            };
+            kv.apply(&Catalog::register_cmd("hpc", &e));
+        }
+        kv
+    }
+
+    #[test]
+    fn renders_the_papers_hostfile() {
+        let kv = kv_with_nodes(&[("node02", 2, 12), ("node03", 3, 12)]);
+        let t = Template::mpi_hostfile();
+        assert_eq!(
+            t.render(&kv),
+            "10.10.0.2 slots=12\n10.10.0.3 slots=12\n"
+        );
+    }
+
+    #[test]
+    fn all_fields_render() {
+        let kv = kv_with_nodes(&[("n1", 5, 4)]);
+        let t = Template::parse(
+            "{{range service \"hpc\"}}{{.Node}}|{{.Address}}|{{.Port}}|{{.Slots}}{{end}}",
+        )
+        .unwrap();
+        assert_eq!(t.render(&kv), "n1|10.10.0.5|22|4");
+    }
+
+    #[test]
+    fn key_directive_reads_kv() {
+        let mut kv = KvStore::new();
+        kv.apply(&Command::Set { key: "config/btl".into(), value: "tcp,self".into() });
+        let t = Template::parse("btl={{key \"config/btl\"}} missing={{key \"nope\"}}.").unwrap();
+        assert_eq!(t.render(&kv), "btl=tcp,self missing=.");
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert_eq!(
+            Template::parse("{{range service \"x\"}}no end").unwrap_err(),
+            TemplateError::UnclosedRange
+        );
+        assert_eq!(Template::parse("{{end}}").unwrap_err(), TemplateError::StrayEnd);
+        assert!(matches!(
+            Template::parse("{{bogus}}").unwrap_err(),
+            TemplateError::Unknown(_)
+        ));
+        assert!(matches!(
+            Template::parse("{{.Node}}").unwrap_err(),
+            TemplateError::Unknown(_)
+        ));
+        assert!(matches!(
+            Template::parse("{{range service \"x\"}}{{.Nope}}{{end}}").unwrap_err(),
+            TemplateError::UnknownField(_)
+        ));
+        assert!(matches!(
+            Template::parse("{{oops").unwrap_err(),
+            TemplateError::Unterminated(_)
+        ));
+    }
+
+    #[test]
+    fn watcher_rerenders_only_on_change() {
+        let mut kv = kv_with_nodes(&[("node02", 2, 12)]);
+        let mut w = TemplateWatcher::new(Template::mpi_hostfile());
+        assert!(w.poll(&kv).is_some()); // first render
+        assert!(w.poll(&kv).is_none()); // no change
+        // unrelated service change must not re-render
+        let e = ServiceEntry {
+            node: "web1".into(),
+            address: Ipv4::new(1, 2, 3, 4),
+            port: 80,
+            slots: 1,
+            tags: vec![],
+        };
+        kv.apply(&Catalog::register_cmd("web", &e));
+        assert!(w.poll(&kv).is_none());
+        // hpc change re-renders
+        let e2 = ServiceEntry {
+            node: "node03".into(),
+            address: Ipv4::new(10, 10, 0, 3),
+            port: 22,
+            slots: 12,
+            tags: vec![],
+        };
+        kv.apply(&Catalog::register_cmd("hpc", &e2));
+        let out = w.poll(&kv).unwrap();
+        assert!(out.contains("10.10.0.3"));
+        assert_eq!(w.renders, 2);
+    }
+}

@@ -1,0 +1,104 @@
+//! cgroup model: CPU shares/quota and memory limits per container.
+//!
+//! The LXC-era primitives Docker wraps (§II-B). The simulator uses these
+//! to (a) cap how many MPI slots a container advertises and (b) enforce
+//! memory limits at allocation time.
+
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq)]
+pub enum CgroupError {
+    #[error("cpu quota must be > 0")]
+    BadQuota,
+    #[error("memory limit must be > 0")]
+    BadMemory,
+    #[error("memory limit exceeded: used {used} + req {req} > limit {limit}")]
+    OverMemory { used: u64, req: u64, limit: u64 },
+}
+
+/// Per-container resource controller.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Cgroup {
+    /// Relative CPU weight (docker --cpu-shares, default 1024).
+    pub cpu_shares: u32,
+    /// Hard cap in whole cores (docker --cpus).
+    pub cpu_quota_cores: u32,
+    /// Memory limit in bytes (docker -m).
+    pub memory_limit: u64,
+    memory_used: u64,
+}
+
+impl Cgroup {
+    pub fn new(cpu_quota_cores: u32, memory_limit: u64) -> Result<Self, CgroupError> {
+        if cpu_quota_cores == 0 {
+            return Err(CgroupError::BadQuota);
+        }
+        if memory_limit == 0 {
+            return Err(CgroupError::BadMemory);
+        }
+        Ok(Self { cpu_shares: 1024, cpu_quota_cores, memory_limit, memory_used: 0 })
+    }
+
+    /// Charge an allocation against the memory limit (OOM-kill semantics:
+    /// the caller decides what to do with the error).
+    pub fn charge_memory(&mut self, bytes: u64) -> Result<(), CgroupError> {
+        if self.memory_used + bytes > self.memory_limit {
+            return Err(CgroupError::OverMemory {
+                used: self.memory_used,
+                req: bytes,
+                limit: self.memory_limit,
+            });
+        }
+        self.memory_used += bytes;
+        Ok(())
+    }
+
+    pub fn uncharge_memory(&mut self, bytes: u64) {
+        self.memory_used = self.memory_used.saturating_sub(bytes);
+    }
+
+    pub fn memory_used(&self) -> u64 {
+        self.memory_used
+    }
+
+    /// Fair CPU share given sibling weights (the kernel's CFS rule).
+    pub fn cpu_fraction(&self, sibling_shares_total: u32) -> f64 {
+        if sibling_shares_total == 0 {
+            1.0
+        } else {
+            self.cpu_shares as f64 / sibling_shares_total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rejects_zero_limits() {
+        assert_eq!(Cgroup::new(0, 1).unwrap_err(), CgroupError::BadQuota);
+        assert_eq!(Cgroup::new(1, 0).unwrap_err(), CgroupError::BadMemory);
+    }
+
+    #[test]
+    fn memory_ledger_enforced() {
+        let mut cg = Cgroup::new(4, 1000).unwrap();
+        cg.charge_memory(600).unwrap();
+        cg.charge_memory(400).unwrap();
+        assert!(matches!(
+            cg.charge_memory(1),
+            Err(CgroupError::OverMemory { .. })
+        ));
+        cg.uncharge_memory(500);
+        cg.charge_memory(500).unwrap();
+        assert_eq!(cg.memory_used(), 1000);
+    }
+
+    #[test]
+    fn cpu_fraction_is_weighted() {
+        let cg = Cgroup::new(4, 1).unwrap();
+        assert!((cg.cpu_fraction(2048) - 0.5).abs() < 1e-12);
+        assert_eq!(cg.cpu_fraction(0), 1.0);
+    }
+}

@@ -1,0 +1,142 @@
+//! Container: lifecycle state machine + runtime identity.
+//!
+//! States follow Docker's: Created → Running → (Paused ⇄ Running) →
+//! Exited → (removed). Each container carries its image reference, the
+//! cgroup, its network attachment and the env/cmd resolved at create
+//! time.
+
+use super::cgroup::Cgroup;
+use crate::util::ids::{ContainerId, MachineId};
+use crate::vnet::addr::Ipv4;
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq)]
+pub enum ContainerError {
+    #[error("container {0}: invalid transition {1:?} -> {2:?}")]
+    BadTransition(ContainerId, ContainerState, ContainerState),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ContainerState {
+    Created,
+    Running,
+    Paused,
+    Exited,
+}
+
+/// A container instance.
+#[derive(Debug, Clone)]
+pub struct Container {
+    pub id: ContainerId,
+    pub name: String,
+    pub image: String,
+    pub machine: MachineId,
+    pub state: ContainerState,
+    pub cgroup: Cgroup,
+    pub ip: Option<Ipv4>,
+    pub env: Vec<(String, String)>,
+    pub cmd: Vec<String>,
+    pub exit_code: Option<i32>,
+}
+
+impl Container {
+    pub fn new(
+        id: ContainerId,
+        name: impl Into<String>,
+        image: impl Into<String>,
+        machine: MachineId,
+        cgroup: Cgroup,
+    ) -> Self {
+        Self {
+            id,
+            name: name.into(),
+            image: image.into(),
+            machine,
+            state: ContainerState::Created,
+            cgroup,
+            ip: None,
+            env: Vec::new(),
+            cmd: Vec::new(),
+            exit_code: None,
+        }
+    }
+
+    fn transition(
+        &mut self,
+        from: &[ContainerState],
+        to: ContainerState,
+    ) -> Result<(), ContainerError> {
+        if from.contains(&self.state) {
+            self.state = to;
+            Ok(())
+        } else {
+            Err(ContainerError::BadTransition(self.id, self.state, to))
+        }
+    }
+
+    pub fn start(&mut self) -> Result<(), ContainerError> {
+        self.transition(&[ContainerState::Created, ContainerState::Exited], ContainerState::Running)
+    }
+
+    pub fn pause(&mut self) -> Result<(), ContainerError> {
+        self.transition(&[ContainerState::Running], ContainerState::Paused)
+    }
+
+    pub fn unpause(&mut self) -> Result<(), ContainerError> {
+        self.transition(&[ContainerState::Paused], ContainerState::Running)
+    }
+
+    pub fn stop(&mut self, exit_code: i32) -> Result<(), ContainerError> {
+        self.transition(
+            &[ContainerState::Running, ContainerState::Paused],
+            ContainerState::Exited,
+        )?;
+        self.exit_code = Some(exit_code);
+        Ok(())
+    }
+
+    pub fn is_running(&self) -> bool {
+        self.state == ContainerState::Running
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn c() -> Container {
+        Container::new(
+            ContainerId::new(0),
+            "node02",
+            "nchc/mpi-computenode:latest",
+            MachineId::new(1),
+            Cgroup::new(12, 60 << 30).unwrap(),
+        )
+    }
+
+    #[test]
+    fn normal_lifecycle() {
+        let mut c = c();
+        assert_eq!(c.state, ContainerState::Created);
+        c.start().unwrap();
+        assert!(c.is_running());
+        c.pause().unwrap();
+        c.unpause().unwrap();
+        c.stop(0).unwrap();
+        assert_eq!(c.state, ContainerState::Exited);
+        assert_eq!(c.exit_code, Some(0));
+        // restart from Exited is allowed (docker start)
+        c.start().unwrap();
+        assert!(c.is_running());
+    }
+
+    #[test]
+    fn illegal_transitions_rejected() {
+        let mut c = c();
+        assert!(c.pause().is_err()); // can't pause Created
+        assert!(c.unpause().is_err());
+        assert!(c.stop(0).is_err()); // can't stop Created
+        c.start().unwrap();
+        assert!(c.start().is_err()); // double start
+    }
+}

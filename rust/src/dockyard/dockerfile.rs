@@ -1,0 +1,334 @@
+//! Dockerfile parser for the instruction subset the paper's Fig. 2 uses
+//! (and the rest of the common set): FROM, MAINTAINER, LABEL, ENV, RUN,
+//! ADD, COPY, WORKDIR, EXPOSE, CMD, ENTRYPOINT, USER, VOLUME.
+//!
+//! Comments (`# ...`), blank lines and `\` line continuations are
+//! handled. CMD/ENTRYPOINT accept both shell form and JSON-array exec
+//! form (`CMD ["/usr/sbin/sshd", "-D"]`).
+
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq)]
+pub enum DockerfileError {
+    #[error("line {0}: empty instruction")]
+    Empty(usize),
+    #[error("line {0}: unknown instruction {1}")]
+    Unknown(usize, String),
+    #[error("line {0}: {1} requires arguments")]
+    MissingArgs(usize, String),
+    #[error("line {0}: first instruction must be FROM")]
+    FromNotFirst(usize),
+    #[error("line {0}: malformed exec-form array")]
+    BadExecForm(usize),
+    #[error("line {0}: ENV/LABEL requires key=value")]
+    BadKeyValue(usize),
+    #[error("line {0}: EXPOSE requires port numbers")]
+    BadPort(usize),
+}
+
+/// One parsed instruction.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Instruction {
+    From { image: String, tag: String },
+    Maintainer(String),
+    Label { key: String, value: String },
+    Env { key: String, value: String },
+    Run(String),
+    Add { src: String, dst: String },
+    Copy { src: String, dst: String },
+    Workdir(String),
+    Expose(u16),
+    User(String),
+    Volume(String),
+    Cmd(Vec<String>),
+    Entrypoint(Vec<String>),
+}
+
+/// A parsed Dockerfile.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Dockerfile {
+    pub instructions: Vec<Instruction>,
+}
+
+/// Parse an exec-form array `["a", "b"]` or fall back to shell form.
+fn parse_cmd_args(line_no: usize, rest: &str) -> Result<Vec<String>, DockerfileError> {
+    let trimmed = rest.trim();
+    if trimmed.starts_with('[') {
+        if !trimmed.ends_with(']') {
+            return Err(DockerfileError::BadExecForm(line_no));
+        }
+        let inner = &trimmed[1..trimmed.len() - 1];
+        let mut out = Vec::new();
+        for part in split_json_strings(inner) {
+            match part {
+                Some(s) => out.push(s),
+                None => return Err(DockerfileError::BadExecForm(line_no)),
+            }
+        }
+        if out.is_empty() {
+            return Err(DockerfileError::BadExecForm(line_no));
+        }
+        Ok(out)
+    } else {
+        // shell form runs through sh -c
+        Ok(vec!["/bin/sh".into(), "-c".into(), trimmed.to_string()])
+    }
+}
+
+/// Split `"a", "b"` into string items; yields None on malformed items.
+fn split_json_strings(inner: &str) -> Vec<Option<String>> {
+    let mut out = Vec::new();
+    for item in inner.split(',') {
+        let item = item.trim();
+        if item.len() >= 2 && item.starts_with('"') && item.ends_with('"') {
+            out.push(Some(item[1..item.len() - 1].to_string()));
+        } else if item.is_empty() {
+            continue;
+        } else {
+            out.push(None);
+        }
+    }
+    out
+}
+
+impl Dockerfile {
+    /// Parse a full Dockerfile text.
+    pub fn parse(text: &str) -> Result<Self, DockerfileError> {
+        // Fold continuations first, remembering original line numbers.
+        let mut logical: Vec<(usize, String)> = Vec::new();
+        let mut pending: Option<(usize, String)> = None;
+        for (i, raw) in text.lines().enumerate() {
+            let line_no = i + 1;
+            let line = raw.trim_end();
+            let (start, mut acc) = match pending.take() {
+                Some((s, a)) => (s, a),
+                None => {
+                    let t = line.trim_start();
+                    if t.is_empty() || t.starts_with('#') {
+                        continue;
+                    }
+                    (line_no, String::new())
+                }
+            };
+            let body = line.trim_start();
+            if let Some(stripped) = body.strip_suffix('\\') {
+                acc.push_str(stripped.trim_end());
+                acc.push(' ');
+                pending = Some((start, acc));
+            } else {
+                acc.push_str(body);
+                logical.push((start, acc));
+            }
+        }
+        if let Some((start, acc)) = pending {
+            logical.push((start, acc)); // trailing continuation: accept
+        }
+
+        let mut instructions = Vec::new();
+        for (line_no, line) in logical {
+            let mut parts = line.splitn(2, char::is_whitespace);
+            let keyword = parts.next().ok_or(DockerfileError::Empty(line_no))?;
+            let rest = parts.next().unwrap_or("").trim();
+            let upper = keyword.to_ascii_uppercase();
+            if instructions.is_empty() && upper != "FROM" {
+                return Err(DockerfileError::FromNotFirst(line_no));
+            }
+            if rest.is_empty() {
+                return Err(DockerfileError::MissingArgs(line_no, upper));
+            }
+            let inst = match upper.as_str() {
+                "FROM" => {
+                    let (image, tag) = match rest.split_once(':') {
+                        Some((i, t)) => (i.to_string(), t.to_string()),
+                        None => (rest.to_string(), "latest".to_string()),
+                    };
+                    Instruction::From { image, tag }
+                }
+                "MAINTAINER" => Instruction::Maintainer(rest.to_string()),
+                "LABEL" | "ENV" => {
+                    let (k, v) = match rest.split_once('=') {
+                        Some((k, v)) => (k.trim(), v.trim()),
+                        None => rest
+                            .split_once(char::is_whitespace)
+                            .map(|(k, v)| (k.trim(), v.trim()))
+                            .ok_or(DockerfileError::BadKeyValue(line_no))?,
+                    };
+                    let v = v.trim_matches('"').to_string();
+                    if upper == "ENV" {
+                        Instruction::Env { key: k.to_string(), value: v }
+                    } else {
+                        Instruction::Label { key: k.to_string(), value: v }
+                    }
+                }
+                "RUN" => Instruction::Run(rest.to_string()),
+                "ADD" | "COPY" => {
+                    let mut it = rest.split_whitespace();
+                    let src = it
+                        .next()
+                        .ok_or_else(|| DockerfileError::MissingArgs(line_no, upper.clone()))?
+                        .to_string();
+                    let dst = it
+                        .next()
+                        .ok_or_else(|| DockerfileError::MissingArgs(line_no, upper.clone()))?
+                        .to_string();
+                    if upper == "ADD" {
+                        Instruction::Add { src, dst }
+                    } else {
+                        Instruction::Copy { src, dst }
+                    }
+                }
+                "WORKDIR" => Instruction::Workdir(rest.to_string()),
+                "USER" => Instruction::User(rest.to_string()),
+                "VOLUME" => Instruction::Volume(rest.trim_matches(['[', ']', '"']).to_string()),
+                "EXPOSE" => {
+                    let port: u16 = rest
+                        .split('/')
+                        .next()
+                        .unwrap()
+                        .parse()
+                        .map_err(|_| DockerfileError::BadPort(line_no))?;
+                    Instruction::Expose(port)
+                }
+                "CMD" => Instruction::Cmd(parse_cmd_args(line_no, rest)?),
+                "ENTRYPOINT" => Instruction::Entrypoint(parse_cmd_args(line_no, rest)?),
+                _ => return Err(DockerfileError::Unknown(line_no, keyword.to_string())),
+            };
+            instructions.push(inst);
+        }
+        if instructions.is_empty() {
+            return Err(DockerfileError::Empty(0));
+        }
+        Ok(Self { instructions })
+    }
+
+    /// The base image reference.
+    pub fn base(&self) -> Option<(&str, &str)> {
+        match self.instructions.first() {
+            Some(Instruction::From { image, tag }) => Some((image, tag)),
+            _ => None,
+        }
+    }
+
+    /// The paper's Fig. 2 Dockerfile, verbatim in spirit.
+    pub fn paper_compute_node() -> &'static str {
+        "\
+FROM centos:6
+MAINTAINER Hsi-En Yu <yun@narlabs.org.tw>
+
+#install software
+RUN yum install -y openssh-server openmpi
+#install consul-template
+ADD consul-template /usr/local/bin/consul-template
+ADD consul /usr/local/bin/consul
+
+CMD [\"/usr/sbin/sshd\", \"-D\"]
+"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_papers_dockerfile() {
+        let df = Dockerfile::parse(Dockerfile::paper_compute_node()).unwrap();
+        assert_eq!(df.base(), Some(("centos", "6")));
+        assert_eq!(df.instructions.len(), 6);
+        assert_eq!(
+            df.instructions[1],
+            Instruction::Maintainer("Hsi-En Yu <yun@narlabs.org.tw>".into())
+        );
+        assert!(matches!(df.instructions[2], Instruction::Run(_)));
+        assert_eq!(
+            df.instructions[3],
+            Instruction::Add {
+                src: "consul-template".into(),
+                dst: "/usr/local/bin/consul-template".into()
+            }
+        );
+        assert_eq!(
+            df.instructions[5],
+            Instruction::Cmd(vec!["/usr/sbin/sshd".into(), "-D".into()])
+        );
+    }
+
+    #[test]
+    fn from_must_be_first() {
+        let err = Dockerfile::parse("RUN echo hi\nFROM x").unwrap_err();
+        assert_eq!(err, DockerfileError::FromNotFirst(1));
+    }
+
+    #[test]
+    fn default_tag_is_latest() {
+        let df = Dockerfile::parse("FROM centos").unwrap();
+        assert_eq!(df.base(), Some(("centos", "latest")));
+    }
+
+    #[test]
+    fn line_continuations_fold() {
+        let df = Dockerfile::parse("FROM a\nRUN yum install -y \\\n  openssh-server \\\n  openmpi").unwrap();
+        match &df.instructions[1] {
+            Instruction::Run(cmd) => {
+                assert!(cmd.contains("openssh-server"));
+                assert!(cmd.contains("openmpi"));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn shell_form_cmd_wraps_in_sh() {
+        let df = Dockerfile::parse("FROM a\nCMD sshd -D").unwrap();
+        assert_eq!(
+            df.instructions[1],
+            Instruction::Cmd(vec!["/bin/sh".into(), "-c".into(), "sshd -D".into()])
+        );
+    }
+
+    #[test]
+    fn malformed_exec_form_errors() {
+        assert_eq!(
+            Dockerfile::parse("FROM a\nCMD [\"x\", nope]").unwrap_err(),
+            DockerfileError::BadExecForm(2)
+        );
+        assert_eq!(
+            Dockerfile::parse("FROM a\nCMD [\"x\"").unwrap_err(),
+            DockerfileError::BadExecForm(2)
+        );
+    }
+
+    #[test]
+    fn env_and_label_forms() {
+        let df = Dockerfile::parse("FROM a\nENV PATH=/usr/bin\nLABEL role hpc").unwrap();
+        assert_eq!(
+            df.instructions[1],
+            Instruction::Env { key: "PATH".into(), value: "/usr/bin".into() }
+        );
+        assert_eq!(
+            df.instructions[2],
+            Instruction::Label { key: "role".into(), value: "hpc".into() }
+        );
+    }
+
+    #[test]
+    fn expose_parses_port() {
+        let df = Dockerfile::parse("FROM a\nEXPOSE 22/tcp").unwrap();
+        assert_eq!(df.instructions[1], Instruction::Expose(22));
+        assert!(Dockerfile::parse("FROM a\nEXPOSE ssh").is_err());
+    }
+
+    #[test]
+    fn unknown_instruction_errors() {
+        assert!(matches!(
+            Dockerfile::parse("FROM a\nFOO bar").unwrap_err(),
+            DockerfileError::Unknown(2, _)
+        ));
+    }
+
+    #[test]
+    fn comments_and_blanks_skipped() {
+        let df = Dockerfile::parse("# hi\n\nFROM a\n# mid\nRUN x\n").unwrap();
+        assert_eq!(df.instructions.len(), 2);
+    }
+}

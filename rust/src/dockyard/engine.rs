@@ -1,0 +1,337 @@
+//! The per-machine container engine ("dockerd").
+//!
+//! Owns the local image cache, the machine's software bridge and its
+//! containers. `run()` is the paper's `docker run`: ensure the image is
+//! local (pull), reserve machine resources, attach the bridge, start the
+//! entrypoint — and report the virtual time each phase cost, which the
+//! Fig. 6 bench decomposes.
+
+use super::cgroup::Cgroup;
+use super::container::{Container, ContainerError, ContainerState};
+use super::image::ImageStore;
+use super::registry::{Registry, RegistryError};
+use crate::hw::machine::{Machine, MachineError};
+use crate::sim::SimTime;
+use crate::util::ids::{ContainerId, MachineId};
+use crate::vnet::bridge::{Bridge, BridgeMode};
+use crate::vnet::ipam::IpamError;
+use std::collections::HashMap;
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum EngineError {
+    #[error(transparent)]
+    Registry(#[from] RegistryError),
+    #[error(transparent)]
+    Machine(#[from] MachineError),
+    #[error(transparent)]
+    Container(#[from] ContainerError),
+    #[error(transparent)]
+    Ipam(#[from] IpamError),
+    #[error("no such container {0}")]
+    NoContainer(ContainerId),
+    #[error("cgroup: {0}")]
+    Cgroup(#[from] super::cgroup::CgroupError),
+}
+
+/// Cost breakdown of a `docker run`.
+#[derive(Debug, Clone, Default)]
+pub struct RunReceipt {
+    pub pull_time: SimTime,
+    pub extract_time: SimTime,
+    pub create_time: SimTime,
+    pub start_time: SimTime,
+    pub pulled_bytes: u64,
+}
+
+impl RunReceipt {
+    pub fn total(&self) -> SimTime {
+        self.pull_time + self.extract_time + self.create_time + self.start_time
+    }
+}
+
+/// Requested container resources.
+#[derive(Debug, Clone, Copy)]
+pub struct RunSpec {
+    pub cores: u32,
+    pub memory: u64,
+}
+
+impl Default for RunSpec {
+    fn default() -> Self {
+        Self { cores: 1, memory: 1 << 30 }
+    }
+}
+
+/// dockerd for one machine.
+#[derive(Debug)]
+pub struct Engine {
+    pub machine: MachineId,
+    pub images: ImageStore,
+    pub bridge: Bridge,
+    containers: HashMap<ContainerId, Container>,
+    /// Fixed daemon overheads (fork/exec, netns setup).
+    pub create_overhead: SimTime,
+    pub start_overhead: SimTime,
+}
+
+impl Engine {
+    pub fn new(machine: MachineId, mode: BridgeMode) -> Self {
+        let subnet = mode.default_subnet(machine.raw());
+        Self {
+            machine,
+            images: ImageStore::new(),
+            bridge: Bridge::new(mode.name(), mode, subnet),
+            containers: HashMap::new(),
+            create_overhead: SimTime::from_millis(40),
+            start_overhead: SimTime::from_millis(120),
+        }
+    }
+
+    pub fn mode(&self) -> BridgeMode {
+        self.bridge.mode
+    }
+
+    pub fn container(&self, id: ContainerId) -> Option<&Container> {
+        self.containers.get(&id)
+    }
+
+    pub fn container_mut(&mut self, id: ContainerId) -> Option<&mut Container> {
+        self.containers.get_mut(&id)
+    }
+
+    pub fn containers(&self) -> impl Iterator<Item = &Container> {
+        self.containers.values()
+    }
+
+    pub fn running_count(&self) -> usize {
+        self.containers.values().filter(|c| c.is_running()).count()
+    }
+
+    /// `docker run`: pull-if-needed, create, attach network, start.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run(
+        &mut self,
+        id: ContainerId,
+        name: &str,
+        image_ref: &str,
+        spec: RunSpec,
+        machine: &mut Machine,
+        registry: &mut Registry,
+    ) -> Result<RunReceipt, EngineError> {
+        let mut receipt = RunReceipt::default();
+
+        // 1. pull if the image is not cached locally
+        if !self.images.contains(image_ref) {
+            let pr = registry.pull(image_ref, &mut self.images, &machine.spec.nic)?;
+            receipt.pull_time = pr.transfer_time;
+            receipt.pulled_bytes = pr.bytes_transferred;
+            // extracting layers to disk costs a disk write pass
+            receipt.extract_time = machine.disk_read_time(pr.bytes_transferred);
+        }
+        let image = self.images.get(image_ref).expect("just ensured").clone();
+
+        // 2. reserve machine resources; build the cgroup
+        machine.allocate(spec.cores, spec.memory)?;
+        let cgroup = Cgroup::new(spec.cores, spec.memory)?;
+        let mut container = Container::new(id, name, image_ref, self.machine, cgroup);
+        container.env = image.config.env.clone();
+        container.cmd = image
+            .config
+            .entrypoint
+            .clone()
+            .or_else(|| image.config.cmd.clone())
+            .unwrap_or_default();
+        receipt.create_time = self.create_overhead;
+
+        // 3. network attach
+        let port = self.bridge.attach(id)?;
+        container.ip = Some(port.ip);
+
+        // 4. start the entrypoint
+        container.start()?;
+        receipt.start_time = self.start_overhead;
+
+        self.containers.insert(id, container);
+        Ok(receipt)
+    }
+
+    /// `docker ps` — the listing the paper's Fig. 6 screenshots show,
+    /// one line per container on this machine.
+    pub fn format_ps(&self) -> String {
+        let mut rows: Vec<&Container> = self.containers.values().collect();
+        rows.sort_by_key(|c| c.id);
+        let mut out = format!(
+            "{:<14} {:<32} {:<26} {:<10} {:<16}\n",
+            "CONTAINER ID", "IMAGE", "COMMAND", "STATUS", "NAMES"
+        );
+        for c in rows {
+            let cmd = if c.cmd.is_empty() { "-".to_string() } else { format!("\"{}\"", c.cmd.join(" ")) };
+            let status = match c.state {
+                ContainerState::Running => "Up".to_string(),
+                ContainerState::Created => "Created".to_string(),
+                ContainerState::Paused => "Paused".to_string(),
+                ContainerState::Exited => {
+                    format!("Exited ({})", c.exit_code.unwrap_or(0))
+                }
+            };
+            out.push_str(&format!(
+                "{:<14} {:<32} {:<26} {:<10} {:<16}\n",
+                c.id.to_string(),
+                c.image,
+                cmd,
+                status,
+                c.name
+            ));
+        }
+        out
+    }
+
+    /// `docker images` — local image cache listing.
+    pub fn format_images(&self) -> String {
+        let mut out = format!("{:<36} {:<14} {:<12}\n", "REPOSITORY:TAG", "IMAGE ID", "SIZE");
+        for r in self.images.references() {
+            let img = self.images.get(r).unwrap();
+            out.push_str(&format!(
+                "{:<36} {:<14} {:<12}\n",
+                r,
+                img.id().short(),
+                crate::util::format_bytes(img.total_size())
+            ));
+        }
+        out
+    }
+
+    /// `docker stop` (releases nothing until rm; matches docker).
+    pub fn stop(&mut self, id: ContainerId, exit_code: i32) -> Result<(), EngineError> {
+        self.containers
+            .get_mut(&id)
+            .ok_or(EngineError::NoContainer(id))?
+            .stop(exit_code)?;
+        Ok(())
+    }
+
+    /// `docker rm`: detach network and free machine resources.
+    pub fn remove(
+        &mut self,
+        id: ContainerId,
+        machine: &mut Machine,
+    ) -> Result<Container, EngineError> {
+        let container = self.containers.remove(&id).ok_or(EngineError::NoContainer(id))?;
+        if container.state == ContainerState::Running {
+            // docker rm -f semantics
+        }
+        self.bridge.detach(id);
+        machine.release(container.cgroup.cpu_quota_cores, container.cgroup.memory_limit);
+        Ok(container)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dockyard::dockerfile::Dockerfile;
+    use crate::hw::MachineSpec;
+
+    fn setup() -> (Engine, Machine, Registry) {
+        let mut machine = Machine::new(MachineId::new(0), "blade01", MachineSpec::dell_m620());
+        machine.power_on().unwrap();
+        machine.boot_complete().unwrap();
+        let mut registry = Registry::docker_hub();
+        let mut builder = ImageStore::with_base_images();
+        let df = Dockerfile::parse(Dockerfile::paper_compute_node()).unwrap();
+        registry.push(builder.build(&df, "nchc/mpi-computenode:latest").unwrap());
+        (Engine::new(MachineId::new(0), BridgeMode::Bridge0), machine, registry)
+    }
+
+    #[test]
+    fn run_pulls_creates_attaches_starts() {
+        let (mut eng, mut m, mut reg) = setup();
+        let id = ContainerId::new(0);
+        let r = eng
+            .run(id, "node02", "nchc/mpi-computenode:latest", RunSpec { cores: 12, memory: 32 << 30 }, &mut m, &mut reg)
+            .unwrap();
+        assert!(r.pull_time > SimTime::ZERO);
+        assert!(r.pulled_bytes > 0);
+        let c = eng.container(id).unwrap();
+        assert!(c.is_running());
+        assert!(c.ip.is_some());
+        assert_eq!(c.cmd, vec!["/usr/sbin/sshd", "-D"]);
+        assert_eq!(m.cores_free(), 0);
+        assert_eq!(eng.running_count(), 1);
+    }
+
+    #[test]
+    fn second_run_skips_pull() {
+        let (mut eng, mut m, mut reg) = setup();
+        let spec = RunSpec { cores: 2, memory: 4 << 30 };
+        let r1 = eng
+            .run(ContainerId::new(0), "a", "nchc/mpi-computenode:latest", spec, &mut m, &mut reg)
+            .unwrap();
+        let r2 = eng
+            .run(ContainerId::new(1), "b", "nchc/mpi-computenode:latest", spec, &mut m, &mut reg)
+            .unwrap();
+        assert!(r1.pull_time > SimTime::ZERO);
+        assert_eq!(r2.pull_time, SimTime::ZERO);
+        assert_eq!(r2.pulled_bytes, 0);
+        assert!(r2.total() < r1.total());
+    }
+
+    #[test]
+    fn over_allocation_fails() {
+        let (mut eng, mut m, mut reg) = setup();
+        let err = eng.run(
+            ContainerId::new(0),
+            "big",
+            "nchc/mpi-computenode:latest",
+            RunSpec { cores: 13, memory: 1 << 30 },
+            &mut m,
+            &mut reg,
+        );
+        assert!(matches!(err, Err(EngineError::Machine(MachineError::NoCores { .. }))));
+    }
+
+    #[test]
+    fn remove_releases_resources_and_ip() {
+        let (mut eng, mut m, mut reg) = setup();
+        let id = ContainerId::new(0);
+        let spec = RunSpec { cores: 4, memory: 8 << 30 };
+        eng.run(id, "x", "nchc/mpi-computenode:latest", spec, &mut m, &mut reg)
+            .unwrap();
+        let ip = eng.container(id).unwrap().ip.unwrap();
+        assert!(eng.bridge.ipam.is_leased(ip));
+        eng.stop(id, 0).unwrap();
+        eng.remove(id, &mut m).unwrap();
+        assert!(!eng.bridge.ipam.is_leased(ip));
+        assert_eq!(m.cores_free(), 12);
+        assert!(eng.container(id).is_none());
+    }
+
+    #[test]
+    fn ps_and_images_render_fig6_style() {
+        let (mut eng, mut m, mut reg) = setup();
+        let spec = RunSpec { cores: 2, memory: 4 << 30 };
+        eng.run(ContainerId::new(0), "node02", "nchc/mpi-computenode:latest", spec, &mut m, &mut reg)
+            .unwrap();
+        let ps = eng.format_ps();
+        assert!(ps.contains("CONTAINER ID"));
+        assert!(ps.contains("node02"));
+        assert!(ps.contains("nchc/mpi-computenode:latest"));
+        assert!(ps.contains("Up"));
+        assert!(ps.contains("/usr/sbin/sshd -D"));
+        eng.stop(ContainerId::new(0), 137).unwrap();
+        assert!(eng.format_ps().contains("Exited (137)"));
+        let images = eng.format_images();
+        assert!(images.contains("nchc/mpi-computenode:latest"));
+        assert!(images.contains("MiB"));
+    }
+
+    #[test]
+    fn unknown_image_fails() {
+        let (mut eng, mut m, mut reg) = setup();
+        assert!(matches!(
+            eng.run(ContainerId::new(0), "x", "no:img", RunSpec::default(), &mut m, &mut reg),
+            Err(EngineError::Registry(RegistryError::NotFound(_)))
+        ));
+    }
+}

@@ -1,0 +1,308 @@
+//! Images: an ordered layer stack + runtime config, built from a
+//! Dockerfile against a base-image store (§III-A).
+
+use super::dockerfile::{Dockerfile, Instruction};
+use super::layer::{resolve_union, Digest, FileEntry, Layer};
+use std::collections::{BTreeMap, HashMap};
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq)]
+pub enum ImageError {
+    #[error("unknown base image {0}:{1}")]
+    UnknownBase(String, String),
+    #[error("dockerfile has no FROM")]
+    NoFrom,
+    #[error("unknown image {0}")]
+    Unknown(String),
+}
+
+/// Runtime config recorded by the build.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ImageConfig {
+    pub env: Vec<(String, String)>,
+    pub labels: Vec<(String, String)>,
+    pub exposed_ports: Vec<u16>,
+    pub workdir: Option<String>,
+    pub user: Option<String>,
+    pub entrypoint: Option<Vec<String>>,
+    pub cmd: Option<Vec<String>>,
+    pub maintainer: Option<String>,
+}
+
+/// An immutable image.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Image {
+    pub reference: String, // name:tag
+    pub layers: Vec<Layer>,
+    pub config: ImageConfig,
+}
+
+impl Image {
+    pub fn id(&self) -> Digest {
+        use sha2::{Digest as _, Sha256};
+        let mut h = Sha256::new();
+        for l in &self.layers {
+            h.update(l.digest().0);
+        }
+        h.update(self.reference.as_bytes());
+        Digest(h.finalize().into())
+    }
+
+    pub fn total_size(&self) -> u64 {
+        self.layers.iter().map(|l| l.size_bytes()).sum()
+    }
+
+    /// Effective root filesystem after union resolution.
+    pub fn rootfs(&self) -> BTreeMap<String, FileEntry> {
+        resolve_union(&self.layers.iter().collect::<Vec<_>>())
+    }
+}
+
+/// Synthetic footprint model for RUN commands: well-known package sizes
+/// so image sizes are plausible and deterministic.
+fn run_footprint(cmd: &str) -> Vec<(String, u64)> {
+    let mut files = Vec::new();
+    let table: &[(&str, &[(&str, u64)])] = &[
+        (
+            "openssh-server",
+            &[
+                ("/usr/sbin/sshd", 852_992),
+                ("/etc/ssh/sshd_config", 4_361),
+                ("/usr/lib64/libssh.so", 1_254_000),
+            ],
+        ),
+        (
+            "openmpi",
+            &[
+                ("/usr/lib64/openmpi/bin/mpirun", 712_480),
+                ("/usr/lib64/openmpi/lib/libmpi.so", 2_913_120),
+                ("/usr/lib64/openmpi/bin/orted", 215_340),
+                ("/etc/openmpi-default-hostfile", 1_024),
+            ],
+        ),
+        (
+            "gcc",
+            &[("/usr/bin/gcc", 912_336), ("/usr/lib/gcc/cc1", 14_221_320)],
+        ),
+    ];
+    for (pkg, pkg_files) in table {
+        if cmd.contains(pkg) {
+            for (p, s) in *pkg_files {
+                files.push((p.to_string(), *s));
+            }
+        }
+    }
+    if files.is_empty() {
+        // generic command: a small synthetic artifact under /var
+        let tag = Digest::of_bytes(cmd.as_bytes()).short();
+        files.push((format!("/var/lib/run/{tag}"), 64 * 1024));
+    }
+    files
+}
+
+/// Sizes for ADD/COPY sources (the consul binaries the paper injects).
+fn add_source_size(src: &str) -> u64 {
+    match src {
+        "consul" => 10_600_000,          // consul v0.5.2 static binary
+        "consul-template" => 6_200_000,  // consul-template binary
+        other => 128 * 1024 + other.len() as u64 * 1024,
+    }
+}
+
+/// Image store: one per machine (local cache) and one inside the registry.
+#[derive(Debug, Clone, Default)]
+pub struct ImageStore {
+    images: HashMap<String, Image>,
+}
+
+impl ImageStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Seed the well-known base images (the paper pulls centos:6).
+    pub fn with_base_images() -> Self {
+        let mut store = Self::new();
+        for (name, tag, files) in [
+            (
+                "centos",
+                "6",
+                vec![
+                    ("/bin/sh", 938_832u64),
+                    ("/usr/bin/yum", 801_456),
+                    ("/usr/lib64/libc.so.6", 1_926_520),
+                    ("/etc/centos-release", 27),
+                ],
+            ),
+            (
+                "centos",
+                "7",
+                vec![
+                    ("/bin/sh", 964_536),
+                    ("/usr/bin/yum", 812_060),
+                    ("/usr/lib64/libc.so.6", 2_156_240),
+                    ("/etc/centos-release", 37),
+                ],
+            ),
+        ] {
+            let mut layer = Layer::new(format!("FROM scratch ({name}:{tag})"));
+            for (p, s) in files {
+                layer.add_file(p, s);
+            }
+            let reference = format!("{name}:{tag}");
+            store.insert(Image {
+                reference: reference.clone(),
+                layers: vec![layer],
+                config: ImageConfig::default(),
+            });
+        }
+        store
+    }
+
+    pub fn insert(&mut self, image: Image) {
+        self.images.insert(image.reference.clone(), image);
+    }
+
+    pub fn get(&self, reference: &str) -> Option<&Image> {
+        self.images.get(reference)
+    }
+
+    pub fn contains(&self, reference: &str) -> bool {
+        self.images.contains_key(reference)
+    }
+
+    pub fn references(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.images.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.images.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.images.is_empty()
+    }
+
+    /// Build an image from a Dockerfile: every instruction that mutates
+    /// the filesystem appends a layer (Docker's own layering rule);
+    /// metadata instructions update the config only.
+    pub fn build(
+        &mut self,
+        dockerfile: &Dockerfile,
+        reference: impl Into<String>,
+    ) -> Result<Image, ImageError> {
+        let (base_name, base_tag) = dockerfile.base().ok_or(ImageError::NoFrom)?;
+        let base_ref = format!("{base_name}:{base_tag}");
+        let base = self
+            .get(&base_ref)
+            .ok_or_else(|| ImageError::UnknownBase(base_name.into(), base_tag.into()))?
+            .clone();
+
+        let mut layers = base.layers.clone();
+        let mut config = base.config.clone();
+        for inst in &dockerfile.instructions[1..] {
+            match inst {
+                Instruction::Run(cmd) => {
+                    let mut layer = Layer::new(format!("RUN {cmd}"));
+                    for (p, s) in run_footprint(cmd) {
+                        layer.add_file(p, s);
+                    }
+                    layers.push(layer);
+                }
+                Instruction::Add { src, dst } | Instruction::Copy { src, dst } => {
+                    let mut layer = Layer::new(format!("ADD {src} {dst}"));
+                    layer.add_file(dst.clone(), add_source_size(src));
+                    layers.push(layer);
+                }
+                Instruction::Env { key, value } => {
+                    config.env.push((key.clone(), value.clone()))
+                }
+                Instruction::Label { key, value } => {
+                    config.labels.push((key.clone(), value.clone()))
+                }
+                Instruction::Expose(p) => config.exposed_ports.push(*p),
+                Instruction::Workdir(w) => config.workdir = Some(w.clone()),
+                Instruction::User(u) => config.user = Some(u.clone()),
+                Instruction::Volume(_) => {}
+                Instruction::Cmd(c) => config.cmd = Some(c.clone()),
+                Instruction::Entrypoint(e) => config.entrypoint = Some(e.clone()),
+                Instruction::Maintainer(m) => config.maintainer = Some(m.clone()),
+                Instruction::From { .. } => {}
+            }
+        }
+        let image = Image { reference: reference.into(), layers, config };
+        self.insert(image.clone());
+        Ok(image)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn build_paper_image() -> (ImageStore, Image) {
+        let mut store = ImageStore::with_base_images();
+        let df = Dockerfile::parse(Dockerfile::paper_compute_node()).unwrap();
+        let img = store.build(&df, "nchc/mpi-computenode:latest").unwrap();
+        (store, img)
+    }
+
+    #[test]
+    fn build_layers_one_per_fs_instruction() {
+        let (_, img) = build_paper_image();
+        // base(1) + RUN(1) + ADD(2) = 4 layers; CMD/MAINTAINER are config
+        assert_eq!(img.layers.len(), 4);
+        assert_eq!(
+            img.config.cmd,
+            Some(vec!["/usr/sbin/sshd".into(), "-D".into()])
+        );
+        assert!(img.config.maintainer.as_deref().unwrap().contains("Yu"));
+    }
+
+    #[test]
+    fn rootfs_contains_mpi_ssh_and_consul() {
+        let (_, img) = build_paper_image();
+        let fs = img.rootfs();
+        assert!(fs.contains_key("/usr/sbin/sshd"));
+        assert!(fs.contains_key("/usr/lib64/openmpi/bin/mpirun"));
+        assert!(fs.contains_key("/usr/local/bin/consul"));
+        assert!(fs.contains_key("/usr/local/bin/consul-template"));
+        assert!(fs.contains_key("/bin/sh")); // from the base
+    }
+
+    #[test]
+    fn unknown_base_errors() {
+        let mut store = ImageStore::new();
+        let df = Dockerfile::parse("FROM debian:8\nRUN x").unwrap();
+        assert_eq!(
+            store.build(&df, "t").unwrap_err(),
+            ImageError::UnknownBase("debian".into(), "8".into())
+        );
+    }
+
+    #[test]
+    fn image_id_stable_and_size_positive() {
+        let (_, a) = build_paper_image();
+        let (_, b) = build_paper_image();
+        assert_eq!(a.id(), b.id());
+        assert!(a.total_size() > 20_000_000, "size={}", a.total_size());
+    }
+
+    #[test]
+    fn builds_are_deterministic_layerwise() {
+        let (_, a) = build_paper_image();
+        let (_, b) = build_paper_image();
+        let da: Vec<_> = a.layers.iter().map(|l| l.digest()).collect();
+        let db: Vec<_> = b.layers.iter().map(|l| l.digest()).collect();
+        assert_eq!(da, db);
+    }
+
+    #[test]
+    fn base_images_seeded() {
+        let store = ImageStore::with_base_images();
+        assert!(store.contains("centos:6"));
+        assert!(store.contains("centos:7"));
+        assert_eq!(store.len(), 2);
+    }
+}

@@ -1,0 +1,198 @@
+//! Content-addressed image layers with union-filesystem semantics.
+//!
+//! A layer is a sorted manifest of file entries (path, size, content
+//! hash) plus whiteouts (deletions), digested with SHA-256 — the same
+//! observable model as Docker's UnionFS stack (§II-B): layers are
+//! immutable, shared between images, and resolve top-down.
+
+use sha2::{Digest as _, Sha256};
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A SHA-256 content digest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Digest(pub [u8; 32]);
+
+impl Digest {
+    pub fn of_bytes(data: &[u8]) -> Self {
+        let mut h = Sha256::new();
+        h.update(data);
+        Self(h.finalize().into())
+    }
+
+    pub fn short(&self) -> String {
+        self.0[..6].iter().map(|b| format!("{b:02x}")).collect()
+    }
+}
+
+impl fmt::Display for Digest {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "sha256:")?;
+        for b in &self.0 {
+            write!(f, "{b:02x}")?;
+        }
+        Ok(())
+    }
+}
+
+/// One file inside a layer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FileEntry {
+    pub size: u64,
+    pub content: Digest,
+}
+
+/// A filesystem layer: file manifest + whiteouts.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Layer {
+    /// What produced this layer (`RUN yum install ...`).
+    pub created_by: String,
+    pub files: BTreeMap<String, FileEntry>,
+    /// Paths deleted relative to lower layers (`.wh.` markers).
+    pub whiteouts: Vec<String>,
+}
+
+impl Layer {
+    pub fn new(created_by: impl Into<String>) -> Self {
+        Self { created_by: created_by.into(), files: BTreeMap::new(), whiteouts: Vec::new() }
+    }
+
+    /// Add a synthetic file whose content hash derives from path+size.
+    pub fn add_file(&mut self, path: impl Into<String>, size: u64) -> &mut Self {
+        let path = path.into();
+        let content = Digest::of_bytes(format!("{path}:{size}").as_bytes());
+        self.files.insert(path, FileEntry { size, content });
+        self
+    }
+
+    pub fn add_whiteout(&mut self, path: impl Into<String>) -> &mut Self {
+        self.whiteouts.push(path.into());
+        self.whiteouts.sort();
+        self
+    }
+
+    /// Total byte size of the layer (what a pull transfers).
+    pub fn size_bytes(&self) -> u64 {
+        self.files.values().map(|f| f.size).sum()
+    }
+
+    /// The layer digest: hash of the canonicalized manifest.
+    pub fn digest(&self) -> Digest {
+        let mut h = Sha256::new();
+        h.update(self.created_by.as_bytes());
+        h.update([0]);
+        for (path, e) in &self.files {
+            h.update(path.as_bytes());
+            h.update(e.size.to_le_bytes());
+            h.update(e.content.0);
+        }
+        for w in &self.whiteouts {
+            h.update(b".wh.");
+            h.update(w.as_bytes());
+        }
+        Digest(h.finalize().into())
+    }
+}
+
+/// Resolve a stack of layers (bottom..top) into the effective root fs.
+pub fn resolve_union(layers: &[&Layer]) -> BTreeMap<String, FileEntry> {
+    let mut fs = BTreeMap::new();
+    for layer in layers {
+        for w in &layer.whiteouts {
+            // a whiteout removes the path and everything under it
+            let prefix = format!("{w}/");
+            fs.retain(|p: &String, _| p != w && !p.starts_with(&prefix));
+        }
+        for (path, entry) in &layer.files {
+            fs.insert(path.clone(), entry.clone());
+        }
+    }
+    fs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digest_is_content_addressed() {
+        let mut a = Layer::new("RUN x");
+        a.add_file("/bin/sh", 100);
+        let mut b = Layer::new("RUN x");
+        b.add_file("/bin/sh", 100);
+        assert_eq!(a.digest(), b.digest());
+        b.add_file("/bin/ls", 50);
+        assert_ne!(a.digest(), b.digest());
+    }
+
+    #[test]
+    fn digest_depends_on_provenance() {
+        let mut a = Layer::new("RUN x");
+        a.add_file("/f", 1);
+        let mut b = Layer::new("RUN y");
+        b.add_file("/f", 1);
+        assert_ne!(a.digest(), b.digest());
+    }
+
+    #[test]
+    fn digest_format() {
+        let d = Layer::new("x").digest();
+        let s = d.to_string();
+        assert!(s.starts_with("sha256:"));
+        assert_eq!(s.len(), 7 + 64);
+        assert_eq!(d.short().len(), 12);
+    }
+
+    #[test]
+    fn upper_layer_shadows_lower() {
+        let mut base = Layer::new("base");
+        base.add_file("/etc/conf", 10).add_file("/bin/sh", 100);
+        let mut top = Layer::new("top");
+        top.add_file("/etc/conf", 99);
+        let fs = resolve_union(&[&base, &top]);
+        assert_eq!(fs["/etc/conf"].size, 99);
+        assert_eq!(fs["/bin/sh"].size, 100);
+    }
+
+    #[test]
+    fn whiteout_removes_path_and_subtree() {
+        let mut base = Layer::new("base");
+        base.add_file("/opt/tool/bin", 5)
+            .add_file("/opt/tool/lib", 7)
+            .add_file("/opt/other", 1);
+        let mut top = Layer::new("top");
+        top.add_whiteout("/opt/tool");
+        let fs = resolve_union(&[&base, &top]);
+        assert!(!fs.contains_key("/opt/tool/bin"));
+        assert!(!fs.contains_key("/opt/tool/lib"));
+        assert!(fs.contains_key("/opt/other"));
+    }
+
+    #[test]
+    fn whiteout_then_readd_in_same_layer() {
+        let mut base = Layer::new("base");
+        base.add_file("/x", 1);
+        let mut top = Layer::new("top");
+        top.add_whiteout("/x");
+        top.add_file("/x", 2);
+        let fs = resolve_union(&[&base, &top]);
+        assert_eq!(fs["/x"].size, 2);
+    }
+
+    #[test]
+    fn size_sums_files() {
+        let mut l = Layer::new("x");
+        l.add_file("/a", 10).add_file("/b", 32);
+        assert_eq!(l.size_bytes(), 42);
+    }
+
+    #[test]
+    fn union_resolution_is_order_sensitive() {
+        let mut a = Layer::new("a");
+        a.add_file("/f", 1);
+        let mut b = Layer::new("b");
+        b.add_file("/f", 2);
+        assert_eq!(resolve_union(&[&a, &b])["/f"].size, 2);
+        assert_eq!(resolve_union(&[&b, &a])["/f"].size, 1);
+    }
+}

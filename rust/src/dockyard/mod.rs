@@ -1,0 +1,23 @@
+//! dockyard — the simulated container engine (the paper's "Docker").
+//!
+//! Implements the pieces the paper actually exercises (§II-B, §III-A,
+//! Fig. 2): Dockerfile parsing, image building as a stack of
+//! content-addressed layers with union-fs semantics (incl. whiteouts),
+//! a Docker-Hub-like registry with layer-dedup push/pull, and a per-host
+//! engine (`dockerd`) owning container lifecycle, cgroup limits and
+//! network attachment.
+
+pub mod cgroup;
+pub mod container;
+pub mod dockerfile;
+pub mod engine;
+pub mod image;
+pub mod layer;
+pub mod registry;
+
+pub use container::{Container, ContainerState};
+pub use dockerfile::{Dockerfile, Instruction};
+pub use engine::Engine as DockerEngine;
+pub use image::{Image, ImageStore};
+pub use layer::{Digest, FileEntry, Layer};
+pub use registry::Registry;

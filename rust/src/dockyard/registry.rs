@@ -1,0 +1,188 @@
+//! A Docker-Hub-like registry (§II-B: "posted and shared in the Docker
+//! Hub"): push/pull with content-addressed layer dedup and a transfer
+//! cost model, so provisioning benches charge realistic pull times.
+
+use super::image::{Image, ImageStore};
+use super::layer::Digest;
+use crate::hw::NicSpec;
+use crate::sim::SimTime;
+use std::collections::HashSet;
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq)]
+pub enum RegistryError {
+    #[error("image {0} not in registry")]
+    NotFound(String),
+}
+
+/// Result of a pull: the image plus what it cost.
+#[derive(Debug, Clone)]
+pub struct PullReceipt {
+    pub image: Image,
+    pub layers_fetched: usize,
+    pub layers_cached: usize,
+    pub bytes_transferred: u64,
+    pub transfer_time: SimTime,
+}
+
+/// The registry.
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    store: ImageStore,
+    pub pushes: u64,
+    pub pulls: u64,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A registry pre-seeded with the public base images.
+    pub fn docker_hub() -> Self {
+        Self { store: ImageStore::with_base_images(), pushes: 0, pulls: 0 }
+    }
+
+    pub fn push(&mut self, image: Image) {
+        self.pushes += 1;
+        self.store.insert(image);
+    }
+
+    pub fn contains(&self, reference: &str) -> bool {
+        self.store.contains(reference)
+    }
+
+    pub fn references(&self) -> Vec<&str> {
+        self.store.references()
+    }
+
+    /// Pull `reference` into `local`, skipping layers already present in
+    /// any locally cached image (content-addressed dedup), charging the
+    /// WAN/LAN transfer at `nic` speed.
+    pub fn pull(
+        &mut self,
+        reference: &str,
+        local: &mut ImageStore,
+        nic: &NicSpec,
+    ) -> Result<PullReceipt, RegistryError> {
+        let image = self
+            .store
+            .get(reference)
+            .ok_or_else(|| RegistryError::NotFound(reference.to_string()))?
+            .clone();
+        self.pulls += 1;
+
+        let cached: HashSet<Digest> = local
+            .references()
+            .iter()
+            .filter_map(|r| local.get(r))
+            .flat_map(|img| img.layers.iter().map(|l| l.digest()))
+            .collect();
+
+        let mut bytes = 0u64;
+        let mut fetched = 0usize;
+        let mut cached_n = 0usize;
+        for layer in &image.layers {
+            if cached.contains(&layer.digest()) {
+                cached_n += 1;
+            } else {
+                fetched += 1;
+                bytes += layer.size_bytes();
+            }
+        }
+        // One HTTP round trip per fetched layer + manifest, then stream.
+        let msgs = fetched as u64 + 1;
+        let transfer_time = SimTime::from_nanos(
+            nic.message_time(0).as_nanos() * msgs,
+        ) + nic.serialize_time(bytes);
+
+        local.insert(image.clone());
+        Ok(PullReceipt {
+            image,
+            layers_fetched: fetched,
+            layers_cached: cached_n,
+            bytes_transferred: bytes,
+            transfer_time,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dockyard::dockerfile::Dockerfile;
+
+    fn hub_with_paper_image() -> Registry {
+        let mut hub = Registry::docker_hub();
+        let mut builder = ImageStore::with_base_images();
+        let df = Dockerfile::parse(Dockerfile::paper_compute_node()).unwrap();
+        let img = builder.build(&df, "nchc/mpi-computenode:latest").unwrap();
+        hub.push(img);
+        hub
+    }
+
+    #[test]
+    fn pull_fetches_all_layers_cold() {
+        let mut hub = hub_with_paper_image();
+        let mut local = ImageStore::new();
+        let r = hub
+            .pull("nchc/mpi-computenode:latest", &mut local, &NicSpec::ten_gbe())
+            .unwrap();
+        assert_eq!(r.layers_fetched, 4);
+        assert_eq!(r.layers_cached, 0);
+        assert!(r.bytes_transferred > 20_000_000);
+        assert!(r.transfer_time > SimTime::ZERO);
+        assert!(local.contains("nchc/mpi-computenode:latest"));
+    }
+
+    #[test]
+    fn pull_dedups_shared_base_layers() {
+        let mut hub = hub_with_paper_image();
+        let mut local = ImageStore::with_base_images(); // already has centos:6
+        let r = hub
+            .pull("nchc/mpi-computenode:latest", &mut local, &NicSpec::ten_gbe())
+            .unwrap();
+        assert_eq!(r.layers_cached, 1, "base layer should be cached");
+        assert_eq!(r.layers_fetched, 3);
+    }
+
+    #[test]
+    fn second_pull_is_fully_cached() {
+        let mut hub = hub_with_paper_image();
+        let mut local = ImageStore::new();
+        hub.pull("nchc/mpi-computenode:latest", &mut local, &NicSpec::ten_gbe())
+            .unwrap();
+        let r2 = hub
+            .pull("nchc/mpi-computenode:latest", &mut local, &NicSpec::ten_gbe())
+            .unwrap();
+        assert_eq!(r2.layers_fetched, 0);
+        assert_eq!(r2.bytes_transferred, 0);
+    }
+
+    #[test]
+    fn pull_unknown_errors() {
+        let mut hub = Registry::docker_hub();
+        let mut local = ImageStore::new();
+        assert_eq!(
+            hub.pull("nope:latest", &mut local, &NicSpec::ten_gbe())
+                .unwrap_err(),
+            RegistryError::NotFound("nope:latest".into())
+        );
+    }
+
+    #[test]
+    fn slower_nic_pulls_slower() {
+        let mut hub = hub_with_paper_image();
+        let mut l1 = ImageStore::new();
+        let mut l2 = ImageStore::new();
+        let t10 = hub
+            .pull("nchc/mpi-computenode:latest", &mut l1, &NicSpec::ten_gbe())
+            .unwrap()
+            .transfer_time;
+        let t1 = hub
+            .pull("nchc/mpi-computenode:latest", &mut l2, &NicSpec::one_gbe())
+            .unwrap()
+            .transfer_time;
+        assert!(t1 > t10);
+    }
+}

@@ -1,0 +1,242 @@
+//! Machine (blade) model: spec, power state machine, core/memory ledger.
+
+use super::nic::NicSpec;
+use crate::sim::SimTime;
+use crate::util::ids::MachineId;
+use thiserror::Error;
+
+/// Hardware spec of a physical machine (Table I of the paper).
+#[derive(Debug, Clone)]
+pub struct MachineSpec {
+    pub model: String,
+    pub sockets: u32,
+    pub cores_per_socket: u32,
+    pub clock_ghz: f64,
+    pub memory_bytes: u64,
+    pub disk_bytes: u64,
+    pub disk_read_bps: u64,
+    pub nic: NicSpec,
+    /// Power-on → OS-up time.
+    pub boot_time: SimTime,
+}
+
+impl MachineSpec {
+    /// Dell PowerEdge M620: 2× Intel Xeon E5-2630 2.30 GHz (6C),
+    /// 64 GB RAM, SAS 146 GB 10 krpm, 10GbE — the paper's Table I row.
+    pub fn dell_m620() -> Self {
+        Self {
+            model: "Dell M620".to_string(),
+            sockets: 2,
+            cores_per_socket: 6,
+            clock_ghz: 2.30,
+            memory_bytes: 64 << 30,
+            disk_bytes: 146 << 30,
+            disk_read_bps: 150 << 20, // 10k rpm SAS streaming read
+            nic: NicSpec::ten_gbe(),
+            boot_time: SimTime::from_secs(90),
+        }
+    }
+
+    pub fn total_cores(&self) -> u32 {
+        self.sockets * self.cores_per_socket
+    }
+}
+
+/// Power state machine: Off → Booting → On → Off.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PowerState {
+    Off,
+    Booting,
+    On,
+}
+
+#[derive(Debug, Error, PartialEq)]
+pub enum MachineError {
+    #[error("machine {0} is not powered on")]
+    NotOn(MachineId),
+    #[error("machine {id}: insufficient cores (want {want}, free {free})")]
+    NoCores { id: MachineId, want: u32, free: u32 },
+    #[error("machine {id}: insufficient memory (want {want}, free {free})")]
+    NoMemory { id: MachineId, want: u64, free: u64 },
+    #[error("machine {0}: invalid power transition")]
+    BadTransition(MachineId),
+}
+
+/// A physical machine with a resource ledger for containers.
+#[derive(Debug, Clone)]
+pub struct Machine {
+    pub id: MachineId,
+    pub hostname: String,
+    pub spec: MachineSpec,
+    pub power: PowerState,
+    cores_used: u32,
+    memory_used: u64,
+}
+
+impl Machine {
+    pub fn new(id: MachineId, hostname: impl Into<String>, spec: MachineSpec) -> Self {
+        Self {
+            id,
+            hostname: hostname.into(),
+            spec,
+            power: PowerState::Off,
+            cores_used: 0,
+            memory_used: 0,
+        }
+    }
+
+    pub fn cores_free(&self) -> u32 {
+        self.spec.total_cores() - self.cores_used
+    }
+    pub fn memory_free(&self) -> u64 {
+        self.spec.memory_bytes - self.memory_used
+    }
+    pub fn cores_used(&self) -> u32 {
+        self.cores_used
+    }
+
+    /// Begin booting. Returns the boot duration to schedule.
+    pub fn power_on(&mut self) -> Result<SimTime, MachineError> {
+        match self.power {
+            PowerState::Off => {
+                self.power = PowerState::Booting;
+                Ok(self.spec.boot_time)
+            }
+            _ => Err(MachineError::BadTransition(self.id)),
+        }
+    }
+
+    /// Boot finished (scheduled by the provisioner after `boot_time`).
+    pub fn boot_complete(&mut self) -> Result<(), MachineError> {
+        match self.power {
+            PowerState::Booting => {
+                self.power = PowerState::On;
+                Ok(())
+            }
+            _ => Err(MachineError::BadTransition(self.id)),
+        }
+    }
+
+    /// Hard power off; releases every allocation.
+    pub fn power_off(&mut self) {
+        self.power = PowerState::Off;
+        self.cores_used = 0;
+        self.memory_used = 0;
+    }
+
+    /// Reserve cores+memory for a container.
+    pub fn allocate(&mut self, cores: u32, memory: u64) -> Result<(), MachineError> {
+        if self.power != PowerState::On {
+            return Err(MachineError::NotOn(self.id));
+        }
+        if self.cores_free() < cores {
+            return Err(MachineError::NoCores {
+                id: self.id,
+                want: cores,
+                free: self.cores_free(),
+            });
+        }
+        if self.memory_free() < memory {
+            return Err(MachineError::NoMemory {
+                id: self.id,
+                want: memory,
+                free: self.memory_free(),
+            });
+        }
+        self.cores_used += cores;
+        self.memory_used += memory;
+        Ok(())
+    }
+
+    /// Release a previous allocation.
+    pub fn release(&mut self, cores: u32, memory: u64) {
+        self.cores_used = self.cores_used.saturating_sub(cores);
+        self.memory_used = self.memory_used.saturating_sub(memory);
+    }
+
+    /// Time to read `bytes` from local disk (image layer extraction).
+    pub fn disk_read_time(&self, bytes: u64) -> SimTime {
+        SimTime::from_nanos(
+            (bytes as u128 * 1_000_000_000 / self.spec.disk_read_bps as u128) as u64,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m() -> Machine {
+        Machine::new(MachineId::new(0), "blade01", MachineSpec::dell_m620())
+    }
+
+    #[test]
+    fn table1_spec_values() {
+        let s = MachineSpec::dell_m620();
+        assert_eq!(s.model, "Dell M620");
+        assert_eq!(s.total_cores(), 12);
+        assert_eq!(s.clock_ghz, 2.30);
+        assert_eq!(s.memory_bytes, 64 << 30);
+        assert_eq!(s.disk_bytes, 146 << 30);
+        assert_eq!(s.nic.name, "10GbE");
+    }
+
+    #[test]
+    fn power_state_machine() {
+        let mut m = m();
+        assert_eq!(m.power, PowerState::Off);
+        let boot = m.power_on().unwrap();
+        assert_eq!(boot, SimTime::from_secs(90));
+        assert_eq!(m.power, PowerState::Booting);
+        assert_eq!(m.power_on(), Err(MachineError::BadTransition(m.id)));
+        m.boot_complete().unwrap();
+        assert_eq!(m.power, PowerState::On);
+        assert!(m.boot_complete().is_err());
+        m.power_off();
+        assert_eq!(m.power, PowerState::Off);
+    }
+
+    #[test]
+    fn allocation_requires_power() {
+        let mut m = m();
+        assert!(matches!(m.allocate(1, 1 << 30), Err(MachineError::NotOn(_))));
+    }
+
+    #[test]
+    fn allocation_ledger() {
+        let mut m = m();
+        m.power_on().unwrap();
+        m.boot_complete().unwrap();
+        m.allocate(8, 32 << 30).unwrap();
+        assert_eq!(m.cores_free(), 4);
+        assert_eq!(m.memory_free(), 32 << 30);
+        assert!(matches!(
+            m.allocate(5, 1 << 30),
+            Err(MachineError::NoCores { .. })
+        ));
+        assert!(matches!(
+            m.allocate(1, 33 << 30),
+            Err(MachineError::NoMemory { .. })
+        ));
+        m.release(8, 32 << 30);
+        assert_eq!(m.cores_free(), 12);
+    }
+
+    #[test]
+    fn power_off_releases_everything() {
+        let mut m = m();
+        m.power_on().unwrap();
+        m.boot_complete().unwrap();
+        m.allocate(12, 64 << 30).unwrap();
+        m.power_off();
+        assert_eq!(m.cores_used(), 0);
+        assert_eq!(m.memory_free(), 64 << 30);
+    }
+
+    #[test]
+    fn disk_read_time_scales() {
+        let m = m();
+        let t1 = m.disk_read_time(150 << 20);
+        assert!((t1.as_secs_f64() - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,13 @@
+//! Physical substrate model: machines (blades), NICs, racks.
+//!
+//! The paper's testbed is three Dell PowerEdge M620 blades (Table I):
+//! 2× Xeon E5-2630 @ 2.30 GHz (6 cores each), 64 GB RAM, SAS 146 GB,
+//! 10GbE interconnect. `MachineSpec::dell_m620()` encodes exactly that.
+
+pub mod machine;
+pub mod nic;
+pub mod rack;
+
+pub use machine::{Machine, MachineError, MachineSpec, PowerState};
+pub use nic::NicSpec;
+pub use rack::{Plant, Rack};

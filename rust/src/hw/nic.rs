@@ -1,0 +1,87 @@
+//! NIC models: the link technology determines the fabric cost model.
+
+use crate::sim::SimTime;
+
+/// A NIC / link technology profile.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NicSpec {
+    pub name: &'static str,
+    /// Line rate in bits per second.
+    pub rate_bps: u64,
+    /// One-way wire+stack latency for a minimal frame.
+    pub base_latency: SimTime,
+    /// Fixed per-message software overhead (driver + stack).
+    pub per_msg_overhead: SimTime,
+}
+
+impl NicSpec {
+    /// 10GbE — the paper's interconnect (Table I).
+    pub fn ten_gbe() -> Self {
+        Self {
+            name: "10GbE",
+            rate_bps: 10_000_000_000,
+            base_latency: SimTime::from_micros(12),
+            per_msg_overhead: SimTime::from_micros(2),
+        }
+    }
+
+    /// Commodity gigabit ethernet (scale-down comparator).
+    pub fn one_gbe() -> Self {
+        Self {
+            name: "1GbE",
+            rate_bps: 1_000_000_000,
+            base_latency: SimTime::from_micros(30),
+            per_msg_overhead: SimTime::from_micros(5),
+        }
+    }
+
+    /// FDR InfiniBand (the "faster interconnect" the conclusion muses on).
+    pub fn infiniband_fdr() -> Self {
+        Self {
+            name: "IB-FDR",
+            rate_bps: 54_000_000_000,
+            base_latency: SimTime::from_nanos(700),
+            per_msg_overhead: SimTime::from_nanos(300),
+        }
+    }
+
+    /// Pure serialization time for `bytes` on this link.
+    pub fn serialize_time(&self, bytes: u64) -> SimTime {
+        SimTime::from_nanos((bytes as u128 * 8 * 1_000_000_000 / self.rate_bps as u128) as u64)
+    }
+
+    /// One-way message time: latency + overhead + serialization.
+    pub fn message_time(&self, bytes: u64) -> SimTime {
+        self.base_latency + self.per_msg_overhead + self.serialize_time(bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serialization_scales_with_rate() {
+        let t10 = NicSpec::ten_gbe().serialize_time(1_000_000);
+        let t1 = NicSpec::one_gbe().serialize_time(1_000_000);
+        // 1 MB at 10 Gb/s = 0.8 ms; at 1 Gb/s = 8 ms.
+        assert_eq!(t10.as_nanos(), 800_000);
+        assert_eq!(t1.as_nanos(), 8_000_000);
+    }
+
+    #[test]
+    fn ib_beats_ethernet_on_small_messages() {
+        let ib = NicSpec::infiniband_fdr().message_time(64);
+        let eth = NicSpec::ten_gbe().message_time(64);
+        assert!(ib < eth);
+    }
+
+    #[test]
+    fn zero_bytes_is_pure_latency() {
+        let nic = NicSpec::ten_gbe();
+        assert_eq!(
+            nic.message_time(0),
+            nic.base_latency + nic.per_msg_overhead
+        );
+    }
+}

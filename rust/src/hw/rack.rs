@@ -1,0 +1,151 @@
+//! Rack topology: machines behind a top-of-rack switch.
+//!
+//! The paper's three blades share one chassis/ToR, so the default
+//! topology is a single rack; multi-rack adds an inter-rack hop used by
+//! the interconnect-study benches.
+
+use super::machine::{Machine, MachineSpec};
+use super::nic::NicSpec;
+use crate::sim::SimTime;
+use crate::util::ids::MachineId;
+
+/// A rack: a ToR switch plus member machines.
+#[derive(Debug, Clone)]
+pub struct Rack {
+    pub name: String,
+    pub members: Vec<MachineId>,
+    /// Per-hop switch forwarding delay.
+    pub switch_delay: SimTime,
+}
+
+impl Rack {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            members: Vec::new(),
+            switch_delay: SimTime::from_micros(1),
+        }
+    }
+}
+
+/// The whole physical plant: machines + racks.
+#[derive(Debug, Clone, Default)]
+pub struct Plant {
+    pub machines: Vec<Machine>,
+    pub racks: Vec<Rack>,
+    /// Extra delay for crossing racks (spine hop).
+    pub inter_rack_delay: SimTime,
+}
+
+impl Plant {
+    pub fn new() -> Self {
+        Self {
+            machines: Vec::new(),
+            racks: Vec::new(),
+            inter_rack_delay: SimTime::from_micros(5),
+        }
+    }
+
+    /// The paper's testbed: blade01..blade03, one rack, M620 spec.
+    pub fn paper_testbed() -> Self {
+        Self::uniform(3, MachineSpec::dell_m620(), 3)
+    }
+
+    /// `n` identical machines packed `per_rack` to a rack.
+    pub fn uniform(n: usize, spec: MachineSpec, per_rack: usize) -> Self {
+        let mut plant = Self::new();
+        for i in 0..n {
+            let id = MachineId::new(i as u32);
+            let hostname = format!("blade{:02}", i + 1);
+            plant.machines.push(Machine::new(id, hostname, spec.clone()));
+            let rack_idx = i / per_rack;
+            if plant.racks.len() <= rack_idx {
+                plant.racks.push(Rack::new(format!("rack{rack_idx}")));
+            }
+            plant.racks[rack_idx].members.push(id);
+        }
+        plant
+    }
+
+    pub fn machine(&self, id: MachineId) -> &Machine {
+        &self.machines[id.raw() as usize]
+    }
+    pub fn machine_mut(&mut self, id: MachineId) -> &mut Machine {
+        &mut self.machines[id.raw() as usize]
+    }
+
+    pub fn rack_of(&self, id: MachineId) -> Option<usize> {
+        self.racks.iter().position(|r| r.members.contains(&id))
+    }
+
+    /// Are two machines on the same rack?
+    pub fn same_rack(&self, a: MachineId, b: MachineId) -> bool {
+        match (self.rack_of(a), self.rack_of(b)) {
+            (Some(x), Some(y)) => x == y,
+            _ => false,
+        }
+    }
+
+    /// Switch-path delay between two machines (0 if same machine).
+    pub fn path_delay(&self, a: MachineId, b: MachineId) -> SimTime {
+        if a == b {
+            return SimTime::ZERO;
+        }
+        let tor = self
+            .rack_of(a)
+            .map(|r| self.racks[r].switch_delay)
+            .unwrap_or(SimTime::from_micros(1));
+        if self.same_rack(a, b) {
+            tor
+        } else {
+            tor + self.inter_rack_delay + tor
+        }
+    }
+
+    /// NIC of the slower endpoint (bottleneck link).
+    pub fn link_nic(&self, a: MachineId, b: MachineId) -> NicSpec {
+        let na = self.machine(a).spec.nic;
+        let nb = self.machine(b).spec.nic;
+        if na.rate_bps <= nb.rate_bps {
+            na
+        } else {
+            nb
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_testbed_has_three_blades_one_rack() {
+        let p = Plant::paper_testbed();
+        assert_eq!(p.machines.len(), 3);
+        assert_eq!(p.racks.len(), 1);
+        assert_eq!(p.machines[0].hostname, "blade01");
+        assert_eq!(p.machines[2].hostname, "blade03");
+        assert!(p.same_rack(MachineId::new(0), MachineId::new(2)));
+    }
+
+    #[test]
+    fn multi_rack_path_delay() {
+        let p = Plant::uniform(6, MachineSpec::dell_m620(), 3);
+        assert_eq!(p.racks.len(), 2);
+        let same = p.path_delay(MachineId::new(0), MachineId::new(1));
+        let cross = p.path_delay(MachineId::new(0), MachineId::new(5));
+        assert!(cross > same);
+        assert_eq!(
+            p.path_delay(MachineId::new(2), MachineId::new(2)),
+            SimTime::ZERO
+        );
+    }
+
+    #[test]
+    fn bottleneck_nic_is_slower_endpoint() {
+        let mut p = Plant::uniform(2, MachineSpec::dell_m620(), 2);
+        p.machines[1].spec.nic = NicSpec::one_gbe();
+        let nic = p.link_nic(MachineId::new(0), MachineId::new(1));
+        assert_eq!(nic.name, "1GbE");
+    }
+}

@@ -1,0 +1,21 @@
+//! vhpc — a virtual HPC cluster with auto-scaling, built on a simulated
+//! container runtime ("dockyard"), a SWIM+Raft service-discovery substrate
+//! ("consul"), a virtual network fabric, and an MPI runtime whose per-rank
+//! compute is AOT-compiled JAX/Pallas executed through PJRT.
+//!
+//! Reproduction of: Yu & Huang, "Building a Virtual HPC Cluster with Auto
+//! Scaling by the Docker", CS.DC 2015.
+
+pub mod bench;
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod consul;
+pub mod dockyard;
+pub mod hw;
+pub mod mpi;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod vnet;
+pub mod workloads;

@@ -1,0 +1,4 @@
+//! vhpc CLI entrypoint (leader). Subcommands are wired in `cli`.
+fn main() {
+    std::process::exit(vhpc::cli::main());
+}

@@ -1,0 +1,70 @@
+//! Analytic cost models for the collective algorithms in `comm`.
+//!
+//! Used by the benches to decompose measured job time into algorithmic
+//! terms (tree depth × per-hop cost) and by DESIGN.md's roofline
+//! estimates. The models match the implementations: binomial trees for
+//! barrier/bcast/reduce, recursive doubling for power-of-two allreduce.
+
+use crate::sim::SimTime;
+
+/// ⌈log2 n⌉ — the binomial tree depth.
+pub fn tree_depth(n: usize) -> u32 {
+    if n <= 1 {
+        0
+    } else {
+        (usize::BITS - (n - 1).leading_zeros()) as u32
+    }
+}
+
+/// Predicted barrier time: two binomial phases of empty messages.
+pub fn barrier_cost(n: usize, hop: SimTime) -> SimTime {
+    SimTime::from_nanos(2 * tree_depth(n) as u64 * hop.as_nanos())
+}
+
+/// Predicted bcast time for a payload with one-way cost `msg`.
+pub fn bcast_cost(n: usize, msg: SimTime) -> SimTime {
+    SimTime::from_nanos(tree_depth(n) as u64 * msg.as_nanos())
+}
+
+/// Predicted allreduce (recursive doubling): log2(n) exchange rounds.
+pub fn allreduce_cost(n: usize, msg: SimTime) -> SimTime {
+    SimTime::from_nanos(tree_depth(n) as u64 * msg.as_nanos())
+}
+
+/// 5-point stencil halo-exchange volume per rank per step (bytes), for a
+/// px×py decomposition of an H×W grid with f32 cells.
+pub fn halo_bytes(h: usize, w: usize, px: usize, py: usize) -> u64 {
+    let local_h = h / px;
+    let local_w = w / py;
+    // up to 4 edges; interior ranks exchange all 4
+    (2 * (local_h + local_w) * 4) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tree_depth_values() {
+        assert_eq!(tree_depth(1), 0);
+        assert_eq!(tree_depth(2), 1);
+        assert_eq!(tree_depth(3), 2);
+        assert_eq!(tree_depth(4), 2);
+        assert_eq!(tree_depth(16), 4);
+        assert_eq!(tree_depth(17), 5);
+    }
+
+    #[test]
+    fn costs_scale_with_depth() {
+        let hop = SimTime::from_micros(15);
+        assert!(barrier_cost(16, hop) > barrier_cost(4, hop));
+        assert_eq!(bcast_cost(16, hop).as_nanos(), 4 * 15_000);
+        assert_eq!(allreduce_cost(2, hop), hop);
+    }
+
+    #[test]
+    fn halo_volume() {
+        // 1024x256 grid on 16 ranks as 4x4: local 256x64 -> 2*(256+64)*4 B
+        assert_eq!(halo_bytes(1024, 256, 4, 4), 2560);
+    }
+}

@@ -1,0 +1,659 @@
+//! Communicator: point-to-point + virtual-time accounting.
+//!
+//! Data moves through unbounded channels (threads never deadlock on
+//! buffer space — MPI "eager" semantics); every message also carries the
+//! virtual time at which it would have arrived over the modeled fabric.
+//! A receive completes, in virtual time, at
+//! `max(local_clock, sender_send_clock + transfer_time)` — conservative
+//! PDES bookkeeping that is exact for blocking point-to-point programs.
+//! Messages above the eager threshold pay an extra rendezvous RTT, as
+//! OpenMPI's would.
+
+use crate::sim::SimTime;
+use crate::util::ids::ContainerId;
+use crate::vnet::fabric::Fabric;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+/// Reduction operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceOp {
+    Sum,
+    Max,
+    Min,
+}
+
+impl ReduceOp {
+    fn apply(&self, acc: &mut [f32], x: &[f32]) {
+        debug_assert_eq!(acc.len(), x.len());
+        match self {
+            ReduceOp::Sum => acc.iter_mut().zip(x).for_each(|(a, b)| *a += b),
+            ReduceOp::Max => acc.iter_mut().zip(x).for_each(|(a, b)| *a = a.max(*b)),
+            ReduceOp::Min => acc.iter_mut().zip(x).for_each(|(a, b)| *a = a.min(*b)),
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Packet {
+    src: usize,
+    tag: u64,
+    data: Vec<u8>,
+    arrival: SimTime,
+}
+
+/// Per-rank traffic statistics.
+#[derive(Debug, Clone, Default)]
+pub struct CommStats {
+    pub msgs_sent: u64,
+    pub bytes_sent: u64,
+    pub msgs_recv: u64,
+    pub bytes_recv: u64,
+    /// Virtual communication clock at the end of the run.
+    pub comm_time: SimTime,
+}
+
+/// One rank's endpoint.
+pub struct MpiComm {
+    pub rank: usize,
+    pub size: usize,
+    containers: Arc<Vec<ContainerId>>,
+    rx: Receiver<Packet>,
+    txs: Vec<Sender<Packet>>,
+    fabric: Arc<Mutex<Fabric>>,
+    vtime: SimTime,
+    stash: Vec<Packet>,
+    coll_seq: u64,
+    /// Per-destination affine cost cache (§Perf: the steady-state send
+    /// path never takes the fabric lock).
+    cost_cache: Vec<Option<crate::vnet::fabric::CostParams>>,
+    /// Messages larger than this pay a rendezvous round trip.
+    pub eager_threshold: usize,
+    /// Software send/recv overhead per message.
+    pub sw_overhead: SimTime,
+    pub stats: CommStats,
+}
+
+/// Internal tag space for collectives.
+const COLL_TAG_BASE: u64 = 1 << 32;
+
+impl MpiComm {
+    pub fn container(&self) -> ContainerId {
+        self.containers[self.rank]
+    }
+
+    /// Current virtual communication clock.
+    pub fn vtime(&self) -> SimTime {
+        self.vtime
+    }
+
+    /// Advance the local virtual clock (e.g. to charge compute time into
+    /// the same timeline when a bench wants a single clock).
+    pub fn advance_vtime(&mut self, dt: SimTime) {
+        self.vtime += dt;
+    }
+
+    fn transfer_cost(&mut self, dst: usize, bytes: usize) -> SimTime {
+        let params = match self.cost_cache[dst] {
+            Some(p) => p,
+            None => {
+                let fabric = self.fabric.lock().unwrap();
+                let p = fabric
+                    .cost_params(self.containers[self.rank], self.containers[dst])
+                    .expect("ranks must be placed");
+                drop(fabric);
+                self.cost_cache[dst] = Some(p);
+                p
+            }
+        };
+        let mut t = params.time(bytes as u64);
+        if bytes > self.eager_threshold {
+            // rendezvous: RTS/CTS handshake before the payload moves
+            let hs = params.time(0);
+            t = t + hs + hs;
+        }
+        t
+    }
+
+    /// Post a send (returns immediately; eager buffering).
+    pub fn send(&mut self, dst: usize, tag: u64, data: &[u8]) {
+        assert!(dst < self.size, "rank {dst} out of range");
+        self.vtime += self.sw_overhead;
+        let cost = self.transfer_cost(dst, data.len());
+        let arrival = self.vtime + cost;
+        self.stats.msgs_sent += 1;
+        self.stats.bytes_sent += data.len() as u64;
+        self.txs[dst]
+            .send(Packet { src: self.rank, tag, data: data.to_vec(), arrival })
+            .expect("receiver hung up");
+    }
+
+    /// Blocking receive matching (src, tag).
+    pub fn recv(&mut self, src: usize, tag: u64) -> Vec<u8> {
+        // check the stash first
+        if let Some(pos) = self.stash.iter().position(|p| p.src == src && p.tag == tag) {
+            let p = self.stash.remove(pos);
+            return self.complete_recv(p);
+        }
+        loop {
+            let p = self.rx.recv().expect("world dropped");
+            if p.src == src && p.tag == tag {
+                return self.complete_recv(p);
+            }
+            self.stash.push(p);
+        }
+    }
+
+    fn complete_recv(&mut self, p: Packet) -> Vec<u8> {
+        self.vtime = self.vtime.max(p.arrival) + self.sw_overhead;
+        self.stats.msgs_recv += 1;
+        self.stats.bytes_recv += p.data.len() as u64;
+        self.stats.comm_time = self.vtime;
+        p.data
+    }
+
+    /// Send and receive in one call (exchange pattern, deadlock-free).
+    pub fn sendrecv(
+        &mut self,
+        dst: usize,
+        send_tag: u64,
+        data: &[u8],
+        src: usize,
+        recv_tag: u64,
+    ) -> Vec<u8> {
+        self.send(dst, send_tag, data);
+        self.recv(src, recv_tag)
+    }
+
+    // ---- f32 helpers ----
+
+    pub fn send_f32(&mut self, dst: usize, tag: u64, data: &[f32]) {
+        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        self.send(dst, tag, &bytes);
+    }
+
+    pub fn recv_f32(&mut self, src: usize, tag: u64) -> Vec<f32> {
+        let bytes = self.recv(src, tag);
+        bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+
+    // ---- collectives (binomial trees / recursive doubling) ----
+
+    fn next_coll_tag(&mut self) -> u64 {
+        self.coll_seq += 1;
+        COLL_TAG_BASE + self.coll_seq
+    }
+
+    /// Barrier: binomial-tree reduce to rank 0, then broadcast. Also
+    /// synchronizes virtual clocks (all ranks leave at the global max).
+    pub fn barrier(&mut self) {
+        let tag = self.next_coll_tag();
+        // reduce phase
+        let mut mask = 1;
+        while mask < self.size {
+            if self.rank & mask != 0 {
+                let dst = self.rank & !mask;
+                self.send(dst, tag, &[]);
+                break;
+            } else if self.rank | mask < self.size {
+                let src = self.rank | mask;
+                self.recv(src, tag);
+            }
+            mask <<= 1;
+        }
+        // broadcast phase (binomial release from rank 0)
+        let lowest_bit =
+            if self.rank == 0 { usize::MAX } else { self.rank & self.rank.wrapping_neg() };
+        if self.rank != 0 {
+            let src = self.rank & !lowest_bit;
+            self.recv(src, tag + 1);
+        }
+        let mut m = {
+            let mut mm = 1;
+            while mm < self.size {
+                mm <<= 1;
+            }
+            mm >> 1
+        };
+        while m > 0 {
+            if m < lowest_bit {
+                let dst = self.rank | m;
+                if dst != self.rank && dst < self.size {
+                    self.send(dst, tag + 1, &[]);
+                }
+            }
+            m >>= 1;
+        }
+        self.coll_seq += 1; // consumed tag+1 too
+    }
+
+    /// Broadcast `data` from `root` (binomial tree).
+    pub fn bcast(&mut self, root: usize, data: &mut Vec<u8>) {
+        let tag = self.next_coll_tag();
+        // virtual rank with root mapped to 0
+        let vrank = (self.rank + self.size - root) % self.size;
+        // receive from parent (strip the lowest set bit)
+        let lowest_bit = if vrank == 0 { usize::MAX } else { vrank & vrank.wrapping_neg() };
+        if vrank != 0 {
+            let vsrc = vrank & !lowest_bit;
+            let src = (vsrc + root) % self.size;
+            *data = self.recv(src, tag);
+        }
+        // forward to children vrank|m for m below our lowest set bit
+        let mut m = {
+            let mut mm = 1;
+            while mm < self.size {
+                mm <<= 1;
+            }
+            mm >> 1
+        };
+        while m > 0 {
+            if m < lowest_bit {
+                let vdst = vrank | m;
+                if vdst != vrank && vdst < self.size {
+                    let dst = (vdst + root) % self.size;
+                    self.send(dst, tag, data);
+                }
+            }
+            m >>= 1;
+        }
+    }
+
+    /// Reduce element-wise into rank `root` (binomial tree). All ranks
+    /// pass their contribution; only root's buffer holds the result.
+    pub fn reduce(&mut self, root: usize, op: ReduceOp, data: &mut [f32]) {
+        let tag = self.next_coll_tag();
+        let vrank = (self.rank + self.size - root) % self.size;
+        let mut mask = 1;
+        while mask < self.size {
+            if vrank & mask != 0 {
+                let vdst = vrank & !mask;
+                let dst = (vdst + root) % self.size;
+                self.send_f32(dst, tag, data);
+                break;
+            } else if vrank | mask < self.size {
+                let vsrc = vrank | mask;
+                let src = (vsrc + root) % self.size;
+                let contrib = self.recv_f32(src, tag);
+                op.apply(data, &contrib);
+            }
+            mask <<= 1;
+        }
+    }
+
+    /// Allreduce = reduce to 0 + bcast (general) — recursive doubling for
+    /// power-of-two sizes.
+    pub fn allreduce(&mut self, op: ReduceOp, data: &mut Vec<f32>) {
+        if self.size.is_power_of_two() && self.size > 1 {
+            let tag = self.next_coll_tag();
+            let mut mask = 1;
+            while mask < self.size {
+                let partner = self.rank ^ mask;
+                let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+                let theirs = self.sendrecv(partner, tag, &bytes, partner, tag);
+                let theirs: Vec<f32> = theirs
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                op.apply(data, &theirs);
+                mask <<= 1;
+            }
+        } else {
+            self.reduce(0, op, data);
+            let mut bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+            self.bcast(0, &mut bytes);
+            *data = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+        }
+    }
+
+    /// Gather variable-size buffers at root (linear).
+    pub fn gather(&mut self, root: usize, data: &[u8]) -> Option<Vec<Vec<u8>>> {
+        let tag = self.next_coll_tag();
+        if self.rank == root {
+            let mut out: Vec<Vec<u8>> = vec![Vec::new(); self.size];
+            out[root] = data.to_vec();
+            for src in 0..self.size {
+                if src != root {
+                    out[src] = self.recv(src, tag);
+                }
+            }
+            Some(out)
+        } else {
+            self.send(root, tag, data);
+            None
+        }
+    }
+
+    /// Allgather = gather at 0 + bcast of the concatenation.
+    pub fn allgather(&mut self, data: &[u8]) -> Vec<Vec<u8>> {
+        let gathered = self.gather(0, data);
+        let mut blob: Vec<u8> = Vec::new();
+        if self.rank == 0 {
+            let parts = gathered.unwrap();
+            for p in &parts {
+                blob.extend((p.len() as u64).to_le_bytes());
+                blob.extend(p);
+            }
+        }
+        self.bcast(0, &mut blob);
+        // decode
+        let mut out = Vec::with_capacity(self.size);
+        let mut off = 0;
+        while off < blob.len() {
+            let len = u64::from_le_bytes(blob[off..off + 8].try_into().unwrap()) as usize;
+            off += 8;
+            out.push(blob[off..off + len].to_vec());
+            off += len;
+        }
+        out
+    }
+
+    /// Personalized all-to-all (pairwise exchange).
+    pub fn alltoall(&mut self, data: Vec<Vec<u8>>) -> Vec<Vec<u8>> {
+        assert_eq!(data.len(), self.size);
+        let tag = self.next_coll_tag();
+        let mut out: Vec<Vec<u8>> = vec![Vec::new(); self.size];
+        out[self.rank] = data[self.rank].clone();
+        for step in 1..self.size {
+            let partner = self.rank ^ step;
+            if partner < self.size {
+                out[partner] = self.sendrecv(partner, tag, &data[partner], partner, tag);
+            }
+        }
+        out
+    }
+}
+
+/// Builds a world of `n` connected ranks.
+pub struct MpiWorldBuilder {
+    n: usize,
+    containers: Vec<ContainerId>,
+    fabric: Option<Arc<Mutex<Fabric>>>,
+    eager_threshold: usize,
+}
+
+impl MpiWorldBuilder {
+    pub fn new(n: usize) -> Self {
+        Self {
+            n,
+            containers: (0..n as u32).map(ContainerId::new).collect(),
+            fabric: None,
+            eager_threshold: 64 * 1024,
+        }
+    }
+
+    /// rank -> container placement (defaults to rank i in container i).
+    pub fn containers(mut self, c: Vec<ContainerId>) -> Self {
+        assert_eq!(c.len(), self.n);
+        self.containers = c;
+        self
+    }
+
+    pub fn fabric(mut self, f: Arc<Mutex<Fabric>>) -> Self {
+        self.fabric = Some(f);
+        self
+    }
+
+    pub fn eager_threshold(mut self, bytes: usize) -> Self {
+        self.eager_threshold = bytes;
+        self
+    }
+
+    pub fn build(self) -> Vec<MpiComm> {
+        let fabric = self.fabric.expect("fabric required");
+        let containers = Arc::new(self.containers);
+        let mut txs = Vec::with_capacity(self.n);
+        let mut rxs = Vec::with_capacity(self.n);
+        for _ in 0..self.n {
+            let (tx, rx) = channel();
+            txs.push(tx);
+            rxs.push(rx);
+        }
+        rxs.into_iter()
+            .enumerate()
+            .map(|(rank, rx)| MpiComm {
+                rank,
+                size: self.n,
+                containers: containers.clone(),
+                rx,
+                txs: txs.clone(),
+                fabric: fabric.clone(),
+                vtime: SimTime::ZERO,
+                stash: Vec::new(),
+                coll_seq: 0,
+                cost_cache: vec![None; self.n],
+                eager_threshold: self.eager_threshold,
+                sw_overhead: SimTime::from_nanos(500),
+                stats: CommStats::default(),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::rack::Plant;
+    use crate::util::ids::MachineId;
+    use crate::vnet::bridge::BridgeMode;
+
+    /// World of n ranks in n containers spread over the 3-blade testbed.
+    fn world(n: usize, mode: BridgeMode) -> Vec<MpiComm> {
+        let plant = Plant::paper_testbed();
+        let mut fabric = Fabric::from_plant(&plant, mode);
+        for i in 0..n {
+            fabric.place(ContainerId::new(i as u32), MachineId::new((i % 3) as u32));
+        }
+        MpiWorldBuilder::new(n)
+            .fabric(Arc::new(Mutex::new(fabric)))
+            .build()
+    }
+
+    fn run_all<F, R>(comms: Vec<MpiComm>, f: F) -> Vec<R>
+    where
+        F: Fn(&mut MpiComm) -> R + Send + Sync + Clone + 'static,
+        R: Send + 'static,
+    {
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|mut c| {
+                let f = f.clone();
+                std::thread::spawn(move || f(&mut c))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn p2p_delivers_in_order_with_tags() {
+        let comms = world(2, BridgeMode::Bridge0);
+        let out = run_all(comms, |c| {
+            if c.rank == 0 {
+                c.send(1, 7, b"hello");
+                c.send(1, 8, b"world");
+                Vec::new()
+            } else {
+                // receive out of tag order to exercise the stash
+                let b = c.recv(0, 8);
+                let a = c.recv(0, 7);
+                vec![a, b]
+            }
+        });
+        assert_eq!(out[1], vec![b"hello".to_vec(), b"world".to_vec()]);
+    }
+
+    #[test]
+    fn recv_advances_virtual_clock() {
+        let comms = world(2, BridgeMode::Bridge0);
+        let out = run_all(comms, |c| {
+            if c.rank == 0 {
+                c.send_f32(1, 1, &[1.0; 1024]);
+                c.vtime().as_nanos()
+            } else {
+                c.recv_f32(0, 1);
+                c.vtime().as_nanos()
+            }
+        });
+        assert!(out[1] > out[0], "receiver clock {} <= sender {}", out[1], out[0]);
+    }
+
+    #[test]
+    fn allreduce_matches_serial_sum() {
+        for n in [2usize, 3, 4, 8] {
+            let comms = world(n, BridgeMode::Bridge0);
+            let out = run_all(comms, move |c| {
+                let mut v = vec![c.rank as f32 + 1.0, 10.0 * (c.rank as f32 + 1.0)];
+                c.allreduce(ReduceOp::Sum, &mut v);
+                v
+            });
+            let want0: f32 = (1..=n).map(|r| r as f32).sum();
+            for o in &out {
+                assert!((o[0] - want0).abs() < 1e-4, "n={n}: {o:?}");
+                assert!((o[1] - 10.0 * want0).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_max_min() {
+        let comms = world(4, BridgeMode::Bridge0);
+        let out = run_all(comms, |c| {
+            let mut mx = vec![c.rank as f32];
+            c.allreduce(ReduceOp::Max, &mut mx);
+            let mut mn = vec![c.rank as f32];
+            c.allreduce(ReduceOp::Min, &mut mn);
+            (mx[0], mn[0])
+        });
+        for &(mx, mn) in &out {
+            assert_eq!(mx, 3.0);
+            assert_eq!(mn, 0.0);
+        }
+    }
+
+    #[test]
+    fn bcast_from_every_root() {
+        for root in 0..3usize {
+            let comms = world(3, BridgeMode::Bridge0);
+            let out = run_all(comms, move |c| {
+                let mut data = if c.rank == root {
+                    vec![42u8, root as u8]
+                } else {
+                    Vec::new()
+                };
+                c.bcast(root, &mut data);
+                data
+            });
+            for o in &out {
+                assert_eq!(o, &vec![42u8, root as u8], "root={root}");
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_at_nonzero_root() {
+        let comms = world(5, BridgeMode::Bridge0);
+        let out = run_all(comms, |c| {
+            let mut v = vec![1.0f32];
+            c.reduce(2, ReduceOp::Sum, &mut v);
+            (c.rank, v[0])
+        });
+        for (rank, v) in out {
+            if rank == 2 {
+                assert_eq!(v, 5.0);
+            }
+        }
+    }
+
+    #[test]
+    fn gather_and_allgather() {
+        let comms = world(4, BridgeMode::Bridge0);
+        let out = run_all(comms, |c| {
+            let mine = vec![c.rank as u8; c.rank + 1]; // variable sizes
+            let g = c.allgather(&mine);
+            g
+        });
+        for o in &out {
+            assert_eq!(o.len(), 4);
+            for (r, part) in o.iter().enumerate() {
+                assert_eq!(part, &vec![r as u8; r + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn alltoall_exchanges_pairwise() {
+        let n = 4usize;
+        let comms = world(n, BridgeMode::Bridge0);
+        let out = run_all(comms, move |c| {
+            let data: Vec<Vec<u8>> = (0..n).map(|d| vec![(c.rank * 10 + d) as u8]).collect();
+            c.alltoall(data)
+        });
+        for (me, o) in out.iter().enumerate() {
+            for (src, part) in o.iter().enumerate() {
+                assert_eq!(part, &vec![(src * 10 + me) as u8], "me={me} src={src}");
+            }
+        }
+    }
+
+    #[test]
+    fn barrier_synchronizes_clocks() {
+        let comms = world(4, BridgeMode::Bridge0);
+        let out = run_all(comms, |c| {
+            if c.rank == 0 {
+                // rank 0 does a lot of fake compute first
+                c.advance_vtime(SimTime::from_millis(50));
+            }
+            c.barrier();
+            c.vtime().as_nanos()
+        });
+        let max = *out.iter().max().unwrap();
+        for &t in &out {
+            assert!(t >= 50_000_000, "rank left barrier before slowest entered");
+            assert!((max - t) < 5_000_000, "clocks diverged: {out:?}");
+        }
+    }
+
+    #[test]
+    fn nat_world_charges_more_comm_time() {
+        let run = |mode| {
+            let comms = world(2, mode);
+            let out = run_all(comms, |c| {
+                if c.rank == 0 {
+                    c.send_f32(1, 1, &vec![0f32; 1 << 18]);
+                    0
+                } else {
+                    c.recv_f32(0, 1);
+                    c.vtime().as_nanos()
+                }
+            });
+            out[1]
+        };
+        let nat = run(BridgeMode::Docker0);
+        let direct = run(BridgeMode::Bridge0);
+        assert!(nat > direct, "nat={nat} direct={direct}");
+    }
+
+    #[test]
+    fn stats_account_traffic() {
+        let comms = world(2, BridgeMode::Bridge0);
+        let out = run_all(comms, |c| {
+            if c.rank == 0 {
+                c.send(1, 1, &[0u8; 100]);
+                c.stats.clone()
+            } else {
+                c.recv(0, 1);
+                c.stats.clone()
+            }
+        });
+        assert_eq!(out[0].msgs_sent, 1);
+        assert_eq!(out[0].bytes_sent, 100);
+        assert_eq!(out[1].msgs_recv, 1);
+        assert_eq!(out[1].bytes_recv, 100);
+    }
+}

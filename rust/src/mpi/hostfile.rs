@@ -1,0 +1,150 @@
+//! OpenMPI-style hostfile: the artifact consul-template renders (§IV,
+//! Fig. 5) and mpirun consumes.
+//!
+//! ```text
+//! 10.10.0.2 slots=12
+//! 10.10.0.3 slots=12
+//! ```
+
+use crate::vnet::addr::Ipv4;
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq)]
+pub enum HostfileError {
+    #[error("line {0}: bad host address")]
+    BadAddr(usize),
+    #[error("line {0}: bad slots value")]
+    BadSlots(usize),
+    #[error("hostfile has no hosts")]
+    Empty,
+}
+
+/// One host line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostSlot {
+    pub addr: Ipv4,
+    pub slots: u32,
+}
+
+/// A parsed hostfile.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Hostfile {
+    pub hosts: Vec<HostSlot>,
+}
+
+impl Hostfile {
+    pub fn parse(text: &str) -> Result<Self, HostfileError> {
+        let mut hosts = Vec::new();
+        for (i, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let addr = Ipv4::parse(parts.next().unwrap())
+                .map_err(|_| HostfileError::BadAddr(i + 1))?;
+            let mut slots = 1u32;
+            for opt in parts {
+                if let Some(v) = opt.strip_prefix("slots=") {
+                    slots = v.parse().map_err(|_| HostfileError::BadSlots(i + 1))?;
+                }
+            }
+            hosts.push(HostSlot { addr, slots });
+        }
+        if hosts.is_empty() {
+            return Err(HostfileError::Empty);
+        }
+        Ok(Self { hosts })
+    }
+
+    pub fn total_slots(&self) -> u32 {
+        self.hosts.iter().map(|h| h.slots).sum()
+    }
+
+    /// Map `n_ranks` onto hosts by-slot (OpenMPI's default fill order:
+    /// fill each host's slots before moving on; wrap if oversubscribed).
+    pub fn place(&self, n_ranks: usize) -> Vec<Ipv4> {
+        let mut placement = Vec::with_capacity(n_ranks);
+        'outer: loop {
+            for h in &self.hosts {
+                for _ in 0..h.slots {
+                    if placement.len() == n_ranks {
+                        break 'outer;
+                    }
+                    placement.push(h.addr);
+                }
+            }
+            if self.hosts.is_empty() {
+                break;
+            }
+        }
+        placement
+    }
+
+    pub fn render(&self) -> String {
+        self.hosts
+            .iter()
+            .map(|h| format!("{} slots={}\n", h.addr, h.slots))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_render_roundtrip() {
+        let text = "10.10.0.2 slots=12\n10.10.0.3 slots=12\n";
+        let hf = Hostfile::parse(text).unwrap();
+        assert_eq!(hf.hosts.len(), 2);
+        assert_eq!(hf.total_slots(), 24);
+        assert_eq!(hf.render(), text);
+    }
+
+    #[test]
+    fn comments_and_default_slots() {
+        let hf = Hostfile::parse("# head\n10.10.0.2\n").unwrap();
+        assert_eq!(hf.hosts[0].slots, 1);
+    }
+
+    #[test]
+    fn errors() {
+        assert_eq!(Hostfile::parse("not-an-ip slots=2").unwrap_err(), HostfileError::BadAddr(1));
+        assert_eq!(Hostfile::parse("10.0.0.1 slots=x").unwrap_err(), HostfileError::BadSlots(1));
+        assert_eq!(Hostfile::parse("# nothing\n").unwrap_err(), HostfileError::Empty);
+    }
+
+    #[test]
+    fn placement_fills_hosts_in_order() {
+        let hf = Hostfile::parse("10.0.0.1 slots=2\n10.0.0.2 slots=2\n").unwrap();
+        let p = hf.place(3);
+        assert_eq!(
+            p,
+            vec![
+                Ipv4::parse("10.0.0.1").unwrap(),
+                Ipv4::parse("10.0.0.1").unwrap(),
+                Ipv4::parse("10.0.0.2").unwrap()
+            ]
+        );
+    }
+
+    #[test]
+    fn oversubscription_wraps() {
+        let hf = Hostfile::parse("10.0.0.1 slots=1\n10.0.0.2 slots=1\n").unwrap();
+        let p = hf.place(5);
+        assert_eq!(p.len(), 5);
+        assert_eq!(p[4], Ipv4::parse("10.0.0.1").unwrap());
+    }
+
+    /// The paper's Fig. 8: a 16-domain job on 2 containers (12 slots
+    /// each) puts 12 ranks on node02 and 4 on node03.
+    #[test]
+    fn fig8_placement() {
+        let hf = Hostfile::parse("10.10.0.2 slots=12\n10.10.0.3 slots=12\n").unwrap();
+        let p = hf.place(16);
+        let on2 = p.iter().filter(|a| a.octets()[3] == 2).count();
+        let on3 = p.iter().filter(|a| a.octets()[3] == 3).count();
+        assert_eq!((on2, on3), (12, 4));
+    }
+}

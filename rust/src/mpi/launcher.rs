@@ -1,0 +1,193 @@
+//! mpirun: place ranks onto containers per the hostfile and run the job
+//! function on one thread per rank (§IV Fig. 8's `mpirun -np 16
+//! --hostfile ...`).
+
+use super::comm::{CommStats, MpiComm, MpiWorldBuilder};
+use super::hostfile::Hostfile;
+use crate::sim::SimTime;
+use crate::util::ids::ContainerId;
+use crate::vnet::addr::Ipv4;
+use crate::vnet::fabric::Fabric;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum LaunchError {
+    #[error("hostfile address {0} maps to no container")]
+    UnknownHost(Ipv4),
+    #[error("rank {rank} panicked")]
+    RankPanic { rank: usize },
+}
+
+/// Everything mpirun needs.
+pub struct LaunchPlan {
+    pub hostfile: Hostfile,
+    pub n_ranks: usize,
+    /// container IP -> container id (from the cluster's bridge state).
+    pub ip_to_container: HashMap<Ipv4, ContainerId>,
+    pub fabric: Arc<Mutex<Fabric>>,
+    pub eager_threshold: usize,
+}
+
+/// Per-rank result.
+#[derive(Debug)]
+pub struct RankOutcome<R> {
+    pub rank: usize,
+    pub container: ContainerId,
+    pub result: R,
+    pub stats: CommStats,
+    pub wall: Duration,
+}
+
+/// Aggregate job report.
+#[derive(Debug)]
+pub struct JobReport<R> {
+    pub ranks: Vec<RankOutcome<R>>,
+    pub wall: Duration,
+}
+
+impl<R> JobReport<R> {
+    /// Slowest rank's virtual communication clock.
+    pub fn comm_time(&self) -> SimTime {
+        self.ranks
+            .iter()
+            .map(|r| r.stats.comm_time)
+            .max()
+            .unwrap_or(SimTime::ZERO)
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.ranks.iter().map(|r| r.stats.bytes_sent).sum()
+    }
+
+    pub fn total_msgs(&self) -> u64 {
+        self.ranks.iter().map(|r| r.stats.msgs_sent).sum()
+    }
+}
+
+/// Run `job` across `plan.n_ranks` ranks. The closure receives the rank's
+/// communicator; its return value is collected per rank.
+pub fn mpirun<R, F>(plan: &LaunchPlan, job: F) -> Result<JobReport<R>, LaunchError>
+where
+    R: Send + 'static,
+    F: Fn(&mut MpiComm) -> R + Send + Sync + Clone + 'static,
+{
+    // rank -> container via hostfile slot order
+    let placement_ips = plan.hostfile.place(plan.n_ranks);
+    let mut containers = Vec::with_capacity(plan.n_ranks);
+    for ip in &placement_ips {
+        let c = plan
+            .ip_to_container
+            .get(ip)
+            .copied()
+            .ok_or(LaunchError::UnknownHost(*ip))?;
+        containers.push(c);
+    }
+
+    let comms = MpiWorldBuilder::new(plan.n_ranks)
+        .containers(containers.clone())
+        .fabric(plan.fabric.clone())
+        .eager_threshold(plan.eager_threshold)
+        .build();
+
+    let started = Instant::now();
+    let handles: Vec<_> = comms
+        .into_iter()
+        .map(|mut comm| {
+            let job = job.clone();
+            std::thread::Builder::new()
+                .name(format!("mpi-rank-{}", comm.rank))
+                .spawn(move || {
+                    let t0 = Instant::now();
+                    let result = job(&mut comm);
+                    (comm.rank, comm.container(), result, comm.stats.clone(), t0.elapsed())
+                })
+                .expect("spawn rank thread")
+        })
+        .collect();
+
+    let mut ranks = Vec::with_capacity(plan.n_ranks);
+    for h in handles {
+        match h.join() {
+            Ok((rank, container, result, stats, wall)) => {
+                ranks.push(RankOutcome { rank, container, result, stats, wall })
+            }
+            Err(_) => return Err(LaunchError::RankPanic { rank: usize::MAX }),
+        }
+    }
+    ranks.sort_by_key(|r| r.rank);
+    Ok(JobReport { ranks, wall: started.elapsed() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::rack::Plant;
+    use crate::mpi::comm::ReduceOp;
+    use crate::util::ids::MachineId;
+    use crate::vnet::bridge::BridgeMode;
+
+    fn plan(n_ranks: usize) -> LaunchPlan {
+        // the paper's 2-container hostfile
+        let hostfile = Hostfile::parse("10.10.0.2 slots=12\n10.10.0.3 slots=12\n").unwrap();
+        let plant = Plant::paper_testbed();
+        let mut fabric = Fabric::from_plant(&plant, BridgeMode::Bridge0);
+        let c2 = ContainerId::new(0);
+        let c3 = ContainerId::new(1);
+        fabric.place(c2, MachineId::new(1));
+        fabric.place(c3, MachineId::new(2));
+        let mut ip_to_container = HashMap::new();
+        ip_to_container.insert(Ipv4::parse("10.10.0.2").unwrap(), c2);
+        ip_to_container.insert(Ipv4::parse("10.10.0.3").unwrap(), c3);
+        LaunchPlan {
+            hostfile,
+            n_ranks,
+            ip_to_container,
+            fabric: Arc::new(Mutex::new(fabric)),
+            eager_threshold: 64 * 1024,
+        }
+    }
+
+    #[test]
+    fn sixteen_rank_job_runs_and_reduces() {
+        // Fig. 8's shape: 16 domains on 2 containers.
+        let p = plan(16);
+        let report = mpirun(&p, |c| {
+            let mut v = vec![1.0f32];
+            c.allreduce(ReduceOp::Sum, &mut v);
+            v[0]
+        })
+        .unwrap();
+        assert_eq!(report.ranks.len(), 16);
+        for r in &report.ranks {
+            assert_eq!(r.result, 16.0);
+        }
+        // 12 ranks on the first container, 4 on the second
+        let on_c0 = report.ranks.iter().filter(|r| r.container == ContainerId::new(0)).count();
+        assert_eq!(on_c0, 12);
+        assert!(report.comm_time() > SimTime::ZERO);
+        assert!(report.total_msgs() > 0);
+    }
+
+    #[test]
+    fn unknown_host_fails_cleanly() {
+        let mut p = plan(2);
+        p.ip_to_container.clear();
+        assert!(matches!(
+            mpirun(&p, |_c| 0).unwrap_err(),
+            LaunchError::UnknownHost(_)
+        ));
+    }
+
+    #[test]
+    fn rank_results_are_ordered() {
+        let p = plan(8);
+        let report = mpirun(&p, |c| c.rank * 10).unwrap();
+        for (i, r) in report.ranks.iter().enumerate() {
+            assert_eq!(r.rank, i);
+            assert_eq!(r.result, i * 10);
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! MPI runtime over the virtual fabric.
+//!
+//! Ranks are real OS threads exchanging real data through channels; every
+//! message additionally *charges virtual communication time* against the
+//! fabric model (NIC, bridge mode, NAT), so a job reports both its real
+//! compute wall-clock and the interconnect time the paper's testbed would
+//! have spent. Eager/rendezvous protocol switch, tree/ring collectives.
+
+pub mod collectives;
+pub mod comm;
+pub mod hostfile;
+pub mod launcher;
+
+pub use comm::{CommStats, MpiComm, MpiWorldBuilder, ReduceOp};
+pub use hostfile::{HostSlot, Hostfile};
+pub use launcher::{mpirun, LaunchPlan, RankOutcome};

@@ -1,0 +1,350 @@
+//! HLO-text loading, compilation cache and typed entry points.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// What an artifact computes (from the manifest's `kind` column).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// One Jacobi step on a (n+2, n+2) padded grid -> ((n, n), scalar).
+    JacobiStep,
+    /// K fused steps on a padded grid -> (padded, scalar).
+    JacobiSweep,
+    /// (m, k) x (k, n) -> (m, n).
+    Gemm,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "jacobi_step" => Self::JacobiStep,
+            "jacobi_sweep" => Self::JacobiSweep,
+            "gemm" => Self::Gemm,
+            other => bail!("unknown artifact kind {other}"),
+        })
+    }
+}
+
+/// One manifest row.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub name: String,
+    pub file: String,
+    pub kind: ArtifactKind,
+    pub dims: Vec<usize>,
+}
+
+/// Thread-confined PJRT runtime with a compile cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: HashMap<String, Artifact>,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// Compilations performed (cache-miss counter).
+    pub compiles: std::cell::Cell<u64>,
+    /// Executions performed.
+    pub executions: std::cell::Cell<u64>,
+}
+
+impl Runtime {
+    /// Load the manifest in `dir` (produced by `make artifacts`).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts`"))?;
+        let mut manifest = HashMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let name = parts.next().ok_or_else(|| anyhow!("bad manifest line: {line}"))?;
+            let file = parts.next().ok_or_else(|| anyhow!("bad manifest line: {line}"))?;
+            let kind = ArtifactKind::parse(
+                parts.next().ok_or_else(|| anyhow!("bad manifest line: {line}"))?,
+            )?;
+            let dims: Vec<usize> = parts.map(|d| d.parse()).collect::<Result<_, _>>()?;
+            manifest.insert(
+                name.to_string(),
+                Artifact { name: name.to_string(), file: file.to_string(), kind, dims },
+            );
+        }
+        // hush the C++ client's INFO chatter (TfrtCpuClient created/…)
+        if std::env::var_os("TF_CPP_MIN_LOG_LEVEL").is_none() {
+            std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
+        }
+        // One Runtime per MPI rank thread: multi-threaded Eigen inside
+        // each client oversubscribes the host (pools of busy-spinning
+        // workers per rank) for tiles this small. Single-thread the
+        // intra-op execution — §Perf in EXPERIMENTS.md quantifies the win.
+        if std::env::var_os("XLA_FLAGS").is_none() {
+            std::env::set_var("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false");
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Self {
+            client,
+            dir,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            compiles: std::cell::Cell::new(0),
+            executions: std::cell::Cell::new(0),
+        })
+    }
+
+    /// Default artifacts directory (repo-root/artifacts or $VHPC_ARTIFACTS).
+    pub fn default_dir() -> PathBuf {
+        if let Ok(d) = std::env::var("VHPC_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&Artifact> {
+        self.manifest.get(name)
+    }
+
+    pub fn artifacts(&self) -> impl Iterator<Item = &Artifact> {
+        self.manifest.values()
+    }
+
+    /// Pick the jacobi_step artifact for an n×n local domain.
+    pub fn jacobi_step_name(&self, n: usize) -> Option<String> {
+        let name = format!("jacobi_step_{n}");
+        self.manifest.contains_key(&name).then_some(name)
+    }
+
+    /// Compile (or fetch from cache) an artifact.
+    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let art = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("no artifact named {name}"))?;
+        let path = self.dir.join(&art.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        self.compiles.set(self.compiles.get() + 1);
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    fn literal_grid(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+        if data.len() != rows * cols {
+            bail!("grid size mismatch: {} != {rows}x{cols}", data.len());
+        }
+        xla::Literal::vec1(data)
+            .reshape(&[rows as i64, cols as i64])
+            .map_err(|e| anyhow!("reshape: {e:?}"))
+    }
+
+    /// One Jacobi step: padded (n+2)² grid in, (interior n², residual²) out.
+    pub fn jacobi_step(&self, name: &str, padded: &[f32]) -> Result<(Vec<f32>, f32)> {
+        let art = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("no artifact {name}"))?;
+        anyhow::ensure!(art.kind == ArtifactKind::JacobiStep, "{name} is not jacobi_step");
+        let n = art.dims[0];
+        let exe = self.executable(name)?;
+        let input = Self::literal_grid(padded, n + 2, n + 2)?;
+        self.executions.set(self.executions.get() + 1);
+        let result = exe
+            .execute::<xla::Literal>(&[input])
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        let (new, res) = result.to_tuple2().map_err(|e| anyhow!("tuple2: {e:?}"))?;
+        let new_v = new.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        let res_v = res
+            .get_first_element::<f32>()
+            .map_err(|e| anyhow!("residual: {e:?}"))?;
+        Ok((new_v, res_v))
+    }
+
+    /// K fused Jacobi steps: padded grid in -> (padded grid, residual²).
+    pub fn jacobi_sweep(&self, name: &str, padded: &[f32]) -> Result<(Vec<f32>, f32)> {
+        let art = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("no artifact {name}"))?;
+        anyhow::ensure!(art.kind == ArtifactKind::JacobiSweep, "{name} is not jacobi_sweep");
+        let n = art.dims[0];
+        let exe = self.executable(name)?;
+        let input = Self::literal_grid(padded, n + 2, n + 2)?;
+        self.executions.set(self.executions.get() + 1);
+        let result = exe
+            .execute::<xla::Literal>(&[input])
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        let (grid, res) = result.to_tuple2().map_err(|e| anyhow!("tuple2: {e:?}"))?;
+        Ok((
+            grid.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?,
+            res.get_first_element::<f32>()
+                .map_err(|e| anyhow!("residual: {e:?}"))?,
+        ))
+    }
+
+    /// GEMM: (n,n) x (n,n) -> (n,n).
+    pub fn gemm(&self, name: &str, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        let art = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("no artifact {name}"))?;
+        anyhow::ensure!(art.kind == ArtifactKind::Gemm, "{name} is not gemm");
+        let (m, k, n) = (art.dims[0], art.dims[1], art.dims[2]);
+        let exe = self.executable(name)?;
+        let la = Self::literal_grid(a, m, k)?;
+        let lb = Self::literal_grid(b, k, n)?;
+        self.executions.set(self.executions.get() + 1);
+        let result = exe
+            .execute::<xla::Literal>(&[la, lb])
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        let out = result.to_tuple1().map_err(|e| anyhow!("tuple1: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = Runtime::default_dir();
+        if !dir.join("manifest.txt").exists() {
+            eprintln!("skipping: no artifacts at {dir:?} (run `make artifacts`)");
+            return None;
+        }
+        Some(Runtime::load(dir).unwrap())
+    }
+
+    /// Serial reference Jacobi step for validation.
+    fn ref_jacobi(padded: &[f32], n: usize) -> (Vec<f32>, f32) {
+        let w = n + 2;
+        let mut out = vec![0f32; n * n];
+        let mut res = 0f64;
+        for i in 0..n {
+            for j in 0..n {
+                let c = padded[(i + 1) * w + (j + 1)];
+                let v = 0.25
+                    * (padded[i * w + (j + 1)]
+                        + padded[(i + 2) * w + (j + 1)]
+                        + padded[(i + 1) * w + j]
+                        + padded[(i + 1) * w + (j + 2)]);
+                out[i * n + j] = v;
+                res += ((v - c) as f64) * ((v - c) as f64);
+            }
+        }
+        (out, res as f32)
+    }
+
+    #[test]
+    fn manifest_loads_and_lists() {
+        let Some(rt) = runtime() else { return };
+        assert!(rt.artifact("jacobi_step_64").is_some());
+        assert!(rt.artifact("gemm_128").is_some());
+        assert_eq!(rt.jacobi_step_name(64).as_deref(), Some("jacobi_step_64"));
+        assert_eq!(rt.jacobi_step_name(63), None);
+    }
+
+    #[test]
+    fn jacobi_step_matches_serial_reference() {
+        let Some(rt) = runtime() else { return };
+        let n = 32;
+        let w = n + 2;
+        let padded: Vec<f32> = (0..w * w).map(|i| ((i * 37) % 101) as f32 * 0.1).collect();
+        let (got, res) = rt.jacobi_step("jacobi_step_32", &padded).unwrap();
+        let (want, res_want) = ref_jacobi(&padded, n);
+        assert_eq!(got.len(), n * n);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-4, "{g} vs {w}");
+        }
+        assert!((res - res_want).abs() / res_want.max(1.0) < 1e-3);
+    }
+
+    #[test]
+    fn executable_cache_hits() {
+        let Some(rt) = runtime() else { return };
+        let padded = vec![1.0f32; 34 * 34];
+        rt.jacobi_step("jacobi_step_32", &padded).unwrap();
+        rt.jacobi_step("jacobi_step_32", &padded).unwrap();
+        rt.jacobi_step("jacobi_step_32", &padded).unwrap();
+        assert_eq!(rt.compiles.get(), 1, "recompiled despite cache");
+        assert_eq!(rt.executions.get(), 3);
+    }
+
+    #[test]
+    fn gemm_matches_naive() {
+        let Some(rt) = runtime() else { return };
+        let n = 128;
+        let a: Vec<f32> = (0..n * n).map(|i| ((i % 7) as f32) - 3.0).collect();
+        let b: Vec<f32> = (0..n * n).map(|i| ((i % 5) as f32) * 0.5).collect();
+        let got = rt.gemm("gemm_128", &a, &b).unwrap();
+        // spot-check a few entries against the naive triple loop
+        for &(i, j) in &[(0usize, 0usize), (17, 93), (127, 127), (64, 1)] {
+            let mut want = 0f32;
+            for k in 0..n {
+                want += a[i * n + k] * b[k * n + j];
+            }
+            let g = got[i * n + j];
+            assert!((g - want).abs() < 1e-2 * want.abs().max(1.0), "({i},{j}): {g} vs {want}");
+        }
+    }
+
+    #[test]
+    fn sweep_reduces_residual() {
+        let Some(rt) = runtime() else { return };
+        let n = 128;
+        let w = n + 2;
+        let mut padded = vec![0f32; w * w];
+        for j in 0..w {
+            padded[j] = 1.0; // hot north boundary
+        }
+        let (after, res) = rt.jacobi_sweep("jacobi_sweep_128_k100", &padded).unwrap();
+        assert_eq!(after.len(), w * w);
+        // boundary preserved
+        assert_eq!(after[0], 1.0);
+        assert_eq!(after[w - 1], 1.0);
+        // interior warmed up
+        assert!(after[w + 1] > 0.0);
+        assert!(res > 0.0);
+    }
+
+    #[test]
+    fn multiple_runtimes_across_threads() {
+        // Each MPI rank thread builds its own Runtime — prove that works.
+        let Some(_) = runtime() else { return };
+        let dir = Runtime::default_dir();
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let dir = dir.clone();
+                std::thread::spawn(move || {
+                    let rt = Runtime::load(dir).unwrap();
+                    let padded = vec![1.0f32; 34 * 34];
+                    let (out, _res) = rt.jacobi_step("jacobi_step_32", &padded).unwrap();
+                    assert!(out.iter().all(|&v| (v - 1.0).abs() < 1e-6));
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! The compile path (`make artifacts`) lowers the L2 JAX functions —
+//! which call the L1 Pallas kernels — to HLO text; this module is the
+//! only place the Rust side touches XLA. `Runtime` is thread-confined
+//! (the `xla` crate wraps `Rc` internals): each MPI rank thread builds
+//! its own, compiles lazily and caches per artifact name.
+
+pub mod client;
+
+pub use client::{Artifact, ArtifactKind, Runtime};

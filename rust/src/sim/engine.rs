@@ -1,0 +1,240 @@
+//! Event engine: a time-ordered queue of closures over a state `S`.
+//!
+//! Events fire in `(time, insertion-seq)` order, so same-timestamp events
+//! run FIFO and runs are fully deterministic. Handlers receive
+//! `(&mut S, &mut Engine<S>)` and may schedule further events.
+
+use super::time::SimTime;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+type Handler<S> = Box<dyn FnOnce(&mut S, &mut Engine<S>)>;
+
+struct Entry<S> {
+    at: SimTime,
+    seq: u64,
+    handler: Handler<S>,
+}
+
+impl<S> PartialEq for Entry<S> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<S> Eq for Entry<S> {}
+impl<S> PartialOrd for Entry<S> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<S> Ord for Entry<S> {
+    // Reverse order: BinaryHeap is a max-heap, we want earliest first.
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .at
+            .cmp(&self.at)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Discrete-event engine over state `S`.
+pub struct Engine<S> {
+    now: SimTime,
+    seq: u64,
+    fired: u64,
+    queue: BinaryHeap<Entry<S>>,
+}
+
+impl<S> Default for Engine<S> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<S> Engine<S> {
+    pub fn new() -> Self {
+        Self { now: SimTime::ZERO, seq: 0, fired: 0, queue: BinaryHeap::new() }
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Number of events fired so far.
+    pub fn fired(&self) -> u64 {
+        self.fired
+    }
+
+    /// Pending event count.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Schedule at an absolute time (clamped to now if in the past).
+    pub fn schedule_at<F>(&mut self, at: SimTime, f: F)
+    where
+        F: FnOnce(&mut S, &mut Engine<S>) + 'static,
+    {
+        let at = at.max(self.now);
+        let seq = self.seq;
+        self.seq += 1;
+        self.queue.push(Entry { at, seq, handler: Box::new(f) });
+    }
+
+    /// Schedule after a delay from now.
+    pub fn schedule_after<F>(&mut self, delay: SimTime, f: F)
+    where
+        F: FnOnce(&mut S, &mut Engine<S>) + 'static,
+    {
+        self.schedule_at(self.now + delay, f);
+    }
+
+    /// Fire the next event. Returns false when the queue is empty.
+    pub fn step(&mut self, state: &mut S) -> bool {
+        match self.queue.pop() {
+            Some(Entry { at, handler, .. }) => {
+                debug_assert!(at >= self.now, "time went backwards");
+                self.now = at;
+                self.fired += 1;
+                handler(state, self);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Run until the queue drains or `until` is reached. Events scheduled
+    /// at exactly `until` still fire. Returns the number fired.
+    pub fn run_until(&mut self, state: &mut S, until: SimTime) -> u64 {
+        let mut n = 0;
+        while let Some(e) = self.queue.peek() {
+            if e.at > until {
+                break;
+            }
+            self.step(state);
+            n += 1;
+        }
+        // Advance the clock even if nothing fired at `until`.
+        self.now = self.now.max(until);
+        n
+    }
+
+    /// Run until the queue is fully drained. Returns events fired.
+    pub fn run_to_completion(&mut self, state: &mut S) -> u64 {
+        let mut n = 0;
+        while self.step(state) {
+            n += 1;
+        }
+        n
+    }
+
+    /// Run until `pred(state)` holds (checked after each event) or the
+    /// queue drains. Returns true if the predicate was satisfied.
+    pub fn run_until_pred(
+        &mut self,
+        state: &mut S,
+        mut pred: impl FnMut(&S) -> bool,
+    ) -> bool {
+        if pred(state) {
+            return true;
+        }
+        while self.step(state) {
+            if pred(state) {
+                return true;
+            }
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fires_in_time_order() {
+        let mut eng: Engine<Vec<u32>> = Engine::new();
+        let mut log = Vec::new();
+        eng.schedule_at(SimTime::from_millis(30), |s: &mut Vec<u32>, _| s.push(3));
+        eng.schedule_at(SimTime::from_millis(10), |s, _| s.push(1));
+        eng.schedule_at(SimTime::from_millis(20), |s, _| s.push(2));
+        eng.run_to_completion(&mut log);
+        assert_eq!(log, vec![1, 2, 3]);
+        assert_eq!(eng.now(), SimTime::from_millis(30));
+    }
+
+    #[test]
+    fn same_time_is_fifo() {
+        let mut eng: Engine<Vec<u32>> = Engine::new();
+        let mut log = Vec::new();
+        for i in 0..10 {
+            eng.schedule_at(SimTime::from_millis(5), move |s: &mut Vec<u32>, _| {
+                s.push(i)
+            });
+        }
+        eng.run_to_completion(&mut log);
+        assert_eq!(log, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn handlers_can_reschedule() {
+        struct St {
+            count: u32,
+        }
+        fn tick(s: &mut St, eng: &mut Engine<St>) {
+            s.count += 1;
+            if s.count < 5 {
+                eng.schedule_after(SimTime::from_secs(1), tick);
+            }
+        }
+        let mut eng = Engine::new();
+        let mut st = St { count: 0 };
+        eng.schedule_after(SimTime::from_secs(1), tick);
+        eng.run_to_completion(&mut st);
+        assert_eq!(st.count, 5);
+        assert_eq!(eng.now(), SimTime::from_secs(5));
+    }
+
+    #[test]
+    fn run_until_stops_and_advances_clock() {
+        let mut eng: Engine<u32> = Engine::new();
+        let mut s = 0u32;
+        eng.schedule_at(SimTime::from_secs(1), |s: &mut u32, _| *s += 1);
+        eng.schedule_at(SimTime::from_secs(10), |s: &mut u32, _| *s += 1);
+        let fired = eng.run_until(&mut s, SimTime::from_secs(5));
+        assert_eq!(fired, 1);
+        assert_eq!(s, 1);
+        assert_eq!(eng.now(), SimTime::from_secs(5));
+        assert_eq!(eng.pending(), 1);
+    }
+
+    #[test]
+    fn past_schedules_clamp_to_now() {
+        let mut eng: Engine<Vec<u64>> = Engine::new();
+        let mut log = Vec::new();
+        eng.schedule_at(SimTime::from_secs(2), |s: &mut Vec<u64>, eng| {
+            // scheduled "in the past" — must fire at now, not before
+            eng.schedule_at(SimTime::from_secs(1), |s2: &mut Vec<u64>, e2| {
+                s2.push(e2.now().as_nanos());
+            });
+            s.push(eng.now().as_nanos());
+        });
+        eng.run_to_completion(&mut log);
+        assert_eq!(log.len(), 2);
+        assert_eq!(log[0], log[1]);
+    }
+
+    #[test]
+    fn run_until_pred_short_circuits() {
+        let mut eng: Engine<u32> = Engine::new();
+        let mut s = 0u32;
+        for i in 1..=10u64 {
+            eng.schedule_at(SimTime::from_secs(i), |s: &mut u32, _| *s += 1);
+        }
+        let ok = eng.run_until_pred(&mut s, |s| *s == 3);
+        assert!(ok);
+        assert_eq!(s, 3);
+        assert_eq!(eng.now(), SimTime::from_secs(3));
+    }
+}

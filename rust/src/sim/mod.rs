@@ -1,0 +1,11 @@
+//! Discrete-event simulation core: virtual time + an event engine.
+//!
+//! The cluster's control plane (machine boot, image pulls, gossip, raft,
+//! autoscaling) runs entirely on virtual time, so protocol benches are
+//! deterministic and independent of host speed. See DESIGN.md §Time model.
+
+pub mod engine;
+pub mod time;
+
+pub use engine::Engine;
+pub use time::SimTime;

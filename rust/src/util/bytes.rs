@@ -1,0 +1,69 @@
+//! Byte-size formatting and parsing ("146GB", "1.5MiB").
+
+/// Format a byte count with binary units, e.g. `65536 -> "64.0 KiB"`.
+pub fn format_bytes(n: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    if n < 1024 {
+        return format!("{n} B");
+    }
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    format!("{v:.1} {}", UNITS[u])
+}
+
+/// Parse a human size: `"64"`, `"64K"`, `"1.5MiB"`, `"10GB"` (case
+/// insensitive; decimal and binary suffixes both map to binary multiples,
+/// which is what the container world colloquially means).
+pub fn parse_bytes(s: &str) -> Option<u64> {
+    let s = s.trim();
+    let idx = s
+        .find(|c: char| !(c.is_ascii_digit() || c == '.'))
+        .unwrap_or(s.len());
+    let (num, suffix) = s.split_at(idx);
+    let value: f64 = num.parse().ok()?;
+    let mult: u64 = match suffix.trim().to_ascii_lowercase().as_str() {
+        "" | "b" => 1,
+        "k" | "kb" | "kib" => 1 << 10,
+        "m" | "mb" | "mib" => 1 << 20,
+        "g" | "gb" | "gib" => 1 << 30,
+        "t" | "tb" | "tib" => 1u64 << 40,
+        _ => return None,
+    };
+    Some((value * mult as f64) as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formats_units() {
+        assert_eq!(format_bytes(0), "0 B");
+        assert_eq!(format_bytes(512), "512 B");
+        assert_eq!(format_bytes(65536), "64.0 KiB");
+        assert_eq!(format_bytes(64 * 1 << 30), "64.0 GiB");
+    }
+
+    #[test]
+    fn parses_suffixes() {
+        assert_eq!(parse_bytes("64"), Some(64));
+        assert_eq!(parse_bytes("64K"), Some(65536));
+        assert_eq!(parse_bytes("1.5MiB"), Some((1.5 * 1048576.0) as u64));
+        assert_eq!(parse_bytes("10GB"), Some(10 << 30));
+        assert_eq!(parse_bytes("bogus"), None);
+        assert_eq!(parse_bytes("10X"), None);
+    }
+
+    #[test]
+    fn round_trip_whole_units() {
+        for n in [1u64 << 10, 1 << 20, 1 << 30] {
+            let s = format_bytes(n);
+            let num: f64 = s.split(' ').next().unwrap().parse().unwrap();
+            assert_eq!(num, 1.0, "{s}");
+        }
+    }
+}

@@ -1,0 +1,99 @@
+//! Typed integer ids. Newtypes prevent cross-wiring a `MachineId` into an
+//! API expecting a `ContainerId` — the simulator routes everything by id.
+
+/// Declare a `u32` id newtype with `new/raw/Display`.
+#[macro_export]
+macro_rules! typed_id {
+    ($(#[$doc:meta])* $name:ident, $prefix:expr) => {
+        $(#[$doc])*
+        #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+        pub struct $name(pub u32);
+
+        impl $name {
+            pub fn new(v: u32) -> Self {
+                Self(v)
+            }
+            pub fn raw(self) -> u32 {
+                self.0
+            }
+        }
+
+        impl std::fmt::Display for $name {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                write!(f, "{}{}", $prefix, self.0)
+            }
+        }
+    };
+}
+
+typed_id!(
+    /// A physical machine (blade) in the simulated datacenter.
+    MachineId,
+    "m"
+);
+typed_id!(
+    /// A container instance managed by a dockyard engine.
+    ContainerId,
+    "c"
+);
+typed_id!(
+    /// A consul agent (one per container or server).
+    AgentId,
+    "a"
+);
+typed_id!(
+    /// An MPI job submitted to the head node.
+    JobId,
+    "job"
+);
+typed_id!(
+    /// A network interface (veth end, bridge port, NIC).
+    IfaceId,
+    "if"
+);
+
+/// Monotonic id allocator.
+#[derive(Debug, Default, Clone)]
+pub struct IdGen {
+    next: u32,
+}
+
+impl IdGen {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    pub fn next(&mut self) -> u32 {
+        let v = self.next;
+        self.next += 1;
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_uses_prefix() {
+        assert_eq!(MachineId::new(3).to_string(), "m3");
+        assert_eq!(ContainerId::new(0).to_string(), "c0");
+        assert_eq!(JobId::new(12).to_string(), "job12");
+    }
+
+    #[test]
+    fn idgen_is_monotonic() {
+        let mut g = IdGen::new();
+        assert_eq!(g.next(), 0);
+        assert_eq!(g.next(), 1);
+        assert_eq!(g.next(), 2);
+    }
+
+    #[test]
+    fn ids_are_ordered_and_hashable() {
+        use std::collections::HashSet;
+        let mut s = HashSet::new();
+        s.insert(MachineId::new(1));
+        assert!(s.contains(&MachineId::new(1)));
+        assert!(MachineId::new(1) < MachineId::new(2));
+    }
+}

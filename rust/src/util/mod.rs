@@ -1,0 +1,8 @@
+//! Foundational utilities: deterministic RNG, typed ids, size formatting.
+
+pub mod bytes;
+pub mod ids;
+pub mod rng;
+
+pub use bytes::{format_bytes, parse_bytes};
+pub use rng::Rng;

@@ -1,0 +1,171 @@
+//! IPv4 addresses, CIDR subnets, MACs — enough for the simulator.
+
+use std::fmt;
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq)]
+pub enum AddrError {
+    #[error("invalid IPv4 literal: {0}")]
+    BadIp(String),
+    #[error("invalid CIDR literal: {0}")]
+    BadCidr(String),
+}
+
+/// An IPv4 address as a u32.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Ipv4(pub u32);
+
+impl Ipv4 {
+    pub fn new(a: u8, b: u8, c: u8, d: u8) -> Self {
+        Self(u32::from_be_bytes([a, b, c, d]))
+    }
+
+    pub fn parse(s: &str) -> Result<Self, AddrError> {
+        let parts: Vec<&str> = s.split('.').collect();
+        if parts.len() != 4 {
+            return Err(AddrError::BadIp(s.to_string()));
+        }
+        let mut o = [0u8; 4];
+        for (i, p) in parts.iter().enumerate() {
+            o[i] = p.parse().map_err(|_| AddrError::BadIp(s.to_string()))?;
+        }
+        Ok(Self(u32::from_be_bytes(o)))
+    }
+
+    pub fn octets(self) -> [u8; 4] {
+        self.0.to_be_bytes()
+    }
+}
+
+impl fmt::Display for Ipv4 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let o = self.octets();
+        write!(f, "{}.{}.{}.{}", o[0], o[1], o[2], o[3])
+    }
+}
+
+/// A CIDR subnet, e.g. 172.17.0.0/16.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Cidr {
+    pub base: Ipv4,
+    pub prefix: u8,
+}
+
+impl Cidr {
+    pub fn new(base: Ipv4, prefix: u8) -> Self {
+        assert!(prefix <= 32);
+        // normalize the base to the network address
+        let mask = Self::mask_of(prefix);
+        Self { base: Ipv4(base.0 & mask), prefix }
+    }
+
+    pub fn parse(s: &str) -> Result<Self, AddrError> {
+        let (ip, pre) = s.split_once('/').ok_or_else(|| AddrError::BadCidr(s.to_string()))?;
+        let base = Ipv4::parse(ip)?;
+        let prefix: u8 = pre.parse().map_err(|_| AddrError::BadCidr(s.to_string()))?;
+        if prefix > 32 {
+            return Err(AddrError::BadCidr(s.to_string()));
+        }
+        Ok(Self::new(base, prefix))
+    }
+
+    fn mask_of(prefix: u8) -> u32 {
+        if prefix == 0 {
+            0
+        } else {
+            u32::MAX << (32 - prefix)
+        }
+    }
+
+    pub fn mask(&self) -> u32 {
+        Self::mask_of(self.prefix)
+    }
+
+    pub fn contains(&self, ip: Ipv4) -> bool {
+        (ip.0 & self.mask()) == self.base.0
+    }
+
+    /// Number of *usable host* addresses (network/broadcast excluded for
+    /// prefixes < 31).
+    pub fn host_count(&self) -> u64 {
+        let total = 1u64 << (32 - self.prefix as u64);
+        if self.prefix >= 31 {
+            total
+        } else {
+            total - 2
+        }
+    }
+
+    /// The i-th host address (1-based within the subnet).
+    pub fn host(&self, i: u32) -> Ipv4 {
+        Ipv4(self.base.0 + i)
+    }
+}
+
+impl fmt::Display for Cidr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}/{}", self.base, self.prefix)
+    }
+}
+
+/// A MAC address (simulated: derived from an interface counter).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Mac(pub u64);
+
+impl Mac {
+    /// Docker-style locally administered MAC: 02:42:xx:xx:xx:xx.
+    pub fn from_index(i: u32) -> Self {
+        Self(0x0242_0000_0000 | i as u64)
+    }
+}
+
+impl fmt::Display for Mac {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let b = self.0.to_be_bytes();
+        write!(
+            f,
+            "{:02x}:{:02x}:{:02x}:{:02x}:{:02x}:{:02x}",
+            b[2], b[3], b[4], b[5], b[6], b[7]
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ip_parse_and_display() {
+        let ip = Ipv4::parse("172.17.0.2").unwrap();
+        assert_eq!(ip.to_string(), "172.17.0.2");
+        assert_eq!(ip, Ipv4::new(172, 17, 0, 2));
+        assert!(Ipv4::parse("1.2.3").is_err());
+        assert!(Ipv4::parse("1.2.3.999").is_err());
+    }
+
+    #[test]
+    fn cidr_contains() {
+        let net = Cidr::parse("172.17.0.0/16").unwrap();
+        assert!(net.contains(Ipv4::parse("172.17.255.1").unwrap()));
+        assert!(!net.contains(Ipv4::parse("172.18.0.1").unwrap()));
+        assert_eq!(net.to_string(), "172.17.0.0/16");
+    }
+
+    #[test]
+    fn cidr_normalizes_base() {
+        let net = Cidr::new(Ipv4::new(10, 0, 5, 77), 16);
+        assert_eq!(net.base, Ipv4::new(10, 0, 0, 0));
+    }
+
+    #[test]
+    fn host_count() {
+        assert_eq!(Cidr::parse("10.0.0.0/24").unwrap().host_count(), 254);
+        assert_eq!(Cidr::parse("10.0.0.0/30").unwrap().host_count(), 2);
+        assert_eq!(Cidr::parse("10.0.0.0/31").unwrap().host_count(), 2);
+    }
+
+    #[test]
+    fn mac_format() {
+        assert_eq!(Mac::from_index(1).to_string(), "02:42:00:00:00:01");
+    }
+}

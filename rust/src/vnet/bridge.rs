@@ -1,0 +1,195 @@
+//! Software bridges: stock `docker0` (NAT'd, host-local subnet) vs the
+//! paper's `bridge0` (bound to the physical interface, cluster subnet).
+
+use super::addr::{Cidr, Ipv4, Mac};
+use super::ipam::{Ipam, IpamError};
+use crate::util::ids::{ContainerId, IfaceId};
+use std::collections::HashMap;
+
+/// How a bridge attaches containers to the world (§III-B, Fig. 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BridgeMode {
+    /// Default Docker bridge: per-host 172.17/16, NAT for egress,
+    /// port-forwarding for ingress. Cross-host container traffic pays
+    /// two NAT traversals and cannot address containers directly.
+    Docker0,
+    /// Customized bridge bound to a physical ethernet interface;
+    /// containers join the host subnet and are directly addressable —
+    /// the paper's design.
+    Bridge0,
+    /// Containers share the host network namespace (upper bound).
+    Host,
+}
+
+impl BridgeMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BridgeMode::Docker0 => "docker0",
+            BridgeMode::Bridge0 => "bridge0",
+            BridgeMode::Host => "host",
+        }
+    }
+
+    /// Default subnet convention for the mode on host index `h`.
+    pub fn default_subnet(&self, h: u32) -> Cidr {
+        match self {
+            // every host reuses the same private range — that's the bug
+            // the paper works around
+            BridgeMode::Docker0 => Cidr::parse("172.17.0.0/16").unwrap(),
+            // one flat, directly routable cluster network (10.10/16),
+            // sharded as a disjoint /24 slice per host so the per-host
+            // allocators never collide — the deployment discipline the
+            // paper's custom bridge requires
+            BridgeMode::Bridge0 => Cidr::new(Ipv4::new(10, 10, h as u8, 0), 24),
+            BridgeMode::Host => Cidr::new(Ipv4::new(192, 168, h as u8, 0), 24),
+        }
+    }
+
+    /// Does cross-host traffic require NAT?
+    pub fn needs_nat(&self) -> bool {
+        matches!(self, BridgeMode::Docker0)
+    }
+
+    /// Are container IPs routable from other hosts?
+    pub fn directly_routable(&self) -> bool {
+        !self.needs_nat()
+    }
+}
+
+/// A veth endpoint attached to a bridge.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Port {
+    pub iface: IfaceId,
+    pub mac: Mac,
+    pub ip: Ipv4,
+    pub owner: ContainerId,
+}
+
+/// A software bridge instance on one machine.
+#[derive(Debug, Clone)]
+pub struct Bridge {
+    pub name: String,
+    pub mode: BridgeMode,
+    pub ipam: Ipam,
+    ports: HashMap<ContainerId, Port>,
+    next_iface: u32,
+    /// Per-frame forwarding cost in nanoseconds (learned-table lookup).
+    pub forward_cost_ns: u64,
+}
+
+impl Bridge {
+    pub fn new(name: impl Into<String>, mode: BridgeMode, subnet: Cidr) -> Self {
+        Self {
+            name: name.into(),
+            mode,
+            ipam: Ipam::new(subnet, 1),
+            ports: HashMap::new(),
+            next_iface: 0,
+            forward_cost_ns: 400,
+        }
+    }
+
+    /// Attach a container: lease an IP, mint a veth + MAC.
+    pub fn attach(&mut self, owner: ContainerId) -> Result<Port, IpamError> {
+        let ip = self.ipam.lease()?;
+        let iface = IfaceId::new(self.next_iface);
+        let mac = Mac::from_index(self.next_iface);
+        self.next_iface += 1;
+        let port = Port { iface, mac, ip, owner };
+        self.ports.insert(owner, port);
+        Ok(port)
+    }
+
+    /// Detach and release the lease.
+    pub fn detach(&mut self, owner: ContainerId) -> Option<Port> {
+        let port = self.ports.remove(&owner)?;
+        let _ = self.ipam.release(port.ip);
+        Some(port)
+    }
+
+    pub fn port_of(&self, owner: ContainerId) -> Option<&Port> {
+        self.ports.get(&owner)
+    }
+
+    pub fn ports(&self) -> impl Iterator<Item = &Port> {
+        self.ports.values()
+    }
+
+    pub fn len(&self) -> usize {
+        self.ports.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.ports.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_properties_match_the_paper() {
+        assert!(BridgeMode::Docker0.needs_nat());
+        assert!(!BridgeMode::Bridge0.needs_nat());
+        assert!(BridgeMode::Bridge0.directly_routable());
+        assert!(BridgeMode::Host.directly_routable());
+        assert_eq!(BridgeMode::Bridge0.name(), "bridge0");
+    }
+
+    #[test]
+    fn docker0_subnet_is_same_on_every_host() {
+        // The collision that breaks cross-host addressing.
+        assert_eq!(
+            BridgeMode::Docker0.default_subnet(0),
+            BridgeMode::Docker0.default_subnet(5)
+        );
+    }
+
+    #[test]
+    fn bridge0_subnets_are_disjoint_per_host() {
+        // bridge0 shards 10.10/16 into per-host /24s: leases can never
+        // collide across machines (unlike docker0).
+        let s0 = BridgeMode::Bridge0.default_subnet(0);
+        let s1 = BridgeMode::Bridge0.default_subnet(1);
+        assert_ne!(s0, s1);
+        let mut b0 = Bridge::new("bridge0", BridgeMode::Bridge0, s0);
+        let mut b1 = Bridge::new("bridge0", BridgeMode::Bridge0, s1);
+        let p0 = b0.attach(ContainerId::new(0)).unwrap();
+        let p1 = b1.attach(ContainerId::new(1)).unwrap();
+        assert_ne!(p0.ip, p1.ip);
+        // both remain inside the flat routable 10.10/16
+        let flat = Cidr::parse("10.10.0.0/16").unwrap();
+        assert!(flat.contains(p0.ip));
+        assert!(flat.contains(p1.ip));
+    }
+
+    #[test]
+    fn attach_assigns_unique_ips_and_ifaces() {
+        let mut b = Bridge::new(
+            "bridge0",
+            BridgeMode::Bridge0,
+            Cidr::parse("10.10.0.0/24").unwrap(),
+        );
+        let p1 = b.attach(ContainerId::new(1)).unwrap();
+        let p2 = b.attach(ContainerId::new(2)).unwrap();
+        assert_ne!(p1.ip, p2.ip);
+        assert_ne!(p1.iface, p2.iface);
+        assert_ne!(p1.mac, p2.mac);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.port_of(ContainerId::new(1)).unwrap().ip, p1.ip);
+    }
+
+    #[test]
+    fn detach_releases_the_lease() {
+        let mut b = Bridge::new(
+            "docker0",
+            BridgeMode::Docker0,
+            Cidr::parse("172.17.0.0/29").unwrap(),
+        );
+        let p = b.attach(ContainerId::new(9)).unwrap();
+        assert!(b.ipam.is_leased(p.ip));
+        b.detach(ContainerId::new(9)).unwrap();
+        assert!(!b.ipam.is_leased(p.ip));
+        assert!(b.is_empty());
+    }
+}

@@ -1,0 +1,427 @@
+//! Fabric: the end-to-end communication cost model.
+//!
+//! Turns (src container, dst container, bytes) into virtual time, using
+//! the machines' NICs, the rack path, the bridge mode (NAT or direct) and
+//! the software-bridge forwarding cost. MPI and the consul gossip layer
+//! both charge their traffic through this model, so the Fig. 3 / Ext-A
+//! benches measure one consistent network.
+
+use super::bridge::BridgeMode;
+use super::nat::NatTable;
+use crate::hw::rack::Plant;
+use crate::hw::NicSpec;
+use crate::sim::SimTime;
+use crate::util::ids::{ContainerId, MachineId};
+use std::collections::HashMap;
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq)]
+pub enum FabricError {
+    #[error("container {0} has no placement")]
+    Unplaced(ContainerId),
+}
+
+/// What kind of path a message took (for accounting/debug).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PathKind {
+    /// Same container (rank-to-self): memcpy.
+    Local,
+    /// Different containers, same machine: one bridge hop.
+    IntraHost,
+    /// Cross machine, directly routable (bridge0/host).
+    CrossHost,
+    /// Cross machine through NAT (docker0): two translations + proxy hop.
+    CrossHostNat,
+}
+
+/// Cached affine one-way cost: `base_ns + bytes * num / den` ns.
+#[derive(Debug, Clone, Copy)]
+pub struct CostParams {
+    pub kind: PathKind,
+    pub base_ns: u64,
+    pub num: u64,
+    pub den: u64,
+}
+
+impl CostParams {
+    #[inline]
+    pub fn time(&self, bytes: u64) -> crate::sim::SimTime {
+        crate::sim::SimTime::from_nanos(
+            self.base_ns + (bytes as u128 * self.num as u128 / self.den as u128) as u64,
+        )
+    }
+}
+
+/// Lightweight topology snapshot + placement map.
+#[derive(Debug, Clone)]
+pub struct Fabric {
+    pub mode: BridgeMode,
+    nics: Vec<NicSpec>,
+    path_delay: Vec<Vec<SimTime>>, // machine x machine switch delay
+    placement: HashMap<ContainerId, MachineId>,
+    /// Per-machine NAT tables (docker0 mode).
+    pub nat: Vec<NatTable>,
+    /// Software bridge per-frame forwarding cost.
+    pub bridge_cost: SimTime,
+    /// In-memory copy rate for rank-local transfers (bytes/sec).
+    pub memcpy_bps: u64,
+    /// Total bytes charged, by path kind.
+    pub bytes_by_path: HashMap<PathKind, u64>,
+    /// Total messages charged, by path kind.
+    pub msgs_by_path: HashMap<PathKind, u64>,
+}
+
+impl Fabric {
+    pub fn from_plant(plant: &Plant, mode: BridgeMode) -> Self {
+        let n = plant.machines.len();
+        let nics: Vec<NicSpec> = plant.machines.iter().map(|m| m.spec.nic).collect();
+        let mut path_delay = vec![vec![SimTime::ZERO; n]; n];
+        for a in 0..n {
+            for b in 0..n {
+                path_delay[a][b] =
+                    plant.path_delay(MachineId::new(a as u32), MachineId::new(b as u32));
+            }
+        }
+        Self {
+            mode,
+            nics,
+            path_delay,
+            placement: HashMap::new(),
+            nat: vec![NatTable::new(); n],
+            bridge_cost: SimTime::from_nanos(400),
+            memcpy_bps: 8 << 30, // ~8 GiB/s single-stream copy
+            bytes_by_path: HashMap::new(),
+            msgs_by_path: HashMap::new(),
+        }
+    }
+
+    /// Record that a container runs on a machine.
+    pub fn place(&mut self, c: ContainerId, m: MachineId) {
+        self.placement.insert(c, m);
+    }
+
+    pub fn unplace(&mut self, c: ContainerId) {
+        self.placement.remove(&c);
+    }
+
+    pub fn machine_of(&self, c: ContainerId) -> Option<MachineId> {
+        self.placement.get(&c).copied()
+    }
+
+    fn bottleneck_nic(&self, a: MachineId, b: MachineId) -> NicSpec {
+        let na = self.nics[a.raw() as usize];
+        let nb = self.nics[b.raw() as usize];
+        if na.rate_bps <= nb.rate_bps {
+            na
+        } else {
+            nb
+        }
+    }
+
+    /// Classify the path between two containers.
+    pub fn classify(
+        &self,
+        src: ContainerId,
+        dst: ContainerId,
+    ) -> Result<PathKind, FabricError> {
+        if src == dst {
+            return Ok(PathKind::Local);
+        }
+        let ms = self.machine_of(src).ok_or(FabricError::Unplaced(src))?;
+        let md = self.machine_of(dst).ok_or(FabricError::Unplaced(dst))?;
+        Ok(if ms == md {
+            PathKind::IntraHost
+        } else if self.mode.needs_nat() {
+            PathKind::CrossHostNat
+        } else {
+            PathKind::CrossHost
+        })
+    }
+
+    /// One-way transfer time for a `bytes`-sized message between two
+    /// containers, charging the traffic counters.
+    pub fn transfer_time(
+        &mut self,
+        src: ContainerId,
+        dst: ContainerId,
+        bytes: u64,
+    ) -> Result<(SimTime, PathKind), FabricError> {
+        let kind = self.classify(src, dst)?;
+        let t = match kind {
+            PathKind::Local => {
+                SimTime::from_nanos((bytes as u128 * 1_000_000_000 / self.memcpy_bps as u128) as u64)
+            }
+            PathKind::IntraHost => {
+                // veth -> bridge -> veth: two frame hops through the
+                // software bridge, memory-speed copy.
+                let copy = (bytes as u128 * 1_000_000_000 / self.memcpy_bps as u128) as u64;
+                self.bridge_cost + self.bridge_cost + SimTime::from_nanos(copy)
+            }
+            PathKind::CrossHost => {
+                let ms = self.machine_of(src).unwrap();
+                let md = self.machine_of(dst).unwrap();
+                let nic = self.bottleneck_nic(ms, md);
+                self.bridge_cost
+                    + nic.message_time(bytes)
+                    + self.path_delay[ms.raw() as usize][md.raw() as usize]
+                    + self.bridge_cost
+            }
+            PathKind::CrossHostNat => {
+                let ms = self.machine_of(src).unwrap();
+                let md = self.machine_of(dst).unwrap();
+                let nic = self.bottleneck_nic(ms, md);
+                // SNAT on egress + DNAT on ingress, plus userland proxy
+                // copy on the destination host (docker-proxy).
+                self.nat[ms.raw() as usize].translations += 1;
+                self.nat[md.raw() as usize].translations += 1;
+                let proxy_copy =
+                    (bytes as u128 * 1_000_000_000 / self.memcpy_bps as u128) as u64;
+                self.bridge_cost
+                    + NatTable::TRANSLATE_COST
+                    + nic.message_time(bytes)
+                    + self.path_delay[ms.raw() as usize][md.raw() as usize]
+                    + NatTable::TRANSLATE_COST
+                    + SimTime::from_nanos(proxy_copy)
+                    + self.bridge_cost
+            }
+        };
+        *self.bytes_by_path.entry(kind).or_insert(0) += bytes;
+        *self.msgs_by_path.entry(kind).or_insert(0) += 1;
+        Ok((t, kind))
+    }
+
+    /// Affine cost model for a fixed (src, dst) pair: one-way time for a
+    /// `b`-byte message is `base_ns + b * num / den` nanoseconds. MPI
+    /// ranks cache this per destination so the steady-state send path
+    /// never touches the fabric lock (§Perf).
+    pub fn cost_params(
+        &self,
+        src: ContainerId,
+        dst: ContainerId,
+    ) -> Result<CostParams, FabricError> {
+        let kind = self.classify(src, dst)?;
+        let memcpy_num = 1_000_000_000u128;
+        let memcpy_den = self.memcpy_bps as u128;
+        Ok(match kind {
+            PathKind::Local => CostParams { kind, base_ns: 0, num: memcpy_num as u64, den: memcpy_den as u64 },
+            PathKind::IntraHost => CostParams {
+                kind,
+                base_ns: 2 * self.bridge_cost.as_nanos(),
+                num: memcpy_num as u64,
+                den: memcpy_den as u64,
+            },
+            PathKind::CrossHost | PathKind::CrossHostNat => {
+                let ms = self.machine_of(src).unwrap();
+                let md = self.machine_of(dst).unwrap();
+                let nic = self.bottleneck_nic(ms, md);
+                let mut base = (self.bridge_cost
+                    + self.bridge_cost
+                    + nic.message_time(0)
+                    + self.path_delay[ms.raw() as usize][md.raw() as usize])
+                .as_nanos();
+                // serialization: bytes * 8e9 / rate ns
+                let mut num = 8_000_000_000u64;
+                let mut den = nic.rate_bps;
+                if kind == PathKind::CrossHostNat {
+                    base += 2 * NatTable::TRANSLATE_COST.as_nanos();
+                    // + proxy memcpy: fold into per-byte term using a
+                    // common denominator approximation
+                    // t(b) = b*8e9/rate + b*1e9/memcpy
+                    //      = b * (8e9*memcpy + 1e9*rate) / (rate*memcpy)
+                    let n2 = 8_000_000_000u128 * self.memcpy_bps as u128
+                        + 1_000_000_000u128 * nic.rate_bps as u128;
+                    let d2 = nic.rate_bps as u128 * self.memcpy_bps as u128;
+                    // scale down to keep u64 arithmetic exact enough
+                    num = (n2 / 1_000_000) as u64;
+                    den = (d2 / 1_000_000) as u64;
+                }
+                CostParams { kind, base_ns: base, num, den }
+            }
+        })
+    }
+
+    /// Machine-to-machine control-plane message time (consul gossip/raft;
+    /// agents bind the host interface so NAT is not involved).
+    pub fn control_msg_time(&self, a: MachineId, b: MachineId, bytes: u64) -> SimTime {
+        if a == b {
+            return SimTime::from_micros(5); // loopback + sched
+        }
+        let nic = self.bottleneck_nic(a, b);
+        nic.message_time(bytes) + self.path_delay[a.raw() as usize][b.raw() as usize]
+    }
+
+    /// Effective bandwidth (bytes/sec) observed for a message size.
+    pub fn effective_bandwidth(
+        &mut self,
+        src: ContainerId,
+        dst: ContainerId,
+        bytes: u64,
+    ) -> Result<f64, FabricError> {
+        let (t, _) = self.transfer_time(src, dst, bytes)?;
+        Ok(bytes as f64 / t.as_secs_f64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::MachineSpec;
+
+    fn fabric(mode: BridgeMode) -> Fabric {
+        let plant = Plant::paper_testbed();
+        let mut f = Fabric::from_plant(&plant, mode);
+        f.place(ContainerId::new(0), MachineId::new(0));
+        f.place(ContainerId::new(1), MachineId::new(1));
+        f.place(ContainerId::new(2), MachineId::new(0));
+        f
+    }
+
+    #[test]
+    fn classification() {
+        let f = fabric(BridgeMode::Bridge0);
+        let c0 = ContainerId::new(0);
+        assert_eq!(f.classify(c0, c0).unwrap(), PathKind::Local);
+        assert_eq!(
+            f.classify(c0, ContainerId::new(2)).unwrap(),
+            PathKind::IntraHost
+        );
+        assert_eq!(
+            f.classify(c0, ContainerId::new(1)).unwrap(),
+            PathKind::CrossHost
+        );
+        let f = fabric(BridgeMode::Docker0);
+        assert_eq!(
+            f.classify(ContainerId::new(0), ContainerId::new(1)).unwrap(),
+            PathKind::CrossHostNat
+        );
+    }
+
+    #[test]
+    fn unplaced_is_an_error() {
+        let f = fabric(BridgeMode::Bridge0);
+        assert!(matches!(
+            f.classify(ContainerId::new(0), ContainerId::new(99)),
+            Err(FabricError::Unplaced(_))
+        ));
+    }
+
+    #[test]
+    fn nat_is_slower_than_bridge0_cross_host() {
+        // The quantitative heart of Fig. 3.
+        let mut nat = fabric(BridgeMode::Docker0);
+        let mut direct = fabric(BridgeMode::Bridge0);
+        for bytes in [64u64, 4096, 1 << 20, 16 << 20] {
+            let (tn, _) = nat
+                .transfer_time(ContainerId::new(0), ContainerId::new(1), bytes)
+                .unwrap();
+            let (td, _) = direct
+                .transfer_time(ContainerId::new(0), ContainerId::new(1), bytes)
+                .unwrap();
+            assert!(tn > td, "bytes={bytes}: nat={tn} direct={td}");
+        }
+    }
+
+    #[test]
+    fn nat_gap_grows_with_message_size() {
+        let mut nat = fabric(BridgeMode::Docker0);
+        let mut direct = fabric(BridgeMode::Bridge0);
+        let gap = |nat: &mut Fabric, direct: &mut Fabric, b: u64| {
+            let (tn, _) = nat
+                .transfer_time(ContainerId::new(0), ContainerId::new(1), b)
+                .unwrap();
+            let (td, _) = direct
+                .transfer_time(ContainerId::new(0), ContainerId::new(1), b)
+                .unwrap();
+            tn.as_nanos() - td.as_nanos()
+        };
+        let small = gap(&mut nat, &mut direct, 64);
+        let big = gap(&mut nat, &mut direct, 16 << 20);
+        assert!(big > small);
+    }
+
+    #[test]
+    fn intra_host_beats_cross_host() {
+        let mut f = fabric(BridgeMode::Bridge0);
+        let (intra, _) = f
+            .transfer_time(ContainerId::new(0), ContainerId::new(2), 1 << 20)
+            .unwrap();
+        let (cross, _) = f
+            .transfer_time(ContainerId::new(0), ContainerId::new(1), 1 << 20)
+            .unwrap();
+        assert!(intra < cross);
+    }
+
+    #[test]
+    fn nat_translation_counters_tick() {
+        let mut f = fabric(BridgeMode::Docker0);
+        f.transfer_time(ContainerId::new(0), ContainerId::new(1), 100)
+            .unwrap();
+        assert_eq!(f.nat[0].translations, 1);
+        assert_eq!(f.nat[1].translations, 1);
+    }
+
+    #[test]
+    fn traffic_accounting() {
+        let mut f = fabric(BridgeMode::Bridge0);
+        f.transfer_time(ContainerId::new(0), ContainerId::new(1), 1000)
+            .unwrap();
+        f.transfer_time(ContainerId::new(0), ContainerId::new(1), 500)
+            .unwrap();
+        assert_eq!(f.bytes_by_path[&PathKind::CrossHost], 1500);
+        assert_eq!(f.msgs_by_path[&PathKind::CrossHost], 2);
+    }
+
+    #[test]
+    fn effective_bandwidth_approaches_line_rate() {
+        // Large messages on 10GbE should see > 0.8 of line rate in
+        // bridge0 mode, far less through NAT (the proxy copy).
+        let mut direct = fabric(BridgeMode::Bridge0);
+        let bw = direct
+            .effective_bandwidth(ContainerId::new(0), ContainerId::new(1), 64 << 20)
+            .unwrap();
+        let line = 10_000_000_000.0 / 8.0;
+        assert!(bw / line > 0.8, "bw={bw:.0}");
+        let mut nat = fabric(BridgeMode::Docker0);
+        let bwn = nat
+            .effective_bandwidth(ContainerId::new(0), ContainerId::new(1), 64 << 20)
+            .unwrap();
+        assert!(bwn < bw);
+    }
+
+    #[test]
+    fn cost_params_match_transfer_time_exactly() {
+        // The cached affine model must reproduce the full model for
+        // every path kind and size (§Perf cache correctness).
+        for mode in [BridgeMode::Bridge0, BridgeMode::Docker0, BridgeMode::Host] {
+            let mut f = fabric(mode);
+            for (src, dst) in [(0u32, 0u32), (0, 2), (0, 1)] {
+                let (s, d) = (ContainerId::new(src), ContainerId::new(dst));
+                let params = f.cost_params(s, d).unwrap();
+                for bytes in [0u64, 64, 4096, 1 << 20, 64 << 20] {
+                    let (want, kind) = f.transfer_time(s, d, bytes).unwrap();
+                    assert_eq!(params.kind, kind);
+                    let got = params.time(bytes);
+                    let err = (got.as_nanos() as i128 - want.as_nanos() as i128).abs();
+                    assert!(
+                        err <= 1 + want.as_nanos() as i128 / 1_000_000,
+                        "mode={mode:?} {src}->{dst} bytes={bytes}: {got} vs {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn slower_nic_is_the_bottleneck() {
+        let mut plant = Plant::uniform(2, MachineSpec::dell_m620(), 2);
+        plant.machines[1].spec.nic = crate::hw::NicSpec::one_gbe();
+        let mut f = Fabric::from_plant(&plant, BridgeMode::Bridge0);
+        f.place(ContainerId::new(0), MachineId::new(0));
+        f.place(ContainerId::new(1), MachineId::new(1));
+        let (t, _) = f
+            .transfer_time(ContainerId::new(0), ContainerId::new(1), 1 << 20)
+            .unwrap();
+        // ~8.4 ms at 1 Gb/s, way above the 0.84 ms 10GbE serialization
+        assert!(t.as_millis_f64() > 8.0);
+    }
+}

@@ -1,0 +1,142 @@
+//! IP address management: lease/release host addresses out of a subnet.
+//!
+//! Containers get "floating IPs assigned dynamically" (§III-C) — this is
+//! the allocator behind that, one instance per bridge subnet.
+
+use super::addr::{Cidr, Ipv4};
+use std::collections::BTreeSet;
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq)]
+pub enum IpamError {
+    #[error("subnet {0} exhausted")]
+    Exhausted(Cidr),
+    #[error("{0} is not leased")]
+    NotLeased(Ipv4),
+    #[error("{0} is outside subnet {1}")]
+    OutOfSubnet(Ipv4, Cidr),
+}
+
+/// Allocator over one CIDR block. The first `reserved` host addresses
+/// (gateway etc.) are never handed out.
+#[derive(Debug, Clone)]
+pub struct Ipam {
+    pub subnet: Cidr,
+    reserved: u32,
+    leased: BTreeSet<u32>, // offsets within the subnet
+    next_hint: u32,
+}
+
+impl Ipam {
+    /// `reserved` = number of low host addresses to hold back (≥1 keeps
+    /// the conventional .1 gateway).
+    pub fn new(subnet: Cidr, reserved: u32) -> Self {
+        Self { subnet, reserved, leased: BTreeSet::new(), next_hint: 0 }
+    }
+
+    pub fn leased_count(&self) -> usize {
+        self.leased.len()
+    }
+
+    fn capacity(&self) -> u32 {
+        self.subnet.host_count() as u32
+    }
+
+    /// Lease the next free address (first-fit from a rotating hint, the
+    /// same observable behaviour as dockerd's allocator).
+    pub fn lease(&mut self) -> Result<Ipv4, IpamError> {
+        let cap = self.capacity();
+        let usable = cap.saturating_sub(self.reserved);
+        if self.leased.len() as u32 >= usable {
+            return Err(IpamError::Exhausted(self.subnet));
+        }
+        for k in 0..usable {
+            let off = self.reserved + 1 + ((self.next_hint + k) % usable);
+            if !self.leased.contains(&off) {
+                self.leased.insert(off);
+                self.next_hint = (self.next_hint + k + 1) % usable;
+                return Ok(self.subnet.host(off));
+            }
+        }
+        Err(IpamError::Exhausted(self.subnet))
+    }
+
+    /// Release a leased address.
+    pub fn release(&mut self, ip: Ipv4) -> Result<(), IpamError> {
+        if !self.subnet.contains(ip) {
+            return Err(IpamError::OutOfSubnet(ip, self.subnet));
+        }
+        let off = ip.0 - self.subnet.base.0;
+        if self.leased.remove(&off) {
+            Ok(())
+        } else {
+            Err(IpamError::NotLeased(ip))
+        }
+    }
+
+    pub fn is_leased(&self, ip: Ipv4) -> bool {
+        self.subnet.contains(ip) && self.leased.contains(&(ip.0 - self.subnet.base.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ipam() -> Ipam {
+        Ipam::new(Cidr::parse("172.17.0.0/24").unwrap(), 1)
+    }
+
+    #[test]
+    fn leases_are_unique_and_in_subnet() {
+        let mut a = ipam();
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..100 {
+            let ip = a.lease().unwrap();
+            assert!(a.subnet.contains(ip));
+            assert!(seen.insert(ip), "duplicate lease {ip}");
+        }
+        assert_eq!(a.leased_count(), 100);
+    }
+
+    #[test]
+    fn gateway_is_reserved() {
+        let mut a = ipam();
+        for _ in 0..50 {
+            let ip = a.lease().unwrap();
+            assert_ne!(ip.octets()[3], 1, "handed out the gateway");
+            assert_ne!(ip.octets()[3], 0, "handed out the network addr");
+        }
+    }
+
+    #[test]
+    fn exhaustion_and_release_reuse() {
+        let mut a = Ipam::new(Cidr::parse("10.0.0.0/29").unwrap(), 1);
+        // /29 => 6 hosts, 1 reserved => 5 usable
+        let ips: Vec<_> = (0..5).map(|_| a.lease().unwrap()).collect();
+        assert_eq!(a.lease(), Err(IpamError::Exhausted(a.subnet)));
+        a.release(ips[2]).unwrap();
+        let again = a.lease().unwrap();
+        assert_eq!(again, ips[2]);
+    }
+
+    #[test]
+    fn release_errors() {
+        let mut a = ipam();
+        let outside = Ipv4::parse("192.168.1.1").unwrap();
+        assert!(matches!(a.release(outside), Err(IpamError::OutOfSubnet(..))));
+        let inside = Ipv4::parse("172.17.0.9").unwrap();
+        assert_eq!(a.release(inside), Err(IpamError::NotLeased(inside)));
+    }
+
+    #[test]
+    fn addresses_not_immediately_recycled() {
+        // dockerd-style rotating hint: a released IP is not the very next
+        // lease unless the pool wrapped around.
+        let mut a = ipam();
+        let first = a.lease().unwrap();
+        a.release(first).unwrap();
+        let next = a.lease().unwrap();
+        assert_ne!(first, next);
+    }
+}

@@ -1,0 +1,28 @@
+//! Virtual network substrate.
+//!
+//! Models exactly the networking the paper manipulates (§III-B, Fig. 3):
+//!
+//! * `docker0` — the stock Docker bridge. Containers get a private
+//!   172.17/16 address; cross-host traffic must be NAT-translated and
+//!   port-forwarded through the host address, adding per-packet cost and
+//!   preventing direct container↔container addressing.
+//! * `bridge0` — the paper's customized bridge bound to a physical
+//!   interface. Containers get addresses on the host subnet and talk
+//!   across machines directly, no NAT.
+//! * `host` — containers share the host stack (upper-bound baseline).
+//!
+//! `fabric::Fabric` turns a (src container, dst container, bytes) triple
+//! into a virtual-time cost using the machine NICs, rack topology and
+//! bridge mode; MPI charges its communication through it.
+
+pub mod addr;
+pub mod bridge;
+pub mod fabric;
+pub mod ipam;
+pub mod nat;
+
+pub use addr::{Cidr, Ipv4, Mac};
+pub use bridge::{Bridge, BridgeMode};
+pub use fabric::{Fabric, PathKind};
+pub use ipam::Ipam;
+pub use nat::NatTable;

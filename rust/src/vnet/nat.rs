@@ -1,0 +1,100 @@
+//! NAT/port-forwarding table for `docker0`-mode cross-host traffic.
+//!
+//! With the stock bridge, a container is only reachable across hosts via
+//! `hostIP:hostPort -> containerIP:containerPort` DNAT entries — which is
+//! precisely why the paper builds `bridge0`. We model the table plus the
+//! per-packet translation cost that shows up in Fig. 3-style benches.
+
+use super::addr::Ipv4;
+use crate::sim::SimTime;
+use std::collections::HashMap;
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq)]
+pub enum NatError {
+    #[error("host port {0} already forwarded")]
+    PortInUse(u16),
+    #[error("no DNAT entry for host port {0}")]
+    NoEntry(u16),
+}
+
+/// One DNAT rule.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Forward {
+    pub host_port: u16,
+    pub dst_ip: Ipv4,
+    pub dst_port: u16,
+}
+
+/// Per-host NAT table.
+#[derive(Debug, Clone, Default)]
+pub struct NatTable {
+    rules: HashMap<u16, Forward>,
+    /// Translations performed (for the benches' per-packet accounting).
+    pub translations: u64,
+}
+
+impl NatTable {
+    /// Cost of one NAT traversal (conntrack lookup + header rewrite).
+    pub const TRANSLATE_COST: SimTime = SimTime(1_500); // 1.5 us
+
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_forward(&mut self, host_port: u16, dst_ip: Ipv4, dst_port: u16) -> Result<(), NatError> {
+        if self.rules.contains_key(&host_port) {
+            return Err(NatError::PortInUse(host_port));
+        }
+        self.rules.insert(host_port, Forward { host_port, dst_ip, dst_port });
+        Ok(())
+    }
+
+    pub fn remove_forward(&mut self, host_port: u16) -> Result<Forward, NatError> {
+        self.rules.remove(&host_port).ok_or(NatError::NoEntry(host_port))
+    }
+
+    /// Translate an inbound packet; counts the traversal and returns the
+    /// destination.
+    pub fn translate(&mut self, host_port: u16) -> Result<Forward, NatError> {
+        let f = *self.rules.get(&host_port).ok_or(NatError::NoEntry(host_port))?;
+        self.translations += 1;
+        Ok(f)
+    }
+
+    pub fn len(&self) -> usize {
+        self.rules.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_lifecycle() {
+        let mut t = NatTable::new();
+        let ip = Ipv4::new(172, 17, 0, 2);
+        t.add_forward(2222, ip, 22).unwrap();
+        assert_eq!(t.add_forward(2222, ip, 22), Err(NatError::PortInUse(2222)));
+        let f = t.translate(2222).unwrap();
+        assert_eq!(f.dst_ip, ip);
+        assert_eq!(f.dst_port, 22);
+        assert_eq!(t.translations, 1);
+        t.remove_forward(2222).unwrap();
+        assert_eq!(t.translate(2222), Err(NatError::NoEntry(2222)));
+    }
+
+    #[test]
+    fn translation_counter_accumulates() {
+        let mut t = NatTable::new();
+        t.add_forward(1, Ipv4::new(10, 0, 0, 2), 80).unwrap();
+        for _ in 0..10 {
+            t.translate(1).unwrap();
+        }
+        assert_eq!(t.translations, 10);
+    }
+}

@@ -1,0 +1,126 @@
+//! Distributed GEMM (replicated-B row decomposition): each rank owns a
+//! block-row of A, B is broadcast, and every rank computes its block-row
+//! of C through the Pallas matmul artifact. The compute-heavy, MXU-path
+//! counterpart of the stencil workload.
+
+use crate::mpi::launcher::{mpirun, LaunchError, LaunchPlan};
+use crate::runtime::Runtime;
+use crate::sim::SimTime;
+use std::path::PathBuf;
+use std::time::Duration;
+
+#[derive(Debug, Clone)]
+pub struct GemmSpec {
+    /// Per-rank square tile edge (needs a `gemm_{n}` artifact).
+    pub tile: usize,
+    /// Multiply rounds (amortizes broadcast).
+    pub rounds: usize,
+    pub artifacts: PathBuf,
+}
+
+#[derive(Debug)]
+pub struct GemmReport {
+    pub gflops: f64,
+    pub comm_time: SimTime,
+    pub compute_wall_max: Duration,
+    pub wall: Duration,
+    /// Check value: sum over all ranks of sum(C) (for regression tests).
+    pub checksum: f64,
+}
+
+pub fn run_gemm(plan: &LaunchPlan, spec: &GemmSpec) -> Result<GemmReport, LaunchError> {
+    let spec_c = spec.clone();
+    let report = mpirun(plan, move |comm| {
+        let rt = Runtime::load(&spec_c.artifacts).expect("artifacts");
+        let name = format!("gemm_{}", spec_c.tile);
+        let n = spec_c.tile;
+        // deterministic per-rank A; shared B broadcast from rank 0
+        let a: Vec<f32> = (0..n * n)
+            .map(|i| (((i + comm.rank * 31) % 13) as f32 - 6.0) * 0.1)
+            .collect();
+        let mut b_bytes: Vec<u8> = if comm.rank == 0 {
+            (0..n * n)
+                .map(|i| ((i % 7) as f32 - 3.0) * 0.1)
+                .flat_map(|v| v.to_le_bytes())
+                .collect()
+        } else {
+            Vec::new()
+        };
+        comm.bcast(0, &mut b_bytes);
+        let b: Vec<f32> = b_bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+
+        let mut compute = Duration::ZERO;
+        let mut checksum = 0f64;
+        for _ in 0..spec_c.rounds {
+            let t0 = std::time::Instant::now();
+            let c = rt.gemm(&name, &a, &b).expect("gemm");
+            compute += t0.elapsed();
+            checksum = c.iter().map(|&v| v as f64).sum();
+        }
+        (compute, checksum)
+    })?;
+
+    let n = spec.tile as f64;
+    let flops = 2.0 * n * n * n * spec.rounds as f64 * plan.n_ranks as f64;
+    let compute_wall_max = report
+        .ranks
+        .iter()
+        .map(|r| r.result.0)
+        .max()
+        .unwrap_or(Duration::ZERO);
+    let checksum = report.ranks.iter().map(|r| r.result.1).sum();
+    Ok(GemmReport {
+        gflops: flops / report.wall.as_secs_f64() / 1e9,
+        comm_time: report.comm_time(),
+        compute_wall_max,
+        wall: report.wall,
+        checksum,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::rack::Plant;
+    use crate::mpi::hostfile::Hostfile;
+    use crate::util::ids::{ContainerId, MachineId};
+    use crate::vnet::addr::Ipv4;
+    use crate::vnet::bridge::BridgeMode;
+    use crate::vnet::fabric::Fabric;
+    use std::collections::HashMap;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn gemm_runs_and_is_deterministic() {
+        if !Runtime::default_dir().join("manifest.txt").exists() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let hostfile = Hostfile::parse("10.10.0.2 slots=2\n10.10.0.3 slots=2\n").unwrap();
+        let plant = Plant::paper_testbed();
+        let mut fabric = Fabric::from_plant(&plant, BridgeMode::Bridge0);
+        let c2 = ContainerId::new(0);
+        let c3 = ContainerId::new(1);
+        fabric.place(c2, MachineId::new(1));
+        fabric.place(c3, MachineId::new(2));
+        let mut ip_to_container = HashMap::new();
+        ip_to_container.insert(Ipv4::parse("10.10.0.2").unwrap(), c2);
+        ip_to_container.insert(Ipv4::parse("10.10.0.3").unwrap(), c3);
+        let plan = LaunchPlan {
+            hostfile,
+            n_ranks: 4,
+            ip_to_container,
+            fabric: Arc::new(Mutex::new(fabric)),
+            eager_threshold: 64 * 1024,
+        };
+        let spec = GemmSpec { tile: 128, rounds: 1, artifacts: Runtime::default_dir() };
+        let r1 = run_gemm(&plan, &spec).unwrap();
+        let r2 = run_gemm(&plan, &spec).unwrap();
+        assert!(r1.gflops > 0.0);
+        assert!((r1.checksum - r2.checksum).abs() < 1e-6 * r1.checksum.abs().max(1.0));
+        assert!(r1.comm_time > SimTime::ZERO); // the B broadcast
+    }
+}

@@ -1,0 +1,428 @@
+//! Distributed 2-D Jacobi heat diffusion.
+//!
+//! The global (H, W) grid is decomposed onto a (px, py) rank grid; every
+//! rank owns an n×n tile (square — it must match a `jacobi_step_n`
+//! artifact), exchanges halos with its 4 neighbours each step, applies
+//! the Pallas step kernel through PJRT, and the ranks allreduce the
+//! squared residual every `check_every` steps. Dirichlet boundary: the
+//! global north wall is held at 1.0, the rest at 0.0.
+
+use crate::mpi::comm::{MpiComm, ReduceOp};
+use crate::mpi::launcher::{mpirun, JobReport, LaunchError, LaunchPlan};
+use crate::runtime::Runtime;
+use crate::sim::SimTime;
+use std::path::PathBuf;
+use std::time::Duration;
+
+/// Problem description.
+#[derive(Debug, Clone)]
+pub struct JacobiSpec {
+    /// Rank grid (px rows × py cols); px*py = n_ranks.
+    pub px: usize,
+    pub py: usize,
+    /// Local tile edge (must have a jacobi_step_{n} artifact).
+    pub tile: usize,
+    /// Maximum steps.
+    pub steps: usize,
+    /// Residual check (allreduce) cadence.
+    pub check_every: usize,
+    /// Stop when global squared residual falls below this.
+    pub tol: f32,
+    /// Artifacts directory.
+    pub artifacts: PathBuf,
+}
+
+impl JacobiSpec {
+    /// The paper's Fig. 8 shape: 16 domains (4×4), 64² tiles.
+    pub fn fig8() -> Self {
+        Self {
+            px: 4,
+            py: 4,
+            tile: 64,
+            steps: 200,
+            check_every: 20,
+            tol: 1e-6,
+            artifacts: Runtime::default_dir(),
+        }
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        self.px * self.py
+    }
+
+    pub fn global_shape(&self) -> (usize, usize) {
+        (self.px * self.tile, self.py * self.tile)
+    }
+}
+
+/// Per-rank result.
+#[derive(Debug, Clone)]
+pub struct RankResult {
+    /// Final local interior (row-major tile×tile).
+    pub interior: Vec<f32>,
+    pub compute_wall: Duration,
+    pub steps_run: usize,
+}
+
+/// Whole-job report.
+#[derive(Debug)]
+pub struct JacobiReport {
+    pub steps_run: usize,
+    pub final_residual: f32,
+    /// (step, global squared residual) at each check.
+    pub residual_curve: Vec<(usize, f32)>,
+    pub comm_time: SimTime,
+    pub wall: Duration,
+    pub compute_wall_max: Duration,
+    pub total_bytes: u64,
+    pub total_msgs: u64,
+    pub ranks: Vec<RankResult>,
+}
+
+const DIR_N: u64 = 0;
+const DIR_S: u64 = 1;
+const DIR_W: u64 = 2;
+const DIR_E: u64 = 3;
+
+struct RankGrid {
+    tile: usize,
+    padded: Vec<f32>, // (tile+2)^2
+}
+
+impl RankGrid {
+    fn new(tile: usize, is_north_edge: bool) -> Self {
+        let w = tile + 2;
+        let mut padded = vec![0f32; w * w];
+        if is_north_edge {
+            for j in 0..w {
+                padded[j] = 1.0; // hot wall
+            }
+        }
+        Self { tile, padded }
+    }
+
+    fn w(&self) -> usize {
+        self.tile + 2
+    }
+
+    fn top_row(&self) -> Vec<f32> {
+        self.padded[self.w() + 1..self.w() + 1 + self.tile].to_vec()
+    }
+    fn bottom_row(&self) -> Vec<f32> {
+        let w = self.w();
+        self.padded[self.tile * w + 1..self.tile * w + 1 + self.tile].to_vec()
+    }
+    fn left_col(&self) -> Vec<f32> {
+        let w = self.w();
+        (1..=self.tile).map(|i| self.padded[i * w + 1]).collect()
+    }
+    fn right_col(&self) -> Vec<f32> {
+        let w = self.w();
+        (1..=self.tile).map(|i| self.padded[i * w + self.tile]).collect()
+    }
+
+    fn set_north_halo(&mut self, row: &[f32]) {
+        self.padded[1..1 + self.tile].copy_from_slice(row);
+    }
+    fn set_south_halo(&mut self, row: &[f32]) {
+        let w = self.w();
+        let off = (self.tile + 1) * w + 1;
+        self.padded[off..off + self.tile].copy_from_slice(row);
+    }
+    fn set_west_halo(&mut self, col: &[f32]) {
+        let w = self.w();
+        for (i, v) in col.iter().enumerate() {
+            self.padded[(i + 1) * w] = *v;
+        }
+    }
+    fn set_east_halo(&mut self, col: &[f32]) {
+        let w = self.w();
+        for (i, v) in col.iter().enumerate() {
+            self.padded[(i + 1) * w + self.tile + 1] = *v;
+        }
+    }
+
+    fn write_interior(&mut self, interior: &[f32]) {
+        let w = self.w();
+        for i in 0..self.tile {
+            let src = &interior[i * self.tile..(i + 1) * self.tile];
+            self.padded[(i + 1) * w + 1..(i + 1) * w + 1 + self.tile].copy_from_slice(src);
+        }
+    }
+
+    fn interior(&self) -> Vec<f32> {
+        let w = self.w();
+        let mut out = Vec::with_capacity(self.tile * self.tile);
+        for i in 1..=self.tile {
+            out.extend_from_slice(&self.padded[i * w + 1..i * w + 1 + self.tile]);
+        }
+        out
+    }
+}
+
+fn exchange_halos(comm: &mut MpiComm, grid: &mut RankGrid, px: usize, py: usize, step: usize) {
+    let r = comm.rank;
+    let (ri, rj) = (r / py, r % py);
+    let north = (ri > 0).then(|| r - py);
+    let south = (ri + 1 < px).then(|| r + py);
+    let west = (rj > 0).then(|| r - 1);
+    let east = (rj + 1 < py).then(|| r + 1);
+    let base = (step as u64) << 3;
+
+    // post all sends first (channels are non-blocking)
+    if let Some(n) = north {
+        comm.send_f32(n, base + DIR_N, &grid.top_row());
+    }
+    if let Some(s) = south {
+        comm.send_f32(s, base + DIR_S, &grid.bottom_row());
+    }
+    if let Some(w) = west {
+        comm.send_f32(w, base + DIR_W, &grid.left_col());
+    }
+    if let Some(e) = east {
+        comm.send_f32(e, base + DIR_E, &grid.right_col());
+    }
+    // receive: my north halo is my north neighbour's SOUTH-facing send
+    if let Some(n) = north {
+        let row = comm.recv_f32(n, base + DIR_S);
+        grid.set_north_halo(&row);
+    }
+    if let Some(s) = south {
+        let row = comm.recv_f32(s, base + DIR_N);
+        grid.set_south_halo(&row);
+    }
+    if let Some(w) = west {
+        let col = comm.recv_f32(w, base + DIR_E);
+        grid.set_west_halo(&col);
+    }
+    if let Some(e) = east {
+        let col = comm.recv_f32(e, base + DIR_W);
+        grid.set_east_halo(&col);
+    }
+}
+
+/// Run the distributed solve on an existing launch plan.
+pub fn run_jacobi(plan: &LaunchPlan, spec: &JacobiSpec) -> Result<JacobiReport, LaunchError> {
+    assert_eq!(plan.n_ranks, spec.n_ranks(), "plan/spec rank mismatch");
+    let spec = spec.clone();
+    let report: JobReport<(RankResult, Vec<(usize, f32)>)> = mpirun(plan, move |comm| {
+        let rt = Runtime::load(&spec.artifacts).expect("artifacts (run `make artifacts`)");
+        let artifact = rt
+            .jacobi_step_name(spec.tile)
+            .unwrap_or_else(|| panic!("no jacobi_step_{} artifact", spec.tile));
+        let (ri, _rj) = (comm.rank / spec.py, comm.rank % spec.py);
+        let mut grid = RankGrid::new(spec.tile, ri == 0);
+        let mut curve = Vec::new();
+        let mut compute_wall = Duration::ZERO;
+        let mut steps_run = 0;
+        for step in 0..spec.steps {
+            exchange_halos(comm, &mut grid, spec.px, spec.py, step);
+            let t0 = std::time::Instant::now();
+            let (interior, res_sq) = rt.jacobi_step(&artifact, &grid.padded).expect("step");
+            compute_wall += t0.elapsed();
+            grid.write_interior(&interior);
+            steps_run = step + 1;
+            if (step + 1) % spec.check_every == 0 || step + 1 == spec.steps {
+                let mut g = vec![res_sq];
+                comm.allreduce(ReduceOp::Sum, &mut g);
+                curve.push((step + 1, g[0]));
+                if g[0] < spec.tol {
+                    break;
+                }
+            }
+        }
+        (
+            RankResult { interior: grid.interior(), compute_wall, steps_run },
+            curve,
+        )
+    })?;
+
+    let curve = report.ranks[0].result.1.clone();
+    let comm_time = report.comm_time();
+    let total_bytes = report.total_bytes();
+    let total_msgs = report.total_msgs();
+    let compute_wall_max = report
+        .ranks
+        .iter()
+        .map(|r| r.result.0.compute_wall)
+        .max()
+        .unwrap_or(Duration::ZERO);
+    let steps_run = report.ranks[0].result.0.steps_run;
+    let final_residual = curve.last().map(|&(_, r)| r).unwrap_or(f32::INFINITY);
+    Ok(JacobiReport {
+        steps_run,
+        final_residual,
+        residual_curve: curve,
+        comm_time,
+        wall: report.wall,
+        compute_wall_max,
+        total_bytes,
+        total_msgs,
+        ranks: report.ranks.into_iter().map(|r| r.result.0).collect(),
+    })
+}
+
+/// Serial oracle: same math (0.25·(N+S+W+E), same op order as the
+/// kernel), full global grid, pure Rust.
+pub fn serial_jacobi(h: usize, w: usize, steps: usize) -> (Vec<f32>, f32) {
+    let (ph, pw) = (h + 2, w + 2);
+    let mut grid = vec![0f32; ph * pw];
+    for j in 0..pw {
+        grid[j] = 1.0; // hot north wall
+    }
+    let mut next = grid.clone();
+    let mut res = 0f32;
+    for _ in 0..steps {
+        res = 0.0;
+        for i in 1..=h {
+            for j in 1..=w {
+                let v = 0.25
+                    * (grid[(i - 1) * pw + j]
+                        + grid[(i + 1) * pw + j]
+                        + grid[i * pw + j - 1]
+                        + grid[i * pw + j + 1]);
+                let d = v - grid[i * pw + j];
+                res += d * d;
+                next[i * pw + j] = v;
+            }
+        }
+        std::mem::swap(&mut grid, &mut next);
+    }
+    // return interior
+    let mut out = Vec::with_capacity(h * w);
+    for i in 1..=h {
+        out.extend_from_slice(&grid[i * pw + 1..i * pw + 1 + w]);
+    }
+    (out, res)
+}
+
+/// Stitch per-rank interiors back into the global grid (row-major).
+pub fn stitch(ranks: &[RankResult], px: usize, py: usize, tile: usize) -> Vec<f32> {
+    let w = py * tile;
+    let mut global = vec![0f32; px * tile * w];
+    for (r, rr) in ranks.iter().enumerate() {
+        let (ri, rj) = (r / py, r % py);
+        for i in 0..tile {
+            let dst = (ri * tile + i) * w + rj * tile;
+            global[dst..dst + tile]
+                .copy_from_slice(&rr.interior[i * tile..(i + 1) * tile]);
+        }
+    }
+    global
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::rack::Plant;
+    use crate::mpi::hostfile::Hostfile;
+    use crate::util::ids::{ContainerId, MachineId};
+    use crate::vnet::addr::Ipv4;
+    use crate::vnet::bridge::BridgeMode;
+    use crate::vnet::fabric::Fabric;
+    use std::collections::HashMap;
+    use std::sync::{Arc, Mutex};
+
+    fn have_artifacts() -> bool {
+        Runtime::default_dir().join("manifest.txt").exists()
+    }
+
+    fn plan(n_ranks: usize) -> LaunchPlan {
+        let hostfile = Hostfile::parse("10.10.0.2 slots=12\n10.10.0.3 slots=12\n").unwrap();
+        let plant = Plant::paper_testbed();
+        let mut fabric = Fabric::from_plant(&plant, BridgeMode::Bridge0);
+        let c2 = ContainerId::new(0);
+        let c3 = ContainerId::new(1);
+        fabric.place(c2, MachineId::new(1));
+        fabric.place(c3, MachineId::new(2));
+        let mut ip_to_container = HashMap::new();
+        ip_to_container.insert(Ipv4::parse("10.10.0.2").unwrap(), c2);
+        ip_to_container.insert(Ipv4::parse("10.10.0.3").unwrap(), c3);
+        LaunchPlan {
+            hostfile,
+            n_ranks,
+            ip_to_container,
+            fabric: Arc::new(Mutex::new(fabric)),
+            eager_threshold: 64 * 1024,
+        }
+    }
+
+    #[test]
+    fn distributed_matches_serial_oracle() {
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let spec = JacobiSpec {
+            px: 2,
+            py: 2,
+            tile: 32,
+            steps: 10,
+            check_every: 10,
+            tol: 0.0,
+            artifacts: Runtime::default_dir(),
+        };
+        let p = plan(4);
+        let report = run_jacobi(&p, &spec).unwrap();
+        let got = stitch(&report.ranks, 2, 2, 32);
+        let (want, res_want) = serial_jacobi(64, 64, 10);
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-5, "{g} vs {w}");
+        }
+        let res_got = report.final_residual;
+        assert!(
+            (res_got - res_want).abs() / res_want.max(1e-9) < 1e-3,
+            "residual {res_got} vs {res_want}"
+        );
+    }
+
+    #[test]
+    fn residual_decreases_monotonically() {
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let spec = JacobiSpec {
+            px: 2,
+            py: 2,
+            tile: 32,
+            steps: 60,
+            check_every: 20,
+            tol: 0.0,
+            artifacts: Runtime::default_dir(),
+        };
+        let p = plan(4);
+        let report = run_jacobi(&p, &spec).unwrap();
+        let curve = &report.residual_curve;
+        assert!(curve.len() >= 3);
+        for w in curve.windows(2) {
+            assert!(w[1].1 < w[0].1, "residual rose: {curve:?}");
+        }
+        assert!(report.comm_time > SimTime::ZERO);
+        assert!(report.total_bytes > 0);
+    }
+
+    #[test]
+    fn fig8_shape_sixteen_ranks() {
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let mut spec = JacobiSpec::fig8();
+        spec.steps = 20;
+        spec.check_every = 20;
+        let p = plan(16);
+        let report = run_jacobi(&p, &spec).unwrap();
+        assert_eq!(report.ranks.len(), 16);
+        assert_eq!(report.steps_run, 20);
+        assert!(report.final_residual.is_finite());
+    }
+
+    #[test]
+    fn serial_oracle_converges() {
+        let (_, r10) = serial_jacobi(32, 32, 10);
+        let (_, r200) = serial_jacobi(32, 32, 200);
+        assert!(r200 < r10);
+    }
+}

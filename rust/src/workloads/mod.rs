@@ -1,0 +1,15 @@
+//! MPI workloads that run on the virtual cluster.
+//!
+//! * [`jacobi`] — the paper's Fig. 8 "16-domain MPI job": a 2-D heat
+//!   diffusion solve with domain decomposition; per-rank compute is the
+//!   AOT Pallas kernel via PJRT, halo exchange is MPI over the fabric.
+//! * [`ring`] — osu-style ping-pong latency/bandwidth microbenchmark
+//!   (the Fig. 3 interconnect study).
+//! * [`gemm`] — replicated-B distributed GEMM (the MXU-path workload).
+
+pub mod gemm;
+pub mod jacobi;
+pub mod ring;
+
+pub use jacobi::{run_jacobi, JacobiReport, JacobiSpec};
+pub use ring::{ping_pong, PingPongPoint};

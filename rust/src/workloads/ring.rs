@@ -1,0 +1,111 @@
+//! osu-style ping-pong microbenchmark: measures the *virtual* one-way
+//! latency and effective bandwidth between rank 0 and rank 1 for a sweep
+//! of message sizes. Fig. 3's quantitative backbone.
+
+use crate::mpi::launcher::{mpirun, LaunchError, LaunchPlan};
+use crate::sim::SimTime;
+
+/// One point of the sweep.
+#[derive(Debug, Clone)]
+pub struct PingPongPoint {
+    pub bytes: usize,
+    /// Virtual one-way time.
+    pub one_way: SimTime,
+    /// Effective bandwidth in bytes/sec (payload / one-way).
+    pub bandwidth: f64,
+}
+
+/// Ping-pong between ranks 0 and 1, `reps` round trips per size.
+pub fn ping_pong(
+    plan: &LaunchPlan,
+    sizes: &[usize],
+    reps: usize,
+) -> Result<Vec<PingPongPoint>, LaunchError> {
+    assert!(plan.n_ranks >= 2);
+    let sizes_v = sizes.to_vec();
+    let report = mpirun(plan, move |comm| {
+        let mut out = Vec::new();
+        for (si, &bytes) in sizes_v.iter().enumerate() {
+            let tag_base = (si as u64) << 20;
+            let payload = vec![0u8; bytes];
+            let before = comm.vtime();
+            for rep in 0..reps {
+                let tag = tag_base + rep as u64;
+                if comm.rank == 0 {
+                    comm.send(1, tag, &payload);
+                    comm.recv(1, tag);
+                } else if comm.rank == 1 {
+                    comm.recv(0, tag);
+                    comm.send(0, tag, &payload);
+                }
+            }
+            let elapsed = comm.vtime().saturating_sub(before);
+            out.push(elapsed);
+        }
+        out
+    })?;
+
+    // rank 0's clock advanced by reps round trips per size
+    let r0 = &report.ranks[0].result;
+    Ok(sizes
+        .iter()
+        .zip(r0)
+        .map(|(&bytes, &elapsed)| {
+            let one_way_ns = elapsed.as_nanos() as f64 / (reps as f64 * 2.0);
+            let one_way = SimTime::from_nanos(one_way_ns as u64);
+            let bandwidth = bytes as f64 / (one_way_ns / 1e9);
+            PingPongPoint { bytes, one_way, bandwidth }
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::rack::Plant;
+    use crate::mpi::hostfile::Hostfile;
+    use crate::util::ids::{ContainerId, MachineId};
+    use crate::vnet::addr::Ipv4;
+    use crate::vnet::bridge::BridgeMode;
+    use crate::vnet::fabric::Fabric;
+    use std::collections::HashMap;
+    use std::sync::{Arc, Mutex};
+
+    fn plan(mode: BridgeMode) -> LaunchPlan {
+        let hostfile = Hostfile::parse("10.10.0.2 slots=1\n10.10.0.3 slots=1\n").unwrap();
+        let plant = Plant::paper_testbed();
+        let mut fabric = Fabric::from_plant(&plant, mode);
+        let c2 = ContainerId::new(0);
+        let c3 = ContainerId::new(1);
+        fabric.place(c2, MachineId::new(1));
+        fabric.place(c3, MachineId::new(2));
+        let mut ip_to_container = HashMap::new();
+        ip_to_container.insert(Ipv4::parse("10.10.0.2").unwrap(), c2);
+        ip_to_container.insert(Ipv4::parse("10.10.0.3").unwrap(), c3);
+        LaunchPlan {
+            hostfile,
+            n_ranks: 2,
+            ip_to_container,
+            fabric: Arc::new(Mutex::new(fabric)),
+            eager_threshold: 64 * 1024,
+        }
+    }
+
+    #[test]
+    fn latency_grows_with_size_and_bw_saturates() {
+        let p = plan(BridgeMode::Bridge0);
+        let pts = ping_pong(&p, &[64, 4096, 1 << 20], 4).unwrap();
+        assert!(pts[0].one_way < pts[2].one_way);
+        // large-message bandwidth approaches 10GbE line rate
+        let line = 10e9 / 8.0;
+        assert!(pts[2].bandwidth / line > 0.5, "bw={}", pts[2].bandwidth);
+    }
+
+    #[test]
+    fn nat_mode_is_slower_fig3() {
+        let pn = ping_pong(&plan(BridgeMode::Docker0), &[1 << 20], 4).unwrap();
+        let pd = ping_pong(&plan(BridgeMode::Bridge0), &[1 << 20], 4).unwrap();
+        assert!(pn[0].one_way > pd[0].one_way);
+        assert!(pn[0].bandwidth < pd[0].bandwidth);
+    }
+}

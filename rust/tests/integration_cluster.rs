@@ -1,0 +1,140 @@
+//! Integration tests: the full system composed through the public API.
+
+use vhpc::cluster::head::{JobKind, JobState};
+use vhpc::cluster::vcluster::{NodeState, VirtualCluster};
+use vhpc::config::ClusterSpec;
+use vhpc::runtime::Runtime;
+use vhpc::sim::SimTime;
+use vhpc::util::ids::MachineId;
+
+fn fast_spec() -> ClusterSpec {
+    let mut spec = ClusterSpec::paper_testbed();
+    spec.machine_spec.boot_time = SimTime::from_secs(5);
+    spec
+}
+
+fn have_artifacts() -> bool {
+    Runtime::default_dir().join("manifest.txt").exists()
+}
+
+/// The paper's full workflow with REAL compute: cluster up, hostfile via
+/// consul-template, 16-rank Jacobi through the head node's scheduler.
+#[test]
+fn end_to_end_jacobi_job_via_head_node() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut vc = VirtualCluster::new(fast_spec()).unwrap();
+    vc.start();
+    assert!(vc.advance_until(SimTime::from_secs(300), |st| st.head.slots_available() >= 16));
+    vc.submit("it-jacobi", 16, JobKind::Jacobi { px: 4, py: 4, tile: 64, steps: 40 });
+    assert!(vc.advance_until(SimTime::from_secs(3600), |st| !st.head.completed.is_empty()));
+    let rec = &vc.completed_jobs()[0];
+    assert!(matches!(rec.state, JobState::Done { .. }), "{:?}", rec.state);
+    let (steps, residual) = rec.result.expect("jacobi result");
+    assert_eq!(steps, 40);
+    assert!(residual.is_finite() && residual > 0.0);
+    assert!(vc.metrics().counter("jobs_completed") == 1);
+    assert!(vc.metrics().histogram("job_comm_seconds").is_some());
+}
+
+/// Config-file-driven cluster: text config -> running cluster.
+#[test]
+fn cluster_from_config_text() {
+    let spec = ClusterSpec::from_text(
+        "[cluster]\nname = \"cfg-test\"\nmachines = 4\nbridge = \"bridge0\"\nslots_per_node = 4\n\
+         [machine]\nboot_secs = 3\n\
+         [autoscale]\nmin_nodes = 3\nmax_nodes = 3\n",
+    )
+    .unwrap();
+    let mut vc = VirtualCluster::new(spec).unwrap();
+    vc.start();
+    assert!(vc.advance_until(SimTime::from_secs(300), |st| {
+        st.head.hostfile().map(|h| h.hosts.len()) == Some(3)
+    }));
+    assert_eq!(vc.state.head.slots_available(), 12);
+}
+
+/// Two jobs queue FIFO; both finish; queue latency recorded.
+#[test]
+fn job_queue_drains_in_order() {
+    let mut vc = VirtualCluster::new(fast_spec()).unwrap();
+    vc.start();
+    let a = vc.submit("a", 16, JobKind::Synthetic { duration: SimTime::from_secs(20) });
+    let b = vc.submit("b", 8, JobKind::Synthetic { duration: SimTime::from_secs(10) });
+    assert!(vc.advance_until(SimTime::from_secs(3600), |st| st.head.completed.len() == 2));
+    let done = vc.completed_jobs();
+    assert_eq!(done[0].spec.id, a);
+    assert_eq!(done[1].spec.id, b);
+    if let (JobState::Done { finished: fa, .. }, JobState::Done { started: sb, .. }) =
+        (&done[0].state, &done[1].state)
+    {
+        assert!(sb >= fa, "job b started before a finished");
+    } else {
+        panic!("jobs not done");
+    }
+}
+
+/// Kill a machine mid-cluster with autoscaling disabled: the hostfile
+/// shrinks; jobs needing more slots than remain queue forever until we
+/// re-provision manually.
+#[test]
+fn failure_and_manual_recovery() {
+    let mut spec = fast_spec();
+    spec.autoscale.enabled = false;
+    spec.autoscale.min_nodes = 2;
+    let mut vc = VirtualCluster::new(spec).unwrap();
+    vc.start();
+    assert!(vc.advance_until(SimTime::from_secs(300), |st| {
+        st.head.hostfile().map(|h| h.hosts.len()) == Some(2)
+    }));
+    vc.kill_machine(MachineId::new(2));
+    assert!(vc.advance_until(SimTime::from_secs(120), |st| {
+        st.head.hostfile().map(|h| h.hosts.len()) == Some(1)
+    }));
+    // 16-rank job can't run on 12 slots
+    vc.submit("stuck", 16, JobKind::Synthetic { duration: SimTime::from_secs(5) });
+    vc.advance(SimTime::from_secs(60));
+    assert!(vc.completed_jobs().is_empty());
+    // manual recovery
+    vc.power_on(MachineId::new(2));
+    assert!(vc.advance_until(SimTime::from_secs(300), |st| !st.head.completed.is_empty()));
+}
+
+/// The Fig. 4 shape: every container IP in the hostfile is leased from
+/// the bridge subnet and routes to a distinct machine.
+#[test]
+fn hostfile_ips_match_bridge_leases() {
+    let mut vc = VirtualCluster::new(fast_spec()).unwrap();
+    vc.start();
+    assert!(vc.advance_until(SimTime::from_secs(300), |st| {
+        st.head.hostfile().map(|h| h.hosts.len()) == Some(2)
+    }));
+    let hf = vc.state.head.hostfile().unwrap();
+    let subnet = vhpc::vnet::Cidr::parse("10.10.0.0/16").unwrap();
+    let mut machines = std::collections::HashSet::new();
+    for host in &hf.hosts {
+        assert!(subnet.contains(host.addr), "{} outside {}", host.addr, subnet);
+        let cid = vc.state.ip_to_container[&host.addr];
+        let m = vc.state.fabric.lock().unwrap().machine_of(cid).unwrap();
+        assert!(machines.insert(m), "two hostfile entries on one machine");
+    }
+}
+
+/// Provisioning metrics are recorded and plausible.
+#[test]
+fn provisioning_metrics_recorded() {
+    let mut vc = VirtualCluster::new(fast_spec()).unwrap();
+    vc.start();
+    assert!(vc.advance_until(SimTime::from_secs(300), |st| {
+        st.node_states.iter().filter(|s| **s == NodeState::Ready).count() == 3
+    }));
+    let m = vc.metrics();
+    assert_eq!(m.counter("machines_powered_on"), 3);
+    assert_eq!(m.counter("nodes_ready"), 3);
+    assert!(m.counter("bytes_pulled") > 3 * 20_000_000);
+    let prov = m.histogram("provision_seconds").unwrap();
+    assert_eq!(prov.count(), 3);
+    assert!(prov.mean() > 5.0); // at least the boot time
+}
