@@ -8,6 +8,7 @@
 
 use vhpc::bench::{banner, print_table};
 use vhpc::cluster::head::JobKind;
+use vhpc::cluster::mix::{bursty_trace, mix_spec, run_job_trace, TraceOutcome};
 use vhpc::cluster::vcluster::VirtualCluster;
 use vhpc::config::ClusterSpec;
 use vhpc::sim::SimTime;
@@ -71,6 +72,16 @@ fn run(boot_secs: u64, autoscale: bool, min_nodes: u32) -> Outcome {
     }
 }
 
+/// Run the canonical bursty mix (36-rank wide jobs bracketing narrow
+/// ones) with the head capped at `max_concurrent` jobs (1 = the seed's
+/// serial scheduler).
+fn run_mix(max_concurrent: usize) -> TraceOutcome {
+    let spec = mix_spec(SimTime::from_secs(30));
+    let (outcome, _) =
+        run_job_trace(spec, &bursty_trace(36, 10), max_concurrent, 36, 3600).expect("mix trace");
+    outcome
+}
+
 fn main() {
     banner("Ext-B — autoscaler response to a 4x36-rank burst (8 machines)");
     let configs: Vec<(String, u64, bool, u32)> = vec![
@@ -115,5 +126,39 @@ fn main() {
     assert!(static1.all_done_at.is_none(), "1 static node must starve the burst");
     // autoscaler returns to min after idleness
     assert_eq!(auto90.final_nodes, 1, "must scale back to min after idle");
-    println!("\next_autoscale OK (reaches capacity, drains burst, scales back)");
+
+    banner("Ext-B2 — mixed-width trace: serial (seed) head vs slot-aware backfill");
+    let serial = run_mix(1);
+    let concurrent = run_mix(usize::MAX);
+    print_table(
+        &["scheduler", "mean queue wait", "makespan", "peak jobs", "backfills"],
+        &[
+            vec![
+                "serial (1 job)".into(),
+                format!("{:.1}s", serial.mean_wait),
+                format!("{:.1}s", serial.makespan),
+                serial.peak_concurrency.to_string(),
+                serial.backfill_starts.to_string(),
+            ],
+            vec![
+                "concurrent".into(),
+                format!("{:.1}s", concurrent.mean_wait),
+                format!("{:.1}s", concurrent.makespan),
+                concurrent.peak_concurrency.to_string(),
+                concurrent.backfill_starts.to_string(),
+            ],
+        ],
+    );
+    assert!(concurrent.peak_concurrency >= 3, "must overlap >= 3 jobs");
+    assert!(
+        concurrent.mean_wait < serial.mean_wait,
+        "concurrent scheduler must cut mean queue wait ({:.1}s vs {:.1}s)",
+        concurrent.mean_wait,
+        serial.mean_wait
+    );
+    assert!(concurrent.makespan < serial.makespan, "overlap must cut makespan");
+
+    println!(
+        "\next_autoscale OK (reaches capacity, drains burst, scales back, backfill cuts waits)"
+    );
 }

@@ -3,6 +3,7 @@
 //! ```text
 //! vhpc up         [--config F] [--machines N] [--sim-seconds S]
 //! vhpc run        [--ranks N] [--tile T] [--steps K] [--bridge MODE]
+//! vhpc mix        [--jobs N] [--machines M] [--max-concurrent K]
 //! vhpc build      [--dockerfile F]
 //! vhpc bench-net  [--bridge MODE]
 //! vhpc version
@@ -51,6 +52,8 @@ fn load_spec(flags: &HashMap<String, String>) -> Result<ClusterSpec, String> {
     if let Some(m) = flags.get("machines") {
         spec.machines = m.parse().map_err(|_| "bad --machines".to_string())?;
         spec.autoscale.max_nodes = spec.machines.saturating_sub(1).max(1);
+        // keep the policy bounds ordered when the machine count shrinks
+        spec.autoscale.min_nodes = spec.autoscale.min_nodes.min(spec.autoscale.max_nodes);
     }
     if let Some(b) = flags.get("bridge") {
         spec.bridge = match b.as_str() {
@@ -108,6 +111,58 @@ fn cmd_run(flags: HashMap<String, String>) -> Result<(), String> {
     if let Some((steps_run, residual)) = rec.result {
         println!("jacobi: {steps_run} steps, final residual {residual:.3e}");
     }
+    println!("--- metrics ---\n{}", vc.metrics().render());
+    Ok(())
+}
+
+/// Drive a bursty mix of wide and narrow synthetic jobs through the
+/// concurrent scheduler and report queue waits and overlap.
+fn cmd_mix(flags: HashMap<String, String>) -> Result<(), String> {
+    let mut spec = load_spec(&flags)?;
+    if !flags.contains_key("machines") && !flags.contains_key("config") {
+        // no explicit topology: default to the same 8-machine mix
+        // cluster the job_mix example runs on
+        let boot = spec.machine_spec.boot_time;
+        let bridge = spec.bridge;
+        spec = crate::cluster::mix::mix_spec(boot);
+        spec.bridge = bridge;
+    }
+    spec.autoscale.min_nodes = spec
+        .autoscale
+        .min_nodes
+        .max(1)
+        .min(spec.autoscale.max_nodes.max(1));
+    let jobs: u32 = flag(&flags, "jobs", 10u32)?;
+    let max_concurrent: usize = flag(&flags, "max-concurrent", 0usize)?;
+    let sim_secs: u64 = flag(&flags, "sim-seconds", 3600u64)?;
+
+    // scale the canonical trace to what this cluster can actually
+    // advertise, so a small --machines/--config runs a smaller mix
+    // instead of queueing impossible jobs
+    let cap_slots = spec.max_advertisable_slots();
+    if cap_slots == 0 {
+        return Err("cluster has no compute capacity (needs >= 2 machines)".into());
+    }
+    let trace: Vec<(u32, u64)> = crate::cluster::mix::bursty_trace(24.min(cap_slots), jobs as usize)
+        .into_iter()
+        .map(|(ranks, secs)| (ranks.min(cap_slots), secs))
+        .collect();
+    // wait for the minimum pool before submitting (same protocol as the
+    // job_mix example / ext_autoscale bench)
+    let warmup = (spec.autoscale.min_nodes * spec.slots_per_node).clamp(1, cap_slots);
+    let cap = if max_concurrent == 0 { usize::MAX } else { max_concurrent };
+    let (outcome, vc) = crate::cluster::mix::run_job_trace(spec, &trace, cap, warmup, sim_secs)
+        .map_err(|e| e.to_string())?;
+    println!(
+        "t={}  jobs done: {jobs}/{jobs}  peak concurrency: {}  backfill starts: {}",
+        vc.now(),
+        outcome.peak_concurrency,
+        outcome.backfill_starts
+    );
+    println!(
+        "mean queue wait: {:.1}s  max queue wait: {:.1}s  makespan: {:.1}s",
+        outcome.mean_wait, outcome.max_wait, outcome.makespan
+    );
     println!("--- metrics ---\n{}", vc.metrics().render());
     Ok(())
 }
@@ -179,6 +234,7 @@ pub fn main() -> i32 {
         }
         "up" => parse_flags(rest).and_then(cmd_up),
         "run" => parse_flags(rest).and_then(cmd_run),
+        "mix" => parse_flags(rest).and_then(cmd_mix),
         "build" => parse_flags(rest).and_then(cmd_build),
         "bench-net" => parse_flags(rest).and_then(cmd_bench_net),
         "help" | "--help" | "-h" => {
@@ -186,6 +242,7 @@ pub fn main() -> i32 {
                 "vhpc — virtual HPC cluster with auto-scaling (Yu & Huang 2015 reproduction)\n\n\
                  usage:\n  vhpc up        [--config F] [--machines N] [--sim-seconds S] [--bridge MODE]\n  \
                  vhpc run       [--ranks N] [--tile T] [--steps K] [--bridge MODE]\n  \
+                 vhpc mix       [--jobs N] [--machines M] [--max-concurrent K] [--sim-seconds S]\n  \
                  vhpc build     [--dockerfile F]\n  \
                  vhpc bench-net [--bridge docker0|bridge0|host]\n  \
                  vhpc version"

@@ -1,7 +1,14 @@
 //! Auto-scaling policy (the paper's headline feature): grow the node
-//! pool when demand outruns capacity, shrink after sustained idleness —
-//! with bounds, cooldown and hysteresis. Pure: `decide()` maps an
-//! observation to an action; the cluster executes it.
+//! pool when demand outruns capacity, shrink after sustained low
+//! utilization — with bounds, cooldown and hysteresis. Pure: `decide()`
+//! maps an observation to an action; the cluster executes it.
+//!
+//! Scale-down is based on *utilization* (target nodes < ready nodes),
+//! not on a strictly empty queue: a cluster that drops from 100
+//! demanded slots to 1 shrinks once the low load is sustained. Cooldown
+//! is per-direction: a recent `Down` never delays an urgent `Up`, while
+//! `Down` waits out both directions (so the pool doesn't flap after a
+//! burst).
 
 use crate::config::AutoscaleConfig;
 use crate::sim::SimTime;
@@ -14,9 +21,20 @@ pub struct Observation {
     pub ready_nodes: u32,
     /// Nodes between power-on and registration.
     pub provisioning_nodes: u32,
-    /// Slots demanded by queued + running jobs.
-    pub demanded_slots: u32,
+    /// Slots demanded by queued jobs not yet scheduled.
+    pub queued_slots: u32,
+    /// Slots already reserved by running jobs. Kept separate from
+    /// `queued_slots` so the policy never double-counts demand that is
+    /// already being served by reserved capacity.
+    pub reserved_slots: u32,
     pub slots_per_node: u32,
+}
+
+impl Observation {
+    /// Total slot demand: queued plus reserved (running) slots.
+    pub fn demanded_slots(&self) -> u32 {
+        self.queued_slots + self.reserved_slots
+    }
 }
 
 /// The policy's verdict.
@@ -29,32 +47,55 @@ pub enum ScaleAction {
     Down(u32),
 }
 
-/// Stateful policy wrapper (cooldown + idle tracking).
+/// Stateful policy wrapper (per-direction cooldowns + low-utilization
+/// tracking).
 #[derive(Debug, Clone)]
 pub struct Autoscaler {
     pub config: AutoscaleConfig,
-    last_action_at: Option<SimTime>,
-    idle_since: Option<SimTime>,
+    last_up_at: Option<SimTime>,
+    last_down_at: Option<SimTime>,
+    low_util_since: Option<SimTime>,
     /// Decisions taken (for the benches).
     pub actions: Vec<(SimTime, ScaleAction)>,
 }
 
 impl Autoscaler {
     pub fn new(config: AutoscaleConfig) -> Self {
-        Self { config, last_action_at: None, idle_since: None, actions: Vec::new() }
+        Self {
+            config,
+            last_up_at: None,
+            last_down_at: None,
+            low_util_since: None,
+            actions: Vec::new(),
+        }
     }
 
-    /// Target node count for a demand level.
+    /// Target node count for a demand level. Tolerates a misconfigured
+    /// `min_nodes > max_nodes` by normalizing the bounds instead of
+    /// panicking in `clamp`.
     pub fn target_nodes(&self, demanded_slots: u32, slots_per_node: u32) -> u32 {
         let needed = demanded_slots.div_ceil(slots_per_node.max(1));
-        needed.clamp(self.config.min_nodes, self.config.max_nodes)
+        let lo = self.config.min_nodes.min(self.config.max_nodes);
+        let hi = self.config.max_nodes.max(self.config.min_nodes);
+        needed.clamp(lo, hi)
     }
 
-    fn in_cooldown(&self, now: SimTime) -> bool {
-        match self.last_action_at {
+    fn within(&self, now: SimTime, t: Option<SimTime>) -> bool {
+        match t {
             Some(t) => now.saturating_sub(t) < self.config.cooldown,
             None => false,
         }
+    }
+
+    /// An `Up` is blocked only by a recent `Up`: a `Down` taken moments
+    /// ago must not delay reacting to a fresh burst.
+    fn up_in_cooldown(&self, now: SimTime) -> bool {
+        self.within(now, self.last_up_at)
+    }
+
+    /// A `Down` waits out both directions (anti-flap).
+    fn down_in_cooldown(&self, now: SimTime) -> bool {
+        self.within(now, self.last_up_at) || self.within(now, self.last_down_at)
     }
 
     /// Evaluate the policy.
@@ -62,31 +103,32 @@ impl Autoscaler {
         if !self.config.enabled {
             return ScaleAction::None;
         }
-        // idle tracking (demand == 0)
-        if obs.demanded_slots == 0 {
-            if self.idle_since.is_none() {
-                self.idle_since = Some(obs.now);
+        let target = self.target_nodes(obs.demanded_slots(), obs.slots_per_node);
+
+        // Low-utilization tracking: over-provisioned whenever the ready
+        // pool exceeds what current demand needs (not just on demand 0).
+        if obs.ready_nodes > target {
+            if self.low_util_since.is_none() {
+                self.low_util_since = Some(obs.now);
             }
         } else {
-            self.idle_since = None;
+            self.low_util_since = None;
         }
 
-        let target = self.target_nodes(obs.demanded_slots, obs.slots_per_node);
         let have = obs.ready_nodes + obs.provisioning_nodes;
-
         let action = if have < target {
-            if self.in_cooldown(obs.now) {
+            if self.up_in_cooldown(obs.now) {
                 ScaleAction::None
             } else {
                 ScaleAction::Up(target - have)
             }
         } else if obs.ready_nodes > target {
-            // scale down only after sustained idleness (hysteresis)
-            let idle_long_enough = self
-                .idle_since
+            // scale down only after sustained low utilization (hysteresis)
+            let low_long_enough = self
+                .low_util_since
                 .map(|t| obs.now.saturating_sub(t) >= self.config.idle_timeout)
                 .unwrap_or(false);
-            if idle_long_enough && !self.in_cooldown(obs.now) {
+            if low_long_enough && !self.down_in_cooldown(obs.now) {
                 ScaleAction::Down(obs.ready_nodes - target)
             } else {
                 ScaleAction::None
@@ -95,11 +137,32 @@ impl Autoscaler {
             ScaleAction::None
         };
 
+        match action {
+            ScaleAction::Up(_) => self.last_up_at = Some(obs.now),
+            ScaleAction::Down(_) => self.last_down_at = Some(obs.now),
+            ScaleAction::None => {}
+        }
         if action != ScaleAction::None {
-            self.last_action_at = Some(obs.now);
             self.actions.push((obs.now, action));
         }
         action
+    }
+
+    /// The executor reports that the `Down` decided at `at` retired no
+    /// nodes (every candidate was busy): un-arm the down cooldown so
+    /// the next opportunity isn't delayed by a no-op, and drop the
+    /// phantom entry from the action log.
+    pub fn down_was_noop(&mut self, at: SimTime) {
+        if self.last_down_at == Some(at) {
+            self.last_down_at = None;
+            if let Some(pos) = self
+                .actions
+                .iter()
+                .rposition(|(t, a)| *t == at && matches!(a, ScaleAction::Down(_)))
+            {
+                self.actions.remove(pos);
+            }
+        }
     }
 }
 
@@ -118,12 +181,17 @@ mod tests {
         }
     }
 
-    fn obs(now_s: u64, ready: u32, prov: u32, demand: u32) -> Observation {
+    fn obs(now_s: u64, ready: u32, prov: u32, queued: u32) -> Observation {
+        obs_r(now_s, ready, prov, queued, 0)
+    }
+
+    fn obs_r(now_s: u64, ready: u32, prov: u32, queued: u32, reserved: u32) -> Observation {
         Observation {
             now: SimTime::from_secs(now_s),
             ready_nodes: ready,
             provisioning_nodes: prov,
-            demanded_slots: demand,
+            queued_slots: queued,
+            reserved_slots: reserved,
             slots_per_node: 12,
         }
     }
@@ -133,6 +201,16 @@ mod tests {
         let mut a = Autoscaler::new(config());
         // 40 slots / 12 per node => 4 nodes; have 1
         assert_eq!(a.decide(obs(0, 1, 0, 40)), ScaleAction::Up(3));
+    }
+
+    #[test]
+    fn reserved_slots_count_as_served_demand() {
+        let mut a = Autoscaler::new(config());
+        // 36 reserved (running) + 0 queued on 3 ready nodes: perfectly
+        // sized — no double-scaling on demand the pool already serves
+        assert_eq!(a.decide(obs_r(0, 3, 0, 0, 36)), ScaleAction::None);
+        // 12 queued on top: one more node
+        assert_eq!(a.decide(obs_r(5, 3, 0, 12, 36)), ScaleAction::Up(1));
     }
 
     #[test]
@@ -151,7 +229,19 @@ mod tests {
     }
 
     #[test]
-    fn cooldown_suppresses_consecutive_actions() {
+    fn sustained_low_demand_scales_down_without_full_idle() {
+        let mut a = Autoscaler::new(config());
+        // demand collapses from 96 slots (8 nodes) to 1 slot — never 0.
+        // The old policy only armed its idle clock at demand == 0 and
+        // kept 8 nodes forever; low utilization must shrink the pool.
+        assert_eq!(a.decide(obs_r(0, 8, 0, 0, 96)), ScaleAction::None);
+        assert_eq!(a.decide(obs_r(10, 8, 0, 0, 1)), ScaleAction::None); // clock arms
+        assert_eq!(a.decide(obs_r(60, 8, 0, 0, 1)), ScaleAction::None);
+        assert_eq!(a.decide(obs_r(131, 8, 0, 0, 1)), ScaleAction::Down(7));
+    }
+
+    #[test]
+    fn cooldown_suppresses_consecutive_ups() {
         let mut a = Autoscaler::new(config());
         assert_eq!(a.decide(obs(0, 1, 0, 40)), ScaleAction::Up(3));
         // still short: cooldown blocks another Up
@@ -161,18 +251,53 @@ mod tests {
     }
 
     #[test]
+    fn down_cooldown_never_delays_an_urgent_up() {
+        let mut a = Autoscaler::new(config());
+        a.decide(obs(0, 3, 0, 0));
+        assert_eq!(a.decide(obs(121, 3, 0, 0)), ScaleAction::Down(2));
+        // a burst lands 5s after the Down: Up must fire immediately
+        assert_eq!(a.decide(obs(126, 1, 0, 40)), ScaleAction::Up(3));
+    }
+
+    #[test]
     fn provisioning_nodes_count_toward_capacity() {
         let mut a = Autoscaler::new(config());
         assert_eq!(a.decide(obs(0, 1, 3, 40)), ScaleAction::None);
     }
 
     #[test]
-    fn new_demand_resets_idle_clock() {
+    fn new_demand_resets_low_util_clock() {
         let mut a = Autoscaler::new(config());
         a.decide(obs(0, 3, 0, 0));
-        a.decide(obs(100, 3, 0, 24)); // burst arrives: idle reset
-        assert_eq!(a.decide(obs(130, 3, 0, 0)), ScaleAction::None); // only 30s idle
+        a.decide(obs(100, 3, 0, 36)); // burst sized to the pool: clock resets
+        assert_eq!(a.decide(obs(130, 3, 0, 0)), ScaleAction::None); // only 30s low
         assert_eq!(a.decide(obs(260, 3, 0, 0)), ScaleAction::Down(2));
+    }
+
+    #[test]
+    fn noop_down_does_not_burn_cooldown() {
+        let mut a = Autoscaler::new(config());
+        a.decide(obs(0, 3, 0, 0));
+        assert_eq!(a.decide(obs(121, 3, 0, 0)), ScaleAction::Down(2));
+        // executor found every candidate node busy: nothing retired
+        a.down_was_noop(SimTime::from_secs(121));
+        assert!(
+            !a.actions.iter().any(|(_, act)| matches!(act, ScaleAction::Down(_))),
+            "phantom Down must leave the action log"
+        );
+        // the very next interval may retire freed nodes — no cooldown
+        assert_eq!(a.decide(obs(126, 3, 0, 0)), ScaleAction::Down(2));
+    }
+
+    #[test]
+    fn min_above_max_does_not_panic() {
+        let mut cfg = config();
+        cfg.min_nodes = 2;
+        cfg.max_nodes = 1; // e.g. `--machines 2` shrinking max below min
+        let mut a = Autoscaler::new(cfg);
+        assert_eq!(a.decide(obs(0, 0, 0, 0)), ScaleAction::None);
+        // demand clamps into the normalized [1, 2] band
+        assert_eq!(a.decide(obs(5, 0, 0, 999)), ScaleAction::Up(2));
     }
 
     #[test]
@@ -183,8 +308,9 @@ mod tests {
         assert_eq!(a.decide(obs(0, 0, 0, 999)), ScaleAction::None);
     }
 
-    /// Property: across random demand traces, (ready+provisioning) never
-    /// targeted beyond [min, max], and actions never fire inside cooldown.
+    /// Property: across random demand traces, targets never leave
+    /// [min, max]; Up never fires inside the Up cooldown; Down never
+    /// fires inside either cooldown.
     #[test]
     fn prop_bounds_and_cooldown_hold() {
         use crate::util::Rng;
@@ -193,36 +319,46 @@ mod tests {
             let mut a = Autoscaler::new(config());
             let mut ready = 1u32;
             let mut prov = 0u32;
-            let mut last_action: Option<SimTime> = None;
+            let mut last_up: Option<SimTime> = None;
+            let mut last_any: Option<SimTime> = None;
             for step in 0..200u64 {
                 let now = SimTime::from_secs(step * 5);
-                let demand = (rng.gen_range(20) * 10) as u32;
+                let queued = (rng.gen_range(20) * 10) as u32;
+                let reserved = (rng.gen_range(5) * 12) as u32;
                 let action = a.decide(Observation {
                     now,
                     ready_nodes: ready,
                     provisioning_nodes: prov,
-                    demanded_slots: demand,
+                    queued_slots: queued,
+                    reserved_slots: reserved,
                     slots_per_node: 12,
                 });
                 match action {
                     ScaleAction::Up(n) => {
                         assert!(ready + prov + n <= a.config.max_nodes, "over max");
+                        if let Some(t) = last_up {
+                            assert!(
+                                now.saturating_sub(t) >= a.config.cooldown,
+                                "Up inside Up-cooldown"
+                            );
+                        }
                         prov += n;
+                        last_up = Some(now);
                     }
                     ScaleAction::Down(n) => {
                         assert!(ready - n >= a.config.min_nodes, "under min");
+                        if let Some(t) = last_any {
+                            assert!(
+                                now.saturating_sub(t) >= a.config.cooldown,
+                                "Down inside cooldown"
+                            );
+                        }
                         ready -= n;
                     }
                     ScaleAction::None => {}
                 }
                 if action != ScaleAction::None {
-                    if let Some(t) = last_action {
-                        assert!(
-                            now.saturating_sub(t) >= a.config.cooldown,
-                            "acted inside cooldown"
-                        );
-                    }
-                    last_action = Some(now);
+                    last_any = Some(now);
                 }
                 // provisioning completes stochastically
                 if prov > 0 && rng.gen_bool(0.4) {

@@ -1,11 +1,26 @@
-//! Head-node state: the job queue and the consul-template hostfile
-//! watcher (the paper's Fig. 5 loop lives here).
+//! Head-node state: the job queue, the slot-aware concurrent scheduler
+//! and the consul-template hostfile watcher (the paper's Fig. 5 loop
+//! lives here).
+//!
+//! Scheduling model: the hostfile advertises `slots` per compute node.
+//! Each running job holds a *reservation* — a slice of specific host
+//! slots carved out of the current hostfile — so any number of jobs can
+//! run concurrently without two jobs ever sharing an advertised slot.
+//! Dispatch is FIFO with **conservative backfill**: a younger job may
+//! start ahead of the head-of-queue job only if (a) it fits in the
+//! currently free slots the head job cannot use yet and (b) the slots
+//! held by all younger jobs combined still leave the head job's full
+//! width available once its elders drain. Invariant (b) is what makes
+//! the backfill starvation-free: as long as running jobs terminate and
+//! advertised capacity reaches the head job's width, the head job
+//! eventually starts.
 
 use crate::consul::template::{Template, TemplateWatcher};
-use crate::mpi::hostfile::Hostfile;
+use crate::mpi::hostfile::{HostSlot, Hostfile};
 use crate::sim::SimTime;
 use crate::util::ids::JobId;
-use std::collections::VecDeque;
+use crate::vnet::addr::Ipv4;
+use std::collections::{HashMap, HashSet, VecDeque};
 
 /// What kind of work a job is.
 #[derive(Debug, Clone)]
@@ -35,7 +50,7 @@ pub enum JobState {
     Failed { reason: String },
 }
 
-/// Completed-job record.
+/// Per-job record (running or completed).
 #[derive(Debug, Clone)]
 pub struct JobRecord {
     pub spec: JobSpec,
@@ -43,6 +58,17 @@ pub struct JobRecord {
     /// For Jacobi jobs: (steps, final residual).
     pub result: Option<(usize, f32)>,
     pub queued_at: SimTime,
+}
+
+/// A job the scheduler just dispatched: its spec plus the hostfile slice
+/// reserved for it (what `mpirun --hostfile` gets for this job).
+#[derive(Debug, Clone)]
+pub struct StartedJob {
+    pub spec: JobSpec,
+    pub queued_at: SimTime,
+    pub hostfile_slice: Hostfile,
+    /// True when the job overtook the head-of-queue job via backfill.
+    pub backfilled: bool,
 }
 
 /// The head container's state.
@@ -53,9 +79,15 @@ pub struct Head {
     pub hostfile_updated_at: SimTime,
     pub hostfile_renders: u64,
     pub queue: VecDeque<(JobSpec, SimTime)>,
-    pub running: Option<JobRecord>,
+    /// Concurrently running jobs, keyed by id.
+    pub running: HashMap<JobId, JobRecord>,
+    /// Per-job slot reservations (slices of the advertised hostfile).
+    reserved: HashMap<JobId, Vec<HostSlot>>,
     pub completed: Vec<JobRecord>,
     pub poll_interval: SimTime,
+    /// Cap on concurrent jobs (`usize::MAX` = slot-limited only). Set to
+    /// 1 to reproduce the old one-job-at-a-time head for comparisons.
+    pub max_concurrent: usize,
 }
 
 impl Default for Head {
@@ -72,9 +104,11 @@ impl Head {
             hostfile_updated_at: SimTime::ZERO,
             hostfile_renders: 0,
             queue: VecDeque::new(),
-            running: None,
+            running: HashMap::new(),
+            reserved: HashMap::new(),
             completed: Vec::new(),
             poll_interval: SimTime::from_millis(200),
+            max_concurrent: usize::MAX,
         }
     }
 
@@ -88,45 +122,193 @@ impl Head {
         self.hostfile().map(|h| h.total_slots()).unwrap_or(0)
     }
 
+    /// Slots held by running jobs' reservations.
+    pub fn reserved_slots(&self) -> u32 {
+        self.running.values().map(|r| r.spec.ranks).sum()
+    }
+
+    /// Slots demanded by jobs still waiting in the queue.
+    pub fn queued_slots(&self) -> u32 {
+        self.queue.iter().map(|(j, _)| j.ranks).sum()
+    }
+
     /// Slots demanded by queued + running jobs.
     pub fn demanded_slots(&self) -> u32 {
-        let q: u32 = self.queue.iter().map(|(j, _)| j.ranks).sum();
-        let r = self
-            .running
-            .as_ref()
-            .map(|j| j.spec.ranks)
-            .unwrap_or(0);
-        q + r
+        self.queued_slots() + self.reserved_slots()
+    }
+
+    /// Advertised slots not reserved by any running job.
+    pub fn free_slots(&self) -> u32 {
+        self.free_per_host().iter().map(|h| h.slots).sum()
+    }
+
+    /// Per-host free capacity: advertised slots minus reservations, in
+    /// hostfile order. Hosts that left the hostfile contribute nothing;
+    /// reservations pointing at them are simply unmatched.
+    fn free_per_host(&self) -> Vec<HostSlot> {
+        let hf = match self.hostfile() {
+            Some(hf) => hf,
+            None => return Vec::new(),
+        };
+        let held = self.reserved_per_host();
+        hf.hosts
+            .into_iter()
+            .map(|h| HostSlot {
+                addr: h.addr,
+                slots: h.slots.saturating_sub(held.get(&h.addr).copied().unwrap_or(0)),
+            })
+            .collect()
+    }
+
+    /// Reserved slot count per host address (for overbooking checks).
+    pub fn reserved_per_host(&self) -> HashMap<Ipv4, u32> {
+        let mut held: HashMap<Ipv4, u32> = HashMap::new();
+        for slice in self.reserved.values() {
+            for h in slice {
+                *held.entry(h.addr).or_insert(0) += h.slots;
+            }
+        }
+        held
+    }
+
+    /// Host addresses with at least one reserved slot (nodes the cluster
+    /// must not retire while jobs hold them).
+    pub fn reserved_addrs(&self) -> HashSet<Ipv4> {
+        self.reserved
+            .values()
+            .flat_map(|slice| slice.iter().map(|h| h.addr))
+            .collect()
+    }
+
+    /// Hosts where reservations exceed the advertised slot count. Always
+    /// empty unless a reserved host shrank or left the hostfile.
+    pub fn overbooked_hosts(&self) -> Vec<Ipv4> {
+        let advertised: HashMap<Ipv4, u32> = self
+            .hostfile()
+            .map(|hf| hf.hosts.into_iter().map(|h| (h.addr, h.slots)).collect())
+            .unwrap_or_default();
+        self.reserved_per_host()
+            .into_iter()
+            .filter(|(addr, held)| *held > advertised.get(addr).copied().unwrap_or(0))
+            .map(|(addr, _)| addr)
+            .collect()
     }
 
     pub fn submit(&mut self, spec: JobSpec, now: SimTime) {
         self.queue.push_back((spec, now));
     }
 
-    /// Pop the next runnable job if enough slots are advertised.
-    pub fn next_runnable(&mut self, now: SimTime) -> Option<JobRecord> {
-        if self.running.is_some() {
+    /// Dispatch the next startable job, reserving its slots: FIFO first,
+    /// then conservative backfill. Call in a loop until `None` — each
+    /// call starts at most one job. The returned record is already in
+    /// `running`.
+    pub fn start_next(&mut self, now: SimTime) -> Option<StartedJob> {
+        if self.running.len() >= self.max_concurrent {
             return None;
         }
-        let slots = self.slots_available();
-        match self.queue.front() {
-            Some((job, _)) if job.ranks <= slots => {
-                let (spec, queued_at) = self.queue.pop_front().unwrap();
-                Some(JobRecord {
-                    spec,
-                    state: JobState::Running { started: now },
-                    result: None,
-                    queued_at,
+        // one hostfile parse per dispatch attempt: derive the total and
+        // the per-host free pool from the same parsed view
+        let hf = self.hostfile()?;
+        let total = hf.total_slots();
+        let held = self.reserved_per_host();
+        let mut free: Vec<HostSlot> = hf
+            .hosts
+            .into_iter()
+            .map(|h| HostSlot {
+                addr: h.addr,
+                slots: h.slots.saturating_sub(held.get(&h.addr).copied().unwrap_or(0)),
+            })
+            .collect();
+        let free_total: u32 = free.iter().map(|h| h.slots).sum();
+        let (head_id, head_ranks) = {
+            let (head, _) = self.queue.front()?;
+            (head.id, head.ranks)
+        };
+        let (idx, backfilled) = if head_ranks <= free_total {
+            (0, false)
+        } else {
+            // Head blocked: backfill a younger job, but never let younger
+            // jobs collectively hold more than `total - head_ranks` slots
+            // (the head job keeps a claim on its full width).
+            let younger_held: u32 = self
+                .running
+                .values()
+                .filter(|r| r.spec.id > head_id)
+                .map(|r| r.spec.ranks)
+                .sum();
+            let idx = self
+                .queue
+                .iter()
+                .enumerate()
+                .skip(1)
+                .find(|(_, (j, _))| {
+                    j.ranks <= free_total
+                        && head_ranks
+                            .checked_add(younger_held)
+                            .and_then(|s| s.checked_add(j.ranks))
+                            .map(|s| s <= total)
+                            .unwrap_or(false)
                 })
-            }
-            _ => None,
+                .map(|(i, _)| i)?;
+            (idx, true)
+        };
+        let (spec, queued_at) = self.queue.remove(idx).expect("index in range");
+        let slice = carve(&mut free, spec.ranks).expect("fit checked above");
+        self.reserved.insert(spec.id, slice.clone());
+        self.running.insert(
+            spec.id,
+            JobRecord {
+                spec: spec.clone(),
+                state: JobState::Running { started: now },
+                result: None,
+                queued_at,
+            },
+        );
+        Some(StartedJob { spec, queued_at, hostfile_slice: Hostfile { hosts: slice }, backfilled })
+    }
+
+    /// Remove a job from the running pool, releasing its reservation.
+    pub fn finish(&mut self, id: JobId) -> Option<JobRecord> {
+        self.reserved.remove(&id);
+        self.running.remove(&id)
+    }
+
+    /// Fail a running job: release its slots and record the reason.
+    pub fn fail(&mut self, id: JobId, reason: String) {
+        if let Some(mut rec) = self.finish(id) {
+            rec.state = JobState::Failed { reason };
+            self.completed.push(rec);
         }
     }
+}
+
+/// Take `ranks` slots out of `free` (mutating it), filling hosts in
+/// hostfile order. `None` if the free pool is too small.
+fn carve(free: &mut [HostSlot], ranks: u32) -> Option<Vec<HostSlot>> {
+    let total: u32 = free.iter().map(|h| h.slots).sum();
+    if total < ranks {
+        return None;
+    }
+    let mut need = ranks;
+    let mut take = Vec::new();
+    for h in free.iter_mut() {
+        if need == 0 {
+            break;
+        }
+        let t = h.slots.min(need);
+        if t > 0 {
+            take.push(HostSlot { addr: h.addr, slots: t });
+            h.slots -= t;
+            need -= t;
+        }
+    }
+    Some(take)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::Rng;
 
     fn job(id: u32, ranks: u32) -> JobSpec {
         JobSpec {
@@ -141,22 +323,38 @@ mod tests {
     fn jobs_wait_for_slots() {
         let mut h = Head::new();
         h.submit(job(0, 16), SimTime::ZERO);
-        assert!(h.next_runnable(SimTime::ZERO).is_none(), "no hostfile yet");
+        assert!(h.start_next(SimTime::ZERO).is_none(), "no hostfile yet");
         h.hostfile_text = "10.10.0.2 slots=12\n10.10.0.3 slots=12\n".into();
-        let r = h.next_runnable(SimTime::from_secs(1)).unwrap();
+        let r = h.start_next(SimTime::from_secs(1)).unwrap();
         assert_eq!(r.spec.id, JobId::new(0));
-        assert!(matches!(r.state, JobState::Running { .. }));
+        assert_eq!(r.hostfile_slice.total_slots(), 16);
+        assert!(matches!(h.running[&r.spec.id].state, JobState::Running { .. }));
     }
 
     #[test]
-    fn one_job_at_a_time() {
+    fn concurrent_jobs_share_the_cluster() {
         let mut h = Head::new();
         h.hostfile_text = "10.10.0.2 slots=24\n".into();
         h.submit(job(0, 4), SimTime::ZERO);
         h.submit(job(1, 4), SimTime::ZERO);
-        let r = h.next_runnable(SimTime::ZERO).unwrap();
-        h.running = Some(r);
-        assert!(h.next_runnable(SimTime::ZERO).is_none());
+        assert!(h.start_next(SimTime::ZERO).is_some());
+        assert!(h.start_next(SimTime::ZERO).is_some());
+        assert_eq!(h.running.len(), 2);
+        assert_eq!(h.free_slots(), 16);
+        assert!(h.overbooked_hosts().is_empty());
+    }
+
+    #[test]
+    fn max_concurrent_one_reproduces_serial_head() {
+        let mut h = Head::new();
+        h.max_concurrent = 1;
+        h.hostfile_text = "10.10.0.2 slots=24\n".into();
+        h.submit(job(0, 4), SimTime::ZERO);
+        h.submit(job(1, 4), SimTime::ZERO);
+        assert!(h.start_next(SimTime::ZERO).is_some());
+        assert!(h.start_next(SimTime::ZERO).is_none(), "capped at one job");
+        h.finish(JobId::new(0));
+        assert!(h.start_next(SimTime::ZERO).is_some());
     }
 
     #[test]
@@ -166,19 +364,124 @@ mod tests {
         h.submit(job(1, 8), SimTime::ZERO);
         assert_eq!(h.demanded_slots(), 24);
         h.hostfile_text = "10.10.0.2 slots=24\n".into();
-        let r = h.next_runnable(SimTime::ZERO).unwrap();
-        h.running = Some(r);
+        h.start_next(SimTime::ZERO).unwrap();
+        assert_eq!(h.queued_slots(), 8);
+        assert_eq!(h.reserved_slots(), 16);
         assert_eq!(h.demanded_slots(), 24);
     }
 
+    /// The seed's `fifo_order_holds` documented head-of-line blocking: a
+    /// 1-rank job stuck behind a full-width job. Now the wide job takes
+    /// the whole cluster and the narrow one waits only because zero
+    /// slots are free — not because of the queue position.
     #[test]
-    fn fifo_order_holds() {
+    fn full_width_job_still_blocks_when_no_slots_free() {
         let mut h = Head::new();
         h.hostfile_text = "10.10.0.2 slots=32\n".into();
         h.submit(job(0, 32), SimTime::ZERO);
         h.submit(job(1, 1), SimTime::ZERO);
-        // head-of-line blocks even though job1 would fit
-        let r = h.next_runnable(SimTime::ZERO).unwrap();
+        let r = h.start_next(SimTime::ZERO).unwrap();
         assert_eq!(r.spec.id, JobId::new(0));
+        assert!(h.start_next(SimTime::ZERO).is_none(), "no free slots");
+        h.finish(JobId::new(0));
+        assert_eq!(h.start_next(SimTime::ZERO).unwrap().spec.id, JobId::new(1));
+    }
+
+    /// Backfill regression test (was `fifo_order_holds`, which asserted
+    /// the bug): a narrow job overtakes a blocked wide job when it fits
+    /// into slots the wide job cannot use yet.
+    #[test]
+    fn backfill_fills_spare_slots_behind_blocked_head() {
+        let mut h = Head::new();
+        h.hostfile_text = "10.10.0.2 slots=16\n10.10.0.3 slots=16\n".into();
+        h.submit(job(0, 24), SimTime::ZERO);
+        h.submit(job(1, 16), SimTime::ZERO); // head once job0 runs; blocked (8 free)
+        h.submit(job(2, 4), SimTime::ZERO); // backfills into the 8 free slots
+        let r0 = h.start_next(SimTime::ZERO).unwrap();
+        assert_eq!(r0.spec.id, JobId::new(0));
+        assert!(!r0.backfilled);
+        let r2 = h.start_next(SimTime::ZERO).unwrap();
+        assert_eq!(r2.spec.id, JobId::new(2), "narrow job must backfill");
+        assert!(r2.backfilled);
+        // 4 slots free, head needs 16: nothing else starts
+        assert!(h.start_next(SimTime::ZERO).is_none());
+        assert_eq!(h.queue.len(), 1);
+        assert!(h.overbooked_hosts().is_empty());
+    }
+
+    /// Conservative guard: younger jobs may never hold so many slots
+    /// that the head-of-queue job's full width cannot be assembled.
+    #[test]
+    fn backfill_never_overcommits_the_heads_claim() {
+        let mut h = Head::new();
+        h.hostfile_text = "10.10.0.2 slots=16\n10.10.0.3 slots=16\n".into();
+        h.submit(job(0, 20), SimTime::ZERO);
+        let _ = h.start_next(SimTime::ZERO).unwrap(); // 12 free
+        h.submit(job(1, 24), SimTime::ZERO); // head, blocked
+        h.submit(job(2, 10), SimTime::ZERO); // fits in 12 free, but 24+10 > 32
+        assert!(
+            h.start_next(SimTime::ZERO).is_none(),
+            "backfill must leave the head job's width claimable"
+        );
+        h.submit(job(3, 8), SimTime::ZERO); // 24 + 8 <= 32: allowed
+        let r = h.start_next(SimTime::ZERO).unwrap();
+        assert_eq!(r.spec.id, JobId::new(3));
+        assert!(r.backfilled);
+    }
+
+    #[test]
+    fn reservations_release_on_finish_and_fail() {
+        let mut h = Head::new();
+        h.hostfile_text = "10.10.0.2 slots=12\n".into();
+        h.submit(job(0, 8), SimTime::ZERO);
+        h.submit(job(1, 8), SimTime::ZERO);
+        h.start_next(SimTime::ZERO).unwrap();
+        assert_eq!(h.free_slots(), 4);
+        h.fail(JobId::new(0), "boom".into());
+        assert_eq!(h.free_slots(), 12);
+        assert!(matches!(h.completed[0].state, JobState::Failed { .. }));
+        let r = h.start_next(SimTime::ZERO).unwrap();
+        assert_eq!(r.spec.id, JobId::new(1));
+        h.finish(JobId::new(1));
+        assert_eq!(h.free_slots(), 12);
+        assert!(h.reserved_addrs().is_empty());
+    }
+
+    /// Property: over random job mixes, (a) no host is ever overbooked,
+    /// (b) the queue fully drains (backfill never starves the head), and
+    /// (c) every dispatched slice has exactly the job's width.
+    #[test]
+    fn prop_backfill_is_starvation_free_and_never_double_books() {
+        let mut rng = Rng::new(2026);
+        for trial in 0..40 {
+            let mut h = Head::new();
+            // 4 hosts x 12 slots = 48; every job individually fits
+            h.hostfile_text =
+                "10.0.0.1 slots=12\n10.0.0.2 slots=12\n10.0.0.3 slots=12\n10.0.0.4 slots=12\n"
+                    .to_string();
+            let total = h.slots_available();
+            let n_jobs = 5 + rng.gen_range(15) as u32;
+            for i in 0..n_jobs {
+                let ranks = 1 + rng.gen_range(total as u64) as u32;
+                h.submit(job(i, ranks), SimTime::ZERO);
+            }
+            let mut started = 0u32;
+            let mut steps = 0u32;
+            while started < n_jobs {
+                steps += 1;
+                assert!(steps < 10 * n_jobs + 100, "trial {trial}: scheduler wedged");
+                while let Some(s) = h.start_next(SimTime::from_secs(steps as u64)) {
+                    assert_eq!(s.hostfile_slice.total_slots(), s.spec.ranks, "trial {trial}");
+                    started += 1;
+                }
+                assert!(h.overbooked_hosts().is_empty(), "trial {trial}: double-booked");
+                // complete one random running job so slots churn
+                let ids: Vec<JobId> = h.running.keys().copied().collect();
+                if let Some(id) = rng.choose(&ids) {
+                    h.finish(*id);
+                }
+            }
+            assert!(h.queue.is_empty(), "trial {trial}: queue never drained");
+        }
     }
 }

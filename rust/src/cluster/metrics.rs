@@ -1,16 +1,24 @@
 //! Minimal metrics registry: counters, gauges and value histograms.
 
+use std::cell::RefCell;
 use std::collections::BTreeMap;
 
 /// A recorded distribution.
+///
+/// Percentile queries sort lazily: the sorted view is computed on first
+/// use and cached until the next `record()`, so `render()` (which asks
+/// for several percentiles per histogram) is O(n log n) once instead of
+/// O(k·n log n).
 #[derive(Debug, Clone, Default)]
 pub struct Histogram {
     values: Vec<f64>,
+    sorted_cache: RefCell<Option<Vec<f64>>>,
 }
 
 impl Histogram {
     pub fn record(&mut self, v: f64) {
         self.values.push(v);
+        *self.sorted_cache.get_mut() = None;
     }
     pub fn count(&self) -> usize {
         self.values.len()
@@ -22,16 +30,25 @@ impl Histogram {
             self.values.iter().sum::<f64>() / self.values.len() as f64
         }
     }
+    /// Percentile in [0, 100]; 0.0 on an empty histogram.
     pub fn percentile(&self, p: f64) -> f64 {
         if self.values.is_empty() {
             return 0.0;
         }
-        let mut sorted = self.values.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut cache = self.sorted_cache.borrow_mut();
+        let sorted = cache.get_or_insert_with(|| {
+            let mut s = self.values.clone();
+            s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            s
+        });
         let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
         sorted[idx.min(sorted.len() - 1)]
     }
+    /// Largest recorded value; 0.0 (not `-inf`) on an empty histogram.
     pub fn max(&self) -> f64 {
+        if self.values.is_empty() {
+            return 0.0;
+        }
         self.values.iter().copied().fold(f64::NEG_INFINITY, f64::max)
     }
 }
@@ -84,11 +101,12 @@ impl Metrics {
         }
         for (k, h) in &self.histograms {
             out.push_str(&format!(
-                "histogram {k} count={} mean={:.3} p50={:.3} p99={:.3}\n",
+                "histogram {k} count={} mean={:.3} p50={:.3} p99={:.3} max={:.3}\n",
                 h.count(),
                 h.mean(),
                 h.percentile(50.0),
-                h.percentile(99.0)
+                h.percentile(99.0),
+                h.max()
             ));
         }
         out
@@ -125,7 +143,38 @@ mod tests {
     }
 
     #[test]
-    fn render_contains_everything() {
+    fn empty_histogram_is_all_zeros_not_neg_inf() {
+        let h = Histogram::default();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.percentile(50.0), 0.0);
+        assert_eq!(h.max(), 0.0, "empty max must be 0.0, not -inf");
+        assert!(h.max().is_finite());
+    }
+
+    #[test]
+    fn max_of_all_negative_values_is_the_true_max() {
+        let mut h = Histogram::default();
+        h.record(-7.0);
+        h.record(-3.0);
+        assert_eq!(h.max(), -3.0, "must not clamp negative maxima to 0");
+    }
+
+    #[test]
+    fn percentile_cache_invalidates_on_record() {
+        let mut h = Histogram::default();
+        h.record(1.0);
+        assert_eq!(h.percentile(100.0), 1.0); // populates the cache
+        h.record(5.0);
+        assert_eq!(h.percentile(100.0), 5.0, "stale sorted cache");
+        assert_eq!(h.percentile(0.0), 1.0);
+        // clones carry a consistent view too
+        let c = h.clone();
+        assert_eq!(c.percentile(100.0), 5.0);
+    }
+
+    #[test]
+    fn render_contains_everything_even_when_a_histogram_is_empty() {
         let mut m = Metrics::new();
         m.inc("a");
         m.set_gauge("b", 2.0);
@@ -134,5 +183,6 @@ mod tests {
         assert!(s.contains("counter a 1"));
         assert!(s.contains("gauge b 2"));
         assert!(s.contains("histogram c count=1"));
+        assert!(!s.contains("inf"), "render must never print infinities: {s}");
     }
 }

@@ -11,9 +11,11 @@
 pub mod autoscaler;
 pub mod head;
 pub mod metrics;
+pub mod mix;
 pub mod vcluster;
 
-pub use autoscaler::{Autoscaler, ScaleAction};
-pub use head::{JobSpec, JobState};
-pub use metrics::Metrics;
+pub use autoscaler::{Autoscaler, Observation, ScaleAction};
+pub use head::{Head, JobKind, JobRecord, JobSpec, JobState, StartedJob};
+pub use metrics::{Histogram, Metrics};
+pub use mix::{bursty_trace, mix_spec, run_job_trace, TraceOutcome};
 pub use vcluster::{NodeState, VirtualCluster};

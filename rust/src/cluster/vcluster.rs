@@ -14,7 +14,7 @@
 //! (virtual comm + real compute) is charged back into virtual time.
 
 use crate::cluster::autoscaler::{Autoscaler, Observation, ScaleAction};
-use crate::cluster::head::{Head, JobKind, JobRecord, JobSpec, JobState};
+use crate::cluster::head::{Head, JobKind, JobRecord, JobSpec, JobState, StartedJob};
 use crate::cluster::metrics::Metrics;
 use crate::config::ClusterSpec;
 use crate::consul::catalog::ServiceEntry;
@@ -23,6 +23,7 @@ use crate::dockyard::engine::{Engine as DockerEngine, RunSpec};
 use crate::dockyard::{Dockerfile, ImageStore, Registry};
 use crate::hw::rack::Plant;
 use crate::hw::PowerState;
+use crate::mpi::hostfile::Hostfile;
 use crate::mpi::launcher::LaunchPlan;
 use crate::runtime::Runtime;
 use crate::sim::{Engine, SimTime};
@@ -86,6 +87,9 @@ type Ev = Engine<ClusterState>;
 
 impl VirtualCluster {
     pub fn new(spec: ClusterSpec) -> Result<Self> {
+        if spec.machines == 0 {
+            return Err(anyhow!("cluster spec needs at least 1 machine (the head), got 0"));
+        }
         let plant = Plant::uniform(spec.machines as usize, spec.machine_spec.clone(), 16);
         let fabric = Arc::new(Mutex::new(Fabric::from_plant(&plant, spec.bridge)));
 
@@ -298,7 +302,13 @@ impl VirtualCluster {
     // ---------- control loops ----------
 
     fn template_poll_event(st: &mut ClusterState, eng: &mut Ev) {
-        st.consul.advance(eng.now());
+        Self::refresh_hostfile(st, eng.now());
+        let poll = st.head.poll_interval;
+        eng.schedule_after(poll, Self::template_poll_event);
+    }
+
+    fn refresh_hostfile(st: &mut ClusterState, now: SimTime) {
+        st.consul.advance(now);
         // health-gate the catalog before rendering, consul-template style:
         // critical nodes must drop out of the hostfile.
         let healthy = st.consul.healthy_instances("hpc");
@@ -310,65 +320,89 @@ impl VirtualCluster {
         }
         if let Some(output) = st.head.watcher.poll(st.consul.kv()) {
             st.head.hostfile_text = output.to_string();
-            st.head.hostfile_updated_at = eng.now();
+            st.head.hostfile_updated_at = now;
             st.head.hostfile_renders += 1;
             st.metrics.inc("hostfile_renders");
         }
-        let poll = st.head.poll_interval;
-        eng.schedule_after(poll, Self::template_poll_event);
     }
 
     fn scheduler_event(st: &mut ClusterState, eng: &mut Ev) {
         st.consul.advance(eng.now());
-        if let Some(mut record) = st.head.next_runnable(eng.now()) {
-            let started = eng.now();
-            let duration = match &record.spec.kind {
-                JobKind::Synthetic { duration } => *duration,
-                JobKind::Jacobi { px, py, tile, steps } => {
-                    match Self::run_jacobi_job(st, *px, *py, *tile, *steps) {
-                        Ok((report_dur, steps_run, residual)) => {
-                            record.result = Some((steps_run, residual));
-                            report_dur
+        Self::dispatch_jobs(st, eng);
+        eng.schedule_after(SimTime::from_secs(1), Self::scheduler_event);
+    }
+
+    /// Start every currently startable job (FIFO + conservative
+    /// backfill), each on its own reserved hostfile slice.
+    fn dispatch_jobs(st: &mut ClusterState, eng: &mut Ev) {
+        while let Some(started) = st.head.start_next(eng.now()) {
+            Self::launch_job(st, eng, started);
+        }
+        st.metrics.set_gauge("running_jobs", st.head.running.len() as f64);
+    }
+
+    fn launch_job(st: &mut ClusterState, eng: &mut Ev, started: StartedJob) {
+        let id = started.spec.id;
+        let t0 = eng.now();
+        let duration = match &started.spec.kind {
+            JobKind::Synthetic { duration } => *duration,
+            JobKind::Jacobi { px, py, tile, steps } => {
+                match Self::run_jacobi_job(st, &started.hostfile_slice, *px, *py, *tile, *steps) {
+                    Ok((report_dur, steps_run, residual)) => {
+                        if let Some(rec) = st.head.running.get_mut(&id) {
+                            rec.result = Some((steps_run, residual));
                         }
-                        Err(e) => {
-                            record.state = JobState::Failed { reason: e.to_string() };
-                            st.metrics.inc("jobs_failed");
-                            st.head.completed.push(record);
-                            eng.schedule_after(SimTime::from_secs(1), Self::scheduler_event);
-                            return;
-                        }
+                        report_dur
+                    }
+                    Err(e) => {
+                        st.metrics.inc("jobs_failed");
+                        st.head.fail(id, e.to_string());
+                        return;
                     }
                 }
-            };
-            st.metrics.inc("jobs_started");
-            st.metrics.observe(
-                "job_queue_seconds",
-                started.saturating_sub(record.queued_at).as_secs_f64(),
-            );
-            st.head.running = Some(record);
-            eng.schedule_after(duration, move |st: &mut ClusterState, eng: &mut Ev| {
-                let mut record = st.head.running.take().expect("running job");
-                record.state = JobState::Done { started, finished: eng.now() };
-                st.metrics.inc("jobs_completed");
-                st.head.completed.push(record);
-            });
+            }
+        };
+        st.metrics.inc("jobs_started");
+        if started.backfilled {
+            st.metrics.inc("backfill_starts");
         }
-        eng.schedule_after(SimTime::from_secs(1), Self::scheduler_event);
+        st.metrics.observe(
+            "job_queue_seconds",
+            t0.saturating_sub(started.queued_at).as_secs_f64(),
+        );
+        st.metrics.observe("concurrent_jobs", st.head.running.len() as f64);
+        eng.schedule_after(duration, move |st: &mut ClusterState, eng: &mut Ev| {
+            Self::job_done(st, eng, id);
+        });
+    }
+
+    fn job_done(st: &mut ClusterState, eng: &mut Ev, id: JobId) {
+        if let Some(mut record) = st.head.finish(id) {
+            let started = match record.state {
+                JobState::Running { started } => started,
+                _ => eng.now(),
+            };
+            record.state = JobState::Done { started, finished: eng.now() };
+            st.metrics.inc("jobs_completed");
+            st.head.completed.push(record);
+        }
+        // freed slots: start waiting jobs now, not at the next tick
+        Self::dispatch_jobs(st, eng);
     }
 
     fn run_jacobi_job(
         st: &mut ClusterState,
+        hostfile_slice: &Hostfile,
         px: usize,
         py: usize,
         tile: usize,
         steps: usize,
     ) -> Result<(SimTime, usize, f32)> {
-        let hostfile = st
-            .head
-            .hostfile()
-            .ok_or_else(|| anyhow!("no hostfile rendered yet"))?;
+        if hostfile_slice.hosts.is_empty() {
+            return Err(anyhow!("empty hostfile slice"));
+        }
         let plan = LaunchPlan {
-            hostfile,
+            hostfile: hostfile_slice.clone(),
             n_ranks: px * py,
             ip_to_container: st.ip_to_container.clone(),
             fabric: st.fabric.clone(),
@@ -413,7 +447,8 @@ impl VirtualCluster {
             now: eng.now(),
             ready_nodes: ready,
             provisioning_nodes: provisioning,
-            demanded_slots: st.head.demanded_slots(),
+            queued_slots: st.head.queued_slots(),
+            reserved_slots: st.head.reserved_slots(),
             slots_per_node: st.spec.slots_per_node,
         };
         match st.autoscaler.decide(obs) {
@@ -431,16 +466,38 @@ impl VirtualCluster {
                 st.metrics.add("scale_up_nodes", started as u64);
             }
             ScaleAction::Down(n) => {
+                // never retire a node whose slots are reserved by a
+                // running job — a retired host would orphan its ranks
+                let busy = st.head.reserved_addrs();
                 let mut stopped = 0;
                 for i in (1..st.spec.machines).rev() {
                     if stopped == n {
                         break;
                     }
                     let idx = i as usize;
-                    if st.node_states[idx] == NodeState::Ready {
-                        Self::retire_node(st, eng.now(), MachineId::new(i));
-                        stopped += 1;
+                    if st.node_states[idx] != NodeState::Ready {
+                        continue;
                     }
+                    let node_busy = st.containers[idx]
+                        .and_then(|cid| st.engines[idx].container(cid))
+                        .and_then(|c| c.ip)
+                        .map(|ip| busy.contains(&ip))
+                        .unwrap_or(false);
+                    if node_busy {
+                        continue;
+                    }
+                    Self::retire_node(st, eng.now(), MachineId::new(i));
+                    stopped += 1;
+                }
+                if stopped > 0 {
+                    // re-render the hostfile immediately so no job is
+                    // dispatched onto a just-retired host in the window
+                    // before the next template poll
+                    Self::refresh_hostfile(st, eng.now());
+                } else {
+                    // nothing was retirable: don't let the phantom Down
+                    // burn a cooldown or pollute the action log
+                    st.autoscaler.down_was_noop(eng.now());
                 }
                 st.metrics.add("scale_down_nodes", stopped as u64);
             }
@@ -472,12 +529,30 @@ impl VirtualCluster {
 
     // ---------- public operations ----------
 
-    /// Submit a job to the head node.
+    /// Submit a job to the head node. A job wider than the cluster can
+    /// ever advertise is rejected up front (recorded as `Failed`) —
+    /// queueing it would wedge the FIFO head forever and the backfill
+    /// guard would starve every job behind it.
     pub fn submit(&mut self, name: &str, ranks: u32, kind: JobKind) -> JobId {
         let id = JobId::new(self.state.next_job);
         self.state.next_job += 1;
         let spec = JobSpec { id, name: name.to_string(), ranks, kind };
         let now = self.engine.now();
+        let max_slots = self.state.spec.max_advertisable_slots();
+        if ranks > max_slots {
+            self.state.metrics.inc("jobs_rejected");
+            self.state.head.completed.push(JobRecord {
+                spec,
+                state: JobState::Failed {
+                    reason: format!(
+                        "job needs {ranks} slots but the cluster can advertise at most {max_slots}"
+                    ),
+                },
+                result: None,
+                queued_at: now,
+            });
+            return id;
+        }
         self.state.head.submit(spec, now);
         self.state.metrics.inc("jobs_submitted");
         id
@@ -654,6 +729,118 @@ mod tests {
         assert!(vc.advance_until(SimTime::from_secs(60), |st| {
             st.head.hostfile().map(|h| h.hosts.len()) == Some(2)
         }));
+    }
+
+    #[test]
+    fn zero_machine_spec_is_an_error_not_a_panic() {
+        let mut spec = fast_spec(3);
+        spec.machines = 0;
+        spec.autoscale.min_nodes = 0;
+        spec.autoscale.max_nodes = 0;
+        let err = VirtualCluster::new(spec).err().expect("0 machines must fail");
+        assert!(err.to_string().contains("at least 1 machine"), "{err}");
+    }
+
+    #[test]
+    fn single_machine_cluster_boots_head_only() {
+        let mut spec = ClusterSpec::paper_testbed();
+        spec.machines = 1;
+        spec.machine_spec.boot_time = SimTime::from_secs(5);
+        let mut vc = VirtualCluster::new(spec).unwrap();
+        vc.start();
+        assert!(
+            vc.advance_until(SimTime::from_secs(600), |st| {
+                st.node_states[0] == NodeState::Ready
+            }),
+            "head machine never became ready"
+        );
+        vc.advance(SimTime::from_secs(30));
+        assert_eq!(vc.node_state(MachineId::new(0)), NodeState::Ready);
+        assert_eq!(vc.ready_compute_nodes(), 0);
+        assert_eq!(vc.state.head.slots_available(), 0);
+    }
+
+    #[test]
+    fn narrow_jobs_run_concurrently_on_spare_slots() {
+        let mut vc = VirtualCluster::new(fast_spec(3)).unwrap();
+        vc.start();
+        assert!(vc.advance_until(SimTime::from_secs(300), |st| {
+            st.head.slots_available() >= 24
+        }));
+        for i in 0..3 {
+            vc.submit(
+                &format!("narrow-{i}"),
+                8,
+                JobKind::Synthetic { duration: SimTime::from_secs(30) },
+            );
+        }
+        let ok = vc.advance_until(SimTime::from_secs(30), |st| st.head.running.len() == 3);
+        assert!(ok, "3x8 ranks must run concurrently on 24 slots");
+        assert!(vc.state.head.overbooked_hosts().is_empty(), "slots double-booked");
+        assert!(vc.advance_until(SimTime::from_secs(120), |st| st.head.completed.len() == 3));
+        // all three overlapped: the batch drains in ~1 job's duration,
+        // where the old serial head needed 3x30s back to back
+        let mut first_start = SimTime::from_nanos(u64::MAX);
+        let mut last_finish = SimTime::ZERO;
+        for rec in vc.completed_jobs() {
+            if let JobState::Done { started, finished } = rec.state {
+                first_start = first_start.min(started);
+                last_finish = last_finish.max(finished);
+            } else {
+                panic!("job not done: {:?}", rec.state);
+            }
+        }
+        assert!(
+            last_finish.saturating_sub(first_start) < SimTime::from_secs(60),
+            "batch did not overlap: {first_start} .. {last_finish}"
+        );
+        assert!(vc.metrics().histogram("concurrent_jobs").unwrap().max() >= 3.0);
+    }
+
+    #[test]
+    fn oversized_job_is_rejected_not_wedged() {
+        let mut vc = VirtualCluster::new(fast_spec(3)).unwrap();
+        vc.start();
+        // max advertisable = 2 compute nodes x 12 slots = 24
+        vc.submit("too-wide", 100, JobKind::Synthetic { duration: SimTime::from_secs(10) });
+        vc.submit("ok", 8, JobKind::Synthetic { duration: SimTime::from_secs(10) });
+        assert!(vc.advance_until(SimTime::from_secs(300), |st| st.head.completed.len() == 2));
+        assert!(
+            matches!(vc.completed_jobs()[0].state, JobState::Failed { .. }),
+            "impossible job must be rejected up front"
+        );
+        assert!(
+            matches!(vc.completed_jobs()[1].state, JobState::Done { .. }),
+            "narrow job must not be wedged behind the impossible one"
+        );
+        assert_eq!(vc.metrics().counter("jobs_rejected"), 1);
+    }
+
+    #[test]
+    fn busy_nodes_survive_scale_down() {
+        let mut spec = fast_spec(4);
+        spec.autoscale.min_nodes = 1;
+        spec.autoscale.max_nodes = 3;
+        spec.autoscale.idle_timeout = SimTime::from_secs(10);
+        let mut vc = VirtualCluster::new(spec).unwrap();
+        vc.start();
+        // the wide job forces scale-up to 3 nodes; the narrow one then
+        // pins a node's slots for a long time while the pool is idle
+        vc.submit("wide", 36, JobKind::Synthetic { duration: SimTime::from_secs(5) });
+        vc.submit("pinned", 4, JobKind::Synthetic { duration: SimTime::from_secs(500) });
+        assert!(vc.advance_until(SimTime::from_secs(600), |st| {
+            st.head.completed.len() == 1 && st.head.running.len() == 1
+        }));
+        // low utilization (4/36 slots) triggers scale-down, but the node
+        // hosting the running job must never be retired mid-run
+        vc.advance(SimTime::from_secs(200));
+        assert_eq!(vc.state.head.running.len(), 1, "job was killed by scale-down");
+        assert!(vc.state.head.overbooked_hosts().is_empty(), "reservation lost its host");
+        assert!(vc.metrics().counter("nodes_retired") >= 1, "idle nodes must retire");
+        assert!(vc.advance_until(SimTime::from_secs(600), |st| st.head.completed.len() == 2));
+        for rec in vc.completed_jobs() {
+            assert!(matches!(rec.state, JobState::Done { .. }), "{:?}", rec.state);
+        }
     }
 
     #[test]

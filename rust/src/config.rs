@@ -148,7 +148,8 @@ pub struct AutoscaleConfig {
     pub interval: SimTime,
     /// Cooldown after any scaling action.
     pub cooldown: SimTime,
-    /// Scale down after this long with an empty queue.
+    /// Scale down after this long of sustained low utilization
+    /// (demand's target node count below the ready pool).
     pub idle_timeout: SimTime,
 }
 
@@ -203,6 +204,21 @@ impl ClusterSpec {
             seed: 42,
             autoscale: AutoscaleConfig::default(),
         }
+    }
+
+    /// Most MPI slots the cluster can ever advertise: compute nodes are
+    /// machines 1.., and with autoscaling enabled the pool is further
+    /// capped by the policy bounds (manual provisioning past the policy
+    /// cap would be scaled back down). Jobs wider than this can never
+    /// run and are rejected at submit.
+    pub fn max_advertisable_slots(&self) -> u32 {
+        let physical = self.machines.saturating_sub(1);
+        let nodes = if self.autoscale.enabled {
+            physical.min(self.autoscale.max_nodes.max(self.autoscale.min_nodes))
+        } else {
+            physical
+        };
+        nodes * self.slots_per_node
     }
 
     /// Build from config text (missing keys fall back to the testbed).
@@ -364,6 +380,16 @@ mod tests {
         assert_eq!(spec.autoscale.min_nodes, 1);
         assert_eq!(spec.autoscale.max_nodes, 8);
         assert_eq!(spec.autoscale.cooldown, SimTime::from_secs(5));
+    }
+
+    #[test]
+    fn max_advertisable_slots_honors_policy_and_physical_caps() {
+        let mut s = ClusterSpec::paper_testbed();
+        assert_eq!(s.max_advertisable_slots(), 24); // physical: 2 compute nodes
+        s.machines = 8;
+        assert_eq!(s.max_advertisable_slots(), 36); // policy: max_nodes = 3
+        s.autoscale.enabled = false;
+        assert_eq!(s.max_advertisable_slots(), 84); // manual provisioning can reach 7
     }
 
     #[test]

@@ -56,10 +56,38 @@ fn cluster_from_config_text() {
     assert_eq!(vc.state.head.slots_available(), 12);
 }
 
-/// Two jobs queue FIFO; both finish; queue latency recorded.
+/// Two jobs that fit together (16 + 8 <= 24 slots) overlap under the
+/// slot-aware scheduler: the shorter one finishes first, and queue
+/// latency is recorded for both.
 #[test]
-fn job_queue_drains_in_order() {
+fn job_queue_overlaps_when_slots_allow() {
     let mut vc = VirtualCluster::new(fast_spec()).unwrap();
+    vc.start();
+    let a = vc.submit("a", 16, JobKind::Synthetic { duration: SimTime::from_secs(20) });
+    let b = vc.submit("b", 8, JobKind::Synthetic { duration: SimTime::from_secs(10) });
+    assert!(vc.advance_until(SimTime::from_secs(3600), |st| st.head.completed.len() == 2));
+    let done = vc.completed_jobs();
+    assert_eq!(done[0].spec.id, b, "shorter overlapping job completes first");
+    assert_eq!(done[1].spec.id, a);
+    if let (JobState::Done { started: sb, .. }, JobState::Done { finished: fa, .. }) =
+        (&done[0].state, &done[1].state)
+    {
+        assert!(sb < fa, "job b must start before a finishes (overlap)");
+    } else {
+        panic!("jobs not done");
+    }
+    assert_eq!(
+        vc.metrics().histogram("job_queue_seconds").map(|h| h.count()),
+        Some(2)
+    );
+}
+
+/// With the head capped at one job (the seed's serial scheduler), FIFO
+/// order is preserved: b only starts after a finishes.
+#[test]
+fn serial_cap_preserves_fifo_order() {
+    let mut vc = VirtualCluster::new(fast_spec()).unwrap();
+    vc.state.head.max_concurrent = 1;
     vc.start();
     let a = vc.submit("a", 16, JobKind::Synthetic { duration: SimTime::from_secs(20) });
     let b = vc.submit("b", 8, JobKind::Synthetic { duration: SimTime::from_secs(10) });
