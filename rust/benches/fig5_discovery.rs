@@ -39,7 +39,7 @@ fn measure(n: u32) -> (Vec<f64>, f64) {
                 ready_at[idx] = Some(vc.now());
             }
             if in_hostfile_at[idx].is_none() {
-                let node = format!("node{:02}", idx + 1);
+                let node = vhpc::cluster::node_name(idx, n + 1);
                 // the hostfile lists IPs; resolve via catalog entry
                 if let Some(hf) = vc.state.head.hostfile() {
                     let listed = vhpc::consul::catalog::Catalog::list(vc.state.consul.kv(), "hpc")

@@ -4,6 +4,8 @@
 //! vhpc up         [--config F] [--machines N] [--sim-seconds S]
 //! vhpc run        [--ranks N] [--tile T] [--steps K] [--bridge MODE]
 //! vhpc mix        [--jobs N] [--machines M] [--max-concurrent K]
+//! vhpc chaos      [--jobs N] [--machines M] [--seed S] [--mtbf SECS]
+//!                 [--max-retries K] [--sim-seconds S]
 //! vhpc build      [--dockerfile F]
 //! vhpc bench-net  [--bridge MODE]
 //! vhpc version
@@ -167,6 +169,67 @@ fn cmd_mix(flags: HashMap<String, String>) -> Result<(), String> {
     Ok(())
 }
 
+/// Self-healing under a seeded crash schedule: run the canonical job
+/// mix while machines die at MTBF-drawn times, and report recovery
+/// metrics (requeues, replacements, MTTR, wasted work, goodput).
+fn cmd_chaos(flags: HashMap<String, String>) -> Result<(), String> {
+    let mut spec = load_spec(&flags)?;
+    if !flags.contains_key("machines") && !flags.contains_key("config") {
+        // no explicit topology: the same 8-machine cluster as `vhpc mix`
+        let bridge = spec.bridge;
+        spec = crate::cluster::mix::mix_spec(SimTime::from_secs(30));
+        spec.bridge = bridge;
+    }
+    spec.autoscale.min_nodes = spec
+        .autoscale
+        .min_nodes
+        .max(1)
+        .min(spec.autoscale.max_nodes.max(1));
+    let jobs: u32 = flag(&flags, "jobs", 10u32)?;
+    let seed: u64 = flag(&flags, "seed", spec.seed)?;
+    let mtbf: u64 = flag(&flags, "mtbf", 300u64)?;
+    let max_retries: u32 = flag(&flags, "max-retries", 3u32)?;
+    let sim_secs: u64 = flag(&flags, "sim-seconds", 3600u64)?;
+
+    let cap_slots = spec.max_advertisable_slots();
+    if cap_slots == 0 {
+        return Err("cluster has no compute capacity (needs >= 2 machines)".into());
+    }
+    let trace: Vec<(u32, u64)> =
+        crate::cluster::mix::bursty_trace(24.min(cap_slots), jobs as usize)
+            .into_iter()
+            .map(|(ranks, secs)| (ranks.min(cap_slots), secs))
+            .collect();
+    let plan = crate::faults::FaultPlan::from_mtbf(
+        seed,
+        spec.machines,
+        SimTime::from_secs(mtbf),
+        SimTime::from_secs(sim_secs),
+    );
+    let warmup = (spec.autoscale.min_nodes * spec.slots_per_node).clamp(1, cap_slots);
+    println!(
+        "chaos: {} crashes scheduled over {sim_secs}s (seed {seed}, per-machine mtbf {mtbf}s)",
+        plan.len()
+    );
+    let (o, vc) =
+        crate::faults::run_chaos_trace(spec, &trace, &plan, warmup, max_retries, sim_secs)
+            .map_err(|e| e.to_string())?;
+    println!(
+        "jobs: {}/{} completed, {} abandoned, {} requeues",
+        o.jobs_completed, o.jobs_submitted, o.jobs_abandoned, o.requeues
+    );
+    println!(
+        "machines killed: {}  machines booted after injection: {}",
+        o.machines_killed, o.replacements_booted
+    );
+    println!(
+        "MTTR mean {:.1}s  max {:.1}s  wasted work {:.1}s  goodput {:.1} slot-s/s  makespan {:.1}s",
+        o.mttr_mean, o.mttr_max, o.wasted_seconds, o.goodput, o.makespan
+    );
+    println!("--- metrics ---\n{}", vc.metrics().render());
+    Ok(())
+}
+
 fn cmd_build(flags: HashMap<String, String>) -> Result<(), String> {
     let text = match flags.get("dockerfile") {
         Some(path) => std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?,
@@ -235,6 +298,7 @@ pub fn main() -> i32 {
         "up" => parse_flags(rest).and_then(cmd_up),
         "run" => parse_flags(rest).and_then(cmd_run),
         "mix" => parse_flags(rest).and_then(cmd_mix),
+        "chaos" => parse_flags(rest).and_then(cmd_chaos),
         "build" => parse_flags(rest).and_then(cmd_build),
         "bench-net" => parse_flags(rest).and_then(cmd_bench_net),
         "help" | "--help" | "-h" => {
@@ -243,6 +307,7 @@ pub fn main() -> i32 {
                  usage:\n  vhpc up        [--config F] [--machines N] [--sim-seconds S] [--bridge MODE]\n  \
                  vhpc run       [--ranks N] [--tile T] [--steps K] [--bridge MODE]\n  \
                  vhpc mix       [--jobs N] [--machines M] [--max-concurrent K] [--sim-seconds S]\n  \
+                 vhpc chaos     [--jobs N] [--machines M] [--seed S] [--mtbf SECS] [--max-retries K] [--sim-seconds S]\n  \
                  vhpc build     [--dockerfile F]\n  \
                  vhpc bench-net [--bridge docker0|bridge0|host]\n  \
                  vhpc version"

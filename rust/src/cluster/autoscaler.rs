@@ -19,6 +19,12 @@ pub struct Observation {
     pub now: SimTime,
     /// Nodes registered + passing health checks.
     pub ready_nodes: u32,
+    /// Provisioned nodes whose health check is critical or reaped (hung
+    /// agent, network partition): alive capacity the hostfile can no
+    /// longer advertise. Not counted as ready — a replacement should
+    /// boot — but their existence suppresses scale-down so recovery and
+    /// retirement churn never compound.
+    pub unhealthy_nodes: u32,
     /// Nodes between power-on and registration.
     pub provisioning_nodes: u32,
     /// Slots demanded by queued jobs not yet scheduled.
@@ -107,7 +113,10 @@ impl Autoscaler {
 
         // Low-utilization tracking: over-provisioned whenever the ready
         // pool exceeds what current demand needs (not just on demand 0).
-        if obs.ready_nodes > target {
+        // An unhealthy node resets the clock: while part of the pool is
+        // hung or partitioned the cluster is mid-incident, not idle —
+        // retiring healthy capacity then would stack churn on recovery.
+        if obs.ready_nodes > target && obs.unhealthy_nodes == 0 {
             if self.low_util_since.is_none() {
                 self.low_util_since = Some(obs.now);
             }
@@ -186,9 +195,21 @@ mod tests {
     }
 
     fn obs_r(now_s: u64, ready: u32, prov: u32, queued: u32, reserved: u32) -> Observation {
+        obs_u(now_s, ready, 0, prov, queued, reserved)
+    }
+
+    fn obs_u(
+        now_s: u64,
+        ready: u32,
+        unhealthy: u32,
+        prov: u32,
+        queued: u32,
+        reserved: u32,
+    ) -> Observation {
         Observation {
             now: SimTime::from_secs(now_s),
             ready_nodes: ready,
+            unhealthy_nodes: unhealthy,
             provisioning_nodes: prov,
             queued_slots: queued,
             reserved_slots: reserved,
@@ -290,6 +311,22 @@ mod tests {
     }
 
     #[test]
+    fn unhealthy_nodes_suppress_scale_down_and_demand_a_replacement() {
+        let mut a = Autoscaler::new(config());
+        // one of three idle nodes hangs: the pool must not ALSO retire
+        // healthy nodes while the incident is live, no matter how long
+        // the low utilization lasts
+        assert_eq!(a.decide(obs_u(0, 2, 1, 0, 0, 0)), ScaleAction::None);
+        assert_eq!(a.decide(obs_u(300, 2, 1, 0, 0, 0)), ScaleAction::None);
+        // demand sized to 3 nodes: the hung node is not capacity, so a
+        // replacement boots even though 3 machines are powered on
+        assert_eq!(a.decide(obs_u(305, 2, 1, 0, 12, 24)), ScaleAction::Up(1));
+        // incident over: the idle clock starts fresh from recovery
+        assert_eq!(a.decide(obs_u(400, 3, 0, 0, 0, 0)), ScaleAction::None);
+        assert_eq!(a.decide(obs_u(521, 3, 0, 0, 0, 0)), ScaleAction::Down(2));
+    }
+
+    #[test]
     fn min_above_max_does_not_panic() {
         let mut cfg = config();
         cfg.min_nodes = 2;
@@ -328,6 +365,7 @@ mod tests {
                 let action = a.decide(Observation {
                     now,
                     ready_nodes: ready,
+                    unhealthy_nodes: 0,
                     provisioning_nodes: prov,
                     queued_slots: queued,
                     reserved_slots: reserved,

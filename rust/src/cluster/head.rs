@@ -32,6 +32,11 @@ pub enum JobKind {
     Synthetic { duration: SimTime },
 }
 
+/// Jacobi's residual-check cadence doubles as its restart checkpoint:
+/// a job requeued after losing a node resumes from the last completed
+/// multiple of this many steps (work past the checkpoint is redone).
+pub const JACOBI_CHECKPOINT_STEPS: usize = 20;
+
 /// A submitted job.
 #[derive(Debug, Clone)]
 pub struct JobSpec {
@@ -58,6 +63,12 @@ pub struct JobRecord {
     /// For Jacobi jobs: (steps, final residual).
     pub result: Option<(usize, f32)>,
     pub queued_at: SimTime,
+    /// How many times this job has already been requeued after losing a
+    /// node (0 = first run).
+    pub attempt: u32,
+    /// Virtual duration the dispatcher scheduled for this attempt (set
+    /// at launch; used to prorate progress credit when the job is lost).
+    pub planned_duration: Option<SimTime>,
 }
 
 /// A job the scheduler just dispatched: its spec plus the hostfile slice
@@ -69,6 +80,21 @@ pub struct StartedJob {
     pub hostfile_slice: Hostfile,
     /// True when the job overtook the head-of-queue job via backfill.
     pub backfilled: bool,
+    /// Which attempt this dispatch is (guards completion events from
+    /// earlier attempts of the same job).
+    pub attempt: u32,
+}
+
+/// What the head did with a running job whose reservation lost a node.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LossOutcome {
+    /// Requeued at the head of the queue with partial-progress credit.
+    /// `wasted` is the virtual work the rerun must redo (credit gap).
+    Requeued { id: JobId, attempt: u32, wasted: SimTime },
+    /// Retry budget exhausted: recorded as permanently failed.
+    Abandoned { id: JobId },
+    /// The job was not in the running pool (already finished or reaped).
+    NotRunning,
 }
 
 /// The head container's state.
@@ -88,6 +114,17 @@ pub struct Head {
     /// Cap on concurrent jobs (`usize::MAX` = slot-limited only). Set to
     /// 1 to reproduce the old one-job-at-a-time head for comparisons.
     pub max_concurrent: usize,
+    /// How many times a job may be requeued after losing a node before
+    /// it is recorded as permanently failed.
+    pub max_retries: u32,
+    /// Attempts already consumed per job (entries exist only for jobs
+    /// that lost a node at least once; cleared on completion).
+    retries: HashMap<JobId, u32>,
+    /// Jacobi steps credited from prior attempts (the resume point).
+    jacobi_progress: HashMap<JobId, usize>,
+    /// When each job first lost a node — MTTR is measured from here to
+    /// the job's eventual completion. Cleared on completion/abandonment.
+    pub first_failed_at: HashMap<JobId, SimTime>,
 }
 
 impl Default for Head {
@@ -109,6 +146,10 @@ impl Head {
             completed: Vec::new(),
             poll_interval: SimTime::from_millis(200),
             max_concurrent: usize::MAX,
+            max_retries: 3,
+            retries: HashMap::new(),
+            jacobi_progress: HashMap::new(),
+            first_failed_at: HashMap::new(),
         }
     }
 
@@ -254,6 +295,7 @@ impl Head {
         };
         let (spec, queued_at) = self.queue.remove(idx).expect("index in range");
         let slice = carve(&mut free, spec.ranks).expect("fit checked above");
+        let attempt = self.retries.get(&spec.id).copied().unwrap_or(0);
         self.reserved.insert(spec.id, slice.clone());
         self.running.insert(
             spec.id,
@@ -262,23 +304,161 @@ impl Head {
                 state: JobState::Running { started: now },
                 result: None,
                 queued_at,
+                attempt,
+                planned_duration: None,
             },
         );
-        Some(StartedJob { spec, queued_at, hostfile_slice: Hostfile { hosts: slice }, backfilled })
+        Some(StartedJob {
+            spec,
+            queued_at,
+            hostfile_slice: Hostfile { hosts: slice },
+            backfilled,
+            attempt,
+        })
     }
 
-    /// Remove a job from the running pool, releasing its reservation.
+    /// Remove a job from the running pool, releasing its reservation and
+    /// folding progress credited from earlier attempts into its result.
     pub fn finish(&mut self, id: JobId) -> Option<JobRecord> {
         self.reserved.remove(&id);
-        self.running.remove(&id)
+        let mut rec = self.running.remove(&id)?;
+        self.retries.remove(&id);
+        if let Some(prior) = self.jacobi_progress.remove(&id) {
+            if let Some((steps, residual)) = rec.result {
+                rec.result = Some((steps + prior, residual));
+            }
+        }
+        Some(rec)
     }
 
     /// Fail a running job: release its slots and record the reason.
     pub fn fail(&mut self, id: JobId, reason: String) {
         if let Some(mut rec) = self.finish(id) {
+            self.first_failed_at.remove(&id);
             rec.state = JobState::Failed { reason };
             self.completed.push(rec);
         }
+    }
+
+    /// Running jobs whose reserved slice references a host that is no
+    /// longer advertised by the (health-gated) hostfile — the recovery
+    /// pipeline's per-tick cross-check. Sorted for determinism.
+    pub fn lost_jobs(&self) -> Vec<JobId> {
+        let advertised: HashSet<Ipv4> = self
+            .hostfile()
+            .map(|hf| hf.hosts.into_iter().map(|h| h.addr).collect())
+            .unwrap_or_default();
+        let mut ids: Vec<JobId> = self
+            .reserved
+            .iter()
+            .filter(|(_, slice)| slice.iter().any(|h| !advertised.contains(&h.addr)))
+            .map(|(&id, _)| id)
+            .collect();
+        ids.sort();
+        ids
+    }
+
+    /// Running jobs holding slots on `addr` — for immediate failure when
+    /// a machine dies under them (mpirun exits long before the TTL).
+    pub fn jobs_on_addr(&self, addr: Ipv4) -> Vec<JobId> {
+        let mut ids: Vec<JobId> = self
+            .reserved
+            .iter()
+            .filter(|(_, slice)| slice.iter().any(|h| h.addr == addr))
+            .map(|(&id, _)| id)
+            .collect();
+        ids.sort();
+        ids
+    }
+
+    /// A dispatched job never actually launched (a host in its slice was
+    /// already unreachable): put it back at the head of the queue without
+    /// charging its retry budget — no work was started, the failure is
+    /// the launcher's, not the job's.
+    pub fn unlaunch(&mut self, id: JobId, now: SimTime) {
+        if let Some(rec) = self.running.remove(&id) {
+            self.reserved.remove(&id);
+            self.first_failed_at.entry(id).or_insert(now);
+            self.queue.push_front((rec.spec, rec.queued_at));
+        }
+    }
+
+    /// A running job's reservation lost a node (machine death, hang or
+    /// partition): release the slots and either requeue the job with
+    /// partial-progress credit — synthetic jobs resume at their remaining
+    /// duration, Jacobi restarts from the last completed checkpoint — or,
+    /// once its retry budget is spent, record it as permanently failed.
+    pub fn handle_lost_job(&mut self, id: JobId, now: SimTime, reason: &str) -> LossOutcome {
+        let attempt = match self.running.get(&id) {
+            Some(rec) => rec.attempt,
+            None => return LossOutcome::NotRunning,
+        };
+        if attempt >= self.max_retries {
+            // budget spent: the regular fail path already releases the
+            // reservation, folds credited progress into the result and
+            // records the job as permanently failed
+            self.fail(
+                id,
+                format!("{reason} (retry budget of {} exhausted)", self.max_retries),
+            );
+            return LossOutcome::Abandoned { id };
+        }
+        let rec = match self.running.remove(&id) {
+            Some(rec) => rec,
+            None => return LossOutcome::NotRunning,
+        };
+        self.reserved.remove(&id);
+        self.first_failed_at.entry(id).or_insert(now);
+        let started = match rec.state {
+            JobState::Running { started } => started,
+            _ => now,
+        };
+        let elapsed = now.saturating_sub(started);
+        let (kind, wasted) = match rec.spec.kind.clone() {
+            JobKind::Synthetic { duration } => {
+                // the elapsed virtual time is credited in full: the rerun
+                // only owes the remainder
+                let remaining = duration.saturating_sub(elapsed).max(SimTime::from_secs(1));
+                (JobKind::Synthetic { duration: remaining }, SimTime::ZERO)
+            }
+            JobKind::Jacobi { px, py, tile, steps } => {
+                // credit the steps executed this attempt, prorated by how
+                // much of the planned virtual duration elapsed, rounded
+                // down to the last completed checkpoint
+                let ran = rec.result.map(|(s, _)| s).unwrap_or(0).min(steps);
+                let frac = match rec.planned_duration {
+                    Some(d) if d > SimTime::ZERO => {
+                        (elapsed.as_secs_f64() / d.as_secs_f64()).min(1.0)
+                    }
+                    _ => 0.0,
+                };
+                let ckpt = JACOBI_CHECKPOINT_STEPS.min(steps.max(1)).max(1);
+                // steps the job had virtually performed when the node died
+                let done_virtual = ((ran as f64 * frac) as usize).min(steps);
+                let credited = (done_virtual / ckpt * ckpt).min(steps);
+                *self.jacobi_progress.entry(id).or_insert(0) += credited;
+                // work past the checkpoint is redone by the rerun
+                let rerun_steps = done_virtual.saturating_sub(credited);
+                let wasted = match rec.planned_duration {
+                    Some(d) if ran > 0 => SimTime::from_secs_f64(
+                        d.as_secs_f64() * rerun_steps as f64 / ran as f64,
+                    ),
+                    _ => SimTime::ZERO,
+                };
+                let remaining = (steps - credited).max(1);
+                (JobKind::Jacobi { px, py, tile, steps: remaining }, wasted)
+            }
+        };
+        let attempt = attempt + 1;
+        self.retries.insert(id, attempt);
+        let spec = JobSpec {
+            id: rec.spec.id,
+            name: rec.spec.name.clone(),
+            ranks: rec.spec.ranks,
+            kind,
+        };
+        self.queue.push_front((spec, rec.queued_at));
+        LossOutcome::Requeued { id, attempt, wasted }
     }
 }
 
@@ -445,6 +625,129 @@ mod tests {
         h.finish(JobId::new(1));
         assert_eq!(h.free_slots(), 12);
         assert!(h.reserved_addrs().is_empty());
+    }
+
+    #[test]
+    fn lost_job_requeues_with_remaining_duration() {
+        let mut h = Head::new();
+        h.hostfile_text = "10.10.0.2 slots=12\n10.10.0.3 slots=12\n".into();
+        h.submit(job(0, 16), SimTime::ZERO);
+        let started = h.start_next(SimTime::from_secs(10)).unwrap();
+        assert_eq!(started.attempt, 0);
+        // node 10.10.0.3 dies 4s into the 10s job
+        let out = h.handle_lost_job(JobId::new(0), SimTime::from_secs(14), "node died");
+        assert!(
+            matches!(out, LossOutcome::Requeued { attempt: 1, .. }),
+            "{out:?}"
+        );
+        assert!(h.running.is_empty());
+        assert!(h.reserved_addrs().is_empty(), "slots must be released");
+        assert_eq!(h.queue.len(), 1);
+        let (spec, _) = h.queue.front().unwrap();
+        match &spec.kind {
+            JobKind::Synthetic { duration } => {
+                assert_eq!(*duration, SimTime::from_secs(6), "elapsed time is credited");
+            }
+            other => panic!("kind changed: {other:?}"),
+        }
+        // the rerun carries the bumped attempt number
+        let restarted = h.start_next(SimTime::from_secs(20)).unwrap();
+        assert_eq!(restarted.attempt, 1);
+        assert_eq!(h.first_failed_at[&JobId::new(0)], SimTime::from_secs(14));
+    }
+
+    #[test]
+    fn retry_budget_exhaustion_abandons_the_job() {
+        let mut h = Head::new();
+        h.max_retries = 2;
+        h.hostfile_text = "10.10.0.2 slots=24\n".into();
+        h.submit(job(0, 8), SimTime::ZERO);
+        for round in 0..3 {
+            let s = h.start_next(SimTime::from_secs(round)).unwrap();
+            assert_eq!(s.attempt, round as u32);
+            let out = h.handle_lost_job(JobId::new(0), SimTime::from_secs(round + 1), "boom");
+            if round < 2 {
+                assert!(matches!(out, LossOutcome::Requeued { .. }), "{out:?}");
+            } else {
+                assert_eq!(out, LossOutcome::Abandoned { id: JobId::new(0) });
+            }
+        }
+        assert!(h.queue.is_empty());
+        assert!(h.running.is_empty());
+        assert_eq!(h.completed.len(), 1);
+        assert!(matches!(h.completed[0].state, JobState::Failed { .. }));
+        // a second report for the same job is a no-op
+        assert_eq!(
+            h.handle_lost_job(JobId::new(0), SimTime::from_secs(9), "boom"),
+            LossOutcome::NotRunning
+        );
+    }
+
+    #[test]
+    fn jacobi_resumes_from_the_last_checkpoint() {
+        let mut h = Head::new();
+        h.hostfile_text = "10.10.0.2 slots=24\n".into();
+        h.submit(
+            JobSpec {
+                id: JobId::new(0),
+                name: "jac".into(),
+                ranks: 16,
+                kind: JobKind::Jacobi { px: 4, py: 4, tile: 64, steps: 100 },
+            },
+            SimTime::ZERO,
+        );
+        h.start_next(SimTime::ZERO).unwrap();
+        // the dispatcher ran all 100 steps and planned a 100s duration
+        let rec = h.running.get_mut(&JobId::new(0)).unwrap();
+        rec.result = Some((100, 0.5));
+        rec.planned_duration = Some(SimTime::from_secs(100));
+        // the node dies halfway through the virtual duration: 50 steps
+        // performed -> rounds down to checkpoint 40
+        let out = h.handle_lost_job(JobId::new(0), SimTime::from_secs(50), "died");
+        let LossOutcome::Requeued { wasted, .. } = out else {
+            panic!("{out:?}");
+        };
+        assert_eq!(wasted, SimTime::from_secs(10), "50 done - 40 credited = 10s redone");
+        let (spec, _) = h.queue.front().unwrap();
+        match &spec.kind {
+            JobKind::Jacobi { steps, .. } => assert_eq!(*steps, 60, "resume at step 40"),
+            other => panic!("kind changed: {other:?}"),
+        }
+        // on eventual completion the credited steps fold into the result
+        h.start_next(SimTime::from_secs(60)).unwrap();
+        h.running.get_mut(&JobId::new(0)).unwrap().result = Some((60, 1e-7));
+        let done = h.finish(JobId::new(0)).unwrap();
+        assert_eq!(done.result, Some((100, 1e-7)));
+    }
+
+    #[test]
+    fn lost_jobs_cross_checks_reservations_against_the_hostfile() {
+        let mut h = Head::new();
+        h.hostfile_text = "10.10.0.2 slots=12\n10.10.0.3 slots=12\n".into();
+        h.submit(job(0, 16), SimTime::ZERO); // spans both hosts
+        h.submit(job(1, 4), SimTime::ZERO); // fits on the first host
+        h.start_next(SimTime::ZERO).unwrap();
+        h.start_next(SimTime::ZERO).unwrap();
+        assert!(h.lost_jobs().is_empty());
+        // the second host drops out of the hostfile (TTL expiry)
+        h.hostfile_text = "10.10.0.2 slots=12\n".into();
+        assert_eq!(h.lost_jobs(), vec![JobId::new(0)]);
+        let addr = Ipv4::parse("10.10.0.3").unwrap();
+        assert_eq!(h.jobs_on_addr(addr), vec![JobId::new(0)]);
+        assert!(h.jobs_on_addr(Ipv4::parse("10.10.0.9").unwrap()).is_empty());
+    }
+
+    #[test]
+    fn unlaunch_requeues_without_charging_the_budget() {
+        let mut h = Head::new();
+        h.hostfile_text = "10.10.0.2 slots=12\n".into();
+        h.submit(job(0, 8), SimTime::ZERO);
+        h.start_next(SimTime::ZERO).unwrap();
+        h.unlaunch(JobId::new(0), SimTime::from_secs(1));
+        assert!(h.running.is_empty());
+        assert_eq!(h.queue.len(), 1);
+        let s = h.start_next(SimTime::from_secs(2)).unwrap();
+        assert_eq!(s.attempt, 0, "an aborted launch must not consume a retry");
     }
 
     /// Property: over random job mixes, (a) no host is ever overbooked,

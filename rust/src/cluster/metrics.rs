@@ -90,6 +90,13 @@ impl Metrics {
         self.histograms.get(name)
     }
 
+    /// Stable snapshot of every counter. Two runs with the same seed
+    /// must produce identical snapshots — the chaos benches use this as
+    /// their determinism fingerprint.
+    pub fn counters_snapshot(&self) -> BTreeMap<String, u64> {
+        self.counters.clone()
+    }
+
     /// Text dump (for the CLI's `metrics` subcommand).
     pub fn render(&self) -> String {
         let mut out = String::new();
@@ -171,6 +178,17 @@ mod tests {
         // clones carry a consistent view too
         let c = h.clone();
         assert_eq!(c.percentile(100.0), 5.0);
+    }
+
+    #[test]
+    fn counters_snapshot_is_stable_and_complete() {
+        let mut m = Metrics::new();
+        m.inc("b");
+        m.add("a", 2);
+        let snap = m.counters_snapshot();
+        assert_eq!(snap.get("a"), Some(&2));
+        assert_eq!(snap.get("b"), Some(&1));
+        assert_eq!(m.counters_snapshot(), snap);
     }
 
     #[test]

@@ -22,6 +22,9 @@ pub struct TraceOutcome {
     pub peak_concurrency: usize,
     /// Jobs that overtook a blocked head-of-queue job.
     pub backfill_starts: u64,
+    /// Jobs requeued after losing a node (0 on a fault-free run; the
+    /// chaos scenarios drive this through `faults::run_chaos_trace`).
+    pub requeues: u64,
 }
 
 /// The 8-machine cluster the mix scenarios run on: 3 warm nodes, up to
@@ -126,6 +129,7 @@ pub fn run_job_trace(
         max_wait: waits.iter().cloned().fold(0.0, f64::max),
         makespan: last_finish.saturating_sub(t0).as_secs_f64(),
         backfill_starts: vc.metrics().counter("backfill_starts"),
+        requeues: vc.metrics().counter("jobs_requeued"),
     };
     Ok((outcome, vc))
 }

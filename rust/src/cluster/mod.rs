@@ -19,3 +19,40 @@ pub use head::{Head, JobKind, JobRecord, JobSpec, JobState, StartedJob};
 pub use metrics::{Histogram, Metrics};
 pub use mix::{bursty_trace, mix_spec, run_job_trace, TraceOutcome};
 pub use vcluster::{NodeState, VirtualCluster};
+
+/// Canonical node name for machine index `idx` (machine 0 is the head,
+/// so compute nodes start at `node02`). The zero-padding width is
+/// derived from the cluster size, which keeps names in numeric order
+/// under the lexicographic sorts the catalog and health registry use —
+/// a fixed two-digit pad put `node100` before `node11` past 99 nodes.
+pub fn node_name(machine_idx: usize, total_machines: u32) -> String {
+    let width = total_machines.max(1).to_string().len().max(2);
+    format!("node{:0w$}", machine_idx + 1, w = width)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::node_name;
+
+    #[test]
+    fn node_names_keep_the_paper_shape_on_small_clusters() {
+        assert_eq!(node_name(1, 3), "node02");
+        assert_eq!(node_name(2, 3), "node03");
+        assert_eq!(node_name(1, 99), "node02");
+    }
+
+    #[test]
+    fn node_names_widen_past_99_nodes_and_sort_numerically() {
+        assert_eq!(node_name(1, 150), "node002");
+        assert_eq!(node_name(10, 150), "node011");
+        assert_eq!(node_name(99, 150), "node100");
+        let mut names: Vec<String> = (1..150).map(|i| node_name(i, 150)).collect();
+        let sorted = {
+            let mut s = names.clone();
+            s.sort();
+            s
+        };
+        names.sort_by_key(|n| n[4..].parse::<u32>().unwrap());
+        assert_eq!(names, sorted, "lexicographic order must match numeric order");
+    }
+}

@@ -14,10 +14,11 @@
 //! (virtual comm + real compute) is charged back into virtual time.
 
 use crate::cluster::autoscaler::{Autoscaler, Observation, ScaleAction};
-use crate::cluster::head::{Head, JobKind, JobRecord, JobSpec, JobState, StartedJob};
+use crate::cluster::head::{Head, JobKind, JobRecord, JobSpec, JobState, LossOutcome, StartedJob};
 use crate::cluster::metrics::Metrics;
 use crate::config::ClusterSpec;
-use crate::consul::catalog::ServiceEntry;
+use crate::consul::catalog::{Catalog, ServiceEntry};
+use crate::consul::health::CheckStatus;
 use crate::consul::ConsulCluster;
 use crate::dockyard::engine::{Engine as DockerEngine, RunSpec};
 use crate::dockyard::{Dockerfile, ImageStore, Registry};
@@ -75,6 +76,15 @@ pub struct ClusterState {
     pub health_ttl: SimTime,
     /// Artifacts dir for Jacobi jobs.
     pub artifacts: std::path::PathBuf,
+    /// Chaos: per-machine "heartbeats muted until" marks (node hang —
+    /// the machine is alive, its agent just stops refreshing).
+    pub hang_until: Vec<SimTime>,
+    /// Chaos: per-machine budget of deploy attempts that must fail.
+    pub deploy_faults: Vec<u32>,
+    /// Chaos: machines on the minority side of the active network
+    /// partition. Keyed by machine (not agent) so a machine that is down
+    /// at injection, or re-provisioned mid-window, is still cut off.
+    pub partitioned_machines: Vec<bool>,
 }
 
 /// The facade: state + event engine.
@@ -133,6 +143,9 @@ impl VirtualCluster {
             provision_started: vec![None; n],
             health_ttl: SimTime::from_secs(30),
             artifacts: Runtime::default_dir(),
+            hang_until: vec![SimTime::ZERO; n],
+            deploy_faults: vec![0; n],
+            partitioned_machines: vec![false; n],
         };
         Ok(Self { state, engine: Engine::new() })
     }
@@ -206,7 +219,12 @@ impl VirtualCluster {
 
     fn boot_done(st: &mut ClusterState, eng: &mut Ev, m: MachineId) {
         let idx = m.raw() as usize;
-        st.plant.machine_mut(m).boot_complete().expect("booting");
+        // the machine may have been chaos-killed mid-boot
+        if st.node_states[idx] != NodeState::Booting
+            || st.plant.machine_mut(m).boot_complete().is_err()
+        {
+            return;
+        }
         st.node_states[idx] = NodeState::StartingEngine;
         // dockerd startup
         eng.schedule_after(SimTime::from_secs(2), move |st, eng| {
@@ -216,10 +234,28 @@ impl VirtualCluster {
 
     fn engine_up(st: &mut ClusterState, eng: &mut Ev, m: MachineId) {
         let idx = m.raw() as usize;
+        if st.node_states[idx] != NodeState::StartingEngine {
+            return; // killed while dockerd was starting
+        }
         st.node_states[idx] = NodeState::Deploying;
+        if st.deploy_faults[idx] > 0 {
+            // injected deploy failure: the pull/start step errors out and
+            // the machine powers back off; the autoscaler retries later
+            st.deploy_faults[idx] -= 1;
+            st.metrics.inc("deploy_failures");
+            st.metrics.inc("injected_deploy_failures");
+            log::warn!("injected deploy failure on {m}");
+            st.node_states[idx] = NodeState::Off;
+            st.plant.machine_mut(m).power_off();
+            return;
+        }
         let cid = ContainerId::new(st.next_container);
         st.next_container += 1;
-        let name = if idx == 0 { "head".to_string() } else { format!("node{:02}", idx + 1) };
+        let name = if idx == 0 {
+            "head".to_string()
+        } else {
+            crate::cluster::node_name(idx, st.spec.machines)
+        };
         let image = st.spec.image.clone();
         let cores = st.spec.slots_per_node.min(st.plant.machine(m).spec.total_cores());
         let spec = RunSpec { cores, memory: 32 << 30 };
@@ -249,24 +285,24 @@ impl VirtualCluster {
 
     fn container_up(st: &mut ClusterState, eng: &mut Ev, m: MachineId, cid: ContainerId, ip: Ipv4) {
         let idx = m.raw() as usize;
+        if st.node_states[idx] != NodeState::Deploying {
+            return; // killed while the container was starting
+        }
         st.consul.advance(eng.now());
         // consul agent in the container joins gossip (seed: head agent 0)
         let agent = AgentId::new(cid.raw());
         let seed = if idx == 0 { None } else { Some(AgentId::new(st.containers[0].map(|c| c.raw()).unwrap_or(0))) };
         st.consul.agent_join(agent, seed, st.spec.seed ^ cid.raw() as u64);
+        if st.partitioned_machines[idx] {
+            // the machine came (back) up mid-partition: its fresh agent
+            // is on the minority side too
+            st.consul.partition_agent(agent);
+        }
         // compute nodes register the hpc service; the head does not run
         // MPI ranks in the paper's deployment (head + node02/node03 do —
         // we register compute nodes only, matching Fig. 5's hostfile).
         if idx != 0 {
-            let entry = ServiceEntry {
-                node: format!("node{:02}", idx + 1),
-                address: ip,
-                port: 22,
-                slots: st.spec.slots_per_node,
-                tags: vec!["hpc".into(), "mpi".into()],
-            };
-            let ttl = st.health_ttl;
-            st.consul.register_service("hpc", &entry, ttl);
+            Self::register_node_service(st, idx, ip);
         }
         st.node_states[idx] = NodeState::Ready;
         if let Some(t0) = st.provision_started[idx] {
@@ -282,6 +318,21 @@ impl VirtualCluster {
         );
     }
 
+    /// Register (or re-register) a compute node's `hpc` service entry
+    /// and TTL health check — shared by first provisioning and the
+    /// heartbeat's anti-entropy rejoin path.
+    fn register_node_service(st: &mut ClusterState, idx: usize, ip: Ipv4) {
+        let entry = ServiceEntry {
+            node: crate::cluster::node_name(idx, st.spec.machines),
+            address: ip,
+            port: 22,
+            slots: st.spec.slots_per_node,
+            tags: vec!["hpc".into(), "mpi".into()],
+        };
+        let ttl = st.health_ttl;
+        st.consul.register_service("hpc", &entry, ttl);
+    }
+
     fn heartbeat(st: &mut ClusterState, eng: &mut Ev, m: MachineId, idx: usize) {
         if st.node_states[idx] != NodeState::Ready {
             return; // retired or dead: stop refreshing
@@ -290,8 +341,27 @@ impl VirtualCluster {
             return;
         }
         st.consul.advance(eng.now());
-        let node = format!("node{:02}", idx + 1);
-        st.consul.refresh_health(&node);
+        // a hung agent is alive but mute; a partitioned one cannot reach
+        // the servers — either way the TTL runs out and the node drops
+        // from the hostfile until the condition clears
+        let hung = eng.now() < st.hang_until[idx];
+        let partitioned = st.partitioned_machines[idx];
+        if !hung && !partitioned {
+            let node = crate::cluster::node_name(idx, st.spec.machines);
+            if !st.consul.refresh_health(&node) && idx != 0 {
+                // the check was reaped while the agent was unreachable
+                // (health-gating deregisters critical instances): agent
+                // anti-entropy re-registers the service, exactly like a
+                // real consul agent rejoining after a flap
+                if let Some(ip) = st.containers[idx]
+                    .and_then(|cid| st.engines[idx].container(cid))
+                    .and_then(|c| c.ip)
+                {
+                    Self::register_node_service(st, idx, ip);
+                    st.metrics.inc("agent_reregistrations");
+                }
+            }
+        }
         let ttl = st.health_ttl;
         eng.schedule_after(
             SimTime::from_nanos(ttl.as_nanos() / 3),
@@ -328,22 +398,79 @@ impl VirtualCluster {
 
     fn scheduler_event(st: &mut ClusterState, eng: &mut Ev) {
         st.consul.advance(eng.now());
+        Self::reap_lost_jobs(st, eng);
         Self::dispatch_jobs(st, eng);
         eng.schedule_after(SimTime::from_secs(1), Self::scheduler_event);
+    }
+
+    /// Recovery pipeline, detection step: cross-check every running
+    /// reservation against the health-gated hostfile. A job whose slice
+    /// references a host that dropped out (TTL expiry after a crash,
+    /// hang or partition) is failed and requeued under its retry budget.
+    fn reap_lost_jobs(st: &mut ClusterState, eng: &mut Ev) {
+        // reversed: each requeue is a push_front, so processing youngest
+        // first leaves the oldest lost job at the head of the queue
+        for id in st.head.lost_jobs().into_iter().rev() {
+            Self::job_lost(st, eng.now(), id, "reservation lost a node (host left the hostfile)");
+        }
+    }
+
+    /// Recovery pipeline, bookkeeping step: route a lost job through the
+    /// head's retry budget and record what happened.
+    fn job_lost(st: &mut ClusterState, now: SimTime, id: JobId, reason: &str) {
+        match st.head.handle_lost_job(id, now, reason) {
+            LossOutcome::Requeued { wasted, .. } => {
+                st.metrics.inc("jobs_requeued");
+                st.metrics.observe("job_wasted_seconds", wasted.as_secs_f64());
+            }
+            LossOutcome::Abandoned { .. } => {
+                st.metrics.inc("jobs_lost");
+            }
+            LossOutcome::NotRunning => {}
+        }
     }
 
     /// Start every currently startable job (FIFO + conservative
     /// backfill), each on its own reserved hostfile slice.
     fn dispatch_jobs(st: &mut ClusterState, eng: &mut Ev) {
-        while let Some(started) = st.head.start_next(eng.now()) {
-            Self::launch_job(st, eng, started);
+        loop {
+            let Some(started) = st.head.start_next(eng.now()) else { break };
+            if !Self::launch_job(st, eng, started) {
+                // launch aborted on a stale hostfile: wait for the next
+                // tick so the quarantine deregistration can commit
+                break;
+            }
         }
         st.metrics.set_gauge("running_jobs", st.head.running.len() as f64);
     }
 
-    fn launch_job(st: &mut ClusterState, eng: &mut Ev, started: StartedJob) {
+    /// Returns false when the launch was aborted because a host in the
+    /// job's slice is unreachable (the job is already back in the queue).
+    fn launch_job(st: &mut ClusterState, eng: &mut Ev, started: StartedJob) -> bool {
         let id = started.spec.id;
         let t0 = eng.now();
+        // mpirun would fail to reach a host whose container is gone (a
+        // dead machine stays advertised until its TTL expires): abort the
+        // launch, quarantine the host now rather than waiting out the
+        // TTL, and requeue the job without charging its retry budget
+        if let Some(bad) = started
+            .hostfile_slice
+            .hosts
+            .iter()
+            .find(|h| !st.ip_to_container.contains_key(&h.addr))
+        {
+            let bad_addr = bad.addr;
+            st.head.unlaunch(id, t0);
+            st.metrics.inc("launch_aborts");
+            if let Some(entry) = Catalog::list(st.consul.kv(), "hpc")
+                .into_iter()
+                .find(|e| e.address == bad_addr)
+            {
+                st.consul.deregister_service("hpc", &entry.node);
+            }
+            Self::refresh_hostfile(st, t0);
+            return false;
+        }
         let duration = match &started.spec.kind {
             JobKind::Synthetic { duration } => *duration,
             JobKind::Jacobi { px, py, tile, steps } => {
@@ -357,11 +484,14 @@ impl VirtualCluster {
                     Err(e) => {
                         st.metrics.inc("jobs_failed");
                         st.head.fail(id, e.to_string());
-                        return;
+                        return true;
                     }
                 }
             }
         };
+        if let Some(rec) = st.head.running.get_mut(&id) {
+            rec.planned_duration = Some(duration);
+        }
         st.metrics.inc("jobs_started");
         if started.backfilled {
             st.metrics.inc("backfill_starts");
@@ -371,12 +501,19 @@ impl VirtualCluster {
             t0.saturating_sub(started.queued_at).as_secs_f64(),
         );
         st.metrics.observe("concurrent_jobs", st.head.running.len() as f64);
+        let attempt = started.attempt;
         eng.schedule_after(duration, move |st: &mut ClusterState, eng: &mut Ev| {
-            Self::job_done(st, eng, id);
+            Self::job_done(st, eng, id, attempt);
         });
+        true
     }
 
-    fn job_done(st: &mut ClusterState, eng: &mut Ev, id: JobId) {
+    fn job_done(st: &mut ClusterState, eng: &mut Ev, id: JobId, attempt: u32) {
+        // a completion event from an attempt that was since killed and
+        // requeued must not complete the newer attempt early
+        if st.head.running.get(&id).map(|r| r.attempt) != Some(attempt) {
+            return;
+        }
         if let Some(mut record) = st.head.finish(id) {
             let started = match record.state {
                 JobState::Running { started } => started,
@@ -385,6 +522,10 @@ impl VirtualCluster {
             record.state = JobState::Done { started, finished: eng.now() };
             st.metrics.inc("jobs_completed");
             st.head.completed.push(record);
+            if let Some(t0) = st.head.first_failed_at.remove(&id) {
+                st.metrics
+                    .observe("job_mttr_seconds", eng.now().saturating_sub(t0).as_secs_f64());
+            }
         }
         // freed slots: start waiting jobs now, not at the next tick
         Self::dispatch_jobs(st, eng);
@@ -413,7 +554,9 @@ impl VirtualCluster {
             py,
             tile,
             steps,
-            check_every: 20.min(steps),
+            // the residual-check cadence is also the restart checkpoint
+            // the recovery pipeline resumes from after a node loss
+            check_every: crate::cluster::head::JACOBI_CHECKPOINT_STEPS.min(steps),
             tol: 1e-6,
             artifacts: st.artifacts.clone(),
         };
@@ -431,21 +574,30 @@ impl VirtualCluster {
 
     fn autoscale_event(st: &mut ClusterState, eng: &mut Ev) {
         st.consul.advance(eng.now());
-        let ready = st
-            .node_states
-            .iter()
-            .skip(1)
-            .filter(|s| **s == NodeState::Ready)
-            .count() as u32;
-        let provisioning = st
-            .node_states
-            .iter()
-            .skip(1)
-            .filter(|s| s.is_provisioning())
-            .count() as u32;
+        // capacity is health-gated: a Ready node whose check went
+        // critical (hung agent, partition) is not capacity the scheduler
+        // can use — counting it separately lets the policy boot a
+        // replacement while suppressing scale-down mid-incident
+        let mut ready = 0u32;
+        let mut unhealthy = 0u32;
+        let mut provisioning = 0u32;
+        for (idx, s) in st.node_states.iter().enumerate().skip(1) {
+            match s {
+                NodeState::Ready => {
+                    let node = crate::cluster::node_name(idx, st.spec.machines);
+                    match st.consul.health.status(&node, eng.now()) {
+                        Some(CheckStatus::Passing) => ready += 1,
+                        _ => unhealthy += 1,
+                    }
+                }
+                s if s.is_provisioning() => provisioning += 1,
+                _ => {}
+            }
+        }
         let obs = Observation {
             now: eng.now(),
             ready_nodes: ready,
+            unhealthy_nodes: unhealthy,
             provisioning_nodes: provisioning,
             queued_slots: st.head.queued_slots(),
             reserved_slots: st.head.reserved_slots(),
@@ -510,7 +662,7 @@ impl VirtualCluster {
     fn retire_node(st: &mut ClusterState, now: SimTime, m: MachineId) {
         let idx = m.raw() as usize;
         st.consul.advance(now);
-        let node = format!("node{:02}", idx + 1);
+        let node = crate::cluster::node_name(idx, st.spec.machines);
         st.consul.deregister_service("hpc", &node);
         if let Some(cid) = st.containers[idx].take() {
             let _ = st.engines[idx].stop(cid, 0);
@@ -550,6 +702,8 @@ impl VirtualCluster {
                 },
                 result: None,
                 queued_at: now,
+                attempt: 0,
+                planned_duration: None,
             });
             return id;
         }
@@ -560,24 +714,125 @@ impl VirtualCluster {
 
     /// Hard-kill a machine (power loss): the container vanishes, the
     /// health check expires and the node drops out of the hostfile.
+    /// Jobs holding slots on the machine abort immediately — mpirun sees
+    /// the connections die long before the TTL — and are requeued under
+    /// their retry budget.
     pub fn kill_machine(&mut self, m: MachineId) {
+        let now = self.engine.now();
+        Self::kill_machine_at(&mut self.state, now, m);
+    }
+
+    /// Event-context version of [`kill_machine`] (the chaos injector
+    /// calls this from inside engine events).
+    pub(crate) fn kill_machine_at(st: &mut ClusterState, now: SimTime, m: MachineId) {
         let idx = m.raw() as usize;
-        if let Some(cid) = self.state.containers[idx].take() {
-            self.state.consul.agent_remove(AgentId::new(cid.raw()));
-            if let Some(ip) = self
-                .state
+        if idx >= st.node_states.len() {
+            return;
+        }
+        if st.node_states[idx] == NodeState::Off {
+            return; // nothing to kill: don't inflate machines_killed
+        }
+        let mut dead_ip = None;
+        if let Some(cid) = st.containers[idx].take() {
+            st.consul.agent_remove(AgentId::new(cid.raw()));
+            if let Some(ip) = st
                 .ip_to_container
                 .iter()
                 .find(|(_, c)| **c == cid)
                 .map(|(ip, _)| *ip)
             {
-                self.state.ip_to_container.remove(&ip);
+                st.ip_to_container.remove(&ip);
+                dead_ip = Some(ip);
             }
-            self.state.fabric.lock().unwrap().unplace(cid);
+            st.fabric.lock().unwrap().unplace(cid);
         }
-        self.state.plant.machine_mut(m).power_off();
-        self.state.node_states[idx] = NodeState::Off;
-        self.state.metrics.inc("machines_killed");
+        st.plant.machine_mut(m).power_off();
+        st.node_states[idx] = NodeState::Off;
+        st.hang_until[idx] = SimTime::ZERO;
+        st.metrics.inc("machines_killed");
+        if let Some(ip) = dead_ip {
+            // reversed so the push_front requeues keep FIFO order among
+            // the jobs lost to this machine
+            for id in st.head.jobs_on_addr(ip).into_iter().rev() {
+                Self::job_lost(st, now, id, &format!("machine {m} died under the job"));
+            }
+        }
+    }
+
+    // ---------- chaos hooks (driven by faults::injector) ----------
+
+    /// Mute a machine's heartbeats for `duration` (node hang: the
+    /// machine and its ranks stay alive, the agent just goes silent).
+    pub(crate) fn chaos_hang(st: &mut ClusterState, now: SimTime, m: MachineId, duration: SimTime) {
+        let idx = m.raw() as usize;
+        if idx >= st.hang_until.len() {
+            return;
+        }
+        st.hang_until[idx] = st.hang_until[idx].max(now + duration);
+        st.metrics.inc("hangs_injected");
+    }
+
+    /// Make the next `failures` deploy attempts on a machine fail.
+    pub(crate) fn chaos_deploy_fail(st: &mut ClusterState, m: MachineId, failures: u32) {
+        let idx = m.raw() as usize;
+        if idx < st.deploy_faults.len() {
+            st.deploy_faults[idx] += failures;
+        }
+    }
+
+    /// Cut the listed machines off from the rest of the gossip network
+    /// (and from the consul servers, so their health checks expire).
+    /// The split is keyed by machine: targets that are down now are cut
+    /// off the moment they come up, and re-provisioned containers join
+    /// the minority side. Returns the partition's epoch token when at
+    /// least one machine was targeted; replaces any previous split.
+    pub(crate) fn chaos_partition(st: &mut ClusterState, machines: &[u32]) -> Option<u64> {
+        for flag in st.partitioned_machines.iter_mut() {
+            *flag = false;
+        }
+        let mut agents = Vec::new();
+        let mut flagged = false;
+        for &mi in machines {
+            let idx = mi as usize;
+            if idx == 0 || idx >= st.partitioned_machines.len() {
+                continue;
+            }
+            st.partitioned_machines[idx] = true;
+            flagged = true;
+            if let Some(cid) = st.containers[idx] {
+                agents.push(AgentId::new(cid.raw()));
+            }
+        }
+        if !flagged {
+            return None;
+        }
+        let epoch = st.consul.set_partition(agents);
+        st.metrics.inc("partitions_injected");
+        Some(epoch)
+    }
+
+    /// Heal the partition identified by `epoch` (a later partition
+    /// replaces the split and invalidates older heal timers).
+    pub(crate) fn chaos_heal_partition(st: &mut ClusterState, epoch: u64) {
+        if st.consul.heal_partition_epoch(epoch) {
+            for flag in st.partitioned_machines.iter_mut() {
+                *flag = false;
+            }
+        }
+    }
+
+    /// Install a fault plan: every fault becomes a deterministic engine
+    /// event. Plan times are offsets from the moment of injection.
+    pub fn inject_faults(&mut self, plan: &crate::faults::FaultPlan) {
+        let events = plan.expanded();
+        let n = events.len() as u64;
+        for ev in events {
+            let kind = ev.kind;
+            self.engine.schedule_after(ev.at, move |st: &mut ClusterState, eng: &mut Ev| {
+                crate::faults::injector::apply(st, eng, &kind);
+            });
+        }
+        self.state.metrics.add("faults_scheduled", n);
     }
 
     /// Explicitly provision one more machine (manual scale-up).
@@ -729,6 +984,55 @@ mod tests {
         assert!(vc.advance_until(SimTime::from_secs(60), |st| {
             st.head.hostfile().map(|h| h.hosts.len()) == Some(2)
         }));
+    }
+
+    /// Satellite bugfix regression: a killed machine used to leave the
+    /// head's reservation held forever and the job would "complete" on
+    /// dead slots when its timer fired. Now the job fails out of the
+    /// running pool at kill time and is requeued.
+    #[test]
+    fn killed_machine_fails_the_running_job_instead_of_phantom_completion() {
+        let mut spec = fast_spec(3);
+        spec.autoscale.enabled = false;
+        let mut vc = VirtualCluster::new(spec).unwrap();
+        vc.start();
+        assert!(vc.advance_until(SimTime::from_secs(300), |st| {
+            st.head.slots_available() >= 24
+        }));
+        vc.submit("doomed", 16, JobKind::Synthetic { duration: SimTime::from_secs(60) });
+        assert!(vc.advance_until(SimTime::from_secs(30), |st| st.head.running.len() == 1));
+        vc.kill_machine(MachineId::new(2));
+        // immediate detection: the reservation is released and the job
+        // is back in the queue, not running on dead slots
+        assert!(vc.state.head.running.is_empty(), "job still running on a dead node");
+        assert!(vc.state.head.reserved_addrs().is_empty(), "reservation leaked");
+        assert_eq!(vc.metrics().counter("jobs_requeued"), 1);
+        // past the original completion time: the stale timer must not
+        // mark the job Done (it needs 16 slots, only 12 remain)
+        vc.advance(SimTime::from_secs(120));
+        assert!(
+            vc.completed_jobs().is_empty(),
+            "job completed on dead slots: {:?}",
+            vc.completed_jobs()[0].state
+        );
+        // manual recovery: the requeued job runs to completion
+        vc.power_on(MachineId::new(2));
+        assert!(vc.advance_until(SimTime::from_secs(600), |st| !st.head.completed.is_empty()));
+        assert!(matches!(vc.completed_jobs()[0].state, JobState::Done { .. }));
+        assert!(vc.metrics().histogram("job_mttr_seconds").map(|h| h.count()) == Some(1));
+    }
+
+    #[test]
+    fn injected_deploy_failure_is_retried_until_the_node_comes_up() {
+        let mut vc = VirtualCluster::new(fast_spec(3)).unwrap();
+        vc.state.deploy_faults[2] = 1;
+        vc.start();
+        let ok = vc.advance_until(SimTime::from_secs(600), |st| {
+            st.node_states[2] == NodeState::Ready
+        });
+        assert!(ok, "node never recovered from the injected deploy failure");
+        assert_eq!(vc.metrics().counter("injected_deploy_failures"), 1);
+        assert!(vc.metrics().counter("machines_powered_on") >= 4, "retry must re-power the machine");
     }
 
     #[test]

@@ -71,6 +71,7 @@ pub struct GossipNode {
     pending_relays: HashMap<AgentId, Vec<AgentId>>,
     next_probe_at: SimTime,
     next_sync_at: SimTime,
+    sync_round: u64,
     rng: Rng,
     pub protocol_period: SimTime,
     pub ack_timeout: SimTime,
@@ -94,6 +95,7 @@ impl GossipNode {
             pending_relays: HashMap::new(),
             next_probe_at: SimTime::ZERO,
             next_sync_at: SimTime::ZERO,
+            sync_round: 0,
             rng: Rng::new(seed ^ ((id.raw() as u64 + 1) * 0xA5A5)),
             protocol_period: SimTime::from_millis(1000),
             ack_timeout: SimTime::from_millis(300),
@@ -284,8 +286,21 @@ impl GossipNode {
         // 3. push-pull anti-entropy each sync interval
         if now >= self.next_sync_at {
             self.next_sync_at = now + self.sync_interval;
+            self.sync_round += 1;
             if let Some(peer) = self.random_member(MemberState::Alive, &[]) {
                 out.push((peer, Msg::SyncReq { state: self.full_state() }));
+            }
+            // serf-style reconnect: every few rounds, also push-pull with
+            // a member we believe dead. A crashed member drops the probe;
+            // a partitioned one answers once the network heals, and the
+            // exchanged states re-merge the two sides (each side learns
+            // it was declared dead and refutes with a higher incarnation).
+            // Without this, two fully split halves would stay split
+            // forever — neither side gossips toward "dead" members.
+            if self.sync_round % 3 == 0 {
+                if let Some(peer) = self.random_member(MemberState::Dead, &[]) {
+                    out.push((peer, Msg::SyncReq { state: self.full_state() }));
+                }
             }
         }
 
@@ -407,6 +422,9 @@ mod tests {
         inflight: VecDeque<(SimTime, AgentId, AgentId, Msg)>,
         delay: SimTime,
         dead: Vec<AgentId>, // crashed agents: drop all their traffic
+        /// Partitioned agents: traffic crossing the split is dropped
+        /// (both directions), same-side traffic flows.
+        partition: Vec<AgentId>,
     }
 
     impl Net {
@@ -418,6 +436,7 @@ mod tests {
                 inflight: VecDeque::new(),
                 delay: SimTime::from_micros(200),
                 dead: Vec::new(),
+                partition: Vec::new(),
             }
         }
 
@@ -449,6 +468,9 @@ mod tests {
                 for (_, from, to, msg) in due {
                     if self.dead.contains(&to) || self.dead.contains(&from) {
                         continue;
+                    }
+                    if self.partition.contains(&from) != self.partition.contains(&to) {
+                        continue; // message crosses the split
                     }
                     let now = self.now;
                     let out = self.nodes[to.raw() as usize].on_message(now, from, msg);
@@ -536,6 +558,33 @@ mod tests {
                 "node {i} still sees victim as {st:?}"
             );
         }
+    }
+
+    #[test]
+    fn partitioned_halves_remerge_after_heal() {
+        let mut net = Net::new(6, 17);
+        net.boot_all_via_seed();
+        net.run(20_000, SimTime::from_millis(10));
+        assert!(net.converged());
+        // split {4, 5} off; each side declares the other dead
+        net.partition = vec![AgentId::new(4), AgentId::new(5)];
+        net.run(60_000, SimTime::from_millis(10)); // 10 min split
+        let a0 = &net.nodes[0];
+        assert!(
+            matches!(a0.member_state(AgentId::new(4)), Some(MemberState::Dead)),
+            "majority side must declare the minority dead, got {:?}",
+            a0.member_state(AgentId::new(4))
+        );
+        let a4 = &net.nodes[4];
+        assert!(
+            matches!(a4.member_state(AgentId::new(0)), Some(MemberState::Dead)),
+            "minority side must declare the majority dead"
+        );
+        // heal: the periodic dead-member reconnect sync re-merges the
+        // views (incarnation bumps refute the stale Dead declarations)
+        net.partition.clear();
+        net.run(30_000, SimTime::from_millis(10)); // 5 min to re-merge
+        assert!(net.converged(), "halves never re-merged after the partition healed");
     }
 
     #[test]

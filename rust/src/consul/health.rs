@@ -58,7 +58,9 @@ impl HealthRegistry {
         })
     }
 
-    /// Nodes currently passing.
+    /// Nodes currently passing, in natural (numeric-suffix-aware) order:
+    /// `node2` sorts before `node11` and `node100` even when the names
+    /// were padded for a smaller cluster.
     pub fn passing(&self, now: SimTime) -> Vec<&str> {
         let mut v: Vec<&str> = self
             .checks
@@ -66,7 +68,9 @@ impl HealthRegistry {
             .filter(|(_, c)| now.saturating_sub(c.last_refresh) <= c.ttl)
             .map(|(n, _)| n.as_str())
             .collect();
-        v.sort();
+        // cached: natural_key allocates, so compute it once per element,
+        // not once per comparison (this runs on the hostfile-render path)
+        v.sort_by_cached_key(|n| natural_key(n));
         v
     }
 
@@ -76,6 +80,29 @@ impl HealthRegistry {
     pub fn is_empty(&self) -> bool {
         self.checks.is_empty()
     }
+}
+
+/// Split a trailing ASCII-digit run off a name: `"node11"` -> `("node",
+/// Some(11))`. Overlong digit runs that overflow `u64` fall back to `None`.
+fn split_trailing_digits(s: &str) -> (&str, Option<u64>) {
+    let digits = s.chars().rev().take_while(|c| c.is_ascii_digit()).count();
+    let idx = s.len() - digits;
+    if digits == 0 {
+        return (s, None);
+    }
+    match s[idx..].parse::<u64>() {
+        Ok(n) => (&s[..idx], Some(n)),
+        Err(_) => (s, None),
+    }
+}
+
+/// Sort key ordering node names numerically within a shared prefix
+/// (`node2` < `node11` < `node100`), lexicographically across prefixes.
+/// A key function (rather than a comparator) guarantees a total order —
+/// mixed names like `a1b` cannot create comparison cycles.
+pub(crate) fn natural_key(s: &str) -> (String, Option<u64>, String) {
+    let (prefix, num) = split_trailing_digits(s);
+    (prefix.to_string(), num, s.to_string())
 }
 
 #[cfg(test)]
@@ -108,6 +135,35 @@ mod tests {
         h.register("b", SimTime::from_secs(10), SimTime::ZERO);
         h.refresh("b", SimTime::from_secs(20));
         assert_eq!(h.passing(SimTime::from_secs(25)), vec!["b"]);
+    }
+
+    #[test]
+    fn passing_list_orders_node_names_numerically() {
+        let mut h = HealthRegistry::new();
+        for name in ["node100", "node2", "node11", "head"] {
+            h.register(name, SimTime::from_secs(10), SimTime::ZERO);
+        }
+        assert_eq!(
+            h.passing(SimTime::from_secs(1)),
+            vec!["head", "node2", "node11", "node100"],
+            "node100 must not sort before node11"
+        );
+    }
+
+    #[test]
+    fn natural_key_orders_names_and_stays_total() {
+        assert!(natural_key("node2") < natural_key("node11"));
+        assert!(natural_key("node11") < natural_key("node100"));
+        assert!(natural_key("node02") < natural_key("node2"), "ties break lexicographically");
+        assert!(natural_key("a") < natural_key("b"));
+        assert!(natural_key("alpha9") < natural_key("beta1"));
+        assert_eq!(natural_key("n1"), natural_key("n1"));
+        // the comparator-cycle shape that breaks pairwise orderings
+        // (a2 < a11 numerically, a11 < a1b lexically, a1b < a2 lexically)
+        // must sort deterministically and without panicking under a key
+        let mut v = vec!["a1b", "a11", "a2"];
+        v.sort_by_key(|n| natural_key(n));
+        assert_eq!(v, vec!["a2", "a11", "a1b"]);
     }
 
     #[test]

@@ -13,7 +13,7 @@ use super::raft::{Command, Message as RaftMsg, RaftNode};
 use crate::sim::SimTime;
 use crate::util::ids::AgentId;
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::collections::{BinaryHeap, HashMap, HashSet, VecDeque};
 use thiserror::Error;
 
 #[derive(Debug, Error, PartialEq)]
@@ -52,9 +52,17 @@ pub struct ConsulCluster {
     pub health: HealthRegistry,
     /// Writes waiting for a leader.
     backlog: VecDeque<Command>,
+    /// Agents currently cut off by a network partition: gossip crossing
+    /// the split is dropped until [`heal_partition`](Self::heal_partition).
+    partitioned: HashSet<AgentId>,
+    /// Bumped by every `set_partition`, so a stale heal timer from an
+    /// earlier partition cannot clear a newer one.
+    partition_epoch: u64,
     /// Statistics.
     pub raft_msgs: u64,
     pub gossip_msgs: u64,
+    /// Gossip messages dropped at a partition boundary.
+    pub gossip_dropped: u64,
 }
 
 impl ConsulCluster {
@@ -85,9 +93,56 @@ impl ConsulCluster {
             tick_interval: SimTime::from_millis(10),
             health: HealthRegistry::new(),
             backlog: VecDeque::new(),
+            partitioned: HashSet::new(),
+            partition_epoch: 0,
             raft_msgs: 0,
             gossip_msgs: 0,
+            gossip_dropped: 0,
         }
+    }
+
+    /// Split the gossip network: traffic between `agents` and everyone
+    /// else is dropped until healed. One partition at a time — a new
+    /// call replaces the previous split. Returns an epoch token for
+    /// [`heal_partition_epoch`](Self::heal_partition_epoch), so a timer
+    /// armed for an old partition cannot clear a newer one. The cluster
+    /// driver also gates health refreshes from partitioned agents
+    /// (their TTL updates can't reach the servers either).
+    pub fn set_partition(&mut self, agents: impl IntoIterator<Item = AgentId>) -> u64 {
+        self.partitioned = agents.into_iter().collect();
+        self.partition_epoch += 1;
+        self.partition_epoch
+    }
+
+    /// Add one agent to the active split (a container re-provisioned on
+    /// a machine that is still on the minority side).
+    pub fn partition_agent(&mut self, a: AgentId) {
+        self.partitioned.insert(a);
+    }
+
+    /// Unconditionally clear the current partition (operator action).
+    pub fn heal_partition(&mut self) {
+        self.partitioned.clear();
+    }
+
+    /// Clear the partition only if `epoch` is still the active one —
+    /// the form scheduled heal timers use. Returns true when it healed.
+    pub fn heal_partition_epoch(&mut self, epoch: u64) -> bool {
+        if self.partition_epoch == epoch {
+            self.partitioned.clear();
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn is_partitioned(&self, a: AgentId) -> bool {
+        self.partitioned.contains(&a)
+    }
+
+    fn crosses_partition(&self, from: AgentId, to: AgentId) -> bool {
+        !self.partitioned.is_empty()
+            && self.partitioned.contains(&from) != self.partitioned.contains(&to)
     }
 
     pub fn now(&self) -> SimTime {
@@ -162,6 +217,10 @@ impl ConsulCluster {
                         }
                     }
                     Wire::Gossip { from, to, msg } => {
+                        if self.crosses_partition(from, to) {
+                            self.gossip_dropped += 1;
+                            continue;
+                        }
                         if let Some(agent) = self.agents.get_mut(&to) {
                             let now = self.now;
                             let out = agent.on_message(now, from, msg);
@@ -289,10 +348,12 @@ impl ConsulCluster {
         self.agents.len()
     }
 
-    /// Heartbeat an agent's health check.
-    pub fn refresh_health(&mut self, node: &str) {
+    /// Heartbeat an agent's health check. Returns false when no such
+    /// check is registered — i.e. it was reaped while the agent was
+    /// unreachable and the agent must re-register.
+    pub fn refresh_health(&mut self, node: &str) -> bool {
         let now = self.now;
-        self.health.refresh(node, now);
+        self.health.refresh(node, now)
     }
 }
 
@@ -369,6 +430,50 @@ mod tests {
         assert_eq!(a0.alive_members().len(), 2);
         let a2 = c.agent(AgentId::new(2)).unwrap();
         assert!(a2.alive_members().contains(&AgentId::new(1)));
+    }
+
+    #[test]
+    fn partition_blocks_gossip_until_healed() {
+        use super::super::gossip::MemberState;
+        let mut c = ConsulCluster::new(1, 21);
+        c.agent_join(AgentId::new(0), None, 21);
+        for i in 1..4 {
+            c.agent_join(AgentId::new(i), Some(AgentId::new(0)), 21);
+        }
+        c.advance(SimTime::from_secs(30));
+        assert_eq!(c.agent(AgentId::new(0)).unwrap().alive_members().len(), 3);
+        // cut agent 3 off
+        c.set_partition([AgentId::new(3)]);
+        assert!(c.is_partitioned(AgentId::new(3)));
+        c.advance(c.now() + SimTime::from_secs(60));
+        let st = c.agent(AgentId::new(0)).unwrap().member_state(AgentId::new(3));
+        assert!(
+            matches!(st, Some(MemberState::Dead) | Some(MemberState::Suspect)),
+            "partitioned agent still looks alive: {st:?}"
+        );
+        assert!(c.gossip_dropped > 0, "no traffic was dropped at the boundary");
+        // heal: reconnect syncs re-merge the views
+        c.heal_partition();
+        c.advance(c.now() + SimTime::from_secs(300));
+        assert_eq!(
+            c.agent(AgentId::new(0)).unwrap().member_state(AgentId::new(3)),
+            Some(MemberState::Alive),
+            "agent 3 never rejoined after the heal"
+        );
+    }
+
+    #[test]
+    fn stale_heal_timer_cannot_clear_a_newer_partition() {
+        let mut c = ConsulCluster::new(1, 5);
+        let first = c.set_partition([AgentId::new(1)]);
+        let second = c.set_partition([AgentId::new(2)]);
+        assert_ne!(first, second);
+        // the first partition's heal timer fires after its split was
+        // already replaced: the active partition must survive
+        assert!(!c.heal_partition_epoch(first));
+        assert!(c.is_partitioned(AgentId::new(2)));
+        assert!(c.heal_partition_epoch(second));
+        assert!(!c.is_partitioned(AgentId::new(2)));
     }
 
     #[test]

@@ -1,0 +1,63 @@
+//! The injector: compiles fault-plan events into mutations of the live
+//! cluster state.
+//!
+//! `VirtualCluster::inject_faults` schedules one engine event per
+//! (expanded) plan entry; each fires this module's [`apply`], which
+//! drives the cluster's chaos hooks — the same `kill_machine` path an
+//! operator uses, heartbeat muting, gossip partitions and deploy-fault
+//! budgets. Everything runs inside the deterministic event engine, so a
+//! seeded plan always replays the same way.
+
+use crate::cluster::vcluster::{ClusterState, VirtualCluster};
+use crate::faults::plan::FaultKind;
+use crate::sim::Engine;
+use crate::util::ids::MachineId;
+
+/// Apply one fault to the cluster. Faults aimed at machine 0 (the head)
+/// or out-of-range machines are ignored — chaos never decapitates the
+/// control plane.
+pub fn apply(st: &mut ClusterState, eng: &mut Engine<ClusterState>, kind: &FaultKind) {
+    match kind {
+        FaultKind::Crash { machine } => {
+            if target_ok(st, *machine) {
+                VirtualCluster::kill_machine_at(st, eng.now(), MachineId::new(*machine));
+            }
+        }
+        FaultKind::Hang { machine, duration } => {
+            if target_ok(st, *machine) {
+                VirtualCluster::chaos_hang(st, eng.now(), MachineId::new(*machine), *duration);
+            }
+        }
+        // plans lower flaps to hang windows in `expanded()`; applying one
+        // directly injects only its first down window
+        FaultKind::Flap { machine, down, .. } => {
+            if target_ok(st, *machine) {
+                VirtualCluster::chaos_hang(st, eng.now(), MachineId::new(*machine), *down);
+            }
+        }
+        FaultKind::Partition { machines, duration } => {
+            let safe: Vec<u32> = machines.iter().copied().filter(|&m| m != 0).collect();
+            if let Some(epoch) = VirtualCluster::chaos_partition(st, &safe) {
+                // the heal timer carries the partition's epoch: if a later
+                // partition replaces this split, the stale timer is a no-op
+                // and the newer partition runs its full duration
+                let d = *duration;
+                eng.schedule_after(
+                    d,
+                    move |st: &mut ClusterState, _eng: &mut Engine<ClusterState>| {
+                        VirtualCluster::chaos_heal_partition(st, epoch);
+                    },
+                );
+            }
+        }
+        FaultKind::DeployFail { machine, failures } => {
+            if target_ok(st, *machine) {
+                VirtualCluster::chaos_deploy_fail(st, MachineId::new(*machine), *failures);
+            }
+        }
+    }
+}
+
+fn target_ok(st: &ClusterState, machine: u32) -> bool {
+    machine != 0 && (machine as usize) < st.node_states.len()
+}

@@ -1,0 +1,30 @@
+//! Fault injection and self-healing — the cluster under adversity.
+//!
+//! The paper's consul pipeline already *removes* dead capacity: a node
+//! that stops heartbeating goes critical, drops out of the catalog and
+//! the hostfile re-renders without it (§IV, Fig. 5). This subsystem
+//! closes the loop so the cluster also *recovers*:
+//!
+//! * [`plan`] — deterministic, seeded fault schedules: node crashes
+//!   (per-machine MTBF draws or scripted), node hangs, flapping agents,
+//!   consul gossip partitions and injected deploy failures.
+//! * [`injector`] — compiles a plan into `sim::Engine` events that
+//!   mutate the live [`ClusterState`](crate::cluster::vcluster): the
+//!   `kill_machine` path, heartbeat muting, gossip splits, deploy-fault
+//!   budgets.
+//! * Recovery itself lives where the control loops live: the head
+//!   cross-checks running reservations against the health-gated
+//!   hostfile each scheduler tick and requeues lost jobs under a
+//!   per-job retry budget with partial-progress credit
+//!   (`Head::handle_lost_job`), while the autoscaler counts unhealthy
+//!   nodes as capacity-to-replace and boots substitutes.
+//! * [`scenario`] — the end-to-end harness (`run_chaos_trace`) behind
+//!   `vhpc chaos`, `examples/chaos_recovery.rs` and
+//!   `benches/ext_faults.rs`, reporting MTTR, wasted work and goodput.
+
+pub mod injector;
+pub mod plan;
+pub mod scenario;
+
+pub use plan::{FaultEvent, FaultKind, FaultPlan};
+pub use scenario::{run_chaos_trace, ChaosOutcome};

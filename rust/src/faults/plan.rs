@@ -1,0 +1,260 @@
+//! Deterministic fault plans: what goes wrong, where, and when.
+//!
+//! A [`FaultPlan`] is a time-sorted list of [`FaultEvent`]s. Plans come
+//! from three builders — scripted traces ([`FaultPlan::scripted`]),
+//! per-machine MTBF crash draws ([`FaultPlan::from_mtbf`]) and a mixed
+//! chaos generator covering every fault kind ([`FaultPlan::chaos_mix`]).
+//! Every builder is seeded: the same seed always produces byte-identical
+//! schedules, which is what makes chaos runs replayable and lets the
+//! benches assert two same-seed runs behave identically.
+//!
+//! Event times are **offsets from the moment the plan is injected**
+//! (`VirtualCluster::inject_faults`), not absolute sim times — a plan
+//! built once can be replayed against clusters that took different
+//! amounts of time to warm up.
+
+use crate::sim::SimTime;
+use crate::util::Rng;
+use std::collections::BTreeMap;
+
+/// One kind of injected failure. Machine 0 (the head) is never a valid
+/// target — the injector ignores faults aimed at it.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultKind {
+    /// Power loss: the container vanishes, the health check expires,
+    /// and jobs holding slots on the machine abort immediately.
+    Crash { machine: u32 },
+    /// The machine stays alive (ranks keep computing) but its consul
+    /// agent stops heartbeating for `duration`; the node drops out of
+    /// the hostfile until the agent recovers and re-registers.
+    Hang { machine: u32, duration: SimTime },
+    /// `cycles` hang windows of `down`, separated by `up` of healthy
+    /// operation — a flapping agent.
+    Flap { machine: u32, down: SimTime, up: SimTime, cycles: u32 },
+    /// Gossip split: the listed machines' agents can reach neither the
+    /// rest of the agents nor the consul servers for `duration`, so
+    /// only the majority side keeps refreshing health checks.
+    Partition { machines: Vec<u32>, duration: SimTime },
+    /// The next `failures` container-deploy attempts on the machine
+    /// error out (image pull / start failure).
+    DeployFail { machine: u32, failures: u32 },
+}
+
+impl FaultKind {
+    /// Stable label for histograms and determinism fingerprints.
+    pub fn label(&self) -> &'static str {
+        match self {
+            FaultKind::Crash { .. } => "crash",
+            FaultKind::Hang { .. } => "hang",
+            FaultKind::Flap { .. } => "flap",
+            FaultKind::Partition { .. } => "partition",
+            FaultKind::DeployFail { .. } => "deploy_fail",
+        }
+    }
+}
+
+/// A fault at a point in (relative) time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultEvent {
+    /// Offset from plan injection.
+    pub at: SimTime,
+    pub kind: FaultKind,
+}
+
+/// A deterministic, time-sorted fault schedule.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// A hand-written trace (events are sorted by time for you).
+    pub fn scripted(mut events: Vec<FaultEvent>) -> Self {
+        events.sort_by_key(|e| e.at);
+        Self { events }
+    }
+
+    /// Per-machine MTBF draws: every compute machine (`1..machines`)
+    /// crashes at exponentially distributed intervals with mean `mtbf`,
+    /// over `horizon`. Machines draw from forked, per-machine streams,
+    /// so the schedule is stable under iteration-order changes.
+    pub fn from_mtbf(seed: u64, machines: u32, mtbf: SimTime, horizon: SimTime) -> Self {
+        let mut root = Rng::new(seed ^ 0xFA17_5EED);
+        let mut events = Vec::new();
+        for machine in 1..machines {
+            let mut rng = root.fork();
+            let mut t = SimTime::ZERO;
+            loop {
+                t = t + SimTime::from_secs_f64(rng.gen_exp(mtbf.as_secs_f64()));
+                if t > horizon {
+                    break;
+                }
+                events.push(FaultEvent { at: t, kind: FaultKind::Crash { machine } });
+            }
+        }
+        Self::scripted(events)
+    }
+
+    /// `faults` seeded events drawn over `horizon`, mixing every fault
+    /// kind (crash-heavy, with hangs, flaps, deploy failures and
+    /// single-machine partitions in the tail).
+    pub fn chaos_mix(seed: u64, machines: u32, faults: usize, horizon: SimTime) -> Self {
+        let mut rng = Rng::new(seed ^ 0xC4A0_5CED);
+        let compute = machines.saturating_sub(1).max(1) as u64;
+        let mut events = Vec::new();
+        for _ in 0..faults {
+            let at = SimTime::from_secs_f64(rng.gen_f64() * horizon.as_secs_f64());
+            let machine = 1 + rng.gen_range(compute) as u32;
+            let kind = match rng.gen_range(10) {
+                0..=3 => FaultKind::Crash { machine },
+                4..=6 => FaultKind::Hang {
+                    machine,
+                    duration: SimTime::from_secs(30 + rng.gen_range(60)),
+                },
+                7 => FaultKind::Flap {
+                    machine,
+                    down: SimTime::from_secs(20),
+                    up: SimTime::from_secs(20),
+                    cycles: 2 + rng.gen_range(2) as u32,
+                },
+                8 => FaultKind::DeployFail { machine, failures: 1 + rng.gen_range(2) as u32 },
+                _ => FaultKind::Partition {
+                    machines: vec![machine],
+                    duration: SimTime::from_secs(45 + rng.gen_range(45)),
+                },
+            };
+            events.push(FaultEvent { at, kind });
+        }
+        Self::scripted(events)
+    }
+
+    /// Lower the plan to primitive events: flaps become their individual
+    /// hang windows. This is what the injector schedules.
+    pub fn expanded(&self) -> Vec<FaultEvent> {
+        let mut out = Vec::new();
+        for ev in &self.events {
+            match &ev.kind {
+                FaultKind::Flap { machine, down, up, cycles } => {
+                    let period = down.as_nanos() + up.as_nanos();
+                    for c in 0..*cycles {
+                        out.push(FaultEvent {
+                            at: ev.at + SimTime::from_nanos(period * c as u64),
+                            kind: FaultKind::Hang { machine: *machine, duration: *down },
+                        });
+                    }
+                }
+                other => out.push(FaultEvent { at: ev.at, kind: other.clone() }),
+            }
+        }
+        out.sort_by_key(|e| e.at);
+        out
+    }
+
+    /// Stable per-kind event histogram (for reports and same-seed
+    /// determinism checks).
+    pub fn kind_counts(&self) -> BTreeMap<&'static str, usize> {
+        let mut counts = BTreeMap::new();
+        for ev in &self.events {
+            *counts.entry(ev.kind.label()).or_insert(0) += 1;
+        }
+        counts
+    }
+
+    /// Fold another plan in (events re-sorted).
+    pub fn merged(mut self, mut other: FaultPlan) -> FaultPlan {
+        self.events.append(&mut other.events);
+        Self::scripted(self.events)
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let a = FaultPlan::from_mtbf(42, 8, SimTime::from_secs(300), SimTime::from_secs(3600));
+        let b = FaultPlan::from_mtbf(42, 8, SimTime::from_secs(300), SimTime::from_secs(3600));
+        assert_eq!(a, b, "MTBF plans must be deterministic in the seed");
+        let c = FaultPlan::chaos_mix(7, 8, 20, SimTime::from_secs(3600));
+        let d = FaultPlan::chaos_mix(7, 8, 20, SimTime::from_secs(3600));
+        assert_eq!(c, d, "chaos mixes must be deterministic in the seed");
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = FaultPlan::from_mtbf(1, 8, SimTime::from_secs(300), SimTime::from_secs(3600));
+        let b = FaultPlan::from_mtbf(2, 8, SimTime::from_secs(300), SimTime::from_secs(3600));
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn mtbf_plan_respects_horizon_and_targets_compute_machines_only() {
+        let plan = FaultPlan::from_mtbf(9, 4, SimTime::from_secs(120), SimTime::from_secs(1000));
+        assert!(!plan.is_empty(), "1000s horizon at 120s mtbf must draw failures");
+        let mut last = SimTime::ZERO;
+        for ev in &plan.events {
+            assert!(ev.at <= SimTime::from_secs(1000));
+            assert!(ev.at >= last, "plan must be time-sorted");
+            last = ev.at;
+            match &ev.kind {
+                FaultKind::Crash { machine } => {
+                    assert!((1..4).contains(machine), "machine {machine} out of range")
+                }
+                other => panic!("mtbf plan drew a non-crash fault: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn flap_expands_to_hang_windows() {
+        let plan = FaultPlan::scripted(vec![FaultEvent {
+            at: SimTime::from_secs(10),
+            kind: FaultKind::Flap {
+                machine: 2,
+                down: SimTime::from_secs(5),
+                up: SimTime::from_secs(15),
+                cycles: 3,
+            },
+        }]);
+        let expanded = plan.expanded();
+        assert_eq!(expanded.len(), 3);
+        for (i, ev) in expanded.iter().enumerate() {
+            assert_eq!(ev.at, SimTime::from_secs(10 + 20 * i as u64));
+            assert!(
+                matches!(ev.kind, FaultKind::Hang { machine: 2, duration } if duration == SimTime::from_secs(5))
+            );
+        }
+    }
+
+    #[test]
+    fn kind_counts_are_stable() {
+        let plan = FaultPlan::chaos_mix(3, 6, 30, SimTime::from_secs(600));
+        let counts = plan.kind_counts();
+        assert_eq!(counts.values().sum::<usize>(), 30);
+        assert_eq!(plan.kind_counts(), counts);
+    }
+
+    #[test]
+    fn merged_plans_stay_sorted() {
+        let a = FaultPlan::scripted(vec![FaultEvent {
+            at: SimTime::from_secs(50),
+            kind: FaultKind::Crash { machine: 1 },
+        }]);
+        let b = FaultPlan::scripted(vec![FaultEvent {
+            at: SimTime::from_secs(10),
+            kind: FaultKind::Crash { machine: 2 },
+        }]);
+        let m = a.merged(b);
+        assert_eq!(m.len(), 2);
+        assert!(m.events[0].at < m.events[1].at);
+    }
+}

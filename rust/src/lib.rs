@@ -12,6 +12,7 @@ pub mod cluster;
 pub mod config;
 pub mod consul;
 pub mod dockyard;
+pub mod faults;
 pub mod hw;
 pub mod mpi;
 pub mod runtime;

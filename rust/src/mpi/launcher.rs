@@ -19,6 +19,8 @@ pub enum LaunchError {
     UnknownHost(Ipv4),
     #[error("rank {rank} panicked")]
     RankPanic { rank: usize },
+    #[error("built without the `pjrt` feature: real-compute jobs are unavailable")]
+    ComputeUnavailable,
 }
 
 /// Everything mpirun needs.

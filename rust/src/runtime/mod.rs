@@ -5,7 +5,19 @@
 //! only place the Rust side touches XLA. `Runtime` is thread-confined
 //! (the `xla` crate wraps `Rc` internals): each MPI rank thread builds
 //! its own, compiles lazily and caches per artifact name.
+//!
+//! The whole XLA dependency sits behind the `pjrt` cargo feature (on by
+//! default). `--no-default-features` builds swap in [`stub::Runtime`],
+//! which keeps the control-plane surface (`default_dir`) and turns any
+//! compute request into a clean "built without pjrt" error instead of a
+//! link failure against the vendored toolchain.
 
+#[cfg(feature = "pjrt")]
 pub mod client;
-
+#[cfg(feature = "pjrt")]
 pub use client::{Artifact, ArtifactKind, Runtime};
+
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::Runtime;

@@ -1,0 +1,51 @@
+//! Control-plane-only stand-in for the PJRT runtime, compiled when the
+//! `pjrt` feature is off.
+//!
+//! Keeps the pieces the cluster control plane actually touches (the
+//! artifacts-directory default) and fails loudly — but cleanly — the
+//! moment real compute is requested.
+
+use anyhow::{bail, Result};
+use std::path::{Path, PathBuf};
+
+/// The error every compute entry point reports without the toolchain.
+pub const NO_PJRT: &str = "vhpc was built without the `pjrt` feature: \
+    real-compute jobs (Jacobi/GEMM) need the vendored xla toolchain — \
+    rebuild with default features";
+
+/// Feature-off `Runtime`: same name and constructor surface as
+/// `client::Runtime`, no XLA behind it.
+pub struct Runtime;
+
+impl Runtime {
+    /// Always errors: there is no PJRT client in this build.
+    pub fn load(_dir: impl AsRef<Path>) -> Result<Self> {
+        bail!(NO_PJRT)
+    }
+
+    /// Default artifacts directory (repo-root/artifacts or
+    /// `$VHPC_ARTIFACTS`) — same resolution as the real runtime, so
+    /// specs built in a control-plane binary stay portable.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(d) = std::env::var("VHPC_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_reports_the_missing_feature() {
+        let err = Runtime::load("/nonexistent").err().expect("stub must not load");
+        assert!(err.to_string().contains("without the `pjrt` feature"), "{err}");
+    }
+
+    #[test]
+    fn default_dir_still_resolves() {
+        assert!(Runtime::default_dir().ends_with("artifacts"));
+    }
+}

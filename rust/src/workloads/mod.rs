@@ -7,6 +7,7 @@
 //!   (the Fig. 3 interconnect study).
 //! * [`gemm`] — replicated-B distributed GEMM (the MXU-path workload).
 
+#[cfg(feature = "pjrt")]
 pub mod gemm;
 pub mod jacobi;
 pub mod ring;
