@@ -131,6 +131,7 @@ fn main() {
                 name: format!("slice-{i}"),
                 ranks: 8,
                 kind: JobKind::Synthetic { duration: SimTime::from_secs(1) },
+                priority: 0,
             },
             SimTime::ZERO,
         );

@@ -4,6 +4,7 @@
 //! vhpc up         [--config F] [--machines N] [--sim-seconds S]
 //! vhpc run        [--ranks N] [--tile T] [--steps K] [--bridge MODE]
 //! vhpc mix        [--jobs N] [--machines M] [--max-concurrent K]
+//!                 [--policy fifo|easy|priority] [--racks N]
 //! vhpc chaos      [--jobs N] [--machines M] [--seed S] [--mtbf SECS]
 //!                 [--max-retries K] [--sim-seconds S]
 //! vhpc build      [--dockerfile F]
@@ -12,6 +13,7 @@
 //! ```
 
 use crate::cluster::head::JobKind;
+use crate::cluster::policy::{PolicyKind, SchedulePolicy};
 use crate::cluster::vcluster::VirtualCluster;
 use crate::config::ClusterSpec;
 use crate::dockyard::{Dockerfile, ImageStore};
@@ -118,7 +120,8 @@ fn cmd_run(flags: HashMap<String, String>) -> Result<(), String> {
 }
 
 /// Drive a bursty mix of wide and narrow synthetic jobs through the
-/// concurrent scheduler and report queue waits and overlap.
+/// scheduler under the chosen policy and report queue waits, overlap,
+/// preemptions and rack spread.
 fn cmd_mix(flags: HashMap<String, String>) -> Result<(), String> {
     let mut spec = load_spec(&flags)?;
     if !flags.contains_key("machines") && !flags.contains_key("config") {
@@ -137,6 +140,15 @@ fn cmd_mix(flags: HashMap<String, String>) -> Result<(), String> {
     let jobs: u32 = flag(&flags, "jobs", 10u32)?;
     let max_concurrent: usize = flag(&flags, "max-concurrent", 0usize)?;
     let sim_secs: u64 = flag(&flags, "sim-seconds", 3600u64)?;
+    let kind: PolicyKind = flag(&flags, "policy", PolicyKind::Fifo)?;
+    let racks: u32 = flag(&flags, "racks", 0u32)?;
+    if racks > 0 {
+        spec.racks = racks;
+    }
+    // more than one rack — whether from the flag or the config file —
+    // packs reservations rack-aware so the spread metric has something
+    // to minimize
+    let policy = SchedulePolicy::new(kind).with_topo_aware(spec.racks > 1);
 
     // scale the canonical trace to what this cluster can actually
     // advertise, so a small --machines/--config runs a smaller mix
@@ -145,25 +157,29 @@ fn cmd_mix(flags: HashMap<String, String>) -> Result<(), String> {
     if cap_slots == 0 {
         return Err("cluster has no compute capacity (needs >= 2 machines)".into());
     }
-    let trace: Vec<(u32, u64)> = crate::cluster::mix::bursty_trace(24.min(cap_slots), jobs as usize)
-        .into_iter()
-        .map(|(ranks, secs)| (ranks.min(cap_slots), secs))
-        .collect();
+    let trace: Vec<crate::cluster::mix::JobReq> =
+        crate::cluster::mix::prioritized_trace(24.min(cap_slots), jobs as usize)
+            .into_iter()
+            .map(|j| crate::cluster::mix::JobReq { ranks: j.ranks.min(cap_slots), ..j })
+            .collect();
     // wait for the minimum pool before submitting (same protocol as the
     // job_mix example / ext_autoscale bench)
     let warmup = (spec.autoscale.min_nodes * spec.slots_per_node).clamp(1, cap_slots);
     let cap = if max_concurrent == 0 { usize::MAX } else { max_concurrent };
-    let (outcome, vc) = crate::cluster::mix::run_job_trace(spec, &trace, cap, warmup, sim_secs)
-        .map_err(|e| e.to_string())?;
+    let (outcome, vc) =
+        crate::cluster::mix::run_policy_trace(spec, &trace, policy, cap, warmup, sim_secs)
+            .map_err(|e| e.to_string())?;
     println!(
-        "t={}  jobs done: {jobs}/{jobs}  peak concurrency: {}  backfill starts: {}",
+        "t={}  policy: {}  jobs done: {jobs}/{jobs}  peak concurrency: {}  backfill starts: {}  preemptions: {}",
         vc.now(),
+        kind.name(),
         outcome.peak_concurrency,
-        outcome.backfill_starts
+        outcome.backfill_starts,
+        outcome.preemptions,
     );
     println!(
-        "mean queue wait: {:.1}s  max queue wait: {:.1}s  makespan: {:.1}s",
-        outcome.mean_wait, outcome.max_wait, outcome.makespan
+        "mean queue wait: {:.1}s  max queue wait: {:.1}s  makespan: {:.1}s  mean rack spread: {:.2}",
+        outcome.mean_wait, outcome.max_wait, outcome.makespan, outcome.mean_rack_spread
     );
     println!("--- metrics ---\n{}", vc.metrics().render());
     Ok(())
@@ -306,7 +322,7 @@ pub fn main() -> i32 {
                 "vhpc — virtual HPC cluster with auto-scaling (Yu & Huang 2015 reproduction)\n\n\
                  usage:\n  vhpc up        [--config F] [--machines N] [--sim-seconds S] [--bridge MODE]\n  \
                  vhpc run       [--ranks N] [--tile T] [--steps K] [--bridge MODE]\n  \
-                 vhpc mix       [--jobs N] [--machines M] [--max-concurrent K] [--sim-seconds S]\n  \
+                 vhpc mix       [--jobs N] [--machines M] [--max-concurrent K] [--policy fifo|easy|priority] [--racks N] [--sim-seconds S]\n  \
                  vhpc chaos     [--jobs N] [--machines M] [--seed S] [--mtbf SECS] [--max-retries K] [--sim-seconds S]\n  \
                  vhpc build     [--dockerfile F]\n  \
                  vhpc bench-net [--bridge docker0|bridge0|host]\n  \
@@ -338,6 +354,15 @@ mod tests {
         assert!(flag::<u32>(&flags, "b", 0).is_err());
         assert!(parse_flags(&["positional".into()]).is_err());
         assert!(parse_flags(&["--dangling".into()]).is_err());
+    }
+
+    #[test]
+    fn policy_flag_parses() {
+        let mut flags = HashMap::new();
+        flags.insert("policy".to_string(), "easy".to_string());
+        assert_eq!(flag(&flags, "policy", PolicyKind::Fifo).unwrap(), PolicyKind::Easy);
+        flags.insert("policy".to_string(), "slurm".to_string());
+        assert!(flag::<PolicyKind>(&flags, "policy", PolicyKind::Fifo).is_err());
     }
 
     #[test]

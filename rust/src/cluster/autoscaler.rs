@@ -8,7 +8,9 @@
 //! demanded slots to 1 shrinks once the low load is sustained. Cooldown
 //! is per-direction: a recent `Down` never delays an urgent `Up`, while
 //! `Down` waits out both directions (so the pool doesn't flap after a
-//! burst).
+//! burst). Queue demand arrives **priority-weighted** (see
+//! [`Observation::queued_slots_weighted`]): a backlog of urgent jobs
+//! provisions capacity harder than the same width of batch work.
 
 use crate::config::AutoscaleConfig;
 use crate::sim::SimTime;
@@ -27,19 +29,28 @@ pub struct Observation {
     pub unhealthy_nodes: u32,
     /// Nodes between power-on and registration.
     pub provisioning_nodes: u32,
-    /// Slots demanded by queued jobs not yet scheduled.
+    /// Raw (unweighted) slots demanded by queued jobs. Informational:
+    /// `decide()` scales on the weighted figure below; this one lets
+    /// callers report how much of the demand is priority inflation.
     pub queued_slots: u32,
+    /// Priority-weighted queue demand
+    /// ([`Head::weighted_queued_slots`](crate::cluster::head::Head::weighted_queued_slots)):
+    /// equals `queued_slots` when everything queued is batch priority
+    /// (every weight is >= 1.0), larger when urgent work is waiting —
+    /// so the pool provisions harder for a high-priority backlog.
+    pub queued_slots_weighted: u32,
     /// Slots already reserved by running jobs. Kept separate from
-    /// `queued_slots` so the policy never double-counts demand that is
-    /// already being served by reserved capacity.
+    /// the queued counts so the policy never double-counts demand that
+    /// is already being served by reserved capacity.
     pub reserved_slots: u32,
     pub slots_per_node: u32,
 }
 
 impl Observation {
-    /// Total slot demand: queued plus reserved (running) slots.
+    /// Total slot demand the policy scales on: priority-weighted
+    /// queued plus reserved (running) slots.
     pub fn demanded_slots(&self) -> u32 {
-        self.queued_slots + self.reserved_slots
+        self.queued_slots_weighted + self.reserved_slots
     }
 }
 
@@ -212,6 +223,7 @@ mod tests {
             unhealthy_nodes: unhealthy,
             provisioning_nodes: prov,
             queued_slots: queued,
+            queued_slots_weighted: queued,
             reserved_slots: reserved,
             slots_per_node: 12,
         }
@@ -232,6 +244,18 @@ mod tests {
         assert_eq!(a.decide(obs_r(0, 3, 0, 0, 36)), ScaleAction::None);
         // 12 queued on top: one more node
         assert_eq!(a.decide(obs_r(5, 3, 0, 12, 36)), ScaleAction::Up(1));
+    }
+
+    #[test]
+    fn priority_weighted_backlog_provisions_harder() {
+        // 24 batch slots -> 2 nodes (have 1: Up(1))
+        let mut a = Autoscaler::new(config());
+        assert_eq!(a.decide(obs(0, 1, 0, 24)), ScaleAction::Up(1));
+        // the same 24 slots at high priority weigh 2x -> 4 nodes
+        let mut b = Autoscaler::new(config());
+        let mut o = obs(0, 1, 0, 24);
+        o.queued_slots_weighted = 48;
+        assert_eq!(b.decide(o), ScaleAction::Up(3));
     }
 
     #[test]
@@ -368,6 +392,7 @@ mod tests {
                     unhealthy_nodes: 0,
                     provisioning_nodes: prov,
                     queued_slots: queued,
+                    queued_slots_weighted: queued,
                     reserved_slots: reserved,
                     slots_per_node: 12,
                 });

@@ -6,15 +6,23 @@
 //! Each running job holds a *reservation* — a slice of specific host
 //! slots carved out of the current hostfile — so any number of jobs can
 //! run concurrently without two jobs ever sharing an advertised slot.
-//! Dispatch is FIFO with **conservative backfill**: a younger job may
-//! start ahead of the head-of-queue job only if (a) it fits in the
-//! currently free slots the head job cannot use yet and (b) the slots
-//! held by all younger jobs combined still leave the head job's full
-//! width available once its elders drain. Invariant (b) is what makes
-//! the backfill starvation-free: as long as running jobs terminate and
-//! advertised capacity reaches the head job's width, the head job
-//! eventually starts.
+//! *Which* queued job is dispatched next, and whether a blocked
+//! high-priority job may preempt running work, is delegated to the
+//! head's [`SchedulePolicy`](crate::cluster::policy::SchedulePolicy):
+//! FIFO + conservative backfill (the default, starvation-free without
+//! runtime knowledge), EASY backfill (reservation-based, using the
+//! jobs' known or estimated runtimes), or priority order with optional
+//! preemption. Reservation *placement* is hostfile-order by default or
+//! rack-packing when the policy is topology-aware.
+//!
+//! Two per-job counters are deliberately distinct: the **attempt
+//! generation** advances on every early exit from the running pool
+//! (fault requeue or preemption) and guards stale completion events,
+//! while the **fault retry budget** is charged only when a node loss
+//! kills the job — being preempted is the scheduler's choice and must
+//! not count against the job.
 
+use crate::cluster::policy::{Decision, PolicyKind, SchedulePolicy};
 use crate::consul::template::{Template, TemplateWatcher};
 use crate::mpi::hostfile::{HostSlot, Hostfile};
 use crate::sim::SimTime;
@@ -44,6 +52,27 @@ pub struct JobSpec {
     pub name: String,
     pub ranks: u32,
     pub kind: JobKind,
+    /// Scheduling priority: higher runs sooner under the priority
+    /// policy; 0 is normal batch work. Ignored by FIFO/EASY dispatch
+    /// order but always feeds the autoscaler's weighted demand signal.
+    pub priority: i32,
+}
+
+impl JobSpec {
+    /// Planning estimate of the job's virtual runtime, used by EASY
+    /// backfill to compute the blocked head job's reservation.
+    /// Synthetic durations are known exactly (for a requeued job the
+    /// stored duration is already the remaining work); Jacobi uses a
+    /// coarse per-step cost model scaled by the tile area.
+    pub fn estimated_duration(&self) -> SimTime {
+        match &self.kind {
+            JobKind::Synthetic { duration } => *duration,
+            JobKind::Jacobi { tile, steps, .. } => {
+                let per_step_ms = ((tile * tile) as u64 / 1024).max(1);
+                SimTime::from_millis(per_step_ms * (*steps).max(1) as u64)
+            }
+        }
+    }
 }
 
 /// Lifecycle.
@@ -71,6 +100,25 @@ pub struct JobRecord {
     pub planned_duration: Option<SimTime>,
 }
 
+impl JobRecord {
+    /// When the dispatcher expects this job's slots back: its start
+    /// plus the planned duration (or the spec's estimate before the
+    /// launch pins one), clamped to `now` for overdue jobs. This is
+    /// the signal EASY backfill builds the head job's reservation
+    /// from — a job that dies takes its prediction with it, because
+    /// the policy recomputes from the live running pool every time.
+    pub fn predicted_finish(&self, now: SimTime) -> SimTime {
+        let started = match self.state {
+            JobState::Running { started } => started,
+            _ => now,
+        };
+        let dur = self
+            .planned_duration
+            .unwrap_or_else(|| self.spec.estimated_duration());
+        (started + dur).max(now)
+    }
+}
+
 /// A job the scheduler just dispatched: its spec plus the hostfile slice
 /// reserved for it (what `mpirun --hostfile` gets for this job).
 #[derive(Debug, Clone)]
@@ -83,6 +131,12 @@ pub struct StartedJob {
     /// Which attempt this dispatch is (guards completion events from
     /// earlier attempts of the same job).
     pub attempt: u32,
+    /// Jobs checkpointed-and-requeued to make room for this one
+    /// (non-empty only under the priority policy with preemption).
+    pub preempted: Vec<JobId>,
+    /// Virtual work the preempted jobs' reruns must redo (their
+    /// progress past the last checkpoint).
+    pub preempt_wasted: SimTime,
 }
 
 /// What the head did with a running job whose reservation lost a node.
@@ -117,9 +171,22 @@ pub struct Head {
     /// How many times a job may be requeued after losing a node before
     /// it is recorded as permanently failed.
     pub max_retries: u32,
-    /// Attempts already consumed per job (entries exist only for jobs
-    /// that lost a node at least once; cleared on completion).
+    /// Dispatch-order + placement policy (see
+    /// [`SchedulePolicy`](crate::cluster::policy::SchedulePolicy));
+    /// the default reproduces the pre-policy FIFO head exactly.
+    pub policy: SchedulePolicy,
+    /// Host address -> rack index, for topology-aware placement and
+    /// the per-job rack-spread metric. Populated by the cluster as
+    /// containers come up; unknown hosts share one pseudo-rack.
+    pub rack_of: HashMap<Ipv4, usize>,
+    /// Fault-retry budget consumed per job. Charged only by
+    /// [`Head::handle_lost_job`]; entries cleared on completion.
     retries: HashMap<JobId, u32>,
+    /// Attempt generation per job: advanced by *every* early exit from
+    /// the running pool — fault requeue or preemption — so a stale
+    /// completion event can never complete a newer attempt. Always
+    /// >= the retry budget spent.
+    attempts: HashMap<JobId, u32>,
     /// Jacobi steps credited from prior attempts (the resume point).
     jacobi_progress: HashMap<JobId, usize>,
     /// When each job first lost a node — MTTR is measured from here to
@@ -147,7 +214,10 @@ impl Head {
             poll_interval: SimTime::from_millis(200),
             max_concurrent: usize::MAX,
             max_retries: 3,
+            policy: SchedulePolicy::default(),
+            rack_of: HashMap::new(),
             retries: HashMap::new(),
+            attempts: HashMap::new(),
             jacobi_progress: HashMap::new(),
             first_failed_at: HashMap::new(),
         }
@@ -239,82 +309,108 @@ impl Head {
         self.queue.push_back((spec, now));
     }
 
-    /// Dispatch the next startable job, reserving its slots: FIFO first,
-    /// then conservative backfill. Call in a loop until `None` — each
-    /// call starts at most one job. The returned record is already in
-    /// `running`.
+    /// Dispatch the next startable job under the configured policy,
+    /// reserving its slots. Call in a loop until `None` — each call
+    /// starts at most one job (possibly preempting lower-priority
+    /// running jobs first; see [`StartedJob::preempted`]). The
+    /// returned record is already in `running`.
     pub fn start_next(&mut self, now: SimTime) -> Option<StartedJob> {
-        if self.running.len() >= self.max_concurrent {
-            return None;
-        }
-        // one hostfile parse per dispatch attempt: derive the total and
-        // the per-host free pool from the same parsed view
-        let hf = self.hostfile()?;
-        let total = hf.total_slots();
-        let held = self.reserved_per_host();
-        let mut free: Vec<HostSlot> = hf
-            .hosts
-            .into_iter()
-            .map(|h| HostSlot {
-                addr: h.addr,
-                slots: h.slots.saturating_sub(held.get(&h.addr).copied().unwrap_or(0)),
-            })
-            .collect();
-        let free_total: u32 = free.iter().map(|h| h.slots).sum();
-        let (head_id, head_ranks) = {
-            let (head, _) = self.queue.front()?;
-            (head.id, head.ranks)
-        };
-        let (idx, backfilled) = if head_ranks <= free_total {
-            (0, false)
-        } else {
-            // Head blocked: backfill a younger job, but never let younger
-            // jobs collectively hold more than `total - head_ranks` slots
-            // (the head job keeps a claim on its full width).
-            let younger_held: u32 = self
-                .running
-                .values()
-                .filter(|r| r.spec.id > head_id)
-                .map(|r| r.spec.ranks)
-                .sum();
-            let idx = self
+        let mut preempted: Vec<JobId> = Vec::new();
+        let mut preempt_wasted = SimTime::ZERO;
+        let may_preempt =
+            self.policy.kind == PolicyKind::Priority && self.policy.preemption;
+        loop {
+            // At the concurrency cap nothing can *start*, but a
+            // preempting policy may still swap running work (preempt +
+            // start keeps the job count constant), so only short-circuit
+            // when no preemption is possible.
+            if self.running.len() >= self.max_concurrent && !may_preempt {
+                return None;
+            }
+            // one hostfile parse per dispatch attempt: derive the total
+            // and the per-host free pool from the same parsed view
+            let hf = self.hostfile()?;
+            let total = hf.total_slots();
+            let held = self.reserved_per_host();
+            let mut free: Vec<HostSlot> = hf
+                .hosts
+                .into_iter()
+                .map(|h| HostSlot {
+                    addr: h.addr,
+                    slots: h.slots.saturating_sub(held.get(&h.addr).copied().unwrap_or(0)),
+                })
+                .collect();
+            let free_total: u32 = free.iter().map(|h| h.slots).sum();
+            if self.queue.is_empty() {
+                return None;
+            }
+            let queue_view: Vec<crate::cluster::policy::QueuedJob> = self
                 .queue
                 .iter()
-                .enumerate()
-                .skip(1)
-                .find(|(_, (j, _))| {
-                    j.ranks <= free_total
-                        && head_ranks
-                            .checked_add(younger_held)
-                            .and_then(|s| s.checked_add(j.ranks))
-                            .map(|s| s <= total)
-                            .unwrap_or(false)
+                .map(|(j, _)| crate::cluster::policy::QueuedJob {
+                    id: j.id,
+                    ranks: j.ranks,
+                    priority: j.priority,
+                    est: j.estimated_duration(),
                 })
-                .map(|(i, _)| i)?;
-            (idx, true)
-        };
-        let (spec, queued_at) = self.queue.remove(idx).expect("index in range");
-        let slice = carve(&mut free, spec.ranks).expect("fit checked above");
-        let attempt = self.retries.get(&spec.id).copied().unwrap_or(0);
-        self.reserved.insert(spec.id, slice.clone());
-        self.running.insert(
-            spec.id,
-            JobRecord {
-                spec: spec.clone(),
-                state: JobState::Running { started: now },
-                result: None,
-                queued_at,
-                attempt,
-                planned_duration: None,
-            },
-        );
-        Some(StartedJob {
-            spec,
-            queued_at,
-            hostfile_slice: Hostfile { hosts: slice },
-            backfilled,
-            attempt,
-        })
+                .collect();
+            // sorted by id so every policy sees a deterministic view of
+            // the (hash-ordered) running pool
+            let mut running_view: Vec<crate::cluster::policy::RunningJob> = self
+                .running
+                .values()
+                .map(|r| crate::cluster::policy::RunningJob {
+                    id: r.spec.id,
+                    ranks: r.spec.ranks,
+                    priority: r.spec.priority,
+                    predicted_finish: r.predicted_finish(now),
+                })
+                .collect();
+            running_view.sort_by_key(|r| r.id);
+            match self.policy.decide(now, &queue_view, &running_view, free_total, total) {
+                Decision::Wait => return None,
+                Decision::Preempt { victim } => {
+                    let (_, wasted) = self.preempt(victim, now)?;
+                    preempted.push(victim);
+                    preempt_wasted += wasted;
+                    // re-decide against the post-preemption state
+                }
+                Decision::Start { idx, backfilled } => {
+                    if self.running.len() >= self.max_concurrent {
+                        return None;
+                    }
+                    let (spec, queued_at) = self.queue.remove(idx).expect("index in range");
+                    let slice = if self.policy.topo_aware {
+                        crate::cluster::policy::carve_topo(&mut free, spec.ranks, &self.rack_of)
+                    } else {
+                        carve(&mut free, spec.ranks)
+                    }
+                    .expect("fit checked by the policy");
+                    let attempt = self.attempts.get(&spec.id).copied().unwrap_or(0);
+                    self.reserved.insert(spec.id, slice.clone());
+                    self.running.insert(
+                        spec.id,
+                        JobRecord {
+                            spec: spec.clone(),
+                            state: JobState::Running { started: now },
+                            result: None,
+                            queued_at,
+                            attempt,
+                            planned_duration: None,
+                        },
+                    );
+                    return Some(StartedJob {
+                        spec,
+                        queued_at,
+                        hostfile_slice: Hostfile { hosts: slice },
+                        backfilled,
+                        attempt,
+                        preempted,
+                        preempt_wasted,
+                    });
+                }
+            }
+        }
     }
 
     /// Remove a job from the running pool, releasing its reservation and
@@ -323,6 +419,7 @@ impl Head {
         self.reserved.remove(&id);
         let mut rec = self.running.remove(&id)?;
         self.retries.remove(&id);
+        self.attempts.remove(&id);
         if let Some(prior) = self.jacobi_progress.remove(&id) {
             if let Some((steps, residual)) = rec.result {
                 rec.result = Some((steps + prior, residual));
@@ -383,38 +480,19 @@ impl Head {
         }
     }
 
-    /// A running job's reservation lost a node (machine death, hang or
-    /// partition): release the slots and either requeue the job with
-    /// partial-progress credit — synthetic jobs resume at their remaining
-    /// duration, Jacobi restarts from the last completed checkpoint — or,
-    /// once its retry budget is spent, record it as permanently failed.
-    pub fn handle_lost_job(&mut self, id: JobId, now: SimTime, reason: &str) -> LossOutcome {
-        let attempt = match self.running.get(&id) {
-            Some(rec) => rec.attempt,
-            None => return LossOutcome::NotRunning,
-        };
-        if attempt >= self.max_retries {
-            // budget spent: the regular fail path already releases the
-            // reservation, folds credited progress into the result and
-            // records the job as permanently failed
-            self.fail(
-                id,
-                format!("{reason} (retry budget of {} exhausted)", self.max_retries),
-            );
-            return LossOutcome::Abandoned { id };
-        }
-        let rec = match self.running.remove(&id) {
-            Some(rec) => rec,
-            None => return LossOutcome::NotRunning,
-        };
-        self.reserved.remove(&id);
-        self.first_failed_at.entry(id).or_insert(now);
+    /// Compute the rerun spec-kind plus the virtual work the rerun must
+    /// redo when `rec` leaves the running pool early, crediting partial
+    /// progress: synthetic jobs resume at their remaining duration
+    /// (continuous checkpointing, zero waste), Jacobi restarts from the
+    /// last completed residual checkpoint. Shared by the fault-requeue
+    /// and preemption paths so the two can never drift.
+    fn credited_rerun(&mut self, rec: &JobRecord, now: SimTime) -> (JobKind, SimTime) {
         let started = match rec.state {
             JobState::Running { started } => started,
             _ => now,
         };
         let elapsed = now.saturating_sub(started);
-        let (kind, wasted) = match rec.spec.kind.clone() {
+        match rec.spec.kind.clone() {
             JobKind::Synthetic { duration } => {
                 // the elapsed virtual time is credited in full: the rerun
                 // only owes the remainder
@@ -433,10 +511,10 @@ impl Head {
                     _ => 0.0,
                 };
                 let ckpt = JACOBI_CHECKPOINT_STEPS.min(steps.max(1)).max(1);
-                // steps the job had virtually performed when the node died
+                // steps the job had virtually performed when it stopped
                 let done_virtual = ((ran as f64 * frac) as usize).min(steps);
                 let credited = (done_virtual / ckpt * ckpt).min(steps);
-                *self.jacobi_progress.entry(id).or_insert(0) += credited;
+                *self.jacobi_progress.entry(rec.spec.id).or_insert(0) += credited;
                 // work past the checkpoint is redone by the rerun
                 let rerun_steps = done_virtual.saturating_sub(credited);
                 let wasted = match rec.planned_duration {
@@ -448,17 +526,82 @@ impl Head {
                 let remaining = (steps - credited).max(1);
                 (JobKind::Jacobi { px, py, tile, steps: remaining }, wasted)
             }
+        }
+    }
+
+    /// Advance a job's attempt generation (stale-completion guard).
+    fn bump_attempt(&mut self, id: JobId) -> u32 {
+        let a = self.attempts.entry(id).or_insert(0);
+        *a += 1;
+        *a
+    }
+
+    /// Checkpoint-and-requeue a running job to make room for
+    /// higher-priority work. Shares the partial-progress credit path
+    /// with [`Head::handle_lost_job`], but does **not** charge the
+    /// fault retry budget — preemption is the scheduler's choice, not
+    /// a node failure. The attempt generation still advances, so a
+    /// completion event scheduled for the preempted run can never
+    /// complete the requeued job early. Returns the new attempt
+    /// generation and the virtual work the rerun must redo.
+    pub fn preempt(&mut self, id: JobId, now: SimTime) -> Option<(u32, SimTime)> {
+        let rec = self.running.remove(&id)?;
+        self.reserved.remove(&id);
+        let (kind, wasted) = self.credited_rerun(&rec, now);
+        let attempt = self.bump_attempt(id);
+        let spec = JobSpec { kind, ..rec.spec.clone() };
+        self.queue.push_back((spec, rec.queued_at));
+        Some((attempt, wasted))
+    }
+
+    /// A running job's reservation lost a node (machine death, hang or
+    /// partition): release the slots and either requeue the job with
+    /// partial-progress credit — synthetic jobs resume at their remaining
+    /// duration, Jacobi restarts from the last completed checkpoint — or,
+    /// once its retry budget is spent, record it as permanently failed.
+    pub fn handle_lost_job(&mut self, id: JobId, now: SimTime, reason: &str) -> LossOutcome {
+        if !self.running.contains_key(&id) {
+            return LossOutcome::NotRunning;
+        }
+        let spent = self.retries.get(&id).copied().unwrap_or(0);
+        if spent >= self.max_retries {
+            // budget spent: the regular fail path already releases the
+            // reservation, folds credited progress into the result and
+            // records the job as permanently failed
+            self.fail(
+                id,
+                format!("{reason} (retry budget of {} exhausted)", self.max_retries),
+            );
+            return LossOutcome::Abandoned { id };
+        }
+        let rec = match self.running.remove(&id) {
+            Some(rec) => rec,
+            None => return LossOutcome::NotRunning,
         };
-        let attempt = attempt + 1;
-        self.retries.insert(id, attempt);
-        let spec = JobSpec {
-            id: rec.spec.id,
-            name: rec.spec.name.clone(),
-            ranks: rec.spec.ranks,
-            kind,
-        };
+        self.reserved.remove(&id);
+        self.first_failed_at.entry(id).or_insert(now);
+        let (kind, wasted) = self.credited_rerun(&rec, now);
+        self.retries.insert(id, spent + 1);
+        let attempt = self.bump_attempt(id);
+        let spec = JobSpec { kind, ..rec.spec.clone() };
         self.queue.push_front((spec, rec.queued_at));
         LossOutcome::Requeued { id, attempt, wasted }
+    }
+
+    /// Priority-weighted queue demand for the autoscaler: each queued
+    /// job contributes its width scaled by
+    /// [`priority_weight`](crate::cluster::policy::priority_weight),
+    /// so a backlog of urgent work provisions capacity harder than the
+    /// same slot count of batch work. Equals [`Head::queued_slots`]
+    /// when everything queued is priority 0.
+    pub fn weighted_queued_slots(&self) -> u32 {
+        self.queue
+            .iter()
+            .map(|(j, _)| {
+                (j.ranks as f64 * crate::cluster::policy::priority_weight(j.priority)).ceil()
+                    as u32
+            })
+            .sum()
     }
 }
 
@@ -485,18 +628,35 @@ fn carve(free: &mut [HostSlot], ranks: u32) -> Option<Vec<HostSlot>> {
     Some(take)
 }
 
+/// Width-only carve exposed for the policy module's width-vs-topology
+/// comparison tests.
+#[cfg(test)]
+pub(crate) fn carve_for_test(free: &mut [HostSlot], ranks: u32) -> Option<Vec<HostSlot>> {
+    carve(free, ranks)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::policy::PolicyKind;
     use crate::util::Rng;
 
     fn job(id: u32, ranks: u32) -> JobSpec {
+        jobd(id, ranks, 10)
+    }
+
+    fn jobd(id: u32, ranks: u32, secs: u64) -> JobSpec {
         JobSpec {
             id: JobId::new(id),
             name: format!("job{id}"),
             ranks,
-            kind: JobKind::Synthetic { duration: SimTime::from_secs(10) },
+            kind: JobKind::Synthetic { duration: SimTime::from_secs(secs) },
+            priority: 0,
         }
+    }
+
+    fn jobp(id: u32, ranks: u32, secs: u64, priority: i32) -> JobSpec {
+        JobSpec { priority, ..jobd(id, ranks, secs) }
     }
 
     #[test]
@@ -693,6 +853,7 @@ mod tests {
                 name: "jac".into(),
                 ranks: 16,
                 kind: JobKind::Jacobi { px: 4, py: 4, tile: 64, steps: 100 },
+                priority: 0,
             },
             SimTime::ZERO,
         );
@@ -786,5 +947,159 @@ mod tests {
             }
             assert!(h.queue.is_empty(), "trial {trial}: queue never drained");
         }
+    }
+
+    /// EASY admits a backfill the conservative guard refuses, because
+    /// the running jobs' known runtimes prove it finishes before the
+    /// blocked head job's reservation.
+    #[test]
+    fn easy_backfill_uses_known_runtimes() {
+        let mut h = Head::new();
+        h.policy = crate::cluster::policy::SchedulePolicy::easy();
+        h.hostfile_text = "10.10.0.2 slots=16\n10.10.0.3 slots=16\n".into();
+        h.submit(jobd(0, 20, 100), SimTime::ZERO);
+        let _ = h.start_next(SimTime::ZERO).unwrap(); // 12 free until t=100
+        h.submit(jobd(1, 24, 60), SimTime::ZERO); // head, blocked
+        h.submit(jobd(2, 10, 30), SimTime::ZERO); // 24+10 > 32: fifo refuses
+        let r = h.start_next(SimTime::ZERO).unwrap();
+        assert_eq!(r.spec.id, JobId::new(2), "EASY must admit the short job");
+        assert!(r.backfilled);
+        // a job predicted to outlive the reservation (and wider than
+        // the head job's spare slots) must wait
+        h.submit(jobd(3, 10, 500), SimTime::ZERO);
+        assert!(h.start_next(SimTime::ZERO).is_none());
+        assert!(h.overbooked_hosts().is_empty());
+    }
+
+    #[test]
+    fn priority_policy_dispatches_highest_priority_first() {
+        let mut h = Head::new();
+        h.policy = crate::cluster::policy::SchedulePolicy::priority();
+        h.hostfile_text = "10.10.0.2 slots=12\n".into();
+        h.submit(jobp(0, 8, 10, 0), SimTime::ZERO);
+        h.submit(jobp(1, 8, 10, 3), SimTime::ZERO);
+        let r = h.start_next(SimTime::ZERO).unwrap();
+        assert_eq!(r.spec.id, JobId::new(1), "higher priority runs first");
+        assert!(!r.backfilled, "the priority head is not a backfill");
+    }
+
+    /// A blocked high-priority arrival checkpoints-and-requeues the
+    /// lowest-priority running job when that frees enough slots — and
+    /// the victim keeps its elapsed-time credit.
+    #[test]
+    fn preemption_frees_slots_for_high_priority_work() {
+        let mut h = Head::new();
+        h.policy = crate::cluster::policy::SchedulePolicy::priority();
+        h.hostfile_text = "10.10.0.2 slots=12\n10.10.0.3 slots=12\n".into();
+        h.submit(jobp(0, 24, 100, 0), SimTime::ZERO);
+        let first = h.start_next(SimTime::ZERO).unwrap();
+        assert_eq!(first.spec.id, JobId::new(0));
+        h.submit(jobp(1, 24, 30, 5), SimTime::from_secs(40));
+        let r = h.start_next(SimTime::from_secs(40)).unwrap();
+        assert_eq!(r.spec.id, JobId::new(1), "urgent job must start");
+        assert_eq!(r.preempted, vec![JobId::new(0)]);
+        assert_eq!(r.preempt_wasted, SimTime::ZERO, "synthetic waste is 0");
+        assert!(h.overbooked_hosts().is_empty());
+        // the victim is queued with 40s of its 100s credited
+        let (spec, _) = h.queue.front().unwrap();
+        assert_eq!(spec.id, JobId::new(0));
+        match &spec.kind {
+            JobKind::Synthetic { duration } => {
+                assert_eq!(*duration, SimTime::from_secs(60), "elapsed time credited")
+            }
+            other => panic!("kind changed: {other:?}"),
+        }
+        // equal or higher priority running work is never a victim
+        h.submit(jobp(2, 24, 10, 5), SimTime::from_secs(41));
+        assert!(h.start_next(SimTime::from_secs(41)).is_none());
+    }
+
+    /// Preemption advances the attempt generation (so a stale
+    /// completion event cannot complete the requeued job) but does not
+    /// charge the fault retry budget.
+    #[test]
+    fn preemption_bumps_attempt_without_charging_retry_budget() {
+        let mut h = Head::new();
+        h.policy = crate::cluster::policy::SchedulePolicy::priority();
+        h.max_retries = 0; // ANY fault loss abandons immediately
+        h.hostfile_text = "10.10.0.2 slots=24\n".into();
+        h.submit(jobp(0, 24, 100, 0), SimTime::ZERO);
+        h.start_next(SimTime::ZERO).unwrap();
+        h.submit(jobp(1, 24, 10, 9), SimTime::from_secs(10));
+        let r = h.start_next(SimTime::from_secs(10)).unwrap();
+        assert_eq!(r.spec.id, JobId::new(1));
+        assert_eq!(r.preempted, vec![JobId::new(0)]);
+        h.finish(JobId::new(1));
+        // the victim redispatches at generation 1 even though its
+        // retry budget (0) is untouched
+        let again = h.start_next(SimTime::from_secs(20)).unwrap();
+        assert_eq!(again.spec.id, JobId::new(0));
+        assert_eq!(again.attempt, 1, "preemption must advance the generation");
+        // a real node loss now abandons it (budget 0), proving the
+        // preemption above never spent budget
+        let out = h.handle_lost_job(JobId::new(0), SimTime::from_secs(21), "died");
+        assert_eq!(out, LossOutcome::Abandoned { id: JobId::new(0) });
+    }
+
+    /// At the concurrency cap, a preempting policy may still swap
+    /// running work: preempt + start keeps the job count constant.
+    #[test]
+    fn preemption_swaps_work_at_the_concurrency_cap() {
+        let mut h = Head::new();
+        h.policy = crate::cluster::policy::SchedulePolicy::priority();
+        h.max_concurrent = 1;
+        h.hostfile_text = "10.10.0.2 slots=24\n".into();
+        h.submit(jobp(0, 24, 100, 0), SimTime::ZERO);
+        assert!(h.start_next(SimTime::ZERO).is_some());
+        h.submit(jobp(1, 24, 10, 5), SimTime::from_secs(10));
+        let r = h.start_next(SimTime::from_secs(10)).unwrap();
+        assert_eq!(r.spec.id, JobId::new(1), "urgent must swap in at the cap");
+        assert_eq!(r.preempted, vec![JobId::new(0)]);
+        assert_eq!(h.running.len(), 1, "swap must not exceed the cap");
+        // a non-preempting policy at the cap still refuses to start
+        let mut serial = Head::new();
+        serial.max_concurrent = 1;
+        serial.hostfile_text = "10.10.0.2 slots=24\n".into();
+        serial.submit(job(0, 4), SimTime::ZERO);
+        serial.submit(job(1, 4), SimTime::ZERO);
+        assert!(serial.start_next(SimTime::ZERO).is_some());
+        assert!(serial.start_next(SimTime::ZERO).is_none());
+    }
+
+    #[test]
+    fn topo_aware_head_packs_reservations_into_one_rack() {
+        let mut h = Head::new();
+        h.policy = crate::cluster::policy::SchedulePolicy {
+            kind: PolicyKind::Fifo,
+            preemption: false,
+            topo_aware: true,
+        };
+        h.hostfile_text =
+            "10.10.0.2 slots=12\n10.10.0.3 slots=12\n10.10.0.4 slots=12\n".into();
+        // hosts .2 -> rack0, .3/.4 -> rack1
+        h.rack_of.insert(Ipv4::parse("10.10.0.2").unwrap(), 0);
+        h.rack_of.insert(Ipv4::parse("10.10.0.3").unwrap(), 1);
+        h.rack_of.insert(Ipv4::parse("10.10.0.4").unwrap(), 1);
+        h.submit(job(0, 24), SimTime::ZERO);
+        let r = h.start_next(SimTime::ZERO).unwrap();
+        let racks: HashSet<usize> = r
+            .hostfile_slice
+            .hosts
+            .iter()
+            .map(|s| h.rack_of[&s.addr])
+            .collect();
+        assert_eq!(racks, HashSet::from([1]), "24 ranks fit rack1 alone: {r:?}");
+        assert_eq!(r.hostfile_slice.total_slots(), 24);
+        assert!(h.overbooked_hosts().is_empty());
+    }
+
+    #[test]
+    fn weighted_queued_slots_scales_with_priority() {
+        let mut h = Head::new();
+        h.submit(jobp(0, 12, 10, 0), SimTime::ZERO);
+        assert_eq!(h.weighted_queued_slots(), h.queued_slots());
+        h.submit(jobp(1, 12, 10, 2), SimTime::ZERO); // weight 2.0
+        assert_eq!(h.queued_slots(), 24);
+        assert_eq!(h.weighted_queued_slots(), 12 + 24);
     }
 }

@@ -44,6 +44,11 @@ impl Histogram {
         let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
         sorted[idx.min(sorted.len() - 1)]
     }
+    /// Sum of all recorded values (0.0 when empty) — exact, unlike
+    /// reconstructing it as `mean() * count()`.
+    pub fn sum(&self) -> f64 {
+        self.values.iter().sum()
+    }
     /// Largest recorded value; 0.0 (not `-inf`) on an empty histogram.
     pub fn max(&self) -> f64 {
         if self.values.is_empty() {
@@ -144,6 +149,8 @@ mod tests {
         let h = m.histogram("lat").unwrap();
         assert_eq!(h.count(), 100);
         assert!((h.mean() - 50.5).abs() < 1e-9);
+        assert_eq!(h.sum(), 5050.0);
+        assert_eq!(Histogram::default().sum(), 0.0);
         assert!((49.0..=51.0).contains(&h.percentile(50.0)));
         assert_eq!(h.percentile(99.0), 99.0);
         assert_eq!(h.max(), 100.0);

@@ -1,13 +1,29 @@
-//! Shared job-trace driver: submit a `(ranks, duration)` trace to a
-//! fresh cluster and measure queue waits, overlap and makespan. Used
-//! by the `vhpc mix` subcommand, `examples/job_mix.rs` and the
-//! `ext_autoscale` bench so the three scenarios never drift apart.
+//! Shared job-trace driver: submit a trace of jobs to a fresh cluster
+//! and measure queue waits, overlap, rack spread and makespan. Used by
+//! the `vhpc mix` subcommand, `examples/job_mix.rs` and the
+//! `ext_autoscale` / `ext_policy` benches so the scenarios never drift
+//! apart. [`run_policy_trace`] is the general driver (per-job
+//! priorities, any [`SchedulePolicy`]); [`run_job_trace`] keeps the
+//! historical `(ranks, duration)` shape on the default FIFO policy.
 
 use crate::cluster::head::{JobKind, JobState};
+use crate::cluster::policy::SchedulePolicy;
 use crate::cluster::vcluster::VirtualCluster;
 use crate::config::ClusterSpec;
 use crate::sim::SimTime;
 use anyhow::{anyhow, ensure, Result};
+
+/// One job request in a policy trace.
+#[derive(Debug, Clone, Copy)]
+pub struct JobReq {
+    /// MPI slots the job reserves.
+    pub ranks: u32,
+    /// Synthetic virtual duration, seconds.
+    pub secs: u64,
+    /// Scheduling priority (0 = batch; only the priority policy orders
+    /// by it, but every policy reports it to the autoscaler).
+    pub priority: i32,
+}
 
 /// What a trace run measured.
 #[derive(Debug, Clone)]
@@ -25,6 +41,12 @@ pub struct TraceOutcome {
     /// Jobs requeued after losing a node (0 on a fault-free run; the
     /// chaos scenarios drive this through `faults::run_chaos_trace`).
     pub requeues: u64,
+    /// Jobs checkpointed-and-requeued to seat higher-priority work
+    /// (nonzero only under the priority policy with preemption).
+    pub preemptions: u64,
+    /// Mean number of racks a job's reservation spanned (1.0 = every
+    /// job fully packed into a single rack).
+    pub mean_rack_spread: f64,
 }
 
 /// The 8-machine cluster the mix scenarios run on: 3 warm nodes, up to
@@ -62,13 +84,25 @@ pub fn bursty_trace(wide: u32, n_jobs: usize) -> Vec<(u32, u64)> {
     (0..n_jobs).map(|i| pattern[i % pattern.len()]).collect()
 }
 
-/// Drive `trace` (one `(ranks, duration_secs)` entry per job, all
-/// submitted in one burst) through a fresh cluster built from `spec`.
-/// `max_concurrent = 1` reproduces the seed's serial head. Waits for
-/// `warmup_slots` advertised slots before submitting; errors if any
-/// hostfile slot is ever double-booked or the trace has not drained
-/// after `deadline_secs` of virtual time. Returns the outcome plus the
-/// cluster for further inspection (metrics, completed records).
+/// The bursty mix as [`JobReq`]s with a sprinkling of urgent work:
+/// every fourth job runs at priority 2, the rest at batch priority.
+/// Under FIFO/EASY the priorities only weight the autoscaler's demand
+/// signal; under the priority policy the urgent jobs jump the queue.
+pub fn prioritized_trace(wide: u32, n_jobs: usize) -> Vec<JobReq> {
+    bursty_trace(wide, n_jobs)
+        .into_iter()
+        .enumerate()
+        .map(|(i, (ranks, secs))| JobReq {
+            ranks,
+            secs,
+            priority: if i % 4 == 3 { 2 } else { 0 },
+        })
+        .collect()
+}
+
+/// Drive a `(ranks, duration_secs)` trace through a fresh cluster on
+/// the default FIFO policy — the historical driver shape, kept so the
+/// pre-policy benches reproduce byte for byte. See [`run_policy_trace`].
 pub fn run_job_trace(
     spec: ClusterSpec,
     trace: &[(u32, u64)],
@@ -76,8 +110,39 @@ pub fn run_job_trace(
     warmup_slots: u32,
     deadline_secs: u64,
 ) -> Result<(TraceOutcome, VirtualCluster)> {
+    let jobs: Vec<JobReq> = trace
+        .iter()
+        .map(|&(ranks, secs)| JobReq { ranks, secs, priority: 0 })
+        .collect();
+    run_policy_trace(
+        spec,
+        &jobs,
+        SchedulePolicy::default(),
+        max_concurrent,
+        warmup_slots,
+        deadline_secs,
+    )
+}
+
+/// Drive `jobs` (all submitted in one burst) through a fresh cluster
+/// built from `spec`, scheduling under `policy`. `max_concurrent = 1`
+/// reproduces the seed's serial head. Waits for `warmup_slots`
+/// advertised slots before submitting; errors if any hostfile slot is
+/// ever double-booked or the trace has not drained after
+/// `deadline_secs` of virtual time. Returns the outcome plus the
+/// cluster for further inspection (metrics, completed records).
+pub fn run_policy_trace(
+    spec: ClusterSpec,
+    jobs: &[JobReq],
+    policy: SchedulePolicy,
+    max_concurrent: usize,
+    warmup_slots: u32,
+    deadline_secs: u64,
+) -> Result<(TraceOutcome, VirtualCluster)> {
+    let trace = jobs;
     let mut vc = VirtualCluster::new(spec)?;
     vc.state.head.max_concurrent = max_concurrent;
+    vc.state.head.policy = policy;
     vc.start();
     ensure!(
         vc.advance_until(SimTime::from_secs(600), |st| {
@@ -85,11 +150,12 @@ pub fn run_job_trace(
         }),
         "cluster never advertised {warmup_slots} slots"
     );
-    for (i, (ranks, secs)) in trace.iter().enumerate() {
-        vc.submit(
+    for (i, j) in trace.iter().enumerate() {
+        vc.submit_with_priority(
             &format!("mix-{i}"),
-            *ranks,
-            JobKind::Synthetic { duration: SimTime::from_secs(*secs) },
+            j.ranks,
+            JobKind::Synthetic { duration: SimTime::from_secs(j.secs) },
+            j.priority,
         );
     }
     let t0 = vc.now();
@@ -130,6 +196,12 @@ pub fn run_job_trace(
         makespan: last_finish.saturating_sub(t0).as_secs_f64(),
         backfill_starts: vc.metrics().counter("backfill_starts"),
         requeues: vc.metrics().counter("jobs_requeued"),
+        preemptions: vc.metrics().counter("jobs_preempted"),
+        mean_rack_spread: vc
+            .metrics()
+            .histogram("job_rack_spread")
+            .map(|h| h.mean())
+            .unwrap_or(0.0),
     };
     Ok((outcome, vc))
 }
@@ -142,6 +214,23 @@ mod tests {
         let mut spec = ClusterSpec::paper_testbed();
         spec.machine_spec.boot_time = SimTime::from_secs(5);
         spec
+    }
+
+    #[test]
+    fn policy_trace_runs_urgent_work_first_and_reports_rack_spread() {
+        let jobs = [
+            JobReq { ranks: 24, secs: 20, priority: 0 },
+            JobReq { ranks: 24, secs: 20, priority: 0 },
+            JobReq { ranks: 8, secs: 10, priority: 3 },
+        ];
+        let (o, vc) =
+            run_policy_trace(spec(), &jobs, SchedulePolicy::priority(), usize::MAX, 24, 600)
+                .unwrap();
+        assert_eq!(o.preemptions, 0, "burst submit needs no preemption");
+        // the paper testbed is a single rack: every slice spans exactly 1
+        assert!((o.mean_rack_spread - 1.0).abs() < 1e-9, "{}", o.mean_rack_spread);
+        // the priority head ran before the batch wall submitted ahead of it
+        assert_eq!(vc.completed_jobs()[0].spec.priority, 3);
     }
 
     #[test]

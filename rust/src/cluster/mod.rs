@@ -7,17 +7,31 @@
 //! containers from the Fig. 2 image, containers self-register, the head
 //! node's consul-template keeps the hostfile fresh, jobs run via mpirun,
 //! and the autoscaler grows/shrinks the node pool with demand.
+//!
+//! Scheduling is split into mechanism and policy: [`head::Head`] owns
+//! the queue and per-job slot reservations (mechanism), while
+//! [`policy::SchedulePolicy`] decides dispatch order — FIFO with
+//! conservative backfill, EASY (reservation-based) backfill, or
+//! priorities with preemption — and whether reservations are carved
+//! hostfile-order or packed rack-aware. [`autoscaler::Autoscaler`]
+//! consumes a priority-weighted demand signal, and [`mix`] drives
+//! whole traces through any policy for the benches and the CLI.
 
 pub mod autoscaler;
 pub mod head;
 pub mod metrics;
 pub mod mix;
+pub mod policy;
 pub mod vcluster;
 
 pub use autoscaler::{Autoscaler, Observation, ScaleAction};
 pub use head::{Head, JobKind, JobRecord, JobSpec, JobState, StartedJob};
 pub use metrics::{Histogram, Metrics};
-pub use mix::{bursty_trace, mix_spec, run_job_trace, TraceOutcome};
+pub use mix::{
+    bursty_trace, mix_spec, prioritized_trace, run_job_trace, run_policy_trace, JobReq,
+    TraceOutcome,
+};
+pub use policy::{PolicyKind, SchedulePolicy};
 pub use vcluster::{NodeState, VirtualCluster};
 
 /// Canonical node name for machine index `idx` (machine 0 is the head,

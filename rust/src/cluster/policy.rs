@@ -1,0 +1,720 @@
+//! Pluggable scheduling policy: what runs next, and on which hosts.
+//!
+//! The head's dispatcher used to hard-code FIFO order plus conservative
+//! backfill; this module turns both decisions into a [`SchedulePolicy`]
+//! value the head consults on every dispatch attempt:
+//!
+//! * [`PolicyKind::Fifo`] — strict submit order with **conservative
+//!   backfill**: a younger job may overtake a blocked head-of-queue job
+//!   only if all younger jobs together still leave the head job's full
+//!   width claimable. No runtime knowledge needed; never delays the
+//!   head job. This is the default and reproduces the pre-policy head
+//!   exactly.
+//! * [`PolicyKind::Easy`] — **EASY backfill**: the blocked head job
+//!   gets a *reservation time* computed from the running jobs'
+//!   predicted finishes (synthetic runtimes are known exactly; Jacobi
+//!   uses a planning estimate). A younger job may jump ahead if it is
+//!   predicted to finish before that reservation, or if it fits in the
+//!   slots the head job will not need even then. Backfills far more
+//!   aggressively than the conservative guard while still never moving
+//!   the head job's reservation later (given honest estimates).
+//! * [`PolicyKind::Priority`] — highest priority first (submit order
+//!   breaks ties), with conservative backfill below the priority head
+//!   and **optional preemption**: when enabled, a blocked
+//!   high-priority job may checkpoint-and-requeue the lowest-priority
+//!   running jobs — one per decision, re-evaluated after each — when
+//!   that frees enough slots. Preempted jobs keep their
+//!   partial-progress credit and do *not* lose fault-retry budget.
+//!
+//! Orthogonally to dispatch order, [`SchedulePolicy::topo_aware`]
+//! switches reservation carving from hostfile order (width-only) to
+//! [`carve_topo`], which packs a job onto the fewest racks, then the
+//! fewest hosts — cutting the cross-rack traffic the interconnect
+//! benches charge for. The scheduler recomputes every decision from
+//! live state (nothing is cached), so a fault that kills a running job
+//! implicitly invalidates any reservation derived from its predicted
+//! finish — the next dispatch attempt sees the new truth.
+
+use crate::mpi::hostfile::HostSlot;
+use crate::sim::SimTime;
+use crate::util::ids::JobId;
+use crate::vnet::addr::Ipv4;
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, HashMap};
+
+/// Which dispatch-order discipline the head runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PolicyKind {
+    /// Submit order + conservative backfill (the default).
+    #[default]
+    Fifo,
+    /// Submit order + EASY (reservation-based) backfill.
+    Easy,
+    /// Highest priority first, optional preemption.
+    Priority,
+}
+
+impl PolicyKind {
+    /// Stable lowercase name (CLI values and bench labels).
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::Fifo => "fifo",
+            PolicyKind::Easy => "easy",
+            PolicyKind::Priority => "priority",
+        }
+    }
+}
+
+impl std::str::FromStr for PolicyKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "fifo" => Ok(PolicyKind::Fifo),
+            "easy" => Ok(PolicyKind::Easy),
+            "priority" => Ok(PolicyKind::Priority),
+            other => Err(format!("unknown policy {other} (expected fifo|easy|priority)")),
+        }
+    }
+}
+
+/// The head's scheduling policy: dispatch order plus placement flavor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SchedulePolicy {
+    /// Dispatch-order discipline.
+    pub kind: PolicyKind,
+    /// Under [`PolicyKind::Priority`]: allow a blocked high-priority
+    /// job to checkpoint-and-requeue lower-priority running jobs when
+    /// that frees enough slots. Ignored by the other kinds.
+    pub preemption: bool,
+    /// Carve reservations rack-aware (fewest racks, then fewest hosts)
+    /// instead of hostfile order.
+    pub topo_aware: bool,
+}
+
+impl Default for SchedulePolicy {
+    /// FIFO, no preemption, width-only carving — byte-for-byte the
+    /// pre-policy scheduler, so existing benches reproduce.
+    fn default() -> Self {
+        Self { kind: PolicyKind::Fifo, preemption: false, topo_aware: false }
+    }
+}
+
+impl SchedulePolicy {
+    /// Policy for `kind` with its natural defaults (preemption on for
+    /// [`PolicyKind::Priority`], width-only carving).
+    pub fn new(kind: PolicyKind) -> Self {
+        Self { kind, preemption: kind == PolicyKind::Priority, topo_aware: false }
+    }
+    /// Builder-style toggle for topology-aware carving.
+    pub fn with_topo_aware(mut self, on: bool) -> Self {
+        self.topo_aware = on;
+        self
+    }
+    /// Shorthand for [`SchedulePolicy::new`] with [`PolicyKind::Fifo`].
+    pub fn fifo() -> Self {
+        Self::new(PolicyKind::Fifo)
+    }
+    /// Shorthand for [`SchedulePolicy::new`] with [`PolicyKind::Easy`].
+    pub fn easy() -> Self {
+        Self::new(PolicyKind::Easy)
+    }
+    /// Shorthand for [`SchedulePolicy::new`] with
+    /// [`PolicyKind::Priority`] (preemption enabled).
+    pub fn priority() -> Self {
+        Self::new(PolicyKind::Priority)
+    }
+}
+
+/// A queued job as the policy sees it.
+#[derive(Debug, Clone, Copy)]
+pub struct QueuedJob {
+    pub id: JobId,
+    pub ranks: u32,
+    pub priority: i32,
+    /// Planning estimate of the job's virtual runtime (exact for
+    /// synthetic jobs, a heuristic for Jacobi).
+    pub est: SimTime,
+}
+
+/// A running job as the policy sees it.
+#[derive(Debug, Clone, Copy)]
+pub struct RunningJob {
+    pub id: JobId,
+    pub ranks: u32,
+    pub priority: i32,
+    /// When the dispatcher expects the job's slots back.
+    pub predicted_finish: SimTime,
+}
+
+/// What the policy decided for one dispatch attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    /// Dispatch the job at this queue index now.
+    Start {
+        /// Index into the queue view handed to `decide`.
+        idx: usize,
+        /// True when the job overtook a blocked head job (backfill).
+        backfilled: bool,
+    },
+    /// Checkpoint-and-requeue this running job, then decide again
+    /// (only emitted under [`PolicyKind::Priority`] with preemption).
+    Preempt { victim: JobId },
+    /// Nothing can start right now.
+    Wait,
+}
+
+impl SchedulePolicy {
+    /// Pick the next action for the current cluster state. `queue` is
+    /// in submit order, `free` / `total` are advertised-slot counts.
+    /// Pure: callers re-invoke after applying the returned action, so
+    /// every decision is made against live state — there is no cached
+    /// reservation to go stale when a fault removes a running job.
+    pub fn decide(
+        &self,
+        now: SimTime,
+        queue: &[QueuedJob],
+        running: &[RunningJob],
+        free: u32,
+        total: u32,
+    ) -> Decision {
+        if queue.is_empty() {
+            return Decision::Wait;
+        }
+        match self.kind {
+            PolicyKind::Fifo => decide_fifo(queue, running, free, total),
+            PolicyKind::Easy => decide_easy(now, queue, running, free),
+            PolicyKind::Priority => {
+                decide_priority(self.preemption, queue, running, free, total)
+            }
+        }
+    }
+}
+
+/// FIFO + conservative backfill (the pre-policy dispatcher, verbatim):
+/// younger jobs may never collectively hold more than
+/// `total - head_ranks` slots, so the head job's width stays claimable.
+fn decide_fifo(queue: &[QueuedJob], running: &[RunningJob], free: u32, total: u32) -> Decision {
+    let head = &queue[0];
+    if head.ranks <= free {
+        return Decision::Start { idx: 0, backfilled: false };
+    }
+    let younger_held: u32 = running
+        .iter()
+        .filter(|r| r.id > head.id)
+        .map(|r| r.ranks)
+        .sum();
+    for (i, j) in queue.iter().enumerate().skip(1) {
+        let fits_claim = head
+            .ranks
+            .checked_add(younger_held)
+            .and_then(|s| s.checked_add(j.ranks))
+            .map(|s| s <= total)
+            .unwrap_or(false);
+        if j.ranks <= free && fits_claim {
+            return Decision::Start { idx: i, backfilled: true };
+        }
+    }
+    Decision::Wait
+}
+
+/// EASY backfill: reserve a start time for the blocked head job from
+/// the running jobs' predicted finishes, and let younger jobs jump
+/// ahead only if they are predicted to finish before that reservation
+/// (or fit in the slots the head job leaves spare even then).
+fn decide_easy(
+    now: SimTime,
+    queue: &[QueuedJob],
+    running: &[RunningJob],
+    free: u32,
+) -> Decision {
+    let head = &queue[0];
+    if head.ranks <= free {
+        return Decision::Start { idx: 0, backfilled: false };
+    }
+    match shadow_time(now, head.ranks, running, free) {
+        Some((shadow, extra)) => {
+            for (i, j) in queue.iter().enumerate().skip(1) {
+                if j.ranks <= free && (now + j.est <= shadow || j.ranks <= extra) {
+                    return Decision::Start { idx: i, backfilled: true };
+                }
+            }
+            Decision::Wait
+        }
+        // Even a fully drained cluster cannot seat the head job — it is
+        // waiting on scale-up, and there is no reservation to protect.
+        // Keep the existing pool busy greedily: the moment capacity can
+        // seat the head, the shadow re-forms and protects it again.
+        None => {
+            for (i, j) in queue.iter().enumerate().skip(1) {
+                if j.ranks <= free {
+                    return Decision::Start { idx: i, backfilled: true };
+                }
+            }
+            Decision::Wait
+        }
+    }
+}
+
+/// When will `ranks` slots be free, assuming running jobs finish at
+/// their predicted times and nothing new starts? Returns the shadow
+/// time plus the slots left over for backfill at that moment, or
+/// `None` when even draining everything cannot seat the job.
+fn shadow_time(
+    now: SimTime,
+    ranks: u32,
+    running: &[RunningJob],
+    free: u32,
+) -> Option<(SimTime, u32)> {
+    if free >= ranks {
+        return Some((now, free - ranks));
+    }
+    let mut finishes: Vec<(SimTime, u32)> = running
+        .iter()
+        .map(|r| (r.predicted_finish.max(now), r.ranks))
+        .collect();
+    finishes.sort();
+    let mut acc = free;
+    for (t, w) in finishes {
+        acc += w;
+        if acc >= ranks {
+            return Some((t, acc - ranks));
+        }
+    }
+    None
+}
+
+/// Priority order: (priority desc, submit order asc). The key sorts
+/// ascending, so lower key = dispatched sooner.
+fn priority_key(priority: i32, id: JobId) -> (Reverse<i32>, JobId) {
+    (Reverse(priority), id)
+}
+
+/// Highest-priority-first with conservative backfill below the
+/// priority head, plus optional preemption of lower-priority running
+/// jobs when that is what it takes to seat the head.
+fn decide_priority(
+    preemption: bool,
+    queue: &[QueuedJob],
+    running: &[RunningJob],
+    free: u32,
+    total: u32,
+) -> Decision {
+    let head_idx = (0..queue.len())
+        .min_by_key(|&i| priority_key(queue[i].priority, queue[i].id))
+        .expect("queue checked non-empty");
+    let head = &queue[head_idx];
+    if head.ranks <= free {
+        // the priority head is the policy's head of queue, not a
+        // backfill, even when it overtakes older submissions
+        return Decision::Start { idx: head_idx, backfilled: false };
+    }
+    if preemption {
+        // Preempt at most one victim per decision — the caller applies
+        // it and asks again, so exactly as many jobs are preempted as
+        // the head needs. Only strictly-lower-priority jobs are ever
+        // victims, and only when the full victim set frees enough.
+        let freeable: u32 = running
+            .iter()
+            .filter(|r| r.priority < head.priority)
+            .map(|r| r.ranks)
+            .sum();
+        if free
+            .checked_add(freeable)
+            .map(|s| s >= head.ranks)
+            .unwrap_or(true)
+        {
+            let victim = running
+                .iter()
+                .filter(|r| r.priority < head.priority)
+                .min_by_key(|r| (r.priority, Reverse(r.id)));
+            if let Some(v) = victim {
+                return Decision::Preempt { victim: v.id };
+            }
+        }
+    }
+    // Conservative backfill relative to the priority head: jobs the
+    // policy would dispatch after the head may start early only while
+    // the head's full width stays claimable.
+    let head_key = priority_key(head.priority, head.id);
+    let younger_held: u32 = running
+        .iter()
+        .filter(|r| priority_key(r.priority, r.id) > head_key)
+        .map(|r| r.ranks)
+        .sum();
+    let mut order: Vec<usize> = (0..queue.len()).filter(|&i| i != head_idx).collect();
+    order.sort_by_key(|&i| priority_key(queue[i].priority, queue[i].id));
+    for i in order {
+        let j = &queue[i];
+        let fits_claim = head
+            .ranks
+            .checked_add(younger_held)
+            .and_then(|s| s.checked_add(j.ranks))
+            .map(|s| s <= total)
+            .unwrap_or(false);
+        if j.ranks <= free && fits_claim {
+            return Decision::Start { idx: i, backfilled: true };
+        }
+    }
+    Decision::Wait
+}
+
+/// Demand weight of a queued job for the autoscaler: priority 0 (and
+/// below) weighs 1.0; each priority level adds half a node-equivalent
+/// of urgency, capped at 3x, so a backlog of urgent work scales the
+/// pool up harder than the same slot count of batch work.
+pub fn priority_weight(priority: i32) -> f64 {
+    if priority <= 0 {
+        1.0
+    } else {
+        (1.0 + 0.5 * priority as f64).min(3.0)
+    }
+}
+
+/// Take `ranks` slots out of `free` (mutating it) preferring the
+/// fewest racks, then the fewest hosts: racks are chosen best-fit
+/// (the smallest rack that seats the whole remainder, else the
+/// biggest rack consumed whole), and hosts inside a chosen rack fill
+/// biggest-hole-first. Hosts missing from `rack_of` share one
+/// "unknown" rack, so an unpopulated map degrades to width-only
+/// behavior. Returns `None` when the free pool is too small.
+pub fn carve_topo(
+    free: &mut [HostSlot],
+    ranks: u32,
+    rack_of: &HashMap<Ipv4, usize>,
+) -> Option<Vec<HostSlot>> {
+    let total: u32 = free.iter().map(|h| h.slots).sum();
+    if total < ranks {
+        return None;
+    }
+    // group host indices by rack, in deterministic rack order
+    let mut racks: BTreeMap<usize, (u32, Vec<usize>)> = BTreeMap::new();
+    for (i, h) in free.iter().enumerate() {
+        if h.slots == 0 {
+            continue;
+        }
+        let r = rack_of.get(&h.addr).copied().unwrap_or(usize::MAX);
+        let entry = racks.entry(r).or_insert((0, Vec::new()));
+        entry.0 += h.slots;
+        entry.1.push(i);
+    }
+    let mut remaining: Vec<(usize, u32, Vec<usize>)> = racks
+        .into_iter()
+        .map(|(r, (cap, hosts))| (r, cap, hosts))
+        .collect();
+    // pick racks until the job fits
+    let mut chosen: Vec<usize> = Vec::new();
+    let mut need_cap = ranks;
+    while need_cap > 0 && !remaining.is_empty() {
+        // best fit: the smallest rack that seats the whole remainder
+        let mut pick: Option<usize> = None;
+        for k in 0..remaining.len() {
+            if remaining[k].1 >= need_cap {
+                let better = match pick {
+                    None => true,
+                    Some(p) => (remaining[k].1, remaining[k].0) < (remaining[p].1, remaining[p].0),
+                };
+                if better {
+                    pick = Some(k);
+                }
+            }
+        }
+        // no single rack fits: consume the biggest remaining rack whole
+        if pick.is_none() {
+            for k in 0..remaining.len() {
+                let better = match pick {
+                    None => true,
+                    Some(p) => remaining[k].1 > remaining[p].1,
+                };
+                if better {
+                    pick = Some(k);
+                }
+            }
+        }
+        let (_, cap, hosts) = remaining.remove(pick.expect("remaining is non-empty"));
+        let mut by_slots = hosts;
+        by_slots.sort_by(|&a, &b| free[b].slots.cmp(&free[a].slots).then(a.cmp(&b)));
+        chosen.extend(by_slots);
+        need_cap = need_cap.saturating_sub(cap);
+    }
+    // fill the chosen hosts, biggest holes first within each rack
+    let mut need = ranks;
+    let mut take = Vec::new();
+    for idx in chosen {
+        if need == 0 {
+            break;
+        }
+        let h = &mut free[idx];
+        let t = h.slots.min(need);
+        if t > 0 {
+            take.push(HostSlot { addr: h.addr, slots: t });
+            h.slots -= t;
+            need -= t;
+        }
+    }
+    debug_assert_eq!(need, 0, "total >= ranks guarantees the fill completes");
+    Some(take)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q(id: u32, ranks: u32, pri: i32, est_secs: u64) -> QueuedJob {
+        QueuedJob {
+            id: JobId::new(id),
+            ranks,
+            priority: pri,
+            est: SimTime::from_secs(est_secs),
+        }
+    }
+
+    fn r(id: u32, ranks: u32, pri: i32, finish_secs: u64) -> RunningJob {
+        RunningJob {
+            id: JobId::new(id),
+            ranks,
+            priority: pri,
+            predicted_finish: SimTime::from_secs(finish_secs),
+        }
+    }
+
+    fn host(last_octet: u8, slots: u32) -> HostSlot {
+        HostSlot {
+            addr: Ipv4::parse(&format!("10.0.0.{last_octet}")).unwrap(),
+            slots,
+        }
+    }
+
+    #[test]
+    fn fifo_starts_head_when_it_fits() {
+        let p = SchedulePolicy::fifo();
+        let d = p.decide(SimTime::ZERO, &[q(0, 8, 0, 10)], &[], 12, 12);
+        assert_eq!(d, Decision::Start { idx: 0, backfilled: false });
+    }
+
+    #[test]
+    fn fifo_conservative_guard_blocks_overcommit() {
+        let p = SchedulePolicy::fifo();
+        // elder job0 (20 ranks, dispatched before the head) runs; the
+        // head needs 24 of 32; job2 (10 ranks) fits the 12 free slots
+        // but 24 + 10 > 32 would strand the head's claim
+        let queue = [q(1, 24, 0, 60), q(2, 10, 0, 10)];
+        let running = [r(0, 20, 0, 100)];
+        assert_eq!(p.decide(SimTime::ZERO, &queue, &running, 12, 32), Decision::Wait);
+        // an 8-rank job passes the guard (24 + 8 <= 32)
+        let queue = [q(1, 24, 0, 60), q(2, 8, 0, 10)];
+        assert_eq!(
+            p.decide(SimTime::ZERO, &queue, &running, 12, 32),
+            Decision::Start { idx: 1, backfilled: true }
+        );
+    }
+
+    #[test]
+    fn easy_backfills_jobs_that_finish_before_the_reservation() {
+        let p = SchedulePolicy::easy();
+        // job9 (20 ranks) finishes at t=100 -> head (24) reserved then,
+        // with 32 - 24 = 8 slots spare at the shadow time
+        let running = [r(9, 20, 0, 100)];
+        // 10 ranks for 30s: violates the conservative guard (24+10>32)
+        // but finishes before t=100 -> EASY admits it
+        let queue = [q(0, 24, 0, 60), q(1, 10, 0, 30)];
+        assert_eq!(
+            p.decide(SimTime::ZERO, &queue, &running, 12, 32),
+            Decision::Start { idx: 1, backfilled: true }
+        );
+        // 10 ranks for 200s: outlives the reservation and exceeds the
+        // 8 spare slots -> must wait
+        let queue = [q(0, 24, 0, 60), q(1, 10, 0, 200)];
+        assert_eq!(p.decide(SimTime::ZERO, &queue, &running, 12, 32), Decision::Wait);
+        // 8 ranks for 200s: outlives the reservation but fits the
+        // 8 spare slots -> admitted
+        let queue = [q(0, 24, 0, 60), q(1, 8, 0, 200)];
+        assert_eq!(
+            p.decide(SimTime::ZERO, &queue, &running, 12, 32),
+            Decision::Start { idx: 1, backfilled: true }
+        );
+    }
+
+    #[test]
+    fn easy_keeps_pool_busy_while_head_waits_for_scale_up() {
+        let p = SchedulePolicy::easy();
+        // head needs 48 but draining everything frees only 32: no
+        // reservation is computable (the head waits on scale-up), so a
+        // fitting job starts greedily instead of idling the pool
+        let queue = [q(1, 48, 0, 60), q(2, 8, 0, 500)];
+        let running = [r(0, 20, 0, 100)];
+        assert_eq!(
+            p.decide(SimTime::ZERO, &queue, &running, 12, 32),
+            Decision::Start { idx: 1, backfilled: true }
+        );
+    }
+
+    #[test]
+    fn easy_reservation_tracks_live_running_set() {
+        let p = SchedulePolicy::easy();
+        let queue = [q(0, 24, 0, 60), q(1, 10, 0, 150)];
+        // while job9 is predicted to run until t=200, a 150s backfill
+        // beats the reservation
+        let running = [r(9, 20, 0, 200)];
+        assert_eq!(
+            p.decide(SimTime::ZERO, &queue, &running, 12, 32),
+            Decision::Start { idx: 1, backfilled: true }
+        );
+        // job9 died (a fault removed it): the same decision recomputed
+        // from the live state sees free capacity and seats the head —
+        // nothing stale survives because nothing was cached
+        assert_eq!(
+            p.decide(SimTime::ZERO, &queue, &[], 32, 32),
+            Decision::Start { idx: 0, backfilled: false }
+        );
+    }
+
+    #[test]
+    fn priority_head_jumps_the_queue() {
+        let p = SchedulePolicy::priority();
+        let queue = [q(0, 8, 0, 60), q(1, 8, 5, 30)];
+        assert_eq!(
+            p.decide(SimTime::ZERO, &queue, &[], 24, 24),
+            Decision::Start { idx: 1, backfilled: false }
+        );
+    }
+
+    #[test]
+    fn priority_ties_break_by_submit_order() {
+        let p = SchedulePolicy::priority();
+        let queue = [q(0, 8, 2, 60), q(1, 8, 2, 30)];
+        assert_eq!(
+            p.decide(SimTime::ZERO, &queue, &[], 24, 24),
+            Decision::Start { idx: 0, backfilled: false }
+        );
+    }
+
+    #[test]
+    fn priority_preempts_lowest_priority_victim_only_when_enough_frees() {
+        let p = SchedulePolicy::priority();
+        let queue = [q(5, 24, 5, 30)];
+        // two low-priority jobs hold the cluster; preempting both (in
+        // ascending priority order) frees enough -> victim is the
+        // lowest-priority one first
+        let running = [r(1, 12, 0, 300), r(2, 12, 1, 300)];
+        assert_eq!(
+            p.decide(SimTime::ZERO, &queue, &running, 0, 24),
+            Decision::Preempt { victim: JobId::new(1) }
+        );
+        // equal-priority running jobs are never victims
+        let running = [r(1, 12, 5, 300), r(2, 12, 5, 300)];
+        assert_eq!(p.decide(SimTime::ZERO, &queue, &running, 0, 24), Decision::Wait);
+        // preemption disabled: wait even though victims exist
+        let mut np = SchedulePolicy::priority();
+        np.preemption = false;
+        let running = [r(1, 12, 0, 300), r(2, 12, 1, 300)];
+        assert_eq!(np.decide(SimTime::ZERO, &queue, &running, 0, 24), Decision::Wait);
+    }
+
+    #[test]
+    fn priority_never_preempts_when_victims_cannot_free_enough() {
+        let p = SchedulePolicy::priority();
+        let queue = [q(5, 24, 5, 30)];
+        // only 8 low-priority ranks running; 8 + 4 free < 24: a
+        // pointless preemption must not happen
+        let running = [r(1, 8, 0, 300), r(2, 12, 5, 300)];
+        assert_eq!(p.decide(SimTime::ZERO, &queue, &running, 4, 24), Decision::Wait);
+    }
+
+    #[test]
+    fn priority_weight_is_flat_for_batch_and_bounded_above() {
+        assert_eq!(priority_weight(-3), 1.0);
+        assert_eq!(priority_weight(0), 1.0);
+        assert!(priority_weight(1) > 1.0);
+        assert!(priority_weight(2) > priority_weight(1));
+        assert_eq!(priority_weight(100), 3.0);
+    }
+
+    #[test]
+    fn carve_topo_prefers_a_single_best_fit_rack() {
+        let rack_of: HashMap<Ipv4, usize> = [
+            (host(1, 0).addr, 0),
+            (host(2, 0).addr, 0),
+            (host(3, 0).addr, 1),
+            (host(4, 0).addr, 1),
+        ]
+        .into_iter()
+        .collect();
+        // rack0 has 24 free, rack1 has 12: a 12-rank job best-fits
+        // rack1 even though hostfile order would start in rack0
+        let mut free = vec![host(1, 12), host(2, 12), host(3, 12), host(4, 0)];
+        let take = carve_topo(&mut free, 12, &rack_of).unwrap();
+        assert_eq!(take.len(), 1);
+        assert_eq!(take[0].addr, host(3, 0).addr);
+        assert_eq!(take[0].slots, 12);
+        assert_eq!(free[2].slots, 0, "taken slots leave the free pool");
+    }
+
+    #[test]
+    fn carve_topo_spans_fewest_racks_when_no_single_rack_fits() {
+        let rack_of: HashMap<Ipv4, usize> = [
+            (host(1, 0).addr, 0),
+            (host(2, 0).addr, 1),
+            (host(3, 0).addr, 1),
+            (host(4, 0).addr, 2),
+        ]
+        .into_iter()
+        .collect();
+        // 30 ranks: rack1 (24) + best-fit remainder (6) from rack0 or
+        // rack2 (both 12 -> rack0 wins the tie deterministically)
+        let mut free = vec![host(1, 12), host(2, 12), host(3, 12), host(4, 12)];
+        let take = carve_topo(&mut free, 30, &rack_of).unwrap();
+        let total: u32 = take.iter().map(|h| h.slots).sum();
+        assert_eq!(total, 30);
+        let racks: std::collections::BTreeSet<usize> =
+            take.iter().map(|h| rack_of[&h.addr]).collect();
+        assert_eq!(racks.len(), 2, "two racks suffice: {take:?}");
+        assert!(racks.contains(&1), "the biggest rack must anchor the slice");
+    }
+
+    #[test]
+    fn carve_topo_beats_width_only_on_fragmented_pools() {
+        // the discriminating shape: hostfile-order carving spans a rack
+        // boundary (host2 in rack0 + host3 in rack1) where a whole rack
+        // (rack1: host3 + host4) was available
+        let rack_of: HashMap<Ipv4, usize> = [
+            (host(2, 0).addr, 0),
+            (host(3, 0).addr, 1),
+            (host(4, 0).addr, 1),
+        ]
+        .into_iter()
+        .collect();
+        let mut width_free = vec![host(2, 12), host(3, 12), host(4, 12)];
+        let mut topo_free = width_free.clone();
+        let width = crate::cluster::head::carve_for_test(&mut width_free, 24).unwrap();
+        let topo = carve_topo(&mut topo_free, 24, &rack_of).unwrap();
+        let spread = |slice: &[HostSlot]| {
+            slice
+                .iter()
+                .map(|h| rack_of[&h.addr])
+                .collect::<std::collections::BTreeSet<_>>()
+                .len()
+        };
+        assert_eq!(spread(&width), 2, "width-only crosses the rack boundary");
+        assert_eq!(spread(&topo), 1, "topo-aware packs the job into rack1");
+    }
+
+    #[test]
+    fn carve_topo_without_rack_map_degrades_to_width_only_order() {
+        let mut free = vec![host(1, 12), host(2, 12)];
+        let take = carve_topo(&mut free, 16, &HashMap::new()).unwrap();
+        let total: u32 = take.iter().map(|h| h.slots).sum();
+        assert_eq!(total, 16);
+        assert!(carve_topo(&mut vec![host(1, 4)], 16, &HashMap::new()).is_none());
+    }
+
+    #[test]
+    fn parse_policy_names() {
+        assert_eq!("fifo".parse::<PolicyKind>().unwrap(), PolicyKind::Fifo);
+        assert_eq!("easy".parse::<PolicyKind>().unwrap(), PolicyKind::Easy);
+        assert_eq!("priority".parse::<PolicyKind>().unwrap(), PolicyKind::Priority);
+        assert!("slurm".parse::<PolicyKind>().is_err());
+        assert_eq!(PolicyKind::Easy.name(), "easy");
+        assert!(SchedulePolicy::priority().preemption);
+        assert!(!SchedulePolicy::easy().preemption);
+    }
+}

@@ -33,7 +33,7 @@ use crate::vnet::addr::Ipv4;
 use crate::vnet::fabric::Fabric;
 use crate::workloads::jacobi::{run_jacobi, JacobiSpec};
 use anyhow::{anyhow, Result};
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::{Arc, Mutex};
 
 /// Provisioning state of one machine slot.
@@ -100,7 +100,14 @@ impl VirtualCluster {
         if spec.machines == 0 {
             return Err(anyhow!("cluster spec needs at least 1 machine (the head), got 0"));
         }
-        let plant = Plant::uniform(spec.machines as usize, spec.machine_spec.clone(), 16);
+        // racks = 0 keeps the legacy 16-machine chassis rows; an
+        // explicit count spreads the machines evenly so topology-aware
+        // placement has real rack boundaries to pack against
+        let per_rack = match spec.racks {
+            0 => 16,
+            r => (spec.machines as usize).div_ceil(r as usize).max(1),
+        };
+        let plant = Plant::uniform(spec.machines as usize, spec.machine_spec.clone(), per_rack);
         let fabric = Arc::new(Mutex::new(Fabric::from_plant(&plant, spec.bridge)));
 
         // Build the image the paper's Dockerfile describes and push it.
@@ -298,6 +305,10 @@ impl VirtualCluster {
             // is on the minority side too
             st.consul.partition_agent(agent);
         }
+        // record the host's rack for topology-aware placement and the
+        // rack-spread metric (stale IPs are harmless: only addresses in
+        // the live hostfile are ever looked up)
+        st.head.rack_of.insert(ip, st.plant.rack_of(m).unwrap_or(0));
         // compute nodes register the hpc service; the head does not run
         // MPI ranks in the paper's deployment (head + node02/node03 do —
         // we register compute nodes only, matching Fig. 5's hostfile).
@@ -435,6 +446,13 @@ impl VirtualCluster {
     fn dispatch_jobs(st: &mut ClusterState, eng: &mut Ev) {
         loop {
             let Some(started) = st.head.start_next(eng.now()) else { break };
+            // preemptions already happened inside start_next — account
+            // for them even if this job's launch aborts below
+            if !started.preempted.is_empty() {
+                st.metrics.add("jobs_preempted", started.preempted.len() as u64);
+                st.metrics
+                    .observe("preempt_wasted_seconds", started.preempt_wasted.as_secs_f64());
+            }
             if !Self::launch_job(st, eng, started) {
                 // launch aborted on a stale hostfile: wait for the next
                 // tick so the quarantine deregistration can commit
@@ -496,6 +514,14 @@ impl VirtualCluster {
         if started.backfilled {
             st.metrics.inc("backfill_starts");
         }
+        // how many racks the reservation spans (1 = fully packed)
+        let racks: HashSet<usize> = started
+            .hostfile_slice
+            .hosts
+            .iter()
+            .map(|h| st.head.rack_of.get(&h.addr).copied().unwrap_or(usize::MAX))
+            .collect();
+        st.metrics.observe("job_rack_spread", racks.len() as f64);
         st.metrics.observe(
             "job_queue_seconds",
             t0.saturating_sub(started.queued_at).as_secs_f64(),
@@ -600,6 +626,7 @@ impl VirtualCluster {
             unhealthy_nodes: unhealthy,
             provisioning_nodes: provisioning,
             queued_slots: st.head.queued_slots(),
+            queued_slots_weighted: st.head.weighted_queued_slots(),
             reserved_slots: st.head.reserved_slots(),
             slots_per_node: st.spec.slots_per_node,
         };
@@ -681,14 +708,27 @@ impl VirtualCluster {
 
     // ---------- public operations ----------
 
-    /// Submit a job to the head node. A job wider than the cluster can
-    /// ever advertise is rejected up front (recorded as `Failed`) —
-    /// queueing it would wedge the FIFO head forever and the backfill
-    /// guard would starve every job behind it.
+    /// Submit a job to the head node at normal (batch) priority. A job
+    /// wider than the cluster can ever advertise is rejected up front
+    /// (recorded as `Failed`) — queueing it would wedge the FIFO head
+    /// forever and the backfill guard would starve every job behind it.
     pub fn submit(&mut self, name: &str, ranks: u32, kind: JobKind) -> JobId {
+        self.submit_with_priority(name, ranks, kind, 0)
+    }
+
+    /// [`VirtualCluster::submit`] with an explicit scheduling priority
+    /// (higher runs sooner under the priority policy; every policy
+    /// feeds it into the autoscaler's weighted demand signal).
+    pub fn submit_with_priority(
+        &mut self,
+        name: &str,
+        ranks: u32,
+        kind: JobKind,
+        priority: i32,
+    ) -> JobId {
         let id = JobId::new(self.state.next_job);
         self.state.next_job += 1;
-        let spec = JobSpec { id, name: name.to_string(), ranks, kind };
+        let spec = JobSpec { id, name: name.to_string(), ranks, kind, priority };
         let now = self.engine.now();
         let max_slots = self.state.spec.max_advertisable_slots();
         if ranks > max_slots {

@@ -178,6 +178,11 @@ pub struct ClusterSpec {
     pub dockerfile: String,
     /// MPI slots each compute container advertises.
     pub slots_per_node: u32,
+    /// Rack count for the physical plant: 0 (default) keeps the legacy
+    /// 16-machine chassis rows; an explicit count spreads the machines
+    /// evenly across that many racks, giving topology-aware placement
+    /// real boundaries to pack against.
+    pub racks: u32,
     pub seed: u64,
     pub autoscale: AutoscaleConfig,
 }
@@ -201,6 +206,7 @@ impl ClusterSpec {
             image: "nchc/mpi-computenode:latest".into(),
             dockerfile: crate::dockyard::Dockerfile::paper_compute_node().to_string(),
             slots_per_node: 12,
+            racks: 0,
             seed: 42,
             autoscale: AutoscaleConfig::default(),
         }
@@ -251,6 +257,9 @@ impl ClusterSpec {
             }
             if let Some(v) = c.get("slots_per_node") {
                 spec.slots_per_node = req_int("cluster", "slots_per_node", v)? as u32;
+            }
+            if let Some(v) = c.get("racks") {
+                spec.racks = req_int("cluster", "racks", v)? as u32;
             }
             if let Some(v) = c.get("seed") {
                 spec.seed = req_int("cluster", "seed", v)? as u64;
@@ -367,12 +376,13 @@ mod tests {
     #[test]
     fn spec_from_text_overrides() {
         let spec = ClusterSpec::from_text(
-            "[cluster]\nmachines = 8\nbridge = \"docker0\"\nslots_per_node = 4\n\
+            "[cluster]\nmachines = 8\nbridge = \"docker0\"\nslots_per_node = 4\nracks = 2\n\
              [machine]\nmemory = \"32GB\"\nnic = \"1GbE\"\nboot_secs = 10\n\
              [autoscale]\nmin_nodes = 1\nmax_nodes = 8\ncooldown_secs = 5\n",
         )
         .unwrap();
         assert_eq!(spec.machines, 8);
+        assert_eq!(spec.racks, 2);
         assert_eq!(spec.bridge, BridgeMode::Docker0);
         assert_eq!(spec.machine_spec.memory_bytes, 32 << 30);
         assert_eq!(spec.machine_spec.nic.name, "1GbE");

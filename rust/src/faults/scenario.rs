@@ -122,7 +122,7 @@ pub fn run_chaos_trace(
         .unwrap_or((0.0, 0.0));
     let wasted_seconds = metrics
         .histogram("job_wasted_seconds")
-        .map(|h| h.mean() * h.count() as f64)
+        .map(|h| h.sum())
         .unwrap_or(0.0);
     let outcome = ChaosOutcome {
         jobs_submitted: trace.len(),

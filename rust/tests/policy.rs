@@ -1,0 +1,259 @@
+//! Integration tests for the policy-driven scheduler: EASY backfill
+//! under faults (reservations must be recomputed when a crash removes
+//! a running job's predicted finish), and preemption edge cases
+//! (attempt-guarded completion, fault-retry budget isolation).
+
+use vhpc::cluster::head::{JobKind, JobState};
+use vhpc::cluster::policy::SchedulePolicy;
+use vhpc::cluster::vcluster::VirtualCluster;
+use vhpc::config::ClusterSpec;
+use vhpc::faults::{FaultEvent, FaultKind, FaultPlan};
+use vhpc::sim::SimTime;
+use vhpc::util::ids::MachineId;
+
+fn fast_spec(machines: u32) -> ClusterSpec {
+    let mut spec = ClusterSpec::paper_testbed();
+    spec.machines = machines;
+    spec.machine_spec.boot_time = SimTime::from_secs(5);
+    spec.autoscale.min_nodes = machines - 1;
+    spec.autoscale.max_nodes = machines - 1;
+    spec.autoscale.interval = SimTime::from_secs(2);
+    spec.autoscale.cooldown = SimTime::from_secs(4);
+    spec.autoscale.idle_timeout = SimTime::from_secs(600);
+    spec
+}
+
+fn done_count(vc: &VirtualCluster) -> usize {
+    vc.completed_jobs()
+        .iter()
+        .filter(|r| matches!(r.state, JobState::Done { .. }))
+        .count()
+}
+
+/// Satellite regression: an EASY reservation is derived from a running
+/// job's predicted finish; when a fault kills that job the prediction
+/// is gone and the reservation must be recomputed from live state —
+/// otherwise backfill keeps starving the blocked head job. The policy
+/// recomputes per dispatch attempt, so the whole trace must drain even
+/// when the anchor job crashes mid-run.
+#[test]
+fn easy_reservation_recomputed_after_crash_plan() {
+    let mut spec = fast_spec(4); // 3 compute nodes, 36 slots
+    spec.autoscale.min_nodes = 3;
+    spec.autoscale.max_nodes = 3;
+    let mut vc = VirtualCluster::new(spec).unwrap();
+    vc.state.head.policy = SchedulePolicy::easy();
+    vc.start();
+    assert!(vc.advance_until(SimTime::from_secs(600), |st| {
+        st.head.slots_available() >= 36
+    }));
+    // the long job anchors the head job's EASY reservation
+    vc.submit("long", 12, JobKind::Synthetic { duration: SimTime::from_secs(200) });
+    // full-width head job, blocked until the cluster drains
+    vc.submit("wide", 36, JobKind::Synthetic { duration: SimTime::from_secs(30) });
+    // short jobs EASY happily backfills ahead of the wide job
+    for i in 0..4 {
+        vc.submit(
+            &format!("short-{i}"),
+            8,
+            JobKind::Synthetic { duration: SimTime::from_secs(15) },
+        );
+    }
+    assert!(
+        vc.advance_until(SimTime::from_secs(60), |st| st.head.running.len() >= 2),
+        "long job + a backfilled short must be running"
+    );
+    // kill the machine hosting the long job's slots (the first compute
+    // node carries the 12-rank reservation): its predicted finish —
+    // the reservation anchor — dies with it
+    let plan = FaultPlan::scripted(vec![FaultEvent {
+        at: SimTime::from_secs(5),
+        kind: FaultKind::Crash { machine: 1 },
+    }]);
+    vc.inject_faults(&plan);
+    // everything must still drain: the requeued long job, the wide
+    // head job and every short — no stale reservation wedges the head
+    assert!(
+        vc.advance_until(SimTime::from_secs(1200), |st| st.head.completed.len() == 6),
+        "trace wedged after the crash: {} done, {} running, {} queued",
+        vc.completed_jobs().len(),
+        vc.state.head.running.len(),
+        vc.state.head.queue.len()
+    );
+    assert_eq!(done_count(&vc), 6, "every job must complete (retry budget absorbs the crash)");
+    assert!(vc.metrics().counter("jobs_requeued") >= 1, "the long job must have requeued");
+    assert!(vc.metrics().counter("backfill_starts") >= 1, "EASY must have backfilled");
+}
+
+/// A high-priority arrival checkpoints-and-requeues running batch work
+/// when the free pool cannot seat it.
+#[test]
+fn high_priority_job_preempts_running_batch_work() {
+    let mut vc = VirtualCluster::new(fast_spec(3)).unwrap(); // 24 slots
+    vc.state.head.policy = SchedulePolicy::priority();
+    vc.start();
+    assert!(vc.advance_until(SimTime::from_secs(600), |st| {
+        st.head.slots_available() >= 24
+    }));
+    vc.submit("batch", 24, JobKind::Synthetic { duration: SimTime::from_secs(300) });
+    assert!(vc.advance_until(SimTime::from_secs(30), |st| st.head.running.len() == 1));
+    vc.submit_with_priority(
+        "urgent",
+        24,
+        JobKind::Synthetic { duration: SimTime::from_secs(30) },
+        5,
+    );
+    // the urgent job must be running within a couple of scheduler ticks
+    assert!(
+        vc.advance_until(SimTime::from_secs(10), |st| {
+            st.head.running.values().any(|r| r.spec.name == "urgent")
+        }),
+        "urgent job never started"
+    );
+    assert_eq!(vc.metrics().counter("jobs_preempted"), 1);
+    assert_eq!(
+        vc.metrics().counter("jobs_requeued"),
+        0,
+        "preemption must not be recorded as a fault requeue"
+    );
+    // both jobs complete: urgent immediately, batch with credit after
+    assert!(vc.advance_until(SimTime::from_secs(900), |st| st.head.completed.len() == 2));
+    assert_eq!(done_count(&vc), 2);
+}
+
+/// Satellite edge case: preempting a job mid-run keeps attempt-guarded
+/// completion correct — the completion event scheduled for the
+/// preempted attempt must not complete the requeued job early.
+#[test]
+fn preemption_mid_run_keeps_attempt_guarded_completion_correct() {
+    let mut vc = VirtualCluster::new(fast_spec(3)).unwrap();
+    vc.state.head.policy = SchedulePolicy::priority();
+    vc.start();
+    assert!(vc.advance_until(SimTime::from_secs(600), |st| {
+        st.head.slots_available() >= 24
+    }));
+    vc.submit("batch", 24, JobKind::Synthetic { duration: SimTime::from_secs(100) });
+    assert!(vc.advance_until(SimTime::from_secs(30), |st| st.head.running.len() == 1));
+    // let the batch job run ~40s, then preempt it with a 30s urgent job
+    vc.advance(SimTime::from_secs(40));
+    let preempt_at = vc.now();
+    vc.submit_with_priority(
+        "urgent",
+        24,
+        JobKind::Synthetic { duration: SimTime::from_secs(30) },
+        5,
+    );
+    assert!(vc.advance_until(SimTime::from_secs(60), |st| {
+        st.head.completed.iter().any(|r| r.spec.name == "urgent")
+    }));
+    // past the batch job's ORIGINAL completion time: the stale timer
+    // from the preempted attempt must not mark it done (it restarted
+    // with ~60s remaining after the urgent job's 30s)
+    let past_stale_timer = preempt_at + SimTime::from_secs(65);
+    vc.advance(past_stale_timer.saturating_sub(vc.now()));
+    let batch_done = vc
+        .completed_jobs()
+        .iter()
+        .any(|r| r.spec.name == "batch" && matches!(r.state, JobState::Done { .. }));
+    assert!(
+        !batch_done,
+        "stale completion event from the preempted attempt fired: {:?}",
+        vc.completed_jobs()
+    );
+    // with its remaining duration served, it completes for real
+    assert!(vc.advance_until(SimTime::from_secs(300), |st| st.head.completed.len() == 2));
+    let batch = vc
+        .completed_jobs()
+        .iter()
+        .find(|r| r.spec.name == "batch")
+        .expect("batch record");
+    let JobState::Done { started, finished } = batch.state else {
+        panic!("batch not done: {:?}", batch.state);
+    };
+    // the rerun owes only the uncredited remainder (~60s), and it must
+    // have finished after the original 100s timer expired
+    let rerun = finished.saturating_sub(started).as_secs_f64();
+    assert!(
+        (50.0..80.0).contains(&rerun),
+        "rerun must serve ~60s remaining, served {rerun:.0}s"
+    );
+    assert_eq!(vc.metrics().counter("jobs_preempted"), 1);
+}
+
+/// Satellite edge case: a preempted job's requeue must not charge the
+/// fault retry budget — after a preemption, a genuine node loss still
+/// has the full budget available.
+#[test]
+fn preempted_jobs_retry_does_not_charge_fault_budget() {
+    let mut vc = VirtualCluster::new(fast_spec(3)).unwrap();
+    vc.state.head.policy = SchedulePolicy::priority();
+    vc.state.head.max_retries = 1; // exactly one fault loss allowed
+    vc.start();
+    assert!(vc.advance_until(SimTime::from_secs(600), |st| {
+        st.head.slots_available() >= 24
+    }));
+    vc.submit("batch", 24, JobKind::Synthetic { duration: SimTime::from_secs(120) });
+    assert!(vc.advance_until(SimTime::from_secs(30), |st| st.head.running.len() == 1));
+    // preemption one: would exhaust a budget of 1 if it charged it
+    vc.submit_with_priority(
+        "urgent",
+        24,
+        JobKind::Synthetic { duration: SimTime::from_secs(20) },
+        5,
+    );
+    assert!(vc.advance_until(SimTime::from_secs(60), |st| {
+        st.head.completed.iter().any(|r| r.spec.name == "urgent")
+    }));
+    assert_eq!(vc.metrics().counter("jobs_preempted"), 1);
+    // wait until the batch job is running again, then kill one of its
+    // machines: this genuine loss charges the budget (1 of 1) and the
+    // job must still be requeued, not abandoned
+    assert!(vc.advance_until(SimTime::from_secs(60), |st| {
+        st.head.running.values().any(|r| r.spec.name == "batch")
+    }));
+    vc.kill_machine(MachineId::new(2));
+    assert_eq!(vc.metrics().counter("jobs_requeued"), 1, "fault loss must requeue");
+    assert_eq!(
+        vc.metrics().counter("jobs_lost"),
+        0,
+        "budget of 1 must survive the earlier preemption"
+    );
+    // the autoscaler reboots the dead machine and the job completes
+    assert!(
+        vc.advance_until(SimTime::from_secs(1200), |st| st.head.completed.len() == 2),
+        "batch job never recovered: {:?}",
+        vc.completed_jobs()
+    );
+    assert_eq!(done_count(&vc), 2);
+}
+
+/// Topology-aware placement packs jobs into single racks end to end
+/// (rack map populated by provisioning, spread reported in metrics).
+#[test]
+fn topo_aware_cluster_reports_rack_spread_of_one() {
+    let mut spec = fast_spec(7); // 6 compute nodes
+    spec.racks = 3; // racks of 2-3 machines
+    let mut vc = VirtualCluster::new(spec).unwrap();
+    vc.state.head.policy = SchedulePolicy::fifo().with_topo_aware(true);
+    vc.start();
+    assert!(vc.advance_until(SimTime::from_secs(600), |st| {
+        st.head.slots_available() >= 72
+    }));
+    // two 24-rank jobs fit a rack's node pair each; the 12-rank job
+    // fits a single node — every reservation can stay inside one rack
+    for (i, ranks) in [24u32, 24, 12].iter().enumerate() {
+        vc.submit(
+            &format!("packed-{i}"),
+            *ranks,
+            JobKind::Synthetic { duration: SimTime::from_secs(20) },
+        );
+    }
+    assert!(vc.advance_until(SimTime::from_secs(120), |st| st.head.completed.len() == 3));
+    let spread = vc
+        .metrics()
+        .histogram("job_rack_spread")
+        .expect("rack spread must be recorded");
+    assert_eq!(spread.count(), 3);
+    assert_eq!(spread.max(), 1.0, "every 24-rank job must pack into one rack");
+    assert!(vc.state.head.overbooked_hosts().is_empty());
+}
