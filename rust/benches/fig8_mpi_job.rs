@@ -132,6 +132,7 @@ fn main() {
                 ranks: 8,
                 kind: JobKind::Synthetic { duration: SimTime::from_secs(1) },
                 priority: 0,
+                tenant: 0,
             },
             SimTime::ZERO,
         );

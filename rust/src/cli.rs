@@ -4,7 +4,11 @@
 //! vhpc up         [--config F] [--machines N] [--sim-seconds S]
 //! vhpc run        [--ranks N] [--tile T] [--steps K] [--bridge MODE]
 //! vhpc mix        [--jobs N] [--machines M] [--max-concurrent K]
-//!                 [--policy fifo|easy|priority] [--racks N]
+//!                 [--policy fifo|easy|priority|fairshare] [--racks N]
+//! vhpc tenants    [--tenants N] [--policy fifo|easy|priority|fairshare]
+//!                 [--duration S] [--rate JOBS_PER_SEC] [--skew S]
+//!                 [--seed S] [--max-queued N] [--defer-over-quota B]
+//!                 [--sim-seconds S]   (drain deadline; default 4x duration)
 //! vhpc chaos      [--jobs N] [--machines M] [--seed S] [--mtbf SECS]
 //!                 [--max-retries K] [--sim-seconds S]
 //! vhpc build      [--dockerfile F]
@@ -185,6 +189,71 @@ fn cmd_mix(flags: HashMap<String, String>) -> Result<(), String> {
     Ok(())
 }
 
+/// Open-loop multi-tenant run: synthesize an arrival stream from a
+/// tenant population (power-law rates, diurnal swing, campaign bursts)
+/// and report per-tenant fairness under the chosen policy.
+fn cmd_tenants(flags: HashMap<String, String>) -> Result<(), String> {
+    let mut spec = load_spec(&flags)?;
+    if !flags.contains_key("machines") && !flags.contains_key("config") {
+        // no explicit topology: the same 8-machine cluster as `vhpc mix`
+        let bridge = spec.bridge;
+        spec = crate::cluster::mix::mix_spec(SimTime::from_secs(30));
+        spec.bridge = bridge;
+    }
+    spec.autoscale.min_nodes = spec
+        .autoscale
+        .min_nodes
+        .max(1)
+        .min(spec.autoscale.max_nodes.max(1));
+    let tenants: u64 = flag(&flags, "tenants", 100u64)?;
+    let kind: PolicyKind = flag(&flags, "policy", PolicyKind::FairShare)?;
+    let duration: u64 = flag(&flags, "duration", 1800u64)?;
+    let deadline: u64 = flag(&flags, "sim-seconds", duration.saturating_mul(4).max(3600))?;
+    let seed: u64 = flag(&flags, "seed", spec.seed)?;
+    let rate: f64 = flag(&flags, "rate", 0.15f64)?;
+    let skew: f64 = flag(&flags, "skew", 1.1f64)?;
+    let max_queued: usize = flag(&flags, "max-queued", usize::MAX)?;
+    let defer: bool = flag(&flags, "defer-over-quota", false)?;
+
+    let mut pop = crate::tenancy::PopulationSpec::new(tenants, seed);
+    pop.rate_per_sec = rate;
+    pop.skew = skew;
+    let quotas = crate::tenancy::TenantQuotas {
+        max_queued_jobs: max_queued,
+        over_quota: if defer {
+            crate::tenancy::QuotaAction::Defer
+        } else {
+            crate::tenancy::QuotaAction::Reject
+        },
+        ..Default::default()
+    };
+    let policy = SchedulePolicy::new(kind);
+    let (o, vc) =
+        crate::cluster::mix::run_tenant_trace(spec, pop, policy, quotas, duration, deadline)
+            .map_err(|e| e.to_string())?;
+    println!(
+        "t={}  policy: {}  tenants: {tenants} ({} active)  jobs: {} submitted, {} done, {} failed, {} deferred",
+        vc.now(),
+        kind.name(),
+        o.tenants_seen,
+        o.jobs_submitted,
+        o.jobs_completed,
+        o.jobs_failed,
+        o.jobs_deferred,
+    );
+    println!(
+        "wait: mean {:.1}s  p99 {:.1}s   slowdown: mean {:.2}   makespan {:.0}s",
+        o.mean_wait, o.p99_wait, o.mean_slowdown, o.makespan
+    );
+    println!(
+        "Jain fairness — per-tenant mean slowdown: {:.4}   per-tenant mean wait: {:.4}",
+        o.fairness_slowdown, o.fairness_wait
+    );
+    println!("arrival-stream fingerprint: {:016x}", o.arrivals_fingerprint);
+    println!("--- metrics ---\n{}", vc.metrics().render());
+    Ok(())
+}
+
 /// Self-healing under a seeded crash schedule: run the canonical job
 /// mix while machines die at MTBF-drawn times, and report recovery
 /// metrics (requeues, replacements, MTTR, wasted work, goodput).
@@ -314,6 +383,7 @@ pub fn main() -> i32 {
         "up" => parse_flags(rest).and_then(cmd_up),
         "run" => parse_flags(rest).and_then(cmd_run),
         "mix" => parse_flags(rest).and_then(cmd_mix),
+        "tenants" => parse_flags(rest).and_then(cmd_tenants),
         "chaos" => parse_flags(rest).and_then(cmd_chaos),
         "build" => parse_flags(rest).and_then(cmd_build),
         "bench-net" => parse_flags(rest).and_then(cmd_bench_net),
@@ -322,7 +392,8 @@ pub fn main() -> i32 {
                 "vhpc — virtual HPC cluster with auto-scaling (Yu & Huang 2015 reproduction)\n\n\
                  usage:\n  vhpc up        [--config F] [--machines N] [--sim-seconds S] [--bridge MODE]\n  \
                  vhpc run       [--ranks N] [--tile T] [--steps K] [--bridge MODE]\n  \
-                 vhpc mix       [--jobs N] [--machines M] [--max-concurrent K] [--policy fifo|easy|priority] [--racks N] [--sim-seconds S]\n  \
+                 vhpc mix       [--jobs N] [--machines M] [--max-concurrent K] [--policy fifo|easy|priority|fairshare] [--racks N] [--sim-seconds S]\n  \
+                 vhpc tenants   [--tenants N] [--policy fifo|easy|priority|fairshare] [--duration S] [--rate R] [--skew S] [--seed S] [--max-queued N] [--defer-over-quota true|false] [--sim-seconds S]\n  \
                  vhpc chaos     [--jobs N] [--machines M] [--seed S] [--mtbf SECS] [--max-retries K] [--sim-seconds S]\n  \
                  vhpc build     [--dockerfile F]\n  \
                  vhpc bench-net [--bridge docker0|bridge0|host]\n  \

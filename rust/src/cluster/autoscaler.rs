@@ -33,11 +33,14 @@ pub struct Observation {
     /// `decide()` scales on the weighted figure below; this one lets
     /// callers report how much of the demand is priority inflation.
     pub queued_slots: u32,
-    /// Priority-weighted queue demand
+    /// Priority-weighted, tenant-share-capped queue demand
     /// ([`Head::weighted_queued_slots`](crate::cluster::head::Head::weighted_queued_slots)):
     /// equals `queued_slots` when everything queued is batch priority
-    /// (every weight is >= 1.0), larger when urgent work is waiting —
-    /// so the pool provisions harder for a high-priority backlog.
+    /// from one tenant; larger when urgent work is waiting (the pool
+    /// provisions harder for a high-priority backlog); *smaller* than
+    /// the raw figure when one tenant floods the queue far past its
+    /// fair share — a single hog is provisioned for at most twice its
+    /// equal share, so it cannot force unbounded scale-up.
     pub queued_slots_weighted: u32,
     /// Slots already reserved by running jobs. Kept separate from
     /// the queued counts so the policy never double-counts demand that

@@ -21,14 +21,25 @@
 //! while the **fault retry budget** is charged only when a node loss
 //! kills the job — being preempted is the scheduler's choice and must
 //! not count against the job.
+//!
+//! Every job carries its **tenant** ([`JobSpec::tenant`], 0 =
+//! untenanted). The head accrues running reservations into the
+//! [`UsageLedger`](crate::tenancy::ledger::UsageLedger) (what the
+//! `fairshare` policy orders by), enforces per-tenant
+//! [`TenantQuotas`](crate::tenancy::ledger::TenantQuotas) at submit
+//! (queued-job cap: reject or defer) and at dispatch (running-slot
+//! cap: the job waits without blocking other tenants), and keeps the
+//! attribution across every requeue path — fault retries and
+//! preemptions charge the same tenant as the original run.
 
 use crate::cluster::policy::{Decision, PolicyKind, SchedulePolicy};
 use crate::consul::template::{Template, TemplateWatcher};
 use crate::mpi::hostfile::{HostSlot, Hostfile};
 use crate::sim::SimTime;
+use crate::tenancy::ledger::{QuotaAction, TenantQuotas, UsageLedger};
 use crate::util::ids::JobId;
 use crate::vnet::addr::Ipv4;
-use std::collections::{HashMap, HashSet, VecDeque};
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
 
 /// What kind of work a job is.
 #[derive(Debug, Clone)]
@@ -40,10 +51,19 @@ pub enum JobKind {
     Synthetic { duration: SimTime },
 }
 
-/// Jacobi's residual-check cadence doubles as its restart checkpoint:
-/// a job requeued after losing a node resumes from the last completed
-/// multiple of this many steps (work past the checkpoint is redone).
+/// Default Jacobi restart-checkpoint interval, in solver steps: a job
+/// requeued after losing a node (or preempted) resumes from the last
+/// completed multiple of [`Head::checkpoint_every_steps`], which
+/// defaults to this. Historically the residual cadence doubled as the
+/// checkpoint; the two are now decoupled — see
+/// [`JACOBI_RESIDUAL_CHECK_STEPS`] — so partial-progress credit and
+/// preemption cost are tunable without touching the numerics.
 pub const JACOBI_CHECKPOINT_STEPS: usize = 20;
+
+/// Jacobi residual-check (allreduce) cadence, in solver steps — a
+/// numerical-reporting knob only. Restart checkpoints are governed by
+/// [`Head::checkpoint_every_steps`].
+pub const JACOBI_RESIDUAL_CHECK_STEPS: usize = 20;
 
 /// A submitted job.
 #[derive(Debug, Clone)]
@@ -56,6 +76,25 @@ pub struct JobSpec {
     /// policy; 0 is normal batch work. Ignored by FIFO/EASY dispatch
     /// order but always feeds the autoscaler's weighted demand signal.
     pub priority: i32,
+    /// Owning tenant (0 = untenanted system work). Preserved across
+    /// fault requeues and preemptions, so every rerun charges the same
+    /// ledger account and counts against the same quotas.
+    pub tenant: u64,
+}
+
+/// What [`Head::submit`] did with a submission.
+#[derive(Debug, Clone)]
+pub enum SubmitOutcome {
+    /// In the queue, visible to the dispatch policy.
+    Queued,
+    /// The tenant is over its queued-job quota and the quota action is
+    /// [`QuotaAction::Defer`]: parked in the per-tenant holding pen,
+    /// admitted automatically once the tenant is back under quota.
+    Deferred,
+    /// The tenant is over its queued-job quota and the quota action is
+    /// [`QuotaAction::Reject`]: the spec is handed back so the caller
+    /// can record the failure.
+    Rejected { spec: JobSpec, reason: String },
 }
 
 impl JobSpec {
@@ -175,6 +214,25 @@ pub struct Head {
     /// [`SchedulePolicy`](crate::cluster::policy::SchedulePolicy));
     /// the default reproduces the pre-policy FIFO head exactly.
     pub policy: SchedulePolicy,
+    /// Per-tenant decayed slot-second usage — what the `fairshare`
+    /// policy orders the queue by. Accrued from running reservations by
+    /// [`Head::accrue_usage`].
+    pub ledger: UsageLedger,
+    /// Per-tenant limits (default unlimited: the pre-tenancy head).
+    pub quotas: TenantQuotas,
+    /// Jacobi restart-checkpoint interval in solver steps: a requeued or
+    /// preempted Jacobi job resumes from the last completed multiple of
+    /// this. Smaller = cheaper preemption, more frequent (virtual)
+    /// checkpoint I/O. Defaults to [`JACOBI_CHECKPOINT_STEPS`].
+    pub checkpoint_every_steps: usize,
+    /// Per-tenant holding pens for submissions deferred by the
+    /// queued-job quota ([`QuotaAction::Defer`]), FIFO within a tenant.
+    /// Deliberately invisible to the queue metrics and the autoscaler's
+    /// demand signal: a flood past quota must not provision capacity.
+    deferred: BTreeMap<u64, VecDeque<(JobSpec, SimTime)>>,
+    /// High-water mark of [`Head::accrue_usage`] (usage is charged for
+    /// the interval since this).
+    last_accrued: SimTime,
     /// Host address -> rack index, for topology-aware placement and
     /// the per-job rack-spread metric. Populated by the cluster as
     /// containers come up; unknown hosts share one pseudo-rack.
@@ -215,6 +273,11 @@ impl Head {
             max_concurrent: usize::MAX,
             max_retries: 3,
             policy: SchedulePolicy::default(),
+            ledger: UsageLedger::default(),
+            quotas: TenantQuotas::default(),
+            checkpoint_every_steps: JACOBI_CHECKPOINT_STEPS,
+            deferred: BTreeMap::new(),
+            last_accrued: SimTime::ZERO,
             rack_of: HashMap::new(),
             retries: HashMap::new(),
             attempts: HashMap::new(),
@@ -305,16 +368,169 @@ impl Head {
             .collect()
     }
 
-    pub fn submit(&mut self, spec: JobSpec, now: SimTime) {
+    /// Submit a job, enforcing the tenant's quotas: under quota it
+    /// queues; over the queued-job quota it is rejected (spec handed
+    /// back) or parked in the tenant's deferral pen, per
+    /// [`TenantQuotas::over_quota`]. A job wider than the tenant's
+    /// running-slot quota is always rejected — it could never dispatch
+    /// and would sit invisible forever. Deterministic — the decision
+    /// depends only on current queue/pen contents and the quota config.
+    pub fn submit(&mut self, spec: JobSpec, now: SimTime) -> SubmitOutcome {
+        let tenant = spec.tenant;
+        if spec.ranks > self.quotas.max_running_slots {
+            return SubmitOutcome::Rejected {
+                reason: format!(
+                    "job needs {} slots but tenant {tenant}'s running-slot quota is {}",
+                    spec.ranks, self.quotas.max_running_slots
+                ),
+                spec,
+            };
+        }
+        let cap = self.quotas.max_queued_jobs;
+        // Under Defer, a non-empty pen must also divert new work: a
+        // fresh submission sneaking into a just-freed queue slot would
+        // overtake earlier deferred jobs and starve the pen.
+        let pen_waiting = self.quotas.over_quota == QuotaAction::Defer
+            && self.deferred.get(&tenant).map(|p| !p.is_empty()).unwrap_or(false);
+        // the O(queue) count only runs when a finite quota can trigger —
+        // the default unlimited config keeps submit O(1)
+        let over_cap = cap != usize::MAX && self.tenant_queued_jobs(tenant) >= cap;
+        if over_cap || pen_waiting {
+            // A 0-job queue cap can never admit from the pen
+            // (`admit_deferred` requires queued < cap): deferring would
+            // strand the job invisibly forever, so it degenerates to a
+            // recorded rejection.
+            if self.quotas.over_quota == QuotaAction::Reject || cap == 0 {
+                return SubmitOutcome::Rejected {
+                    reason: format!(
+                        "tenant {tenant} is over its queued-job quota ({cap})"
+                    ),
+                    spec,
+                };
+            }
+            self.deferred.entry(tenant).or_default().push_back((spec, now));
+            return SubmitOutcome::Deferred;
+        }
         self.queue.push_back((spec, now));
+        SubmitOutcome::Queued
+    }
+
+    /// Jobs a tenant currently has waiting in the queue (deferred jobs
+    /// excluded — they are not queued yet).
+    pub fn tenant_queued_jobs(&self, tenant: u64) -> usize {
+        self.queue.iter().filter(|(j, _)| j.tenant == tenant).count()
+    }
+
+    /// Slots a tenant's running jobs currently hold.
+    pub fn tenant_running_slots(&self, tenant: u64) -> u32 {
+        self.running
+            .values()
+            .filter(|r| r.spec.tenant == tenant)
+            .map(|r| r.spec.ranks)
+            .sum()
+    }
+
+    /// Running-slot totals for every tenant with running work — the
+    /// shared aggregation behind the dispatch quota gate and the
+    /// autoscaler demand clamp (one pass over the running pool).
+    fn running_slots_by_tenant(&self) -> HashMap<u64, u32> {
+        let mut by_tenant: HashMap<u64, u32> = HashMap::new();
+        for r in self.running.values() {
+            *by_tenant.entry(r.spec.tenant).or_insert(0) += r.spec.ranks;
+        }
+        by_tenant
+    }
+
+    /// Jobs parked in deferral pens across all tenants.
+    pub fn deferred_jobs(&self) -> usize {
+        self.deferred.values().map(|q| q.len()).sum()
+    }
+
+    /// Move deferred jobs back into the queue for every tenant that is
+    /// under its queued-job quota again (FIFO within a tenant, tenants
+    /// in id order — deterministic). Returns how many were admitted.
+    /// Called automatically at the top of [`Head::start_next`].
+    pub fn admit_deferred(&mut self) -> u64 {
+        if self.deferred.is_empty() {
+            return 0;
+        }
+        let mut admitted = 0;
+        let tenants: Vec<u64> = self.deferred.keys().copied().collect();
+        for t in tenants {
+            // count the tenant's queued jobs once, then track admissions
+            // locally — re-scanning the queue per admitted job would be
+            // O(queue x admissions) on every dispatch attempt
+            let mut queued = self.tenant_queued_jobs(t);
+            while queued < self.quotas.max_queued_jobs {
+                let Some(pen) = self.deferred.get_mut(&t) else { break };
+                let Some((spec, at)) = pen.pop_front() else { break };
+                self.queue.push_back((spec, at));
+                queued += 1;
+                admitted += 1;
+            }
+            if self.deferred.get(&t).map(|p| p.is_empty()).unwrap_or(false) {
+                self.deferred.remove(&t);
+            }
+        }
+        admitted
+    }
+
+    /// Charge every running reservation's slot-seconds since the last
+    /// accrual into the tenant ledger. Called on every dispatch attempt
+    /// and before completions/losses/preemptions leave the running
+    /// pool, so no held interval escapes accounting. Charges are summed
+    /// in job-id order: f64 addition is order-sensitive and the
+    /// hash-ordered running pool must not leak into the fingerprint.
+    pub fn accrue_usage(&mut self, now: SimTime) {
+        let dt = now.saturating_sub(self.last_accrued);
+        if dt == SimTime::ZERO {
+            return;
+        }
+        let mut charges: Vec<(JobId, u64, f64)> = self
+            .running
+            .values()
+            .filter_map(|r| {
+                let started = match r.state {
+                    JobState::Running { started } => started,
+                    _ => now,
+                };
+                // a job dispatched mid-interval is charged only from its
+                // own start, whatever the accrual cadence
+                let overlap = dt.min(now.saturating_sub(started));
+                if overlap == SimTime::ZERO {
+                    None
+                } else {
+                    Some((
+                        r.spec.id,
+                        r.spec.tenant,
+                        r.spec.ranks as f64 * overlap.as_secs_f64(),
+                    ))
+                }
+            })
+            .collect();
+        charges.sort_by_key(|&(id, _, _)| id);
+        for (_, tenant, slot_seconds) in charges {
+            self.ledger.charge(tenant, slot_seconds, now);
+        }
+        self.last_accrued = now;
+        // bound ledger memory: once the account table outgrows a
+        // working set, drop accounts whose decayed balance is
+        // negligible (deterministic — purely a function of `now`)
+        if self.ledger.active_accounts() > 4096 {
+            self.ledger.gc(now, 1e-6);
+        }
     }
 
     /// Dispatch the next startable job under the configured policy,
     /// reserving its slots. Call in a loop until `None` — each call
     /// starts at most one job (possibly preempting lower-priority
     /// running jobs first; see [`StartedJob::preempted`]). The
-    /// returned record is already in `running`.
+    /// returned record is already in `running`. Jobs whose tenant is at
+    /// its running-slot quota are invisible to the policy, so an
+    /// over-quota job never blocks other tenants' work behind it.
     pub fn start_next(&mut self, now: SimTime) -> Option<StartedJob> {
+        self.admit_deferred();
+        self.accrue_usage(now);
         let mut preempted: Vec<JobId> = Vec::new();
         let mut preempt_wasted = SimTime::ZERO;
         let may_preempt =
@@ -344,14 +560,39 @@ impl Head {
             if self.queue.is_empty() {
                 return None;
             }
-            let queue_view: Vec<crate::cluster::policy::QueuedJob> = self
-                .queue
+            // Per-tenant running-slot quota gate: filter the view, keep
+            // the index map back into the real queue. The default
+            // unlimited quota takes the identity fast path — no
+            // per-tenant bookkeeping on pre-tenancy workloads.
+            let eligible: Vec<usize> = if self.quotas.max_running_slots == u32::MAX {
+                (0..self.queue.len()).collect()
+            } else {
+                let running_by_tenant = self.running_slots_by_tenant();
+                let slot_cap = self.quotas.max_running_slots as u64;
+                (0..self.queue.len())
+                    .filter(|&i| {
+                        let j = &self.queue[i].0;
+                        running_by_tenant.get(&j.tenant).copied().unwrap_or(0) as u64
+                            + j.ranks as u64
+                            <= slot_cap
+                    })
+                    .collect()
+            };
+            if eligible.is_empty() {
+                return None;
+            }
+            let queue_view: Vec<crate::cluster::policy::QueuedJob> = eligible
                 .iter()
-                .map(|(j, _)| crate::cluster::policy::QueuedJob {
-                    id: j.id,
-                    ranks: j.ranks,
-                    priority: j.priority,
-                    est: j.estimated_duration(),
+                .map(|&i| {
+                    let j = &self.queue[i].0;
+                    crate::cluster::policy::QueuedJob {
+                        id: j.id,
+                        ranks: j.ranks,
+                        priority: j.priority,
+                        est: j.estimated_duration(),
+                        tenant: j.tenant,
+                        usage: self.ledger.usage_at(j.tenant, now),
+                    }
                 })
                 .collect();
             // sorted by id so every policy sees a deterministic view of
@@ -379,7 +620,8 @@ impl Head {
                     if self.running.len() >= self.max_concurrent {
                         return None;
                     }
-                    let (spec, queued_at) = self.queue.remove(idx).expect("index in range");
+                    let (spec, queued_at) =
+                        self.queue.remove(eligible[idx]).expect("index in range");
                     let slice = if self.policy.topo_aware {
                         crate::cluster::policy::carve_topo(&mut free, spec.ranks, &self.rack_of)
                     } else {
@@ -415,6 +657,13 @@ impl Head {
 
     /// Remove a job from the running pool, releasing its reservation and
     /// folding progress credited from earlier attempts into its result.
+    ///
+    /// Takes no timestamp, so it cannot settle the job's final held
+    /// interval into the ledger itself — callers that care about usage
+    /// accuracy must call [`Head::accrue_usage`] with the completion
+    /// time first (the cluster's `job_done` does; [`Head::preempt`] and
+    /// [`Head::handle_lost_job`], which do receive `now`, accrue
+    /// internally).
     pub fn finish(&mut self, id: JobId) -> Option<JobRecord> {
         self.reserved.remove(&id);
         let mut rec = self.running.remove(&id)?;
@@ -510,7 +759,7 @@ impl Head {
                     }
                     _ => 0.0,
                 };
-                let ckpt = JACOBI_CHECKPOINT_STEPS.min(steps.max(1)).max(1);
+                let ckpt = self.checkpoint_every_steps.min(steps.max(1)).max(1);
                 // steps the job had virtually performed when it stopped
                 let done_virtual = ((ran as f64 * frac) as usize).min(steps);
                 let credited = (done_virtual / ckpt * ckpt).min(steps);
@@ -545,6 +794,9 @@ impl Head {
     /// complete the requeued job early. Returns the new attempt
     /// generation and the virtual work the rerun must redo.
     pub fn preempt(&mut self, id: JobId, now: SimTime) -> Option<(u32, SimTime)> {
+        // settle the victim's slot-seconds before it leaves the pool —
+        // preempted work still charges its tenant's ledger
+        self.accrue_usage(now);
         let rec = self.running.remove(&id)?;
         self.reserved.remove(&id);
         let (kind, wasted) = self.credited_rerun(&rec, now);
@@ -563,6 +815,9 @@ impl Head {
         if !self.running.contains_key(&id) {
             return LossOutcome::NotRunning;
         }
+        // settle slot-seconds up to the loss: the doomed attempt's held
+        // interval charges its tenant like any other run time
+        self.accrue_usage(now);
         let spent = self.retries.get(&id).copied().unwrap_or(0);
         if spent >= self.max_retries {
             // budget spent: the regular fail path already releases the
@@ -588,20 +843,49 @@ impl Head {
         LossOutcome::Requeued { id, attempt, wasted }
     }
 
-    /// Priority-weighted queue demand for the autoscaler: each queued
-    /// job contributes its width scaled by
-    /// [`priority_weight`](crate::cluster::policy::priority_weight),
-    /// so a backlog of urgent work provisions capacity harder than the
-    /// same slot count of batch work. Equals [`Head::queued_slots`]
-    /// when everything queued is priority 0.
+    /// Priority- and share-weighted queue demand for the autoscaler.
+    ///
+    /// Each queued job contributes its width scaled by
+    /// [`priority_weight`](crate::cluster::policy::priority_weight)
+    /// (urgent backlogs provision harder); the per-tenant sums are then
+    /// share-capped by
+    /// [`share_weighted_demand`](crate::tenancy::fairshare::share_weighted_demand),
+    /// so one tenant flooding the queue cannot force unbounded
+    /// scale-up — it is provisioned for at most twice its equal share
+    /// of the aggregate (never below its widest single job). With one
+    /// active tenant and batch priorities this equals
+    /// [`Head::queued_slots`], the pre-tenancy signal. Deferred jobs
+    /// contribute nothing.
     pub fn weighted_queued_slots(&self) -> u32 {
-        self.queue
-            .iter()
-            .map(|(j, _)| {
-                (j.ranks as f64 * crate::cluster::policy::priority_weight(j.priority)).ceil()
-                    as u32
-            })
-            .sum()
+        let mut per_tenant: BTreeMap<u64, (f64, u32)> = BTreeMap::new();
+        for (j, _) in &self.queue {
+            // per-job ceil, exactly as the pre-tenancy signal summed it,
+            // so a single-tenant queue reproduces the old figure even
+            // for fractional priority weights
+            let w = (j.ranks as f64
+                * crate::cluster::policy::priority_weight(j.priority))
+            .ceil();
+            let entry = per_tenant.entry(j.tenant).or_insert((0.0, 0));
+            entry.0 += w;
+            entry.1 = entry.1.max(j.ranks);
+        }
+        // A tenant's demand can never exceed its running-slot quota
+        // headroom: jobs past the quota dispatch onto slots the tenant
+        // itself frees, not onto new capacity — provisioning for them
+        // would buy machines the quota guarantees stay idle.
+        if self.quotas.max_running_slots != u32::MAX {
+            // one pass over the running pool, not one scan per tenant
+            let running_by_tenant = self.running_slots_by_tenant();
+            for (t, entry) in per_tenant.iter_mut() {
+                let headroom = self
+                    .quotas
+                    .max_running_slots
+                    .saturating_sub(running_by_tenant.get(t).copied().unwrap_or(0));
+                entry.0 = entry.0.min(headroom as f64);
+                entry.1 = entry.1.min(headroom);
+            }
+        }
+        crate::tenancy::fairshare::share_weighted_demand(&per_tenant)
     }
 }
 
@@ -652,11 +936,16 @@ mod tests {
             ranks,
             kind: JobKind::Synthetic { duration: SimTime::from_secs(secs) },
             priority: 0,
+            tenant: 0,
         }
     }
 
     fn jobp(id: u32, ranks: u32, secs: u64, priority: i32) -> JobSpec {
         JobSpec { priority, ..jobd(id, ranks, secs) }
+    }
+
+    fn jobt(id: u32, ranks: u32, secs: u64, tenant: u64) -> JobSpec {
+        JobSpec { tenant, ..jobd(id, ranks, secs) }
     }
 
     #[test]
@@ -854,6 +1143,7 @@ mod tests {
                 ranks: 16,
                 kind: JobKind::Jacobi { px: 4, py: 4, tile: 64, steps: 100 },
                 priority: 0,
+                tenant: 0,
             },
             SimTime::ZERO,
         );
@@ -1101,5 +1391,215 @@ mod tests {
         h.submit(jobp(1, 12, 10, 2), SimTime::ZERO); // weight 2.0
         assert_eq!(h.queued_slots(), 24);
         assert_eq!(h.weighted_queued_slots(), 12 + 24);
+    }
+
+    /// One tenant flooding the queue is provisioned for at most twice
+    /// its equal share of the aggregate demand.
+    #[test]
+    fn weighted_queued_slots_share_caps_a_flooding_tenant() {
+        let mut h = Head::new();
+        // tenant 1 floods 10 x 24 = 240 slots; tenants 2..=5 queue 8 each
+        for i in 0..10 {
+            h.submit(jobt(i, 24, 60, 1), SimTime::ZERO);
+        }
+        for t in 2..=5u64 {
+            h.submit(jobt(9 + t as u32, 8, 30, t), SimTime::ZERO);
+        }
+        assert_eq!(h.queued_slots(), 240 + 32);
+        // total 272 over 5 tenants -> cap 108.8: the hog contributes 109
+        let weighted = h.weighted_queued_slots();
+        assert_eq!(weighted, 109 + 32);
+        assert!(weighted < h.queued_slots(), "the flood must be capped");
+    }
+
+    /// The Jacobi restart checkpoint is tunable independently of the
+    /// residual cadence: a finer interval loses less work on requeue.
+    #[test]
+    fn checkpoint_interval_is_tunable() {
+        let mut h = Head::new();
+        h.checkpoint_every_steps = 10;
+        h.hostfile_text = "10.10.0.2 slots=24\n".into();
+        h.submit(
+            JobSpec {
+                id: JobId::new(0),
+                name: "jac".into(),
+                ranks: 16,
+                kind: JobKind::Jacobi { px: 4, py: 4, tile: 64, steps: 100 },
+                priority: 0,
+                tenant: 0,
+            },
+            SimTime::ZERO,
+        );
+        h.start_next(SimTime::ZERO).unwrap();
+        let rec = h.running.get_mut(&JobId::new(0)).unwrap();
+        rec.result = Some((100, 0.5));
+        rec.planned_duration = Some(SimTime::from_secs(100));
+        // died halfway: 50 virtual steps done -> with a 10-step interval
+        // the last checkpoint is exactly step 50 (default 20 credits 40)
+        let out = h.handle_lost_job(JobId::new(0), SimTime::from_secs(50), "died");
+        let LossOutcome::Requeued { wasted, .. } = out else {
+            panic!("{out:?}");
+        };
+        assert_eq!(wasted, SimTime::ZERO, "step 50 is on a 10-step checkpoint");
+        let (spec, _) = h.queue.front().unwrap();
+        match &spec.kind {
+            JobKind::Jacobi { steps, .. } => assert_eq!(*steps, 50, "resume at step 50"),
+            other => panic!("kind changed: {other:?}"),
+        }
+    }
+
+    /// Fair-share dispatch: the tenant with the lower decayed ledger
+    /// usage runs first, regardless of submit order.
+    #[test]
+    fn fairshare_head_orders_by_ledger_usage() {
+        let mut h = Head::new();
+        h.policy = SchedulePolicy::fairshare();
+        h.ledger.charge(1, 1000.0, SimTime::ZERO);
+        h.hostfile_text = "10.10.0.2 slots=12\n".into();
+        h.submit(jobt(0, 12, 10, 1), SimTime::ZERO); // the hog, submitted first
+        h.submit(jobt(1, 12, 10, 2), SimTime::ZERO); // fresh tenant
+        let r = h.start_next(SimTime::from_secs(1)).unwrap();
+        assert_eq!(r.spec.id, JobId::new(1), "fresh tenant must run first");
+        assert!(!r.backfilled, "the fair-share head is not a backfill");
+    }
+
+    /// A tenant at its running-slot quota waits without blocking other
+    /// tenants' jobs queued behind it.
+    #[test]
+    fn running_slot_quota_gates_dispatch_without_blocking_others() {
+        let mut h = Head::new();
+        h.quotas.max_running_slots = 12;
+        h.hostfile_text = "10.10.0.2 slots=24\n".into();
+        h.submit(jobt(0, 12, 100, 1), SimTime::ZERO);
+        h.submit(jobt(1, 12, 100, 1), SimTime::ZERO); // over quota once job0 runs
+        h.submit(jobt(2, 12, 100, 2), SimTime::ZERO);
+        let r0 = h.start_next(SimTime::ZERO).unwrap();
+        assert_eq!(r0.spec.id, JobId::new(0));
+        assert_eq!(h.tenant_running_slots(1), 12, "tenant 1 holds its quota");
+        let r2 = h.start_next(SimTime::ZERO).unwrap();
+        assert_eq!(
+            r2.spec.id,
+            JobId::new(2),
+            "tenant 2 must not wait behind tenant 1's over-quota job"
+        );
+        assert_eq!(h.tenant_running_slots(2), 12);
+        assert!(h.start_next(SimTime::ZERO).is_none(), "tenant 1 is at quota");
+        h.finish(JobId::new(0));
+        assert_eq!(h.tenant_running_slots(1), 0, "finish releases the quota");
+        let r1 = h.start_next(SimTime::from_secs(1)).unwrap();
+        assert_eq!(r1.spec.id, JobId::new(1), "freed quota admits the held job");
+    }
+
+    /// A 0-job queue cap under Defer could never admit from the pen:
+    /// it must degenerate to a recorded rejection, not silent limbo.
+    #[test]
+    fn zero_queue_cap_under_defer_rejects_instead_of_stranding() {
+        let mut h = Head::new();
+        h.quotas.max_queued_jobs = 0;
+        h.quotas.over_quota = QuotaAction::Defer;
+        assert!(matches!(
+            h.submit(jobt(0, 8, 10, 1), SimTime::ZERO),
+            SubmitOutcome::Rejected { .. }
+        ));
+        assert_eq!(h.deferred_jobs(), 0, "nothing may be stranded in the pen");
+    }
+
+    /// Queued-job quota: Reject hands the spec back; Defer parks the
+    /// job and re-admits it once the tenant drains below quota.
+    #[test]
+    fn queued_job_quota_rejects_or_defers() {
+        let mut h = Head::new();
+        h.quotas.max_queued_jobs = 1;
+        assert!(matches!(h.submit(jobt(0, 8, 10, 1), SimTime::ZERO), SubmitOutcome::Queued));
+        match h.submit(jobt(1, 8, 10, 1), SimTime::ZERO) {
+            SubmitOutcome::Rejected { spec, reason } => {
+                assert_eq!(spec.id, JobId::new(1));
+                assert!(reason.contains("quota"), "{reason}");
+            }
+            other => panic!("expected rejection, got {other:?}"),
+        }
+        // another tenant is unaffected
+        assert!(matches!(h.submit(jobt(2, 8, 10, 2), SimTime::ZERO), SubmitOutcome::Queued));
+
+        let mut h = Head::new();
+        h.quotas.max_queued_jobs = 1;
+        h.quotas.over_quota = QuotaAction::Defer;
+        h.hostfile_text = "10.10.0.2 slots=24\n".into();
+        assert!(matches!(h.submit(jobt(0, 8, 10, 1), SimTime::ZERO), SubmitOutcome::Queued));
+        assert!(matches!(h.submit(jobt(1, 8, 10, 1), SimTime::ZERO), SubmitOutcome::Deferred));
+        assert_eq!(h.deferred_jobs(), 1);
+        // dispatching job0 drains the queue; the next dispatch admits
+        // and starts the deferred job
+        let r0 = h.start_next(SimTime::ZERO).unwrap();
+        assert_eq!(r0.spec.id, JobId::new(0));
+        let r1 = h.start_next(SimTime::from_secs(1)).unwrap();
+        assert_eq!(r1.spec.id, JobId::new(1), "deferred job must be admitted");
+        assert_eq!(h.deferred_jobs(), 0);
+    }
+
+    /// A fresh submission must not grab a just-freed queue slot ahead
+    /// of earlier deferred jobs: the pen stays FIFO against new work.
+    #[test]
+    fn defer_pen_keeps_fifo_against_fresh_submissions() {
+        let mut h = Head::new();
+        h.quotas.max_queued_jobs = 1;
+        h.quotas.over_quota = QuotaAction::Defer;
+        h.hostfile_text = "10.10.0.2 slots=24\n".into();
+        h.submit(jobt(0, 8, 10, 1), SimTime::ZERO);
+        assert!(matches!(h.submit(jobt(1, 8, 10, 1), SimTime::ZERO), SubmitOutcome::Deferred));
+        let r0 = h.start_next(SimTime::ZERO).unwrap();
+        assert_eq!(r0.spec.id, JobId::new(0));
+        // the queue is empty but the pen is not: a fresh submission
+        // must line up behind the earlier deferred job
+        assert!(matches!(h.submit(jobt(2, 8, 10, 1), SimTime::ZERO), SubmitOutcome::Deferred));
+        let r1 = h.start_next(SimTime::from_secs(1)).unwrap();
+        assert_eq!(r1.spec.id, JobId::new(1), "the pen head must run first");
+        let r2 = h.start_next(SimTime::from_secs(2)).unwrap();
+        assert_eq!(r2.spec.id, JobId::new(2));
+    }
+
+    /// Demand the quota guarantees can never be served must not reach
+    /// the autoscaler, and a job wider than the running-slot quota is
+    /// rejected at submit (it could never dispatch).
+    #[test]
+    fn running_slot_quota_caps_demand_and_rejects_impossible_widths() {
+        let mut h = Head::new();
+        h.quotas.max_running_slots = 12;
+        h.hostfile_text = "10.10.0.2 slots=24\n".into();
+        // wider than the quota: rejected up front
+        assert!(matches!(
+            h.submit(jobt(0, 16, 10, 1), SimTime::ZERO),
+            SubmitOutcome::Rejected { .. }
+        ));
+        // five queued 12-rank jobs, none running: demand is the quota
+        // headroom (12), not the raw 60
+        for i in 1..=5u32 {
+            h.submit(jobt(i, 12, 60, 1), SimTime::ZERO);
+        }
+        assert_eq!(h.queued_slots(), 60);
+        assert_eq!(h.weighted_queued_slots(), 12, "demand capped at quota headroom");
+        // once one runs the headroom is zero: the rest dispatch onto
+        // slots the tenant itself frees, so no new capacity is demanded
+        h.start_next(SimTime::ZERO).unwrap();
+        assert_eq!(h.weighted_queued_slots(), 0);
+    }
+
+    /// Requeue paths preserve tenant attribution and the lost attempt's
+    /// held slot-seconds are settled into the right ledger account.
+    #[test]
+    fn usage_accrues_to_the_running_tenant_across_requeues() {
+        let mut h = Head::new();
+        h.hostfile_text = "10.10.0.2 slots=24\n".into();
+        h.submit(jobt(0, 8, 100, 3), SimTime::ZERO);
+        h.start_next(SimTime::ZERO).unwrap();
+        let out = h.handle_lost_job(JobId::new(0), SimTime::from_secs(50), "died");
+        assert!(matches!(out, LossOutcome::Requeued { .. }), "{out:?}");
+        let (spec, _) = h.queue.front().unwrap();
+        assert_eq!(spec.tenant, 3, "requeue must keep the tenant");
+        let usage = h.ledger.usage_at(3, SimTime::from_secs(50));
+        assert!(
+            (usage - 400.0).abs() < 1e-6,
+            "8 slots x 50s must charge tenant 3: {usage}"
+        );
     }
 }

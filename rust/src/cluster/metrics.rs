@@ -1,4 +1,6 @@
-//! Minimal metrics registry: counters, gauges and value histograms.
+//! Minimal metrics registry: counters, gauges and value histograms —
+//! plus the multi-tenant aggregations ([`TenantBreakdown`],
+//! [`jain_index`]) the tenancy layer reports fairness with.
 
 use std::cell::RefCell;
 use std::collections::BTreeMap;
@@ -55,6 +57,57 @@ impl Histogram {
             return 0.0;
         }
         self.values.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+}
+
+/// Jain's fairness index over a set of per-entity figures:
+/// `(Σx)² / (n·Σx²)`. 1.0 means perfectly equal; `1/n` means one
+/// entity has everything. Empty or all-zero inputs read 1.0 (no
+/// evidence of unfairness).
+pub fn jain_index(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 1.0;
+    }
+    let n = xs.len() as f64;
+    let sum: f64 = xs.iter().sum();
+    let sum_sq: f64 = xs.iter().map(|x| x * x).sum();
+    if sum_sq <= 0.0 {
+        return 1.0;
+    }
+    (sum * sum) / (n * sum_sq)
+}
+
+/// A histogram per tenant, in stable (tenant-id) order — the shape the
+/// tenancy layer reports per-tenant wait and slowdown distributions
+/// with, and the input to its Jain fairness figures. Kept outside the
+/// flat [`Metrics`] registry: a 100k-tenant population must not mint
+/// 100k metric names.
+#[derive(Debug, Clone, Default)]
+pub struct TenantBreakdown {
+    per: BTreeMap<u64, Histogram>,
+}
+
+impl TenantBreakdown {
+    pub fn observe(&mut self, tenant: u64, v: f64) {
+        self.per.entry(tenant).or_default().record(v);
+    }
+    /// Tenants with at least one observation.
+    pub fn tenants(&self) -> usize {
+        self.per.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.per.is_empty()
+    }
+    pub fn histogram(&self, tenant: u64) -> Option<&Histogram> {
+        self.per.get(&tenant)
+    }
+    /// Per-tenant means, in tenant-id order.
+    pub fn means(&self) -> Vec<f64> {
+        self.per.values().map(|h| h.mean()).collect()
+    }
+    /// Jain's fairness index over the per-tenant means.
+    pub fn fairness(&self) -> f64 {
+        jain_index(&self.means())
     }
 }
 
@@ -196,6 +249,35 @@ mod tests {
         assert_eq!(snap.get("a"), Some(&2));
         assert_eq!(snap.get("b"), Some(&1));
         assert_eq!(m.counters_snapshot(), snap);
+    }
+
+    #[test]
+    fn jain_index_spans_equal_to_concentrated() {
+        assert_eq!(jain_index(&[]), 1.0);
+        assert_eq!(jain_index(&[0.0, 0.0]), 1.0);
+        assert!((jain_index(&[3.0, 3.0, 3.0]) - 1.0).abs() < 1e-12);
+        // one entity hogs everything: index -> 1/n
+        let concentrated = jain_index(&[12.0, 0.0, 0.0, 0.0]);
+        assert!((concentrated - 0.25).abs() < 1e-12, "{concentrated}");
+        // mild skew sits strictly between
+        let mild = jain_index(&[1.0, 2.0, 1.0, 2.0]);
+        assert!(mild > 0.25 && mild < 1.0, "{mild}");
+    }
+
+    #[test]
+    fn tenant_breakdown_aggregates_per_tenant() {
+        let mut b = TenantBreakdown::default();
+        assert!(b.is_empty());
+        assert_eq!(b.fairness(), 1.0, "no tenants = no unfairness");
+        b.observe(1, 10.0);
+        b.observe(1, 20.0);
+        b.observe(2, 15.0);
+        assert_eq!(b.tenants(), 2);
+        assert_eq!(b.histogram(1).unwrap().count(), 2);
+        assert_eq!(b.means(), vec![15.0, 15.0]);
+        assert!((b.fairness() - 1.0).abs() < 1e-12, "equal means are fair");
+        b.observe(3, 150.0);
+        assert!(b.fairness() < 0.7, "an outlier tenant must drop the index");
     }
 
     #[test]

@@ -4,14 +4,23 @@
 //! `ext_autoscale` / `ext_policy` benches so the scenarios never drift
 //! apart. [`run_policy_trace`] is the general driver (per-job
 //! priorities, any [`SchedulePolicy`]); [`run_job_trace`] keeps the
-//! historical `(ranks, duration)` shape on the default FIFO policy.
+//! historical `(ranks, duration)` shape on the default FIFO policy;
+//! [`run_tenant_trace`] drives an *open-loop* multi-tenant arrival
+//! stream (`tenancy::arrivals`) instead of a fixed burst — the harness
+//! behind `vhpc tenants` and `benches/ext_tenancy.rs`.
 
 use crate::cluster::head::{JobKind, JobState};
+use crate::cluster::metrics::{Histogram, TenantBreakdown};
 use crate::cluster::policy::SchedulePolicy;
 use crate::cluster::vcluster::VirtualCluster;
 use crate::config::ClusterSpec;
 use crate::sim::SimTime;
+use crate::tenancy::arrivals::{
+    stream_fingerprint, tenant_counts, ArrivalGen, JobArrival, PopulationSpec,
+};
+use crate::tenancy::ledger::TenantQuotas;
 use anyhow::{anyhow, ensure, Result};
+use std::collections::BTreeMap;
 
 /// One job request in a policy trace.
 #[derive(Debug, Clone, Copy)]
@@ -206,6 +215,145 @@ pub fn run_policy_trace(
     Ok((outcome, vc))
 }
 
+/// What an open-loop multi-tenant run measured.
+#[derive(Debug, Clone)]
+pub struct TenantTraceOutcome {
+    /// Arrivals submitted over the window (queued + deferred + quota-
+    /// rejected — every submission is accounted for by the drain).
+    pub jobs_submitted: usize,
+    /// Jobs that reached `Done`.
+    pub jobs_completed: usize,
+    /// Jobs recorded `Failed` (quota rejections; width rejections).
+    pub jobs_failed: usize,
+    /// Submissions parked by the queued-job quota (they still complete
+    /// later and count in `jobs_completed`).
+    pub jobs_deferred: u64,
+    /// Distinct tenants that submitted at least one job.
+    pub tenants_seen: usize,
+    /// Mean / p99 submit-to-start wait over completed jobs, seconds.
+    pub mean_wait: f64,
+    pub p99_wait: f64,
+    /// Mean bounded slowdown ((wait + run) / max(run, 1s)) over jobs.
+    pub mean_slowdown: f64,
+    /// Jain's fairness index over per-tenant mean waits.
+    pub fairness_wait: f64,
+    /// Jain's fairness index over per-tenant mean slowdowns — the
+    /// headline fairness figure the policy comparison ranks by.
+    pub fairness_slowdown: f64,
+    /// Per-tenant slowdown distributions (tenant-id order).
+    pub slowdown_by_tenant: TenantBreakdown,
+    /// First-submit to last-completion span, seconds.
+    pub makespan: f64,
+    /// Order-sensitive fingerprint of the synthesized arrival stream.
+    pub arrivals_fingerprint: u64,
+    /// Stable counter snapshot — two same-seed runs must be identical.
+    pub fingerprint: BTreeMap<String, u64>,
+}
+
+/// Drive an open-loop multi-tenant arrival stream through a fresh
+/// cluster for `duration_secs` of virtual time (submissions stop
+/// there), then drain. Unlike the burst drivers above, this is the
+/// harness that exercises scheduler, autoscaler and ledger under
+/// *sustained* load: arrivals keep coming while earlier jobs run, the
+/// diurnal swing forces scale-up and scale-down in one run, and
+/// campaign bursts stress per-tenant fairness. Errors if any
+/// submission is unaccounted for after `deadline_secs`.
+pub fn run_tenant_trace(
+    spec: ClusterSpec,
+    pop: PopulationSpec,
+    policy: SchedulePolicy,
+    quotas: TenantQuotas,
+    duration_secs: u64,
+    deadline_secs: u64,
+) -> Result<(TenantTraceOutcome, VirtualCluster)> {
+    let mut vc = VirtualCluster::new(spec)?;
+    vc.state.head.policy = policy;
+    vc.state.head.quotas = quotas;
+    vc.start();
+    ensure!(
+        vc.advance_until(SimTime::from_secs(600), |st| st.head.slots_available() > 0),
+        "cluster never advertised a slot"
+    );
+    let max_ranks = vc.state.spec.max_advertisable_slots().max(1);
+    let mut gen = ArrivalGen::new(pop);
+    let t0 = vc.now();
+    let horizon = SimTime::from_secs(duration_secs);
+    let mut next = gen.next();
+    let mut arrivals: Vec<JobArrival> = Vec::new();
+    while vc.now().saturating_sub(t0) < horizon {
+        // submit everything due by now (arrival offsets anchor at t0)
+        while next.at <= vc.now().saturating_sub(t0) {
+            vc.submit_job(
+                &format!("t{}-j{}", next.tenant, arrivals.len()),
+                next.ranks.min(max_ranks),
+                JobKind::Synthetic { duration: next.duration },
+                next.priority,
+                next.tenant,
+            );
+            arrivals.push(next);
+            next = gen.next();
+        }
+        vc.advance(SimTime::from_secs(1));
+        let overbooked = vc.state.head.overbooked_hosts();
+        ensure!(overbooked.is_empty(), "double-booked hosts: {overbooked:?}");
+    }
+    let submitted = arrivals.len();
+    let deadline = t0 + SimTime::from_secs(deadline_secs);
+    while vc.now() < deadline && vc.completed_jobs().len() < submitted {
+        vc.advance(SimTime::from_secs(1));
+    }
+    ensure!(
+        vc.completed_jobs().len() == submitted,
+        "tenant trace never drained: {}/{} jobs accounted for after {deadline_secs}s",
+        vc.completed_jobs().len(),
+        submitted
+    );
+
+    let mut wait_by_tenant = TenantBreakdown::default();
+    let mut slowdown_by_tenant = TenantBreakdown::default();
+    let mut waits = Histogram::default();
+    let mut slowdowns = Histogram::default();
+    let mut completed = 0usize;
+    let mut failed = 0usize;
+    let mut last_finish = SimTime::ZERO;
+    for rec in vc.completed_jobs() {
+        match rec.state {
+            JobState::Done { started, finished } => {
+                completed += 1;
+                last_finish = last_finish.max(finished);
+                let wait = started.saturating_sub(rec.queued_at).as_secs_f64();
+                let run = finished.saturating_sub(started).as_secs_f64().max(1.0);
+                let slowdown =
+                    (finished.saturating_sub(rec.queued_at).as_secs_f64() / run).max(1.0);
+                waits.record(wait);
+                slowdowns.record(slowdown);
+                wait_by_tenant.observe(rec.spec.tenant, wait);
+                slowdown_by_tenant.observe(rec.spec.tenant, slowdown);
+            }
+            JobState::Failed { .. } => failed += 1,
+            ref other => return Err(anyhow!("job {} not done: {other:?}", rec.spec.name)),
+        }
+    }
+    let tenants_seen = tenant_counts(&arrivals).len();
+    let outcome = TenantTraceOutcome {
+        jobs_submitted: submitted,
+        jobs_completed: completed,
+        jobs_failed: failed,
+        jobs_deferred: vc.metrics().counter("jobs_deferred_quota"),
+        tenants_seen,
+        mean_wait: waits.mean(),
+        p99_wait: waits.percentile(99.0),
+        mean_slowdown: slowdowns.mean(),
+        fairness_wait: wait_by_tenant.fairness(),
+        fairness_slowdown: slowdown_by_tenant.fairness(),
+        slowdown_by_tenant,
+        makespan: last_finish.saturating_sub(t0).as_secs_f64(),
+        arrivals_fingerprint: stream_fingerprint(&arrivals),
+        fingerprint: vc.metrics().counters_snapshot(),
+    };
+    Ok((outcome, vc))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -231,6 +379,29 @@ mod tests {
         assert!((o.mean_rack_spread - 1.0).abs() < 1e-9, "{}", o.mean_rack_spread);
         // the priority head ran before the batch wall submitted ahead of it
         assert_eq!(vc.completed_jobs()[0].spec.priority, 3);
+    }
+
+    #[test]
+    fn tenant_trace_drains_and_reports_fairness() {
+        let mut pop = PopulationSpec::new(10, 7);
+        pop.rate_per_sec = 0.05;
+        pop.campaign_prob = 0.1;
+        let (o, vc) = run_tenant_trace(
+            spec(),
+            pop,
+            SchedulePolicy::fairshare(),
+            TenantQuotas::default(),
+            300,
+            3600,
+        )
+        .unwrap();
+        assert!(o.jobs_submitted > 0, "300s at 0.05/s must submit work");
+        assert_eq!(o.jobs_completed + o.jobs_failed, o.jobs_submitted);
+        assert!(o.fairness_slowdown > 0.0 && o.fairness_slowdown <= 1.0 + 1e-9);
+        assert!(o.fairness_wait > 0.0 && o.fairness_wait <= 1.0 + 1e-9);
+        assert!((1..=10).contains(&o.tenants_seen));
+        assert!(o.mean_slowdown >= 1.0);
+        assert!(vc.state.head.overbooked_hosts().is_empty());
     }
 
     #[test]

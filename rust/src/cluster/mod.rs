@@ -11,11 +11,14 @@
 //! Scheduling is split into mechanism and policy: [`head::Head`] owns
 //! the queue and per-job slot reservations (mechanism), while
 //! [`policy::SchedulePolicy`] decides dispatch order — FIFO with
-//! conservative backfill, EASY (reservation-based) backfill, or
-//! priorities with preemption — and whether reservations are carved
+//! conservative backfill, EASY (reservation-based) backfill,
+//! priorities with preemption, or per-tenant fair share
+//! (`crate::tenancy`) — and whether reservations are carved
 //! hostfile-order or packed rack-aware. [`autoscaler::Autoscaler`]
-//! consumes a priority-weighted demand signal, and [`mix`] drives
-//! whole traces through any policy for the benches and the CLI.
+//! consumes a priority-weighted, tenant-share-capped demand signal,
+//! and [`mix`] drives whole traces (fixed bursts or open-loop
+//! multi-tenant arrival streams) through any policy for the benches
+//! and the CLI.
 
 pub mod autoscaler;
 pub mod head;
@@ -25,11 +28,11 @@ pub mod policy;
 pub mod vcluster;
 
 pub use autoscaler::{Autoscaler, Observation, ScaleAction};
-pub use head::{Head, JobKind, JobRecord, JobSpec, JobState, StartedJob};
-pub use metrics::{Histogram, Metrics};
+pub use head::{Head, JobKind, JobRecord, JobSpec, JobState, StartedJob, SubmitOutcome};
+pub use metrics::{jain_index, Histogram, Metrics, TenantBreakdown};
 pub use mix::{
-    bursty_trace, mix_spec, prioritized_trace, run_job_trace, run_policy_trace, JobReq,
-    TraceOutcome,
+    bursty_trace, mix_spec, prioritized_trace, run_job_trace, run_policy_trace,
+    run_tenant_trace, JobReq, TenantTraceOutcome, TraceOutcome,
 };
 pub use policy::{PolicyKind, SchedulePolicy};
 pub use vcluster::{NodeState, VirtualCluster};

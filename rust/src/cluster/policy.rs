@@ -25,6 +25,11 @@
 //!   running jobs — one per decision, re-evaluated after each — when
 //!   that frees enough slots. Preempted jobs keep their
 //!   partial-progress credit and do *not* lose fault-retry budget.
+//! * [`PolicyKind::FairShare`] — max-min fairness over tenants: the
+//!   job whose tenant has the lowest decayed ledger usage is the head
+//!   (FIFO within a tenant), and blocked heads get the same EASY
+//!   shadow-time reservation. The decision procedure lives in
+//!   [`crate::tenancy::fairshare`].
 //!
 //! Orthogonally to dispatch order, [`SchedulePolicy::topo_aware`]
 //! switches reservation carving from hostfile order (width-only) to
@@ -52,6 +57,9 @@ pub enum PolicyKind {
     Easy,
     /// Highest priority first, optional preemption.
     Priority,
+    /// Lowest decayed per-tenant usage first + EASY-style backfill
+    /// (see [`crate::tenancy::fairshare`]).
+    FairShare,
 }
 
 impl PolicyKind {
@@ -61,6 +69,7 @@ impl PolicyKind {
             PolicyKind::Fifo => "fifo",
             PolicyKind::Easy => "easy",
             PolicyKind::Priority => "priority",
+            PolicyKind::FairShare => "fairshare",
         }
     }
 }
@@ -72,7 +81,10 @@ impl std::str::FromStr for PolicyKind {
             "fifo" => Ok(PolicyKind::Fifo),
             "easy" => Ok(PolicyKind::Easy),
             "priority" => Ok(PolicyKind::Priority),
-            other => Err(format!("unknown policy {other} (expected fifo|easy|priority)")),
+            "fairshare" => Ok(PolicyKind::FairShare),
+            other => Err(format!(
+                "unknown policy {other} (expected fifo|easy|priority|fairshare)"
+            )),
         }
     }
 }
@@ -123,6 +135,11 @@ impl SchedulePolicy {
     pub fn priority() -> Self {
         Self::new(PolicyKind::Priority)
     }
+    /// Shorthand for [`SchedulePolicy::new`] with
+    /// [`PolicyKind::FairShare`].
+    pub fn fairshare() -> Self {
+        Self::new(PolicyKind::FairShare)
+    }
 }
 
 /// A queued job as the policy sees it.
@@ -134,6 +151,11 @@ pub struct QueuedJob {
     /// Planning estimate of the job's virtual runtime (exact for
     /// synthetic jobs, a heuristic for Jacobi).
     pub est: SimTime,
+    /// Owning tenant (0 = untenanted system work).
+    pub tenant: u64,
+    /// The tenant's decayed ledger usage at decision time (slot-seconds;
+    /// what the fair-share policy orders by — 0 for fresh tenants).
+    pub usage: f64,
 }
 
 /// A running job as the policy sees it.
@@ -185,6 +207,9 @@ impl SchedulePolicy {
             PolicyKind::Easy => decide_easy(now, queue, running, free),
             PolicyKind::Priority => {
                 decide_priority(self.preemption, queue, running, free, total)
+            }
+            PolicyKind::FairShare => {
+                crate::tenancy::fairshare::decide_fairshare(now, queue, running, free)
             }
         }
     }
@@ -258,8 +283,10 @@ fn decide_easy(
 /// When will `ranks` slots be free, assuming running jobs finish at
 /// their predicted times and nothing new starts? Returns the shadow
 /// time plus the slots left over for backfill at that moment, or
-/// `None` when even draining everything cannot seat the job.
-fn shadow_time(
+/// `None` when even draining everything cannot seat the job. Shared
+/// with the fair-share policy (`tenancy/fairshare.rs`), which gives
+/// its usage-ordered head the same reservation.
+pub(crate) fn shadow_time(
     now: SimTime,
     ranks: u32,
     running: &[RunningJob],
@@ -465,6 +492,8 @@ mod tests {
             ranks,
             priority: pri,
             est: SimTime::from_secs(est_secs),
+            tenant: 0,
+            usage: 0.0,
         }
     }
 
@@ -712,9 +741,23 @@ mod tests {
         assert_eq!("fifo".parse::<PolicyKind>().unwrap(), PolicyKind::Fifo);
         assert_eq!("easy".parse::<PolicyKind>().unwrap(), PolicyKind::Easy);
         assert_eq!("priority".parse::<PolicyKind>().unwrap(), PolicyKind::Priority);
+        assert_eq!("fairshare".parse::<PolicyKind>().unwrap(), PolicyKind::FairShare);
         assert!("slurm".parse::<PolicyKind>().is_err());
         assert_eq!(PolicyKind::Easy.name(), "easy");
+        assert_eq!(PolicyKind::FairShare.name(), "fairshare");
         assert!(SchedulePolicy::priority().preemption);
         assert!(!SchedulePolicy::easy().preemption);
+        assert!(!SchedulePolicy::fairshare().preemption);
+    }
+
+    #[test]
+    fn fairshare_policy_dispatches_lowest_usage_tenant_first() {
+        let p = SchedulePolicy::fairshare();
+        let hog = QueuedJob { tenant: 1, usage: 900.0, ..q(0, 8, 0, 30) };
+        let fresh = QueuedJob { tenant: 2, usage: 0.0, ..q(1, 8, 0, 30) };
+        assert_eq!(
+            p.decide(SimTime::ZERO, &[hog, fresh], &[], 8, 24),
+            Decision::Start { idx: 1, backfilled: false }
+        );
     }
 }

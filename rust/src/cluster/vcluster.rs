@@ -14,7 +14,9 @@
 //! (virtual comm + real compute) is charged back into virtual time.
 
 use crate::cluster::autoscaler::{Autoscaler, Observation, ScaleAction};
-use crate::cluster::head::{Head, JobKind, JobRecord, JobSpec, JobState, LossOutcome, StartedJob};
+use crate::cluster::head::{
+    Head, JobKind, JobRecord, JobSpec, JobState, LossOutcome, StartedJob, SubmitOutcome,
+};
 use crate::cluster::metrics::Metrics;
 use crate::config::ClusterSpec;
 use crate::consul::catalog::{Catalog, ServiceEntry};
@@ -132,7 +134,7 @@ impl VirtualCluster {
         }
 
         let n = spec.machines as usize;
-        let state = ClusterState {
+        let mut state = ClusterState {
             autoscaler: Autoscaler::new(spec.autoscale.clone()),
             spec,
             plant,
@@ -154,6 +156,8 @@ impl VirtualCluster {
             deploy_faults: vec![0; n],
             partitioned_machines: vec![false; n],
         };
+        let ckpt = state.spec.jacobi_checkpoint_steps.max(1);
+        state.head.checkpoint_every_steps = ckpt;
         Ok(Self { state, engine: Engine::new() })
     }
 
@@ -540,6 +544,9 @@ impl VirtualCluster {
         if st.head.running.get(&id).map(|r| r.attempt) != Some(attempt) {
             return;
         }
+        // settle the finishing job's slot-seconds into its tenant's
+        // ledger before it leaves the running pool
+        st.head.accrue_usage(eng.now());
         if let Some(mut record) = st.head.finish(id) {
             let started = match record.state {
                 JobState::Running { started } => started,
@@ -580,9 +587,10 @@ impl VirtualCluster {
             py,
             tile,
             steps,
-            // the residual-check cadence is also the restart checkpoint
-            // the recovery pipeline resumes from after a node loss
-            check_every: crate::cluster::head::JACOBI_CHECKPOINT_STEPS.min(steps),
+            // residual cadence only — the restart checkpoint the
+            // recovery pipeline resumes from is the head's (tunable)
+            // `checkpoint_every_steps`, decoupled from the numerics
+            check_every: crate::cluster::head::JACOBI_RESIDUAL_CHECK_STEPS.min(steps),
             tol: 1e-6,
             artifacts: st.artifacts.clone(),
         };
@@ -726,9 +734,25 @@ impl VirtualCluster {
         kind: JobKind,
         priority: i32,
     ) -> JobId {
+        self.submit_job(name, ranks, kind, priority, 0)
+    }
+
+    /// The general submit: priority plus tenant attribution. The job is
+    /// charged to `tenant`'s usage ledger while it runs and counts
+    /// against the tenant's quotas; an over-quota submission is
+    /// rejected (recorded as `Failed`) or deferred per
+    /// [`Head::quotas`](crate::cluster::head::Head).
+    pub fn submit_job(
+        &mut self,
+        name: &str,
+        ranks: u32,
+        kind: JobKind,
+        priority: i32,
+        tenant: u64,
+    ) -> JobId {
         let id = JobId::new(self.state.next_job);
         self.state.next_job += 1;
-        let spec = JobSpec { id, name: name.to_string(), ranks, kind, priority };
+        let spec = JobSpec { id, name: name.to_string(), ranks, kind, priority, tenant };
         let now = self.engine.now();
         let max_slots = self.state.spec.max_advertisable_slots();
         if ranks > max_slots {
@@ -747,8 +771,27 @@ impl VirtualCluster {
             });
             return id;
         }
-        self.state.head.submit(spec, now);
-        self.state.metrics.inc("jobs_submitted");
+        match self.state.head.submit(spec, now) {
+            SubmitOutcome::Queued => {
+                self.state.metrics.inc("jobs_submitted");
+            }
+            SubmitOutcome::Deferred => {
+                self.state.metrics.inc("jobs_submitted");
+                self.state.metrics.inc("jobs_deferred_quota");
+            }
+            SubmitOutcome::Rejected { spec, reason } => {
+                self.state.metrics.inc("jobs_rejected");
+                self.state.metrics.inc("jobs_rejected_quota");
+                self.state.head.completed.push(JobRecord {
+                    spec,
+                    state: JobState::Failed { reason },
+                    result: None,
+                    queued_at: now,
+                    attempt: 0,
+                    planned_duration: None,
+                });
+            }
+        }
         id
     }
 

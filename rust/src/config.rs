@@ -183,6 +183,11 @@ pub struct ClusterSpec {
     /// evenly across that many racks, giving topology-aware placement
     /// real boundaries to pack against.
     pub racks: u32,
+    /// Jacobi restart-checkpoint interval in solver steps (partial
+    /// progress credit on requeue/preemption rounds down to the last
+    /// completed multiple). Decoupled from the residual cadence; the
+    /// default preserves the historical behavior.
+    pub jacobi_checkpoint_steps: usize,
     pub seed: u64,
     pub autoscale: AutoscaleConfig,
 }
@@ -207,6 +212,7 @@ impl ClusterSpec {
             dockerfile: crate::dockyard::Dockerfile::paper_compute_node().to_string(),
             slots_per_node: 12,
             racks: 0,
+            jacobi_checkpoint_steps: crate::cluster::head::JACOBI_CHECKPOINT_STEPS,
             seed: 42,
             autoscale: AutoscaleConfig::default(),
         }
@@ -260,6 +266,10 @@ impl ClusterSpec {
             }
             if let Some(v) = c.get("racks") {
                 spec.racks = req_int("cluster", "racks", v)? as u32;
+            }
+            if let Some(v) = c.get("jacobi_checkpoint_steps") {
+                spec.jacobi_checkpoint_steps =
+                    (req_int("cluster", "jacobi_checkpoint_steps", v)?.max(1)) as usize;
             }
             if let Some(v) = c.get("seed") {
                 spec.seed = req_int("cluster", "seed", v)? as u64;
@@ -371,18 +381,25 @@ mod tests {
         assert_eq!(s.slots_per_node, 12);
         assert_eq!(s.bridge, BridgeMode::Bridge0);
         assert_eq!(s.machine_spec.model, "Dell M620");
+        assert_eq!(
+            s.jacobi_checkpoint_steps,
+            crate::cluster::head::JACOBI_CHECKPOINT_STEPS,
+            "default must preserve the historical checkpoint cadence"
+        );
     }
 
     #[test]
     fn spec_from_text_overrides() {
         let spec = ClusterSpec::from_text(
             "[cluster]\nmachines = 8\nbridge = \"docker0\"\nslots_per_node = 4\nracks = 2\n\
+             jacobi_checkpoint_steps = 5\n\
              [machine]\nmemory = \"32GB\"\nnic = \"1GbE\"\nboot_secs = 10\n\
              [autoscale]\nmin_nodes = 1\nmax_nodes = 8\ncooldown_secs = 5\n",
         )
         .unwrap();
         assert_eq!(spec.machines, 8);
         assert_eq!(spec.racks, 2);
+        assert_eq!(spec.jacobi_checkpoint_steps, 5);
         assert_eq!(spec.bridge, BridgeMode::Docker0);
         assert_eq!(spec.machine_spec.memory_bytes, 32 << 30);
         assert_eq!(spec.machine_spec.nic.name, "1GbE");

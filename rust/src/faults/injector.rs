@@ -55,6 +55,27 @@ pub fn apply(st: &mut ClusterState, eng: &mut Engine<ClusterState>, kind: &Fault
                 VirtualCluster::chaos_deploy_fail(st, MachineId::new(*machine), *failures);
             }
         }
+        // correlated failure domain: every machine on the rack dies in
+        // this same tick (the head, machine 0, is spared — chaos never
+        // decapitates the control plane)
+        FaultKind::RackOutage { rack } => {
+            let members: Vec<u32> = st
+                .plant
+                .racks
+                .get(*rack as usize)
+                .map(|r| r.members.iter().map(|m| m.raw()).collect())
+                .unwrap_or_default();
+            let mut killed = false;
+            for m in members {
+                if target_ok(st, m) {
+                    VirtualCluster::kill_machine_at(st, eng.now(), MachineId::new(m));
+                    killed = true;
+                }
+            }
+            if killed {
+                st.metrics.inc("rack_outages_injected");
+            }
+        }
     }
 }
 

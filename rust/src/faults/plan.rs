@@ -38,6 +38,12 @@ pub enum FaultKind {
     /// The next `failures` container-deploy attempts on the machine
     /// error out (image pull / start failure).
     DeployFail { machine: u32, failures: u32 },
+    /// Correlated rack-level outage (PDU / ToR failure): every machine
+    /// on the rack is hard-killed in the same tick. The injector
+    /// resolves rack membership against the live plant, so one plan
+    /// replays against any topology; the head's machine survives even
+    /// if it shares the rack.
+    RackOutage { rack: u32 },
 }
 
 impl FaultKind {
@@ -49,6 +55,7 @@ impl FaultKind {
             FaultKind::Flap { .. } => "flap",
             FaultKind::Partition { .. } => "partition",
             FaultKind::DeployFail { .. } => "deploy_fail",
+            FaultKind::RackOutage { .. } => "rack_outage",
         }
     }
 }
@@ -93,6 +100,15 @@ impl FaultPlan {
             }
         }
         Self::scripted(events)
+    }
+
+    /// A single correlated rack outage: every machine on `rack` dies in
+    /// the same tick, `at` after injection (ToR switch or PDU failure —
+    /// the failure domain the topology-aware scheduler packs jobs
+    /// into). Membership is resolved by the injector against the live
+    /// plant at fire time.
+    pub fn rack_outage(rack: u32, at: SimTime) -> Self {
+        Self::scripted(vec![FaultEvent { at, kind: FaultKind::RackOutage { rack } }])
     }
 
     /// `faults` seeded events drawn over `horizon`, mixing every fault
@@ -233,6 +249,17 @@ mod tests {
                 matches!(ev.kind, FaultKind::Hang { machine: 2, duration } if duration == SimTime::from_secs(5))
             );
         }
+    }
+
+    #[test]
+    fn rack_outage_plan_is_a_single_labeled_event() {
+        let plan = FaultPlan::rack_outage(1, SimTime::from_secs(30));
+        assert_eq!(plan.len(), 1);
+        assert_eq!(plan.events[0].at, SimTime::from_secs(30));
+        assert_eq!(plan.events[0].kind, FaultKind::RackOutage { rack: 1 });
+        assert_eq!(plan.kind_counts().get("rack_outage"), Some(&1));
+        // expansion passes the event through untouched
+        assert_eq!(plan.expanded(), plan.events);
     }
 
     #[test]

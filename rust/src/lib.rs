@@ -17,6 +17,7 @@ pub mod hw;
 pub mod mpi;
 pub mod runtime;
 pub mod sim;
+pub mod tenancy;
 pub mod util;
 pub mod vnet;
 pub mod workloads;

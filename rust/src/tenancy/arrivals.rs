@@ -1,0 +1,386 @@
+//! Open-loop multi-tenant workload source: a seeded, deterministic
+//! stream of job arrivals drawn from a tenant population.
+//!
+//! Three load shapes compose:
+//!
+//! * **Population mixture** — tenant `i`'s arrival rate is proportional
+//!   to a power-law weight `i^-skew`, so a few heavy tenants dominate a
+//!   long tail of light ones (the shape every shared cluster sees).
+//!   The aggregate stream of independent per-tenant Poisson processes
+//!   is itself Poisson at the summed rate, so the generator draws the
+//!   *aggregate* arrival and then attributes it to a tenant by
+//!   inverse-CDF sampling of the continuous power-law mixture — O(1)
+//!   per arrival, no per-tenant state, which is what lets a population
+//!   of 100k+ idle-mostly tenants cost nothing until they submit.
+//! * **Diurnal modulation** — the aggregate rate swings sinusoidally
+//!   around its mean (Lewis–Shedler thinning against the peak rate), so
+//!   the autoscaler sees genuine peak/trough cycles.
+//! * **Campaigns** — with a small probability an arrival kicks off a
+//!   burst: the same tenant submits several follow-up jobs at short,
+//!   fixed spacing (priority 2 — a scientist pushing a parameter sweep
+//!   and hammering refresh). Campaigns are what make per-tenant
+//!   fairness interesting: one tenant's burst must not starve the tail.
+//!
+//! Everything is drawn from one explicitly seeded [`Rng`], so the same
+//! [`PopulationSpec`] always produces a byte-identical arrival stream —
+//! the determinism the `ext_tenancy` bench fingerprints.
+
+use crate::sim::SimTime;
+use crate::util::Rng;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, BTreeMap};
+
+/// Job widths the generator draws from (weighted toward narrow work,
+/// the realistic mix for a 12-slot-per-node cluster).
+const RANK_MENU: [u32; 8] = [1, 2, 4, 4, 8, 8, 12, 16];
+
+/// The tenant population and its load shape. All rates are in jobs per
+/// virtual second; the spec is plain data so drivers can tweak knobs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PopulationSpec {
+    /// Population size. Tenant ids run 1..=tenants (0 is reserved for
+    /// untenanted system work).
+    pub tenants: u64,
+    /// Aggregate mean arrival rate at the diurnal midpoint, jobs/sec.
+    /// This is deliberately *not* per-tenant: growing the population
+    /// spreads the same load over more users instead of multiplying it.
+    pub rate_per_sec: f64,
+    /// Power-law skew `s >= 0` of per-tenant rates (`weight ~ i^-s`).
+    /// 0 = uniform population; ~1.1 = classic heavy-head Zipf.
+    pub skew: f64,
+    /// Relative amplitude of the sinusoidal diurnal swing, in [0, 0.95].
+    pub diurnal_amplitude: f64,
+    /// Period of one "day". Benches compress this so a short run still
+    /// sees peaks and troughs.
+    pub diurnal_period: SimTime,
+    /// Probability that an arrival starts a campaign burst.
+    pub campaign_prob: f64,
+    /// Most follow-up jobs a campaign adds (the draw is uniform in
+    /// 1..=campaign_jobs).
+    pub campaign_jobs: u32,
+    /// Gap between consecutive jobs of one campaign.
+    pub campaign_spacing: SimTime,
+    /// Mean synthetic job duration, seconds (exponential, clamped to
+    /// [5, 240]).
+    pub mean_duration_secs: f64,
+    /// Stream seed: same seed, same arrivals, byte for byte.
+    pub seed: u64,
+}
+
+impl PopulationSpec {
+    /// Defaults tuned for the 8-machine mix cluster: ~60-70% mean
+    /// utilization with peaks that force queueing and scale-up.
+    pub fn new(tenants: u64, seed: u64) -> Self {
+        Self {
+            tenants: tenants.max(1),
+            rate_per_sec: 0.15,
+            skew: 1.1,
+            diurnal_amplitude: 0.6,
+            diurnal_period: SimTime::from_secs(3600),
+            campaign_prob: 0.05,
+            campaign_jobs: 8,
+            campaign_spacing: SimTime::from_secs(10),
+            mean_duration_secs: 45.0,
+            seed,
+        }
+    }
+}
+
+/// One synthesized job arrival. Times are offsets from stream start
+/// (the driver anchors them to whenever its warm-up finished).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct JobArrival {
+    pub at: SimTime,
+    /// Tenant id in 1..=population.
+    pub tenant: u64,
+    pub ranks: u32,
+    pub duration: SimTime,
+    /// Campaign jobs arrive at priority 2 (an impatient burst); base
+    /// arrivals at batch priority 0.
+    pub priority: i32,
+    pub campaign: bool,
+}
+
+/// A scheduled campaign follow-up (min-heap entry; `seq` breaks ties so
+/// interleaved campaigns stay in spawn order).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct Pending {
+    at: SimTime,
+    seq: u64,
+    tenant: u64,
+    ranks: u32,
+    dur: SimTime,
+}
+
+/// The generator: pull [`JobArrival`]s one at a time, in time order.
+#[derive(Debug, Clone)]
+pub struct ArrivalGen {
+    spec: PopulationSpec,
+    rng: Rng,
+    /// Time of the last base (non-campaign) arrival candidate.
+    t: SimTime,
+    /// The next base arrival, drawn but not yet emitted.
+    next_base: Option<JobArrival>,
+    /// Campaign follow-ups waiting for their timestamps.
+    pending: BinaryHeap<Reverse<Pending>>,
+    seq: u64,
+}
+
+impl ArrivalGen {
+    pub fn new(mut spec: PopulationSpec) -> Self {
+        spec.tenants = spec.tenants.max(1);
+        spec.rate_per_sec = spec.rate_per_sec.max(1e-9);
+        spec.diurnal_amplitude = spec.diurnal_amplitude.clamp(0.0, 0.95);
+        let seed = spec.seed;
+        Self {
+            spec,
+            rng: Rng::new(seed ^ 0x7E4A_4755),
+            t: SimTime::ZERO,
+            next_base: None,
+            pending: BinaryHeap::new(),
+            seq: 0,
+        }
+    }
+
+    /// Aggregate arrival rate at time `t` (diurnal modulation applied).
+    fn rate_at(&self, t: SimTime) -> f64 {
+        let a = self.spec.diurnal_amplitude;
+        if a == 0.0 || self.spec.diurnal_period == SimTime::ZERO {
+            return self.spec.rate_per_sec;
+        }
+        let phase = 2.0 * std::f64::consts::PI * t.as_secs_f64()
+            / self.spec.diurnal_period.as_secs_f64();
+        self.spec.rate_per_sec * (1.0 + a * phase.sin())
+    }
+
+    /// Attribute an arrival to a tenant: inverse-CDF sample of the
+    /// continuous power-law mixture on [1, tenants+1). O(1) — the
+    /// population is never iterated or materialized.
+    fn sample_tenant(&mut self) -> u64 {
+        let n = self.spec.tenants;
+        let s = self.spec.skew;
+        let u = self.rng.gen_f64();
+        if s <= 1e-9 {
+            return 1 + (u * n as f64) as u64;
+        }
+        let top = (n + 1) as f64;
+        let x = if (s - 1.0).abs() < 1e-9 {
+            top.powf(u)
+        } else {
+            let a = 1.0 - s;
+            (1.0 + u * (top.powf(a) - 1.0)).powf(1.0 / a)
+        };
+        (x as u64).clamp(1, n)
+    }
+
+    /// Draw a job's width and duration.
+    fn sample_shape(&mut self) -> (u32, SimTime) {
+        let ranks = RANK_MENU[self.rng.gen_range(RANK_MENU.len() as u64) as usize];
+        let secs = self.rng.gen_exp(self.spec.mean_duration_secs).clamp(5.0, 240.0);
+        (ranks, SimTime::from_secs_f64(secs))
+    }
+
+    /// Next base arrival via Lewis–Shedler thinning against the peak
+    /// rate: candidates come at the peak-rate Poisson cadence and are
+    /// accepted with probability `rate(t) / peak`.
+    fn draw_base(&mut self) -> JobArrival {
+        let peak = self.spec.rate_per_sec * (1.0 + self.spec.diurnal_amplitude);
+        loop {
+            self.t = self.t + SimTime::from_secs_f64(self.rng.gen_exp(1.0 / peak));
+            if self.rng.gen_f64() < self.rate_at(self.t) / peak {
+                break;
+            }
+        }
+        let tenant = self.sample_tenant();
+        let (ranks, duration) = self.sample_shape();
+        JobArrival { at: self.t, tenant, ranks, duration, priority: 0, campaign: false }
+    }
+
+    /// The next arrival in time order (base arrivals merged with any
+    /// campaign follow-ups already scheduled).
+    pub fn next(&mut self) -> JobArrival {
+        if self.next_base.is_none() {
+            let base = self.draw_base();
+            if self.rng.gen_bool(self.spec.campaign_prob) {
+                let burst =
+                    1 + self.rng.gen_range(self.spec.campaign_jobs.max(1) as u64) as u32;
+                for i in 1..=burst {
+                    let (ranks, dur) = self.sample_shape();
+                    self.seq += 1;
+                    self.pending.push(Reverse(Pending {
+                        at: base.at
+                            + SimTime::from_nanos(
+                                self.spec.campaign_spacing.as_nanos() * i as u64,
+                            ),
+                        seq: self.seq,
+                        tenant: base.tenant,
+                        ranks,
+                        dur,
+                    }));
+                }
+            }
+            self.next_base = Some(base);
+        }
+        let base_at = self.next_base.as_ref().expect("just ensured").at;
+        if let Some(Reverse(p)) = self.pending.peek().copied() {
+            if p.at <= base_at {
+                self.pending.pop();
+                return JobArrival {
+                    at: p.at,
+                    tenant: p.tenant,
+                    ranks: p.ranks,
+                    duration: p.dur,
+                    priority: 2,
+                    campaign: true,
+                };
+            }
+        }
+        self.next_base.take().expect("just ensured")
+    }
+
+    /// Convenience: the next `n` arrivals.
+    pub fn take(&mut self, n: usize) -> Vec<JobArrival> {
+        (0..n).map(|_| self.next()).collect()
+    }
+}
+
+/// Order-sensitive FNV-style fingerprint of an arrival stream — the
+/// determinism check the tenancy bench and tests compare across
+/// same-seed runs (as `ext_faults` does with metric counters).
+pub fn stream_fingerprint(arrivals: &[JobArrival]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for a in arrivals {
+        for v in [
+            a.at.as_nanos(),
+            a.tenant,
+            a.ranks as u64,
+            a.duration.as_nanos(),
+            a.priority as u64,
+            a.campaign as u64,
+        ] {
+            h ^= v;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Per-tenant arrival counts (stable order) — the coarse fingerprint
+/// for population-shape assertions.
+pub fn tenant_counts(arrivals: &[JobArrival]) -> BTreeMap<u64, u64> {
+    let mut counts = BTreeMap::new();
+    for a in arrivals {
+        *counts.entry(a.tenant).or_insert(0) += 1;
+    }
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrivals_are_time_ordered_and_in_population_range() {
+        let mut g = ArrivalGen::new(PopulationSpec::new(50, 7));
+        let xs = g.take(500);
+        let mut last = SimTime::ZERO;
+        for a in &xs {
+            assert!(a.at >= last, "arrivals must be time-ordered");
+            last = a.at;
+            assert!((1..=50).contains(&a.tenant), "tenant {} out of range", a.tenant);
+            assert!(a.ranks >= 1 && a.duration >= SimTime::from_secs(5));
+        }
+    }
+
+    #[test]
+    fn same_seed_same_stream_different_seed_differs() {
+        let a = ArrivalGen::new(PopulationSpec::new(1000, 42)).take(400);
+        let b = ArrivalGen::new(PopulationSpec::new(1000, 42)).take(400);
+        assert_eq!(a, b, "same seed must replay byte-identically");
+        assert_eq!(stream_fingerprint(&a), stream_fingerprint(&b));
+        let c = ArrivalGen::new(PopulationSpec::new(1000, 43)).take(400);
+        assert_ne!(stream_fingerprint(&a), stream_fingerprint(&c));
+    }
+
+    #[test]
+    fn skewed_population_concentrates_load_on_the_head() {
+        let mut spec = PopulationSpec::new(10_000, 5);
+        spec.skew = 1.2;
+        let xs = ArrivalGen::new(spec).take(2000);
+        let counts = tenant_counts(&xs);
+        let head: u64 = counts.iter().filter(|(t, _)| **t <= 10).map(|(_, c)| c).sum();
+        assert!(
+            head > 2000 / 10,
+            "top-10 tenants of 10k must draw far more than their uniform share: {head}"
+        );
+    }
+
+    #[test]
+    fn uniform_population_spreads_load() {
+        let mut spec = PopulationSpec::new(10, 5);
+        spec.skew = 0.0;
+        spec.campaign_prob = 0.0;
+        let xs = ArrivalGen::new(spec).take(2000);
+        let counts = tenant_counts(&xs);
+        assert!(counts.len() >= 9, "a uniform 10-tenant draw must hit nearly all");
+        for (_, c) in counts {
+            assert!(c > 100, "uniform tenants must each get a real share: {c}");
+        }
+    }
+
+    #[test]
+    fn huge_population_is_cheap_and_stateless() {
+        // 10M tenants: the generator must not allocate per tenant
+        let mut g = ArrivalGen::new(PopulationSpec::new(10_000_000, 9));
+        let xs = g.take(1000);
+        assert_eq!(xs.len(), 1000);
+        assert!(xs.iter().all(|a| a.tenant >= 1 && a.tenant <= 10_000_000));
+    }
+
+    #[test]
+    fn campaigns_burst_on_one_tenant_at_priority_two() {
+        let mut spec = PopulationSpec::new(100, 11);
+        spec.campaign_prob = 1.0; // every arrival campaigns
+        spec.campaign_jobs = 4;
+        let xs = ArrivalGen::new(spec).take(50);
+        let bursts: Vec<&JobArrival> = xs.iter().filter(|a| a.campaign).collect();
+        assert!(!bursts.is_empty(), "campaign_prob 1.0 must produce bursts");
+        for b in &bursts {
+            assert_eq!(b.priority, 2, "campaign jobs arrive urgent");
+        }
+        // a campaign's jobs stick to the spawning tenant: every campaign
+        // job's tenant must also appear as a base arrival's tenant
+        for b in &bursts {
+            assert!(
+                xs.iter().any(|a| !a.campaign && a.tenant == b.tenant),
+                "campaign job for tenant {} has no base arrival",
+                b.tenant
+            );
+        }
+    }
+
+    #[test]
+    fn diurnal_modulation_shifts_density_between_half_periods() {
+        let mut spec = PopulationSpec::new(100, 13);
+        spec.diurnal_amplitude = 0.9;
+        spec.diurnal_period = SimTime::from_secs(1000);
+        spec.campaign_prob = 0.0;
+        spec.rate_per_sec = 1.0;
+        let xs = ArrivalGen::new(spec).take(2000);
+        // first half-period (sin > 0) must be denser than the second
+        let mut peak = 0u64;
+        let mut trough = 0u64;
+        for a in &xs {
+            let t = a.at.as_secs_f64() % 1000.0;
+            if t < 500.0 {
+                peak += 1;
+            } else {
+                trough += 1;
+            }
+        }
+        assert!(
+            peak > trough + trough / 2,
+            "peak half must clearly out-draw the trough: {peak} vs {trough}"
+        );
+    }
+}

@@ -1,0 +1,207 @@
+//! Fair-share dispatch: order the queue by decayed per-tenant usage,
+//! and cap the autoscaler's demand signal by tenant share.
+//!
+//! The `fairshare` [`PolicyKind`](crate::cluster::policy::PolicyKind)
+//! is classic max-min fair queueing over the
+//! [`UsageLedger`](crate::tenancy::ledger::UsageLedger): the queued job
+//! whose tenant has the **lowest normalized decayed usage** is the
+//! policy's head (FIFO within a tenant, since all of a tenant's queued
+//! jobs see the same usage and ids break the tie in submit order). A
+//! tenant that just burned a thousand slot-seconds sinks behind the
+//! long tail of light tenants until the ledger's half-life forgets.
+//!
+//! Blocked heads compose with the **EASY shadow-time machinery**
+//! (`cluster/policy.rs`): the fair-share head gets a reservation
+//! computed from the running jobs' predicted finishes, and other jobs
+//! (in fair-share order) may jump ahead only if they are predicted to
+//! finish before that reservation or fit the slots it leaves spare. As
+//! with EASY, nothing is cached — every decision recomputes from live
+//! state, so a fault that kills a prediction cannot wedge the head.
+
+use crate::cluster::policy::{shadow_time, Decision, QueuedJob, RunningJob};
+use crate::sim::SimTime;
+use std::cmp::Ordering;
+
+/// Fair-share dispatch order: lowest decayed usage first, submit order
+/// (job id) within a tenant and across exact ties.
+pub fn fair_cmp(a: &QueuedJob, b: &QueuedJob) -> Ordering {
+    a.usage.total_cmp(&b.usage).then(a.id.cmp(&b.id))
+}
+
+/// Pick the next action for the fair-share policy. Mirrors the EASY
+/// decision procedure with the queue re-ordered by [`fair_cmp`].
+pub fn decide_fairshare(
+    now: SimTime,
+    queue: &[QueuedJob],
+    running: &[RunningJob],
+    free: u32,
+) -> Decision {
+    let head_idx = (0..queue.len())
+        .min_by(|&a, &b| fair_cmp(&queue[a], &queue[b]))
+        .expect("caller checked queue non-empty");
+    let head = &queue[head_idx];
+    if head.ranks <= free {
+        // the fair-share head is the policy's head of queue, not a
+        // backfill, even when it overtakes older submissions
+        return Decision::Start { idx: head_idx, backfilled: false };
+    }
+    let mut order: Vec<usize> = (0..queue.len()).filter(|&i| i != head_idx).collect();
+    order.sort_by(|&a, &b| fair_cmp(&queue[a], &queue[b]));
+    match shadow_time(now, head.ranks, running, free) {
+        Some((shadow, extra)) => {
+            for i in order {
+                let j = &queue[i];
+                if j.ranks <= free && (now + j.est <= shadow || j.ranks <= extra) {
+                    return Decision::Start { idx: i, backfilled: true };
+                }
+            }
+            Decision::Wait
+        }
+        // The head is waiting on scale-up (even a drained cluster cannot
+        // seat it): keep the pool busy greedily, fair-share order.
+        None => {
+            for i in order {
+                if queue[i].ranks <= free {
+                    return Decision::Start { idx: i, backfilled: true };
+                }
+            }
+            Decision::Wait
+        }
+    }
+}
+
+/// Share-capped aggregate queue demand for the autoscaler.
+///
+/// Input: one entry per tenant with queued work — `(weighted_slots,
+/// widest_job_ranks)`, where `weighted_slots` is the tenant's
+/// priority-weighted queued-slot sum. Each tenant's contribution is
+/// capped at **twice the equal share** of the aggregate (so one heavy
+/// tenant flooding the queue cannot force unbounded scale-up — the
+/// pool provisions for at most 2x its fair slice), but never below the
+/// tenant's widest single job (that width is a hard requirement for
+/// the job ever to start, capacity-wise). With a single active tenant
+/// the cap is `2 x total`, i.e. no cap — the pre-tenancy signal,
+/// byte for byte.
+pub fn share_weighted_demand(
+    per_tenant: &std::collections::BTreeMap<u64, (f64, u32)>,
+) -> u32 {
+    if per_tenant.is_empty() {
+        return 0;
+    }
+    let total: f64 = per_tenant.values().map(|(w, _)| *w).sum();
+    let cap = 2.0 * total / per_tenant.len() as f64;
+    per_tenant
+        .values()
+        .map(|&(w, widest)| w.min(cap).max(widest as f64).ceil() as u32)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ids::JobId;
+    use std::collections::BTreeMap;
+
+    fn qj(id: u32, ranks: u32, est_secs: u64, tenant: u64, usage: f64) -> QueuedJob {
+        QueuedJob {
+            id: JobId::new(id),
+            ranks,
+            priority: 0,
+            est: SimTime::from_secs(est_secs),
+            tenant,
+            usage,
+        }
+    }
+
+    fn rj(id: u32, ranks: u32, finish_secs: u64) -> RunningJob {
+        RunningJob {
+            id: JobId::new(id),
+            ranks,
+            priority: 0,
+            predicted_finish: SimTime::from_secs(finish_secs),
+        }
+    }
+
+    #[test]
+    fn lowest_usage_tenant_wins_fifo_within_tenant() {
+        // tenant 1 burned the cluster; tenant 2 is fresh
+        let queue = [
+            qj(0, 8, 30, 1, 900.0),
+            qj(1, 8, 30, 1, 900.0),
+            qj(2, 8, 30, 2, 0.0),
+        ];
+        let d = decide_fairshare(SimTime::ZERO, &queue, &[], 8);
+        assert_eq!(d, Decision::Start { idx: 2, backfilled: false });
+        // within tenant 1, submit order holds
+        let queue = [qj(5, 8, 30, 1, 900.0), qj(3, 8, 30, 1, 900.0)];
+        let d = decide_fairshare(SimTime::ZERO, &queue, &[], 8);
+        assert_eq!(d, Decision::Start { idx: 1, backfilled: false });
+    }
+
+    #[test]
+    fn blocked_head_gets_an_easy_style_reservation() {
+        // fair-share head (tenant 2, usage 0) needs 24 of 32; job9 frees
+        // 20 at t=100 -> shadow t=100 with 8 spare
+        let running = [rj(9, 20, 100)];
+        // a 30s filler beats the reservation: admitted
+        let queue = [qj(0, 24, 60, 2, 0.0), qj(1, 10, 30, 1, 500.0)];
+        assert_eq!(
+            decide_fairshare(SimTime::ZERO, &queue, &running, 12),
+            Decision::Start { idx: 1, backfilled: true }
+        );
+        // a 200s filler outlives it and exceeds the 8 spare: must wait
+        let queue = [qj(0, 24, 60, 2, 0.0), qj(1, 10, 200, 1, 500.0)];
+        assert_eq!(
+            decide_fairshare(SimTime::ZERO, &queue, &running, 12),
+            Decision::Wait
+        );
+        // 8 ranks fits the spare slots even past the shadow: admitted
+        let queue = [qj(0, 24, 60, 2, 0.0), qj(1, 8, 200, 1, 500.0)];
+        assert_eq!(
+            decide_fairshare(SimTime::ZERO, &queue, &running, 12),
+            Decision::Start { idx: 1, backfilled: true }
+        );
+    }
+
+    #[test]
+    fn head_waiting_on_scale_up_does_not_idle_the_pool() {
+        // head needs 48 but draining everything frees 32: no reservation
+        let running = [rj(9, 20, 100)];
+        let queue = [qj(0, 48, 60, 2, 0.0), qj(1, 8, 500, 1, 500.0)];
+        assert_eq!(
+            decide_fairshare(SimTime::ZERO, &queue, &running, 12),
+            Decision::Start { idx: 1, backfilled: true }
+        );
+    }
+
+    #[test]
+    fn share_cap_bounds_a_flooding_tenant() {
+        let mut per: BTreeMap<u64, (f64, u32)> = BTreeMap::new();
+        per.insert(1, (1000.0, 24)); // the hog
+        for t in 2..=10u64 {
+            per.insert(t, (10.0, 8));
+        }
+        // total 1090 over 10 tenants -> cap 218: the hog contributes 218
+        let got = share_weighted_demand(&per);
+        assert_eq!(got, 218 + 9 * 10);
+        // a single tenant is never capped (2x its own total)
+        let mut solo: BTreeMap<u64, (f64, u32)> = BTreeMap::new();
+        solo.insert(1, (1000.0, 24));
+        assert_eq!(share_weighted_demand(&solo), 1000);
+        assert_eq!(share_weighted_demand(&BTreeMap::new()), 0);
+    }
+
+    #[test]
+    fn share_cap_never_starves_a_single_wide_job() {
+        // tenant 1's one 36-rank job among many light tenants: the cap
+        // falls below 36 but the widest-job floor keeps it demandable
+        let mut per: BTreeMap<u64, (f64, u32)> = BTreeMap::new();
+        per.insert(1, (36.0, 36));
+        for t in 2..=12u64 {
+            per.insert(t, (2.0, 2));
+        }
+        // total 58, cap ~9.7 — but tenant 1 still contributes its 36
+        let got = share_weighted_demand(&per);
+        assert_eq!(got, 36 + 11 * 2);
+    }
+}

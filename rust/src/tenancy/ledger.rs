@@ -1,0 +1,192 @@
+//! Per-tenant usage ledger: slot-second accounting with exponential
+//! half-life decay, plus the quota knobs the head enforces.
+//!
+//! The ledger is the memory behind fair-share scheduling: every second a
+//! tenant's jobs hold reserved slots, the tenant is charged that many
+//! slot-seconds; the balance then decays with a configurable half-life,
+//! so a tenant that burned the cluster yesterday outranks one that
+//! burned it an hour ago, and both eventually forget. Accounts are
+//! created lazily on first charge — a population of 100k mostly-idle
+//! tenants costs memory only for the tenants that actually ran.
+
+use crate::sim::SimTime;
+use std::collections::HashMap;
+
+/// What happens to a submission that would push its tenant over the
+/// queued-job quota.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuotaAction {
+    /// Record the job as permanently failed with a quota reason.
+    Reject,
+    /// Park the job in a per-tenant holding pen; it is admitted (FIFO
+    /// within the tenant, tenants in id order) as soon as the tenant is
+    /// back under quota. Deferred jobs are *not* demand: they do not
+    /// count toward the autoscaler's queued-slot signal.
+    Defer,
+}
+
+/// Per-tenant limits, enforced uniformly for every tenant (including
+/// the untenanted id 0). The defaults are unlimited, which reproduces
+/// the pre-tenancy cluster exactly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TenantQuotas {
+    /// Most slots one tenant's running jobs may hold at once. A queued
+    /// job whose start would exceed this is invisible to the dispatch
+    /// policy until enough of the tenant's work finishes — it never
+    /// blocks other tenants' jobs behind it.
+    pub max_running_slots: u32,
+    /// Most jobs one tenant may have waiting in the queue. Submissions
+    /// past the cap are rejected or deferred per [`QuotaAction`].
+    pub max_queued_jobs: usize,
+    /// Over-quota disposition for submissions.
+    pub over_quota: QuotaAction,
+}
+
+impl Default for TenantQuotas {
+    fn default() -> Self {
+        Self {
+            max_running_slots: u32::MAX,
+            max_queued_jobs: usize::MAX,
+            over_quota: QuotaAction::Reject,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Account {
+    /// Decayed slot-seconds as of `as_of`.
+    usage: f64,
+    as_of: SimTime,
+}
+
+/// Decay multiplier for a balance left untouched for `dt`.
+fn decay(half_life: SimTime, dt: SimTime) -> f64 {
+    if half_life == SimTime::ZERO {
+        return 0.0;
+    }
+    (-(dt.as_secs_f64() / half_life.as_secs_f64())).exp2()
+}
+
+/// The ledger: lazily-created per-tenant accounts of decayed
+/// slot-second usage.
+#[derive(Debug, Clone)]
+pub struct UsageLedger {
+    /// Time for an untouched balance to halve. `ZERO` means no memory
+    /// at all (every read sees 0 — fair-share degenerates to FIFO).
+    pub half_life: SimTime,
+    accounts: HashMap<u64, Account>,
+}
+
+impl Default for UsageLedger {
+    /// One-hour half-life: long enough to remember a burst, short
+    /// enough that an hour of idleness roughly clears the slate.
+    fn default() -> Self {
+        Self::new(SimTime::from_secs(3600))
+    }
+}
+
+impl UsageLedger {
+    pub fn new(half_life: SimTime) -> Self {
+        Self { half_life, accounts: HashMap::new() }
+    }
+
+    /// Add `slot_seconds` of usage for a tenant at `now`, decaying the
+    /// existing balance first. Negative charges are ignored.
+    pub fn charge(&mut self, tenant: u64, slot_seconds: f64, now: SimTime) {
+        let hl = self.half_life;
+        let acct = self
+            .accounts
+            .entry(tenant)
+            .or_insert(Account { usage: 0.0, as_of: now });
+        let dt = now.saturating_sub(acct.as_of);
+        acct.usage = acct.usage * decay(hl, dt) + slot_seconds.max(0.0);
+        acct.as_of = now;
+    }
+
+    /// The tenant's decayed usage as seen at `now` (0 for tenants that
+    /// never ran). Pure read: nothing is mutated, so policies can
+    /// consult it freely mid-decision.
+    pub fn usage_at(&self, tenant: u64, now: SimTime) -> f64 {
+        match self.accounts.get(&tenant) {
+            Some(a) => a.usage * decay(self.half_life, now.saturating_sub(a.as_of)),
+            None => 0.0,
+        }
+    }
+
+    /// How many tenants currently hold an account (ran at least once
+    /// since the last [`UsageLedger::gc`]).
+    pub fn active_accounts(&self) -> usize {
+        self.accounts.len()
+    }
+
+    /// Drop accounts whose decayed balance at `now` has fallen to
+    /// `threshold` slot-seconds or below — the memory bound that keeps
+    /// a 100k-tenant population from accreting dead accounts forever.
+    pub fn gc(&mut self, now: SimTime, threshold: f64) {
+        let hl = self.half_life;
+        self.accounts.retain(|_, a| {
+            a.usage * decay(hl, now.saturating_sub(a.as_of)) > threshold
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decay_halves_after_one_half_life() {
+        let mut l = UsageLedger::new(SimTime::from_secs(600));
+        l.charge(1, 100.0, SimTime::ZERO);
+        assert_eq!(l.usage_at(1, SimTime::ZERO), 100.0);
+        let half = l.usage_at(1, SimTime::from_secs(600));
+        assert!((half - 50.0).abs() < 1e-9, "one half-life must halve: {half}");
+        let quarter = l.usage_at(1, SimTime::from_secs(1200));
+        assert!((quarter - 25.0).abs() < 1e-9, "two half-lives must quarter: {quarter}");
+    }
+
+    #[test]
+    fn charge_decays_the_prior_balance_first() {
+        let mut l = UsageLedger::new(SimTime::from_secs(600));
+        l.charge(7, 100.0, SimTime::ZERO);
+        l.charge(7, 10.0, SimTime::from_secs(600));
+        let got = l.usage_at(7, SimTime::from_secs(600));
+        assert!((got - 60.0).abs() < 1e-9, "50 decayed + 10 fresh: {got}");
+    }
+
+    #[test]
+    fn unknown_tenants_read_zero_and_negative_charges_are_ignored() {
+        let mut l = UsageLedger::default();
+        assert_eq!(l.usage_at(42, SimTime::from_secs(5)), 0.0);
+        l.charge(42, -10.0, SimTime::ZERO);
+        assert_eq!(l.usage_at(42, SimTime::ZERO), 0.0);
+    }
+
+    #[test]
+    fn zero_half_life_forgets_instantly() {
+        let mut l = UsageLedger::new(SimTime::ZERO);
+        l.charge(1, 100.0, SimTime::ZERO);
+        assert_eq!(l.usage_at(1, SimTime::from_secs(1)), 0.0);
+    }
+
+    #[test]
+    fn gc_drops_decayed_accounts() {
+        let mut l = UsageLedger::new(SimTime::from_secs(10));
+        l.charge(1, 100.0, SimTime::ZERO);
+        l.charge(2, 1e6, SimTime::ZERO);
+        assert_eq!(l.active_accounts(), 2);
+        // after 20 half-lives tenant 1 is below a 0.01 threshold
+        l.gc(SimTime::from_secs(200), 0.01);
+        assert_eq!(l.active_accounts(), 1);
+        assert_eq!(l.usage_at(1, SimTime::from_secs(200)), 0.0);
+        assert!(l.usage_at(2, SimTime::from_secs(200)) > 0.0);
+    }
+
+    #[test]
+    fn default_quotas_are_unlimited_reject() {
+        let q = TenantQuotas::default();
+        assert_eq!(q.max_running_slots, u32::MAX);
+        assert_eq!(q.max_queued_jobs, usize::MAX);
+        assert_eq!(q.over_quota, QuotaAction::Reject);
+    }
+}

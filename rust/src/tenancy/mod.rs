@@ -1,0 +1,37 @@
+//! Multi-tenant workload layer: who submits jobs, how fast, and how the
+//! scheduler keeps the cluster fair between them.
+//!
+//! The paper's virtual cluster exists so *many* scientists can share one
+//! pool of hardware; this module supplies the missing notion of a user:
+//!
+//! * [`arrivals`] — a seeded, deterministic **open-loop workload
+//!   source**: a tenant population with power-law-skewed per-tenant
+//!   Poisson rates, diurnal load modulation and bursty "campaign"
+//!   episodes. The generator samples the *mixture* (O(1) per arrival),
+//!   never iterates the population, so it scales from 10 to 100k+
+//!   tenants without materializing per-tenant state for idle users.
+//! * [`ledger`] — per-tenant **slot-second accounting** with
+//!   exponential half-life decay, plus per-tenant quotas (max running
+//!   slots, max queued jobs; over-quota submissions are rejected or
+//!   deferred deterministically).
+//! * [`fairshare`] — the `fairshare`
+//!   [`SchedulePolicy`](crate::cluster::policy::SchedulePolicy): the
+//!   queue is ordered by decayed-usage fair-share factor (classic
+//!   max-min style — lowest normalized usage first, FIFO within a
+//!   tenant), composed with the EASY backfill shadow-time machinery,
+//!   and the autoscaler's demand signal is share-capped so one heavy
+//!   tenant cannot force unbounded scale-up.
+//!
+//! Jobs carry their tenant on [`JobSpec`](crate::cluster::head::JobSpec)
+//! end to end: fault requeues and preemptions keep the attribution, so
+//! reruns charge the right ledger account. Tenant id `0` is reserved
+//! for untenanted (system/anonymous) work and behaves exactly like the
+//! pre-tenancy cluster under the default unlimited quotas.
+
+pub mod arrivals;
+pub mod fairshare;
+pub mod ledger;
+
+pub use arrivals::{stream_fingerprint, ArrivalGen, JobArrival, PopulationSpec};
+pub use fairshare::{decide_fairshare, share_weighted_demand};
+pub use ledger::{QuotaAction, TenantQuotas, UsageLedger};

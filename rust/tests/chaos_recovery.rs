@@ -103,6 +103,73 @@ fn hung_node_drops_out_and_rejoins_via_anti_entropy() {
     assert_eq!(vc.metrics().counter("machines_powered_on"), 3, "no reboot for a hang");
 }
 
+/// Correlated rack-level failure: a `rack_outage` plan kills every
+/// machine on one rack in the same tick. All affected jobs requeue,
+/// and the autoscaler replaces the rack's worth of capacity.
+#[test]
+fn rack_outage_requeues_jobs_and_replaces_the_racks_capacity() {
+    // 7 machines over 3 racks: rack0 = {head, m1, m2}, rack1 = {m3, m4,
+    // m5}, rack2 = {m6}. Rack 1 is all compute — the outage target.
+    let mut spec = fast_spec(7);
+    spec.racks = 3;
+    spec.autoscale.min_nodes = 6;
+    spec.autoscale.max_nodes = 6;
+    let mut vc = VirtualCluster::new(spec).unwrap();
+    vc.start();
+    assert!(
+        vc.advance_until(SimTime::from_secs(600), |st| {
+            st.head.slots_available() >= 72
+        }),
+        "all six compute nodes must come up"
+    );
+    // a full-width job holds slots on every node, rack 1 included
+    vc.submit("spans-racks", 72, JobKind::Synthetic { duration: SimTime::from_secs(100) });
+    assert!(vc.advance_until(SimTime::from_secs(30), |st| st.head.running.len() == 1));
+    let powered_before = vc.metrics().counter("machines_powered_on");
+
+    vc.inject_faults(&FaultPlan::rack_outage(1, SimTime::from_secs(1)));
+    assert!(
+        vc.advance_until(SimTime::from_secs(30), |st| st.head.running.is_empty()),
+        "the spanning job must fail out of the running pool"
+    );
+    assert_eq!(vc.metrics().counter("rack_outages_injected"), 1);
+    assert_eq!(
+        vc.metrics().counter("machines_killed"),
+        3,
+        "the whole rack must die in the same tick"
+    );
+    assert_eq!(
+        vc.metrics().counter("jobs_requeued"),
+        1,
+        "every affected job must requeue (once — later kills are no-ops on it)"
+    );
+    assert!(
+        vc.state.head.reserved_addrs().is_empty(),
+        "the dead rack's reservations must be released"
+    );
+
+    // the autoscaler boots replacements until the rack's capacity is
+    // back, and the requeued job reruns to completion
+    assert!(
+        vc.advance_until(SimTime::from_secs(900), |st| {
+            st.head.slots_available() >= 72
+        }),
+        "capacity never recovered after the rack outage"
+    );
+    assert!(
+        vc.metrics().counter("machines_powered_on") >= powered_before + 3,
+        "three replacement machines must boot"
+    );
+    assert!(
+        vc.advance_until(SimTime::from_secs(900), |st| !st.head.completed.is_empty()),
+        "the requeued job never completed"
+    );
+    assert!(matches!(
+        vc.completed_jobs()[0].state,
+        JobState::Done { .. }
+    ));
+}
+
 /// Same seed, same chaos: two runs of one seeded crash schedule must
 /// produce identical counter fingerprints and account for every job.
 #[test]
