@@ -11,6 +11,8 @@
 //!                 [--sim-seconds S]   (drain deadline; default 4x duration)
 //! vhpc chaos      [--jobs N] [--machines M] [--seed S] [--mtbf SECS]
 //!                 [--max-retries K] [--sim-seconds S]
+//! vhpc ha         [--jobs N] [--machines M] [--crash-at S] [--lock-ttl S]
+//!                 [--snapshot-every N] [--ticks T]   (drain deadline, 1s ticks)
 //! vhpc build      [--dockerfile F]
 //! vhpc bench-net  [--bridge MODE]
 //! vhpc version
@@ -315,6 +317,73 @@ fn cmd_chaos(flags: HashMap<String, String>) -> Result<(), String> {
     Ok(())
 }
 
+/// Head-node failover drill: run the canonical job mix on an
+/// HA-enabled cluster, crash the head mid-trace, and report the
+/// failover MTTR, WAL/snapshot activity and that nothing was lost.
+fn cmd_ha(flags: HashMap<String, String>) -> Result<(), String> {
+    let mut spec = load_spec(&flags)?;
+    if !flags.contains_key("machines") && !flags.contains_key("config") {
+        // no explicit topology: the same 8-machine cluster as `vhpc
+        // mix`, fast boots so the quick-mode CI smoke stays quick
+        let bridge = spec.bridge;
+        spec = crate::cluster::mix::mix_spec(SimTime::from_secs(10));
+        spec.bridge = bridge;
+    }
+    spec.autoscale.min_nodes = spec
+        .autoscale
+        .min_nodes
+        .max(1)
+        .min(spec.autoscale.max_nodes.max(1));
+    let jobs: u32 = flag(&flags, "jobs", 6u32)?;
+    let crash_at: u64 = flag(&flags, "crash-at", 40u64)?;
+    let lock_ttl: u64 = flag(&flags, "lock-ttl", 5u64)?;
+    let snapshot_every: u64 = flag(&flags, "snapshot-every", 64u64)?;
+    // drain deadline in scheduler ticks (1 tick = 1 virtual second)
+    let ticks: u64 = flag(&flags, "ticks", 900u64)?;
+    spec.ha.enabled = true;
+    spec.ha.lock_ttl = SimTime::from_secs(lock_ttl);
+    spec.ha.snapshot_every = snapshot_every;
+
+    let cap_slots = spec.max_advertisable_slots();
+    if cap_slots == 0 {
+        return Err("cluster has no compute capacity (needs >= 2 machines)".into());
+    }
+    let trace: Vec<(u32, u64)> =
+        crate::cluster::mix::bursty_trace(24.min(cap_slots), jobs as usize)
+            .into_iter()
+            .map(|(ranks, secs)| (ranks.min(cap_slots), secs))
+            .collect();
+    let warmup = (spec.autoscale.min_nodes * spec.slots_per_node).clamp(1, cap_slots);
+    println!(
+        "ha drill: {jobs} jobs, head crash at +{crash_at}s, lock ttl {lock_ttl}s, \
+         snapshot every {snapshot_every} wal appends"
+    );
+    let (o, vc) = crate::ha::run_ha_trace(
+        spec,
+        &trace,
+        Some(SimTime::from_secs(crash_at)),
+        warmup,
+        ticks,
+    )
+    .map_err(|e| e.to_string())?;
+    println!(
+        "t={}  jobs done: {}/{}  head crashes: {}  takeovers: {}  requeues: {} (failover charges no retry budget)",
+        vc.now(),
+        o.jobs_completed,
+        o.jobs_submitted,
+        o.head_crashes,
+        o.takeovers,
+        o.requeues,
+    );
+    println!(
+        "failover MTTR: mean {:.1}s  max {:.1}s   wal appends: {}  snapshots: {}  replayed at takeover: {}",
+        o.failover_mean, o.failover_max, o.wal_appends, o.snapshots, o.replayed_events
+    );
+    println!("makespan {:.1}s", o.makespan);
+    println!("--- metrics ---\n{}", vc.metrics().render());
+    Ok(())
+}
+
 fn cmd_build(flags: HashMap<String, String>) -> Result<(), String> {
     let text = match flags.get("dockerfile") {
         Some(path) => std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?,
@@ -385,6 +454,7 @@ pub fn main() -> i32 {
         "mix" => parse_flags(rest).and_then(cmd_mix),
         "tenants" => parse_flags(rest).and_then(cmd_tenants),
         "chaos" => parse_flags(rest).and_then(cmd_chaos),
+        "ha" => parse_flags(rest).and_then(cmd_ha),
         "build" => parse_flags(rest).and_then(cmd_build),
         "bench-net" => parse_flags(rest).and_then(cmd_bench_net),
         "help" | "--help" | "-h" => {
@@ -395,6 +465,7 @@ pub fn main() -> i32 {
                  vhpc mix       [--jobs N] [--machines M] [--max-concurrent K] [--policy fifo|easy|priority|fairshare] [--racks N] [--sim-seconds S]\n  \
                  vhpc tenants   [--tenants N] [--policy fifo|easy|priority|fairshare] [--duration S] [--rate R] [--skew S] [--seed S] [--max-queued N] [--defer-over-quota true|false] [--sim-seconds S]\n  \
                  vhpc chaos     [--jobs N] [--machines M] [--seed S] [--mtbf SECS] [--max-retries K] [--sim-seconds S]\n  \
+                 vhpc ha        [--jobs N] [--machines M] [--crash-at S] [--lock-ttl S] [--snapshot-every N] [--ticks T]\n  \
                  vhpc build     [--dockerfile F]\n  \
                  vhpc bench-net [--bridge docker0|bridge0|host]\n  \
                  vhpc version"

@@ -42,7 +42,7 @@ use crate::vnet::addr::Ipv4;
 use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
 
 /// What kind of work a job is.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum JobKind {
     /// Real distributed Jacobi solve (PJRT compute on rank threads).
     Jacobi { px: usize, py: usize, tile: usize, steps: usize },
@@ -66,7 +66,7 @@ pub const JACOBI_CHECKPOINT_STEPS: usize = 20;
 pub const JACOBI_RESIDUAL_CHECK_STEPS: usize = 20;
 
 /// A submitted job.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct JobSpec {
     pub id: JobId,
     pub name: String,
@@ -250,6 +250,12 @@ pub struct Head {
     /// When each job first lost a node — MTTR is measured from here to
     /// the job's eventual completion. Cleared on completion/abandonment.
     pub first_failed_at: HashMap<JobId, SimTime>,
+    /// In-memory buffer of not-yet-flushed WAL events (`None` = HA
+    /// journaling off, the default — zero cost on non-HA clusters).
+    /// Mutation methods push into it; the cluster drains it into the
+    /// replicated log at the end of every engine event via
+    /// [`Head::take_journal`].
+    journal: Option<Vec<crate::ha::wal::WalEvent>>,
 }
 
 impl Default for Head {
@@ -283,6 +289,38 @@ impl Head {
             attempts: HashMap::new(),
             jacobi_progress: HashMap::new(),
             first_failed_at: HashMap::new(),
+            journal: None,
+        }
+    }
+
+    /// Turn on HA journaling: every subsequent state mutation buffers a
+    /// [`WalEvent`](crate::ha::wal::WalEvent) for the cluster to flush
+    /// into the replicated log.
+    pub fn enable_journal(&mut self) {
+        if self.journal.is_none() {
+            self.journal = Some(Vec::new());
+        }
+    }
+
+    pub fn journal_enabled(&self) -> bool {
+        self.journal.is_some()
+    }
+
+    /// Drain the buffered WAL events (empty when journaling is off).
+    pub fn take_journal(&mut self) -> Vec<crate::ha::wal::WalEvent> {
+        self.journal.as_mut().map(std::mem::take).unwrap_or_default()
+    }
+
+    /// Append a cluster-level event (launch, completion, terminal
+    /// failure) into the journal — the head's own mutations log
+    /// themselves.
+    pub(crate) fn log_event(&mut self, ev: crate::ha::wal::WalEvent) {
+        self.log(ev);
+    }
+
+    fn log(&mut self, ev: crate::ha::wal::WalEvent) {
+        if let Some(j) = self.journal.as_mut() {
+            j.push(ev);
         }
     }
 
@@ -376,6 +414,13 @@ impl Head {
     /// and would sit invisible forever. Deterministic — the decision
     /// depends only on current queue/pen contents and the quota config.
     pub fn submit(&mut self, spec: JobSpec, now: SimTime) -> SubmitOutcome {
+        if self.journal.is_some() {
+            // log the arrival, not the outcome: replay re-runs this very
+            // quota machinery against identical state, so queued /
+            // deferred / rejected all reproduce
+            let ev = crate::ha::wal::WalEvent::Submitted { at: now, spec: spec.clone() };
+            self.log(ev);
+        }
         let tenant = spec.tenant;
         if spec.ranks > self.quotas.max_running_slots {
             return SubmitOutcome::Rejected {
@@ -509,10 +554,17 @@ impl Head {
             })
             .collect();
         charges.sort_by_key(|&(id, _, _)| id);
+        let charged = !charges.is_empty();
         for (_, tenant, slot_seconds) in charges {
             self.ledger.charge(tenant, slot_seconds, now);
         }
         self.last_accrued = now;
+        if charged {
+            // empty accruals (idle pool) only advance the high-water
+            // mark and need no log entry: the next charged interval's
+            // per-job overlap clamps to each job's start either way
+            self.log(crate::ha::wal::WalEvent::Accrued { at: now });
+        }
         // bound ledger memory: once the account table outgrows a
         // working set, drop accounts whose decayed balance is
         // negligible (deterministic — purely a function of `now`)
@@ -529,7 +581,9 @@ impl Head {
     /// its running-slot quota are invisible to the policy, so an
     /// over-quota job never blocks other tenants' work behind it.
     pub fn start_next(&mut self, now: SimTime) -> Option<StartedJob> {
-        self.admit_deferred();
+        if self.admit_deferred() > 0 {
+            self.log(crate::ha::wal::WalEvent::Admitted { at: now });
+        }
         self.accrue_usage(now);
         let mut preempted: Vec<JobId> = Vec::new();
         let mut preempt_wasted = SimTime::ZERO;
@@ -591,7 +645,7 @@ impl Head {
                         priority: j.priority,
                         est: j.estimated_duration(),
                         tenant: j.tenant,
-                        usage: self.ledger.usage_at(j.tenant, now),
+                        usage: self.ledger.normalized_usage_at(j.tenant, now),
                     }
                 })
                 .collect();
@@ -605,6 +659,7 @@ impl Head {
                     ranks: r.spec.ranks,
                     priority: r.spec.priority,
                     predicted_finish: r.predicted_finish(now),
+                    preempt_waste: self.rerun_plan(r, now).2,
                 })
                 .collect();
             running_view.sort_by_key(|r| r.id);
@@ -641,6 +696,18 @@ impl Head {
                             planned_duration: None,
                         },
                     );
+                    if self.journal.is_some() {
+                        // the one event replay installs directly instead
+                        // of re-deciding: the placement depended on the
+                        // historical hostfile, so the slice is logged
+                        let ev = crate::ha::wal::WalEvent::Dispatched {
+                            at: now,
+                            id: spec.id,
+                            attempt,
+                            slice: slice.clone(),
+                        };
+                        self.log(ev);
+                    }
                     return Some(StartedJob {
                         spec,
                         queued_at,
@@ -726,16 +793,17 @@ impl Head {
             self.reserved.remove(&id);
             self.first_failed_at.entry(id).or_insert(now);
             self.queue.push_front((rec.spec, rec.queued_at));
+            self.log(crate::ha::wal::WalEvent::Unlaunched { at: now, id });
         }
     }
 
-    /// Compute the rerun spec-kind plus the virtual work the rerun must
-    /// redo when `rec` leaves the running pool early, crediting partial
-    /// progress: synthetic jobs resume at their remaining duration
-    /// (continuous checkpointing, zero waste), Jacobi restarts from the
-    /// last completed residual checkpoint. Shared by the fault-requeue
-    /// and preemption paths so the two can never drift.
-    fn credited_rerun(&mut self, rec: &JobRecord, now: SimTime) -> (JobKind, SimTime) {
+    /// Pure half of [`Head::credited_rerun`]: the rerun kind, the
+    /// credited Jacobi steps (`None` for synthetic jobs, which
+    /// checkpoint continuously) and the virtual work the rerun must
+    /// redo — without mutating any progress bookkeeping. Also powers
+    /// the preemption cost model's per-victim waste estimate
+    /// ([`Head::preempt_waste`]).
+    fn rerun_plan(&self, rec: &JobRecord, now: SimTime) -> (JobKind, Option<usize>, SimTime) {
         let started = match rec.state {
             JobState::Running { started } => started,
             _ => now,
@@ -746,7 +814,7 @@ impl Head {
                 // the elapsed virtual time is credited in full: the rerun
                 // only owes the remainder
                 let remaining = duration.saturating_sub(elapsed).max(SimTime::from_secs(1));
-                (JobKind::Synthetic { duration: remaining }, SimTime::ZERO)
+                (JobKind::Synthetic { duration: remaining }, None, SimTime::ZERO)
             }
             JobKind::Jacobi { px, py, tile, steps } => {
                 // credit the steps executed this attempt, prorated by how
@@ -763,7 +831,6 @@ impl Head {
                 // steps the job had virtually performed when it stopped
                 let done_virtual = ((ran as f64 * frac) as usize).min(steps);
                 let credited = (done_virtual / ckpt * ckpt).min(steps);
-                *self.jacobi_progress.entry(rec.spec.id).or_insert(0) += credited;
                 // work past the checkpoint is redone by the rerun
                 let rerun_steps = done_virtual.saturating_sub(credited);
                 let wasted = match rec.planned_duration {
@@ -773,9 +840,36 @@ impl Head {
                     _ => SimTime::ZERO,
                 };
                 let remaining = (steps - credited).max(1);
-                (JobKind::Jacobi { px, py, tile, steps: remaining }, wasted)
+                (JobKind::Jacobi { px, py, tile, steps: remaining }, Some(credited), wasted)
             }
         }
+    }
+
+    /// Virtual work that would be redone if the running job `id` were
+    /// stopped at `now` — its distance past the last checkpoint. This is
+    /// the preemption cost model's victim-ranking signal: among
+    /// equally-low-priority victims the policy preempts the job closest
+    /// to a checkpoint (0 for synthetic jobs, which checkpoint
+    /// continuously, and for jobs not currently running).
+    pub fn preempt_waste(&self, id: JobId, now: SimTime) -> SimTime {
+        match self.running.get(&id) {
+            Some(rec) => self.rerun_plan(rec, now).2,
+            None => SimTime::ZERO,
+        }
+    }
+
+    /// Compute the rerun spec-kind plus the virtual work the rerun must
+    /// redo when `rec` leaves the running pool early, crediting partial
+    /// progress: synthetic jobs resume at their remaining duration
+    /// (continuous checkpointing, zero waste), Jacobi restarts from the
+    /// last completed residual checkpoint. Shared by the fault-requeue
+    /// and preemption paths so the two can never drift.
+    fn credited_rerun(&mut self, rec: &JobRecord, now: SimTime) -> (JobKind, SimTime) {
+        let (kind, credited, wasted) = self.rerun_plan(rec, now);
+        if let Some(credited) = credited {
+            *self.jacobi_progress.entry(rec.spec.id).or_insert(0) += credited;
+        }
+        (kind, wasted)
     }
 
     /// Advance a job's attempt generation (stale-completion guard).
@@ -803,6 +897,7 @@ impl Head {
         let attempt = self.bump_attempt(id);
         let spec = JobSpec { kind, ..rec.spec.clone() };
         self.queue.push_back((spec, rec.queued_at));
+        self.log(crate::ha::wal::WalEvent::Preempted { at: now, id });
         Some((attempt, wasted))
     }
 
@@ -814,6 +909,17 @@ impl Head {
     pub fn handle_lost_job(&mut self, id: JobId, now: SimTime, reason: &str) -> LossOutcome {
         if !self.running.contains_key(&id) {
             return LossOutcome::NotRunning;
+        }
+        if self.journal.is_some() {
+            // one event covers both outcomes: replay re-runs the retry
+            // budget below against identical state, so requeue-vs-abandon
+            // reproduces without being logged
+            let ev = crate::ha::wal::WalEvent::Lost {
+                at: now,
+                id,
+                reason: reason.to_string(),
+            };
+            self.log(ev);
         }
         // settle slot-seconds up to the loss: the doomed attempt's held
         // interval charges its tenant like any other run time
@@ -851,13 +957,15 @@ impl Head {
     /// share-capped by
     /// [`share_weighted_demand`](crate::tenancy::fairshare::share_weighted_demand),
     /// so one tenant flooding the queue cannot force unbounded
-    /// scale-up — it is provisioned for at most twice its equal share
-    /// of the aggregate (never below its widest single job). With one
+    /// scale-up — it is provisioned for at most twice its
+    /// weight-proportional share of the aggregate (never below its
+    /// widest single job; per-tenant share weights come from the
+    /// ledger's `[tenant_weights]` multipliers). With one
     /// active tenant and batch priorities this equals
     /// [`Head::queued_slots`], the pre-tenancy signal. Deferred jobs
     /// contribute nothing.
     pub fn weighted_queued_slots(&self) -> u32 {
-        let mut per_tenant: BTreeMap<u64, (f64, u32)> = BTreeMap::new();
+        let mut per_tenant: BTreeMap<u64, (f64, u32, f64)> = BTreeMap::new();
         for (j, _) in &self.queue {
             // per-job ceil, exactly as the pre-tenancy signal summed it,
             // so a single-tenant queue reproduces the old figure even
@@ -865,7 +973,9 @@ impl Head {
             let w = (j.ranks as f64
                 * crate::cluster::policy::priority_weight(j.priority))
             .ceil();
-            let entry = per_tenant.entry(j.tenant).or_insert((0.0, 0));
+            let entry = per_tenant
+                .entry(j.tenant)
+                .or_insert((0.0, 0, self.ledger.weight(j.tenant)));
             entry.0 += w;
             entry.1 = entry.1.max(j.ranks);
         }
@@ -886,6 +996,100 @@ impl Head {
             }
         }
         crate::tenancy::fairshare::share_weighted_demand(&per_tenant)
+    }
+
+    /// Host addresses in a running job's reserved slice (empty if the
+    /// job is not running). The HA takeover validates these against
+    /// the live container map before re-arming completions.
+    pub(crate) fn reserved_hosts(&self, id: JobId) -> Vec<Ipv4> {
+        self.reserved
+            .get(&id)
+            .map(|slice| slice.iter().map(|h| h.addr).collect())
+            .unwrap_or_default()
+    }
+
+    /// WAL-replay install of a logged dispatch: move the job out of the
+    /// queue onto the logged reservation, bypassing the policy — the
+    /// placement decision depended on the historical hostfile, which is
+    /// exactly why the slice is in the log. The subsequent `Launched`
+    /// entry fills in the planned duration and any launch-time result.
+    pub(crate) fn wal_replay_dispatch(
+        &mut self,
+        id: JobId,
+        attempt: u32,
+        slice: Vec<HostSlot>,
+        at: SimTime,
+    ) {
+        let Some(pos) = self.queue.iter().position(|(j, _)| j.id == id) else {
+            log::warn!("ha replay: dispatch of {id} not in queue, skipping");
+            return;
+        };
+        let Some((spec, queued_at)) = self.queue.remove(pos) else { return };
+        self.reserved.insert(id, slice);
+        self.running.insert(
+            id,
+            JobRecord {
+                spec,
+                state: JobState::Running { started: at },
+                result: None,
+                queued_at,
+                attempt,
+                planned_duration: None,
+            },
+        );
+    }
+
+    /// Export the head's complete dynamic state for an HA snapshot.
+    /// Hash maps are emitted sorted so identical state always encodes
+    /// byte-identically.
+    pub fn dump(&self) -> crate::ha::snapshot::HeadDump {
+        fn sorted<K: Ord + Copy, V: Clone>(m: &HashMap<K, V>) -> Vec<(K, V)> {
+            let mut v: Vec<(K, V)> = m.iter().map(|(&k, val)| (k, val.clone())).collect();
+            v.sort_by(|a, b| a.0.cmp(&b.0));
+            v
+        }
+        let mut running: Vec<JobRecord> = self.running.values().cloned().collect();
+        running.sort_by_key(|r| r.spec.id);
+        let mut deferred = Vec::new();
+        for (&tenant, pen) in &self.deferred {
+            for (spec, at) in pen {
+                deferred.push((tenant, spec.clone(), *at));
+            }
+        }
+        crate::ha::snapshot::HeadDump {
+            queue: self.queue.iter().cloned().collect(),
+            deferred,
+            running,
+            completed: self.completed.clone(),
+            reserved: sorted(&self.reserved),
+            retries: sorted(&self.retries),
+            attempts: sorted(&self.attempts),
+            jacobi_progress: sorted(&self.jacobi_progress),
+            first_failed_at: sorted(&self.first_failed_at),
+            last_accrued: self.last_accrued,
+            ledger_accounts: self.ledger.export_accounts(),
+        }
+    }
+
+    /// Install a snapshot produced by [`Head::dump`], replacing all
+    /// dynamic state. Config knobs (policy, quotas, intervals, ledger
+    /// half-life and weights) are untouched — a standby gets those from
+    /// its own deployment configuration.
+    pub fn restore(&mut self, d: crate::ha::snapshot::HeadDump) {
+        self.queue = d.queue.into_iter().collect();
+        self.deferred = BTreeMap::new();
+        for (tenant, spec, at) in d.deferred {
+            self.deferred.entry(tenant).or_default().push_back((spec, at));
+        }
+        self.running = d.running.into_iter().map(|r| (r.spec.id, r)).collect();
+        self.completed = d.completed;
+        self.reserved = d.reserved.into_iter().collect();
+        self.retries = d.retries.into_iter().collect();
+        self.attempts = d.attempts.into_iter().collect();
+        self.jacobi_progress = d.jacobi_progress.into_iter().collect();
+        self.first_failed_at = d.first_failed_at.into_iter().collect();
+        self.last_accrued = d.last_accrued;
+        self.ledger.restore_accounts(&d.ledger_accounts);
     }
 }
 
@@ -1359,11 +1563,7 @@ mod tests {
     #[test]
     fn topo_aware_head_packs_reservations_into_one_rack() {
         let mut h = Head::new();
-        h.policy = crate::cluster::policy::SchedulePolicy {
-            kind: PolicyKind::Fifo,
-            preemption: false,
-            topo_aware: true,
-        };
+        h.policy = crate::cluster::policy::SchedulePolicy::fifo().with_topo_aware(true);
         h.hostfile_text =
             "10.10.0.2 slots=12\n10.10.0.3 slots=12\n10.10.0.4 slots=12\n".into();
         // hosts .2 -> rack0, .3/.4 -> rack1
@@ -1461,6 +1661,98 @@ mod tests {
         let r = h.start_next(SimTime::from_secs(1)).unwrap();
         assert_eq!(r.spec.id, JobId::new(1), "fresh tenant must run first");
         assert!(!r.backfilled, "the fair-share head is not a backfill");
+    }
+
+    /// Preemption cost model, end to end through the head: among
+    /// equal-priority Jacobi victims the scheduler evicts the one at a
+    /// checkpoint, and the wasted-work counter shows the saving vs the
+    /// historical lowest-priority/youngest-first choice.
+    #[test]
+    fn cost_aware_preemption_minimizes_wasted_work() {
+        let run = |cost_aware: bool| -> (Vec<JobId>, SimTime) {
+            let mut h = Head::new();
+            h.policy =
+                crate::cluster::policy::SchedulePolicy::priority().with_cost_aware(cost_aware);
+            h.hostfile_text = "10.10.0.2 slots=12\n10.10.0.3 slots=12\n".into();
+            for id in 0..2u32 {
+                h.submit(
+                    JobSpec {
+                        id: JobId::new(id),
+                        name: format!("jac{id}"),
+                        ranks: 12,
+                        kind: JobKind::Jacobi { px: 3, py: 4, tile: 64, steps: 100 },
+                        priority: 0,
+                        tenant: 0,
+                    },
+                    SimTime::ZERO,
+                );
+            }
+            h.start_next(SimTime::ZERO).unwrap();
+            h.start_next(SimTime::ZERO).unwrap();
+            // job 0 planned 125s: at t=50 it has virtually done 40 steps
+            // — exactly checkpoint 40, zero waste if preempted
+            let rec = h.running.get_mut(&JobId::new(0)).unwrap();
+            rec.result = Some((100, 0.5));
+            rec.planned_duration = Some(SimTime::from_secs(125));
+            // job 1 planned 100s: at t=50 it has done 50 steps — 10 past
+            // checkpoint 40, a 10s rerun if preempted
+            let rec = h.running.get_mut(&JobId::new(1)).unwrap();
+            rec.result = Some((100, 0.5));
+            rec.planned_duration = Some(SimTime::from_secs(100));
+            assert_eq!(h.preempt_waste(JobId::new(0), SimTime::from_secs(50)), SimTime::ZERO);
+            assert_eq!(
+                h.preempt_waste(JobId::new(1), SimTime::from_secs(50)),
+                SimTime::from_secs(10)
+            );
+            h.submit(jobp(2, 12, 10, 5), SimTime::from_secs(50));
+            let r = h.start_next(SimTime::from_secs(50)).unwrap();
+            assert_eq!(r.spec.id, JobId::new(2), "urgent job must start");
+            (r.preempted, r.preempt_wasted)
+        };
+        let (victims, wasted) = run(true);
+        assert_eq!(victims, vec![JobId::new(0)], "cost model picks the checkpointed job");
+        assert_eq!(wasted, SimTime::ZERO, "the cheap victim redoes nothing");
+        let (victims, wasted) = run(false);
+        assert_eq!(victims, vec![JobId::new(1)], "old choice preempts the youngest");
+        assert_eq!(wasted, SimTime::from_secs(10), "and pays 10s of redone work");
+    }
+
+    /// Weighted shares: a weight-4 tenant's normalized usage is a
+    /// quarter of its raw balance, so fair-share runs it ahead of a
+    /// lighter-raw-usage unweighted tenant.
+    #[test]
+    fn fairshare_respects_share_weights() {
+        let mut h = Head::new();
+        h.policy = SchedulePolicy::fairshare();
+        h.ledger.set_weight(1, 4.0);
+        h.ledger.charge(1, 1000.0, SimTime::ZERO); // normalized 250
+        h.ledger.charge(2, 500.0, SimTime::ZERO); // normalized 500
+        h.hostfile_text = "10.10.0.2 slots=12\n".into();
+        h.submit(jobt(0, 12, 10, 2), SimTime::ZERO);
+        h.submit(jobt(1, 12, 10, 1), SimTime::ZERO);
+        let r = h.start_next(SimTime::from_secs(1)).unwrap();
+        assert_eq!(
+            r.spec.id,
+            JobId::new(1),
+            "the weighted tenant's normalized usage must win"
+        );
+    }
+
+    /// Weighted shares thread into the autoscaler demand signal: a
+    /// weight-2 flooding tenant is provisioned for a 2x slice.
+    #[test]
+    fn weighted_queued_slots_uses_share_weights() {
+        let mut h = Head::new();
+        h.ledger.set_weight(1, 2.0);
+        for i in 0..10 {
+            h.submit(jobt(i, 24, 60, 1), SimTime::ZERO);
+        }
+        for t in 2..=4u64 {
+            h.submit(jobt(9 + t as u32, 8, 30, t), SimTime::ZERO);
+        }
+        // total 264, Σw = 5: the weight-2 hog's cap is 2·264·2/5 =
+        // 211.2 -> 212; the light tenants stay uncapped at 8
+        assert_eq!(h.weighted_queued_slots(), 212 + 24);
     }
 
     /// A tenant at its running-slot quota waits without blocking other

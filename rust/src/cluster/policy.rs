@@ -98,6 +98,12 @@ pub struct SchedulePolicy {
     /// job to checkpoint-and-requeue lower-priority running jobs when
     /// that frees enough slots. Ignored by the other kinds.
     pub preemption: bool,
+    /// Preemption cost model: among equally-low-priority candidates,
+    /// prefer the victim closest to its last checkpoint (least
+    /// [`RunningJob::preempt_waste`]), so a preemption redoes as little
+    /// work as possible. Off reproduces the historical victim choice
+    /// (lowest priority, then youngest).
+    pub preempt_cost_aware: bool,
     /// Carve reservations rack-aware (fewest racks, then fewest hosts)
     /// instead of hostfile order.
     pub topo_aware: bool,
@@ -105,21 +111,40 @@ pub struct SchedulePolicy {
 
 impl Default for SchedulePolicy {
     /// FIFO, no preemption, width-only carving — byte-for-byte the
-    /// pre-policy scheduler, so existing benches reproduce.
+    /// pre-policy scheduler, so existing benches reproduce (FIFO never
+    /// preempts, so the cost model's default is moot here).
     fn default() -> Self {
-        Self { kind: PolicyKind::Fifo, preemption: false, topo_aware: false }
+        Self {
+            kind: PolicyKind::Fifo,
+            preemption: false,
+            preempt_cost_aware: true,
+            topo_aware: false,
+        }
     }
 }
 
 impl SchedulePolicy {
     /// Policy for `kind` with its natural defaults (preemption on for
-    /// [`PolicyKind::Priority`], width-only carving).
+    /// [`PolicyKind::Priority`], cost-aware victim choice, width-only
+    /// carving).
     pub fn new(kind: PolicyKind) -> Self {
-        Self { kind, preemption: kind == PolicyKind::Priority, topo_aware: false }
+        Self {
+            kind,
+            preemption: kind == PolicyKind::Priority,
+            preempt_cost_aware: true,
+            topo_aware: false,
+        }
     }
     /// Builder-style toggle for topology-aware carving.
     pub fn with_topo_aware(mut self, on: bool) -> Self {
         self.topo_aware = on;
+        self
+    }
+    /// Builder-style toggle for the preemption cost model (off = the
+    /// historical lowest-priority / youngest-first victim choice; kept
+    /// for comparisons).
+    pub fn with_cost_aware(mut self, on: bool) -> Self {
+        self.preempt_cost_aware = on;
         self
     }
     /// Shorthand for [`SchedulePolicy::new`] with [`PolicyKind::Fifo`].
@@ -153,8 +178,9 @@ pub struct QueuedJob {
     pub est: SimTime,
     /// Owning tenant (0 = untenanted system work).
     pub tenant: u64,
-    /// The tenant's decayed ledger usage at decision time (slot-seconds;
-    /// what the fair-share policy orders by — 0 for fresh tenants).
+    /// The tenant's decayed ledger usage at decision time, normalized
+    /// by its share weight (slot-seconds; what the fair-share policy
+    /// orders by — 0 for fresh tenants).
     pub usage: f64,
 }
 
@@ -166,6 +192,10 @@ pub struct RunningJob {
     pub priority: i32,
     /// When the dispatcher expects the job's slots back.
     pub predicted_finish: SimTime,
+    /// Virtual work a preemption of this job would redo (its distance
+    /// past the last checkpoint; 0 for synthetic jobs, which checkpoint
+    /// continuously). The cost model ranks victims by this.
+    pub preempt_waste: SimTime,
 }
 
 /// What the policy decided for one dispatch attempt.
@@ -205,9 +235,14 @@ impl SchedulePolicy {
         match self.kind {
             PolicyKind::Fifo => decide_fifo(queue, running, free, total),
             PolicyKind::Easy => decide_easy(now, queue, running, free),
-            PolicyKind::Priority => {
-                decide_priority(self.preemption, queue, running, free, total)
-            }
+            PolicyKind::Priority => decide_priority(
+                self.preemption,
+                self.preempt_cost_aware,
+                queue,
+                running,
+                free,
+                total,
+            ),
             PolicyKind::FairShare => {
                 crate::tenancy::fairshare::decide_fairshare(now, queue, running, free)
             }
@@ -318,9 +353,13 @@ fn priority_key(priority: i32, id: JobId) -> (Reverse<i32>, JobId) {
 
 /// Highest-priority-first with conservative backfill below the
 /// priority head, plus optional preemption of lower-priority running
-/// jobs when that is what it takes to seat the head.
+/// jobs when that is what it takes to seat the head. With
+/// `cost_aware`, equally-low-priority victims are ranked by the work a
+/// preemption would waste (distance past their last checkpoint), so
+/// the scheduler evicts the job that loses the least.
 fn decide_priority(
     preemption: bool,
+    cost_aware: bool,
     queue: &[QueuedJob],
     running: &[RunningJob],
     free: u32,
@@ -353,7 +392,14 @@ fn decide_priority(
             let victim = running
                 .iter()
                 .filter(|r| r.priority < head.priority)
-                .min_by_key(|r| (r.priority, Reverse(r.id)));
+                .min_by_key(|r| {
+                    // cost model: cheapest checkpoint distance among the
+                    // lowest-priority candidates; with it off, every
+                    // candidate ties at zero and the historical
+                    // youngest-first order decides
+                    let waste = if cost_aware { r.preempt_waste } else { SimTime::ZERO };
+                    (r.priority, waste, Reverse(r.id))
+                });
             if let Some(v) = victim {
                 return Decision::Preempt { victim: v.id };
             }
@@ -503,7 +549,12 @@ mod tests {
             ranks,
             priority: pri,
             predicted_finish: SimTime::from_secs(finish_secs),
+            preempt_waste: SimTime::ZERO,
         }
+    }
+
+    fn rw(id: u32, ranks: u32, pri: i32, finish_secs: u64, waste_secs: u64) -> RunningJob {
+        RunningJob { preempt_waste: SimTime::from_secs(waste_secs), ..r(id, ranks, pri, finish_secs) }
     }
 
     fn host(last_octet: u8, slots: u32) -> HostSlot {
@@ -637,6 +688,37 @@ mod tests {
         np.preemption = false;
         let running = [r(1, 12, 0, 300), r(2, 12, 1, 300)];
         assert_eq!(np.decide(SimTime::ZERO, &queue, &running, 0, 24), Decision::Wait);
+    }
+
+    /// Cost model: among equally-low-priority victims the policy picks
+    /// the one whose preemption wastes the least work; with the model
+    /// off it falls back to the historical youngest-first choice.
+    #[test]
+    fn preemption_cost_model_picks_cheapest_victim() {
+        let queue = [q(5, 12, 5, 30)];
+        // the older job (id 1) is right at a checkpoint (waste 0); the
+        // younger one (id 2) would redo 15s
+        let running = [rw(1, 12, 0, 300, 0), rw(2, 12, 0, 300, 15)];
+        let p = SchedulePolicy::priority();
+        assert!(p.preempt_cost_aware, "cost model must be the default");
+        assert_eq!(
+            p.decide(SimTime::ZERO, &queue, &running, 0, 24),
+            Decision::Preempt { victim: JobId::new(1) },
+            "cost-aware preemption must evict the checkpointed job"
+        );
+        let old = SchedulePolicy::priority().with_cost_aware(false);
+        assert_eq!(
+            old.decide(SimTime::ZERO, &queue, &running, 0, 24),
+            Decision::Preempt { victim: JobId::new(2) },
+            "the historical choice preempts the youngest"
+        );
+        // priority still dominates the cost model: a cheap victim at a
+        // higher priority is never chosen over an expensive lower one
+        let running = [rw(1, 12, 1, 300, 0), rw(2, 12, 0, 300, 500)];
+        assert_eq!(
+            p.decide(SimTime::ZERO, &queue, &running, 0, 24),
+            Decision::Preempt { victim: JobId::new(2) }
+        );
     }
 
     #[test]

@@ -87,6 +87,15 @@ pub struct ClusterState {
     /// partition. Keyed by machine (not agent) so a machine that is down
     /// at injection, or re-provisioned mid-window, is still cut off.
     pub partitioned_machines: Vec<bool>,
+    /// Chaos: machines whose agents can currently reach only a subset
+    /// of the consul servers (partial partition). Keyed by machine so a
+    /// container re-provisioned mid-window inherits the restriction.
+    pub partial_machines: Vec<bool>,
+    /// The server subset reachable from partially partitioned machines.
+    pub partial_servers: Vec<u32>,
+    /// Head-availability runtime state (WAL cursor, lease, epoch).
+    /// Inert when `spec.ha.enabled` is false.
+    pub ha: crate::ha::HaState,
 }
 
 /// The facade: state + event engine.
@@ -136,6 +145,7 @@ impl VirtualCluster {
         let n = spec.machines as usize;
         let mut state = ClusterState {
             autoscaler: Autoscaler::new(spec.autoscale.clone()),
+            ha: crate::ha::HaState::new(spec.ha.clone()),
             spec,
             plant,
             engines,
@@ -155,9 +165,17 @@ impl VirtualCluster {
             hang_until: vec![SimTime::ZERO; n],
             deploy_faults: vec![0; n],
             partitioned_machines: vec![false; n],
+            partial_machines: vec![false; n],
+            partial_servers: Vec::new(),
         };
         let ckpt = state.spec.jacobi_checkpoint_steps.max(1);
         state.head.checkpoint_every_steps = ckpt;
+        if state.ha.config.enabled {
+            state.head.enable_journal();
+        }
+        for &(tenant, weight) in &state.spec.tenant_weights {
+            state.head.ledger.set_weight(tenant, weight);
+        }
         Ok(Self { state, engine: Engine::new() })
     }
 
@@ -181,6 +199,10 @@ impl VirtualCluster {
             .schedule_after(SimTime::from_secs(1), Self::scheduler_event);
         let interval = self.state.spec.autoscale.interval;
         self.engine.schedule_after(interval, Self::autoscale_event);
+        if self.state.ha.config.enabled {
+            // leadership lease + leader record + the standby's monitor
+            crate::ha::failover::install(&mut self.state, &mut self.engine);
+        }
     }
 
     /// Advance virtual time by `dt`, firing all due control-plane events.
@@ -309,6 +331,11 @@ impl VirtualCluster {
             // is on the minority side too
             st.consul.partition_agent(agent);
         }
+        if st.partial_machines[idx] {
+            // likewise for a partial partition: the fresh agent inherits
+            // the restricted server set
+            st.consul.restrict_agent(agent, st.partial_servers.clone());
+        }
         // record the host's rack for topology-aware placement and the
         // rack-spread metric (stale IPs are harmless: only addresses in
         // the live hostfile are ever looked up)
@@ -358,10 +385,15 @@ impl VirtualCluster {
         st.consul.advance(eng.now());
         // a hung agent is alive but mute; a partitioned one cannot reach
         // the servers — either way the TTL runs out and the node drops
-        // from the hostfile until the condition clears
+        // from the hostfile until the condition clears. A *partially*
+        // partitioned agent still gossips, but its TTL writes commit
+        // only while it can reach the raft leader.
         let hung = eng.now() < st.hang_until[idx];
         let partitioned = st.partitioned_machines[idx];
-        if !hung && !partitioned {
+        let leaderless = st.containers[idx]
+            .map(|cid| !st.consul.agent_reaches_leader(AgentId::new(cid.raw())))
+            .unwrap_or(false);
+        if !hung && !partitioned && !leaderless {
             let node = crate::cluster::node_name(idx, st.spec.machines);
             if !st.consul.refresh_health(&node) && idx != 0 {
                 // the check was reaped while the agent was unreachable
@@ -387,12 +419,16 @@ impl VirtualCluster {
     // ---------- control loops ----------
 
     fn template_poll_event(st: &mut ClusterState, eng: &mut Ev) {
-        Self::refresh_hostfile(st, eng.now());
+        // consul-template runs on the head: a dead head renders nothing
+        // (the standby re-renders through a fresh watcher at takeover)
+        if !st.ha.head_down() {
+            Self::refresh_hostfile(st, eng.now());
+        }
         let poll = st.head.poll_interval;
         eng.schedule_after(poll, Self::template_poll_event);
     }
 
-    fn refresh_hostfile(st: &mut ClusterState, now: SimTime) {
+    pub(crate) fn refresh_hostfile(st: &mut ClusterState, now: SimTime) {
         st.consul.advance(now);
         // health-gate the catalog before rendering, consul-template style:
         // critical nodes must drop out of the hostfile.
@@ -413,8 +449,21 @@ impl VirtualCluster {
 
     fn scheduler_event(st: &mut ClusterState, eng: &mut Ev) {
         st.consul.advance(eng.now());
+        if st.ha.config.enabled {
+            if !st.ha.head_alive {
+                // the head process is down: nothing schedules until the
+                // standby takes over, but the tick keeps itself armed so
+                // the loop resumes on the replayed head
+                eng.schedule_after(SimTime::from_secs(1), Self::scheduler_event);
+                return;
+            }
+            // the active head's leadership lease: the refreshes stop the
+            // moment the head dies, which is what the standby watches
+            st.consul.refresh_health(crate::ha::failover::HEAD_LEASE);
+        }
         Self::reap_lost_jobs(st, eng);
         Self::dispatch_jobs(st, eng);
+        crate::ha::wal::flush(st);
         eng.schedule_after(SimTime::from_secs(1), Self::scheduler_event);
     }
 
@@ -431,8 +480,9 @@ impl VirtualCluster {
     }
 
     /// Recovery pipeline, bookkeeping step: route a lost job through the
-    /// head's retry budget and record what happened.
-    fn job_lost(st: &mut ClusterState, now: SimTime, id: JobId, reason: &str) {
+    /// head's retry budget and record what happened. Also called by the
+    /// HA takeover for jobs whose machine died during the head outage.
+    pub(crate) fn job_lost(st: &mut ClusterState, now: SimTime, id: JobId, reason: &str) {
         match st.head.handle_lost_job(id, now, reason) {
             LossOutcome::Requeued { wasted, .. } => {
                 st.metrics.inc("jobs_requeued");
@@ -505,7 +555,15 @@ impl VirtualCluster {
                     }
                     Err(e) => {
                         st.metrics.inc("jobs_failed");
-                        st.head.fail(id, e.to_string());
+                        let reason = e.to_string();
+                        if st.head.journal_enabled() {
+                            st.head.log_event(crate::ha::wal::WalEvent::Failed {
+                                at: t0,
+                                id,
+                                reason: reason.clone(),
+                            });
+                        }
+                        st.head.fail(id, reason);
                         return true;
                     }
                 }
@@ -513,6 +571,18 @@ impl VirtualCluster {
         };
         if let Some(rec) = st.head.running.get_mut(&id) {
             rec.planned_duration = Some(duration);
+        }
+        if st.head.journal_enabled() {
+            // pins the attempt's planned finish (and any launch-time
+            // Jacobi result) so a takeover can re-arm the completion
+            let result = st.head.running.get(&id).and_then(|r| r.result);
+            st.head.log_event(crate::ha::wal::WalEvent::Launched {
+                at: t0,
+                id,
+                attempt: started.attempt,
+                planned: duration,
+                result,
+            });
         }
         st.metrics.inc("jobs_started");
         if started.backfilled {
@@ -532,13 +602,22 @@ impl VirtualCluster {
         );
         st.metrics.observe("concurrent_jobs", st.head.running.len() as f64);
         let attempt = started.attempt;
+        let epoch = st.ha.epoch;
         eng.schedule_after(duration, move |st: &mut ClusterState, eng: &mut Ev| {
-            Self::job_done(st, eng, id, attempt);
+            Self::job_done(st, eng, id, attempt, epoch);
         });
         true
     }
 
-    fn job_done(st: &mut ClusterState, eng: &mut Ev, id: JobId, attempt: u32) {
+    pub(crate) fn job_done(st: &mut ClusterState, eng: &mut Ev, id: JobId, attempt: u32, epoch: u64) {
+        // Epoch fence: a completion delivered to a dead head is dropped
+        // (the standby re-arms its own timer at takeover), and a timer
+        // armed by a dead head's epoch can never fire into the replayed
+        // head — the failover analogue of the attempt guard below.
+        if st.ha.config.enabled && (!st.ha.head_alive || epoch != st.ha.epoch) {
+            st.metrics.inc("ha_dropped_completions");
+            return;
+        }
         // a completion event from an attempt that was since killed and
         // requeued must not complete the newer attempt early
         if st.head.running.get(&id).map(|r| r.attempt) != Some(attempt) {
@@ -559,9 +638,17 @@ impl VirtualCluster {
                 st.metrics
                     .observe("job_mttr_seconds", eng.now().saturating_sub(t0).as_secs_f64());
             }
+            if st.head.journal_enabled() {
+                st.head.log_event(crate::ha::wal::WalEvent::Completed {
+                    at: eng.now(),
+                    id,
+                    attempt,
+                });
+            }
         }
         // freed slots: start waiting jobs now, not at the next tick
         Self::dispatch_jobs(st, eng);
+        crate::ha::wal::flush(st);
     }
 
     fn run_jacobi_job(
@@ -608,6 +695,14 @@ impl VirtualCluster {
 
     fn autoscale_event(st: &mut ClusterState, eng: &mut Ev) {
         st.consul.advance(eng.now());
+        if st.ha.head_down() {
+            // the autoscaler reads the head's queue: with the head down
+            // it has no demand signal, so decisions freeze until the
+            // standby takes over (the loop keeps itself armed)
+            let interval = st.spec.spec_autoscale_interval();
+            eng.schedule_after(interval, Self::autoscale_event);
+            return;
+        }
         // capacity is health-gated: a Ready node whose check went
         // critical (hung agent, partition) is not capacity the scheduler
         // can use — counting it separately lets the policy boot a
@@ -756,19 +851,47 @@ impl VirtualCluster {
         let now = self.engine.now();
         let max_slots = self.state.spec.max_advertisable_slots();
         if ranks > max_slots {
+            let reason = format!(
+                "job needs {ranks} slots but the cluster can advertise at most {max_slots}"
+            );
             self.state.metrics.inc("jobs_rejected");
+            if self.state.ha.head_down() {
+                // no head to record the rejection: write it straight to
+                // the WAL, the standby materializes the record at replay
+                crate::ha::wal::append_direct(
+                    &mut self.state,
+                    crate::ha::wal::WalEvent::SubmitFailed { at: now, spec, reason },
+                );
+                return id;
+            }
+            if self.state.head.journal_enabled() {
+                self.state.head.log_event(crate::ha::wal::WalEvent::SubmitFailed {
+                    at: now,
+                    spec: spec.clone(),
+                    reason: reason.clone(),
+                });
+            }
             self.state.head.completed.push(JobRecord {
                 spec,
-                state: JobState::Failed {
-                    reason: format!(
-                        "job needs {ranks} slots but the cluster can advertise at most {max_slots}"
-                    ),
-                },
+                state: JobState::Failed { reason },
                 result: None,
                 queued_at: now,
                 attempt: 0,
                 planned_duration: None,
             });
+            crate::ha::wal::flush(&mut self.state);
+            return id;
+        }
+        if self.state.ha.head_down() {
+            // the head is down: a client's retry loop lands the
+            // submission in the replicated WAL and the standby replays
+            // it at takeover — no submitted work is ever lost to a head
+            // crash
+            self.state.metrics.inc("jobs_submitted");
+            crate::ha::wal::append_direct(
+                &mut self.state,
+                crate::ha::wal::WalEvent::Submitted { at: now, spec },
+            );
             return id;
         }
         match self.state.head.submit(spec, now) {
@@ -792,6 +915,7 @@ impl VirtualCluster {
                 });
             }
         }
+        crate::ha::wal::flush(&mut self.state);
         id
     }
 
@@ -834,11 +958,20 @@ impl VirtualCluster {
         st.hang_until[idx] = SimTime::ZERO;
         st.metrics.inc("machines_killed");
         if let Some(ip) = dead_ip {
+            if st.ha.head_down() {
+                // no head to observe the death: the takeover validates
+                // every replayed reservation against the live container
+                // map and fails these jobs over before re-arming any
+                // completion, so the death is handled the instant a
+                // head exists again
+                return;
+            }
             // reversed so the push_front requeues keep FIFO order among
             // the jobs lost to this machine
             for id in st.head.jobs_on_addr(ip).into_iter().rev() {
                 Self::job_lost(st, now, id, &format!("machine {m} died under the job"));
             }
+            crate::ha::wal::flush(st);
         }
     }
 
@@ -902,6 +1035,74 @@ impl VirtualCluster {
                 *flag = false;
             }
         }
+    }
+
+    /// Restrict the listed machines' agents to reaching only the given
+    /// consul servers (partial partition): gossip keeps flowing, but
+    /// their health refreshes and registrations commit only while the
+    /// raft leader is in the reachable set. One partial partition at a
+    /// time; returns its epoch token, or None when nothing was targeted.
+    pub(crate) fn chaos_partial_partition(
+        st: &mut ClusterState,
+        machines: &[u32],
+        servers: &[u32],
+    ) -> Option<u64> {
+        for flag in st.partial_machines.iter_mut() {
+            *flag = false;
+        }
+        st.partial_servers = servers.to_vec();
+        let mut agents = Vec::new();
+        let mut flagged = false;
+        for &mi in machines {
+            let idx = mi as usize;
+            if idx == 0 || idx >= st.partial_machines.len() {
+                continue;
+            }
+            st.partial_machines[idx] = true;
+            flagged = true;
+            if let Some(cid) = st.containers[idx] {
+                agents.push(AgentId::new(cid.raw()));
+            }
+        }
+        if !flagged {
+            st.partial_servers.clear();
+            return None;
+        }
+        let epoch = st.consul.set_partial_partition(agents, servers.to_vec());
+        st.metrics.inc("partial_partitions_injected");
+        Some(epoch)
+    }
+
+    /// Heal the partial partition identified by `epoch`.
+    pub(crate) fn chaos_heal_partial_partition(st: &mut ClusterState, epoch: u64) {
+        if st.consul.heal_partial_partition_epoch(epoch) {
+            for flag in st.partial_machines.iter_mut() {
+                *flag = false;
+            }
+            st.partial_servers.clear();
+        }
+    }
+
+    /// Kill the head *process* (not machine 0): the in-memory scheduler
+    /// state is gone, lease refreshes stop, and the standby takes over
+    /// from the replicated WAL once the lease expires. A no-op without
+    /// HA — chaos never decapitates a cluster that has no standby.
+    pub(crate) fn chaos_head_crash(st: &mut ClusterState, now: SimTime) {
+        if !st.ha.config.enabled {
+            log::warn!("head-crash fault ignored: HA is not enabled (no standby)");
+            st.metrics.inc("head_crashes_ignored");
+            return;
+        }
+        if !st.ha.head_alive {
+            return; // already down
+        }
+        st.ha.head_alive = false;
+        st.ha.crashed_at = Some(now);
+        // anything the dead head buffered but never flushed dies with
+        // it (there is nothing between events by construction, but a
+        // crash must not be able to leak state forward)
+        let _ = st.head.take_journal();
+        st.metrics.inc("head_crashes");
     }
 
     /// Install a fault plan: every fault becomes a deterministic engine

@@ -190,6 +190,13 @@ pub struct ClusterSpec {
     pub jacobi_checkpoint_steps: usize,
     pub seed: u64,
     pub autoscale: AutoscaleConfig,
+    /// Per-tenant fair-share weight multipliers (`[tenant_weights]`
+    /// section: `<tenant id> = <weight>`; a weight-2 tenant earns twice
+    /// the fair share). Empty by default — all tenants equal.
+    pub tenant_weights: Vec<(u64, f64)>,
+    /// Head-node high-availability knobs (`[ha]` section). Disabled by
+    /// default: the paper's single-head cluster, byte for byte.
+    pub ha: crate::ha::HaConfig,
 }
 
 impl Default for ClusterSpec {
@@ -215,6 +222,8 @@ impl ClusterSpec {
             jacobi_checkpoint_steps: crate::cluster::head::JACOBI_CHECKPOINT_STEPS,
             seed: 42,
             autoscale: AutoscaleConfig::default(),
+            tenant_weights: Vec::new(),
+            ha: crate::ha::HaConfig::default(),
         }
     }
 
@@ -332,6 +341,49 @@ impl ClusterSpec {
                     SimTime::from_secs(req_int("autoscale", "idle_timeout_secs", v)? as u64);
             }
         }
+        if let Some(tw) = raw.get("tenant_weights") {
+            for (k, v) in tw {
+                let tenant: u64 = k.parse().map_err(|_| {
+                    ConfigError::BadValue(
+                        "tenant_weights".into(),
+                        k.clone(),
+                        "tenant id must be an integer".into(),
+                    )
+                })?;
+                let weight = v.as_float().ok_or_else(|| {
+                    ConfigError::BadValue(
+                        "tenant_weights".into(),
+                        k.clone(),
+                        format!("{v:?} is not a number"),
+                    )
+                })?;
+                if weight <= 0.0 || !weight.is_finite() {
+                    return Err(ConfigError::BadValue(
+                        "tenant_weights".into(),
+                        k.clone(),
+                        format!("weight must be a positive number, got {weight}"),
+                    ));
+                }
+                spec.tenant_weights.push((tenant, weight));
+            }
+        }
+        if let Some(h) = raw.get("ha") {
+            if let Some(v) = h.get("enabled") {
+                spec.ha.enabled = v.as_bool().ok_or_else(|| {
+                    ConfigError::BadValue("ha".into(), "enabled".into(), format!("{v:?}"))
+                })?;
+            }
+            if let Some(v) = h.get("lock_ttl_secs") {
+                spec.ha.lock_ttl = SimTime::from_secs(req_int("ha", "lock_ttl_secs", v)? as u64);
+            }
+            if let Some(v) = h.get("standby_poll_secs") {
+                spec.ha.standby_poll =
+                    SimTime::from_secs(req_int("ha", "standby_poll_secs", v)? as u64);
+            }
+            if let Some(v) = h.get("snapshot_every") {
+                spec.ha.snapshot_every = req_int("ha", "snapshot_every", v)? as u64;
+            }
+        }
         Ok(spec)
     }
 }
@@ -417,6 +469,33 @@ mod tests {
         assert_eq!(s.max_advertisable_slots(), 36); // policy: max_nodes = 3
         s.autoscale.enabled = false;
         assert_eq!(s.max_advertisable_slots(), 84); // manual provisioning can reach 7
+    }
+
+    #[test]
+    fn tenant_weights_and_ha_sections_parse() {
+        let spec = ClusterSpec::from_text(
+            "[tenant_weights]\n1 = 2.0\n7 = 4\n\
+             [ha]\nenabled = true\nlock_ttl_secs = 3\nstandby_poll_secs = 2\nsnapshot_every = 64\n",
+        )
+        .unwrap();
+        assert_eq!(spec.tenant_weights, vec![(1, 2.0), (7, 4.0)]);
+        assert!(spec.ha.enabled);
+        assert_eq!(spec.ha.lock_ttl, SimTime::from_secs(3));
+        assert_eq!(spec.ha.standby_poll, SimTime::from_secs(2));
+        assert_eq!(spec.ha.snapshot_every, 64);
+        // defaults: no weights, HA off
+        let d = ClusterSpec::paper_testbed();
+        assert!(d.tenant_weights.is_empty());
+        assert!(!d.ha.enabled);
+        // bad weights error out
+        assert!(matches!(
+            ClusterSpec::from_text("[tenant_weights]\nbob = 2.0\n"),
+            Err(ConfigError::BadValue(..))
+        ));
+        assert!(matches!(
+            ClusterSpec::from_text("[tenant_weights]\n1 = -2.0\n"),
+            Err(ConfigError::BadValue(..))
+        ));
     }
 
     #[test]

@@ -58,6 +58,14 @@ pub struct ConsulCluster {
     /// Bumped by every `set_partition`, so a stale heal timer from an
     /// earlier partition cannot clear a newer one.
     partition_epoch: u64,
+    /// Partial partitions: agents that can reach only the listed server
+    /// ids. Gossip between agents is unaffected; server RPC (TTL
+    /// refreshes, registrations) from a restricted agent succeeds only
+    /// while its reachable set contains the current raft leader.
+    restricted: HashMap<AgentId, Vec<u32>>,
+    /// Epoch token for partial partitions (same stale-heal protection
+    /// as `partition_epoch`).
+    restricted_epoch: u64,
     /// Statistics.
     pub raft_msgs: u64,
     pub gossip_msgs: u64,
@@ -95,6 +103,8 @@ impl ConsulCluster {
             backlog: VecDeque::new(),
             partitioned: HashSet::new(),
             partition_epoch: 0,
+            restricted: HashMap::new(),
+            restricted_epoch: 0,
             raft_msgs: 0,
             gossip_msgs: 0,
             gossip_dropped: 0,
@@ -138,6 +148,56 @@ impl ConsulCluster {
 
     pub fn is_partitioned(&self, a: AgentId) -> bool {
         self.partitioned.contains(&a)
+    }
+
+    /// Partial partition: restrict `agents` to reaching only `servers`
+    /// (by raft server id). One partial partition at a time — a new
+    /// call replaces the previous one. Returns an epoch token for
+    /// [`heal_partial_partition_epoch`](Self::heal_partial_partition_epoch).
+    pub fn set_partial_partition(
+        &mut self,
+        agents: impl IntoIterator<Item = AgentId>,
+        servers: Vec<u32>,
+    ) -> u64 {
+        self.restricted = agents.into_iter().map(|a| (a, servers.clone())).collect();
+        self.restricted_epoch += 1;
+        self.restricted_epoch
+    }
+
+    /// Add one agent to the active partial partition (a container
+    /// re-provisioned on a machine still inside the restricted window).
+    pub fn restrict_agent(&mut self, a: AgentId, servers: Vec<u32>) {
+        self.restricted.insert(a, servers);
+    }
+
+    /// Clear the partial partition only if `epoch` is still the active
+    /// one. Returns true when it healed.
+    pub fn heal_partial_partition_epoch(&mut self, epoch: u64) -> bool {
+        if self.restricted_epoch == epoch {
+            self.restricted.clear();
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn is_restricted(&self, a: AgentId) -> bool {
+        self.restricted.contains_key(&a)
+    }
+
+    /// Can this agent's server writes (health refreshes, registrations)
+    /// commit right now? Unrestricted agents always can; a restricted
+    /// agent can only while the current raft leader is in its reachable
+    /// set — reaching a minority follower is not enough to commit, the
+    /// exact behavior of real consul under an asymmetric split.
+    pub fn agent_reaches_leader(&self, a: AgentId) -> bool {
+        match self.restricted.get(&a) {
+            None => true,
+            Some(servers) => self
+                .leader_index()
+                .map(|l| servers.contains(&(l as u32)))
+                .unwrap_or(false),
+        }
     }
 
     fn crosses_partition(&self, from: AgentId, to: AgentId) -> bool {
@@ -460,6 +520,33 @@ mod tests {
             Some(MemberState::Alive),
             "agent 3 never rejoined after the heal"
         );
+    }
+
+    #[test]
+    fn partial_partition_gates_writes_on_leader_reachability() {
+        let mut c = ConsulCluster::new(3, 17);
+        c.advance_until_leader(SimTime::from_secs(30)).unwrap();
+        let leader = c.leader_index().unwrap() as u32;
+        let others: Vec<u32> = (0..3).filter(|s| *s != leader).collect();
+        let a = AgentId::new(9);
+        assert!(c.agent_reaches_leader(a), "unrestricted agents always write");
+        let epoch = c.set_partial_partition([a], others);
+        assert!(c.is_restricted(a));
+        assert!(
+            !c.agent_reaches_leader(a),
+            "reaching only minority followers must not commit writes"
+        );
+        // a reachable set containing the leader can write through the
+        // partial partition
+        c.restrict_agent(a, vec![leader]);
+        assert!(c.agent_reaches_leader(a));
+        assert!(c.heal_partial_partition_epoch(epoch));
+        assert!(!c.is_restricted(a));
+        // a stale heal timer cannot clear a newer partial partition
+        let e2 = c.set_partial_partition([a], vec![]);
+        assert!(!c.heal_partial_partition_epoch(e2.wrapping_sub(1)));
+        assert!(c.is_restricted(a));
+        assert!(!c.agent_reaches_leader(a), "an empty reachable set reaches no leader");
     }
 
     #[test]

@@ -55,6 +55,25 @@ pub fn apply(st: &mut ClusterState, eng: &mut Engine<ClusterState>, kind: &Fault
                 VirtualCluster::chaos_deploy_fail(st, MachineId::new(*machine), *failures);
             }
         }
+        FaultKind::PartialPartition { machines, servers, duration } => {
+            let safe: Vec<u32> = machines.iter().copied().filter(|&m| m != 0).collect();
+            if let Some(epoch) = VirtualCluster::chaos_partial_partition(st, &safe, servers) {
+                // epoch-guarded heal, exactly like the full partition: a
+                // later partial partition invalidates this timer
+                let d = *duration;
+                eng.schedule_after(
+                    d,
+                    move |st: &mut ClusterState, _eng: &mut Engine<ClusterState>| {
+                        VirtualCluster::chaos_heal_partial_partition(st, epoch);
+                    },
+                );
+            }
+        }
+        // the head *process* crash: machine 0 stays up, only the
+        // scheduler state dies — a no-op unless a standby exists (HA)
+        FaultKind::HeadCrash => {
+            VirtualCluster::chaos_head_crash(st, eng.now());
+        }
         // correlated failure domain: every machine on the rack dies in
         // this same tick (the head, machine 0, is spared — chaos never
         // decapitates the control plane)

@@ -44,6 +44,20 @@ pub enum FaultKind {
     /// replays against any topology; the head's machine survives even
     /// if it shares the rack.
     RackOutage { rack: u32 },
+    /// Partial partition: the listed machines' agents can reach only
+    /// the listed consul servers for `duration`. Gossip keeps flowing,
+    /// but TTL refreshes and registrations from those agents commit
+    /// only while the raft leader is in the reachable set — so health
+    /// flaps track quorum topology instead of a clean split, and the
+    /// existing anti-entropy path re-registers reaped services once
+    /// the window closes.
+    PartialPartition { machines: Vec<u32>, servers: Vec<u32>, duration: SimTime },
+    /// The head *process* crashes (machine 0 stays up): the in-memory
+    /// scheduler state is lost and, when HA is enabled, the standby
+    /// rebuilds it from the replicated WAL once the leadership lease
+    /// expires. Ignored without HA — chaos never decapitates a cluster
+    /// that has no standby.
+    HeadCrash,
 }
 
 impl FaultKind {
@@ -56,6 +70,8 @@ impl FaultKind {
             FaultKind::Partition { .. } => "partition",
             FaultKind::DeployFail { .. } => "deploy_fail",
             FaultKind::RackOutage { .. } => "rack_outage",
+            FaultKind::PartialPartition { .. } => "partial_partition",
+            FaultKind::HeadCrash => "head_crash",
         }
     }
 }
@@ -109,6 +125,26 @@ impl FaultPlan {
     /// plant at fire time.
     pub fn rack_outage(rack: u32, at: SimTime) -> Self {
         Self::scripted(vec![FaultEvent { at, kind: FaultKind::RackOutage { rack } }])
+    }
+
+    /// A single head-process crash, `at` after injection — the HA
+    /// failover scenario's trigger.
+    pub fn head_crash(at: SimTime) -> Self {
+        Self::scripted(vec![FaultEvent { at, kind: FaultKind::HeadCrash }])
+    }
+
+    /// A single partial partition: `machines`' agents can reach only
+    /// `servers` for `duration`, starting `at` after injection.
+    pub fn partial_partition(
+        machines: Vec<u32>,
+        servers: Vec<u32>,
+        at: SimTime,
+        duration: SimTime,
+    ) -> Self {
+        Self::scripted(vec![FaultEvent {
+            at,
+            kind: FaultKind::PartialPartition { machines, servers, duration },
+        }])
     }
 
     /// `faults` seeded events drawn over `horizon`, mixing every fault

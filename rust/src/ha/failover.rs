@@ -1,0 +1,282 @@
+//! Standby head + leadership lock: who schedules, and how a standby
+//! takes over when the active head dies.
+//!
+//! The active head holds a consul-session-style lease: a TTL health
+//! check (`__vhpc-head`) it refreshes on every scheduler tick, plus the
+//! `vhpc/ha/leader` KV record carrying its epoch. When a
+//! [`FaultKind::HeadCrash`](crate::faults::FaultKind) kills the head
+//! process, the refreshes stop; once the lease TTL runs out, the
+//! standby's monitor loop observes the expired check, bumps the epoch,
+//! rebuilds the head from snapshot + WAL tail, re-renders the hostfile
+//! and re-arms completion timers for the still-running jobs.
+//!
+//! Crash-consistency invariants the takeover keeps:
+//!
+//! * **Running jobs keep running.** Their ranks live on compute nodes,
+//!   not on the head; the replayed head knows each running attempt
+//!   (logged at dispatch) and re-arms its completion at the original
+//!   predicted finish (clamped to the takeover time when the finish
+//!   fell inside the outage window).
+//! * **The dead head's epoch is fenced.** Completion events carry the
+//!   epoch they were scheduled under; events from a dead epoch are
+//!   dropped, so a timer armed by the dead head can never race the
+//!   replayed head's own timers — and the attempt generation still
+//!   guards against stale attempts exactly as in the fault paths.
+//! * **Failover is not a fault.** No retry budget is charged, nothing
+//!   requeues, no attempt generation advances: the replayed head is the
+//!   same head, one process later.
+
+use crate::cluster::head::{Head, JobState};
+use crate::cluster::vcluster::{ClusterState, VirtualCluster};
+use crate::consul::health::CheckStatus;
+use crate::consul::raft::Command;
+use crate::consul::ConsulCluster;
+use crate::ha::snapshot::HeadDump;
+use crate::ha::wal::{WalEvent, LEADER_KEY, SNAPSHOT_KEY, WAL_PREFIX};
+use crate::ha::HaConfig;
+use crate::sim::{Engine, SimTime};
+use crate::util::ids::{JobId, MachineId};
+
+/// The health-registry node name of the active head's lease.
+pub const HEAD_LEASE: &str = "__vhpc-head";
+
+/// Runtime HA state carried by the cluster. Inert (and cost-free)
+/// when `config.enabled` is false.
+#[derive(Debug, Clone)]
+pub struct HaState {
+    pub config: HaConfig,
+    /// Current head incarnation. Completion events carry the epoch they
+    /// were scheduled under; a takeover bumps it, fencing the dead
+    /// head's in-flight timers.
+    pub epoch: u64,
+    /// False between a head crash and the standby's takeover.
+    pub head_alive: bool,
+    /// When the active head died (cleared at takeover; feeds the
+    /// `ha_failover_seconds` histogram).
+    pub crashed_at: Option<SimTime>,
+    /// Next WAL sequence number to allocate.
+    pub(crate) next_seq: u64,
+    /// Appends since the last snapshot (drives the snapshot cadence).
+    pub(crate) appends_since_snapshot: u64,
+    /// WAL entries below this seq have been truncated into a snapshot.
+    pub(crate) truncated_below: u64,
+    /// Events the most recent takeover replayed (snapshotting bounds
+    /// this regardless of cluster age).
+    pub last_replayed: u64,
+}
+
+impl HaState {
+    pub fn new(config: HaConfig) -> Self {
+        Self {
+            config,
+            epoch: 0,
+            head_alive: true,
+            crashed_at: None,
+            next_seq: 0,
+            appends_since_snapshot: 0,
+            truncated_below: 0,
+            last_replayed: 0,
+        }
+    }
+
+    /// True while the head process is down (standby not yet promoted).
+    pub fn head_down(&self) -> bool {
+        self.config.enabled && !self.head_alive
+    }
+}
+
+/// Arm the HA machinery at cluster start: register the head's lease,
+/// record epoch 0 in the KV leadership key, and start the standby
+/// monitor loop.
+pub(crate) fn install(st: &mut ClusterState, eng: &mut Engine<ClusterState>) {
+    let now = st.consul.now();
+    st.consul
+        .health
+        .register(HEAD_LEASE, st.ha.config.lock_ttl, now);
+    st.consul.submit(Command::Set {
+        key: LEADER_KEY.into(),
+        value: format!("epoch 0 at {}", now.as_nanos()),
+    });
+    let poll = st.ha.config.standby_poll;
+    eng.schedule_after(poll, standby_monitor);
+}
+
+/// The standby's monitor loop: watch the active head's lease; once the
+/// head is down *and* the lease has expired, take over. The double
+/// condition mirrors a real lock — a healthy head's lease never
+/// expires, and a dead head cannot refresh.
+pub(crate) fn standby_monitor(st: &mut ClusterState, eng: &mut Engine<ClusterState>) {
+    if !st.ha.config.enabled {
+        return;
+    }
+    st.consul.advance(eng.now());
+    if !st.ha.head_alive {
+        let lease = st.consul.health.status(HEAD_LEASE, eng.now());
+        if lease != Some(CheckStatus::Passing) {
+            takeover(st, eng);
+        }
+    }
+    let poll = st.ha.config.standby_poll;
+    eng.schedule_after(poll, standby_monitor);
+}
+
+/// Read the snapshot (if any) and the WAL tail from the replicated KV
+/// store. Returns owned data so the caller can mutate the state while
+/// rebuilding.
+fn read_log(consul: &ConsulCluster) -> (Option<HeadDump>, Vec<WalEvent>, u64) {
+    let kv = consul.kv();
+    let (dump, start_seq) = match kv.get(SNAPSHOT_KEY).map(crate::ha::snapshot::decode) {
+        Some(Ok((dump, seq))) => (Some(dump), seq),
+        Some(Err(e)) => {
+            log::warn!("ha: discarding corrupt snapshot: {e}");
+            (None, 0)
+        }
+        None => (None, 0),
+    };
+    let mut events: Vec<(u64, WalEvent)> = Vec::new();
+    let mut decode_errors = 0u64;
+    // list_prefix is key-sorted and keys are zero-padded, so this walks
+    // the log in sequence order
+    for (key, value) in kv.list_prefix(WAL_PREFIX) {
+        let seq: u64 = match key[WAL_PREFIX.len()..].parse() {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        if seq < start_seq {
+            continue; // covered by the snapshot but not yet truncated
+        }
+        match WalEvent::decode(value) {
+            Ok(ev) => events.push((seq, ev)),
+            Err(e) => {
+                // A corrupt record truncates the log HERE: replaying
+                // past a hole could resurrect state the durable log
+                // cannot vouch for (e.g. re-dispatch a job whose
+                // Dispatched entry was lost, double-running it).
+                // Nothing in the simulation corrupts the KV — this is
+                // the recovery posture, not a live code path.
+                decode_errors += 1;
+                log::error!("ha: corrupt wal entry {key}, truncating replay: {e}");
+                break;
+            }
+        }
+    }
+    events.sort_by_key(|&(seq, _)| seq);
+    (dump, events.into_iter().map(|(_, ev)| ev).collect(), decode_errors)
+}
+
+/// Promote the standby: rebuild the head from snapshot + WAL, install
+/// it, fence the dead epoch, re-render derived state and re-arm
+/// completion timers for the work that kept running through the outage.
+pub(crate) fn takeover(st: &mut ClusterState, eng: &mut Engine<ClusterState>) {
+    let now = eng.now();
+    st.consul.advance(now);
+    let (dump, events, decode_errors) = read_log(&st.consul);
+
+    // a standby inherits deployment config, never logged state: the
+    // knobs come from the same spec the dead head was configured from
+    let mut head = Head::new();
+    {
+        let old = &st.head;
+        head.poll_interval = old.poll_interval;
+        head.max_concurrent = old.max_concurrent;
+        head.max_retries = old.max_retries;
+        head.policy = old.policy;
+        head.quotas = old.quotas;
+        head.checkpoint_every_steps = old.checkpoint_every_steps;
+        head.ledger = old.ledger.config_clone();
+    }
+    // derived topology state is re-learned from the live cluster, not
+    // replayed: the plant and the containers survived the head
+    for idx in 0..st.node_states.len() {
+        if let Some(cid) = st.containers[idx] {
+            if let Some(ip) = st.engines[idx].container(cid).and_then(|c| c.ip) {
+                let rack = st.plant.rack_of(MachineId::new(idx as u32)).unwrap_or(0);
+                head.rack_of.insert(ip, rack);
+            }
+        }
+    }
+    let had_snapshot = dump.is_some();
+    if let Some(dump) = dump {
+        head.restore(dump);
+    }
+    let replayed = crate::ha::wal::replay(&mut head, &events);
+    head.enable_journal();
+    st.head = head;
+
+    st.ha.epoch += 1;
+    st.ha.head_alive = true;
+    st.ha.last_replayed = replayed as u64;
+    st.metrics.inc("ha_takeovers");
+    st.metrics.add("ha_replayed_events", replayed as u64);
+    if had_snapshot {
+        st.metrics.inc("ha_snapshot_restores");
+    }
+    if decode_errors > 0 {
+        st.metrics.add("ha_wal_decode_errors", decode_errors);
+    }
+    if let Some(t0) = st.ha.crashed_at.take() {
+        st.metrics
+            .observe("ha_failover_seconds", now.saturating_sub(t0).as_secs_f64());
+    }
+
+    // re-acquire the lock: fresh lease plus the bumped epoch in the KV
+    // leadership record
+    st.consul.health.register(HEAD_LEASE, st.ha.config.lock_ttl, now);
+    st.consul.submit(Command::Set {
+        key: LEADER_KEY.into(),
+        value: format!("epoch {} at {}", st.ha.epoch, now.as_nanos()),
+    });
+
+    // derived state: render the hostfile through the fresh watcher
+    VirtualCluster::refresh_hostfile(st, now);
+
+    // Re-arm completion timers for jobs that ran through the outage —
+    // but first validate every replayed reservation against the live
+    // container map. A machine that died *while the head was down* had
+    // no head to fail its jobs (the live path does that the instant
+    // mpirun's connections drop); re-arming such a job's completion
+    // would re-create the phantom-completion-on-dead-slots bug the
+    // recovery pipeline exists to prevent. Those jobs are failed over
+    // right here, charging the same retry budget a live detection
+    // would — the machine death is a real fault, unlike the failover.
+    let epoch = st.ha.epoch;
+    let mut ids: Vec<JobId> = st.head.running.keys().copied().collect();
+    ids.sort();
+    let mut rearm: Vec<(JobId, u32, SimTime)> = Vec::new();
+    for id in ids.into_iter().rev() {
+        // reversed: each requeue is a push_front, so processing
+        // youngest first leaves the oldest lost job at the queue head
+        // (same convention as the scheduler's reap)
+        let lost = st
+            .head
+            .reserved_hosts(id)
+            .iter()
+            .any(|addr| !st.ip_to_container.contains_key(addr));
+        if lost {
+            VirtualCluster::job_lost(st, now, id, "machine died while the head was down");
+            continue;
+        }
+        if let Some(r) = st.head.running.get(&id) {
+            let started = match r.state {
+                JobState::Running { started } => started,
+                _ => now,
+            };
+            let dur = r
+                .planned_duration
+                .unwrap_or_else(|| r.spec.estimated_duration());
+            rearm.push((id, r.attempt, (started + dur).max(now)));
+        }
+    }
+    // the Lost entries from the validation above must reach the log
+    crate::ha::wal::flush(st);
+    rearm.sort_by_key(|&(id, _, _)| id);
+    for (id, attempt, at) in rearm {
+        eng.schedule_at(at, move |st: &mut ClusterState, eng: &mut Engine<ClusterState>| {
+            VirtualCluster::job_done(st, eng, id, attempt, epoch);
+        });
+    }
+    log::info!(
+        "ha: standby took over at {now} (epoch {}, snapshot: {had_snapshot}, replayed {replayed} wal events)",
+        st.ha.epoch
+    );
+}

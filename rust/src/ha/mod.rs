@@ -1,0 +1,184 @@
+//! Head-node high availability: crash-consistent failover via a
+//! replicated scheduler WAL.
+//!
+//! The paper's cluster has a single head that owns the queue, the
+//! hostfile and the autoscaling decisions — a single point of failure
+//! the paper never addresses. This subsystem closes it with the pieces
+//! the repo already has: the consul Raft quorum as the durable store,
+//! attempt generations as the stale-event fence, and the deterministic
+//! event engine as the replay substrate.
+//!
+//! * [`wal`] — an event-sourced write-ahead log of every head state
+//!   mutation (submit, dispatch, launch, completion, failure,
+//!   preemption, fault requeue, deferral admission, usage accrual),
+//!   serialized through the replicated KV store, so the log survives
+//!   exactly what the Raft quorum survives. Replay feeds the events
+//!   back through the same `Head` methods, reproducing queue order,
+//!   attempt generations, quota pens and ledger charges.
+//! * [`snapshot`] — periodic compact snapshots of the full head state
+//!   (including the decayed tenant ledger) with WAL truncation, so
+//!   replay cost is bounded by the snapshot cadence, not cluster age.
+//! * [`failover`] — the consul-session-style leadership lock (a TTL
+//!   lease the active head refreshes every scheduler tick) and the
+//!   standby takeover: rebuild from snapshot + WAL tail, fence the
+//!   dead head's epoch, re-render the hostfile, re-arm completion
+//!   timers. Running jobs keep running across the failover; no retry
+//!   budget is charged and nothing requeues.
+//!
+//! HA is off by default ([`HaConfig::enabled`]) and costs nothing when
+//! off: the head's journal stays `None` and no extra events are
+//! scheduled, so every pre-HA scenario reproduces byte for byte.
+
+pub mod failover;
+pub mod snapshot;
+pub mod wal;
+
+pub use failover::{HaState, HEAD_LEASE};
+pub use snapshot::HeadDump;
+pub use wal::WalEvent;
+
+use crate::cluster::head::{JobKind, JobState};
+use crate::cluster::vcluster::VirtualCluster;
+use crate::config::ClusterSpec;
+use crate::faults::FaultPlan;
+use crate::sim::SimTime;
+use anyhow::{ensure, Result};
+use std::collections::BTreeMap;
+
+/// Head-availability knobs (the `[ha]` config section).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HaConfig {
+    /// Off by default: the paper's single-head cluster, byte for byte.
+    pub enabled: bool,
+    /// Head lease TTL — how stale the lease must be before the standby
+    /// may declare the head dead and take the lock. Detection latency
+    /// is roughly `lock_ttl + standby_poll`.
+    pub lock_ttl: SimTime,
+    /// Standby monitor poll interval.
+    pub standby_poll: SimTime,
+    /// WAL appends between snapshots (0 = never snapshot; replay cost
+    /// then grows with the full log).
+    pub snapshot_every: u64,
+}
+
+impl Default for HaConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            lock_ttl: SimTime::from_secs(5),
+            standby_poll: SimTime::from_secs(1),
+            snapshot_every: 256,
+        }
+    }
+}
+
+impl HaConfig {
+    /// HA on with the default lock/snapshot cadence.
+    pub fn on() -> Self {
+        Self { enabled: true, ..Self::default() }
+    }
+}
+
+/// What an HA scenario run measured.
+#[derive(Debug, Clone)]
+pub struct HaOutcome {
+    pub jobs_submitted: usize,
+    /// Jobs that reached `Done` (every submitted job, when the failover
+    /// lost nothing).
+    pub jobs_completed: usize,
+    /// Head crashes injected.
+    pub head_crashes: u64,
+    /// Standby takeovers performed.
+    pub takeovers: u64,
+    /// Head-failover MTTR (crash to takeover), mean/max seconds.
+    pub failover_mean: f64,
+    pub failover_max: f64,
+    /// WAL events the last takeover replayed (bounded by the snapshot
+    /// cadence when snapshotting is on).
+    pub replayed_events: u64,
+    /// Total WAL appends over the run.
+    pub wal_appends: u64,
+    /// Snapshots written.
+    pub snapshots: u64,
+    /// Fault requeues — stays 0 when only the head crashes: failover
+    /// charges no retry budget.
+    pub requeues: u64,
+    pub makespan: f64,
+    /// Stable counter snapshot (same-seed determinism checks).
+    pub fingerprint: BTreeMap<String, u64>,
+}
+
+/// Drive a synthetic `(ranks, duration_secs)` trace through an
+/// HA-enabled cluster, optionally crashing the head `crash_at` after
+/// warm-up, and measure the failover. Mirrors
+/// [`faults::run_chaos_trace`](crate::faults::run_chaos_trace) so HA
+/// scenarios stay comparable with the chaos ones. Errors if the trace
+/// has not fully drained after `deadline_secs` of virtual time — which
+/// is exactly what a failover that loses submitted work looks like.
+pub fn run_ha_trace(
+    mut spec: ClusterSpec,
+    trace: &[(u32, u64)],
+    crash_at: Option<SimTime>,
+    warmup_slots: u32,
+    deadline_secs: u64,
+) -> Result<(HaOutcome, VirtualCluster)> {
+    spec.ha.enabled = true;
+    let mut vc = VirtualCluster::new(spec)?;
+    vc.start();
+    ensure!(
+        vc.advance_until(SimTime::from_secs(600), |st| {
+            st.head.slots_available() >= warmup_slots
+        }),
+        "cluster never advertised {warmup_slots} slots"
+    );
+    if let Some(at) = crash_at {
+        vc.inject_faults(&FaultPlan::head_crash(at));
+    }
+    for (i, (ranks, secs)) in trace.iter().enumerate() {
+        vc.submit(
+            &format!("ha-{i}"),
+            *ranks,
+            JobKind::Synthetic { duration: SimTime::from_secs(*secs) },
+        );
+    }
+    let t0 = vc.now();
+    let deadline = t0 + SimTime::from_secs(deadline_secs);
+    while vc.now() < deadline && vc.completed_jobs().len() < trace.len() {
+        vc.advance(SimTime::from_secs(1));
+    }
+    ensure!(
+        vc.completed_jobs().len() == trace.len(),
+        "ha trace never drained: {}/{} jobs accounted for after {deadline_secs}s \
+         (work lost across the failover?)",
+        vc.completed_jobs().len(),
+        trace.len()
+    );
+    let mut completed = 0usize;
+    let mut last_finish = SimTime::ZERO;
+    for rec in vc.completed_jobs() {
+        if let JobState::Done { finished, .. } = rec.state {
+            completed += 1;
+            last_finish = last_finish.max(finished);
+        }
+    }
+    let metrics = vc.metrics();
+    let (failover_mean, failover_max) = metrics
+        .histogram("ha_failover_seconds")
+        .map(|h| (h.mean(), h.max()))
+        .unwrap_or((0.0, 0.0));
+    let outcome = HaOutcome {
+        jobs_submitted: trace.len(),
+        jobs_completed: completed,
+        head_crashes: metrics.counter("head_crashes"),
+        takeovers: metrics.counter("ha_takeovers"),
+        failover_mean,
+        failover_max,
+        replayed_events: vc.state.ha.last_replayed,
+        wal_appends: metrics.counter("ha_wal_appends"),
+        snapshots: metrics.counter("ha_snapshots"),
+        requeues: metrics.counter("jobs_requeued"),
+        makespan: last_finish.saturating_sub(t0).as_secs_f64(),
+        fingerprint: metrics.counters_snapshot(),
+    };
+    Ok((outcome, vc))
+}

@@ -1,0 +1,333 @@
+//! Compact head snapshots: bound WAL replay cost.
+//!
+//! The WAL alone is enough to rebuild the head, but replay cost grows
+//! with the log. Every [`HaConfig::snapshot_every`](crate::ha::HaConfig)
+//! appends, the active head serializes its complete dynamic state —
+//! queue, deferral pens, running pool with reservations, completed
+//! records, retry/attempt/progress maps and the decayed tenant ledger —
+//! into the KV key `vhpc/ha/snapshot`, then deletes the WAL entries the
+//! snapshot covers. A takeover loads the snapshot, replays only the
+//! tail of the log, and is done: replay cost is bounded by the snapshot
+//! cadence, not the age of the cluster.
+//!
+//! The encoding is deterministic (maps are emitted in sorted order,
+//! floats as exact bit patterns), so two snapshots of identical state
+//! are byte-identical — which is what lets the tests assert
+//! dump → encode → decode → restore → dump round-trips exactly.
+
+use crate::cluster::head::{JobRecord, JobSpec, JobState};
+use crate::cluster::vcluster::ClusterState;
+use crate::consul::raft::Command;
+use crate::ha::wal::{
+    dec_result, enc_result, enc_slice, enc_spec, hex_enc, wal_key, Cur, SNAPSHOT_KEY,
+};
+use crate::mpi::hostfile::HostSlot;
+use crate::sim::SimTime;
+use crate::util::ids::JobId;
+
+/// A complete export of the head's dynamic state. Produced by
+/// [`Head::dump`](crate::cluster::head::Head::dump), installed by
+/// [`Head::restore`](crate::cluster::head::Head::restore). Config knobs
+/// (policy, quotas, intervals) are deliberately absent — a standby gets
+/// those from its own deployment configuration, not from the log.
+#[derive(Debug, Clone, Default)]
+pub struct HeadDump {
+    /// Queue entries in dispatch order.
+    pub queue: Vec<(JobSpec, SimTime)>,
+    /// Deferral-pen entries, flattened in (tenant, FIFO) order.
+    pub deferred: Vec<(u64, JobSpec, SimTime)>,
+    /// Running records, sorted by job id.
+    pub running: Vec<JobRecord>,
+    /// Completed records in their recorded order.
+    pub completed: Vec<JobRecord>,
+    /// Per-job reserved hostfile slices, sorted by job id.
+    pub reserved: Vec<(JobId, Vec<HostSlot>)>,
+    /// Fault-retry budget spent, sorted by job id.
+    pub retries: Vec<(JobId, u32)>,
+    /// Attempt generations, sorted by job id.
+    pub attempts: Vec<(JobId, u32)>,
+    /// Credited Jacobi steps from prior attempts, sorted by job id.
+    pub jacobi_progress: Vec<(JobId, usize)>,
+    /// First-node-loss timestamps (MTTR anchors), sorted by job id.
+    pub first_failed_at: Vec<(JobId, SimTime)>,
+    /// The ledger accrual high-water mark.
+    pub last_accrued: SimTime,
+    /// Tenant ledger accounts `(tenant, decayed balance, as-of)`.
+    pub ledger_accounts: Vec<(u64, f64, SimTime)>,
+}
+
+fn enc_state(s: &JobState) -> String {
+    match s {
+        JobState::Queued => "queued".into(),
+        JobState::Running { started } => format!("run:{}", started.as_nanos()),
+        JobState::Done { started, finished } => {
+            format!("done:{}:{}", started.as_nanos(), finished.as_nanos())
+        }
+        JobState::Failed { reason } => format!("fail:{}", hex_enc(reason)),
+    }
+}
+
+fn dec_state(tok: &str) -> Result<JobState, String> {
+    if tok == "queued" {
+        return Ok(JobState::Queued);
+    }
+    if let Some(rest) = tok.strip_prefix("run:") {
+        let ns: u64 = rest.parse().map_err(|_| format!("bad run state {tok}"))?;
+        return Ok(JobState::Running { started: SimTime::from_nanos(ns) });
+    }
+    if let Some(rest) = tok.strip_prefix("done:") {
+        let (a, b) = rest.split_once(':').ok_or_else(|| format!("bad done state {tok}"))?;
+        let s: u64 = a.parse().map_err(|_| format!("bad done state {tok}"))?;
+        let f: u64 = b.parse().map_err(|_| format!("bad done state {tok}"))?;
+        return Ok(JobState::Done {
+            started: SimTime::from_nanos(s),
+            finished: SimTime::from_nanos(f),
+        });
+    }
+    if let Some(rest) = tok.strip_prefix("fail:") {
+        return Ok(JobState::Failed { reason: crate::ha::wal::hex_dec(rest)? });
+    }
+    Err(format!("unknown job state {tok}"))
+}
+
+fn enc_record(r: &JobRecord) -> String {
+    let planned = match r.planned_duration {
+        Some(d) => d.as_nanos().to_string(),
+        None => "-".into(),
+    };
+    format!(
+        "{} {} {} {} {} {}",
+        r.queued_at.as_nanos(),
+        r.attempt,
+        enc_state(&r.state),
+        planned,
+        enc_result(&r.result),
+        enc_spec(&r.spec)
+    )
+}
+
+fn dec_record(cur: &mut Cur) -> Result<JobRecord, String> {
+    let queued_at = cur.time()?;
+    let attempt = cur.u32()?;
+    let state = dec_state(cur.next()?)?;
+    let planned_tok = cur.next()?;
+    let planned_duration = if planned_tok == "-" {
+        None
+    } else {
+        let ns: u64 = planned_tok
+            .parse()
+            .map_err(|_| format!("bad planned duration {planned_tok}"))?;
+        Some(SimTime::from_nanos(ns))
+    };
+    let result = dec_result(cur.next()?)?;
+    let spec = cur.spec()?;
+    Ok(JobRecord { spec, state, result, queued_at, attempt, planned_duration })
+}
+
+/// Serialize a dump plus the WAL cursor it covers (replay resumes at
+/// `start_seq`).
+pub fn encode(dump: &HeadDump, start_seq: u64) -> String {
+    let mut out = String::new();
+    out.push_str("vhpc-ha-snapshot v1\n");
+    out.push_str(&format!("seq {start_seq}\n"));
+    out.push_str(&format!("last_accrued {}\n", dump.last_accrued.as_nanos()));
+    for (spec, at) in &dump.queue {
+        out.push_str(&format!("q {} {}\n", at.as_nanos(), enc_spec(spec)));
+    }
+    for (tenant, spec, at) in &dump.deferred {
+        out.push_str(&format!("d {tenant} {} {}\n", at.as_nanos(), enc_spec(spec)));
+    }
+    for rec in &dump.running {
+        out.push_str(&format!("r {}\n", enc_record(rec)));
+    }
+    for rec in &dump.completed {
+        out.push_str(&format!("c {}\n", enc_record(rec)));
+    }
+    for (id, slice) in &dump.reserved {
+        out.push_str(&format!("res {} {}\n", id.raw(), enc_slice(slice)));
+    }
+    for (id, n) in &dump.retries {
+        out.push_str(&format!("retry {} {n}\n", id.raw()));
+    }
+    for (id, n) in &dump.attempts {
+        out.push_str(&format!("att {} {n}\n", id.raw()));
+    }
+    for (id, n) in &dump.jacobi_progress {
+        out.push_str(&format!("jac {} {n}\n", id.raw()));
+    }
+    for (id, t) in &dump.first_failed_at {
+        out.push_str(&format!("ff {} {}\n", id.raw(), t.as_nanos()));
+    }
+    for (tenant, usage, as_of) in &dump.ledger_accounts {
+        out.push_str(&format!(
+            "acct {tenant} {:016x} {}\n",
+            usage.to_bits(),
+            as_of.as_nanos()
+        ));
+    }
+    out
+}
+
+/// Parse a snapshot back into a dump plus the WAL cursor to resume at.
+pub fn decode(text: &str) -> Result<(HeadDump, u64), String> {
+    let mut lines = text.lines();
+    match lines.next() {
+        Some("vhpc-ha-snapshot v1") => {}
+        other => return Err(format!("bad snapshot header: {other:?}")),
+    }
+    let mut dump = HeadDump::default();
+    let mut start_seq = 0u64;
+    for line in lines {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let mut cur = Cur::new(line);
+        match cur.next()? {
+            "seq" => start_seq = cur.u64()?,
+            "last_accrued" => dump.last_accrued = cur.time()?,
+            "q" => {
+                let at = cur.time()?;
+                dump.queue.push((cur.spec()?, at));
+            }
+            "d" => {
+                let tenant = cur.u64()?;
+                let at = cur.time()?;
+                dump.deferred.push((tenant, cur.spec()?, at));
+            }
+            "r" => dump.running.push(dec_record(&mut cur)?),
+            "c" => dump.completed.push(dec_record(&mut cur)?),
+            "res" => {
+                let id = cur.job_id()?;
+                dump.reserved.push((id, cur.slice()?));
+            }
+            "retry" => {
+                let id = cur.job_id()?;
+                dump.retries.push((id, cur.u32()?));
+            }
+            "att" => {
+                let id = cur.job_id()?;
+                dump.attempts.push((id, cur.u32()?));
+            }
+            "jac" => {
+                let id = cur.job_id()?;
+                dump.jacobi_progress.push((id, cur.usize()?));
+            }
+            "ff" => {
+                let id = cur.job_id()?;
+                dump.first_failed_at.push((id, cur.time()?));
+            }
+            "acct" => {
+                let tenant = cur.u64()?;
+                let bits = u64::from_str_radix(cur.next()?, 16)
+                    .map_err(|_| format!("bad usage bits in: {line}"))?;
+                let as_of = cur.time()?;
+                dump.ledger_accounts.push((tenant, f64::from_bits(bits), as_of));
+            }
+            other => return Err(format!("unknown snapshot line kind {other}: {line}")),
+        }
+    }
+    Ok((dump, start_seq))
+}
+
+/// Write a snapshot of the live head into the KV store and truncate the
+/// WAL entries it covers. Called from the WAL flush path once the log
+/// since the last snapshot reaches the configured length.
+pub(crate) fn write_snapshot(st: &mut ClusterState) {
+    let text = encode(&st.head.dump(), st.ha.next_seq);
+    st.consul
+        .submit(Command::Set { key: SNAPSHOT_KEY.into(), value: text });
+    // the snapshot serializes after the appends it covers in the raft
+    // log, so a reader never sees the truncation before the snapshot
+    let truncated = st.ha.next_seq.saturating_sub(st.ha.truncated_below);
+    for seq in st.ha.truncated_below..st.ha.next_seq {
+        st.consul.submit(Command::Delete { key: wal_key(seq) });
+    }
+    st.ha.truncated_below = st.ha.next_seq;
+    st.ha.appends_since_snapshot = 0;
+    st.metrics.inc("ha_snapshots");
+    st.metrics.add("ha_wal_truncated", truncated);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::head::{Head, JobKind};
+    use crate::sim::SimTime;
+    use crate::util::ids::JobId;
+
+    fn spec(id: u32, ranks: u32, tenant: u64) -> JobSpec {
+        JobSpec {
+            id: JobId::new(id),
+            name: format!("snap {id}"),
+            ranks,
+            kind: JobKind::Synthetic { duration: SimTime::from_secs(40) },
+            priority: 1,
+            tenant,
+        }
+    }
+
+    /// Drive a head through submissions, a dispatch, a loss and a
+    /// completion, then prove dump → encode → decode → restore → dump
+    /// reproduces the encoding byte for byte.
+    #[test]
+    fn dump_roundtrips_byte_identical() {
+        let mut h = Head::new();
+        h.hostfile_text = "10.10.0.2 slots=12\n10.10.0.3 slots=12\n".into();
+        h.submit(spec(0, 16, 1), SimTime::from_secs(1));
+        h.submit(spec(1, 4, 2), SimTime::from_secs(1));
+        h.submit(spec(2, 8, 1), SimTime::from_secs(2));
+        h.start_next(SimTime::from_secs(3)).unwrap();
+        h.start_next(SimTime::from_secs(3)).unwrap();
+        h.running.get_mut(&JobId::new(0)).unwrap().planned_duration =
+            Some(SimTime::from_secs(40));
+        h.handle_lost_job(JobId::new(0), SimTime::from_secs(10), "boom");
+        h.accrue_usage(SimTime::from_secs(12));
+        if let Some(mut rec) = h.finish(JobId::new(1)) {
+            rec.state = JobState::Done {
+                started: SimTime::from_secs(3),
+                finished: SimTime::from_secs(12),
+            };
+            h.completed.push(rec);
+        }
+
+        let dump = h.dump();
+        let text = encode(&dump, 42);
+        let (decoded, seq) = decode(&text).expect("snapshot must decode");
+        assert_eq!(seq, 42);
+
+        let mut restored = Head::new();
+        restored.hostfile_text = h.hostfile_text.clone();
+        restored.restore(decoded);
+        let text2 = encode(&restored.dump(), 42);
+        assert_eq!(text, text2, "restore must reproduce the dump exactly");
+
+        // and the restored head behaves like the original: the lost job
+        // is at the queue head with its bumped attempt
+        let a = h.start_next(SimTime::from_secs(13)).unwrap();
+        let b = restored.start_next(SimTime::from_secs(13)).unwrap();
+        assert_eq!(a.spec.id, b.spec.id);
+        assert_eq!(a.attempt, b.attempt);
+        assert_eq!(a.attempt, 1);
+    }
+
+    #[test]
+    fn decode_rejects_bad_headers_and_lines() {
+        assert!(decode("").is_err());
+        assert!(decode("not a snapshot\n").is_err());
+        assert!(decode("vhpc-ha-snapshot v1\nwat 1 2\n").is_err());
+        assert!(decode("vhpc-ha-snapshot v1\nseq notanumber\n").is_err());
+    }
+
+    #[test]
+    fn empty_head_snapshot_roundtrips() {
+        let h = Head::new();
+        let text = encode(&h.dump(), 0);
+        let (dump, seq) = decode(&text).unwrap();
+        assert_eq!(seq, 0);
+        assert!(dump.queue.is_empty());
+        assert!(dump.running.is_empty());
+        let mut restored = Head::new();
+        restored.restore(dump);
+        assert_eq!(encode(&restored.dump(), 0), text);
+    }
+}

@@ -1,0 +1,655 @@
+//! The scheduler write-ahead log: every head state mutation as a
+//! replayable event, serialized through the consul KV store.
+//!
+//! The head buffers [`WalEvent`]s in an in-memory journal as its
+//! mutation methods run (`Head::submit`, `start_next`, `accrue_usage`,
+//! `preempt`, `handle_lost_job`, …); the cluster drains the buffer at
+//! the end of every engine event that touched the head and appends each
+//! entry to the replicated KV store under `vhpc/ha/wal/<seq>`. Because
+//! the KV store is applied from the Raft log, the WAL survives exactly
+//! what the server quorum survives — a head-process crash loses only
+//! the in-memory `Head`, never the log.
+//!
+//! Replay ([`replay`]) rebuilds a `Head` by feeding the events back
+//! through the *same* mutation methods (submissions re-run the quota
+//! machinery, losses re-run the retry budget, accruals re-charge the
+//! ledger at the original timestamps), so the replayed head is
+//! behaviorally identical to the crashed one: same queue order, same
+//! attempt generations, same deferral pens, same decayed usage charges.
+//! Only dispatch is installed directly from the logged reservation —
+//! re-running the placement policy would need the historical hostfile.
+//!
+//! Events carry their original virtual timestamps; nothing in the
+//! format depends on wall-clock time, so a same-seed run replays
+//! byte-identically.
+
+use crate::cluster::head::{Head, JobKind, JobRecord, JobSpec, JobState, SubmitOutcome};
+use crate::cluster::vcluster::ClusterState;
+use crate::consul::raft::Command;
+use crate::mpi::hostfile::HostSlot;
+use crate::sim::SimTime;
+use crate::util::ids::JobId;
+use crate::vnet::addr::Ipv4;
+
+/// KV prefix for WAL entries (zero-padded seq keeps the listing
+/// time-ordered).
+pub const WAL_PREFIX: &str = "vhpc/ha/wal/";
+/// KV key of the most recent head snapshot.
+pub const SNAPSHOT_KEY: &str = "vhpc/ha/snapshot";
+/// KV key of the leadership record (epoch + takeover time).
+pub const LEADER_KEY: &str = "vhpc/ha/leader";
+
+/// The KV key for WAL sequence number `seq`.
+pub fn wal_key(seq: u64) -> String {
+    format!("{WAL_PREFIX}{seq:020}")
+}
+
+/// One logged head state mutation. Timestamps are the virtual time the
+/// mutation happened at; replay re-applies at the same instants.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WalEvent {
+    /// A submission reached the head's queue/quota machinery.
+    Submitted { at: SimTime, spec: JobSpec },
+    /// A submission was rejected before reaching the queue (e.g. wider
+    /// than the cluster can ever advertise): recorded as Failed.
+    SubmitFailed { at: SimTime, spec: JobSpec, reason: String },
+    /// Deferred jobs were re-admitted from the quota pens.
+    Admitted { at: SimTime },
+    /// Running reservations were charged into the tenant ledger.
+    Accrued { at: SimTime },
+    /// A queued job moved to the running pool on a reserved slice.
+    Dispatched { at: SimTime, id: JobId, attempt: u32, slice: Vec<HostSlot> },
+    /// The dispatcher pinned the attempt's planned duration (and, for
+    /// Jacobi, the solver result computed at launch time).
+    Launched {
+        at: SimTime,
+        id: JobId,
+        attempt: u32,
+        planned: SimTime,
+        result: Option<(usize, f32)>,
+    },
+    /// A running job was checkpointed-and-requeued by the scheduler.
+    Preempted { at: SimTime, id: JobId },
+    /// A running job's reservation lost a node. Replay re-runs the
+    /// retry budget, so requeue-vs-abandon is decided identically.
+    Lost { at: SimTime, id: JobId, reason: String },
+    /// A dispatched job never launched and went back to the queue head.
+    Unlaunched { at: SimTime, id: JobId },
+    /// A running attempt completed.
+    Completed { at: SimTime, id: JobId, attempt: u32 },
+    /// A running job failed terminally (launch error).
+    Failed { at: SimTime, id: JobId, reason: String },
+}
+
+// ---------- text codec ----------
+//
+// One event per KV value, space-separated tokens, hex-armored free
+// text (job names, failure reasons), `f32` results as exact bit
+// patterns. No serde in the offline crate set — and the format doubles
+// as a human-greppable trace of everything the head ever did.
+
+pub(crate) fn hex_enc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() * 2);
+    for b in s.bytes() {
+        out.push_str(&format!("{b:02x}"));
+    }
+    out
+}
+
+pub(crate) fn hex_dec(s: &str) -> Result<String, String> {
+    if !s.is_ascii() {
+        return Err(format!("non-ascii hex string: {s}"));
+    }
+    if s.len() % 2 != 0 {
+        return Err(format!("odd-length hex string: {s}"));
+    }
+    let mut bytes = Vec::with_capacity(s.len() / 2);
+    for i in (0..s.len()).step_by(2) {
+        let b = u8::from_str_radix(&s[i..i + 2], 16)
+            .map_err(|_| format!("bad hex byte in {s}"))?;
+        bytes.push(b);
+    }
+    String::from_utf8(bytes).map_err(|_| format!("hex is not utf-8: {s}"))
+}
+
+pub(crate) fn enc_kind(kind: &JobKind) -> String {
+    match kind {
+        JobKind::Synthetic { duration } => format!("syn:{}", duration.as_nanos()),
+        JobKind::Jacobi { px, py, tile, steps } => format!("jac:{px}:{py}:{tile}:{steps}"),
+    }
+}
+
+pub(crate) fn dec_kind(tok: &str) -> Result<JobKind, String> {
+    if let Some(rest) = tok.strip_prefix("syn:") {
+        let ns: u64 = rest.parse().map_err(|_| format!("bad synthetic duration: {tok}"))?;
+        return Ok(JobKind::Synthetic { duration: SimTime::from_nanos(ns) });
+    }
+    if let Some(rest) = tok.strip_prefix("jac:") {
+        let parts: Vec<&str> = rest.split(':').collect();
+        if parts.len() != 4 {
+            return Err(format!("bad jacobi kind: {tok}"));
+        }
+        let mut vals = [0usize; 4];
+        for (i, p) in parts.iter().enumerate() {
+            vals[i] = p.parse().map_err(|_| format!("bad jacobi field: {tok}"))?;
+        }
+        return Ok(JobKind::Jacobi { px: vals[0], py: vals[1], tile: vals[2], steps: vals[3] });
+    }
+    Err(format!("unknown job kind: {tok}"))
+}
+
+pub(crate) fn enc_spec(s: &JobSpec) -> String {
+    format!(
+        "{} {} {} {} {} n{}",
+        s.id.raw(),
+        s.ranks,
+        s.priority,
+        s.tenant,
+        enc_kind(&s.kind),
+        hex_enc(&s.name)
+    )
+}
+
+pub(crate) fn enc_slice(slice: &[HostSlot]) -> String {
+    let mut out = format!("{}", slice.len());
+    for h in slice {
+        out.push_str(&format!(" {}:{}", h.addr, h.slots));
+    }
+    out
+}
+
+/// Token cursor over one encoded line.
+pub(crate) struct Cur<'a> {
+    toks: std::str::SplitWhitespace<'a>,
+    line: &'a str,
+}
+
+impl<'a> Cur<'a> {
+    pub(crate) fn new(line: &'a str) -> Self {
+        Self { toks: line.split_whitespace(), line }
+    }
+    pub(crate) fn next(&mut self) -> Result<&'a str, String> {
+        self.toks
+            .next()
+            .ok_or_else(|| format!("truncated entry: {}", self.line))
+    }
+    pub(crate) fn u64(&mut self) -> Result<u64, String> {
+        let t = self.next()?;
+        t.parse().map_err(|_| format!("bad u64 {t} in: {}", self.line))
+    }
+    pub(crate) fn u32(&mut self) -> Result<u32, String> {
+        let t = self.next()?;
+        t.parse().map_err(|_| format!("bad u32 {t} in: {}", self.line))
+    }
+    pub(crate) fn i32(&mut self) -> Result<i32, String> {
+        let t = self.next()?;
+        t.parse().map_err(|_| format!("bad i32 {t} in: {}", self.line))
+    }
+    pub(crate) fn usize(&mut self) -> Result<usize, String> {
+        let t = self.next()?;
+        t.parse().map_err(|_| format!("bad usize {t} in: {}", self.line))
+    }
+    pub(crate) fn time(&mut self) -> Result<SimTime, String> {
+        Ok(SimTime::from_nanos(self.u64()?))
+    }
+    pub(crate) fn job_id(&mut self) -> Result<JobId, String> {
+        Ok(JobId::new(self.u32()?))
+    }
+    /// A hex-armored string token with a one-letter tag (`n…`, `r…`).
+    pub(crate) fn tagged_hex(&mut self, tag: char) -> Result<String, String> {
+        let t = self.next()?;
+        let rest = t
+            .strip_prefix(tag)
+            .ok_or_else(|| format!("expected {tag}-tagged token, got {t}"))?;
+        hex_dec(rest)
+    }
+    pub(crate) fn spec(&mut self) -> Result<JobSpec, String> {
+        let id = self.job_id()?;
+        let ranks = self.u32()?;
+        let priority = self.i32()?;
+        let tenant = self.u64()?;
+        let kind = dec_kind(self.next()?)?;
+        let name = self.tagged_hex('n')?;
+        Ok(JobSpec { id, name, ranks, kind, priority, tenant })
+    }
+    pub(crate) fn slice(&mut self) -> Result<Vec<HostSlot>, String> {
+        let n = self.usize()?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let t = self.next()?;
+            let (addr, slots) = t
+                .split_once(':')
+                .ok_or_else(|| format!("bad host slot {t}"))?;
+            let addr = Ipv4::parse(addr).map_err(|e| e.to_string())?;
+            let slots: u32 = slots.parse().map_err(|_| format!("bad slot count {t}"))?;
+            out.push(HostSlot { addr, slots });
+        }
+        Ok(out)
+    }
+}
+
+/// One-token codec for a launch-time Jacobi result (`steps:bits` or
+/// `-`), shared verbatim by the WAL and snapshot formats so the two
+/// can never drift.
+pub(crate) fn enc_result(result: &Option<(usize, f32)>) -> String {
+    match result {
+        Some((steps, residual)) => format!("{steps}:{:08x}", residual.to_bits()),
+        None => "-".into(),
+    }
+}
+
+pub(crate) fn dec_result(tok: &str) -> Result<Option<(usize, f32)>, String> {
+    if tok == "-" {
+        return Ok(None);
+    }
+    let (steps, bits) = tok
+        .split_once(':')
+        .ok_or_else(|| format!("bad result {tok}"))?;
+    let steps: usize = steps.parse().map_err(|_| format!("bad result steps {tok}"))?;
+    let bits = u32::from_str_radix(bits, 16).map_err(|_| format!("bad residual bits {tok}"))?;
+    Ok(Some((steps, f32::from_bits(bits))))
+}
+
+impl WalEvent {
+    /// The event's timestamp (for reports; replay reads it per-variant).
+    pub fn at(&self) -> SimTime {
+        match self {
+            WalEvent::Submitted { at, .. }
+            | WalEvent::SubmitFailed { at, .. }
+            | WalEvent::Admitted { at }
+            | WalEvent::Accrued { at }
+            | WalEvent::Dispatched { at, .. }
+            | WalEvent::Launched { at, .. }
+            | WalEvent::Preempted { at, .. }
+            | WalEvent::Lost { at, .. }
+            | WalEvent::Unlaunched { at, .. }
+            | WalEvent::Completed { at, .. }
+            | WalEvent::Failed { at, .. } => *at,
+        }
+    }
+
+    /// Serialize to one KV value.
+    pub fn encode(&self) -> String {
+        match self {
+            WalEvent::Submitted { at, spec } => {
+                format!("submit {} {}", at.as_nanos(), enc_spec(spec))
+            }
+            WalEvent::SubmitFailed { at, spec, reason } => format!(
+                "sfail {} r{} {}",
+                at.as_nanos(),
+                hex_enc(reason),
+                enc_spec(spec)
+            ),
+            WalEvent::Admitted { at } => format!("admit {}", at.as_nanos()),
+            WalEvent::Accrued { at } => format!("accrue {}", at.as_nanos()),
+            WalEvent::Dispatched { at, id, attempt, slice } => format!(
+                "dispatch {} {} {} {}",
+                at.as_nanos(),
+                id.raw(),
+                attempt,
+                enc_slice(slice)
+            ),
+            WalEvent::Launched { at, id, attempt, planned, result } => format!(
+                "launch {} {} {} {} {}",
+                at.as_nanos(),
+                id.raw(),
+                attempt,
+                planned.as_nanos(),
+                enc_result(result)
+            ),
+            WalEvent::Preempted { at, id } => {
+                format!("preempt {} {}", at.as_nanos(), id.raw())
+            }
+            WalEvent::Lost { at, id, reason } => format!(
+                "lost {} {} r{}",
+                at.as_nanos(),
+                id.raw(),
+                hex_enc(reason)
+            ),
+            WalEvent::Unlaunched { at, id } => {
+                format!("unlaunch {} {}", at.as_nanos(), id.raw())
+            }
+            WalEvent::Completed { at, id, attempt } => {
+                format!("complete {} {} {}", at.as_nanos(), id.raw(), attempt)
+            }
+            WalEvent::Failed { at, id, reason } => format!(
+                "fail {} {} r{}",
+                at.as_nanos(),
+                id.raw(),
+                hex_enc(reason)
+            ),
+        }
+    }
+
+    /// Parse one KV value back into an event.
+    pub fn decode(line: &str) -> Result<WalEvent, String> {
+        let mut cur = Cur::new(line);
+        let kind = cur.next()?;
+        match kind {
+            "submit" => Ok(WalEvent::Submitted { at: cur.time()?, spec: cur.spec()? }),
+            "sfail" => {
+                let at = cur.time()?;
+                let reason = cur.tagged_hex('r')?;
+                Ok(WalEvent::SubmitFailed { at, spec: cur.spec()?, reason })
+            }
+            "admit" => Ok(WalEvent::Admitted { at: cur.time()? }),
+            "accrue" => Ok(WalEvent::Accrued { at: cur.time()? }),
+            "dispatch" => Ok(WalEvent::Dispatched {
+                at: cur.time()?,
+                id: cur.job_id()?,
+                attempt: cur.u32()?,
+                slice: cur.slice()?,
+            }),
+            "launch" => Ok(WalEvent::Launched {
+                at: cur.time()?,
+                id: cur.job_id()?,
+                attempt: cur.u32()?,
+                planned: cur.time()?,
+                result: dec_result(cur.next()?)?,
+            }),
+            "preempt" => Ok(WalEvent::Preempted { at: cur.time()?, id: cur.job_id()? }),
+            "lost" => {
+                let at = cur.time()?;
+                let id = cur.job_id()?;
+                Ok(WalEvent::Lost { at, id, reason: cur.tagged_hex('r')? })
+            }
+            "unlaunch" => Ok(WalEvent::Unlaunched { at: cur.time()?, id: cur.job_id()? }),
+            "complete" => Ok(WalEvent::Completed {
+                at: cur.time()?,
+                id: cur.job_id()?,
+                attempt: cur.u32()?,
+            }),
+            "fail" => {
+                let at = cur.time()?;
+                let id = cur.job_id()?;
+                Ok(WalEvent::Failed { at, id, reason: cur.tagged_hex('r')? })
+            }
+            other => Err(format!("unknown wal event kind: {other}")),
+        }
+    }
+}
+
+// ---------- replay ----------
+
+/// Apply one logged event to a head being rebuilt. The head's journal
+/// must be disabled during replay (a takeover builds the head with
+/// journaling off and enables it afterwards), or replay would re-log
+/// its own input.
+pub fn apply(head: &mut Head, ev: &WalEvent) {
+    match ev {
+        WalEvent::Submitted { at, spec } => {
+            // the quota machinery re-runs deterministically: queued,
+            // deferred and rejected outcomes all reproduce, and a
+            // rejection re-creates the failed record the live head's
+            // driver wrote
+            if let SubmitOutcome::Rejected { spec, reason } = head.submit(spec.clone(), *at) {
+                head.completed.push(JobRecord {
+                    spec,
+                    state: JobState::Failed { reason },
+                    result: None,
+                    queued_at: *at,
+                    attempt: 0,
+                    planned_duration: None,
+                });
+            }
+        }
+        WalEvent::SubmitFailed { at, spec, reason } => {
+            head.completed.push(JobRecord {
+                spec: spec.clone(),
+                state: JobState::Failed { reason: reason.clone() },
+                result: None,
+                queued_at: *at,
+                attempt: 0,
+                planned_duration: None,
+            });
+        }
+        WalEvent::Admitted { .. } => {
+            head.admit_deferred();
+        }
+        WalEvent::Accrued { at } => {
+            head.accrue_usage(*at);
+        }
+        WalEvent::Dispatched { at, id, attempt, slice } => {
+            head.wal_replay_dispatch(*id, *attempt, slice.clone(), *at);
+        }
+        WalEvent::Launched { id, planned, result, .. } => {
+            if let Some(rec) = head.running.get_mut(id) {
+                rec.planned_duration = Some(*planned);
+                rec.result = *result;
+            }
+        }
+        WalEvent::Preempted { at, id } => {
+            head.preempt(*id, *at);
+        }
+        WalEvent::Lost { at, id, reason } => {
+            head.handle_lost_job(*id, *at, reason);
+        }
+        WalEvent::Unlaunched { at, id } => {
+            head.unlaunch(*id, *at);
+        }
+        WalEvent::Completed { at, id, attempt } => {
+            // mirrors the cluster's job_done bookkeeping (the ledger
+            // settlement is a separate Accrued entry just before this)
+            if head.running.get(id).map(|r| r.attempt) == Some(*attempt) {
+                if let Some(mut rec) = head.finish(*id) {
+                    let started = match rec.state {
+                        JobState::Running { started } => started,
+                        _ => *at,
+                    };
+                    rec.state = JobState::Done { started, finished: *at };
+                    head.completed.push(rec);
+                    head.first_failed_at.remove(id);
+                }
+            }
+        }
+        WalEvent::Failed { at: _, id, reason } => {
+            head.fail(*id, reason.clone());
+        }
+    }
+}
+
+/// Replay a sequence of events into `head`. Returns how many applied.
+pub fn replay(head: &mut Head, events: &[WalEvent]) -> usize {
+    for ev in events {
+        apply(head, ev);
+    }
+    events.len()
+}
+
+// ---------- the durable log ----------
+
+/// Append one event straight to the replicated WAL (used for
+/// submissions that arrive while the head is down — the client's retry
+/// lands in the log and the standby replays it at takeover).
+pub(crate) fn append_direct(st: &mut ClusterState, ev: WalEvent) {
+    if !st.ha.config.enabled {
+        return;
+    }
+    let seq = st.ha.next_seq;
+    st.ha.next_seq += 1;
+    st.ha.appends_since_snapshot += 1;
+    st.consul.submit(Command::Set { key: wal_key(seq), value: ev.encode() });
+    st.metrics.inc("ha_wal_appends");
+}
+
+/// Drain the head's in-memory journal into the replicated WAL, then
+/// snapshot if the log has grown past the configured threshold. Called
+/// at the end of every engine event that mutated the head — nothing is
+/// ever left buffered across events, so a head crash (which is itself
+/// an event) can only lose mutations that were never applied.
+pub(crate) fn flush(st: &mut ClusterState) {
+    if !st.ha.config.enabled {
+        return;
+    }
+    for ev in st.head.take_journal() {
+        append_direct(st, ev);
+    }
+    if st.ha.head_alive
+        && st.ha.config.snapshot_every > 0
+        && st.ha.appends_since_snapshot >= st.ha.config.snapshot_every
+    {
+        crate::ha::snapshot::write_snapshot(st);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ids::JobId;
+
+    fn spec(id: u32) -> JobSpec {
+        JobSpec {
+            id: JobId::new(id),
+            name: format!("job {id} (weird name)"),
+            ranks: 8,
+            kind: JobKind::Synthetic { duration: SimTime::from_secs(30) },
+            priority: -2,
+            tenant: 7,
+        }
+    }
+
+    fn jac_spec(id: u32) -> JobSpec {
+        JobSpec {
+            kind: JobKind::Jacobi { px: 4, py: 4, tile: 64, steps: 100 },
+            ..spec(id)
+        }
+    }
+
+    fn host(oct: u8, slots: u32) -> HostSlot {
+        HostSlot { addr: Ipv4::new(10, 10, 0, oct), slots }
+    }
+
+    #[test]
+    fn every_event_kind_roundtrips() {
+        let t = SimTime::from_millis(1234);
+        let events = vec![
+            WalEvent::Submitted { at: t, spec: spec(0) },
+            WalEvent::SubmitFailed {
+                at: t,
+                spec: jac_spec(1),
+                reason: "too wide: needs 99".into(),
+            },
+            WalEvent::Admitted { at: t },
+            WalEvent::Accrued { at: t },
+            WalEvent::Dispatched {
+                at: t,
+                id: JobId::new(2),
+                attempt: 3,
+                slice: vec![host(2, 12), host(3, 4)],
+            },
+            WalEvent::Launched {
+                at: t,
+                id: JobId::new(2),
+                attempt: 3,
+                planned: SimTime::from_secs(60),
+                result: Some((100, 1.25e-7)),
+            },
+            WalEvent::Launched {
+                at: t,
+                id: JobId::new(4),
+                attempt: 0,
+                planned: SimTime::from_secs(5),
+                result: None,
+            },
+            WalEvent::Preempted { at: t, id: JobId::new(5) },
+            WalEvent::Lost { at: t, id: JobId::new(6), reason: "node m3 died".into() },
+            WalEvent::Unlaunched { at: t, id: JobId::new(7) },
+            WalEvent::Completed { at: t, id: JobId::new(8), attempt: 1 },
+            WalEvent::Failed { at: t, id: JobId::new(9), reason: "launch: boom".into() },
+        ];
+        for ev in events {
+            let line = ev.encode();
+            let back = WalEvent::decode(&line).unwrap_or_else(|e| panic!("{line}: {e}"));
+            assert_eq!(back, ev, "roundtrip drift for {line}");
+        }
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(WalEvent::decode("").is_err());
+        assert!(WalEvent::decode("warp 9").is_err());
+        assert!(WalEvent::decode("submit notanumber").is_err());
+        assert!(WalEvent::decode("dispatch 1 2 3 1 nocolon").is_err());
+        assert!(WalEvent::decode("lost 1 2 zzz").is_err(), "untagged reason must fail");
+    }
+
+    #[test]
+    fn hex_roundtrips_arbitrary_text() {
+        for s in ["", "plain", "with space", "emoji ✓ né", "r prefixed"] {
+            assert_eq!(hex_dec(&hex_enc(s)).unwrap(), s);
+        }
+        assert!(hex_dec("abc").is_err(), "odd length");
+        assert!(hex_dec("zz").is_err(), "non-hex");
+    }
+
+    #[test]
+    fn wal_keys_sort_in_sequence_order() {
+        let a = wal_key(9);
+        let b = wal_key(10);
+        let c = wal_key(100_000);
+        assert!(a < b && b < c, "{a} {b} {c}");
+        assert!(a.starts_with(WAL_PREFIX));
+    }
+
+    /// The core crash-consistency property at head level: a head rebuilt
+    /// from the journaled events matches the live head's observable
+    /// state (queue, running pool, attempts, ledger).
+    #[test]
+    fn replayed_head_matches_live_head() {
+        let mut live = Head::new();
+        live.enable_journal();
+        live.hostfile_text = "10.10.0.2 slots=12\n10.10.0.3 slots=12\n".into();
+        let mut log: Vec<WalEvent> = Vec::new();
+
+        live.submit(spec(0), SimTime::from_secs(1));
+        live.submit(
+            JobSpec { ranks: 4, ..spec(1) },
+            SimTime::from_secs(1),
+        );
+        let s0 = live.start_next(SimTime::from_secs(2)).unwrap();
+        assert_eq!(s0.spec.id, JobId::new(0));
+        live.running.get_mut(&JobId::new(0)).unwrap().planned_duration =
+            Some(SimTime::from_secs(30));
+        log.append(&mut live.take_journal());
+        log.push(WalEvent::Launched {
+            at: SimTime::from_secs(2),
+            id: JobId::new(0),
+            attempt: 0,
+            planned: SimTime::from_secs(30),
+            result: None,
+        });
+        let s1 = live.start_next(SimTime::from_secs(3)).unwrap();
+        assert_eq!(s1.spec.id, JobId::new(1));
+        live.handle_lost_job(JobId::new(1), SimTime::from_secs(10), "node died");
+        log.append(&mut live.take_journal());
+
+        let mut rebuilt = Head::new();
+        rebuilt.hostfile_text = live.hostfile_text.clone();
+        replay(&mut rebuilt, &log);
+
+        assert_eq!(rebuilt.queue.len(), live.queue.len());
+        assert_eq!(
+            rebuilt.queue.front().map(|(j, _)| j.id),
+            live.queue.front().map(|(j, _)| j.id)
+        );
+        assert_eq!(rebuilt.running.len(), live.running.len());
+        let lr = &live.running[&JobId::new(0)];
+        let rr = &rebuilt.running[&JobId::new(0)];
+        assert_eq!(rr.attempt, lr.attempt);
+        assert_eq!(rr.planned_duration, lr.planned_duration);
+        assert_eq!(rr.state, lr.state);
+        assert_eq!(rebuilt.reserved_slots(), live.reserved_slots());
+        assert_eq!(rebuilt.free_slots(), live.free_slots());
+        assert_eq!(
+            rebuilt.ledger.usage_at(7, SimTime::from_secs(10)),
+            live.ledger.usage_at(7, SimTime::from_secs(10)),
+            "replayed ledger must charge identically"
+        );
+        // the lost job's rerun dispatches at the same bumped attempt
+        let a = rebuilt.start_next(SimTime::from_secs(11)).unwrap();
+        let b = live.start_next(SimTime::from_secs(11)).unwrap();
+        assert_eq!(a.spec.id, b.spec.id);
+        assert_eq!(a.attempt, b.attempt);
+        assert_eq!(a.attempt, 1, "the fault requeue must have bumped the generation");
+    }
+}

@@ -13,6 +13,7 @@ pub mod config;
 pub mod consul;
 pub mod dockyard;
 pub mod faults;
+pub mod ha;
 pub mod hw;
 pub mod mpi;
 pub mod runtime;

@@ -73,26 +73,38 @@ pub fn decide_fairshare(
 /// Share-capped aggregate queue demand for the autoscaler.
 ///
 /// Input: one entry per tenant with queued work — `(weighted_slots,
-/// widest_job_ranks)`, where `weighted_slots` is the tenant's
-/// priority-weighted queued-slot sum. Each tenant's contribution is
-/// capped at **twice the equal share** of the aggregate (so one heavy
-/// tenant flooding the queue cannot force unbounded scale-up — the
-/// pool provisions for at most 2x its fair slice), but never below the
-/// tenant's widest single job (that width is a hard requirement for
-/// the job ever to start, capacity-wise). With a single active tenant
-/// the cap is `2 x total`, i.e. no cap — the pre-tenancy signal,
-/// byte for byte.
+/// widest_job_ranks, share_weight)`, where `weighted_slots` is the
+/// tenant's priority-weighted queued-slot sum and `share_weight` is
+/// its fair-share multiplier from the
+/// [`UsageLedger`](crate::tenancy::ledger::UsageLedger) (1.0 when
+/// unconfigured). Each tenant's contribution is capped at **twice its
+/// weight-proportional share** of the aggregate — `2 · total · w_t /
+/// Σw` — so one heavy tenant flooding the queue cannot force unbounded
+/// scale-up (the pool provisions for at most 2x its fair slice, and a
+/// weight-2 tenant's slice is twice an unweighted one's), but never
+/// below the tenant's widest single job (that width is a hard
+/// requirement for the job ever to start, capacity-wise). With equal
+/// weights this reduces to twice the equal share, and with a single
+/// active tenant the cap is `2 x total`, i.e. no cap — the pre-tenancy
+/// signal, byte for byte.
 pub fn share_weighted_demand(
-    per_tenant: &std::collections::BTreeMap<u64, (f64, u32)>,
+    per_tenant: &std::collections::BTreeMap<u64, (f64, u32, f64)>,
 ) -> u32 {
     if per_tenant.is_empty() {
         return 0;
     }
-    let total: f64 = per_tenant.values().map(|(w, _)| *w).sum();
-    let cap = 2.0 * total / per_tenant.len() as f64;
+    let total: f64 = per_tenant.values().map(|(w, _, _)| *w).sum();
+    let weight_sum: f64 = per_tenant
+        .values()
+        .map(|(_, _, sw)| if *sw > 0.0 { *sw } else { 1.0 })
+        .sum();
     per_tenant
         .values()
-        .map(|&(w, widest)| w.min(cap).max(widest as f64).ceil() as u32)
+        .map(|&(w, widest, sw)| {
+            let sw = if sw > 0.0 { sw } else { 1.0 };
+            let cap = 2.0 * total * sw / weight_sum;
+            w.min(cap).max(widest as f64).ceil() as u32
+        })
         .sum()
 }
 
@@ -119,6 +131,7 @@ mod tests {
             ranks,
             priority: 0,
             predicted_finish: SimTime::from_secs(finish_secs),
+            preempt_waste: SimTime::ZERO,
         }
     }
 
@@ -176,17 +189,18 @@ mod tests {
 
     #[test]
     fn share_cap_bounds_a_flooding_tenant() {
-        let mut per: BTreeMap<u64, (f64, u32)> = BTreeMap::new();
-        per.insert(1, (1000.0, 24)); // the hog
+        let mut per: BTreeMap<u64, (f64, u32, f64)> = BTreeMap::new();
+        per.insert(1, (1000.0, 24, 1.0)); // the hog
         for t in 2..=10u64 {
-            per.insert(t, (10.0, 8));
+            per.insert(t, (10.0, 8, 1.0));
         }
-        // total 1090 over 10 tenants -> cap 218: the hog contributes 218
+        // total 1090 over 10 equal-weight tenants -> cap 218: the hog
+        // contributes 218
         let got = share_weighted_demand(&per);
         assert_eq!(got, 218 + 9 * 10);
         // a single tenant is never capped (2x its own total)
-        let mut solo: BTreeMap<u64, (f64, u32)> = BTreeMap::new();
-        solo.insert(1, (1000.0, 24));
+        let mut solo: BTreeMap<u64, (f64, u32, f64)> = BTreeMap::new();
+        solo.insert(1, (1000.0, 24, 1.0));
         assert_eq!(share_weighted_demand(&solo), 1000);
         assert_eq!(share_weighted_demand(&BTreeMap::new()), 0);
     }
@@ -195,13 +209,38 @@ mod tests {
     fn share_cap_never_starves_a_single_wide_job() {
         // tenant 1's one 36-rank job among many light tenants: the cap
         // falls below 36 but the widest-job floor keeps it demandable
-        let mut per: BTreeMap<u64, (f64, u32)> = BTreeMap::new();
-        per.insert(1, (36.0, 36));
+        let mut per: BTreeMap<u64, (f64, u32, f64)> = BTreeMap::new();
+        per.insert(1, (36.0, 36, 1.0));
         for t in 2..=12u64 {
-            per.insert(t, (2.0, 2));
+            per.insert(t, (2.0, 2, 1.0));
         }
         // total 58, cap ~9.7 — but tenant 1 still contributes its 36
         let got = share_weighted_demand(&per);
         assert_eq!(got, 36 + 11 * 2);
+    }
+
+    /// Weighted shares thread through the demand cap: a weight-2 tenant
+    /// is provisioned for twice the slice of an equal-weight one, while
+    /// the unweighted tenants keep exactly their old figures.
+    #[test]
+    fn share_cap_scales_with_tenant_weights() {
+        // two identical hogs flood the queue alongside two light tenants
+        let mut per: BTreeMap<u64, (f64, u32, f64)> = BTreeMap::new();
+        per.insert(1, (400.0, 24, 2.0)); // weight-2 hog
+        per.insert(2, (400.0, 24, 1.0)); // unweighted hog
+        per.insert(3, (10.0, 8, 1.0));
+        per.insert(4, (10.0, 8, 1.0));
+        // total 820, Σw = 5: hog1 cap = 2·820·2/5 = 656 (uncapped at
+        // 400), hog2 cap = 2·820/5 = 328
+        let got = share_weighted_demand(&per);
+        assert_eq!(got, 400 + 328 + 10 + 10);
+        // all-equal weights reproduce the unweighted figure exactly
+        let mut eq: BTreeMap<u64, (f64, u32, f64)> = BTreeMap::new();
+        eq.insert(1, (400.0, 24, 1.0));
+        eq.insert(2, (400.0, 24, 1.0));
+        eq.insert(3, (10.0, 8, 1.0));
+        eq.insert(4, (10.0, 8, 1.0));
+        // cap 2·820/4 = 410: nobody capped
+        assert_eq!(share_weighted_demand(&eq), 820);
     }
 }

@@ -68,13 +68,17 @@ fn decay(half_life: SimTime, dt: SimTime) -> f64 {
 }
 
 /// The ledger: lazily-created per-tenant accounts of decayed
-/// slot-second usage.
+/// slot-second usage, plus per-tenant share-weight multipliers.
 #[derive(Debug, Clone)]
 pub struct UsageLedger {
     /// Time for an untouched balance to halve. `ZERO` means no memory
     /// at all (every read sees 0 — fair-share degenerates to FIFO).
     pub half_life: SimTime,
     accounts: HashMap<u64, Account>,
+    /// Per-tenant share multipliers (absent = 1.0). A weight-2 tenant's
+    /// usage normalizes to half, so fair-share grants it twice the
+    /// service, and the autoscaler's share cap scales the same way.
+    weights: HashMap<u64, f64>,
 }
 
 impl Default for UsageLedger {
@@ -87,7 +91,60 @@ impl Default for UsageLedger {
 
 impl UsageLedger {
     pub fn new(half_life: SimTime) -> Self {
-        Self { half_life, accounts: HashMap::new() }
+        Self { half_life, accounts: HashMap::new(), weights: HashMap::new() }
+    }
+
+    /// Set a tenant's fair-share weight multiplier (must be positive;
+    /// non-positive values are ignored). Weight 2.0 earns the tenant
+    /// twice the fair share of an unweighted tenant.
+    pub fn set_weight(&mut self, tenant: u64, weight: f64) {
+        if weight > 0.0 && weight.is_finite() {
+            self.weights.insert(tenant, weight);
+        }
+    }
+
+    /// The tenant's share weight (1.0 unless configured otherwise).
+    pub fn weight(&self, tenant: u64) -> f64 {
+        self.weights.get(&tenant).copied().unwrap_or(1.0)
+    }
+
+    /// Decayed usage divided by the tenant's share weight — what the
+    /// fair-share policy actually orders by. With no weights configured
+    /// this is exactly [`UsageLedger::usage_at`].
+    pub fn normalized_usage_at(&self, tenant: u64, now: SimTime) -> f64 {
+        self.usage_at(tenant, now) / self.weight(tenant)
+    }
+
+    /// A fresh ledger carrying this one's configuration (half-life and
+    /// weights) but no balances — the HA takeover shape: balances come
+    /// from snapshot + WAL replay, config from the deployment.
+    pub fn config_clone(&self) -> UsageLedger {
+        UsageLedger {
+            half_life: self.half_life,
+            accounts: HashMap::new(),
+            weights: self.weights.clone(),
+        }
+    }
+
+    /// Export all accounts `(tenant, decayed balance, as-of)`, sorted by
+    /// tenant — the HA snapshot shape.
+    pub fn export_accounts(&self) -> Vec<(u64, f64, SimTime)> {
+        let mut v: Vec<(u64, f64, SimTime)> = self
+            .accounts
+            .iter()
+            .map(|(&t, a)| (t, a.usage, a.as_of))
+            .collect();
+        v.sort_by_key(|e| e.0);
+        v
+    }
+
+    /// Replace all accounts from an [`UsageLedger::export_accounts`]
+    /// dump (weights and half-life are untouched).
+    pub fn restore_accounts(&mut self, accounts: &[(u64, f64, SimTime)]) {
+        self.accounts = accounts
+            .iter()
+            .map(|&(t, usage, as_of)| (t, Account { usage, as_of }))
+            .collect();
     }
 
     /// Add `slot_seconds` of usage for a tenant at `now`, decaying the
@@ -180,6 +237,46 @@ mod tests {
         assert_eq!(l.active_accounts(), 1);
         assert_eq!(l.usage_at(1, SimTime::from_secs(200)), 0.0);
         assert!(l.usage_at(2, SimTime::from_secs(200)) > 0.0);
+    }
+
+    #[test]
+    fn share_weights_normalize_usage() {
+        let mut l = UsageLedger::new(SimTime::from_secs(600));
+        l.set_weight(1, 2.0);
+        l.set_weight(2, 0.0); // ignored: weights must be positive
+        l.set_weight(3, f64::NAN); // ignored: weights must be finite
+        assert_eq!(l.weight(1), 2.0);
+        assert_eq!(l.weight(2), 1.0);
+        assert_eq!(l.weight(3), 1.0);
+        l.charge(1, 100.0, SimTime::ZERO);
+        l.charge(2, 100.0, SimTime::ZERO);
+        // same raw usage, but tenant 1's normalized view is halved: it
+        // outranks tenant 2 in fair-share order
+        assert_eq!(l.usage_at(1, SimTime::ZERO), l.usage_at(2, SimTime::ZERO));
+        assert_eq!(l.normalized_usage_at(1, SimTime::ZERO), 50.0);
+        assert_eq!(l.normalized_usage_at(2, SimTime::ZERO), 100.0);
+    }
+
+    #[test]
+    fn export_restore_roundtrips_and_config_clone_keeps_weights() {
+        let mut l = UsageLedger::new(SimTime::from_secs(600));
+        l.set_weight(7, 3.0);
+        l.charge(7, 123.456, SimTime::from_secs(10));
+        l.charge(9, 0.125, SimTime::from_secs(20));
+        let dump = l.export_accounts();
+        assert_eq!(dump.len(), 2);
+        assert!(dump[0].0 < dump[1].0, "export must be tenant-sorted");
+        let mut fresh = l.config_clone();
+        assert_eq!(fresh.active_accounts(), 0, "config clone carries no balances");
+        assert_eq!(fresh.weight(7), 3.0, "config clone keeps weights");
+        fresh.restore_accounts(&dump);
+        for t in [7u64, 9] {
+            assert_eq!(
+                fresh.usage_at(t, SimTime::from_secs(30)),
+                l.usage_at(t, SimTime::from_secs(30)),
+                "restored balance must read bit-identically for tenant {t}"
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,292 @@
+//! Head-node HA end-to-end: crash-consistent failover via the
+//! replicated scheduler WAL.
+//!
+//! Pure control-plane (synthetic jobs only), so these run in the
+//! `--no-default-features` CI configuration.
+
+use std::collections::BTreeMap;
+use vhpc::cluster::head::{JobKind, JobState};
+use vhpc::cluster::vcluster::VirtualCluster;
+use vhpc::config::ClusterSpec;
+use vhpc::faults::FaultPlan;
+use vhpc::ha::run_ha_trace;
+use vhpc::sim::SimTime;
+use vhpc::util::ids::MachineId;
+
+/// 4 machines (3 compute, 36 slots), fixed pool (min == max) so the
+/// determinism comparisons see zero autoscaler churn, HA on.
+fn spec() -> ClusterSpec {
+    let mut spec = ClusterSpec::paper_testbed();
+    spec.machines = 4;
+    spec.machine_spec.boot_time = SimTime::from_secs(5);
+    spec.autoscale.min_nodes = 3;
+    spec.autoscale.max_nodes = 3;
+    spec.autoscale.interval = SimTime::from_secs(2);
+    spec.autoscale.cooldown = SimTime::from_secs(4);
+    spec.autoscale.idle_timeout = SimTime::from_secs(600);
+    spec.ha.enabled = true;
+    spec
+}
+
+/// The canonical mixed trace: wide + narrow, long + short, so the
+/// crash lands with jobs running, queued and already completed.
+fn trace() -> Vec<(u32, u64)> {
+    vec![(24, 90), (8, 30), (8, 40), (16, 50), (4, 20), (8, 60)]
+}
+
+/// Drop the counters a failover legitimately adds (HA bookkeeping, the
+/// injected fault itself, and the takeover's extra hostfile render) —
+/// everything else must match a crash-free run exactly.
+fn scheduling_counters(fp: &BTreeMap<String, u64>) -> BTreeMap<String, u64> {
+    fp.iter()
+        .filter(|(k, _)| {
+            !k.starts_with("ha_")
+                && k.as_str() != "head_crashes"
+                && k.as_str() != "faults_scheduled"
+                && k.as_str() != "hostfile_renders"
+        })
+        .map(|(k, v)| (k.clone(), *v))
+        .collect()
+}
+
+#[test]
+fn failover_completes_every_job_without_charging_retry_budget() {
+    let (o, vc) = run_ha_trace(spec(), &trace(), Some(SimTime::from_secs(33)), 36, 2400)
+        .expect("ha trace must drain");
+    assert_eq!(o.head_crashes, 1);
+    assert_eq!(o.takeovers, 1, "exactly one standby promotion");
+    assert_eq!(o.jobs_completed, o.jobs_submitted, "no submitted work may be lost");
+    assert_eq!(
+        o.requeues, 0,
+        "the failover itself must not charge any job's retry budget"
+    );
+    assert!(
+        o.failover_max > 0.0 && o.failover_max < 30.0,
+        "failover MTTR should be lease-bounded, got {}",
+        o.failover_max
+    );
+    assert!(o.wal_appends > 0, "the head must have journaled its mutations");
+    for rec in vc.completed_jobs() {
+        assert!(matches!(rec.state, JobState::Done { .. }), "{:?}", rec.state);
+        assert_eq!(rec.attempt, 0, "no job may have been re-dispatched as a retry");
+    }
+    assert_eq!(vc.state.ha.epoch, 1);
+    let leader = vc.state.consul.kv().get("vhpc/ha/leader").unwrap_or("");
+    assert!(leader.starts_with("epoch 1 "), "leader record not updated: {leader}");
+}
+
+/// The chaos satellite: crash the head while a job is mid-flight
+/// (dispatch logged, completion not) — the job is neither re-run nor
+/// lost. Its completion event hits the dead head, is dropped by the
+/// epoch fence, and the promoted standby's re-armed timer delivers it.
+#[test]
+fn head_crash_mid_dispatch_double_runs_nothing_and_loses_nothing() {
+    let jobs = vec![(24u32, 22u64), (8, 60)];
+    let (o, vc) = run_ha_trace(spec(), &jobs, Some(SimTime::from_secs(20)), 36, 1200)
+        .expect("ha trace must drain");
+    assert_eq!(o.jobs_completed, 2);
+    assert_eq!(
+        vc.metrics().counter("jobs_started"),
+        2,
+        "a job whose dispatch was logged must not be dispatched again"
+    );
+    assert_eq!(o.requeues, 0, "nothing requeues across a failover");
+    assert!(
+        vc.metrics().counter("ha_dropped_completions") >= 1,
+        "the mid-outage completion must have been fenced at the dead head"
+    );
+    // the fenced completion was delivered by the new head instead:
+    // every record is Done, none Failed
+    for rec in vc.completed_jobs() {
+        assert!(matches!(rec.state, JobState::Done { .. }), "{:?}", rec.state);
+    }
+}
+
+/// Same seed, head crash vs no crash: the scheduling outcome —
+/// everything the metrics count except the failover's own bookkeeping
+/// — must be byte-identical. This is the WAL-replay determinism
+/// guarantee: the replayed head is the same head.
+#[test]
+fn crashed_run_matches_crash_free_run_modulo_failover_counters() {
+    let (clean, _) =
+        run_ha_trace(spec(), &trace(), None, 36, 2400).expect("clean run must drain");
+    let (crashed, _) = run_ha_trace(spec(), &trace(), Some(SimTime::from_secs(33)), 36, 2400)
+        .expect("crashed run must drain");
+    assert_eq!(clean.takeovers, 0);
+    assert_eq!(crashed.takeovers, 1);
+    assert_eq!(
+        scheduling_counters(&clean.fingerprint),
+        scheduling_counters(&crashed.fingerprint),
+        "a mid-trace head crash must not change the scheduling outcome"
+    );
+}
+
+/// Two identical crashed runs replay byte-identically, WAL counters
+/// included.
+#[test]
+fn crashed_runs_are_deterministic() {
+    let (a, _) = run_ha_trace(spec(), &trace(), Some(SimTime::from_secs(25)), 36, 2400).unwrap();
+    let (b, _) = run_ha_trace(spec(), &trace(), Some(SimTime::from_secs(25)), 36, 2400).unwrap();
+    assert_eq!(a.fingerprint, b.fingerprint, "same-seed HA runs diverged");
+    assert_eq!(a.replayed_events, b.replayed_events);
+    assert_eq!(a.makespan, b.makespan);
+}
+
+/// Snapshots bound replay: with a short snapshot cadence the takeover
+/// replays only the WAL tail, however long the run was.
+#[test]
+fn snapshotting_bounds_takeover_replay() {
+    let mut s = spec();
+    s.ha.snapshot_every = 8;
+    let jobs: Vec<(u32, u64)> = (0..12u32)
+        .map(|i| (4 + (i % 3) * 4, 20 + (i as u64 % 4) * 10))
+        .collect();
+    let (o, vc) =
+        run_ha_trace(s, &jobs, Some(SimTime::from_secs(70)), 36, 2400).expect("must drain");
+    assert_eq!(o.jobs_completed, o.jobs_submitted);
+    assert_eq!(o.takeovers, 1);
+    assert!(o.snapshots >= 1, "the short cadence must have snapshotted");
+    assert!(
+        vc.metrics().counter("ha_snapshot_restores") == 1,
+        "the takeover must have restored from the snapshot"
+    );
+    assert!(
+        o.replayed_events <= 8 + 16,
+        "replay must be bounded by the snapshot cadence (plus one flush batch), got {}",
+        o.replayed_events
+    );
+    assert!(
+        o.wal_appends > o.replayed_events,
+        "most of the log ({} appends) must have been truncated into snapshots, \
+         yet {} events were replayed",
+        o.wal_appends,
+        o.replayed_events
+    );
+}
+
+/// A submission that arrives while the head is down lands in the
+/// replicated WAL and is scheduled by the promoted standby: no client
+/// ever observes lost work.
+#[test]
+fn submissions_during_the_outage_are_replayed_by_the_standby() {
+    let mut vc = VirtualCluster::new(spec()).unwrap();
+    vc.start();
+    assert!(vc.advance_until(SimTime::from_secs(300), |st| {
+        st.head.slots_available() >= 36
+    }));
+    vc.submit("before", 16, JobKind::Synthetic { duration: SimTime::from_secs(120) });
+    assert!(vc.advance_until(SimTime::from_secs(30), |st| st.head.running.len() == 1));
+    vc.inject_faults(&FaultPlan::head_crash(SimTime::ZERO));
+    vc.advance(SimTime::from_secs(2));
+    assert!(vc.state.ha.head_down(), "the injected crash must take the head down");
+    // the head is down: this submission can only exist in the WAL
+    vc.submit("during", 8, JobKind::Synthetic { duration: SimTime::from_secs(30) });
+    assert_eq!(vc.metrics().counter("jobs_submitted"), 2);
+    let ok = vc.advance_until(SimTime::from_secs(600), |st| st.head.completed.len() == 2);
+    assert!(ok, "both jobs must complete after the takeover");
+    for rec in vc.completed_jobs() {
+        assert!(matches!(rec.state, JobState::Done { .. }), "{:?}", rec.state);
+    }
+    assert_eq!(vc.metrics().counter("ha_takeovers"), 1);
+}
+
+/// A machine that dies while the head is down has no head to fail its
+/// jobs; the takeover must validate every replayed reservation against
+/// the live container map and fail those jobs over *before* re-arming
+/// completions — otherwise a re-armed timer would complete the job on
+/// dead slots (the phantom-completion bug the recovery pipeline fixed,
+/// re-introduced for the outage window).
+#[test]
+fn machine_death_during_the_outage_is_not_a_phantom_completion() {
+    let mut vc = VirtualCluster::new(spec()).unwrap();
+    vc.start();
+    assert!(vc.advance_until(SimTime::from_secs(300), |st| {
+        st.head.slots_available() >= 36
+    }));
+    // 30 ranks spans all three compute nodes
+    vc.submit("doomed", 30, JobKind::Synthetic { duration: SimTime::from_secs(120) });
+    assert!(vc.advance_until(SimTime::from_secs(30), |st| st.head.running.len() == 1));
+    vc.inject_faults(&FaultPlan::head_crash(SimTime::ZERO));
+    vc.advance(SimTime::from_secs(1));
+    assert!(vc.state.ha.head_down());
+    // the machine dies under the job while no head is watching
+    vc.kill_machine(MachineId::new(2));
+    vc.advance(SimTime::from_secs(10));
+    assert_eq!(vc.metrics().counter("ha_takeovers"), 1);
+    assert!(
+        vc.completed_jobs().is_empty(),
+        "job completed on dead slots: {:?}",
+        vc.completed_jobs()[0].state
+    );
+    assert_eq!(
+        vc.metrics().counter("jobs_requeued"),
+        1,
+        "the takeover must fail the job over (machine death is a real fault)"
+    );
+    // the autoscaler replaces the dead machine and the rerun completes
+    let ok = vc.advance_until(SimTime::from_secs(900), |st| !st.head.completed.is_empty());
+    assert!(ok, "the failed-over job never completed after capacity returned");
+    assert!(matches!(vc.completed_jobs()[0].state, JobState::Done { .. }));
+    // the zombie attempt's original timer fired into the new epoch and
+    // was fenced — never completing the rerun early
+    assert!(vc.metrics().counter("ha_dropped_completions") >= 1);
+}
+
+/// The partial-partition satellite: an agent that can reach only a
+/// minority (non-leader) consul server cannot commit TTL refreshes, so
+/// its node flaps out of the hostfile; once the window closes the
+/// existing anti-entropy path re-registers it. An agent whose subset
+/// contains the leader never flaps.
+#[test]
+fn partial_partition_health_flap_resolves_via_anti_entropy() {
+    let mut spec = ClusterSpec::paper_testbed();
+    spec.machines = 3;
+    spec.machine_spec.boot_time = SimTime::from_secs(5);
+    spec.autoscale.min_nodes = 2;
+    spec.autoscale.max_nodes = 2;
+    spec.autoscale.interval = SimTime::from_secs(2);
+    spec.autoscale.cooldown = SimTime::from_secs(4);
+    let mut vc = VirtualCluster::new(spec).unwrap();
+    vc.start();
+    assert!(vc.advance_until(SimTime::from_secs(300), |st| {
+        st.head.hostfile().map(|h| h.hosts.len()) == Some(2)
+    }));
+    let leader = vc.state.consul.leader_index().expect("quorum has a leader") as u32;
+    let minority: Vec<u32> = (0..3u32).filter(|s| *s != leader).take(1).collect();
+    vc.inject_faults(&FaultPlan::partial_partition(
+        vec![2],
+        minority,
+        SimTime::ZERO,
+        SimTime::from_secs(90),
+    ));
+    // writes can't commit without the leader: the TTL runs out and the
+    // node drops from the hostfile
+    let ok = vc.advance_until(SimTime::from_secs(150), |st| {
+        st.head.hostfile().map(|h| h.hosts.len()) == Some(1)
+    });
+    assert!(ok, "partially partitioned node never flapped out: {}", vc.hostfile());
+    assert_eq!(vc.metrics().counter("partial_partitions_injected"), 1);
+    // the window closes: agent anti-entropy re-registers the reaped
+    // service and the node returns
+    let ok = vc.advance_until(SimTime::from_secs(300), |st| {
+        st.head.hostfile().map(|h| h.hosts.len()) == Some(2)
+    });
+    assert!(ok, "health flap never resolved after the heal: {}", vc.hostfile());
+    assert!(
+        vc.metrics().counter("agent_reregistrations") >= 1,
+        "recovery must go through the existing anti-entropy path"
+    );
+    // control: a subset that contains the leader commits writes — no flap
+    vc.inject_faults(&FaultPlan::partial_partition(
+        vec![2],
+        vec![leader],
+        SimTime::ZERO,
+        SimTime::from_secs(60),
+    ));
+    vc.advance(SimTime::from_secs(45));
+    assert_eq!(
+        vc.state.head.hostfile().map(|h| h.hosts.len()),
+        Some(2),
+        "a leader-reachable agent must keep its health check passing"
+    );
+}
