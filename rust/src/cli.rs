@@ -15,6 +15,7 @@
 //!                 [--snapshot-every N] [--ticks T]   (drain deadline, 1s ticks)
 //! vhpc build      [--dockerfile F]
 //! vhpc bench-net  [--bridge MODE]
+//! vhpc lint       [--fix-waivers] [paths…]
 //! vhpc version
 //! ```
 
@@ -457,6 +458,7 @@ pub fn main() -> i32 {
         "ha" => parse_flags(rest).and_then(cmd_ha),
         "build" => parse_flags(rest).and_then(cmd_build),
         "bench-net" => parse_flags(rest).and_then(cmd_bench_net),
+        "lint" => return crate::lint::cli_main(rest),
         "help" | "--help" | "-h" => {
             println!(
                 "vhpc — virtual HPC cluster with auto-scaling (Yu & Huang 2015 reproduction)\n\n\
@@ -468,6 +470,7 @@ pub fn main() -> i32 {
                  vhpc ha        [--jobs N] [--machines M] [--crash-at S] [--lock-ttl S] [--snapshot-every N] [--ticks T]\n  \
                  vhpc build     [--dockerfile F]\n  \
                  vhpc bench-net [--bridge docker0|bridge0|host]\n  \
+                 vhpc lint      [--fix-waivers] [paths…]   (determinism static analysis; see lint.toml)\n  \
                  vhpc version"
             );
             Ok(())

@@ -171,6 +171,23 @@ impl Autoscaler {
         action
     }
 
+    /// Re-arm the per-direction cooldowns from WAL-replayed marks: a
+    /// standby taking over mid-cooldown must keep honouring it, not
+    /// grant itself a free scaling action. The low-utilization clock is
+    /// deliberately cleared — idleness must be re-observed by the new
+    /// head, never assumed from before the outage.
+    pub fn restore_cooldowns(&mut self, last_up: Option<SimTime>, last_down: Option<SimTime>) {
+        self.last_up_at = last_up;
+        self.last_down_at = last_down;
+        self.low_util_since = None;
+    }
+
+    /// The armed cooldown marks `(last_up, last_down)` — what a head
+    /// snapshot carries across a failover.
+    pub fn cooldown_marks(&self) -> (Option<SimTime>, Option<SimTime>) {
+        (self.last_up_at, self.last_down_at)
+    }
+
     /// The executor reports that the `Down` decided at `at` retired no
     /// nodes (every candidate was busy): un-arm the down cooldown so
     /// the next opportunity isn't delayed by a no-op, and drop the
@@ -351,6 +368,21 @@ mod tests {
         // incident over: the idle clock starts fresh from recovery
         assert_eq!(a.decide(obs_u(400, 3, 0, 0, 0, 0)), ScaleAction::None);
         assert_eq!(a.decide(obs_u(521, 3, 0, 0, 0, 0)), ScaleAction::Down(2));
+    }
+
+    #[test]
+    fn restored_cooldowns_keep_blocking_after_takeover() {
+        let mut a = Autoscaler::new(config());
+        assert_eq!(a.decide(obs(0, 1, 0, 40)), ScaleAction::Up(3));
+        let (up, down) = a.cooldown_marks();
+        assert!(up.is_some());
+        // a fresh policy (the standby's) with the marks restored still
+        // honours the 30s Up cooldown armed before the "crash"...
+        let mut b = Autoscaler::new(config());
+        b.restore_cooldowns(up, down);
+        assert_eq!(b.decide(obs(5, 1, 0, 40)), ScaleAction::None);
+        // ...and scales again once it expires
+        assert_eq!(b.decide(obs(31, 1, 0, 40)), ScaleAction::Up(3));
     }
 
     #[test]

@@ -60,6 +60,11 @@ pub enum JobKind {
 /// preemption cost are tunable without touching the numerics.
 pub const JACOBI_CHECKPOINT_STEPS: usize = 20;
 
+/// Default cap on the in-memory completed-job history (and therefore on
+/// the HA snapshot's completed section). Far above any driver trace,
+/// but finite: a long-lived head no longer grows without bound.
+pub const DEFAULT_COMPLETED_RETENTION: usize = 10_000;
+
 /// Jacobi residual-check (allreduce) cadence, in solver steps — a
 /// numerical-reporting knob only. Restart checkpoints are governed by
 /// [`Head::checkpoint_every_steps`].
@@ -203,6 +208,19 @@ pub struct Head {
     /// Per-job slot reservations (slices of the advertised hostfile).
     reserved: HashMap<JobId, Vec<HostSlot>>,
     pub completed: Vec<JobRecord>,
+    /// Cap on `completed`: once exceeded, the oldest records are
+    /// dropped and counted in `completed_trimmed`. `0` = unlimited.
+    /// Record terminal jobs through [`Head::record_terminal`] so the
+    /// cap is enforced on every path (live, WAL replay, restore).
+    pub completed_retention: usize,
+    /// Completed records dropped by the retention cap — keeps
+    /// [`Head::completed_total`] monotonic for driver progress checks.
+    pub completed_trimmed: u64,
+    /// When the autoscaler last scaled up / retired nodes. Journaled
+    /// through the WAL so a takeover re-arms the per-direction
+    /// cooldowns instead of granting itself a free scaling action.
+    pub last_scale_up: Option<SimTime>,
+    pub last_scale_down: Option<SimTime>,
     pub poll_interval: SimTime,
     /// Cap on concurrent jobs (`usize::MAX` = slot-limited only). Set to
     /// 1 to reproduce the old one-job-at-a-time head for comparisons.
@@ -275,6 +293,10 @@ impl Head {
             running: HashMap::new(),
             reserved: HashMap::new(),
             completed: Vec::new(),
+            completed_retention: DEFAULT_COMPLETED_RETENTION,
+            completed_trimmed: 0,
+            last_scale_up: None,
+            last_scale_down: None,
             poll_interval: SimTime::from_millis(200),
             max_concurrent: usize::MAX,
             max_retries: 3,
@@ -336,7 +358,7 @@ impl Head {
 
     /// Slots held by running jobs' reservations.
     pub fn reserved_slots(&self) -> u32 {
-        self.running.values().map(|r| r.spec.ranks).sum()
+        self.running.values().map(|r| r.spec.ranks).sum() // lint: allow(map-iter) u32 sum, order-independent
     }
 
     /// Slots demanded by jobs still waiting in the queue.
@@ -375,7 +397,7 @@ impl Head {
     /// Reserved slot count per host address (for overbooking checks).
     pub fn reserved_per_host(&self) -> HashMap<Ipv4, u32> {
         let mut held: HashMap<Ipv4, u32> = HashMap::new();
-        for slice in self.reserved.values() {
+        for slice in self.reserved.values() { // lint: allow(map-iter) commutative accumulation into a map
             for h in slice {
                 *held.entry(h.addr).or_insert(0) += h.slots;
             }
@@ -387,7 +409,7 @@ impl Head {
     /// must not retire while jobs hold them).
     pub fn reserved_addrs(&self) -> HashSet<Ipv4> {
         self.reserved
-            .values()
+            .values() // lint: allow(map-iter) collected into a set, order-free
             .flat_map(|slice| slice.iter().map(|h| h.addr))
             .collect()
     }
@@ -469,7 +491,7 @@ impl Head {
     /// Slots a tenant's running jobs currently hold.
     pub fn tenant_running_slots(&self, tenant: u64) -> u32 {
         self.running
-            .values()
+            .values() // lint: allow(map-iter) u32 sum, order-independent
             .filter(|r| r.spec.tenant == tenant)
             .map(|r| r.spec.ranks)
             .sum()
@@ -480,7 +502,7 @@ impl Head {
     /// autoscaler demand clamp (one pass over the running pool).
     fn running_slots_by_tenant(&self) -> HashMap<u64, u32> {
         let mut by_tenant: HashMap<u64, u32> = HashMap::new();
-        for r in self.running.values() {
+        for r in self.running.values() { // lint: allow(map-iter) commutative accumulation into a map
             *by_tenant.entry(r.spec.tenant).or_insert(0) += r.spec.ranks;
         }
         by_tenant
@@ -533,7 +555,7 @@ impl Head {
         }
         let mut charges: Vec<(JobId, u64, f64)> = self
             .running
-            .values()
+            .values() // lint: sorted
             .filter_map(|r| {
                 let started = match r.state {
                     JobState::Running { started } => started,
@@ -653,7 +675,7 @@ impl Head {
             // the (hash-ordered) running pool
             let mut running_view: Vec<crate::cluster::policy::RunningJob> = self
                 .running
-                .values()
+                .values() // lint: sorted
                 .map(|r| crate::cluster::policy::RunningJob {
                     id: r.spec.id,
                     ranks: r.spec.ranks,
@@ -675,14 +697,25 @@ impl Head {
                     if self.running.len() >= self.max_concurrent {
                         return None;
                     }
-                    let (spec, queued_at) =
-                        self.queue.remove(eligible[idx]).expect("index in range");
-                    let slice = if self.policy.topo_aware {
+                    let Some((spec, queued_at)) = self.queue.remove(eligible[idx]) else {
+                        // Policy handed back an index the queue no longer
+                        // has. A desync here means a scheduler bug, but the
+                        // head must degrade (skip the cycle), not die.
+                        log::warn!("start_next: policy index out of range, skipping cycle");
+                        return None;
+                    };
+                    let carved = if self.policy.topo_aware {
                         crate::cluster::policy::carve_topo(&mut free, spec.ranks, &self.rack_of)
                     } else {
                         carve(&mut free, spec.ranks)
-                    }
-                    .expect("fit checked by the policy");
+                    };
+                    let Some(slice) = carved else {
+                        // The policy checked fit before deciding Start; if
+                        // the carve still fails, requeue and degrade.
+                        log::warn!("start_next: carve failed after fit check, requeueing {}", spec.id);
+                        self.queue.push_front((spec, queued_at));
+                        return None;
+                    };
                     let attempt = self.attempts.get(&spec.id).copied().unwrap_or(0);
                     self.reserved.insert(spec.id, slice.clone());
                     self.running.insert(
@@ -749,7 +782,46 @@ impl Head {
         if let Some(mut rec) = self.finish(id) {
             self.first_failed_at.remove(&id);
             rec.state = JobState::Failed { reason };
-            self.completed.push(rec);
+            self.record_terminal(rec);
+        }
+    }
+
+    /// Append a terminal (Done/Failed) record, enforcing the retention
+    /// cap. Every completion path — live cluster, WAL replay, snapshot
+    /// restore — funnels through here so the in-memory history and the
+    /// HA snapshot stay bounded identically on both sides of a failover.
+    pub fn record_terminal(&mut self, rec: JobRecord) {
+        self.completed.push(rec);
+        self.trim_completed();
+    }
+
+    /// Terminal records ever seen (retained + trimmed): the
+    /// driver-facing progress counter, immune to the retention cap.
+    pub fn completed_total(&self) -> usize {
+        self.completed_trimmed as usize + self.completed.len()
+    }
+
+    fn trim_completed(&mut self) {
+        if self.completed_retention > 0 && self.completed.len() > self.completed_retention {
+            let excess = self.completed.len() - self.completed_retention;
+            self.completed.drain(..excess);
+            self.completed_trimmed += excess as u64;
+        }
+    }
+
+    /// The autoscaler scaled up at `at`: arm the mark and journal it.
+    pub fn note_scale_up(&mut self, at: SimTime) {
+        self.last_scale_up = Some(at);
+        if let Some(j) = self.journal.as_mut() {
+            j.push(crate::ha::wal::WalEvent::ScaleUp { at });
+        }
+    }
+
+    /// The autoscaler retired at least one node at `at`.
+    pub fn note_scale_down(&mut self, at: SimTime) {
+        self.last_scale_down = Some(at);
+        if let Some(j) = self.journal.as_mut() {
+            j.push(crate::ha::wal::WalEvent::ScaleDown { at });
         }
     }
 
@@ -763,7 +835,7 @@ impl Head {
             .unwrap_or_default();
         let mut ids: Vec<JobId> = self
             .reserved
-            .iter()
+            .iter() // lint: sorted
             .filter(|(_, slice)| slice.iter().any(|h| !advertised.contains(&h.addr)))
             .map(|(&id, _)| id)
             .collect();
@@ -776,7 +848,7 @@ impl Head {
     pub fn jobs_on_addr(&self, addr: Ipv4) -> Vec<JobId> {
         let mut ids: Vec<JobId> = self
             .reserved
-            .iter()
+            .iter() // lint: sorted
             .filter(|(_, slice)| slice.iter().any(|h| h.addr == addr))
             .map(|(&id, _)| id)
             .collect();
@@ -1044,11 +1116,11 @@ impl Head {
     /// byte-identically.
     pub fn dump(&self) -> crate::ha::snapshot::HeadDump {
         fn sorted<K: Ord + Copy, V: Clone>(m: &HashMap<K, V>) -> Vec<(K, V)> {
-            let mut v: Vec<(K, V)> = m.iter().map(|(&k, val)| (k, val.clone())).collect();
+            let mut v: Vec<(K, V)> = m.iter().map(|(&k, val)| (k, val.clone())).collect(); // lint: sorted
             v.sort_by(|a, b| a.0.cmp(&b.0));
             v
         }
-        let mut running: Vec<JobRecord> = self.running.values().cloned().collect();
+        let mut running: Vec<JobRecord> = self.running.values().cloned().collect(); // lint: sorted
         running.sort_by_key(|r| r.spec.id);
         let mut deferred = Vec::new();
         for (&tenant, pen) in &self.deferred {
@@ -1068,6 +1140,9 @@ impl Head {
             first_failed_at: sorted(&self.first_failed_at),
             last_accrued: self.last_accrued,
             ledger_accounts: self.ledger.export_accounts(),
+            completed_trimmed: self.completed_trimmed,
+            last_scale_up: self.last_scale_up,
+            last_scale_down: self.last_scale_down,
         }
     }
 
@@ -1083,6 +1158,10 @@ impl Head {
         }
         self.running = d.running.into_iter().map(|r| (r.spec.id, r)).collect();
         self.completed = d.completed;
+        self.completed_trimmed = d.completed_trimmed;
+        self.trim_completed();
+        self.last_scale_up = d.last_scale_up;
+        self.last_scale_down = d.last_scale_down;
         self.reserved = d.reserved.into_iter().collect();
         self.retries = d.retries.into_iter().collect();
         self.attempts = d.attempts.into_iter().collect();
@@ -1150,6 +1229,51 @@ mod tests {
 
     fn jobt(id: u32, ranks: u32, secs: u64, tenant: u64) -> JobSpec {
         JobSpec { tenant, ..jobd(id, ranks, secs) }
+    }
+
+    #[test]
+    fn completed_history_is_bounded() {
+        let mut h = Head::new();
+        h.completed_retention = 3;
+        for i in 0..5 {
+            h.record_terminal(JobRecord {
+                spec: job(i, 1),
+                state: JobState::Failed { reason: "x".into() },
+                result: None,
+                queued_at: SimTime::ZERO,
+                attempt: 0,
+                planned_duration: None,
+            });
+        }
+        assert_eq!(h.completed.len(), 3, "history capped at the retention");
+        assert_eq!(h.completed_trimmed, 2);
+        assert_eq!(h.completed_total(), 5, "total stays monotonic");
+        assert_eq!(h.completed[0].spec.id, JobId::new(2), "oldest dropped first");
+        // the trim count and cap survive a dump/restore roundtrip
+        let dump = h.dump();
+        let mut back = Head::new();
+        back.completed_retention = 3;
+        back.restore(dump);
+        assert_eq!(back.completed_total(), 5);
+        assert_eq!(back.completed.len(), 3);
+    }
+
+    #[test]
+    fn zero_retention_means_unlimited() {
+        let mut h = Head::new();
+        h.completed_retention = 0;
+        for i in 0..50 {
+            h.record_terminal(JobRecord {
+                spec: job(i, 1),
+                state: JobState::Failed { reason: "x".into() },
+                result: None,
+                queued_at: SimTime::ZERO,
+                attempt: 0,
+                planned_duration: None,
+            });
+        }
+        assert_eq!(h.completed.len(), 50);
+        assert_eq!(h.completed_trimmed, 0);
     }
 
     #[test]

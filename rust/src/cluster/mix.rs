@@ -169,7 +169,7 @@ pub fn run_policy_trace(
     }
     let t0 = vc.now();
     let deadline = t0 + SimTime::from_secs(deadline_secs);
-    while vc.now() < deadline && vc.completed_jobs().len() < trace.len() {
+    while vc.now() < deadline && vc.completed_total() < trace.len() {
         vc.advance(SimTime::from_secs(1));
         let overbooked = vc.state.head.overbooked_hosts();
         ensure!(overbooked.is_empty(), "double-booked hosts: {overbooked:?}");
@@ -182,9 +182,9 @@ pub fn run_policy_trace(
         .map(|h| h.max() as usize)
         .unwrap_or(0);
     ensure!(
-        vc.completed_jobs().len() == trace.len(),
+        vc.completed_total() == trace.len(),
         "trace never drained: {}/{} jobs done after {deadline_secs}s",
-        vc.completed_jobs().len(),
+        vc.completed_total(),
         trace.len()
     );
     let mut waits = Vec::with_capacity(trace.len());
@@ -299,13 +299,13 @@ pub fn run_tenant_trace(
     }
     let submitted = arrivals.len();
     let deadline = t0 + SimTime::from_secs(deadline_secs);
-    while vc.now() < deadline && vc.completed_jobs().len() < submitted {
+    while vc.now() < deadline && vc.completed_total() < submitted {
         vc.advance(SimTime::from_secs(1));
     }
     ensure!(
-        vc.completed_jobs().len() == submitted,
+        vc.completed_total() == submitted,
         "tenant trace never drained: {}/{} jobs accounted for after {deadline_secs}s",
-        vc.completed_jobs().len(),
+        vc.completed_total(),
         submitted
     );
 

@@ -138,7 +138,7 @@ impl VirtualCluster {
         let mut consul = ConsulCluster::new(spec.consul_servers, spec.seed);
         // control-plane RPC delay from the fabric's machine-level model
         {
-            let f = fabric.lock().unwrap();
+            let f = fabric.lock().unwrap_or_else(|e| e.into_inner());
             consul.rpc_delay = f.control_msg_time(MachineId::new(0), MachineId::new(1.min(spec.machines - 1)), 256);
         }
 
@@ -170,6 +170,7 @@ impl VirtualCluster {
         };
         let ckpt = state.spec.jacobi_checkpoint_steps.max(1);
         state.head.checkpoint_every_steps = ckpt;
+        state.head.completed_retention = state.spec.completed_retention;
         if state.ha.config.enabled {
             state.head.enable_journal();
         }
@@ -307,10 +308,18 @@ impl VirtualCluster {
         st.metrics.add("bytes_pulled", receipt.pulled_bytes);
         st.metrics
             .observe("pull_seconds", receipt.pull_time.as_secs_f64());
-        let ip = st.engines[idx].container(cid).unwrap().ip.unwrap();
+        let Some(ip) = st.engines[idx].container(cid).and_then(|c| c.ip) else {
+            // The engine accepted the run but the container has no lease —
+            // treat it like any other deploy failure and park the node.
+            st.metrics.inc("deploy_failures");
+            log::warn!("deploy on {m}: container {cid} has no address, powering off");
+            st.node_states[idx] = NodeState::Off;
+            st.plant.machine_mut(m).power_off();
+            return;
+        };
         st.containers[idx] = Some(cid);
         st.ip_to_container.insert(ip, cid);
-        st.fabric.lock().unwrap().place(cid, m);
+        st.fabric.lock().unwrap_or_else(|e| e.into_inner()).place(cid, m);
         eng.schedule_after(receipt.total(), move |st, eng| {
             Self::container_up(st, eng, m, cid, ip)
         });
@@ -633,7 +642,7 @@ impl VirtualCluster {
             };
             record.state = JobState::Done { started, finished: eng.now() };
             st.metrics.inc("jobs_completed");
-            st.head.completed.push(record);
+            st.head.record_terminal(record);
             if let Some(t0) = st.head.first_failed_at.remove(&id) {
                 st.metrics
                     .observe("job_mttr_seconds", eng.now().saturating_sub(t0).as_secs_f64());
@@ -745,6 +754,9 @@ impl VirtualCluster {
                         started += 1;
                     }
                 }
+                // arm + journal the Up cooldown mark so a takeover
+                // keeps honouring it
+                st.head.note_scale_up(eng.now());
                 st.metrics.add("scale_up_nodes", started as u64);
             }
             ScaleAction::Down(n) => {
@@ -776,6 +788,9 @@ impl VirtualCluster {
                     // dispatched onto a just-retired host in the window
                     // before the next template poll
                     Self::refresh_hostfile(st, eng.now());
+                    // only a Down that actually retired something arms
+                    // (and journals) the cooldown — mirrors down_was_noop
+                    st.head.note_scale_down(eng.now());
                 } else {
                     // nothing was retirable: don't let the phantom Down
                     // burn a cooldown or pollute the action log
@@ -785,6 +800,7 @@ impl VirtualCluster {
             }
             ScaleAction::None => {}
         }
+        crate::ha::wal::flush(st);
         let interval = st.spec.spec_autoscale_interval();
         eng.schedule_after(interval, Self::autoscale_event);
     }
@@ -799,10 +815,10 @@ impl VirtualCluster {
             let machine = &mut st.plant.machines[idx];
             let _ = st.engines[idx].remove(cid, machine);
             st.consul.agent_remove(AgentId::new(cid.raw()));
-            if let Some(ip) = st.ip_to_container.iter().find(|(_, c)| **c == cid).map(|(ip, _)| *ip) {
+            if let Some(ip) = st.ip_to_container.iter().find(|(_, c)| **c == cid).map(|(ip, _)| *ip) { // lint: allow(map-iter) unique reverse lookup
                 st.ip_to_container.remove(&ip);
             }
-            st.fabric.lock().unwrap().unplace(cid);
+            st.fabric.lock().unwrap_or_else(|e| e.into_inner()).unplace(cid);
         }
         st.plant.machine_mut(m).power_off();
         st.node_states[idx] = NodeState::Off;
@@ -871,7 +887,7 @@ impl VirtualCluster {
                     reason: reason.clone(),
                 });
             }
-            self.state.head.completed.push(JobRecord {
+            self.state.head.record_terminal(JobRecord {
                 spec,
                 state: JobState::Failed { reason },
                 result: None,
@@ -905,7 +921,7 @@ impl VirtualCluster {
             SubmitOutcome::Rejected { spec, reason } => {
                 self.state.metrics.inc("jobs_rejected");
                 self.state.metrics.inc("jobs_rejected_quota");
-                self.state.head.completed.push(JobRecord {
+                self.state.head.record_terminal(JobRecord {
                     spec,
                     state: JobState::Failed { reason },
                     result: None,
@@ -944,14 +960,14 @@ impl VirtualCluster {
             st.consul.agent_remove(AgentId::new(cid.raw()));
             if let Some(ip) = st
                 .ip_to_container
-                .iter()
+                .iter() // lint: allow(map-iter) unique reverse lookup
                 .find(|(_, c)| **c == cid)
                 .map(|(ip, _)| *ip)
             {
                 st.ip_to_container.remove(&ip);
                 dead_ip = Some(ip);
             }
-            st.fabric.lock().unwrap().unplace(cid);
+            st.fabric.lock().unwrap_or_else(|e| e.into_inner()).unplace(cid);
         }
         st.plant.machine_mut(m).power_off();
         st.node_states[idx] = NodeState::Off;
@@ -1143,6 +1159,13 @@ impl VirtualCluster {
 
     pub fn completed_jobs(&self) -> &[JobRecord] {
         &self.state.head.completed
+    }
+
+    /// Terminal jobs ever recorded, including records dropped by the
+    /// completed-history retention cap — the progress counter driver
+    /// wait loops should use instead of `completed_jobs().len()`.
+    pub fn completed_total(&self) -> usize {
+        self.state.head.completed_total()
     }
 
     pub fn metrics(&self) -> &Metrics {

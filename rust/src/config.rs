@@ -188,6 +188,10 @@ pub struct ClusterSpec {
     /// completed multiple). Decoupled from the residual cadence; the
     /// default preserves the historical behavior.
     pub jacobi_checkpoint_steps: usize,
+    /// Cap on the head's in-memory completed-job history (and the HA
+    /// snapshot's completed section). `0` = unlimited; the default
+    /// keeps ~10k terminal records, far above any driver trace.
+    pub completed_retention: usize,
     pub seed: u64,
     pub autoscale: AutoscaleConfig,
     /// Per-tenant fair-share weight multipliers (`[tenant_weights]`
@@ -220,6 +224,7 @@ impl ClusterSpec {
             slots_per_node: 12,
             racks: 0,
             jacobi_checkpoint_steps: crate::cluster::head::JACOBI_CHECKPOINT_STEPS,
+            completed_retention: crate::cluster::head::DEFAULT_COMPLETED_RETENTION,
             seed: 42,
             autoscale: AutoscaleConfig::default(),
             tenant_weights: Vec::new(),
@@ -279,6 +284,10 @@ impl ClusterSpec {
             if let Some(v) = c.get("jacobi_checkpoint_steps") {
                 spec.jacobi_checkpoint_steps =
                     (req_int("cluster", "jacobi_checkpoint_steps", v)?.max(1)) as usize;
+            }
+            if let Some(v) = c.get("completed_retention") {
+                spec.completed_retention =
+                    req_int("cluster", "completed_retention", v)?.max(0) as usize;
             }
             if let Some(v) = c.get("seed") {
                 spec.seed = req_int("cluster", "seed", v)? as u64;

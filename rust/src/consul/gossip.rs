@@ -110,7 +110,7 @@ impl GossipNode {
     pub fn alive_members(&self) -> Vec<AgentId> {
         let mut v: Vec<AgentId> = self
             .members
-            .iter()
+            .iter() // lint: sorted
             .filter(|(_, m)| m.state == MemberState::Alive)
             .map(|(&a, _)| a)
             .collect();
@@ -220,12 +220,15 @@ impl GossipNode {
     }
 
     fn random_member(&mut self, state: MemberState, exclude: &[AgentId]) -> Option<AgentId> {
-        let candidates: Vec<AgentId> = self
+        let mut candidates: Vec<AgentId> = self
             .members
-            .iter()
+            .iter() // lint: sorted
             .filter(|(a, m)| m.state == state && !exclude.contains(a))
             .map(|(&a, _)| a)
             .collect();
+        // Sort before the seeded draw: hash order would make the pick
+        // differ across processes even with identical RNG state.
+        candidates.sort();
         self.rng.choose(&candidates).copied()
     }
 
@@ -234,15 +237,16 @@ impl GossipNode {
         let mut out = Vec::new();
 
         // 1. expire suspicions
-        let expired: Vec<AgentId> = self
+        let mut expired: Vec<AgentId> = self
             .members
-            .iter()
+            .iter() // lint: sorted
             .filter(|(_, m)| {
                 m.state == MemberState::Suspect
                     && now.saturating_sub(m.suspect_since) >= self.suspicion_timeout
             })
             .map(|(&a, _)| a)
             .collect();
+        expired.sort();
         for a in expired {
             let inc = self.members[&a].incarnation;
             self.apply_update(
@@ -322,9 +326,11 @@ impl GossipNode {
     fn full_state(&self) -> Vec<Update> {
         let mut state: Vec<Update> = self
             .members
-            .iter()
+            .iter() // lint: sorted
             .map(|(&agent, m)| Update { agent, state: m.state, incarnation: m.incarnation })
             .collect();
+        // Deterministic sync payload order regardless of hash seed.
+        state.sort_by_key(|u| u.agent);
         state.push(Update {
             agent: self.id,
             state: MemberState::Alive,

@@ -64,7 +64,7 @@ impl HealthRegistry {
     pub fn passing(&self, now: SimTime) -> Vec<&str> {
         let mut v: Vec<&str> = self
             .checks
-            .iter()
+            .iter() // lint: sorted
             .filter(|(_, c)| now.saturating_sub(c.last_refresh) <= c.ttl)
             .map(|(n, _)| n.as_str())
             .collect();

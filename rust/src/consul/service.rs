@@ -298,7 +298,8 @@ impl ConsulCluster {
                     let out = self.servers[i].raft.tick(now);
                     self.send_raft(i as u32, out);
                 }
-                let ids: Vec<AgentId> = self.agents.keys().copied().collect();
+                let mut ids: Vec<AgentId> = self.agents.keys().copied().collect(); // lint: sorted
+                ids.sort();
                 for id in ids {
                     let now = self.now;
                     let out = self.agents.get_mut(&id).unwrap().tick(now);

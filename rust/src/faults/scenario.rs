@@ -79,7 +79,7 @@ pub fn run_chaos_trace(
     }
     let t0 = vc.now();
     let deadline = t0 + SimTime::from_secs(deadline_secs);
-    while vc.now() < deadline && vc.completed_jobs().len() < trace.len() {
+    while vc.now() < deadline && vc.completed_total() < trace.len() {
         // NOTE: unlike the fault-free trace driver, reservations may
         // transiently overbook between a hostfile shrink and the next
         // reaper tick — that window is exactly what the recovery
@@ -87,9 +87,9 @@ pub fn run_chaos_trace(
         vc.advance(SimTime::from_secs(1));
     }
     ensure!(
-        vc.completed_jobs().len() == trace.len(),
+        vc.completed_total() == trace.len(),
         "trace never drained: {}/{} jobs accounted for after {deadline_secs}s",
-        vc.completed_jobs().len(),
+        vc.completed_total(),
         trace.len()
     );
 

@@ -183,6 +183,7 @@ pub(crate) fn takeover(st: &mut ClusterState, eng: &mut Engine<ClusterState>) {
         head.policy = old.policy;
         head.quotas = old.quotas;
         head.checkpoint_every_steps = old.checkpoint_every_steps;
+        head.completed_retention = old.completed_retention;
         head.ledger = old.ledger.config_clone();
     }
     // derived topology state is re-learned from the live cluster, not
@@ -202,6 +203,17 @@ pub(crate) fn takeover(st: &mut ClusterState, eng: &mut Engine<ClusterState>) {
     let replayed = crate::ha::wal::replay(&mut head, &events);
     head.enable_journal();
     st.head = head;
+
+    // The autoscaler is part of the head process: the standby starts a
+    // fresh policy from deployment config and re-arms the per-direction
+    // cooldowns from the replayed marks, so a Down decided just before
+    // the crash still holds the new head to its cooldown (and a recent
+    // Up doesn't repeat). The low-utilization clock starts over — idle
+    // time across an outage is not evidence of an idle cluster.
+    let mut autoscaler =
+        crate::cluster::autoscaler::Autoscaler::new(st.spec.autoscale.clone());
+    autoscaler.restore_cooldowns(st.head.last_scale_up, st.head.last_scale_down);
+    st.autoscaler = autoscaler;
 
     st.ha.epoch += 1;
     st.ha.head_alive = true;

@@ -143,14 +143,14 @@ pub fn run_ha_trace(
     }
     let t0 = vc.now();
     let deadline = t0 + SimTime::from_secs(deadline_secs);
-    while vc.now() < deadline && vc.completed_jobs().len() < trace.len() {
+    while vc.now() < deadline && vc.completed_total() < trace.len() {
         vc.advance(SimTime::from_secs(1));
     }
     ensure!(
-        vc.completed_jobs().len() == trace.len(),
+        vc.completed_total() == trace.len(),
         "ha trace never drained: {}/{} jobs accounted for after {deadline_secs}s \
          (work lost across the failover?)",
-        vc.completed_jobs().len(),
+        vc.completed_total(),
         trace.len()
     );
     let mut completed = 0usize;

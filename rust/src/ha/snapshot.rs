@@ -54,6 +54,15 @@ pub struct HeadDump {
     pub last_accrued: SimTime,
     /// Tenant ledger accounts `(tenant, decayed balance, as-of)`.
     pub ledger_accounts: Vec<(u64, f64, SimTime)>,
+    /// Completed records dropped by the head's retention cap before
+    /// this snapshot was taken (keeps completed totals monotonic
+    /// across a failover).
+    pub completed_trimmed: u64,
+    /// The autoscaler's per-direction cooldown marks: when the pool
+    /// last scaled up / last retired nodes. A takeover re-arms the
+    /// standby's cooldowns from these.
+    pub last_scale_up: Option<SimTime>,
+    pub last_scale_down: Option<SimTime>,
 }
 
 fn enc_state(s: &JobState) -> String {
@@ -124,6 +133,21 @@ fn dec_record(cur: &mut Cur) -> Result<JobRecord, String> {
     Ok(JobRecord { spec, state, result, queued_at, attempt, planned_duration })
 }
 
+fn enc_opt_time(t: Option<SimTime>) -> String {
+    match t {
+        Some(t) => t.as_nanos().to_string(),
+        None => "-".into(),
+    }
+}
+
+fn dec_opt_time(tok: &str) -> Result<Option<SimTime>, String> {
+    if tok == "-" {
+        return Ok(None);
+    }
+    let ns: u64 = tok.parse().map_err(|_| format!("bad optional time {tok}"))?;
+    Ok(Some(SimTime::from_nanos(ns)))
+}
+
 /// Serialize a dump plus the WAL cursor it covers (replay resumes at
 /// `start_seq`).
 pub fn encode(dump: &HeadDump, start_seq: u64) -> String {
@@ -131,6 +155,12 @@ pub fn encode(dump: &HeadDump, start_seq: u64) -> String {
     out.push_str("vhpc-ha-snapshot v1\n");
     out.push_str(&format!("seq {start_seq}\n"));
     out.push_str(&format!("last_accrued {}\n", dump.last_accrued.as_nanos()));
+    out.push_str(&format!("trimmed {}\n", dump.completed_trimmed));
+    out.push_str(&format!(
+        "scale {} {}\n",
+        enc_opt_time(dump.last_scale_up),
+        enc_opt_time(dump.last_scale_down)
+    ));
     for (spec, at) in &dump.queue {
         out.push_str(&format!("q {} {}\n", at.as_nanos(), enc_spec(spec)));
     }
@@ -185,6 +215,11 @@ pub fn decode(text: &str) -> Result<(HeadDump, u64), String> {
         match cur.next()? {
             "seq" => start_seq = cur.u64()?,
             "last_accrued" => dump.last_accrued = cur.time()?,
+            "trimmed" => dump.completed_trimmed = cur.u64()?,
+            "scale" => {
+                dump.last_scale_up = dec_opt_time(cur.next()?)?;
+                dump.last_scale_down = dec_opt_time(cur.next()?)?;
+            }
             "q" => {
                 let at = cur.time()?;
                 dump.queue.push((cur.spec()?, at));

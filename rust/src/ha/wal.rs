@@ -79,6 +79,13 @@ pub enum WalEvent {
     Completed { at: SimTime, id: JobId, attempt: u32 },
     /// A running job failed terminally (launch error).
     Failed { at: SimTime, id: JobId, reason: String },
+    /// The autoscaler powered machines up: the per-direction cooldown
+    /// mark a takeover must keep honouring (a standby that forgot a
+    /// recent `Up` would immediately scale again off stale demand).
+    ScaleUp { at: SimTime },
+    /// The autoscaler retired at least one node (no-op `Down`s are
+    /// un-armed by the executor and never logged).
+    ScaleDown { at: SimTime },
 }
 
 // ---------- text codec ----------
@@ -264,7 +271,9 @@ impl WalEvent {
             | WalEvent::Lost { at, .. }
             | WalEvent::Unlaunched { at, .. }
             | WalEvent::Completed { at, .. }
-            | WalEvent::Failed { at, .. } => *at,
+            | WalEvent::Failed { at, .. }
+            | WalEvent::ScaleUp { at }
+            | WalEvent::ScaleDown { at } => *at,
         }
     }
 
@@ -318,6 +327,8 @@ impl WalEvent {
                 id.raw(),
                 hex_enc(reason)
             ),
+            WalEvent::ScaleUp { at } => format!("scaleup {}", at.as_nanos()),
+            WalEvent::ScaleDown { at } => format!("scaledown {}", at.as_nanos()),
         }
     }
 
@@ -364,6 +375,8 @@ impl WalEvent {
                 let id = cur.job_id()?;
                 Ok(WalEvent::Failed { at, id, reason: cur.tagged_hex('r')? })
             }
+            "scaleup" => Ok(WalEvent::ScaleUp { at: cur.time()? }),
+            "scaledown" => Ok(WalEvent::ScaleDown { at: cur.time()? }),
             other => Err(format!("unknown wal event kind: {other}")),
         }
     }
@@ -383,7 +396,7 @@ pub fn apply(head: &mut Head, ev: &WalEvent) {
             // rejection re-creates the failed record the live head's
             // driver wrote
             if let SubmitOutcome::Rejected { spec, reason } = head.submit(spec.clone(), *at) {
-                head.completed.push(JobRecord {
+                head.record_terminal(JobRecord {
                     spec,
                     state: JobState::Failed { reason },
                     result: None,
@@ -394,7 +407,7 @@ pub fn apply(head: &mut Head, ev: &WalEvent) {
             }
         }
         WalEvent::SubmitFailed { at, spec, reason } => {
-            head.completed.push(JobRecord {
+            head.record_terminal(JobRecord {
                 spec: spec.clone(),
                 state: JobState::Failed { reason: reason.clone() },
                 result: None,
@@ -437,13 +450,19 @@ pub fn apply(head: &mut Head, ev: &WalEvent) {
                         _ => *at,
                     };
                     rec.state = JobState::Done { started, finished: *at };
-                    head.completed.push(rec);
+                    head.record_terminal(rec);
                     head.first_failed_at.remove(id);
                 }
             }
         }
         WalEvent::Failed { at: _, id, reason } => {
             head.fail(*id, reason.clone());
+        }
+        WalEvent::ScaleUp { at } => {
+            head.last_scale_up = Some(*at);
+        }
+        WalEvent::ScaleDown { at } => {
+            head.last_scale_down = Some(*at);
         }
     }
 }
@@ -556,6 +575,8 @@ mod tests {
             WalEvent::Unlaunched { at: t, id: JobId::new(7) },
             WalEvent::Completed { at: t, id: JobId::new(8), attempt: 1 },
             WalEvent::Failed { at: t, id: JobId::new(9), reason: "launch: boom".into() },
+            WalEvent::ScaleUp { at: t },
+            WalEvent::ScaleDown { at: t },
         ];
         for ev in events {
             let line = ev.encode();

@@ -15,6 +15,7 @@ pub mod dockyard;
 pub mod faults;
 pub mod ha;
 pub mod hw;
+pub mod lint;
 pub mod mpi;
 pub mod runtime;
 pub mod sim;

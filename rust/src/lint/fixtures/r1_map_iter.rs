@@ -1,0 +1,43 @@
+//! Lint self-test fixture: R1 hash-order iteration. This file is never
+//! compiled into the crate — the lint tests feed it to the analyzer
+//! and assert each deliberate violation fires (4 in total).
+
+use std::collections::HashMap;
+
+pub struct Pool {
+    jobs: HashMap<u64, u32>,
+}
+
+impl Pool {
+    /// violation: `for … in self.jobs.iter()` visits in hash order
+    pub fn total(&self) -> u32 {
+        let mut t = 0;
+        for (_, v) in self.jobs.iter() {
+            t += v;
+        }
+        t
+    }
+
+    /// violation: `.keys()` on a tracked field
+    pub fn ids(&self) -> Vec<u64> {
+        self.jobs.keys().copied().collect()
+    }
+
+    /// violation: `for … in &map`
+    pub fn sweep(&mut self) {
+        for _ in &self.jobs {}
+    }
+
+    /// clean: the waiver proves the collection is ordered before use
+    pub fn sorted_ids(&self) -> Vec<u64> {
+        let mut v: Vec<u64> = self.jobs.keys().copied().collect(); // lint: sorted
+        v.sort();
+        v
+    }
+}
+
+/// violation: iteration over a local map binding
+pub fn locals() {
+    let m: HashMap<u32, u32> = HashMap::new();
+    for _ in m.values() {}
+}

@@ -1,0 +1,14 @@
+//! Lint self-test fixture: R2 wall-clock & ambient entropy. Never
+//! compiled — fed to the analyzer by the lint tests (4 violations:
+//! three `Instant` mentions, one `RandomState`).
+
+use std::time::Instant;
+
+pub fn stamp() -> Instant {
+    Instant::now()
+}
+
+pub fn entropy_seed() -> usize {
+    let s = std::collections::hash_map::RandomState::new();
+    std::mem::size_of_val(&s)
+}

@@ -1,0 +1,14 @@
+//! Lint self-test fixture: R3 shared-mutable-state escape hatches.
+//! Never compiled — fed to the analyzer by the lint tests
+//! (3 violations: `static mut`, `thread::spawn`, `unsafe`).
+
+pub static mut COUNTER: u64 = 0;
+
+pub fn run() -> u64 {
+    let h = std::thread::spawn(|| 7u64);
+    let v = h.join().unwrap_or(0);
+    unsafe {
+        COUNTER += v;
+        COUNTER
+    }
+}

@@ -1,0 +1,20 @@
+//! Lint self-test fixture: R4 panic-class calls in hot paths. Never
+//! compiled — fed to the analyzer by the lint tests (3 violations:
+//! `unwrap`, `expect`, `panic!`; the degrading form is clean).
+
+pub fn pop(v: &mut Vec<u32>) -> u32 {
+    v.pop().unwrap()
+}
+
+pub fn first(v: &[u32]) -> u32 {
+    *v.first().expect("non-empty")
+}
+
+pub fn boom() -> ! {
+    panic!("engine event died")
+}
+
+/// clean: degrades instead of dying
+pub fn degrade(v: &[u32]) -> u32 {
+    v.first().copied().unwrap_or(0)
+}

@@ -1,0 +1,24 @@
+//! Lint self-test fixture: R5 float accumulation over unordered
+//! containers. Never compiled — fed to the analyzer by the lint tests
+//! (1 float-sum violation + the underlying map-iter; the sorted form
+//! is clean).
+
+use std::collections::HashMap;
+
+pub struct Ledger {
+    balances: HashMap<u64, f64>,
+}
+
+impl Ledger {
+    /// violations: map-iter AND float-sum (rounding depends on order)
+    pub fn total(&self) -> f64 {
+        self.balances.values().sum()
+    }
+
+    /// clean: ordered before accumulation
+    pub fn total_sorted(&self) -> f64 {
+        let mut v: Vec<f64> = self.balances.values().copied().collect(); // lint: sorted
+        v.sort_by(f64::total_cmp);
+        v.iter().sum()
+    }
+}

@@ -1,0 +1,26 @@
+//! Lint self-test fixture: waiver syntax enforcement. Never compiled —
+//! fed to the analyzer by the lint tests (2 `waiver` violations for
+//! malformed directives, which therefore do NOT suppress their 2
+//! map-iter violations, plus 1 stale-waiver warning).
+
+use std::collections::HashMap;
+
+pub struct S {
+    m: HashMap<u32, u32>,
+}
+
+impl S {
+    /// a waiver without a reason is itself a violation, and suppresses
+    /// nothing
+    pub fn no_reason(&self) -> usize {
+        self.m.keys().count() // lint: allow(map-iter)
+    }
+
+    /// unknown rule names are violations too
+    pub fn unknown_rule(&self) -> usize {
+        self.m.keys().count() // lint: allow(made-up-rule) because it felt right
+    }
+}
+
+/// a well-formed waiver that suppresses nothing is a stale warning
+pub fn stale() {} // lint: sorted

@@ -1,0 +1,375 @@
+//! A small Rust lexer for the lint pass: just enough of the language to
+//! tokenize real source without being fooled by strings, comments,
+//! lifetimes, or raw strings.
+//!
+//! The output is a flat token stream (identifiers, punctuation,
+//! literals) plus the list of line comments — the rules engine matches
+//! token shapes (`.` `iter` `(`), and waivers live in the comments.
+//! This is deliberately not a parser: the rules only need local token
+//! context, and a full grammar would be a liability in a std-only tool.
+
+/// Token classes the rules engine distinguishes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`self`, `iter`, `HashMap`, `for`, ...).
+    Ident,
+    /// A lifetime such as `'a` (kept distinct from char literals).
+    Lifetime,
+    /// String literal of any flavor (`"…"`, `r#"…"#`, `b"…"`).
+    Str,
+    /// Character or byte literal (`'x'`, `b'\n'`).
+    Char,
+    /// Numeric literal (value is irrelevant to the rules).
+    Num,
+    /// Single punctuation byte (`.` `:` `(` `&` `!` ...). Multi-byte
+    /// operators arrive as consecutive tokens (`::` is `:` `:`).
+    Punct,
+}
+
+/// One token with its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+/// A `//` comment (including `///` and `//!` doc comments). `text` is
+/// everything after the leading slashes, untrimmed.
+#[derive(Debug, Clone)]
+pub struct LineComment {
+    pub line: u32,
+    pub text: String,
+}
+
+/// Lexer output: the token stream and the comments stripped from it.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub comments: Vec<LineComment>,
+}
+
+fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_'
+}
+
+fn is_ident_cont(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Tokenize `src`. Unterminated constructs consume to end of input
+/// rather than erroring — the linter must keep going on odd files.
+pub fn lex(src: &str) -> Lexed {
+    let b = src.as_bytes();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+
+    // Count newlines in b[from..to] into `line`.
+    fn advance_lines(b: &[u8], from: usize, to: usize, line: &mut u32) {
+        for &c in &b[from..to.min(b.len())] {
+            if c == b'\n' {
+                *line += 1;
+            }
+        }
+    }
+
+    while i < b.len() {
+        let c = b[i];
+        // whitespace
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_ascii_whitespace() {
+            i += 1;
+            continue;
+        }
+        // line comment
+        if c == b'/' && i + 1 < b.len() && b[i + 1] == b'/' {
+            let start = i + 2;
+            let mut j = start;
+            while j < b.len() && b[j] != b'\n' {
+                j += 1;
+            }
+            out.comments.push(LineComment {
+                line,
+                text: src[start..j].to_string(),
+            });
+            i = j;
+            continue;
+        }
+        // block comment (nested)
+        if c == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+            let start = i;
+            let mut depth = 1u32;
+            let mut j = i + 2;
+            while j < b.len() && depth > 0 {
+                if b[j] == b'/' && j + 1 < b.len() && b[j + 1] == b'*' {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == b'*' && j + 1 < b.len() && b[j + 1] == b'/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            advance_lines(b, start, j, &mut line);
+            i = j;
+            continue;
+        }
+        // string literal
+        if c == b'"' {
+            let start = i;
+            let mut j = i + 1;
+            while j < b.len() {
+                match b[j] {
+                    b'\\' => j += 2,
+                    b'"' => {
+                        j += 1;
+                        break;
+                    }
+                    _ => j += 1,
+                }
+            }
+            out.toks.push(Tok { kind: TokKind::Str, text: String::new(), line });
+            advance_lines(b, start, j, &mut line);
+            i = j;
+            continue;
+        }
+        // lifetime or char literal
+        if c == b'\'' {
+            // 'a (lifetime) vs 'a' (char) vs '\n' (char)
+            if i + 1 < b.len() && b[i + 1] == b'\\' {
+                // escaped char literal: skip the escaped byte (it may
+                // itself be a quote, as in '\''), then find the close
+                let mut j = i + 3;
+                while j < b.len() && b[j] != b'\'' {
+                    j += 1;
+                }
+                out.toks.push(Tok { kind: TokKind::Char, text: String::new(), line });
+                i = (j + 1).min(b.len());
+                continue;
+            }
+            let is_lifetime = i + 1 < b.len()
+                && is_ident_start(b[i + 1])
+                && !(i + 2 < b.len() && b[i + 2] == b'\'');
+            if is_lifetime {
+                let mut j = i + 1;
+                while j < b.len() && is_ident_cont(b[j]) {
+                    j += 1;
+                }
+                out.toks.push(Tok {
+                    kind: TokKind::Lifetime,
+                    text: src[i..j].to_string(),
+                    line,
+                });
+                i = j;
+                continue;
+            }
+            // char literal: consume to the closing quote
+            let mut j = i + 1;
+            while j < b.len() && b[j] != b'\'' {
+                if b[j] == b'\\' {
+                    j += 1;
+                }
+                j += 1;
+            }
+            out.toks.push(Tok { kind: TokKind::Char, text: String::new(), line });
+            i = (j + 1).min(b.len());
+            continue;
+        }
+        // raw / byte strings starting with r or b
+        if (c == b'r' || c == b'b') && i + 1 < b.len() {
+            if let Some(j) = try_raw_or_byte(b, i) {
+                let start = i;
+                out.toks.push(Tok { kind: TokKind::Str, text: String::new(), line });
+                advance_lines(b, start, j, &mut line);
+                i = j;
+                continue;
+            }
+            if c == b'b' && b[i + 1] == b'\'' {
+                // byte char literal b'x'
+                let mut j = i + 2;
+                while j < b.len() && b[j] != b'\'' {
+                    if b[j] == b'\\' {
+                        j += 1;
+                    }
+                    j += 1;
+                }
+                out.toks.push(Tok { kind: TokKind::Char, text: String::new(), line });
+                i = (j + 1).min(b.len());
+                continue;
+            }
+        }
+        // identifier / keyword
+        if is_ident_start(c) {
+            let mut j = i + 1;
+            while j < b.len() && is_ident_cont(b[j]) {
+                j += 1;
+            }
+            out.toks.push(Tok {
+                kind: TokKind::Ident,
+                text: src[i..j].to_string(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        // number
+        if c.is_ascii_digit() {
+            let mut j = i + 1;
+            while j < b.len() {
+                if is_ident_cont(b[j]) {
+                    j += 1;
+                } else if b[j] == b'.'
+                    && j + 1 < b.len()
+                    && b[j + 1].is_ascii_digit()
+                {
+                    j += 1;
+                } else {
+                    break;
+                }
+            }
+            out.toks.push(Tok { kind: TokKind::Num, text: String::new(), line });
+            i = j;
+            continue;
+        }
+        // punctuation: one byte per token
+        out.toks.push(Tok {
+            kind: TokKind::Punct,
+            text: (c as char).to_string(),
+            line,
+        });
+        i += 1;
+    }
+    out
+}
+
+/// If a raw or byte string literal starts at `b[i]`, return the index
+/// one past its end. Handles `r"…"`, `r#"…"#` (any hash count),
+/// `b"…"`, `br"…"`, `br#"…"#`.
+fn try_raw_or_byte(b: &[u8], i: usize) -> Option<usize> {
+    let mut j = i;
+    let mut raw = false;
+    if b[j] == b'b' {
+        j += 1;
+        if j < b.len() && b[j] == b'r' {
+            raw = true;
+            j += 1;
+        }
+    } else if b[j] == b'r' {
+        raw = true;
+        j += 1;
+    }
+    if raw {
+        let mut hashes = 0usize;
+        while j < b.len() && b[j] == b'#' {
+            hashes += 1;
+            j += 1;
+        }
+        if j >= b.len() || b[j] != b'"' {
+            return None; // raw identifier like r#fn, or a bare `r` ident
+        }
+        j += 1;
+        // scan for `"` followed by `hashes` hash marks
+        while j < b.len() {
+            if b[j] == b'"' {
+                let mut k = j + 1;
+                let mut n = 0usize;
+                while k < b.len() && b[k] == b'#' && n < hashes {
+                    k += 1;
+                    n += 1;
+                }
+                if n == hashes {
+                    return Some(k);
+                }
+            }
+            j += 1;
+        }
+        return Some(b.len());
+    }
+    // b"…" byte string: escapes allowed
+    if b[j] == b'"' {
+        j += 1;
+        while j < b.len() {
+            match b[j] {
+                b'\\' => j += 2,
+                b'"' => return Some(j + 1),
+                _ => j += 1,
+            }
+        }
+        return Some(b.len());
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .toks
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn strings_and_comments_do_not_leak_tokens() {
+        let src = r##"
+            let x = "self.map.iter() // not code";
+            // real comment with iter()
+            let y = r#"raw "quoted" iter()"#;
+            /* block /* nested */ iter() */
+            call();
+        "##;
+        let ids = idents(src);
+        assert!(!ids.contains(&"iter".to_string()), "{ids:?}");
+        assert!(ids.contains(&"call".to_string()));
+        let lx = lex(src);
+        assert_eq!(lx.comments.len(), 1);
+        assert!(lx.comments[0].text.contains("real comment"));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let lx = lex("fn f<'a>(x: &'a str) -> char { 'x' }");
+        let lifetimes: Vec<_> =
+            lx.toks.iter().filter(|t| t.kind == TokKind::Lifetime).collect();
+        assert_eq!(lifetimes.len(), 2);
+        let chars: Vec<_> =
+            lx.toks.iter().filter(|t| t.kind == TokKind::Char).collect();
+        assert_eq!(chars.len(), 1);
+    }
+
+    #[test]
+    fn escaped_char_literals_do_not_derail() {
+        let lx = lex(r"let a = '\n'; let b = '\''; after();");
+        assert!(lx.toks.iter().any(|t| t.text == "after"));
+        assert_eq!(
+            lx.toks.iter().filter(|t| t.kind == TokKind::Char).count(),
+            2
+        );
+    }
+
+    #[test]
+    fn line_numbers_track_newlines_in_strings() {
+        let src = "let s = \"a\nb\nc\";\nmarker();";
+        let lx = lex(src);
+        let m = lx.toks.iter().find(|t| t.text == "marker").expect("marker");
+        assert_eq!(m.line, 4);
+    }
+
+    #[test]
+    fn numbers_do_not_eat_range_dots() {
+        let lx = lex("for i in 0..10 {}");
+        let dots =
+            lx.toks.iter().filter(|t| t.text == "." && t.kind == TokKind::Punct).count();
+        assert_eq!(dots, 2, "0..10 must keep both range dots");
+    }
+}

@@ -1,0 +1,501 @@
+//! `vhpc lint` — a std-only determinism & race-safety static-analysis
+//! pass over the crate's own source tree.
+//!
+//! Everything this reproduction ships rests on same-seed determinism:
+//! WAL replay byte-matches a live head, fault plans replay, and the
+//! planned sharded engine will merge partitions by timestamp. The five
+//! rules here mechanically forbid the ways that property breaks:
+//!
+//! - **R1 `map-iter`** — no `HashMap`/`HashSet` iteration in
+//!   replay-critical modules unless waived with `// lint: sorted`.
+//! - **R2 `wall-clock`** — no `Instant`/`SystemTime`/`thread_rng`/
+//!   `RandomState` in the library: time is virtual, randomness seeded.
+//! - **R3 `threads`** — no `static mut`, `thread::spawn`, or `unsafe`
+//!   outside the allowlist.
+//! - **R4 `no-panic`** — no `unwrap`/`expect`/`panic!` in engine-event
+//!   and WAL-replay hot paths.
+//! - **R5 `float-sum`** — no f64 accumulation over unordered
+//!   containers in ledger/metrics code.
+//!
+//! Waiver syntax: `// lint: sorted` (statement orders the collection
+//! before use) or `// lint: allow(rule) reason` (reason mandatory).
+//! Waivers that suppress nothing are warnings; `--fix-waivers` strips
+//! them. Module allowlists live in the committed `rust/lint.toml`.
+//! Self-test fixtures with deliberate violations sit in
+//! `src/lint/fixtures/` — never compiled, excluded from the default
+//! walk, and exercised by this module's tests plus the CI lint job.
+
+pub mod lexer;
+pub mod rules;
+
+use rules::{FileScope, StaleWaiver, Violation};
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+/// Resolved `lint.toml`: which rules apply to which paths.
+#[derive(Debug, Clone)]
+pub struct LintConfig {
+    /// Directories the default invocation walks.
+    pub roots: Vec<String>,
+    /// R1 replay-critical module prefixes.
+    pub r1_modules: Vec<String>,
+    /// R2 scope prefixes (the library).
+    pub r2_roots: Vec<String>,
+    /// R2 files allowed to touch the wall clock.
+    pub r2_allow: Vec<String>,
+    /// R3 files allowed threads/unsafe.
+    pub r3_allow: Vec<String>,
+    /// R4 engine/WAL hot-path files.
+    pub r4_hot_paths: Vec<String>,
+    /// R5 float-accounting files.
+    pub r5_scope: Vec<String>,
+}
+
+impl Default for LintConfig {
+    fn default() -> Self {
+        Self {
+            roots: vec!["src".into(), "tests".into(), "benches".into()],
+            r1_modules: vec![
+                "src/cluster/".into(),
+                "src/sim/".into(),
+                "src/ha/".into(),
+                "src/tenancy/".into(),
+                "src/faults/".into(),
+                "src/consul/".into(),
+            ],
+            r2_roots: vec!["src/".into()],
+            r2_allow: vec![
+                "src/bench.rs".into(),
+                "src/mpi/launcher.rs".into(),
+                "src/workloads/gemm.rs".into(),
+                "src/workloads/jacobi.rs".into(),
+            ],
+            r3_allow: vec![
+                "src/runtime/client.rs".into(),
+                "src/mpi/comm.rs".into(),
+                "benches/perf_probe.rs".into(),
+            ],
+            r4_hot_paths: vec![
+                "src/sim/engine.rs".into(),
+                "src/ha/wal.rs".into(),
+                "src/ha/snapshot.rs".into(),
+                "src/ha/failover.rs".into(),
+                "src/cluster/head.rs".into(),
+                "src/cluster/vcluster.rs".into(),
+            ],
+            r5_scope: vec![
+                "src/tenancy/ledger.rs".into(),
+                "src/tenancy/fairshare.rs".into(),
+                "src/cluster/metrics.rs".into(),
+            ],
+        }
+    }
+}
+
+impl LintConfig {
+    /// Parse a `lint.toml` text; absent sections/keys keep defaults.
+    pub fn from_text(text: &str) -> Result<Self, String> {
+        let raw = crate::config::parse(text).map_err(|e| e.to_string())?;
+        let mut cfg = Self::default();
+        let list = |section: &str, key: &str| -> Option<Vec<String>> {
+            raw.get(section)?.get(key).and_then(|v| match v {
+                crate::config::Value::List(xs) => Some(xs.clone()),
+                _ => None,
+            })
+        };
+        if let Some(v) = list("lint", "roots") {
+            cfg.roots = v;
+        }
+        if let Some(v) = list("r1", "modules") {
+            cfg.r1_modules = v;
+        }
+        if let Some(v) = list("r2", "roots") {
+            cfg.r2_roots = v;
+        }
+        if let Some(v) = list("r2", "allow") {
+            cfg.r2_allow = v;
+        }
+        if let Some(v) = list("r3", "allow") {
+            cfg.r3_allow = v;
+        }
+        if let Some(v) = list("r4", "hot_paths") {
+            cfg.r4_hot_paths = v;
+        }
+        if let Some(v) = list("r5", "scope") {
+            cfg.r5_scope = v;
+        }
+        Ok(cfg)
+    }
+
+    /// Which rules apply to `rel` (a forward-slash path). Fixture files
+    /// are in scope for every rule — they exist to prove each fires —
+    /// and ignore the allowlists.
+    pub fn scope_for(&self, rel: &str) -> FileScope {
+        if rel.contains("lint/fixtures/") {
+            return FileScope { r1: true, r2: true, r3: true, r4: true, r5: true };
+        }
+        let m = |pats: &[String]| pats.iter().any(|p| path_matches(rel, p));
+        FileScope {
+            r1: m(&self.r1_modules),
+            r2: m(&self.r2_roots) && !m(&self.r2_allow),
+            r3: !m(&self.r3_allow),
+            r4: m(&self.r4_hot_paths),
+            r5: m(&self.r5_scope),
+        }
+    }
+}
+
+/// Directory patterns (trailing `/`) match anywhere in the path; file
+/// patterns match as a suffix.
+fn path_matches(rel: &str, pat: &str) -> bool {
+    if pat.ends_with('/') {
+        rel.starts_with(pat) || rel.contains(&format!("/{pat}")[..])
+    } else {
+        rel == pat || rel.ends_with(&format!("/{pat}")[..])
+    }
+}
+
+/// A completed lint run.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub violations: Vec<Violation>,
+    pub stale: Vec<StaleWaiver>,
+    pub files: usize,
+}
+
+/// Recursively collect `.rs` files under `path` in sorted order (the
+/// report must not depend on directory-entry order). The `fixtures`
+/// directory under `lint` is skipped unless the root itself points
+/// into it.
+fn collect_rs(path: &Path, skip_fixtures: bool, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let meta = std::fs::metadata(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    if meta.is_file() {
+        if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(path.to_path_buf());
+        }
+        return Ok(());
+    }
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(path)
+        .map_err(|e| format!("{}: {e}", path.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for entry in entries {
+        if entry.is_dir() {
+            let name = entry.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            let parent = entry
+                .parent()
+                .and_then(|p| p.file_name())
+                .and_then(|n| n.to_str())
+                .unwrap_or("");
+            if skip_fixtures && name == "fixtures" && parent == "lint" {
+                continue;
+            }
+            collect_rs(&entry, skip_fixtures, out)?;
+        } else if entry.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(entry);
+        }
+    }
+    Ok(())
+}
+
+/// Lint the given roots/files. Violations come back sorted by
+/// (file, line).
+pub fn run(cfg: &LintConfig, paths: &[PathBuf]) -> Result<Report, String> {
+    let mut files = Vec::new();
+    for p in paths {
+        let into_fixtures = p.to_string_lossy().contains("fixtures");
+        collect_rs(p, !into_fixtures, &mut files)?;
+    }
+    files.sort();
+    files.dedup();
+    let mut report = Report::default();
+    for f in &files {
+        let rel = f.to_string_lossy().replace('\\', "/");
+        let rel = rel.strip_prefix("./").unwrap_or(&rel).to_string();
+        let src =
+            std::fs::read_to_string(f).map_err(|e| format!("{}: {e}", f.display()))?;
+        let (mut vs, mut stale) = rules::analyze(&rel, &src, cfg.scope_for(&rel));
+        report.violations.append(&mut vs);
+        report.stale.append(&mut stale);
+        report.files += 1;
+    }
+    report.violations.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    report.stale.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    Ok(report)
+}
+
+/// Remove stale waivers in place: strip each reported line's trailing
+/// `// lint: …` comment (dropping the line if nothing else is on it).
+/// Returns how many lines were rewritten.
+pub fn fix_waivers(stale: &[StaleWaiver]) -> Result<usize, String> {
+    let mut by_file: std::collections::BTreeMap<&str, BTreeSet<u32>> =
+        std::collections::BTreeMap::new();
+    for s in stale {
+        by_file.entry(&s.file).or_default().insert(s.line);
+    }
+    let mut fixed = 0usize;
+    for (file, lines) in by_file {
+        let src = std::fs::read_to_string(file).map_err(|e| format!("{file}: {e}"))?;
+        let (out, n) = strip_waiver_lines(&src, &lines);
+        if n > 0 {
+            std::fs::write(file, out).map_err(|e| format!("{file}: {e}"))?;
+            fixed += n;
+        }
+    }
+    Ok(fixed)
+}
+
+/// Pure text transform behind [`fix_waivers`], kept separate for
+/// testability: `lines` are 1-based line numbers carrying stale
+/// waivers.
+fn strip_waiver_lines(src: &str, lines: &BTreeSet<u32>) -> (String, usize) {
+    let mut out = Vec::new();
+    let mut n = 0usize;
+    for (i, line) in src.lines().enumerate() {
+        let lineno = (i + 1) as u32;
+        if lines.contains(&lineno) {
+            if let Some(pos) = line.rfind("// lint:") {
+                let head = line[..pos].trim_end();
+                n += 1;
+                if head.is_empty() {
+                    continue; // the waiver was the whole line
+                }
+                out.push(head.to_string());
+                continue;
+            }
+        }
+        out.push(line.to_string());
+    }
+    let mut text = out.join("\n");
+    if src.ends_with('\n') {
+        text.push('\n');
+    }
+    (text, n)
+}
+
+/// `vhpc lint [--fix-waivers] [paths…]` — returns the process exit
+/// code: 0 clean, 1 violations, 2 usage/IO error.
+pub fn cli_main(args: &[String]) -> i32 {
+    let mut fix = false;
+    let mut paths: Vec<PathBuf> = Vec::new();
+    for a in args {
+        match a.as_str() {
+            "--fix-waivers" => fix = true,
+            s if s.starts_with("--") => {
+                eprintln!("vhpc lint: unknown flag {s}");
+                return 2;
+            }
+            s => paths.push(PathBuf::from(s)),
+        }
+    }
+    // config: lint.toml beside the crate (cwd = rust/), or rust/lint.toml
+    // when invoked from the repo root
+    let (cfg, prefix) = match load_config() {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("vhpc lint: {e}");
+            return 2;
+        }
+    };
+    if paths.is_empty() {
+        paths = cfg
+            .roots
+            .iter()
+            .map(|r| PathBuf::from(format!("{prefix}{r}")))
+            .collect();
+    }
+    let report = match run(&cfg, &paths) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("vhpc lint: {e}");
+            return 2;
+        }
+    };
+    for v in &report.violations {
+        println!("{}:{}: {} — {}", v.file, v.line, v.rule, v.msg);
+    }
+    for s in &report.stale {
+        println!(
+            "{}:{}: warning: stale lint waiver (suppresses nothing; --fix-waivers removes it)",
+            s.file, s.line
+        );
+    }
+    if fix && !report.stale.is_empty() {
+        match fix_waivers(&report.stale) {
+            Ok(n) => println!("vhpc lint: removed {n} stale waiver(s)"),
+            Err(e) => {
+                eprintln!("vhpc lint: --fix-waivers: {e}");
+                return 2;
+            }
+        }
+    }
+    println!(
+        "vhpc lint: {} file(s), {} violation(s), {} stale waiver(s)",
+        report.files,
+        report.violations.len(),
+        report.stale.len()
+    );
+    if report.violations.is_empty() {
+        0
+    } else {
+        1
+    }
+}
+
+fn load_config() -> Result<(LintConfig, &'static str), String> {
+    for (path, prefix) in [("lint.toml", ""), ("rust/lint.toml", "rust/")] {
+        if let Ok(text) = std::fs::read_to_string(path) {
+            return LintConfig::from_text(&text)
+                .map(|c| (c, prefix))
+                .map_err(|e| format!("{path}: {e}"));
+        }
+    }
+    Ok((LintConfig::default(), ""))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FIXTURE_SCOPE: FileScope =
+        FileScope { r1: true, r2: true, r3: true, r4: true, r5: true };
+
+    fn count(vs: &[Violation], rule: &str) -> usize {
+        vs.iter().filter(|v| v.rule == rule).count()
+    }
+
+    #[test]
+    fn fixture_r1_map_iter_fires() {
+        let src = include_str!("fixtures/r1_map_iter.rs");
+        let (vs, stale) = rules::analyze("fx.rs", src, FIXTURE_SCOPE);
+        assert_eq!(count(&vs, rules::RULE_MAP_ITER), 4, "{vs:?}");
+        assert_eq!(vs.len(), 4, "only map-iter must fire: {vs:?}");
+        assert!(stale.is_empty(), "the sorted waiver is load-bearing: {stale:?}");
+    }
+
+    #[test]
+    fn fixture_r2_wall_clock_fires() {
+        let src = include_str!("fixtures/r2_wall_clock.rs");
+        let (vs, _) = rules::analyze("fx.rs", src, FIXTURE_SCOPE);
+        assert_eq!(count(&vs, rules::RULE_WALL_CLOCK), 4, "{vs:?}");
+        assert_eq!(vs.len(), 4, "{vs:?}");
+    }
+
+    #[test]
+    fn fixture_r3_threads_fires() {
+        let src = include_str!("fixtures/r3_threads.rs");
+        let (vs, _) = rules::analyze("fx.rs", src, FIXTURE_SCOPE);
+        assert_eq!(count(&vs, rules::RULE_THREADS), 3, "{vs:?}");
+        assert_eq!(vs.len(), 3, "{vs:?}");
+    }
+
+    #[test]
+    fn fixture_r4_panics_fires() {
+        let src = include_str!("fixtures/r4_panics.rs");
+        let (vs, _) = rules::analyze("fx.rs", src, FIXTURE_SCOPE);
+        assert_eq!(count(&vs, rules::RULE_NO_PANIC), 3, "{vs:?}");
+        assert_eq!(vs.len(), 3, "{vs:?}");
+    }
+
+    #[test]
+    fn fixture_r5_float_sum_fires() {
+        let src = include_str!("fixtures/r5_float_sum.rs");
+        let (vs, _) = rules::analyze("fx.rs", src, FIXTURE_SCOPE);
+        assert_eq!(count(&vs, rules::RULE_FLOAT_SUM), 1, "{vs:?}");
+        assert_eq!(count(&vs, rules::RULE_MAP_ITER), 1, "{vs:?}");
+    }
+
+    #[test]
+    fn fixture_waivers_malformed_and_stale() {
+        let src = include_str!("fixtures/waivers.rs");
+        let (vs, stale) = rules::analyze("fx.rs", src, FIXTURE_SCOPE);
+        assert_eq!(count(&vs, rules::RULE_WAIVER), 2, "{vs:?}");
+        assert_eq!(
+            count(&vs, rules::RULE_MAP_ITER),
+            2,
+            "malformed waivers must not suppress: {vs:?}"
+        );
+        assert_eq!(stale.len(), 1, "{stale:?}");
+    }
+
+    /// The acceptance gate: the shipped tree must be clean. Cargo runs
+    /// tests with cwd = the package root, so relative roots resolve.
+    #[test]
+    fn shipped_tree_is_clean() {
+        let cfg = LintConfig::from_text(include_str!("../../lint.toml"))
+            .expect("lint.toml parses");
+        let paths: Vec<PathBuf> = cfg.roots.iter().map(PathBuf::from).collect();
+        let report = run(&cfg, &paths).expect("walk succeeds");
+        assert!(report.files > 30, "walk must see the tree: {}", report.files);
+        assert!(
+            report.violations.is_empty(),
+            "shipped tree must lint clean:\n{}",
+            report
+                .violations
+                .iter()
+                .map(|v| format!("{}:{}: {} — {}", v.file, v.line, v.rule, v.msg))
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+        assert!(
+            report.stale.is_empty(),
+            "no stale waivers in the shipped tree:\n{}",
+            report
+                .stale
+                .iter()
+                .map(|s| format!("{}:{}", s.file, s.line))
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+    }
+
+    #[test]
+    fn fixtures_are_excluded_from_the_default_walk_but_reachable_directly() {
+        let cfg = LintConfig::default();
+        let report = run(&cfg, &[PathBuf::from("src/lint")]).expect("walk");
+        assert!(
+            report.violations.is_empty(),
+            "default walk must skip fixtures: {:?}",
+            report.violations
+        );
+        let direct = run(&cfg, &[PathBuf::from("src/lint/fixtures")]).expect("walk");
+        assert!(!direct.violations.is_empty(), "explicit fixture path must fire");
+    }
+
+    #[test]
+    fn scope_resolution_matches_the_layout() {
+        let cfg = LintConfig::default();
+        let s = cfg.scope_for("src/cluster/head.rs");
+        assert!(s.r1 && s.r2 && s.r3 && s.r4 && !s.r5);
+        let s = cfg.scope_for("src/tenancy/ledger.rs");
+        assert!(s.r1 && s.r2 && s.r3 && !s.r4 && s.r5);
+        let s = cfg.scope_for("src/mpi/launcher.rs");
+        assert!(!s.r1 && !s.r2 && s.r3 && !s.r4);
+        let s = cfg.scope_for("src/runtime/client.rs");
+        assert!(!s.r3, "client.rs is on the R3 allowlist");
+        let s = cfg.scope_for("tests/determinism.rs");
+        assert!(!s.r1 && !s.r2 && s.r3 && !s.r4);
+        let s = cfg.scope_for("src/lint/fixtures/r1_map_iter.rs");
+        assert!(s.r1 && s.r2 && s.r3 && s.r4 && s.r5, "fixtures see every rule");
+    }
+
+    #[test]
+    fn strip_waiver_lines_removes_only_the_comment() {
+        let src = "let x = 1; // lint: sorted\n// lint: sorted\nlet y = 2;\n";
+        let mut lines = BTreeSet::new();
+        lines.insert(1);
+        lines.insert(2);
+        let (out, n) = strip_waiver_lines(src, &lines);
+        assert_eq!(n, 2);
+        assert_eq!(out, "let x = 1;\nlet y = 2;\n");
+    }
+
+    #[test]
+    fn config_text_overrides_and_bad_text_errors() {
+        let cfg = LintConfig::from_text("[r1]\nmodules = [\"src/only/\"]\n").expect("parses");
+        assert_eq!(cfg.r1_modules, vec!["src/only/".to_string()]);
+        assert_eq!(cfg.roots, LintConfig::default().roots, "other keys keep defaults");
+        assert!(LintConfig::from_text("not toml at all").is_err());
+    }
+}

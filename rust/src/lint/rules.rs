@@ -1,0 +1,851 @@
+//! The determinism rule set (R1–R5) over the token stream.
+//!
+//! The analyses are deliberately file-local and token-shaped: the pass
+//! tracks which names are declared as `HashMap`/`HashSet` (struct
+//! fields vs `let`/param locals), skips `#[cfg(test)]` regions by
+//! brace-matching, and flags forbidden shapes with a waiver escape
+//! hatch in comments. It is not a type checker — a map reached through
+//! a cross-file field type (`other.inner.iter()`) is invisible — but
+//! every in-repo nondeterminism incident to date has been the local
+//! shape this catches, and the narrow scope keeps false positives near
+//! zero, which is what lets the pass gate CI.
+
+use super::lexer::{lex, LineComment, Tok, TokKind};
+use std::collections::BTreeSet;
+
+/// One reported violation, printed as `file:line: rule — message`.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub file: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+/// A well-formed waiver that suppressed nothing — reported as a
+/// warning and stripped by `--fix-waivers`.
+#[derive(Debug, Clone)]
+pub struct StaleWaiver {
+    pub file: String,
+    pub line: u32,
+}
+
+/// Which rules apply to the file under analysis (resolved from
+/// `lint.toml` by the caller).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FileScope {
+    /// R1: map/set iteration needs an ordering waiver.
+    pub r1: bool,
+    /// R2: no wall-clock time or ambient entropy.
+    pub r2: bool,
+    /// R3: no `static mut` / `std::thread::spawn` / `unsafe`.
+    pub r3: bool,
+    /// R4: no unwrap/expect/panic (engine + WAL hot paths).
+    pub r4: bool,
+    /// R5: no float accumulation over unordered containers.
+    pub r5: bool,
+}
+
+pub const RULE_MAP_ITER: &str = "map-iter";
+pub const RULE_WALL_CLOCK: &str = "wall-clock";
+pub const RULE_THREADS: &str = "threads";
+pub const RULE_NO_PANIC: &str = "no-panic";
+pub const RULE_FLOAT_SUM: &str = "float-sum";
+pub const RULE_WAIVER: &str = "waiver";
+
+const ALL_RULES: &[&str] = &[
+    RULE_MAP_ITER,
+    RULE_WALL_CLOCK,
+    RULE_THREADS,
+    RULE_NO_PANIC,
+    RULE_FLOAT_SUM,
+];
+
+/// Iteration methods whose visit order is the per-process hash order.
+const FORBIDDEN_ITER: &[&str] = &[
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "drain",
+    "into_iter",
+    "into_keys",
+    "into_values",
+];
+
+/// Consuming adapters are only matched on `self.NAME` / bare-local
+/// receivers: `x.NAME.into_iter()` is almost always a dump/restore
+/// struct whose field happens to share a tracked name.
+const CONSUMING: &[&str] = &["into_iter", "into_keys", "into_values"];
+
+/// Identifiers R2 bans: wall-clock time and ambient entropy.
+const R2_IDENTS: &[&str] = &["Instant", "SystemTime", "thread_rng", "RandomState"];
+
+#[derive(Debug, Clone, PartialEq)]
+enum WaiverKind {
+    /// `// lint: sorted` — the statement orders the collection before
+    /// use; waives R1 and R5.
+    Sorted,
+    /// `// lint: allow(rule) reason` — waives exactly that rule.
+    Allow(String),
+}
+
+#[derive(Debug)]
+struct Waiver {
+    line: u32,
+    kind: WaiverKind,
+}
+
+/// Parse lint directives out of the file's line comments. Malformed
+/// directives (unknown rule, missing reason) become violations — a
+/// waiver that doesn't say why is worse than none.
+fn parse_waivers(
+    file: &str,
+    comments: &[LineComment],
+    violations: &mut Vec<Violation>,
+) -> Vec<Waiver> {
+    let mut out = Vec::new();
+    for c in comments {
+        // `///` and `//!` doc comments arrive with leading `/`/`!`
+        let body = c.text.trim_start_matches(['/', '!']).trim();
+        let Some(rest) = body.strip_prefix("lint:") else {
+            continue;
+        };
+        let rest = rest.trim();
+        if rest == "sorted" || rest.starts_with("sorted ") {
+            out.push(Waiver { line: c.line, kind: WaiverKind::Sorted });
+            continue;
+        }
+        if let Some(after) = rest.strip_prefix("allow(") {
+            let Some(close) = after.find(')') else {
+                violations.push(Violation {
+                    file: file.to_string(),
+                    line: c.line,
+                    rule: RULE_WAIVER,
+                    msg: "unclosed allow(...) in lint directive".to_string(),
+                });
+                continue;
+            };
+            let rule = after[..close].trim().to_string();
+            let reason = after[close + 1..].trim();
+            if !ALL_RULES.contains(&rule.as_str()) {
+                violations.push(Violation {
+                    file: file.to_string(),
+                    line: c.line,
+                    rule: RULE_WAIVER,
+                    msg: format!("allow({rule}): unknown rule (expected one of {ALL_RULES:?})"),
+                });
+                continue;
+            }
+            if reason.is_empty() {
+                violations.push(Violation {
+                    file: file.to_string(),
+                    line: c.line,
+                    rule: RULE_WAIVER,
+                    msg: format!("allow({rule}) without a reason — say why the waiver is safe"),
+                });
+                continue;
+            }
+            out.push(Waiver { line: c.line, kind: WaiverKind::Allow(rule) });
+            continue;
+        }
+        violations.push(Violation {
+            file: file.to_string(),
+            line: c.line,
+            rule: RULE_WAIVER,
+            msg: format!("unrecognized lint directive `{rest}` (use `sorted` or `allow(rule) reason`)"),
+        });
+    }
+    out
+}
+
+fn is_punct(t: &Tok, s: &str) -> bool {
+    t.kind == TokKind::Punct && t.text == s
+}
+
+fn is_ident(t: &Tok, s: &str) -> bool {
+    t.kind == TokKind::Ident && t.text == s
+}
+
+/// Token-index spans covered by `#[cfg(test)]` / `#[test]` items (the
+/// attribute through the item's closing brace or semicolon).
+fn test_spans(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !(is_punct(&toks[i], "#") && i + 1 < toks.len() && is_punct(&toks[i + 1], "[")) {
+            i += 1;
+            continue;
+        }
+        let start = i;
+        let (attr_end, mut has_test) = scan_attr(toks, i + 1);
+        // swallow any further attributes on the same item
+        let mut j = attr_end + 1;
+        while j + 1 < toks.len() && is_punct(&toks[j], "#") && is_punct(&toks[j + 1], "[") {
+            let (e, t) = scan_attr(toks, j + 1);
+            has_test = has_test || t;
+            j = e + 1;
+        }
+        if !has_test {
+            i = j;
+            continue;
+        }
+        // find the item's end: first `{` (then matching `}`) or `;` at
+        // bracket/paren depth 0
+        let mut depth = 0i32;
+        let mut end = toks.len().saturating_sub(1);
+        while j < toks.len() {
+            let t = &toks[j];
+            if is_punct(t, "(") || is_punct(t, "[") {
+                depth += 1;
+            } else if is_punct(t, ")") || is_punct(t, "]") {
+                depth -= 1;
+            } else if depth == 0 && is_punct(t, ";") {
+                end = j;
+                break;
+            } else if depth == 0 && is_punct(t, "{") {
+                end = matching_brace(toks, j);
+                break;
+            }
+            j += 1;
+        }
+        spans.push((start, end));
+        i = end + 1;
+    }
+    spans
+}
+
+/// Scan an attribute starting at its `[` token; return (index of the
+/// matching `]`, whether the attribute mentions the ident `test`).
+fn scan_attr(toks: &[Tok], open: usize) -> (usize, bool) {
+    let mut depth = 0i32;
+    let mut has_test = false;
+    let mut j = open;
+    while j < toks.len() {
+        let t = &toks[j];
+        if is_punct(t, "[") {
+            depth += 1;
+        } else if is_punct(t, "]") {
+            depth -= 1;
+            if depth == 0 {
+                return (j, has_test);
+            }
+        } else if is_ident(t, "test") {
+            has_test = true;
+        }
+        j += 1;
+    }
+    (toks.len().saturating_sub(1), has_test)
+}
+
+/// Index of the `}` matching the `{` at `open` (last token if
+/// unbalanced).
+fn matching_brace(toks: &[Tok], open: usize) -> usize {
+    let mut depth = 0i32;
+    for (j, t) in toks.iter().enumerate().skip(open) {
+        if is_punct(t, "{") {
+            depth += 1;
+        } else if is_punct(t, "}") {
+            depth -= 1;
+            if depth == 0 {
+                return j;
+            }
+        }
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// If the `HashMap`/`HashSet` token at `i` is the type (or
+/// constructor) of a declaration, return the declared name. Handles
+/// `name: [&][mut] [std::collections::]HashMap<…>` and
+/// `let [mut] name = HashMap::new()`.
+fn decl_name_before(toks: &[Tok], i: usize) -> Option<String> {
+    let mut j = i;
+    loop {
+        if j == 0 {
+            return None;
+        }
+        let prev = &toks[j - 1];
+        if is_punct(prev, ":") {
+            if j >= 2 && is_punct(&toks[j - 2], ":") {
+                j -= 2; // `::` path segment
+                continue;
+            }
+            if j >= 2 && toks[j - 2].kind == TokKind::Ident {
+                return Some(toks[j - 2].text.clone());
+            }
+            return None;
+        }
+        if is_punct(prev, "&")
+            || prev.kind == TokKind::Lifetime
+            || is_ident(prev, "mut")
+            || is_ident(prev, "std")
+            || is_ident(prev, "collections")
+            || is_ident(prev, "hash_map")
+            || is_ident(prev, "hash_set")
+        {
+            j -= 1;
+            continue;
+        }
+        if is_punct(prev, "=") {
+            // let [mut] NAME = HashMap::new()
+            if j >= 3
+                && toks[j - 2].kind == TokKind::Ident
+                && (is_ident(&toks[j - 3], "let") || is_ident(&toks[j - 3], "mut"))
+            {
+                return Some(toks[j - 2].text.clone());
+            }
+            return None;
+        }
+        return None;
+    }
+}
+
+/// Names declared as `HashMap`/`HashSet` struct (or enum-variant)
+/// fields anywhere in the file, outside test regions.
+fn collect_fields(toks: &[Tok], in_test: &dyn Fn(usize) -> bool) -> BTreeSet<String> {
+    let mut fields = BTreeSet::new();
+    let mut stack: Vec<bool> = Vec::new(); // true = struct/enum body
+    let mut pending = false;
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        if t.kind == TokKind::Ident
+            && (t.text == "struct" || t.text == "enum" || t.text == "union")
+        {
+            pending = true;
+        } else if is_punct(t, "{") {
+            let inherit = stack.last().copied().unwrap_or(false);
+            stack.push(pending || inherit);
+            pending = false;
+        } else if is_punct(t, "}") {
+            stack.pop();
+        } else if is_punct(t, ";") {
+            pending = false; // tuple / unit struct
+        } else if t.kind == TokKind::Ident
+            && (t.text == "HashMap" || t.text == "HashSet")
+            && stack.last().copied().unwrap_or(false)
+            && !in_test(i)
+        {
+            if let Some(name) = decl_name_before(toks, i) {
+                fields.insert(name);
+            }
+        }
+    }
+    fields
+}
+
+/// The receiver of a `.method(` call ending at token index `m` (the
+/// method ident), resolved far enough for the rules.
+enum Receiver {
+    /// `self.NAME.method(` or `x.y.NAME.method(` — `NAME`, its token
+    /// index, and whether the path root is literally `self`.
+    Field { name: String, idx: usize, via_self: bool },
+    /// `NAME.method(` with no dot before NAME.
+    Bare { name: String, idx: usize },
+    /// Call/index/other expression — untrackable.
+    Opaque,
+}
+
+fn receiver_of(toks: &[Tok], m: usize) -> Receiver {
+    if m < 2 {
+        return Receiver::Opaque;
+    }
+    let r = &toks[m - 2];
+    if r.kind != TokKind::Ident {
+        return Receiver::Opaque;
+    }
+    let dotted = m >= 3 && is_punct(&toks[m - 3], ".");
+    if !dotted {
+        return Receiver::Bare { name: r.text.clone(), idx: m - 2 };
+    }
+    let via_self = m >= 4 && is_ident(&toks[m - 4], "self");
+    Receiver::Field { name: r.text.clone(), idx: m - 2, via_self }
+}
+
+/// Analyze one file. Returns (violations, stale waivers).
+pub fn analyze(file: &str, src: &str, scope: FileScope) -> (Vec<Violation>, Vec<StaleWaiver>) {
+    let mut violations = Vec::new();
+    let lexed = lex(src);
+    let toks = &lexed.toks;
+    let waivers = parse_waivers(file, &lexed.comments, &mut violations);
+    let mut waiver_used = vec![false; waivers.len()];
+
+    let spans = test_spans(toks);
+    let in_test = |i: usize| spans.iter().any(|&(a, b)| i >= a && i <= b);
+
+    let fields = collect_fields(toks, &in_test);
+
+    // waive(rule, lines): first matching unexpired waiver wins
+    let waive = |rule: &str, lines: &[u32], used: &mut Vec<bool>| -> bool {
+        for (wi, w) in waivers.iter().enumerate() {
+            if !lines.contains(&w.line) {
+                continue;
+            }
+            let hit = match &w.kind {
+                WaiverKind::Sorted => rule == RULE_MAP_ITER || rule == RULE_FLOAT_SUM,
+                WaiverKind::Allow(r) => r == rule,
+            };
+            if hit {
+                used[wi] = true;
+                return true;
+            }
+        }
+        false
+    };
+
+    let mut locals: BTreeSet<String> = BTreeSet::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        // skip test regions wholesale
+        if let Some(&(_, b)) = spans.iter().find(|&&(a, b)| i >= a && i <= b) {
+            i = b + 1;
+            continue;
+        }
+        let t = &toks[i];
+
+        // local-declaration tracking, reset per fn
+        if is_ident(t, "fn") {
+            locals.clear();
+        } else if t.kind == TokKind::Ident && (t.text == "HashMap" || t.text == "HashSet") {
+            if let Some(name) = decl_name_before(toks, i) {
+                // struct-body decls were collected as fields; a struct
+                // literal in a fn re-registers the name as a local,
+                // which is harmless (bare use of the same name in the
+                // same fn really is the map)
+                locals.insert(name);
+            }
+        }
+
+        // R1 / R5: forbidden iteration methods on tracked receivers
+        if (scope.r1 || scope.r5)
+            && t.kind == TokKind::Ident
+            && FORBIDDEN_ITER.contains(&t.text.as_str())
+            && i + 1 < toks.len()
+            && is_punct(&toks[i + 1], "(")
+            && i >= 1
+            && is_punct(&toks[i - 1], ".")
+        {
+            let consuming = CONSUMING.contains(&t.text.as_str());
+            let tracked = match receiver_of(toks, i) {
+                Receiver::Field { name, idx, via_self } => {
+                    let applies = !consuming || via_self;
+                    (applies && fields.contains(&name)).then_some(idx)
+                }
+                Receiver::Bare { name, idx } => locals.contains(&name).then_some(idx),
+                Receiver::Opaque => None,
+            };
+            if let Some(ridx) = tracked {
+                let rl = toks[ridx].line;
+                let lines =
+                    [t.line, rl, rl.saturating_sub(1), rl.saturating_sub(2)];
+                if scope.r1 && !waive(RULE_MAP_ITER, &lines, &mut waiver_used) {
+                    violations.push(Violation {
+                        file: file.to_string(),
+                        line: t.line,
+                        rule: RULE_MAP_ITER,
+                        msg: format!(
+                            "hash-order iteration: `{}.{}()` visits entries in per-process \
+                             RandomState order — sort before use (`// lint: sorted`) or waive",
+                            toks[ridx].text, t.text
+                        ),
+                    });
+                }
+                if scope.r5 {
+                    // `.sum()` / `.product()` later in the same statement
+                    let mut k = i + 1;
+                    let mut steps = 0;
+                    while k < toks.len() && steps < 60 {
+                        if is_punct(&toks[k], ";") || is_punct(&toks[k], "{") {
+                            break;
+                        }
+                        if toks[k].kind == TokKind::Ident
+                            && (toks[k].text == "sum" || toks[k].text == "product")
+                            && is_punct(&toks[k - 1], ".")
+                        {
+                            let lines2 = [
+                                t.line,
+                                toks[k].line,
+                                rl,
+                                rl.saturating_sub(1),
+                                rl.saturating_sub(2),
+                            ];
+                            if !waive(RULE_FLOAT_SUM, &lines2, &mut waiver_used) {
+                                violations.push(Violation {
+                                    file: file.to_string(),
+                                    line: toks[k].line,
+                                    rule: RULE_FLOAT_SUM,
+                                    msg: format!(
+                                        "float accumulation over unordered `{}` — summation \
+                                         order changes the rounding; sort first",
+                                        toks[ridx].text
+                                    ),
+                                });
+                            }
+                            break;
+                        }
+                        k += 1;
+                        steps += 1;
+                    }
+                }
+            }
+        }
+
+        // R1: `for … in [&][mut] map` loops
+        if scope.r1 && is_ident(t, "for") {
+            if let Some(v) = check_for_loop(toks, i, &fields, &locals) {
+                let rl = toks[v].line;
+                let lines = [t.line, rl, rl.saturating_sub(1), rl.saturating_sub(2)];
+                if !waive(RULE_MAP_ITER, &lines, &mut waiver_used) {
+                    violations.push(Violation {
+                        file: file.to_string(),
+                        line: rl,
+                        rule: RULE_MAP_ITER,
+                        msg: format!(
+                            "hash-order iteration: `for … in {}` visits entries in \
+                             per-process RandomState order — collect and sort first",
+                            toks[v].text
+                        ),
+                    });
+                }
+            }
+        }
+
+        // R2: wall clock / ambient entropy
+        if scope.r2 && t.kind == TokKind::Ident && R2_IDENTS.contains(&t.text.as_str()) {
+            let lines = [t.line, t.line.saturating_sub(1)];
+            if !waive(RULE_WALL_CLOCK, &lines, &mut waiver_used) {
+                violations.push(Violation {
+                    file: file.to_string(),
+                    line: t.line,
+                    rule: RULE_WALL_CLOCK,
+                    msg: format!(
+                        "`{}` in library code — all time is virtual (SimTime) and all \
+                         randomness is seeded (util::Rng)",
+                        t.text
+                    ),
+                });
+            }
+        }
+
+        // R3: shared-mutable-state escape hatches
+        if scope.r3 {
+            let hit: Option<&str> = if is_ident(t, "unsafe") {
+                Some("`unsafe` outside the allowlist")
+            } else if is_ident(t, "static")
+                && i + 1 < toks.len()
+                && is_ident(&toks[i + 1], "mut")
+            {
+                Some("`static mut` — shared mutable state breaks replay and sharding")
+            } else if is_ident(t, "spawn")
+                && i >= 3
+                && is_punct(&toks[i - 1], ":")
+                && is_punct(&toks[i - 2], ":")
+                && is_ident(&toks[i - 3], "thread")
+            {
+                Some("`thread::spawn` outside the allowlist — the engine is single-threaded \
+                      until the sharded communicator lands")
+            } else {
+                None
+            };
+            if let Some(msg) = hit {
+                let lines = [t.line, t.line.saturating_sub(1)];
+                if !waive(RULE_THREADS, &lines, &mut waiver_used) {
+                    violations.push(Violation {
+                        file: file.to_string(),
+                        line: t.line,
+                        rule: RULE_THREADS,
+                        msg: msg.to_string(),
+                    });
+                }
+            }
+        }
+
+        // R4: panic-class calls in hot paths
+        if scope.r4 && t.kind == TokKind::Ident {
+            let is_method_panic = (t.text == "unwrap" || t.text == "expect")
+                && i >= 1
+                && is_punct(&toks[i - 1], ".")
+                && i + 1 < toks.len()
+                && is_punct(&toks[i + 1], "(");
+            let is_macro_panic = (t.text == "panic"
+                || t.text == "unreachable"
+                || t.text == "todo"
+                || t.text == "unimplemented")
+                && i + 1 < toks.len()
+                && is_punct(&toks[i + 1], "!");
+            if is_method_panic || is_macro_panic {
+                let lines = [t.line, t.line.saturating_sub(1)];
+                if !waive(RULE_NO_PANIC, &lines, &mut waiver_used) {
+                    violations.push(Violation {
+                        file: file.to_string(),
+                        line: t.line,
+                        rule: RULE_NO_PANIC,
+                        msg: format!(
+                            "`{}` in an engine/WAL hot path — the head must degrade, not die",
+                            t.text
+                        ),
+                    });
+                }
+            }
+        }
+
+        i += 1;
+    }
+
+    let stale = waivers
+        .iter()
+        .zip(&waiver_used)
+        .filter(|(_, &used)| !used)
+        .map(|(w, _)| StaleWaiver { file: file.to_string(), line: w.line })
+        .collect();
+    (violations, stale)
+}
+
+/// If the `for` at index `i` iterates a tracked map (`for x in &map`,
+/// `for x in self.map`, `for x in st.map`), return the receiver-name
+/// token index.
+fn check_for_loop(
+    toks: &[Tok],
+    i: usize,
+    fields: &BTreeSet<String>,
+    locals: &BTreeSet<String>,
+) -> Option<usize> {
+    // find `in` at depth 0, bounded
+    let mut depth = 0i32;
+    let mut j = i + 1;
+    let mut in_idx = None;
+    while j < toks.len() && j - i < 60 {
+        let t = &toks[j];
+        if is_punct(t, "(") || is_punct(t, "[") {
+            depth += 1;
+        } else if is_punct(t, ")") || is_punct(t, "]") {
+            depth -= 1;
+        } else if depth == 0 && (is_punct(t, "{") || is_punct(t, ";")) {
+            return None; // `impl Trait for Type {`, or not a for-loop
+        } else if depth == 0 && is_ident(t, "in") {
+            in_idx = Some(j);
+            break;
+        }
+        j += 1;
+    }
+    let mut k = in_idx? + 1;
+    while k < toks.len() && (is_punct(&toks[k], "&") || is_ident(&toks[k], "mut")) {
+        k += 1;
+    }
+    // path: [self.]A[.B]… — walk the dotted path, remember the last ident
+    let mut segs: Vec<usize> = Vec::new();
+    loop {
+        if k >= toks.len() || toks[k].kind != TokKind::Ident {
+            return None;
+        }
+        segs.push(k);
+        if k + 1 < toks.len() && is_punct(&toks[k + 1], ".") {
+            // a method call in the chain (e.g. `.values()`) is handled
+            // by the method rule, not here
+            if k + 2 < toks.len()
+                && toks[k + 2].kind == TokKind::Ident
+                && k + 3 < toks.len()
+                && is_punct(&toks[k + 3], "(")
+            {
+                return None;
+            }
+            k += 2;
+            continue;
+        }
+        break;
+    }
+    // the loop body must open right after the path
+    if k + 1 >= toks.len() || !is_punct(&toks[k + 1], "{") {
+        return None;
+    }
+    let last = *segs.last()?;
+    let name = &toks[last].text;
+    if segs.len() == 1 {
+        locals.contains(name).then_some(last)
+    } else {
+        fields.contains(name).then_some(last)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ALL: FileScope =
+        FileScope { r1: true, r2: true, r3: true, r4: true, r5: true };
+
+    fn run(src: &str) -> Vec<Violation> {
+        analyze("t.rs", src, ALL).0
+    }
+
+    fn rules_of(vs: &[Violation]) -> Vec<&'static str> {
+        vs.iter().map(|v| v.rule).collect()
+    }
+
+    #[test]
+    fn field_iteration_is_flagged_and_param_shadow_is_not() {
+        // mirrors tenancy/ledger.rs: a slice param named like the field
+        let src = r#"
+use std::collections::HashMap;
+struct L { accounts: HashMap<u64, f64> }
+impl L {
+    fn export(&self) -> usize { self.accounts.iter().count() }
+    fn restore(&mut self, accounts: &[(u64, f64)]) -> usize {
+        accounts.iter().count()
+    }
+}
+"#;
+        let vs = run(src);
+        assert_eq!(rules_of(&vs), vec![RULE_MAP_ITER], "{vs:?}");
+        assert_eq!(vs[0].line, 5);
+    }
+
+    #[test]
+    fn local_and_for_loop_forms_are_flagged() {
+        let src = r#"
+use std::collections::HashMap;
+struct S { m: HashMap<u32, u32> }
+impl S {
+    fn f(&self) {
+        for _ in &self.m {}
+        let loc: HashMap<u32, u32> = HashMap::new();
+        for _ in loc.keys() {}
+    }
+}
+"#;
+        let vs = run(src);
+        assert_eq!(rules_of(&vs), vec![RULE_MAP_ITER, RULE_MAP_ITER], "{vs:?}");
+    }
+
+    #[test]
+    fn sorted_waiver_suppresses_and_is_not_stale() {
+        let src = r#"
+use std::collections::HashMap;
+struct S { m: HashMap<u32, u32> }
+impl S {
+    fn f(&self) -> Vec<u32> {
+        let mut v: Vec<u32> = self.m.keys().copied().collect(); // lint: sorted
+        v.sort();
+        v
+    }
+}
+"#;
+        let (vs, stale) = analyze("t.rs", src, ALL);
+        assert!(vs.is_empty(), "{vs:?}");
+        assert!(stale.is_empty(), "{stale:?}");
+    }
+
+    #[test]
+    fn reasonless_or_unknown_allow_is_a_violation() {
+        let src = "
+fn a() {} // lint: allow(map-iter)
+fn b() {} // lint: allow(nonsense) because reasons
+fn c() {} // lint: frobnicate
+";
+        let vs = run(src);
+        assert_eq!(
+            rules_of(&vs),
+            vec![RULE_WAIVER, RULE_WAIVER, RULE_WAIVER],
+            "{vs:?}"
+        );
+    }
+
+    #[test]
+    fn stale_waiver_is_reported_but_not_fatal() {
+        let (vs, stale) = analyze("t.rs", "fn a() {} // lint: sorted\n", ALL);
+        assert!(vs.is_empty(), "{vs:?}");
+        assert_eq!(stale.len(), 1);
+        assert_eq!(stale[0].line, 1);
+    }
+
+    #[test]
+    fn cfg_test_regions_are_skipped() {
+        let src = r#"
+use std::collections::HashMap;
+struct S { m: HashMap<u32, u32> }
+#[cfg(test)]
+mod tests {
+    fn f(s: &super::S) -> usize { s.m.iter().count() }
+    fn g() { let x: Option<u32> = None; x.unwrap(); }
+}
+"#;
+        let vs = run(src);
+        assert!(vs.is_empty(), "{vs:?}");
+    }
+
+    #[test]
+    fn wall_clock_and_entropy_are_flagged() {
+        let vs = run("fn f() { let t = Instant::now(); }");
+        assert_eq!(rules_of(&vs), vec![RULE_WALL_CLOCK]);
+        let vs = run("fn f() { let s = RandomState::new(); }");
+        assert_eq!(rules_of(&vs), vec![RULE_WALL_CLOCK]);
+    }
+
+    #[test]
+    fn threads_static_mut_and_unsafe_are_flagged() {
+        let vs = run("static mut X: u32 = 0;");
+        assert_eq!(rules_of(&vs), vec![RULE_THREADS]);
+        let vs = run("fn f() { std::thread::spawn(|| {}); }");
+        assert_eq!(rules_of(&vs), vec![RULE_THREADS]);
+        let vs = run("fn f() { unsafe { } }");
+        assert_eq!(rules_of(&vs), vec![RULE_THREADS]);
+    }
+
+    #[test]
+    fn hot_path_panics_are_flagged_but_degrading_calls_are_not() {
+        let vs = run("fn f(v: Vec<u32>) -> u32 { v.first().copied().unwrap() }");
+        assert_eq!(rules_of(&vs), vec![RULE_NO_PANIC]);
+        let vs = run("fn f() { panic!(\"boom\"); }");
+        assert_eq!(rules_of(&vs), vec![RULE_NO_PANIC]);
+        let vs = run(
+            "fn f(m: std::sync::Mutex<u32>) { m.lock().unwrap_or_else(|e| e.into_inner()); }",
+        );
+        assert!(vs.is_empty(), "{vs:?}");
+    }
+
+    #[test]
+    fn float_sum_over_tracked_map_is_flagged() {
+        let src = r#"
+use std::collections::HashMap;
+struct L { bal: HashMap<u64, f64> }
+impl L {
+    fn total(&self) -> f64 { self.bal.values().sum() }
+}
+"#;
+        let vs = run(src);
+        assert_eq!(rules_of(&vs), vec![RULE_MAP_ITER, RULE_FLOAT_SUM], "{vs:?}");
+    }
+
+    #[test]
+    fn dump_restore_shape_is_not_flagged() {
+        // `d.running.into_iter()` where `running` is a tracked field of
+        // another struct: consuming adapters only match self/bare paths
+        let src = r#"
+use std::collections::HashMap;
+struct H { running: HashMap<u32, u32> }
+struct Dump { running: Vec<(u32, u32)> }
+impl H {
+    fn restore(&mut self, d: Dump) {
+        self.running = d.running.into_iter().collect();
+    }
+}
+"#;
+        let vs = run(src);
+        assert!(vs.is_empty(), "{vs:?}");
+    }
+
+    #[test]
+    fn opaque_receivers_are_skipped() {
+        let src = r#"
+use std::collections::HashMap;
+struct S { m: HashMap<u32, u32> }
+impl S {
+    fn per_host(&self) -> HashMap<u32, u32> { self.m.clone() }
+    fn f(&self) -> usize { self.per_host().into_iter().count() }
+}
+"#;
+        let vs = run(src);
+        assert!(vs.is_empty(), "{vs:?}");
+    }
+}

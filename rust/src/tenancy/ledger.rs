@@ -131,7 +131,7 @@ impl UsageLedger {
     pub fn export_accounts(&self) -> Vec<(u64, f64, SimTime)> {
         let mut v: Vec<(u64, f64, SimTime)> = self
             .accounts
-            .iter()
+            .iter() // lint: sorted
             .map(|(&t, a)| (t, a.usage, a.as_of))
             .collect();
         v.sort_by_key(|e| e.0);

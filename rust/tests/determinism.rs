@@ -1,0 +1,123 @@
+//! Same-seed double-run determinism, end to end through every driver.
+//!
+//! These tests pin the property the `vhpc lint` rules exist to protect:
+//! with hash-order iteration, wall-clock reads and ambient entropy kept
+//! out of the tree, re-running any trace with the same seed must
+//! produce a byte-identical [`Metrics::counters_snapshot`] fingerprint.
+//! WAL replay, fault-plan replay and the planned sharded engine's
+//! partition merge all assume exactly this.
+//!
+//! Pure control-plane (synthetic jobs only): runs under
+//! `--no-default-features` in CI.
+
+use std::collections::BTreeMap;
+use vhpc::cluster::mix::{run_job_trace, run_tenant_trace};
+use vhpc::cluster::policy::SchedulePolicy;
+use vhpc::config::ClusterSpec;
+use vhpc::faults::{run_chaos_trace, FaultPlan};
+use vhpc::ha::run_ha_trace;
+use vhpc::sim::SimTime;
+use vhpc::tenancy::arrivals::PopulationSpec;
+use vhpc::tenancy::TenantQuotas;
+
+type Fingerprint = BTreeMap<String, u64>;
+
+fn fast_spec(machines: u32) -> ClusterSpec {
+    let mut spec = ClusterSpec::paper_testbed();
+    spec.machines = machines;
+    spec.machine_spec.boot_time = SimTime::from_secs(5);
+    spec.autoscale.min_nodes = 2;
+    spec.autoscale.max_nodes = machines - 1;
+    spec.autoscale.interval = SimTime::from_secs(2);
+    spec.autoscale.cooldown = SimTime::from_secs(4);
+    spec.autoscale.idle_timeout = SimTime::from_secs(60);
+    spec
+}
+
+fn assert_identical(a: &Fingerprint, b: &Fingerprint, what: &str) {
+    // compare as rendered text so a mismatch prints the full diffable
+    // fingerprints, not just the first unequal entry
+    let render = |fp: &Fingerprint| {
+        fp.iter().map(|(k, v)| format!("{k}={v}\n")).collect::<String>()
+    };
+    assert_eq!(render(a), render(b), "{what}: same-seed runs diverged");
+}
+
+/// The mixed workload driver: a bursty trace through the autoscaled
+/// pool, twice, byte-identical counters.
+#[test]
+fn mix_trace_double_run_is_byte_identical() {
+    let trace = [(8u32, 40u64), (16, 60), (4, 20), (12, 50), (8, 30)];
+    let run = || {
+        let (_, vc) = run_job_trace(fast_spec(4), &trace, usize::MAX, 24, 3600)
+            .expect("mix trace must drain");
+        vc.metrics().counters_snapshot()
+    };
+    assert_identical(&run(), &run(), "mix");
+}
+
+/// The multi-tenant driver: seeded arrivals under fair-share
+/// scheduling, twice, byte-identical counters.
+#[test]
+fn tenant_trace_double_run_is_byte_identical() {
+    let spec = || {
+        let mut s = ClusterSpec::paper_testbed();
+        s.machine_spec.boot_time = SimTime::from_secs(5);
+        s
+    };
+    let mut pop = PopulationSpec::new(50, 31);
+    pop.rate_per_sec = 0.05;
+    let run = || {
+        let (_, vc) = run_tenant_trace(
+            spec(),
+            pop,
+            SchedulePolicy::fairshare(),
+            TenantQuotas::default(),
+            240,
+            3600,
+        )
+        .expect("tenant trace must drain");
+        vc.metrics().counters_snapshot()
+    };
+    assert_identical(&run(), &run(), "tenants");
+}
+
+/// The chaos driver: a seeded MTBF crash schedule against the recovery
+/// pipeline, twice, byte-identical counters.
+#[test]
+fn chaos_trace_double_run_is_byte_identical() {
+    let plan = FaultPlan::from_mtbf(7, 4, SimTime::from_secs(400), SimTime::from_secs(1200));
+    assert!(!plan.is_empty(), "the schedule must contain at least one crash");
+    let trace = [(8u32, 60u64), (12, 90), (8, 45), (16, 120)];
+    let run = || {
+        let (_, vc) = run_chaos_trace(fast_spec(4), &trace, &plan, 24, 5, 3600)
+            .expect("chaos trace must drain");
+        vc.metrics().counters_snapshot()
+    };
+    assert_identical(&run(), &run(), "chaos");
+}
+
+/// The HA driver: a head crash mid-trace, WAL replay, takeover — twice,
+/// byte-identical counters (failover itself must replay exactly).
+#[test]
+fn ha_trace_double_run_is_byte_identical() {
+    let spec = || {
+        let mut s = ClusterSpec::paper_testbed();
+        s.machines = 4;
+        s.machine_spec.boot_time = SimTime::from_secs(5);
+        s.autoscale.min_nodes = 3;
+        s.autoscale.max_nodes = 3;
+        s.autoscale.interval = SimTime::from_secs(2);
+        s.autoscale.cooldown = SimTime::from_secs(4);
+        s.autoscale.idle_timeout = SimTime::from_secs(600);
+        s.ha.enabled = true;
+        s
+    };
+    let trace = [(24u32, 90u64), (8, 30), (8, 40), (16, 50), (4, 20), (8, 60)];
+    let run = || {
+        let (_, vc) = run_ha_trace(spec(), &trace, Some(SimTime::from_secs(33)), 36, 2400)
+            .expect("ha trace must drain");
+        vc.metrics().counters_snapshot()
+    };
+    assert_identical(&run(), &run(), "ha");
+}
