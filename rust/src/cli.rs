@@ -5,12 +5,16 @@
 //! vhpc run        [--ranks N] [--tile T] [--steps K] [--bridge MODE]
 //! vhpc mix        [--jobs N] [--machines M] [--max-concurrent K]
 //!                 [--policy fifo|easy|priority|fairshare] [--racks N]
+//!                 [--shards N] [--ticks T]   (partitioned run; T = drain
+//!                 deadline in 1s scheduler ticks, like `vhpc ha`)
 //! vhpc tenants    [--tenants N] [--policy fifo|easy|priority|fairshare]
 //!                 [--duration S] [--rate JOBS_PER_SEC] [--skew S]
 //!                 [--seed S] [--max-queued N] [--defer-over-quota B]
 //!                 [--sim-seconds S]   (drain deadline; default 4x duration)
+//!                 [--shards N] [--crash-at S]   (HA run: crash the head
+//!                 mid-stream; the arrival cursor resumes from the WAL)
 //! vhpc chaos      [--jobs N] [--machines M] [--seed S] [--mtbf SECS]
-//!                 [--max-retries K] [--sim-seconds S]
+//!                 [--max-retries K] [--sim-seconds S] [--shards N]
 //! vhpc ha         [--jobs N] [--machines M] [--crash-at S] [--lock-ttl S]
 //!                 [--snapshot-every N] [--ticks T]   (drain deadline, 1s ticks)
 //! vhpc build      [--dockerfile F]
@@ -50,6 +54,22 @@ fn flag<T: std::str::FromStr>(
         Some(v) => v.parse().map_err(|_| format!("bad value for --{key}: {v}")),
         None => Ok(default),
     }
+}
+
+/// Order-stable 64-bit digest of a merged counter snapshot (FNV-1a over
+/// the sorted entries), so `--shards` invariance can be eyeballed from
+/// two CLI runs without diffing the whole metrics dump.
+fn counter_digest(fp: &std::collections::BTreeMap<String, u64>) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for (k, v) in fp {
+        for b in k.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        h ^= *v;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
 }
 
 fn load_spec(flags: &HashMap<String, String>) -> Result<ClusterSpec, String> {
@@ -173,6 +193,32 @@ fn cmd_mix(flags: HashMap<String, String>) -> Result<(), String> {
     // job_mix example / ext_autoscale bench)
     let warmup = (spec.autoscale.min_nodes * spec.slots_per_node).clamp(1, cap_slots);
     let cap = if max_concurrent == 0 { usize::MAX } else { max_concurrent };
+    let shards: usize = flag(&flags, "shards", 0usize)?;
+    // drain deadline in scheduler ticks (1 tick = 1 virtual second),
+    // sharded runs only — mirrors `vhpc ha --ticks`
+    let ticks: u64 = flag(&flags, "ticks", 0u64)?;
+    if shards > 0 {
+        let cfg = crate::cluster::ShardRunConfig {
+            shards,
+            warmup_slots: warmup,
+            deadline_secs: if ticks > 0 { ticks } else { sim_secs },
+            max_concurrent: cap,
+            ..Default::default()
+        };
+        let o = crate::cluster::run_sharded_mix(spec, &trace, policy, &cfg)
+            .map_err(|e| e.to_string())?;
+        println!(
+            "sharded mix: {} shards  {} windows  policy: {}  jobs done: {}/{}  makespan {:.1}s  events {}",
+            o.shards, o.windows, kind.name(), o.jobs_completed, o.jobs_submitted,
+            o.makespan_secs, o.events
+        );
+        println!(
+            "counter fingerprint: {:016x} ({} counters) — identical for any --shards at this seed",
+            counter_digest(&o.fingerprint),
+            o.fingerprint.len()
+        );
+        return Ok(());
+    }
     let (outcome, vc) =
         crate::cluster::mix::run_policy_trace(spec, &trace, policy, cap, warmup, sim_secs)
             .map_err(|e| e.to_string())?;
@@ -231,9 +277,59 @@ fn cmd_tenants(flags: HashMap<String, String>) -> Result<(), String> {
         ..Default::default()
     };
     let policy = SchedulePolicy::new(kind);
-    let (o, vc) =
-        crate::cluster::mix::run_tenant_trace(spec, pop, policy, quotas, duration, deadline)
+    let shards: usize = flag(&flags, "shards", 0usize)?;
+    if shards > 0 {
+        let cap_slots = spec.max_advertisable_slots();
+        if cap_slots == 0 {
+            return Err("cluster has no compute capacity (needs >= 2 machines)".into());
+        }
+        let warmup = (spec.autoscale.min_nodes * spec.slots_per_node).clamp(1, cap_slots);
+        let cfg = crate::cluster::ShardRunConfig {
+            shards,
+            warmup_slots: warmup,
+            deadline_secs: deadline,
+            ..Default::default()
+        };
+        let o = crate::cluster::run_sharded_tenants(spec, pop, policy, quotas, duration, &cfg)
             .map_err(|e| e.to_string())?;
+        println!(
+            "sharded tenants: {} shards  {} windows  policy: {}  jobs: {} submitted, {} done  makespan {:.0}s  events {}",
+            o.shards, o.windows, kind.name(), o.jobs_submitted, o.jobs_completed,
+            o.makespan_secs, o.events
+        );
+        println!("arrival-stream fingerprint: {:016x}", o.arrivals_fingerprint);
+        println!(
+            "counter fingerprint: {:016x} ({} counters) — identical for any --shards at this seed",
+            counter_digest(&o.fingerprint),
+            o.fingerprint.len()
+        );
+        return Ok(());
+    }
+    let crash_at: u64 = flag(&flags, "crash-at", 0u64)?;
+    let (o, vc) = if crash_at > 0 {
+        // HA run with a mid-stream head crash: the arrival cursor is
+        // WAL-shipped, so the stream resumes byte-identically after the
+        // standby takes over
+        crate::cluster::mix::run_tenant_trace_ha(
+            spec,
+            pop,
+            policy,
+            quotas,
+            duration,
+            Some(SimTime::from_secs(crash_at)),
+            deadline,
+        )
+        .map_err(|e| e.to_string())?
+    } else {
+        crate::cluster::mix::run_tenant_trace(spec, pop, policy, quotas, duration, deadline)
+            .map_err(|e| e.to_string())?
+    };
+    if crash_at > 0 {
+        println!(
+            "head crash at +{crash_at}s: {} takeover(s), arrival stream resumed from the WAL-shipped cursor",
+            vc.metrics().counter("ha_takeovers")
+        );
+    }
     println!(
         "t={}  policy: {}  tenants: {tenants} ({} active)  jobs: {} submitted, {} done, {} failed, {} deferred",
         vc.now(),
@@ -288,13 +384,41 @@ fn cmd_chaos(flags: HashMap<String, String>) -> Result<(), String> {
             .into_iter()
             .map(|(ranks, secs)| (ranks.min(cap_slots), secs))
             .collect();
+    let warmup = (spec.autoscale.min_nodes * spec.slots_per_node).clamp(1, cap_slots);
+    let shards: usize = flag(&flags, "shards", 0usize)?;
+    if shards > 0 {
+        // the sharded driver draws its own kill schedule from the spec seed
+        spec.seed = seed;
+        let reqs: Vec<crate::cluster::mix::JobReq> = trace
+            .iter()
+            .map(|&(ranks, secs)| crate::cluster::mix::JobReq { ranks, secs, priority: 0 })
+            .collect();
+        let cfg = crate::cluster::ShardRunConfig {
+            shards,
+            warmup_slots: warmup,
+            deadline_secs: sim_secs,
+            ..Default::default()
+        };
+        let o =
+            crate::cluster::run_sharded_chaos(spec, &reqs, SchedulePolicy::default(), mtbf as f64, &cfg)
+                .map_err(|e| e.to_string())?;
+        println!(
+            "sharded chaos: {} shards  {} windows  jobs done: {}/{}  makespan {:.1}s  events {}",
+            o.shards, o.windows, o.jobs_completed, o.jobs_submitted, o.makespan_secs, o.events
+        );
+        println!(
+            "counter fingerprint: {:016x} ({} counters) — identical for any --shards at this seed",
+            counter_digest(&o.fingerprint),
+            o.fingerprint.len()
+        );
+        return Ok(());
+    }
     let plan = crate::faults::FaultPlan::from_mtbf(
         seed,
         spec.machines,
         SimTime::from_secs(mtbf),
         SimTime::from_secs(sim_secs),
     );
-    let warmup = (spec.autoscale.min_nodes * spec.slots_per_node).clamp(1, cap_slots);
     println!(
         "chaos: {} crashes scheduled over {sim_secs}s (seed {seed}, per-machine mtbf {mtbf}s)",
         plan.len()
@@ -464,9 +588,9 @@ pub fn main() -> i32 {
                 "vhpc — virtual HPC cluster with auto-scaling (Yu & Huang 2015 reproduction)\n\n\
                  usage:\n  vhpc up        [--config F] [--machines N] [--sim-seconds S] [--bridge MODE]\n  \
                  vhpc run       [--ranks N] [--tile T] [--steps K] [--bridge MODE]\n  \
-                 vhpc mix       [--jobs N] [--machines M] [--max-concurrent K] [--policy fifo|easy|priority|fairshare] [--racks N] [--sim-seconds S]\n  \
-                 vhpc tenants   [--tenants N] [--policy fifo|easy|priority|fairshare] [--duration S] [--rate R] [--skew S] [--seed S] [--max-queued N] [--defer-over-quota true|false] [--sim-seconds S]\n  \
-                 vhpc chaos     [--jobs N] [--machines M] [--seed S] [--mtbf SECS] [--max-retries K] [--sim-seconds S]\n  \
+                 vhpc mix       [--jobs N] [--machines M] [--max-concurrent K] [--policy fifo|easy|priority|fairshare] [--racks N] [--sim-seconds S] [--shards N] [--ticks T]\n  \
+                 vhpc tenants   [--tenants N] [--policy fifo|easy|priority|fairshare] [--duration S] [--rate R] [--skew S] [--seed S] [--max-queued N] [--defer-over-quota true|false] [--sim-seconds S] [--shards N] [--crash-at S]\n  \
+                 vhpc chaos     [--jobs N] [--machines M] [--seed S] [--mtbf SECS] [--max-retries K] [--sim-seconds S] [--shards N]\n  \
                  vhpc ha        [--jobs N] [--machines M] [--crash-at S] [--lock-ttl S] [--snapshot-every N] [--ticks T]\n  \
                  vhpc build     [--dockerfile F]\n  \
                  vhpc bench-net [--bridge docker0|bridge0|host]\n  \

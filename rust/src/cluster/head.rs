@@ -268,6 +268,11 @@ pub struct Head {
     /// When each job first lost a node — MTTR is measured from here to
     /// the job's eventual completion. Cleared on completion/abandonment.
     pub first_failed_at: HashMap<JobId, SimTime>,
+    /// The tenant arrival generator's last journaled resume cursor
+    /// (None outside `vhpc tenants` runs). Carried through WAL replay
+    /// and snapshots so a takeover continues the arrival stream exactly
+    /// where the dead head left it.
+    pub last_arrival_cursor: Option<String>,
     /// In-memory buffer of not-yet-flushed WAL events (`None` = HA
     /// journaling off, the default — zero cost on non-HA clusters).
     /// Mutation methods push into it; the cluster drains it into the
@@ -311,6 +316,7 @@ impl Head {
             attempts: HashMap::new(),
             jacobi_progress: HashMap::new(),
             first_failed_at: HashMap::new(),
+            last_arrival_cursor: None,
             journal: None,
         }
     }
@@ -1143,6 +1149,7 @@ impl Head {
             completed_trimmed: self.completed_trimmed,
             last_scale_up: self.last_scale_up,
             last_scale_down: self.last_scale_down,
+            last_arrival_cursor: self.last_arrival_cursor.clone(),
         }
     }
 
@@ -1169,6 +1176,7 @@ impl Head {
         self.first_failed_at = d.first_failed_at.into_iter().collect();
         self.last_accrued = d.last_accrued;
         self.ledger.restore_accounts(&d.ledger_accounts);
+        self.last_arrival_cursor = d.last_arrival_cursor;
     }
 }
 

@@ -14,6 +14,7 @@ use crate::cluster::metrics::{Histogram, TenantBreakdown};
 use crate::cluster::policy::SchedulePolicy;
 use crate::cluster::vcluster::VirtualCluster;
 use crate::config::ClusterSpec;
+use crate::faults::FaultPlan;
 use crate::sim::SimTime;
 use crate::tenancy::arrivals::{
     stream_fingerprint, tenant_counts, ArrivalGen, JobArrival, PopulationSpec,
@@ -297,6 +298,17 @@ pub fn run_tenant_trace(
         let overbooked = vc.state.head.overbooked_hosts();
         ensure!(overbooked.is_empty(), "double-booked hosts: {overbooked:?}");
     }
+    drain_and_measure(vc, arrivals, t0, deadline_secs)
+}
+
+/// Shared tail of the tenant drivers: wait out the drain, then fold the
+/// completed records into a [`TenantTraceOutcome`].
+fn drain_and_measure(
+    mut vc: VirtualCluster,
+    arrivals: Vec<JobArrival>,
+    t0: SimTime,
+    deadline_secs: u64,
+) -> Result<(TenantTraceOutcome, VirtualCluster)> {
     let submitted = arrivals.len();
     let deadline = t0 + SimTime::from_secs(deadline_secs);
     while vc.now() < deadline && vc.completed_total() < submitted {
@@ -354,6 +366,122 @@ pub fn run_tenant_trace(
     Ok((outcome, vc))
 }
 
+/// [`run_tenant_trace`] on an HA-enabled cluster, optionally crashing
+/// the head `crash_at` after warm-up. The arrival generator lives on
+/// the head: its resume cursor is journaled into the replicated WAL
+/// after every pull, pulls stop while the head is down, and after the
+/// takeover the stream continues from the cursor the standby replayed —
+/// so the synthesized arrival sequence is byte-identical to a
+/// crash-free run (`arrivals_fingerprint` matches) and no submission is
+/// lost. This is the harness behind `vhpc tenants --crash-at`.
+pub fn run_tenant_trace_ha(
+    mut spec: ClusterSpec,
+    pop: PopulationSpec,
+    policy: SchedulePolicy,
+    quotas: TenantQuotas,
+    duration_secs: u64,
+    crash_at: Option<SimTime>,
+    deadline_secs: u64,
+) -> Result<(TenantTraceOutcome, VirtualCluster)> {
+    spec.ha.enabled = true;
+    let mut vc = VirtualCluster::new(spec)?;
+    vc.state.head.policy = policy;
+    vc.state.head.quotas = quotas;
+    vc.start();
+    ensure!(
+        vc.advance_until(SimTime::from_secs(600), |st| st.head.slots_available() > 0),
+        "cluster never advertised a slot"
+    );
+    let max_ranks = vc.state.spec.max_advertisable_slots().max(1);
+    let mut gen = ArrivalGen::new(pop);
+    let t0 = vc.now();
+    if let Some(at) = crash_at {
+        vc.inject_faults(&FaultPlan::head_crash(at));
+    }
+    let horizon = SimTime::from_secs(duration_secs);
+    let mut epoch = vc.state.ha.epoch;
+    // the stream's start position, so a crash before the first arrival
+    // still leaves the standby a valid resume point
+    vc.journal_arrival_cursor(gen.cursor());
+    let mut next = gen.next();
+    let mut arrivals: Vec<JobArrival> = Vec::new();
+    while vc.now().saturating_sub(t0) < horizon {
+        if vc.state.ha.epoch != epoch {
+            // the head died and took the in-memory generator with it:
+            // resume from the cursor the takeover replayed. The
+            // lookahead arrival held above was never submitted, and the
+            // cursor predates its draw, so the restored generator
+            // re-emits it first — nothing skips, nothing duplicates.
+            epoch = vc.state.ha.epoch;
+            let cursor = vc
+                .arrival_cursor()
+                .ok_or_else(|| anyhow!("takeover did not replay an arrival cursor"))?
+                .to_string();
+            gen = ArrivalGen::restore(pop, &cursor).map_err(|e| anyhow!("arrival cursor: {e}"))?;
+            next = gen.next();
+        }
+        if !vc.state.ha.head_down() {
+            // submit everything due by now; overdue arrivals that piled
+            // up during an outage land here in one catch-up batch, at
+            // their original offsets
+            let mut batch_cursor = None;
+            while next.at <= vc.now().saturating_sub(t0) {
+                vc.submit_job(
+                    &format!("t{}-j{}", next.tenant, arrivals.len()),
+                    next.ranks.min(max_ranks),
+                    JobKind::Synthetic { duration: next.duration },
+                    next.priority,
+                    next.tenant,
+                );
+                arrivals.push(next);
+                // captured before the next draw: the position right
+                // after the last *submitted* arrival
+                batch_cursor = Some(gen.cursor());
+                next = gen.next();
+            }
+            if let Some(cursor) = batch_cursor {
+                vc.journal_arrival_cursor(cursor);
+            }
+        }
+        vc.advance(SimTime::from_secs(1));
+        let overbooked = vc.state.head.overbooked_hosts();
+        ensure!(overbooked.is_empty(), "double-booked hosts: {overbooked:?}");
+    }
+    // an outage that straddles the horizon must not swallow the tail of
+    // the stream: wait out the takeover, then submit whatever was due
+    // before the submission window closed (the last in-window pull ran
+    // at offset horizon - 1s, same as the crash-free driver)
+    if vc.state.ha.head_down() || vc.state.ha.epoch != epoch {
+        let wait_deadline = vc.now() + SimTime::from_secs(600);
+        while vc.state.ha.head_down() && vc.now() < wait_deadline {
+            vc.advance(SimTime::from_secs(1));
+        }
+        ensure!(!vc.state.ha.head_down(), "standby never took over after the head crash");
+        if vc.state.ha.epoch != epoch {
+            let cursor = vc
+                .arrival_cursor()
+                .ok_or_else(|| anyhow!("takeover did not replay an arrival cursor"))?
+                .to_string();
+            gen = ArrivalGen::restore(pop, &cursor).map_err(|e| anyhow!("arrival cursor: {e}"))?;
+            next = gen.next();
+            let last_pull = horizon.saturating_sub(SimTime::from_secs(1));
+            while next.at <= last_pull {
+                vc.submit_job(
+                    &format!("t{}-j{}", next.tenant, arrivals.len()),
+                    next.ranks.min(max_ranks),
+                    JobKind::Synthetic { duration: next.duration },
+                    next.priority,
+                    next.tenant,
+                );
+                arrivals.push(next);
+                vc.journal_arrival_cursor(gen.cursor());
+                next = gen.next();
+            }
+        }
+    }
+    drain_and_measure(vc, arrivals, t0, deadline_secs)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -402,6 +530,39 @@ mod tests {
         assert!((1..=10).contains(&o.tenants_seen));
         assert!(o.mean_slowdown >= 1.0);
         assert!(vc.state.head.overbooked_hosts().is_empty());
+    }
+
+    #[test]
+    fn tenant_stream_survives_a_head_crash_byte_identically() {
+        let mut pop = PopulationSpec::new(8, 21);
+        pop.rate_per_sec = 0.08;
+        pop.campaign_prob = 0.3; // crash is likely to land mid-campaign
+        let run = |crash: Option<SimTime>| {
+            run_tenant_trace_ha(
+                spec(),
+                pop,
+                SchedulePolicy::fairshare(),
+                TenantQuotas::default(),
+                240,
+                crash,
+                3600,
+            )
+            .unwrap()
+        };
+        let (clean, _) = run(None);
+        let (crashed, vc) = run(Some(SimTime::from_secs(60)));
+        assert_eq!(vc.metrics().counter("head_crashes"), 1);
+        assert_eq!(vc.metrics().counter("ha_takeovers"), 1);
+        assert_eq!(
+            crashed.arrivals_fingerprint, clean.arrivals_fingerprint,
+            "the resumed arrival stream must be byte-identical to a crash-free run"
+        );
+        assert_eq!(crashed.jobs_submitted, clean.jobs_submitted);
+        assert_eq!(
+            crashed.jobs_completed + crashed.jobs_failed,
+            crashed.jobs_submitted,
+            "no submission may be lost across the failover"
+        );
     }
 
     #[test]

@@ -25,6 +25,7 @@ pub mod head;
 pub mod metrics;
 pub mod mix;
 pub mod policy;
+pub mod shard;
 pub mod vcluster;
 
 pub use autoscaler::{Autoscaler, Observation, ScaleAction};
@@ -32,9 +33,13 @@ pub use head::{Head, JobKind, JobRecord, JobSpec, JobState, StartedJob, SubmitOu
 pub use metrics::{jain_index, Histogram, Metrics, TenantBreakdown};
 pub use mix::{
     bursty_trace, mix_spec, prioritized_trace, run_job_trace, run_policy_trace,
-    run_tenant_trace, JobReq, TenantTraceOutcome, TraceOutcome,
+    run_tenant_trace, run_tenant_trace_ha, JobReq, TenantTraceOutcome, TraceOutcome,
 };
 pub use policy::{PolicyKind, SchedulePolicy};
+pub use shard::{
+    run_sharded_chaos, run_sharded_mix, run_sharded_tenants, ComputeProfile, ShardMsg,
+    ShardOutcome, ShardRunConfig,
+};
 pub use vcluster::{NodeState, VirtualCluster};
 
 /// Canonical node name for machine index `idx` (machine 0 is the head,

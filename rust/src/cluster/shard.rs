@@ -1,0 +1,1320 @@
+//! Partitioned cluster simulation: the machine population is split by
+//! id range into shards ([`ShardPlan`]), each advancing its own
+//! [`Engine`] on its own thread in lock-step windows
+//! ([`run_lockstep`]), while rank 0 — the **conductor** — owns the real
+//! [`Head`], the [`Autoscaler`] and the [`Metrics`] sink.
+//!
+//! Division of labour:
+//!
+//! * **Shards** simulate everything machine-local: boot pipelines (with
+//!   per-machine jittered boot completion), heartbeat + gossip traffic,
+//!   health-TTL expiry after a crash, and per-job Jacobi compute (the
+//!   f32 sweeps that make a 4-shard run finish wall-clock faster).
+//! * **The conductor** makes every scheduling and scaling decision
+//!   sequentially — submissions, dispatch, preemption, quota
+//!   enforcement, crash handling, scale up/down — exactly like the
+//!   single-threaded head, so policy behavior cannot depend on the
+//!   shard count.
+//!
+//! Every cross-participant effect rides a [`ShardMsg`] with one window
+//! of latency (including shard-to-itself gossip), and receivers apply
+//! each window's batch sorted by [`ShardMsg::merge_key`] — never by
+//! arrival order. Together with the fixed window grid this makes the
+//! final [`Metrics::counters_snapshot`] fingerprint byte-identical at
+//! any `--shards` count for the same seed, which `tests/determinism.rs`
+//! pins at 1/2/4 shards for the mix, tenants and chaos drivers.
+
+use crate::cluster::autoscaler::{Autoscaler, Observation, ScaleAction};
+use crate::cluster::head::{
+    Head, JobKind, JobRecord, JobSpec, JobState, LossOutcome, SubmitOutcome,
+};
+use crate::cluster::metrics::Metrics;
+use crate::cluster::mix::JobReq;
+use crate::cluster::policy::SchedulePolicy;
+use crate::config::ClusterSpec;
+use crate::sim::partition::{run_lockstep, Outbox, Partitioned, ShardPlan};
+use crate::sim::{Engine, SimTime};
+use crate::tenancy::arrivals::{stream_fingerprint, ArrivalGen, JobArrival, PopulationSpec};
+use crate::tenancy::ledger::TenantQuotas;
+use crate::util::ids::JobId;
+use crate::util::rng::Rng;
+use crate::vnet::addr::Ipv4;
+use anyhow::{bail, Result};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+/// Gossip/heartbeat cadence on every live compute node.
+const HEARTBEAT: SimTime = SimTime::from_secs(1);
+/// How long after a crash the (simulated) health registry reaps the
+/// node's TTL check.
+const HEALTH_TTL: SimTime = SimTime::from_secs(5);
+/// Max per-boot jitter, milliseconds (drawn from the machine's RNG).
+const BOOT_JITTER_MS: u64 = 500;
+/// Virtual-time budget for the cluster to advertise the warmup slots.
+const WARMUP_DEADLINE: SimTime = SimTime::from_secs(600);
+/// Quiet period before the first chaos kill can fire.
+const CHAOS_GRACE_SECS: f64 = 30.0;
+
+/// The deterministic address of compute machine `m` (machine 0 is the
+/// head and never appears in a shard). A pure function, so every
+/// participant derives the same ip without a directory exchange.
+pub fn machine_addr(m: u32) -> Ipv4 {
+    Ipv4::new(10, 42, (m >> 8) as u8, (m & 0xff) as u8)
+}
+
+/// Boundary messages between the conductor and the shards. Every
+/// variant carries the virtual time the effect happened at; receivers
+/// sort a window's batch by [`ShardMsg::merge_key`] before applying.
+#[derive(Debug, Clone)]
+pub enum ShardMsg {
+    /// Conductor -> shard: power machine `machine` up. `generation`
+    /// counts boots of this machine (reboots after a crash), and fences
+    /// stale boot-completion events.
+    Boot { at: SimTime, machine: u32, generation: u32 },
+    /// Conductor -> shard: the machine crashed (chaos).
+    Kill { at: SimTime, machine: u32 },
+    /// Conductor -> shard: scale-down retired the machine.
+    Retire { at: SimTime, machine: u32 },
+    /// Conductor -> shard: a dispatched job's rank-0 landed on
+    /// `machine`; simulate its compute there for `duration`.
+    Launch {
+        at: SimTime,
+        id: JobId,
+        attempt: u32,
+        machine: u32,
+        ranks: u32,
+        duration: SimTime,
+    },
+    /// Conductor -> shard: stop simulating attempt `attempt` of job
+    /// `id` (preempted or its node was lost).
+    CancelJob { at: SimTime, id: JobId, attempt: u32 },
+    /// Conductor -> shards: the workload has drained; stop heartbeating
+    /// and report counters.
+    Finish,
+    /// Shard -> conductor: the machine finished booting and registered.
+    Ready { at: SimTime, machine: u32 },
+    /// Shard -> conductor: the machine completed retirement.
+    Retired { at: SimTime, machine: u32 },
+    /// Shard -> conductor: attempt `attempt` of job `id` ran to
+    /// completion; `residual_bits` is the Jacobi grid probe (f32 bits),
+    /// folded into the fingerprint so cross-shard compute divergence
+    /// would break determinism loudly.
+    Done { at: SimTime, id: JobId, attempt: u32, residual_bits: u32 },
+    /// Shard -> shard (possibly itself): one gossip exchange. Routed by
+    /// the *target* machine's owner; `from`'s shard counts the tx, the
+    /// owner counts rx or drop depending on the target's liveness.
+    Gossip { at: SimTime, from: u32, to: u32, bytes: u64 },
+    /// Shard -> conductor: final counter totals, sent once after
+    /// `Finish`. Merged additively, so ordering cannot matter.
+    Counters(Vec<(String, u64)>),
+}
+
+impl ShardMsg {
+    /// Total order a receiver applies a window's batch in:
+    /// `(time, kind rank, entity id)`. The kind rank breaks same-time
+    /// ties the same way on every shard layout (e.g. a Kill always
+    /// applies before a same-instant Launch); the entity id orders
+    /// same-kind same-time messages from different senders.
+    pub fn merge_key(&self) -> (u64, u8, u64) {
+        match self {
+            ShardMsg::Boot { at, machine, .. } => (at.as_nanos(), 0, *machine as u64),
+            ShardMsg::Kill { at, machine } => (at.as_nanos(), 1, *machine as u64),
+            ShardMsg::Retire { at, machine } => (at.as_nanos(), 2, *machine as u64),
+            ShardMsg::CancelJob { at, id, .. } => (at.as_nanos(), 3, id.raw() as u64),
+            ShardMsg::Launch { at, id, .. } => (at.as_nanos(), 4, id.raw() as u64),
+            ShardMsg::Gossip { at, from, to, .. } => {
+                (at.as_nanos(), 5, ((*from as u64) << 32) | *to as u64)
+            }
+            ShardMsg::Ready { at, machine } => (at.as_nanos(), 6, *machine as u64),
+            ShardMsg::Retired { at, machine } => (at.as_nanos(), 7, *machine as u64),
+            ShardMsg::Done { at, id, .. } => (at.as_nanos(), 8, id.raw() as u64),
+            // Finish and Counters close a window exchange: they always
+            // apply after every timed message in the same batch.
+            ShardMsg::Finish => (u64::MAX, 254, 0),
+            ShardMsg::Counters(_) => (u64::MAX, 255, 0),
+        }
+    }
+}
+
+fn sort_batch(batch: &mut Vec<(usize, ShardMsg)>) {
+    // stable: same-key messages (none in practice) keep sender order
+    batch.sort_by_key(|(_, m)| m.merge_key());
+}
+
+/// Per-job synthetic compute load on the shards: each running job owns
+/// a `grid`²-cell f32 Jacobi grid and performs `sweeps_per_tick` full
+/// sweeps every window. Purely local, single-threaded per job — the
+/// wall-clock work that sharding parallelizes.
+#[derive(Debug, Clone, Copy)]
+pub struct ComputeProfile {
+    pub grid: usize,
+    pub sweeps_per_tick: u32,
+}
+
+impl Default for ComputeProfile {
+    fn default() -> Self {
+        // small enough for tests/CI; the shard bench scales it up
+        Self { grid: 24, sweeps_per_tick: 2 }
+    }
+}
+
+/// Tuning knobs shared by all three sharded drivers.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardRunConfig {
+    /// Requested shard count (clamped to the compute-machine count).
+    pub shards: usize,
+    /// Lock-step window width. The window grid is part of the
+    /// determinism contract: compare runs only at equal window sizes.
+    pub window: SimTime,
+    /// Slots that must be advertised before the workload starts.
+    pub warmup_slots: u32,
+    /// Virtual-time budget (after warmup) for the trace to drain.
+    pub deadline_secs: u64,
+    /// Cap on concurrently running jobs (`usize::MAX` = slot-limited).
+    pub max_concurrent: usize,
+    pub compute: ComputeProfile,
+}
+
+impl Default for ShardRunConfig {
+    fn default() -> Self {
+        Self {
+            shards: 1,
+            window: SimTime::from_secs(1),
+            warmup_slots: 1,
+            deadline_secs: 3600,
+            max_concurrent: usize::MAX,
+            compute: ComputeProfile::default(),
+        }
+    }
+}
+
+/// What a sharded run measured. `fingerprint` is the merged counter
+/// snapshot — the determinism witness compared across shard counts.
+#[derive(Debug, Clone)]
+pub struct ShardOutcome {
+    /// Shards actually used (after clamping to the machine count).
+    pub shards: usize,
+    /// Lock-step windows executed.
+    pub windows: u64,
+    pub jobs_submitted: usize,
+    pub jobs_completed: u64,
+    /// Warmup-to-last-completion span, virtual seconds.
+    pub makespan_secs: f64,
+    /// Engine events fired across all shards (the bench's numerator).
+    pub events: u64,
+    /// Order-sensitive fingerprint of the synthesized arrival stream
+    /// (tenants driver only; 0 for burst traces).
+    pub arrivals_fingerprint: u64,
+    /// Stable merged counter snapshot: byte-identical for the same
+    /// seed at any shard count.
+    pub fingerprint: BTreeMap<String, u64>,
+}
+
+// ---------------------------------------------------------------------
+// Shard side
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum NodeStatus {
+    Booting,
+    Up,
+    Dead,
+    Retired,
+}
+
+struct Node {
+    status: NodeStatus,
+    /// Boot generation (fences boot-completion and heartbeat events
+    /// scheduled for an earlier life of the machine).
+    generation: u32,
+}
+
+struct JobRun {
+    attempt: u32,
+    grid: Vec<f32>,
+    n: usize,
+}
+
+/// The state one shard thread owns: its machines and the jobs homed on
+/// them. All containers are ordered (`BTreeMap`) — iteration order
+/// feeds event scheduling and must not depend on hashing.
+struct ShardCore {
+    plan: ShardPlan,
+    seed: u64,
+    total_machines: u32,
+    boot_time: SimTime,
+    window: SimTime,
+    compute: ComputeProfile,
+    nodes: BTreeMap<u32, Node>,
+    jobs: BTreeMap<JobId, JobRun>,
+    counters: BTreeMap<String, u64>,
+    outgoing: Vec<(usize, ShardMsg)>,
+    draining: bool,
+}
+
+impl ShardCore {
+    fn bump(&mut self, name: &str, v: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += v;
+    }
+
+    fn send(&mut self, to_rank: usize, msg: ShardMsg) {
+        self.outgoing.push((to_rank, msg));
+    }
+
+    /// Gossip peer of `machine` at heartbeat `seq`: a pure hash over
+    /// the whole compute population, so the choice is identical no
+    /// matter which shard computes it.
+    fn gossip_peer(&self, machine: u32, seq: u64) -> Option<u32> {
+        let peers = self.total_machines.saturating_sub(2); // all compute nodes but self
+        if peers == 0 {
+            return None;
+        }
+        let mut h = (machine as u64)
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(seq.wrapping_mul(0xC2B2_AE3D_27D4_EB4F));
+        h ^= h >> 29;
+        h = h.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        h ^= h >> 32;
+        let pick = (h % peers as u64) as u32;
+        // map [0, peers) onto compute ids 1..total skipping `machine`
+        let peer = 1 + pick;
+        Some(if peer >= machine { peer + 1 } else { peer })
+    }
+}
+
+/// Per-machine RNG, reseeded each boot so a machine's timing depends
+/// only on (cluster seed, machine id, boot generation) — never on which
+/// shard runs it or what its neighbors did.
+fn node_rng(seed: u64, machine: u32, generation: u32) -> Rng {
+    Rng::new(
+        seed ^ (machine as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ (generation as u64).wrapping_mul(0xC2B2_AE3D_27D4_EB4F),
+    )
+}
+
+/// Deterministic f32 grid seeded from the job id.
+fn init_grid(id: JobId, n: usize) -> Vec<f32> {
+    (0..n * n)
+        .map(|i| {
+            let mut h = id.raw().wrapping_mul(0x9E37_79B9) ^ (i as u32).wrapping_mul(0x85EB_CA6B);
+            h ^= h >> 15;
+            h = h.wrapping_mul(0x2C1B_3C6D);
+            h ^= h >> 12;
+            (h >> 8) as f32 / (1u32 << 24) as f32
+        })
+        .collect()
+}
+
+/// One in-place Gauss-Seidel sweep over the interior (fixed boundary).
+fn sweep(grid: &mut [f32], n: usize) {
+    for r in 1..n - 1 {
+        for c in 1..n - 1 {
+            let i = r * n + c;
+            grid[i] = 0.25 * (grid[i - 1] + grid[i + 1] + grid[i - n] + grid[i + n]);
+        }
+    }
+}
+
+fn heartbeat_event(
+    machine: u32,
+    generation: u32,
+) -> impl FnOnce(&mut ShardCore, &mut Engine<ShardCore>) + 'static {
+    move |core, eng| {
+        if core.draining {
+            return;
+        }
+        let alive = core
+            .nodes
+            .get(&machine)
+            .map(|nd| nd.status == NodeStatus::Up && nd.generation == generation)
+            .unwrap_or(false);
+        if !alive {
+            return;
+        }
+        let seq = eng.now().as_nanos() / HEARTBEAT.as_nanos().max(1);
+        core.bump("gossip_tx", 1);
+        if let Some(peer) = core.gossip_peer(machine, seq) {
+            let bytes = 64 + ((machine as u64) * 131 + seq * 17) % 192;
+            let to_rank = core.plan.shard_of(peer) + 1;
+            let at = eng.now();
+            core.send(to_rank, ShardMsg::Gossip { at, from: machine, to: peer, bytes });
+        }
+        eng.schedule_after(HEARTBEAT, heartbeat_event(machine, generation));
+    }
+}
+
+fn compute_tick(
+    id: JobId,
+    attempt: u32,
+) -> impl FnOnce(&mut ShardCore, &mut Engine<ShardCore>) + 'static {
+    move |core, eng| {
+        let sweeps = core.compute.sweeps_per_tick;
+        let alive = match core.jobs.get_mut(&id) {
+            Some(run) if run.attempt == attempt => {
+                let n = run.n;
+                for _ in 0..sweeps {
+                    sweep(&mut run.grid, n);
+                }
+                true
+            }
+            _ => false,
+        };
+        if alive {
+            core.bump("shard_sweeps", sweeps as u64);
+            let window = core.window;
+            eng.schedule_after(window, compute_tick(id, attempt));
+        }
+    }
+}
+
+/// One shard: an [`Engine`] over [`ShardCore`].
+struct ShardSim {
+    core: ShardCore,
+    eng: Engine<ShardCore>,
+    counters_sent: bool,
+}
+
+impl ShardSim {
+    fn new(
+        plan: ShardPlan,
+        spec: &ClusterSpec,
+        window: SimTime,
+        compute: ComputeProfile,
+    ) -> Self {
+        Self {
+            core: ShardCore {
+                plan,
+                seed: spec.seed,
+                total_machines: spec.machines,
+                boot_time: spec.machine_spec.boot_time,
+                window,
+                compute,
+                nodes: BTreeMap::new(),
+                jobs: BTreeMap::new(),
+                counters: BTreeMap::new(),
+                outgoing: Vec::new(),
+                draining: false,
+            },
+            eng: Engine::new(),
+            counters_sent: false,
+        }
+    }
+
+    fn apply(&mut self, batch: Vec<(usize, ShardMsg)>) {
+        for (_, msg) in batch {
+            match msg {
+                ShardMsg::Boot { at, machine, generation } => {
+                    let mut rng = node_rng(self.core.seed, machine, generation);
+                    let jitter = SimTime::from_millis(rng.gen_range(BOOT_JITTER_MS));
+                    self.core
+                        .nodes
+                        .insert(machine, Node { status: NodeStatus::Booting, generation });
+                    self.core.bump("nodes_booted", 1);
+                    let done_at = at + self.core.boot_time + jitter;
+                    self.eng.schedule_at(done_at, move |core: &mut ShardCore, eng| {
+                        let now = eng.now();
+                        let up = match core.nodes.get_mut(&machine) {
+                            Some(nd)
+                                if nd.status == NodeStatus::Booting
+                                    && nd.generation == generation =>
+                            {
+                                nd.status = NodeStatus::Up;
+                                true
+                            }
+                            _ => false,
+                        };
+                        if up {
+                            core.send(0, ShardMsg::Ready { at: now, machine });
+                            eng.schedule_after(HEARTBEAT, heartbeat_event(machine, generation));
+                        }
+                    });
+                }
+                ShardMsg::Kill { at, machine } => {
+                    if let Some(nd) = self.core.nodes.get_mut(&machine) {
+                        if matches!(nd.status, NodeStatus::Booting | NodeStatus::Up) {
+                            nd.status = NodeStatus::Dead;
+                            self.core.bump("nodes_crashed_shard", 1);
+                            self.eng.schedule_at(
+                                at + HEALTH_TTL,
+                                move |core: &mut ShardCore, _| {
+                                    core.bump("ttl_expired", 1);
+                                },
+                            );
+                        }
+                    }
+                }
+                ShardMsg::Retire { at, machine } => {
+                    if let Some(nd) = self.core.nodes.get_mut(&machine) {
+                        if nd.status == NodeStatus::Up {
+                            nd.status = NodeStatus::Retired;
+                            self.core.bump("nodes_retired_shard", 1);
+                            self.core.send(0, ShardMsg::Retired { at, machine });
+                        }
+                    }
+                }
+                ShardMsg::Launch { at, id, attempt, machine: _, ranks: _, duration } => {
+                    let n = self.core.compute.grid.max(4);
+                    self.core
+                        .jobs
+                        .insert(id, JobRun { attempt, grid: init_grid(id, n), n });
+                    self.core.bump("jobs_launched_shard", 1);
+                    self.eng.schedule_at(at, compute_tick(id, attempt));
+                    self.eng.schedule_at(at + duration, move |core: &mut ShardCore, eng| {
+                        let now = eng.now();
+                        let done = match core.jobs.get(&id) {
+                            Some(run) if run.attempt == attempt => {
+                                let probe = run.grid[run.n * run.n / 2];
+                                Some(probe.to_bits())
+                            }
+                            _ => None,
+                        };
+                        if let Some(residual_bits) = done {
+                            core.jobs.remove(&id);
+                            core.bump("shard_jobs_done", 1);
+                            core.send(
+                                0,
+                                ShardMsg::Done { at: now, id, attempt, residual_bits },
+                            );
+                        }
+                    });
+                }
+                ShardMsg::CancelJob { at: _, id, attempt } => {
+                    let cancel = matches!(
+                        self.core.jobs.get(&id), Some(run) if run.attempt == attempt
+                    );
+                    if cancel {
+                        self.core.jobs.remove(&id);
+                        self.core.bump("jobs_cancelled_shard", 1);
+                    }
+                }
+                ShardMsg::Gossip { at: _, from: _, to, bytes } => {
+                    let up = self
+                        .core
+                        .nodes
+                        .get(&to)
+                        .map(|nd| nd.status == NodeStatus::Up)
+                        .unwrap_or(false);
+                    if up {
+                        self.core.bump("gossip_rx", 1);
+                        self.core.bump("gossip_bytes", bytes);
+                    } else {
+                        self.core.bump("gossip_dropped", 1);
+                    }
+                }
+                ShardMsg::Finish => {
+                    self.core.draining = true;
+                }
+                // conductor-bound messages never reach a shard
+                ShardMsg::Ready { .. }
+                | ShardMsg::Retired { .. }
+                | ShardMsg::Done { .. }
+                | ShardMsg::Counters(_) => {}
+            }
+        }
+    }
+}
+
+impl Partitioned for ShardSim {
+    type Msg = ShardMsg;
+
+    fn window(
+        &mut self,
+        _start: SimTime,
+        end: SimTime,
+        mut incoming: Vec<(usize, ShardMsg)>,
+        out: &mut Outbox<ShardMsg>,
+    ) -> bool {
+        sort_batch(&mut incoming);
+        self.apply(incoming);
+        self.eng.run_window(&mut self.core, end);
+        if self.core.draining && !self.counters_sent {
+            self.counters_sent = true;
+            self.core.bump("shard_events", self.eng.fired());
+            let totals: Vec<(String, u64)> = self
+                .core
+                .counters
+                .iter()
+                .map(|(k, v)| (k.clone(), *v))
+                .collect();
+            self.core.send(0, ShardMsg::Counters(totals));
+        }
+        for (to, msg) in std::mem::take(&mut self.core.outgoing) {
+            out.send(to, msg);
+        }
+        false
+    }
+}
+
+// ---------------------------------------------------------------------
+// Conductor side
+// ---------------------------------------------------------------------
+
+enum Workload {
+    /// Everything submitted in one burst once warmup completes.
+    Burst { jobs: Vec<JobReq>, submitted: bool },
+    /// Open-loop multi-tenant arrival stream for `horizon` of virtual
+    /// time after warmup.
+    Arrivals {
+        gen: ArrivalGen,
+        horizon: SimTime,
+        next: Option<JobArrival>,
+        log: Vec<JobArrival>,
+    },
+}
+
+/// Rank 0: the sequential decision-maker. Owns the head, the
+/// autoscaler and the metrics sink; shards only ever learn about its
+/// decisions through messages.
+struct Conductor {
+    spec: ClusterSpec,
+    plan: ShardPlan,
+    head: Head,
+    autoscaler: Autoscaler,
+    metrics: Metrics,
+    workload: Workload,
+    /// Chaos kill schedule, ascending by time.
+    kills: VecDeque<(SimTime, u32)>,
+    /// Machine pools (disjoint; `off` holds never-booted + retired).
+    off: BTreeSet<u32>,
+    booting: BTreeSet<u32>,
+    ready: BTreeSet<u32>,
+    retiring: BTreeSet<u32>,
+    dead: BTreeSet<u32>,
+    /// Boot generation per machine.
+    generations: BTreeMap<u32, u32>,
+    ip_to_machine: BTreeMap<Ipv4, u32>,
+    /// Live dispatches: job -> (attempt, home machine). Fences stale
+    /// completions from cancelled attempts.
+    running: BTreeMap<JobId, (u32, u32)>,
+    started_at: Option<SimTime>,
+    next_scale_at: SimTime,
+    warmup_slots: u32,
+    deadline: SimTime,
+    max_slots: u32,
+    next_id: u32,
+    last_finish: SimTime,
+    finish_sent: bool,
+    counters_pending: usize,
+    error: Option<String>,
+}
+
+impl Conductor {
+    fn new(
+        spec: ClusterSpec,
+        plan: ShardPlan,
+        policy: SchedulePolicy,
+        quotas: TenantQuotas,
+        workload: Workload,
+        kills: Vec<(SimTime, u32)>,
+        cfg: &ShardRunConfig,
+    ) -> Self {
+        let mut head = Head::new();
+        head.policy = policy;
+        head.quotas = quotas;
+        head.max_concurrent = cfg.max_concurrent;
+        head.checkpoint_every_steps = spec.jacobi_checkpoint_steps.max(1);
+        head.completed_retention = spec.completed_retention;
+        for &(tenant, weight) in &spec.tenant_weights {
+            head.ledger.set_weight(tenant, weight);
+        }
+        let mut ip_to_machine = BTreeMap::new();
+        let mut off = BTreeSet::new();
+        for m in 1..spec.machines {
+            ip_to_machine.insert(machine_addr(m), m);
+            off.insert(m);
+        }
+        let shards = plan.shards();
+        Self {
+            autoscaler: Autoscaler::new(spec.autoscale.clone()),
+            max_slots: spec.max_advertisable_slots().max(1),
+            deadline: SimTime::from_secs(cfg.deadline_secs),
+            warmup_slots: cfg.warmup_slots,
+            spec,
+            plan,
+            head,
+            metrics: Metrics::default(),
+            workload,
+            kills: kills.into(),
+            off,
+            booting: BTreeSet::new(),
+            ready: BTreeSet::new(),
+            retiring: BTreeSet::new(),
+            dead: BTreeSet::new(),
+            generations: BTreeMap::new(),
+            ip_to_machine,
+            running: BTreeMap::new(),
+            started_at: None,
+            next_scale_at: SimTime::ZERO,
+            next_id: 0,
+            last_finish: SimTime::ZERO,
+            finish_sent: false,
+            counters_pending: shards,
+            error: None,
+        }
+    }
+
+    fn rank_of_machine(&self, m: u32) -> usize {
+        self.plan.shard_of(m) + 1
+    }
+
+    /// Rack index of machine `m`: explicit racks spread evenly, the
+    /// legacy default keeps 16-machine chassis rows.
+    fn rack_of_machine(&self, m: u32) -> usize {
+        let compute = self.spec.machines.saturating_sub(1).max(1);
+        if self.spec.racks > 0 {
+            ((m - 1) as usize * self.spec.racks as usize) / compute as usize
+        } else {
+            m as usize / 16
+        }
+    }
+
+    /// Re-render the hostfile from the ready pool (ascending machine
+    /// id, like the name-sorted catalog the live cluster renders from).
+    fn render_hostfile(&mut self, at: SimTime) {
+        let slots = self.spec.slots_per_node;
+        let text: String = self
+            .ready
+            .iter()
+            .map(|&m| format!("{} slots={}\n", machine_addr(m), slots))
+            .collect();
+        if text != self.head.hostfile_text {
+            self.head.hostfile_text = text;
+            self.head.hostfile_updated_at = at;
+            self.head.hostfile_renders += 1;
+            self.metrics.inc("hostfile_renders");
+        }
+    }
+
+    fn apply(&mut self, batch: Vec<(usize, ShardMsg)>) {
+        for (_, msg) in batch {
+            match msg {
+                ShardMsg::Ready { at, machine } => {
+                    if self.booting.remove(&machine) {
+                        self.ready.insert(machine);
+                        let rack = self.rack_of_machine(machine);
+                        self.head.rack_of.insert(machine_addr(machine), rack);
+                        self.metrics.inc("nodes_ready");
+                        self.render_hostfile(at);
+                    }
+                }
+                ShardMsg::Retired { at: _, machine } => {
+                    if self.retiring.remove(&machine) {
+                        self.off.insert(machine);
+                        self.metrics.inc("nodes_retired");
+                    }
+                }
+                ShardMsg::Done { at, id, attempt, residual_bits } => {
+                    let fresh = matches!(
+                        self.running.get(&id), Some(&(a, _)) if a == attempt
+                    );
+                    if !fresh {
+                        self.metrics.inc("stale_completions");
+                        continue;
+                    }
+                    self.running.remove(&id);
+                    self.head.accrue_usage(at);
+                    if let Some(mut rec) = self.head.finish(id) {
+                        let started = match rec.state {
+                            JobState::Running { started } => started,
+                            _ => at,
+                        };
+                        rec.state = JobState::Done { started, finished: at };
+                        self.head.first_failed_at.remove(&id);
+                        let wait = started.saturating_sub(rec.queued_at).as_secs_f64();
+                        self.metrics.observe("job_wait_secs", wait);
+                        self.head.record_terminal(rec);
+                        self.metrics.inc("jobs_completed");
+                        self.metrics.add("jacobi_residual_checksum", residual_bits as u64);
+                        self.last_finish = self.last_finish.max(at);
+                    }
+                }
+                ShardMsg::Counters(totals) => {
+                    for (name, v) in totals {
+                        self.metrics.add(&name, v);
+                    }
+                    self.counters_pending = self.counters_pending.saturating_sub(1);
+                }
+                // shard-bound messages never reach the conductor
+                _ => {}
+            }
+        }
+    }
+
+    fn submit(&mut self, name: String, ranks: u32, duration: SimTime, priority: i32, tenant: u64, now: SimTime) {
+        let spec = JobSpec {
+            id: JobId::new(self.next_id),
+            name,
+            ranks: ranks.min(self.max_slots),
+            kind: JobKind::Synthetic { duration },
+            priority,
+            tenant,
+        };
+        self.next_id += 1;
+        match self.head.submit(spec, now) {
+            SubmitOutcome::Queued => {
+                self.metrics.inc("jobs_submitted");
+            }
+            SubmitOutcome::Deferred => {
+                self.metrics.inc("jobs_deferred_quota");
+            }
+            SubmitOutcome::Rejected { spec, reason } => {
+                self.metrics.inc("jobs_rejected_quota");
+                self.head.record_terminal(JobRecord {
+                    spec,
+                    state: JobState::Failed { reason },
+                    result: None,
+                    queued_at: now,
+                    attempt: 0,
+                    planned_duration: None,
+                });
+            }
+        }
+    }
+
+    fn pump_workload(&mut self, start: SimTime) {
+        let Some(t0) = self.started_at else { return };
+        let rel = start.saturating_sub(t0);
+        // collect first, submit after: `submit` needs `&mut self` and
+        // must not alias the workload borrow
+        let mut due: Vec<(String, u32, SimTime, i32, u64)> = Vec::new();
+        match &mut self.workload {
+            Workload::Burst { jobs, submitted } => {
+                if !*submitted {
+                    *submitted = true;
+                    for (i, j) in jobs.iter().enumerate() {
+                        due.push((
+                            format!("mix-{i}"),
+                            j.ranks,
+                            SimTime::from_secs(j.secs),
+                            j.priority,
+                            0,
+                        ));
+                    }
+                }
+            }
+            Workload::Arrivals { gen, horizon, next, log } => loop {
+                let ready = matches!(next, Some(a) if a.at <= rel && a.at < *horizon);
+                if !ready {
+                    break;
+                }
+                let a = next.take().expect("checked above");
+                *next = Some(gen.next());
+                due.push((
+                    format!("t{}-j{}", a.tenant, log.len()),
+                    a.ranks,
+                    a.duration,
+                    a.priority,
+                    a.tenant,
+                ));
+                log.push(a);
+            },
+        }
+        for (name, ranks, duration, priority, tenant) in due {
+            self.submit(name, ranks, duration, priority, tenant, start);
+        }
+    }
+
+    fn workload_exhausted(&self) -> bool {
+        match &self.workload {
+            Workload::Burst { submitted, .. } => *submitted,
+            Workload::Arrivals { horizon, next, .. } => match next {
+                Some(a) => a.at >= *horizon,
+                None => false,
+            },
+        }
+    }
+
+    fn process_kills(&mut self, end: SimTime, out: &mut Outbox<ShardMsg>) {
+        while let Some(&(t, m)) = self.kills.front() {
+            if t >= end {
+                break;
+            }
+            self.kills.pop_front();
+            if !self.ready.remove(&m) {
+                // never came up (still off/booting/already gone): the
+                // booting case still dies so the pool can't wedge
+                if self.booting.remove(&m) {
+                    self.dead.insert(m);
+                    self.metrics.inc("machines_crashed");
+                    out.send(self.rank_of_machine(m), ShardMsg::Kill { at: t, machine: m });
+                }
+                continue;
+            }
+            self.dead.insert(m);
+            self.metrics.inc("machines_crashed");
+            self.render_hostfile(t);
+            out.send(self.rank_of_machine(m), ShardMsg::Kill { at: t, machine: m });
+            let addr = machine_addr(m);
+            for id in self.head.jobs_on_addr(addr) {
+                let prior = self.running.remove(&id);
+                match self.head.handle_lost_job(id, t, "node crashed") {
+                    LossOutcome::Requeued { .. } => {
+                        self.metrics.inc("jobs_requeued");
+                    }
+                    LossOutcome::Abandoned { .. } => {
+                        self.metrics.inc("jobs_abandoned");
+                    }
+                    LossOutcome::NotRunning => {}
+                }
+                if let Some((attempt, home)) = prior {
+                    // the attempt may live on another (healthy) machine
+                    // in the slice — cancel it wherever it computes
+                    out.send(
+                        self.rank_of_machine(home),
+                        ShardMsg::CancelJob { at: t, id, attempt },
+                    );
+                }
+            }
+        }
+    }
+
+    fn dispatch(&mut self, start: SimTime, out: &mut Outbox<ShardMsg>) {
+        while let Some(started) = self.head.start_next(start) {
+            let id = started.spec.id;
+            self.metrics.inc("jobs_dispatched");
+            if started.backfilled {
+                self.metrics.inc("backfill_starts");
+            }
+            for pid in &started.preempted {
+                self.metrics.inc("jobs_preempted");
+                if let Some((attempt, home)) = self.running.remove(pid) {
+                    out.send(
+                        self.rank_of_machine(home),
+                        ShardMsg::CancelJob { at: start, id: *pid, attempt },
+                    );
+                }
+            }
+            let duration = started.spec.estimated_duration();
+            if let Some(rec) = self.head.running.get_mut(&id) {
+                rec.planned_duration = Some(duration);
+            }
+            let hosts = &started.hostfile_slice.hosts;
+            if hosts.is_empty() {
+                // cannot happen (a dispatched job always gets slots);
+                // treat as immediately lost rather than wedge the run
+                self.head.handle_lost_job(id, start, "empty slice");
+                continue;
+            }
+            let addr = hosts[id.raw() as usize % hosts.len()].addr;
+            let machine = self.ip_to_machine.get(&addr).copied().unwrap_or(1);
+            self.running.insert(id, (started.attempt, machine));
+            self.metrics.observe("concurrent_jobs", self.head.running.len() as f64);
+            out.send(
+                self.rank_of_machine(machine),
+                ShardMsg::Launch {
+                    at: start,
+                    id,
+                    attempt: started.attempt,
+                    machine,
+                    ranks: started.spec.ranks,
+                    duration,
+                },
+            );
+        }
+    }
+
+    fn autoscale(&mut self, start: SimTime, out: &mut Outbox<ShardMsg>) {
+        if !self.spec.autoscale.enabled || start < self.next_scale_at {
+            return;
+        }
+        while self.next_scale_at <= start {
+            self.next_scale_at = self.next_scale_at + self.spec.autoscale.interval;
+        }
+        let obs = Observation {
+            now: start,
+            ready_nodes: self.ready.len() as u32,
+            unhealthy_nodes: self.dead.len() as u32,
+            provisioning_nodes: self.booting.len() as u32,
+            queued_slots: self.head.queued_slots(),
+            queued_slots_weighted: self.head.weighted_queued_slots(),
+            reserved_slots: self.head.reserved_slots(),
+            slots_per_node: self.spec.slots_per_node,
+        };
+        match self.autoscaler.decide(obs) {
+            ScaleAction::None => {}
+            ScaleAction::Up(n) => {
+                let picks: Vec<u32> = self.off.iter().copied().take(n as usize).collect();
+                if !picks.is_empty() {
+                    self.head.note_scale_up(start);
+                    self.metrics.inc("scale_ups");
+                    self.metrics.add("scale_up_nodes", picks.len() as u64);
+                }
+                for m in picks {
+                    self.off.remove(&m);
+                    self.booting.insert(m);
+                    let generation = self.generations.entry(m).or_insert(0);
+                    *generation += 1;
+                    let generation = *generation;
+                    out.send(
+                        self.rank_of_machine(m),
+                        ShardMsg::Boot { at: start, machine: m, generation },
+                    );
+                }
+            }
+            ScaleAction::Down(n) => {
+                let held = self.head.reserved_per_host();
+                let picks: Vec<u32> = self
+                    .ready
+                    .iter()
+                    .rev()
+                    .copied()
+                    .filter(|&m| held.get(&machine_addr(m)).copied().unwrap_or(0) == 0)
+                    .take(n as usize)
+                    .collect();
+                if !picks.is_empty() {
+                    self.head.note_scale_down(start);
+                    self.metrics.inc("scale_downs");
+                    self.metrics.add("scale_down_nodes", picks.len() as u64);
+                }
+                for m in picks {
+                    self.ready.remove(&m);
+                    self.retiring.insert(m);
+                    out.send(
+                        self.rank_of_machine(m),
+                        ShardMsg::Retire { at: start, machine: m },
+                    );
+                }
+                self.render_hostfile(start);
+            }
+        }
+    }
+
+    fn drained(&self) -> bool {
+        self.started_at.is_some()
+            && self.workload_exhausted()
+            && self.head.queue.is_empty()
+            && self.head.deferred_jobs() == 0
+            && self.running.is_empty()
+            && self.booting.is_empty()
+            && self.retiring.is_empty()
+    }
+
+    fn send_finish(&mut self, out: &mut Outbox<ShardMsg>) {
+        if self.finish_sent {
+            return;
+        }
+        self.finish_sent = true;
+        for s in 0..self.plan.shards() {
+            out.send(s + 1, ShardMsg::Finish);
+        }
+    }
+}
+
+impl Partitioned for Conductor {
+    type Msg = ShardMsg;
+
+    fn window(
+        &mut self,
+        start: SimTime,
+        end: SimTime,
+        mut incoming: Vec<(usize, ShardMsg)>,
+        out: &mut Outbox<ShardMsg>,
+    ) -> bool {
+        sort_batch(&mut incoming);
+        self.apply(incoming);
+        if self.finish_sent {
+            // drain phase: only waiting for shard counter reports
+            return self.counters_pending == 0;
+        }
+        // deadline / warmup-timeout watchdog
+        if self.error.is_none() {
+            match self.started_at {
+                None if start > WARMUP_DEADLINE => {
+                    self.error = Some(format!(
+                        "cluster never advertised {} slots within {}s",
+                        self.warmup_slots,
+                        WARMUP_DEADLINE.as_secs_f64()
+                    ));
+                }
+                Some(t0) if start.saturating_sub(t0) > self.deadline => {
+                    self.error = Some(format!(
+                        "sharded trace never drained within {}s (queue={}, running={})",
+                        self.deadline.as_secs_f64(),
+                        self.head.queue.len(),
+                        self.running.len()
+                    ));
+                }
+                _ => {}
+            }
+            if self.error.is_some() {
+                self.send_finish(out);
+                return false;
+            }
+        }
+        self.process_kills(end, out);
+        if self.started_at.is_none() && self.head.slots_available() >= self.warmup_slots {
+            self.started_at = Some(start);
+        }
+        self.pump_workload(start);
+        self.head.accrue_usage(start);
+        self.dispatch(start, out);
+        self.autoscale(start, out);
+        if self.drained() {
+            self.send_finish(out);
+        }
+        false
+    }
+}
+
+// ---------------------------------------------------------------------
+// Drivers
+// ---------------------------------------------------------------------
+
+fn run_sharded(
+    spec: ClusterSpec,
+    policy: SchedulePolicy,
+    quotas: TenantQuotas,
+    workload: Workload,
+    kills: Vec<(SimTime, u32)>,
+    cfg: &ShardRunConfig,
+) -> Result<ShardOutcome> {
+    if spec.machines < 2 {
+        bail!("a sharded run needs at least one compute machine");
+    }
+    let plan = ShardPlan::split(1, spec.machines, cfg.shards.max(1));
+    let shards = plan.shards();
+    let window = cfg.window;
+    if window == SimTime::ZERO {
+        bail!("window must be positive");
+    }
+    let conductor = Conductor::new(
+        spec.clone(),
+        plan.clone(),
+        policy,
+        quotas,
+        workload,
+        kills,
+        cfg,
+    );
+    let mut parts: Vec<ClusterPart> = vec![ClusterPart::Conductor(Box::new(conductor))];
+    for _ in 0..shards {
+        parts.push(ClusterPart::Shard(Box::new(ShardSim::new(
+            plan.clone(),
+            &spec,
+            window,
+            cfg.compute,
+        ))));
+    }
+    // seatbelt: warmup + trace + drain handshake, in windows, plus slack
+    let max_windows =
+        (WARMUP_DEADLINE.as_nanos() + SimTime::from_secs(cfg.deadline_secs).as_nanos())
+            / window.as_nanos().max(1)
+            + 64;
+    let (done, windows) = run_lockstep(parts, window, max_windows);
+    let conductor = match done.into_iter().next() {
+        Some(ClusterPart::Conductor(c)) => *c,
+        _ => bail!("lock-step run lost its conductor"),
+    };
+    if let Some(err) = conductor.error {
+        bail!(err);
+    }
+    if !conductor.finish_sent || conductor.counters_pending != 0 {
+        bail!("sharded run hit the window seatbelt before draining");
+    }
+    let (submitted, arrivals_fingerprint) = match &conductor.workload {
+        Workload::Burst { .. } => (conductor.next_id as usize, 0),
+        Workload::Arrivals { log, .. } => (log.len(), stream_fingerprint(log)),
+    };
+    let t0 = conductor.started_at.unwrap_or(SimTime::ZERO);
+    Ok(ShardOutcome {
+        shards,
+        windows,
+        jobs_submitted: submitted,
+        jobs_completed: conductor.metrics.counter("jobs_completed"),
+        makespan_secs: conductor.last_finish.saturating_sub(t0).as_secs_f64(),
+        events: conductor.metrics.counter("shard_events"),
+        arrivals_fingerprint,
+        fingerprint: conductor.metrics.counters_snapshot(),
+    })
+}
+
+/// Sharded counterpart of [`run_policy_trace`]
+/// (crate::cluster::mix::run_policy_trace): one burst of `jobs` under
+/// `policy`, partitioned across `cfg.shards` threads.
+pub fn run_sharded_mix(
+    spec: ClusterSpec,
+    jobs: &[JobReq],
+    policy: SchedulePolicy,
+    cfg: &ShardRunConfig,
+) -> Result<ShardOutcome> {
+    run_sharded(
+        spec,
+        policy,
+        TenantQuotas::default(),
+        Workload::Burst { jobs: jobs.to_vec(), submitted: false },
+        Vec::new(),
+        cfg,
+    )
+}
+
+/// Sharded counterpart of [`run_tenant_trace`]
+/// (crate::cluster::mix::run_tenant_trace): an open-loop multi-tenant
+/// arrival stream for `duration_secs` after warmup, then drain.
+pub fn run_sharded_tenants(
+    spec: ClusterSpec,
+    pop: PopulationSpec,
+    policy: SchedulePolicy,
+    quotas: TenantQuotas,
+    duration_secs: u64,
+    cfg: &ShardRunConfig,
+) -> Result<ShardOutcome> {
+    let mut gen = ArrivalGen::new(pop);
+    let next = Some(gen.next());
+    run_sharded(
+        spec,
+        policy,
+        quotas,
+        Workload::Arrivals {
+            gen,
+            horizon: SimTime::from_secs(duration_secs),
+            next,
+            log: Vec::new(),
+        },
+        Vec::new(),
+        cfg,
+    )
+}
+
+/// Sharded chaos driver: the burst workload of [`run_sharded_mix`] plus
+/// a seeded per-machine crash schedule (one exponential draw per
+/// machine at mean `mtbf_secs`, after a grace period). Crashed
+/// machines' jobs are requeued or abandoned by the head exactly like
+/// the live fault pipeline, and the autoscaler boots replacements.
+pub fn run_sharded_chaos(
+    spec: ClusterSpec,
+    jobs: &[JobReq],
+    policy: SchedulePolicy,
+    mtbf_secs: f64,
+    cfg: &ShardRunConfig,
+) -> Result<ShardOutcome> {
+    let mut kills: Vec<(SimTime, u32)> = Vec::new();
+    for m in 1..spec.machines {
+        let mut rng = Rng::new(
+            spec.seed ^ 0xC4A0_5C4A ^ (m as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        let t = CHAOS_GRACE_SECS + rng.gen_exp(mtbf_secs.max(1.0));
+        if t < cfg.deadline_secs as f64 {
+            kills.push((SimTime::from_secs_f64(t), m));
+        }
+    }
+    kills.sort_by_key(|&(t, m)| (t, m));
+    run_sharded(
+        spec,
+        policy,
+        TenantQuotas::default(),
+        Workload::Burst { jobs: jobs.to_vec(), submitted: false },
+        kills,
+        cfg,
+    )
+}
+
+/// The two participant roles behind one [`Partitioned`] impl, so the
+/// lock-step runner sees a homogeneous `Vec`.
+enum ClusterPart {
+    Conductor(Box<Conductor>),
+    Shard(Box<ShardSim>),
+}
+
+impl Partitioned for ClusterPart {
+    type Msg = ShardMsg;
+
+    fn window(
+        &mut self,
+        start: SimTime,
+        end: SimTime,
+        incoming: Vec<(usize, ShardMsg)>,
+        out: &mut Outbox<ShardMsg>,
+    ) -> bool {
+        match self {
+            ClusterPart::Conductor(c) => c.window(start, end, incoming, out),
+            ClusterPart::Shard(s) => s.window(start, end, incoming, out),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::mix::{mix_spec, prioritized_trace};
+
+    fn small_spec() -> ClusterSpec {
+        let mut spec = mix_spec(SimTime::from_secs(5));
+        spec.seed = 7;
+        spec
+    }
+
+    fn cfg(shards: usize) -> ShardRunConfig {
+        ShardRunConfig { shards, warmup_slots: 24, ..ShardRunConfig::default() }
+    }
+
+    #[test]
+    fn sharded_mix_drains_and_is_shard_count_invariant() {
+        let jobs = prioritized_trace(24, 20);
+        let base = run_sharded_mix(small_spec(), &jobs, SchedulePolicy::default(), &cfg(1))
+            .expect("1 shard");
+        assert_eq!(base.jobs_submitted, 20);
+        assert_eq!(base.jobs_completed, 20);
+        assert!(base.makespan_secs > 0.0);
+        assert!(base.events > 0);
+        for shards in [2usize, 4] {
+            let o = run_sharded_mix(small_spec(), &jobs, SchedulePolicy::default(), &cfg(shards))
+                .expect("sharded");
+            assert_eq!(o.shards, shards);
+            assert_eq!(
+                o.fingerprint, base.fingerprint,
+                "{shards}-shard fingerprint must match the 1-shard run"
+            );
+            assert_eq!(o.windows, base.windows, "same drain window at {shards} shards");
+        }
+    }
+
+    #[test]
+    fn merge_key_orders_kills_before_same_instant_launches() {
+        let at = SimTime::from_secs(3);
+        let kill = ShardMsg::Kill { at, machine: 2 };
+        let launch = ShardMsg::Launch {
+            at,
+            id: JobId::new(0),
+            attempt: 0,
+            machine: 2,
+            ranks: 4,
+            duration: SimTime::from_secs(1),
+        };
+        assert!(kill.merge_key() < launch.merge_key());
+        let mut batch = vec![(1usize, launch), (1usize, kill)];
+        sort_batch(&mut batch);
+        assert!(matches!(batch[0].1, ShardMsg::Kill { .. }));
+    }
+
+    #[test]
+    fn gossip_peer_never_picks_self_and_is_pure() {
+        let core = ShardCore {
+            plan: ShardPlan::split(1, 8, 2),
+            seed: 1,
+            total_machines: 8,
+            boot_time: SimTime::from_secs(1),
+            window: SimTime::from_secs(1),
+            compute: ComputeProfile::default(),
+            nodes: BTreeMap::new(),
+            jobs: BTreeMap::new(),
+            counters: BTreeMap::new(),
+            outgoing: Vec::new(),
+            draining: false,
+        };
+        for m in 1..8u32 {
+            for seq in 0..50u64 {
+                let p = core.gossip_peer(m, seq).expect("peers exist");
+                assert_ne!(p, m, "machine {m} gossiped to itself at seq {seq}");
+                assert!((1..8).contains(&p), "peer {p} out of range");
+                assert_eq!(core.gossip_peer(m, seq), Some(p), "must be pure");
+            }
+        }
+    }
+
+    #[test]
+    fn machine_addr_is_injective_over_the_id_space() {
+        let mut seen = BTreeSet::new();
+        for m in 1..2048u32 {
+            assert!(seen.insert(machine_addr(m)), "address collision at {m}");
+        }
+    }
+}

@@ -1171,6 +1171,27 @@ impl VirtualCluster {
     pub fn metrics(&self) -> &Metrics {
         &self.state.metrics
     }
+
+    /// Journal the tenant arrival generator's resume cursor into the
+    /// replicated WAL (and remember it on the live head for snapshots),
+    /// so a standby can continue the synthesized arrival stream exactly
+    /// where this head left it. Durable even while the head is down —
+    /// the cursor goes straight to the log, like client submissions.
+    /// No-op without HA beyond the in-memory note.
+    pub fn journal_arrival_cursor(&mut self, cursor: String) {
+        let now = self.engine.now();
+        self.state.head.last_arrival_cursor = Some(cursor.clone());
+        crate::ha::wal::append_direct(
+            &mut self.state,
+            crate::ha::wal::WalEvent::ArrivalCursor { at: now, cursor },
+        );
+    }
+
+    /// The last journaled arrival cursor — after a takeover this is the
+    /// value the WAL replay (or snapshot restore) carried over.
+    pub fn arrival_cursor(&self) -> Option<&str> {
+        self.state.head.last_arrival_cursor.as_deref()
+    }
 }
 
 impl ClusterSpec {

@@ -1,0 +1,176 @@
+//! Channel-backed [`SimCommunicator`] for shards running as threads of
+//! one process.
+//!
+//! Topology: a full `n × n` matrix of mpsc channels (pair `(i, j)` is
+//! the FIFO from rank `i` to rank `j`), so per-sender send order is
+//! preserved by construction and no lock is shared between data paths.
+//! The window barrier is the classic double barrier: ranks first rendez-
+//! vous to close the send phase (after which every in-flight message is
+//! in its destination channel), each rank drains its inboxes in sender-
+//! rank order, and a second rendezvous keeps any rank from starting the
+//! *next* window's sends before everyone has finished draining this one.
+//! Without the second barrier a fast rank could race a message into a
+//! channel a slow rank is still draining, smearing it across windows —
+//! exactly the nondeterminism the one-window-latency contract forbids.
+
+use super::SimCommunicator;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Barrier};
+
+/// One rank's endpoint of an `n`-rank local communicator group.
+pub struct LocalCommunicator<M> {
+    rank: usize,
+    /// `to[j]` feeds rank `j`'s inbox from this rank.
+    to: Vec<Sender<M>>,
+    /// `from[i]` is this rank's inbox fed by rank `i`.
+    from: Vec<Receiver<M>>,
+    enter: Arc<Barrier>,
+    exit: Arc<Barrier>,
+}
+
+impl<M: Send> LocalCommunicator<M> {
+    /// Build a fully-connected group of `n` communicators; hand
+    /// element `r` to the thread that will act as rank `r`.
+    pub fn group(n: usize) -> Vec<LocalCommunicator<M>> {
+        assert!(n > 0, "a communicator group needs at least one rank");
+        let enter = Arc::new(Barrier::new(n));
+        let exit = Arc::new(Barrier::new(n));
+        // senders[i][j] / receivers[j][i]: the (i -> j) FIFO
+        let mut senders: Vec<Vec<Option<Sender<M>>>> = Vec::new();
+        let mut receivers: Vec<Vec<Option<Receiver<M>>>> = Vec::new();
+        for _ in 0..n {
+            senders.push((0..n).map(|_| None).collect());
+            receivers.push((0..n).map(|_| None).collect());
+        }
+        for (i, row) in senders.iter_mut().enumerate() {
+            for (j, slot) in row.iter_mut().enumerate() {
+                let (tx, rx) = channel();
+                *slot = Some(tx);
+                receivers[j][i] = Some(rx);
+            }
+        }
+        senders
+            .into_iter()
+            .zip(receivers)
+            .enumerate()
+            .map(|(rank, (tx_row, rx_row))| LocalCommunicator {
+                rank,
+                to: tx_row.into_iter().map(|s| s.expect("filled above")).collect(),
+                from: rx_row.into_iter().map(|r| r.expect("filled above")).collect(),
+                enter: Arc::clone(&enter),
+                exit: Arc::clone(&exit),
+            })
+            .collect()
+    }
+}
+
+impl<M: Send> SimCommunicator<M> for LocalCommunicator<M> {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn size(&self) -> usize {
+        self.to.len()
+    }
+
+    fn send(&mut self, to: usize, msg: M) {
+        // A closed channel means the peer thread exited mid-window —
+        // the lock-step protocol never does that, so this is a bug in
+        // the orchestrator, not a condition to paper over.
+        self.to[to].send(msg).expect("peer rank exited mid-window");
+    }
+
+    fn exchange(&mut self) -> Vec<(usize, M)> {
+        // close the send phase: after this, every message of the window
+        // sits in its destination channel
+        self.enter.wait();
+        let mut inbox = Vec::new();
+        for (from, rx) in self.from.iter().enumerate() {
+            // drain, don't block: an empty channel is just a quiet peer
+            while let Ok(msg) = rx.try_recv() {
+                inbox.push((from, msg));
+            }
+        }
+        // close the drain phase: nobody starts next-window sends until
+        // every rank has taken its inbox
+        self.exit.wait();
+        inbox
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    /// Every rank sends its rank to every rank (itself included); after
+    /// one exchange each inbox holds all n messages in sender order.
+    #[test]
+    fn all_to_all_delivers_in_sender_rank_order() {
+        let n = 4;
+        let comms = LocalCommunicator::group(n);
+        let inboxes: Vec<Vec<(usize, usize)>> = thread::scope(|s| {
+            let handles: Vec<_> = comms
+                .into_iter()
+                .map(|mut c| {
+                    s.spawn(move || {
+                        for to in 0..c.size() {
+                            c.send(to, c.rank());
+                        }
+                        c.exchange()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for inbox in inboxes {
+            assert_eq!(inbox, (0..n).map(|i| (i, i)).collect::<Vec<_>>());
+        }
+    }
+
+    /// Per-sender FIFO: a burst of messages from one rank arrives in
+    /// send order, and messages sent after an exchange are not visible
+    /// to that exchange (the double barrier holds the window boundary).
+    #[test]
+    fn windows_do_not_leak_and_fifo_holds() {
+        let comms = LocalCommunicator::group(2);
+        let results: Vec<Vec<Vec<(usize, u32)>>> = thread::scope(|s| {
+            let handles: Vec<_> = comms
+                .into_iter()
+                .map(|mut c| {
+                    s.spawn(move || {
+                        let mut seen = Vec::new();
+                        for window in 0..3u32 {
+                            if c.rank() == 0 {
+                                for k in 0..5u32 {
+                                    c.send(1, window * 10 + k);
+                                }
+                            }
+                            seen.push(c.exchange());
+                        }
+                        seen
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        // rank 1 sees exactly window w's burst at exchange w, in order
+        for (w, inbox) in results[1].iter().enumerate() {
+            let expect: Vec<(usize, u32)> =
+                (0..5).map(|k| (0, w as u32 * 10 + k)).collect();
+            assert_eq!(inbox, &expect, "window {w}");
+        }
+        // rank 0 never receives anything
+        assert!(results[0].iter().all(|i| i.is_empty()));
+    }
+
+    /// A rank's message to itself takes the same one-window hop.
+    #[test]
+    fn self_send_is_delivered_at_the_exchange() {
+        let comms = LocalCommunicator::group(1);
+        let mut c = comms.into_iter().next().unwrap();
+        c.send(0, "loop");
+        assert_eq!(c.exchange(), vec![(0, "loop")]);
+        assert!(c.exchange().is_empty());
+    }
+}

@@ -1,0 +1,55 @@
+//! Boundary-message transport for the partitioned simulation engine.
+//!
+//! The sharded engine (see [`crate::sim::partition`]) advances one
+//! lock-step window at a time: every participant simulates `[t, t+W)`
+//! against its private state, emits the cross-shard effects of that
+//! window as *boundary messages*, and then meets the others at a
+//! barrier where all messages are exchanged. A message sent in window
+//! `W` is delivered at the start of window `W+1` — one window of
+//! latency, for every message, on every backend, at every shard count.
+//! That uniformity is what makes the shard merge deterministic: the
+//! set of messages a participant sees in a window is a function of the
+//! simulation alone, never of how the machines were partitioned.
+//!
+//! [`SimCommunicator`] is the narrow contract (rank, size, per-neighbor
+//! send, barrier exchange), modeled on the `sim_communication` layer of
+//! matsim's parallel qsim: the channel-backed [`LocalCommunicator`] is
+//! the first backend, and the trait is shaped so an MPI world (rank =
+//! process, send = `MPI_Isend`, exchange = neighbor all-to-all +
+//! `MPI_Barrier`) could slot in without touching the orchestrator.
+
+pub mod local;
+
+pub use local::LocalCommunicator;
+
+/// Per-window boundary-message transport between simulation partitions.
+///
+/// The contract every backend must keep:
+///
+/// * `send(to, msg)` may be called any number of times between two
+///   `exchange()` calls, for any `to < size()` **including the sender's
+///   own rank** — a partition's message to itself takes the same
+///   one-window hop as everyone else's, which keeps delivery timing
+///   independent of the partition layout.
+/// * `exchange()` is a collective: every rank must call it once per
+///   window, and it returns only after all ranks of the window have
+///   sent everything they are going to send. It yields the messages
+///   addressed to the caller as `(from_rank, message)` pairs, sorted
+///   by sender rank with per-sender FIFO order preserved — a total
+///   order that is identical run to run.
+/// * No message crosses a window boundary in flight: everything sent
+///   before an `exchange()` is delivered by that `exchange()`, and
+///   nothing sent after it can leak into it.
+pub trait SimCommunicator<M: Send> {
+    /// This participant's rank in `[0, size)`.
+    fn rank(&self) -> usize;
+    /// Number of participants in the group.
+    fn size(&self) -> usize;
+    /// Queue a boundary message for delivery to `to` at the next
+    /// `exchange()`. `to` may equal `rank()`.
+    fn send(&mut self, to: usize, msg: M);
+    /// Window barrier + delivery: blocks until every rank has entered,
+    /// then returns this rank's inbox sorted by `(sender rank, send
+    /// order)`.
+    fn exchange(&mut self) -> Vec<(usize, M)>;
+}

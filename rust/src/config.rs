@@ -392,6 +392,9 @@ impl ClusterSpec {
             if let Some(v) = h.get("snapshot_every") {
                 spec.ha.snapshot_every = req_int("ha", "snapshot_every", v)? as u64;
             }
+            if let Some(v) = h.get("standbys") {
+                spec.ha.standbys = (req_int("ha", "standbys", v)? as u32).max(1);
+            }
         }
         Ok(spec)
     }
@@ -484,7 +487,7 @@ mod tests {
     fn tenant_weights_and_ha_sections_parse() {
         let spec = ClusterSpec::from_text(
             "[tenant_weights]\n1 = 2.0\n7 = 4\n\
-             [ha]\nenabled = true\nlock_ttl_secs = 3\nstandby_poll_secs = 2\nsnapshot_every = 64\n",
+             [ha]\nenabled = true\nlock_ttl_secs = 3\nstandby_poll_secs = 2\nsnapshot_every = 64\nstandbys = 3\n",
         )
         .unwrap();
         assert_eq!(spec.tenant_weights, vec![(1, 2.0), (7, 4.0)]);
@@ -492,6 +495,7 @@ mod tests {
         assert_eq!(spec.ha.lock_ttl, SimTime::from_secs(3));
         assert_eq!(spec.ha.standby_poll, SimTime::from_secs(2));
         assert_eq!(spec.ha.snapshot_every, 64);
+        assert_eq!(spec.ha.standbys, 3);
         // defaults: no weights, HA off
         let d = ClusterSpec::paper_testbed();
         assert!(d.tenant_weights.is_empty());

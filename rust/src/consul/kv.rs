@@ -42,6 +42,18 @@ impl KvStore {
                     self.modify_index += 1;
                 }
             }
+            Command::Cas { key, expected, value } => {
+                // applied on every replica in log order, so the same
+                // single attempt wins everywhere
+                let current = self.data.get(key).map(|e| e.value.as_str());
+                if current == expected.as_deref() {
+                    self.modify_index += 1;
+                    self.data.insert(
+                        key.clone(),
+                        KvEntry { value: value.clone(), modify_index: self.modify_index },
+                    );
+                }
+            }
             Command::Noop => {}
         }
     }
@@ -134,6 +146,54 @@ mod tests {
                 ("service/hpc/node03", "10.10.0.3")
             ]
         );
+    }
+
+    fn cas(kv: &mut KvStore, k: &str, expected: Option<&str>, v: &str) {
+        kv.apply(&Command::Cas {
+            key: k.into(),
+            expected: expected.map(String::from),
+            value: v.into(),
+        });
+    }
+
+    #[test]
+    fn cas_applies_only_on_exact_match() {
+        let mut kv = KvStore::new();
+        // expected None = key must be absent
+        cas(&mut kv, "lock", None, "holder-a");
+        assert_eq!(kv.get("lock"), Some("holder-a"));
+        // a second create-style CAS loses
+        cas(&mut kv, "lock", None, "holder-b");
+        assert_eq!(kv.get("lock"), Some("holder-a"));
+        // wrong expected value loses, right one wins
+        cas(&mut kv, "lock", Some("nope"), "holder-c");
+        assert_eq!(kv.get("lock"), Some("holder-a"));
+        cas(&mut kv, "lock", Some("holder-a"), "holder-d");
+        assert_eq!(kv.get("lock"), Some("holder-d"));
+    }
+
+    #[test]
+    fn racing_cas_batch_has_exactly_one_winner() {
+        // the raft log totally orders commands; applying the same batch
+        // on any replica leaves the first matching CAS as the winner
+        let mut kv = KvStore::new();
+        set(&mut kv, "lease", "epoch 0");
+        let before = kv.modify_index();
+        for s in 0..5 {
+            cas(&mut kv, "lease", Some("epoch 0"), &format!("claim standby{s}"));
+        }
+        assert_eq!(kv.get("lease"), Some("claim standby0"));
+        assert_eq!(kv.modify_index(), before + 1, "exactly one CAS may land");
+    }
+
+    #[test]
+    fn failed_cas_does_not_bump_the_modify_index() {
+        let mut kv = KvStore::new();
+        set(&mut kv, "a", "1");
+        let before = kv.modify_index();
+        cas(&mut kv, "a", Some("2"), "3");
+        assert_eq!(kv.modify_index(), before);
+        assert_eq!(kv.get("a"), Some("1"));
     }
 
     #[test]

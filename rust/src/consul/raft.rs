@@ -18,6 +18,12 @@ pub type Term = u64;
 pub enum Command {
     Set { key: String, value: String },
     Delete { key: String },
+    /// Compare-and-set: write `value` only if the key currently holds
+    /// exactly `expected` (`None` = key must be absent). Because the
+    /// raft log totally orders commands, concurrent CAS attempts with
+    /// the same `expected` resolve to exactly one winner on every
+    /// replica — the primitive behind the multi-standby head lease.
+    Cas { key: String, expected: Option<String>, value: String },
     Noop,
 }
 

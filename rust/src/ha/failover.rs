@@ -63,6 +63,10 @@ pub struct HaState {
     /// Events the most recent takeover replayed (snapshotting bounds
     /// this regardless of cluster age).
     pub last_replayed: u64,
+    /// True while a multi-standby CAS claim round is in flight (between
+    /// submitting the claims and reading the winner); stops the monitor
+    /// loop from starting a second round.
+    pub(crate) claiming: bool,
 }
 
 impl HaState {
@@ -76,6 +80,7 @@ impl HaState {
             appends_since_snapshot: 0,
             truncated_below: 0,
             last_replayed: 0,
+            claiming: false,
         }
     }
 
@@ -110,14 +115,79 @@ pub(crate) fn standby_monitor(st: &mut ClusterState, eng: &mut Engine<ClusterSta
         return;
     }
     st.consul.advance(eng.now());
-    if !st.ha.head_alive {
+    if !st.ha.head_alive && !st.ha.claiming {
         let lease = st.consul.health.status(HEAD_LEASE, eng.now());
         if lease != Some(CheckStatus::Passing) {
-            takeover(st, eng);
+            if st.ha.config.standbys > 1 {
+                start_claim(st, eng);
+            } else {
+                // a lone standby needs no lock: promote directly (the
+                // original failover path, byte for byte)
+                takeover(st, eng);
+            }
         }
     }
     let poll = st.ha.config.standby_poll;
     eng.schedule_after(poll, standby_monitor);
+}
+
+fn claim_token(standby: u32, epoch: u64, now: SimTime) -> String {
+    format!("claim standby{standby} epoch {epoch} at {}", now.as_nanos())
+}
+
+/// Which standby a claim token names, if the record holds one.
+fn parse_claim(value: &str) -> Option<u32> {
+    let rest = value.strip_prefix("claim standby")?;
+    let end = rest.find(' ')?;
+    rest[..end].parse().ok()
+}
+
+/// With more than one standby, takeover goes through the lock: every
+/// standby compare-and-sets the `__vhpc-head` lease's leadership record
+/// from the value it last observed to its own claim token. The raft log
+/// totally orders the writes and the CAS applies only on an exact
+/// match, so the first claim flips the record and every later one
+/// no-ops — exactly one standby wins, on every replica, regardless of
+/// arrival order.
+pub(crate) fn start_claim(st: &mut ClusterState, eng: &mut Engine<ClusterState>) {
+    let now = eng.now();
+    let expected = st.consul.kv().get(LEADER_KEY).map(String::from);
+    let epoch = st.ha.epoch + 1;
+    for s in 0..st.ha.config.standbys {
+        st.consul.submit(Command::Cas {
+            key: LEADER_KEY.into(),
+            expected: expected.clone(),
+            value: claim_token(s, epoch, now),
+        });
+    }
+    st.ha.claiming = true;
+    st.metrics
+        .add("ha_claims_submitted", st.ha.config.standbys as u64);
+    let poll = st.ha.config.standby_poll;
+    eng.schedule_after(poll, conclude_claim);
+}
+
+/// One poll after the claims went in: the raft quorum has committed
+/// them, the leadership record names the winner. The winner promotes;
+/// the losers count their loss and re-enter the monitor loop.
+pub(crate) fn conclude_claim(st: &mut ClusterState, eng: &mut Engine<ClusterState>) {
+    st.consul.advance(eng.now());
+    st.ha.claiming = false;
+    let standbys = st.ha.config.standbys;
+    match st.consul.kv().get(LEADER_KEY).and_then(parse_claim) {
+        Some(_winner) => {
+            st.metrics.inc("ha_takeover_won");
+            st.metrics
+                .add("ha_takeover_lost", standbys.saturating_sub(1) as u64);
+            takeover(st, eng);
+        }
+        None => {
+            // the record moved between observe and claim (e.g. a
+            // concurrent epoch publish): every claim lost; the monitor
+            // loop keeps watching and will race again
+            st.metrics.add("ha_takeover_lost", standbys as u64);
+        }
+    }
 }
 
 /// Read the snapshot (if any) and the WAL tail from the replicated KV

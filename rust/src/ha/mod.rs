@@ -59,6 +59,13 @@ pub struct HaConfig {
     /// WAL appends between snapshots (0 = never snapshot; replay cost
     /// then grows with the full log).
     pub snapshot_every: u64,
+    /// Standby heads monitoring the lease. With 1 (the default) the
+    /// lone standby promotes directly, byte-for-byte the original
+    /// failover path. With more, takeover goes through a
+    /// compare-and-set race on the leadership record: every standby
+    /// claims, the raft log picks exactly one winner, and the losers
+    /// stay in monitoring.
+    pub standbys: u32,
 }
 
 impl Default for HaConfig {
@@ -68,6 +75,7 @@ impl Default for HaConfig {
             lock_ttl: SimTime::from_secs(5),
             standby_poll: SimTime::from_secs(1),
             snapshot_every: 256,
+            standbys: 1,
         }
     }
 }

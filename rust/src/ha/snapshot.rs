@@ -19,7 +19,7 @@ use crate::cluster::head::{JobRecord, JobSpec, JobState};
 use crate::cluster::vcluster::ClusterState;
 use crate::consul::raft::Command;
 use crate::ha::wal::{
-    dec_result, enc_result, enc_slice, enc_spec, hex_enc, wal_key, Cur, SNAPSHOT_KEY,
+    dec_result, enc_result, enc_slice, enc_spec, hex_dec, hex_enc, wal_key, Cur, SNAPSHOT_KEY,
 };
 use crate::mpi::hostfile::HostSlot;
 use crate::sim::SimTime;
@@ -63,6 +63,9 @@ pub struct HeadDump {
     /// standby's cooldowns from these.
     pub last_scale_up: Option<SimTime>,
     pub last_scale_down: Option<SimTime>,
+    /// The tenant arrival generator's last journaled resume cursor
+    /// (the HA arrival-stream resume point; absent on non-tenant runs).
+    pub last_arrival_cursor: Option<String>,
 }
 
 fn enc_state(s: &JobState) -> String {
@@ -161,6 +164,9 @@ pub fn encode(dump: &HeadDump, start_seq: u64) -> String {
         enc_opt_time(dump.last_scale_up),
         enc_opt_time(dump.last_scale_down)
     ));
+    if let Some(cursor) = &dump.last_arrival_cursor {
+        out.push_str(&format!("arrcur {}\n", hex_enc(cursor)));
+    }
     for (spec, at) in &dump.queue {
         out.push_str(&format!("q {} {}\n", at.as_nanos(), enc_spec(spec)));
     }
@@ -220,6 +226,7 @@ pub fn decode(text: &str) -> Result<(HeadDump, u64), String> {
                 dump.last_scale_up = dec_opt_time(cur.next()?)?;
                 dump.last_scale_down = dec_opt_time(cur.next()?)?;
             }
+            "arrcur" => dump.last_arrival_cursor = Some(hex_dec(cur.next()?)?),
             "q" => {
                 let at = cur.time()?;
                 dump.queue.push((cur.spec()?, at));
@@ -317,6 +324,7 @@ mod tests {
             Some(SimTime::from_secs(40));
         h.handle_lost_job(JobId::new(0), SimTime::from_secs(10), "boom");
         h.accrue_usage(SimTime::from_secs(12));
+        h.last_arrival_cursor = Some("arr1 77 88 9 - 0".into());
         if let Some(mut rec) = h.finish(JobId::new(1)) {
             rec.state = JobState::Done {
                 started: SimTime::from_secs(3),

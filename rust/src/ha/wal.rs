@@ -86,6 +86,12 @@ pub enum WalEvent {
     /// The autoscaler retired at least one node (no-op `Down`s are
     /// un-armed by the executor and never logged).
     ScaleDown { at: SimTime },
+    /// The tenant arrival generator's mid-stream resume point
+    /// ([`ArrivalGen::cursor`](crate::tenancy::arrivals::ArrivalGen)),
+    /// journaled by the `vhpc tenants` driver after every pull so a
+    /// takeover continues the synthesized stream byte-identically from
+    /// wherever the dead head left it.
+    ArrivalCursor { at: SimTime, cursor: String },
 }
 
 // ---------- text codec ----------
@@ -273,7 +279,8 @@ impl WalEvent {
             | WalEvent::Completed { at, .. }
             | WalEvent::Failed { at, .. }
             | WalEvent::ScaleUp { at }
-            | WalEvent::ScaleDown { at } => *at,
+            | WalEvent::ScaleDown { at }
+            | WalEvent::ArrivalCursor { at, .. } => *at,
         }
     }
 
@@ -329,6 +336,9 @@ impl WalEvent {
             ),
             WalEvent::ScaleUp { at } => format!("scaleup {}", at.as_nanos()),
             WalEvent::ScaleDown { at } => format!("scaledown {}", at.as_nanos()),
+            WalEvent::ArrivalCursor { at, cursor } => {
+                format!("arrcur {} c{}", at.as_nanos(), hex_enc(cursor))
+            }
         }
     }
 
@@ -377,6 +387,10 @@ impl WalEvent {
             }
             "scaleup" => Ok(WalEvent::ScaleUp { at: cur.time()? }),
             "scaledown" => Ok(WalEvent::ScaleDown { at: cur.time()? }),
+            "arrcur" => Ok(WalEvent::ArrivalCursor {
+                at: cur.time()?,
+                cursor: cur.tagged_hex('c')?,
+            }),
             other => Err(format!("unknown wal event kind: {other}")),
         }
     }
@@ -463,6 +477,9 @@ pub fn apply(head: &mut Head, ev: &WalEvent) {
         }
         WalEvent::ScaleDown { at } => {
             head.last_scale_down = Some(*at);
+        }
+        WalEvent::ArrivalCursor { cursor, .. } => {
+            head.last_arrival_cursor = Some(cursor.clone());
         }
     }
 }
@@ -577,6 +594,10 @@ mod tests {
             WalEvent::Failed { at: t, id: JobId::new(9), reason: "launch: boom".into() },
             WalEvent::ScaleUp { at: t },
             WalEvent::ScaleDown { at: t },
+            WalEvent::ArrivalCursor {
+                at: t,
+                cursor: "arr1 12345 678 9 - 1 10:2:3:4:50".into(),
+            },
         ];
         for ev in events {
             let line = ev.encode();

@@ -9,6 +9,7 @@
 pub mod bench;
 pub mod cli;
 pub mod cluster;
+pub mod comm;
 pub mod config;
 pub mod consul;
 pub mod dockyard;

@@ -543,8 +543,9 @@ pub fn analyze(file: &str, src: &str, scope: FileScope) -> (Vec<Violation>, Vec<
                 && is_punct(&toks[i - 2], ":")
                 && is_ident(&toks[i - 3], "thread")
             {
-                Some("`thread::spawn` outside the allowlist — the engine is single-threaded \
-                      until the sharded communicator lands")
+                Some("`thread::spawn` outside the allowlist — each engine is single-threaded; \
+                      only the partition runtime (sim/partition.rs, comm/) may thread, and \
+                      shards share state by message, never by memory")
             } else {
                 None
             };

@@ -120,6 +120,31 @@ impl<S> Engine<S> {
         n
     }
 
+    /// Time of the next pending event, if any. The partitioned runner
+    /// uses this to tell an idle window from one with work left.
+    pub fn next_event_at(&self) -> Option<SimTime> {
+        self.queue.peek().map(|e| e.at)
+    }
+
+    /// Advance one lock-step window: fire every event strictly before
+    /// `end`, then set the clock to `end`. The strict bound is the
+    /// window contract — an event scheduled exactly at `end` belongs to
+    /// the *next* window, on every shard, at every shard count, so the
+    /// window grid never double-fires or drops a boundary event.
+    /// Returns the number fired.
+    pub fn run_window(&mut self, state: &mut S, end: SimTime) -> u64 {
+        let mut n = 0;
+        while let Some(e) = self.queue.peek() {
+            if e.at >= end {
+                break;
+            }
+            self.step(state);
+            n += 1;
+        }
+        self.now = self.now.max(end);
+        n
+    }
+
     /// Run until the queue is fully drained. Returns events fired.
     pub fn run_to_completion(&mut self, state: &mut S) -> u64 {
         let mut n = 0;
@@ -223,6 +248,30 @@ mod tests {
         eng.run_to_completion(&mut log);
         assert_eq!(log.len(), 2);
         assert_eq!(log[0], log[1]);
+    }
+
+    #[test]
+    fn run_window_is_half_open() {
+        let mut eng: Engine<Vec<u64>> = Engine::new();
+        let mut log = Vec::new();
+        eng.schedule_at(SimTime::from_secs(1), |s: &mut Vec<u64>, _| s.push(1));
+        eng.schedule_at(SimTime::from_secs(2), |s: &mut Vec<u64>, _| s.push(2));
+        eng.schedule_at(SimTime::from_secs(3), |s: &mut Vec<u64>, _| s.push(3));
+        assert_eq!(eng.next_event_at(), Some(SimTime::from_secs(1)));
+        // [0, 2): the event at exactly 2s belongs to the next window
+        let fired = eng.run_window(&mut log, SimTime::from_secs(2));
+        assert_eq!(fired, 1);
+        assert_eq!(log, vec![1]);
+        assert_eq!(eng.now(), SimTime::from_secs(2));
+        assert_eq!(eng.next_event_at(), Some(SimTime::from_secs(2)));
+        // [2, 4): picks up the boundary event exactly once
+        let fired = eng.run_window(&mut log, SimTime::from_secs(4));
+        assert_eq!(fired, 2);
+        assert_eq!(log, vec![1, 2, 3]);
+        // an empty window still advances the clock
+        assert_eq!(eng.run_window(&mut log, SimTime::from_secs(9)), 0);
+        assert_eq!(eng.now(), SimTime::from_secs(9));
+        assert_eq!(eng.next_event_at(), None);
     }
 
     #[test]

@@ -5,7 +5,9 @@
 //! deterministic and independent of host speed. See DESIGN.md §Time model.
 
 pub mod engine;
+pub mod partition;
 pub mod time;
 
 pub use engine::Engine;
+pub use partition::{run_lockstep, Outbox, Partitioned, ShardPlan};
 pub use time::SimTime;

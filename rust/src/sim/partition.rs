@@ -1,0 +1,283 @@
+//! Lock-step partitioned execution: split the simulated cluster into
+//! shards, advance every shard in fixed time windows on its own thread,
+//! and exchange boundary messages at a barrier between windows.
+//!
+//! The determinism contract this module upholds (and that
+//! `tests/determinism.rs` pins at shard counts 1/2/4):
+//!
+//! * **The window grid is fixed.** Every participant advances the same
+//!   `[k·W, (k+1)·W)` windows regardless of the shard count, so event
+//!   clamping and message timing never shift when the partition does.
+//! * **All cross-partition effects ride boundary messages** through a
+//!   [`SimCommunicator`], with exactly one window of latency — for
+//!   every message, including a partition's messages to itself.
+//! * **Receivers apply messages in a fixed merge order** (the caller's
+//!   merge key, not arrival order), so the same set of messages
+//!   produces the same state no matter which shard produced which.
+//!
+//! Under those three rules, moving a machine between shards changes
+//! which thread computes its events but not what they are, when they
+//! are, or the order their cross-shard effects are applied in — which
+//! is why the fingerprints stay byte-identical.
+
+use crate::comm::{LocalCommunicator, SimCommunicator};
+use crate::sim::SimTime;
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+/// How a contiguous id range is carved into shards: near-equal
+/// contiguous slices (the first `count % shards` slices get one extra),
+/// so rack-adjacent machines land in the same shard and the map from
+/// id to shard is a pure function both sides can compute.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    start: u32,
+    ranges: Vec<Range<u32>>,
+}
+
+impl ShardPlan {
+    /// Split `[start, end)` into `shards` contiguous ranges. `shards`
+    /// is clamped to at least 1 and at most the number of ids, so no
+    /// shard is ever empty (an empty shard would still cost a thread
+    /// and a barrier slot).
+    pub fn split(start: u32, end: u32, shards: usize) -> ShardPlan {
+        let count = end.saturating_sub(start);
+        let shards = (shards.max(1) as u32).min(count.max(1));
+        let base = count / shards;
+        let extra = count % shards;
+        let mut ranges = Vec::with_capacity(shards as usize);
+        let mut lo = start;
+        for s in 0..shards {
+            let len = base + u32::from(s < extra);
+            ranges.push(lo..lo + len);
+            lo += len;
+        }
+        ShardPlan { start, ranges }
+    }
+
+    /// Number of shards in the plan.
+    pub fn shards(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// The id range owned by shard `s`.
+    pub fn range(&self, s: usize) -> Range<u32> {
+        self.ranges[s].clone()
+    }
+
+    /// Which shard owns `id`. Ids outside the plan clamp to the nearest
+    /// end shard (callers guard their ids; this keeps the map total).
+    pub fn shard_of(&self, id: u32) -> usize {
+        match self.ranges.iter().position(|r| r.contains(&id)) {
+            Some(s) => s,
+            None if id < self.start => 0,
+            None => self.ranges.len() - 1,
+        }
+    }
+}
+
+/// Outbound boundary messages a participant emits during one window.
+#[derive(Debug)]
+pub struct Outbox<M> {
+    msgs: Vec<(usize, M)>,
+}
+
+impl<M> Outbox<M> {
+    fn new() -> Self {
+        Self { msgs: Vec::new() }
+    }
+
+    /// Queue `msg` for delivery to participant `to` at the start of the
+    /// next window (`to` may be the sender itself).
+    pub fn send(&mut self, to: usize, msg: M) {
+        self.msgs.push((to, msg));
+    }
+
+    fn drain(&mut self) -> Vec<(usize, M)> {
+        std::mem::take(&mut self.msgs)
+    }
+}
+
+/// One participant of a lock-step run: either the conductor (rank 0 in
+/// the cluster engine) or a shard. Implementations own their slice of
+/// simulation state and are moved onto a worker thread.
+pub trait Partitioned: Send {
+    /// The boundary-message type exchanged between participants.
+    type Msg: Send;
+
+    /// Advance this participant's state across `[start, end)`.
+    /// `incoming` holds the messages addressed to it from the previous
+    /// window, pre-sorted by the communicator's `(sender rank, send
+    /// order)`; cross-window effects go into `out`. Return `true` to
+    /// request that the whole run stop after this window — only the
+    /// participant that owns termination (the conductor) ever should.
+    fn window(
+        &mut self,
+        start: SimTime,
+        end: SimTime,
+        incoming: Vec<(usize, Self::Msg)>,
+        out: &mut Outbox<Self::Msg>,
+    ) -> bool;
+}
+
+/// Run every participant in lock-step `window`-sized time slices until
+/// one of them requests a stop (or `max_windows` elapses — the
+/// seatbelt against a conductor that never drains). Returns the
+/// participants in rank order with their final state, plus the number
+/// of windows executed.
+///
+/// Threading model: one worker thread per participant, all advancing
+/// the same window grid. The stop flag is written by the requesting
+/// participant *before* its exchange barrier and read by every thread
+/// *after* that same barrier, so all threads observe it at the same
+/// window boundary and exit together — nobody can leave a peer waiting
+/// at a barrier that will never fill.
+pub fn run_lockstep<P: Partitioned>(
+    parts: Vec<P>,
+    window: SimTime,
+    max_windows: u64,
+) -> (Vec<P>, u64) {
+    assert!(window > SimTime::ZERO, "window must be positive");
+    let n = parts.len();
+    assert!(n > 0, "need at least one participant");
+    let stop = AtomicBool::new(false);
+    let windows = AtomicU64::new(0);
+    let comms = LocalCommunicator::group(n);
+    let finished = std::thread::scope(|scope| {
+        let stop = &stop;
+        let windows = &windows;
+        let handles: Vec<_> = parts
+            .into_iter()
+            .zip(comms)
+            .map(|(mut part, mut comm)| {
+                scope.spawn(move || {
+                    let mut start = SimTime::ZERO;
+                    let mut incoming = Vec::new();
+                    let mut out = Outbox::new();
+                    let mut ran = 0u64;
+                    loop {
+                        let end = start + window;
+                        if part.window(start, end, incoming, &mut out) {
+                            stop.store(true, Ordering::SeqCst);
+                        }
+                        ran += 1;
+                        if ran >= max_windows {
+                            // every thread hits the same cap at the same
+                            // window, so this exit is also collective
+                            stop.store(true, Ordering::SeqCst);
+                        }
+                        for (to, msg) in out.drain() {
+                            comm.send(to, msg);
+                        }
+                        incoming = comm.exchange();
+                        if stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        start = end;
+                    }
+                    if comm.rank() == 0 {
+                        windows.store(ran, Ordering::SeqCst);
+                    }
+                    part
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("lock-step worker panicked"))
+            .collect::<Vec<P>>()
+    });
+    (finished, windows.load(Ordering::SeqCst))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_is_contiguous_and_balanced() {
+        let plan = ShardPlan::split(1, 11, 4); // ids 1..11, 10 machines
+        assert_eq!(plan.shards(), 4);
+        assert_eq!(plan.range(0), 1..4);
+        assert_eq!(plan.range(1), 4..7);
+        assert_eq!(plan.range(2), 7..9);
+        assert_eq!(plan.range(3), 9..11);
+        for id in 1..11 {
+            let s = plan.shard_of(id);
+            assert!(plan.range(s).contains(&id), "id {id} -> shard {s}");
+        }
+    }
+
+    #[test]
+    fn split_clamps_excess_shards_and_never_leaves_one_empty() {
+        let plan = ShardPlan::split(1, 4, 16); // 3 machines, 16 requested
+        assert_eq!(plan.shards(), 3);
+        assert!((0..3).all(|s| !plan.range(s).is_empty()));
+        // degenerate but total: zero machines still yields one shard
+        let empty = ShardPlan::split(5, 5, 4);
+        assert_eq!(empty.shards(), 1);
+        assert!(empty.range(0).is_empty());
+        assert_eq!(empty.shard_of(2), 0);
+        assert_eq!(empty.shard_of(9), 0);
+    }
+
+    /// Two counters ping-pong increments through the outbox: rank 0
+    /// stops the run once its counter reaches a threshold, and both
+    /// participants exit at the same window.
+    struct PingPong {
+        rank: usize,
+        count: u64,
+        windows: u64,
+    }
+
+    impl Partitioned for PingPong {
+        type Msg = u64;
+        fn window(
+            &mut self,
+            _start: SimTime,
+            _end: SimTime,
+            incoming: Vec<(usize, u64)>,
+            out: &mut Outbox<u64>,
+        ) -> bool {
+            self.windows += 1;
+            for (_, v) in incoming {
+                self.count += v;
+            }
+            out.send(1 - self.rank, 1);
+            self.rank == 0 && self.count >= 5
+        }
+    }
+
+    #[test]
+    fn lockstep_stops_collectively() {
+        let parts = vec![
+            PingPong { rank: 0, count: 0, windows: 0 },
+            PingPong { rank: 1, count: 0, windows: 0 },
+        ];
+        let (done, windows) = run_lockstep(parts, SimTime::from_secs(1), 1000);
+        assert_eq!(done[0].windows, done[1].windows, "collective exit");
+        assert_eq!(done[0].windows, windows);
+        assert!(done[0].count >= 5);
+    }
+
+    /// The seatbelt: a run whose conductor never stops is cut at
+    /// `max_windows` on every thread at once.
+    #[test]
+    fn lockstep_honors_the_window_cap() {
+        struct Forever;
+        impl Partitioned for Forever {
+            type Msg = ();
+            fn window(
+                &mut self,
+                _s: SimTime,
+                _e: SimTime,
+                _i: Vec<(usize, ())>,
+                _o: &mut Outbox<()>,
+            ) -> bool {
+                false
+            }
+        }
+        let (_, windows) = run_lockstep(vec![Forever, Forever], SimTime::from_secs(1), 7);
+        assert_eq!(windows, 7);
+    }
+}

@@ -10,16 +10,16 @@ pub struct SimTime(pub u64);
 impl SimTime {
     pub const ZERO: SimTime = SimTime(0);
 
-    pub fn from_nanos(ns: u64) -> Self {
+    pub const fn from_nanos(ns: u64) -> Self {
         Self(ns)
     }
-    pub fn from_micros(us: u64) -> Self {
+    pub const fn from_micros(us: u64) -> Self {
         Self(us * 1_000)
     }
-    pub fn from_millis(ms: u64) -> Self {
+    pub const fn from_millis(ms: u64) -> Self {
         Self(ms * 1_000_000)
     }
-    pub fn from_secs(s: u64) -> Self {
+    pub const fn from_secs(s: u64) -> Self {
         Self(s * 1_000_000_000)
     }
     /// From fractional seconds (saturating at zero for negatives).

@@ -242,6 +242,107 @@ impl ArrivalGen {
     pub fn take(&mut self, n: usize) -> Vec<JobArrival> {
         (0..n).map(|_| self.next()).collect()
     }
+
+    /// Serialize the generator's mid-stream position — RNG state,
+    /// thinning clock, drawn-but-unemitted base arrival and the
+    /// campaign heap — into one line of text. Paired with
+    /// [`ArrivalGen::restore`], a resumed generator emits exactly the
+    /// arrivals the original would have emitted next. This is what the
+    /// HA head journals after each pull, so a standby continues the
+    /// tenant stream byte-identically after a takeover.
+    pub fn cursor(&self) -> String {
+        let mut out = format!("arr1 {} {} {}", self.rng.state(), self.t.as_nanos(), self.seq);
+        match &self.next_base {
+            Some(b) => out.push_str(&format!(
+                " {}:{}:{}:{}:{}:{}",
+                b.at.as_nanos(),
+                b.tenant,
+                b.ranks,
+                b.duration.as_nanos(),
+                b.priority,
+                b.campaign as u8
+            )),
+            None => out.push_str(" -"),
+        }
+        // the heap's internal layout is unspecified: emit entries sorted
+        // so identical positions always encode byte-identically
+        let mut pend: Vec<Pending> = self.pending.iter().map(|&Reverse(p)| p).collect();
+        pend.sort();
+        out.push_str(&format!(" {}", pend.len()));
+        for p in pend {
+            out.push_str(&format!(
+                " {}:{}:{}:{}:{}",
+                p.at.as_nanos(),
+                p.seq,
+                p.tenant,
+                p.ranks,
+                p.dur.as_nanos()
+            ));
+        }
+        out
+    }
+
+    /// Rebuild a generator at a [`cursor`](ArrivalGen::cursor) position.
+    /// `spec` must be the population the cursor was taken from — the
+    /// cursor carries only dynamic state; config comes from deployment,
+    /// exactly like the HA snapshot's treatment of head config.
+    pub fn restore(spec: PopulationSpec, cursor: &str) -> Result<Self, String> {
+        fn field<'a>(
+            it: &mut std::str::SplitWhitespace<'a>,
+            what: &str,
+        ) -> Result<&'a str, String> {
+            it.next().ok_or_else(|| format!("truncated arrival cursor at {what}"))
+        }
+        fn num<T: std::str::FromStr>(tok: &str, what: &str) -> Result<T, String> {
+            tok.parse().map_err(|_| format!("bad {what} in arrival cursor: {tok}"))
+        }
+        let mut it = cursor.split_whitespace();
+        let version = field(&mut it, "version")?;
+        if version != "arr1" {
+            return Err(format!("unknown arrival cursor version: {version}"));
+        }
+        let mut gen = Self::new(spec);
+        gen.rng = Rng::from_state(num(field(&mut it, "rng state")?, "rng state")?);
+        gen.t = SimTime::from_nanos(num(field(&mut it, "thinning clock")?, "thinning clock")?);
+        gen.seq = num(field(&mut it, "seq")?, "seq")?;
+        let base = field(&mut it, "next_base")?;
+        gen.next_base = if base == "-" {
+            None
+        } else {
+            let parts: Vec<&str> = base.split(':').collect();
+            if parts.len() != 6 {
+                return Err(format!("bad next_base in arrival cursor: {base}"));
+            }
+            Some(JobArrival {
+                at: SimTime::from_nanos(num(parts[0], "next_base at")?),
+                tenant: num(parts[1], "next_base tenant")?,
+                ranks: num(parts[2], "next_base ranks")?,
+                duration: SimTime::from_nanos(num(parts[3], "next_base duration")?),
+                priority: num(parts[4], "next_base priority")?,
+                campaign: parts[5] == "1",
+            })
+        };
+        let n: usize = num(field(&mut it, "pending count")?, "pending count")?;
+        gen.pending = BinaryHeap::with_capacity(n);
+        for _ in 0..n {
+            let tok = field(&mut it, "pending entry")?;
+            let parts: Vec<&str> = tok.split(':').collect();
+            if parts.len() != 5 {
+                return Err(format!("bad pending entry in arrival cursor: {tok}"));
+            }
+            gen.pending.push(Reverse(Pending {
+                at: SimTime::from_nanos(num(parts[0], "pending at")?),
+                seq: num(parts[1], "pending seq")?,
+                tenant: num(parts[2], "pending tenant")?,
+                ranks: num(parts[3], "pending ranks")?,
+                dur: SimTime::from_nanos(num(parts[4], "pending dur")?),
+            }));
+        }
+        if it.next().is_some() {
+            return Err(format!("trailing tokens in arrival cursor: {cursor}"));
+        }
+        Ok(gen)
+    }
 }
 
 /// Order-sensitive FNV-style fingerprint of an arrival stream — the
@@ -357,6 +458,48 @@ mod tests {
                 b.tenant
             );
         }
+    }
+
+    #[test]
+    fn cursor_resumes_the_exact_stream_mid_flight() {
+        let mut spec = PopulationSpec::new(100, 17);
+        spec.campaign_prob = 0.4; // keep the pending heap populated
+        spec.campaign_jobs = 5;
+        // checkpoint at several depths, including mid-campaign
+        for consumed in [0usize, 1, 37, 200] {
+            let mut g = ArrivalGen::new(spec);
+            let _ = g.take(consumed);
+            let cursor = g.cursor();
+            let mut resumed = ArrivalGen::restore(spec, &cursor)
+                .unwrap_or_else(|e| panic!("{cursor}: {e}"));
+            assert_eq!(
+                g.take(300),
+                resumed.take(300),
+                "resumed stream diverged after {consumed} consumed arrivals"
+            );
+        }
+    }
+
+    #[test]
+    fn cursor_roundtrips_byte_identically() {
+        let mut spec = PopulationSpec::new(50, 23);
+        spec.campaign_prob = 1.0;
+        let mut g = ArrivalGen::new(spec);
+        let _ = g.take(40);
+        let cursor = g.cursor();
+        let resumed = ArrivalGen::restore(spec, &cursor).unwrap();
+        assert_eq!(resumed.cursor(), cursor, "restore must reproduce the cursor exactly");
+    }
+
+    #[test]
+    fn restore_rejects_garbage_cursors() {
+        let spec = PopulationSpec::new(10, 1);
+        assert!(ArrivalGen::restore(spec, "").is_err());
+        assert!(ArrivalGen::restore(spec, "arr9 1 2 3 - 0").is_err(), "unknown version");
+        assert!(ArrivalGen::restore(spec, "arr1 1 2").is_err(), "truncated");
+        assert!(ArrivalGen::restore(spec, "arr1 1 2 3 nope 0").is_err(), "bad base");
+        assert!(ArrivalGen::restore(spec, "arr1 1 2 3 - 2 1:2:3:4:5").is_err(), "short heap");
+        assert!(ArrivalGen::restore(spec, "arr1 1 2 3 - 0 extra").is_err(), "trailing");
     }
 
     #[test]

@@ -4,15 +4,18 @@
 //! with hash-order iteration, wall-clock reads and ambient entropy kept
 //! out of the tree, re-running any trace with the same seed must
 //! produce a byte-identical [`Metrics::counters_snapshot`] fingerprint.
-//! WAL replay, fault-plan replay and the planned sharded engine's
-//! partition merge all assume exactly this.
+//! WAL replay, fault-plan replay and the sharded engine's partition
+//! merge all assume exactly this — and the `sharded_*` tests push the
+//! property one step further: the fingerprint must be invariant not
+//! just across runs but across shard counts (1, 2 and 4).
 //!
 //! Pure control-plane (synthetic jobs only): runs under
 //! `--no-default-features` in CI.
 
 use std::collections::BTreeMap;
-use vhpc::cluster::mix::{run_job_trace, run_tenant_trace};
+use vhpc::cluster::mix::{mix_spec, prioritized_trace, run_job_trace, run_tenant_trace};
 use vhpc::cluster::policy::SchedulePolicy;
+use vhpc::cluster::{run_sharded_chaos, run_sharded_mix, run_sharded_tenants, ShardRunConfig};
 use vhpc::config::ClusterSpec;
 use vhpc::faults::{run_chaos_trace, FaultPlan};
 use vhpc::ha::run_ha_trace;
@@ -95,6 +98,103 @@ fn chaos_trace_double_run_is_byte_identical() {
         vc.metrics().counters_snapshot()
     };
     assert_identical(&run(), &run(), "chaos");
+}
+
+/// A shared config for the shard-invariance tests below: everything but
+/// the shard count pinned, so the only variable across runs is how the
+/// compute nodes are partitioned onto threads.
+fn shard_cfg(shards: usize) -> ShardRunConfig {
+    ShardRunConfig { shards, warmup_slots: 24, ..ShardRunConfig::default() }
+}
+
+/// The partitioned engine, mix workload: the same bursty trace at
+/// shards 1, 2 and 4 must merge to byte-identical counters. This is
+/// the acceptance property of the partition/comm subsystem — shard
+/// count is an execution detail, never an observable.
+#[test]
+fn sharded_mix_is_shard_count_invariant() {
+    let spec = || {
+        let mut s = mix_spec(SimTime::from_secs(5));
+        s.seed = 11;
+        s
+    };
+    let jobs = prioritized_trace(24, 24);
+    let base = run_sharded_mix(spec(), &jobs, SchedulePolicy::default(), &shard_cfg(1))
+        .expect("1-shard mix must drain");
+    assert_eq!(base.jobs_completed as usize, base.jobs_submitted);
+    for shards in [2usize, 4] {
+        let o = run_sharded_mix(spec(), &jobs, SchedulePolicy::default(), &shard_cfg(shards))
+            .expect("sharded mix must drain");
+        assert_eq!(o.shards, shards, "requested shard count must survive clamping");
+        assert_eq!(o.windows, base.windows, "drain window drifted at {shards} shards");
+        assert_identical(&o.fingerprint, &base.fingerprint, &format!("mix @ {shards} shards"));
+    }
+}
+
+/// The partitioned engine, tenant workload: seeded open-loop arrivals
+/// under fair share at shards 1, 2 and 4 — identical counters AND an
+/// identical order-sensitive arrival-stream fingerprint (the conductor
+/// owns the generator, so partitioning must not reorder submissions).
+#[test]
+fn sharded_tenants_is_shard_count_invariant() {
+    let spec = || {
+        let mut s = mix_spec(SimTime::from_secs(5));
+        s.seed = 13;
+        s
+    };
+    let mut pop = PopulationSpec::new(12, 31);
+    pop.rate_per_sec = 0.08;
+    let run = |shards| {
+        run_sharded_tenants(
+            spec(),
+            pop,
+            SchedulePolicy::fairshare(),
+            TenantQuotas::default(),
+            180,
+            &shard_cfg(shards),
+        )
+        .expect("sharded tenant trace must drain")
+    };
+    let base = run(1);
+    assert!(base.jobs_submitted > 0, "the arrival stream must produce work");
+    assert_eq!(base.jobs_completed as usize, base.jobs_submitted);
+    for shards in [2usize, 4] {
+        let o = run(shards);
+        assert_eq!(
+            o.arrivals_fingerprint, base.arrivals_fingerprint,
+            "arrival stream changed at {shards} shards"
+        );
+        assert_identical(&o.fingerprint, &base.fingerprint, &format!("tenants @ {shards} shards"));
+    }
+}
+
+/// The partitioned engine, chaos workload: a seeded MTBF kill schedule
+/// crossing shard boundaries at shards 1, 2 and 4 — kills land on the
+/// window grid as boundary messages, so recovery and retries must merge
+/// to byte-identical counters too. Seed 7 at this MTBF puts its first
+/// kill ~98s in — inside the ~150s-minimum makespan of a 32-job trace —
+/// and its second past 700s, so exactly one crash interrupts the run.
+#[test]
+fn sharded_chaos_is_shard_count_invariant() {
+    let spec = || {
+        let mut s = mix_spec(SimTime::from_secs(5));
+        s.seed = 7;
+        s
+    };
+    let jobs = prioritized_trace(16, 32);
+    let run = |shards| {
+        run_sharded_chaos(spec(), &jobs, SchedulePolicy::default(), 900.0, &shard_cfg(shards))
+            .expect("sharded chaos trace must drain")
+    };
+    let base = run(1);
+    assert!(
+        base.fingerprint.get("machines_crashed").copied().unwrap_or(0) > 0,
+        "the kill schedule must actually crash a machine"
+    );
+    for shards in [2usize, 4] {
+        let o = run(shards);
+        assert_identical(&o.fingerprint, &base.fingerprint, &format!("chaos @ {shards} shards"));
+    }
 }
 
 /// The HA driver: a head crash mid-trace, WAL replay, takeover — twice,

@@ -102,6 +102,47 @@ fn head_crash_mid_dispatch_double_runs_nothing_and_loses_nothing() {
     }
 }
 
+/// Multiple standbys race the takeover through a compare-and-set on
+/// the leadership record: exactly one wins the claim, the losers count
+/// a loss and re-enter monitoring, and the promoted head finishes the
+/// trace exactly like a lone standby would.
+#[test]
+fn multiple_standbys_race_and_exactly_one_wins() {
+    let mut s = spec();
+    s.ha.standbys = 3;
+    let (o, vc) = run_ha_trace(s, &trace(), Some(SimTime::from_secs(33)), 36, 2400)
+        .expect("ha trace must drain");
+    assert_eq!(o.head_crashes, 1);
+    assert_eq!(o.takeovers, 1, "exactly one standby may promote");
+    assert_eq!(o.jobs_completed, o.jobs_submitted);
+    assert_eq!(o.requeues, 0, "the failover still charges no retry budget");
+    let m = vc.metrics();
+    assert_eq!(m.counter("ha_claims_submitted"), 3, "every standby must claim");
+    assert_eq!(m.counter("ha_takeover_won"), 1, "the CAS race has one winner");
+    assert_eq!(
+        m.counter("ha_takeover_lost"),
+        2,
+        "both losers must observe the foreign token and stand down"
+    );
+    // the winner's promotion published the bumped epoch over its claim
+    let leader = vc.state.consul.kv().get("vhpc/ha/leader").unwrap_or("");
+    assert!(leader.starts_with("epoch 1 "), "leader record not updated: {leader}");
+}
+
+/// The multi-standby race is deterministic: same seed, same winner,
+/// same fingerprint.
+#[test]
+fn multi_standby_runs_are_deterministic() {
+    let run = || {
+        let mut s = spec();
+        s.ha.standbys = 3;
+        run_ha_trace(s, &trace(), Some(SimTime::from_secs(33)), 36, 2400).unwrap()
+    };
+    let (a, _) = run();
+    let (b, _) = run();
+    assert_eq!(a.fingerprint, b.fingerprint, "same-seed multi-standby runs diverged");
+}
+
 /// Same seed, head crash vs no crash: the scheduling outcome —
 /// everything the metrics count except the failover's own bookkeeping
 /// — must be byte-identical. This is the WAL-replay determinism
