@@ -17,6 +17,11 @@
 //!                 [--max-retries K] [--sim-seconds S] [--shards N]
 //! vhpc ha         [--jobs N] [--machines M] [--crash-at S] [--lock-ttl S]
 //!                 [--snapshot-every N] [--ticks T]   (drain deadline, 1s ticks)
+//! vhpc perf       [--jobs N] [--tenants N] [--machines M] [--shards N]
+//!                 [--seed S] [--duration S] [--out F]
+//!                 [--baseline F] [--gate PCT]   (large-trace throughput
+//!                 harness; writes BENCH_perf.json, optionally gated
+//!                 against a baseline's events/sec)
 //! vhpc build      [--dockerfile F]
 //! vhpc bench-net  [--bridge MODE]
 //! vhpc lint       [--fix-waivers] [paths…]
@@ -509,6 +514,81 @@ fn cmd_ha(flags: HashMap<String, String>) -> Result<(), String> {
     Ok(())
 }
 
+/// Large-trace throughput harness: synthesize the canonical arrival
+/// stream, microbench the calendar engine against the reference heap,
+/// run the sharded control-plane trace, and write `BENCH_perf.json`.
+/// With `--baseline F`, fail (exit 2) if events/sec dropped more than
+/// `--gate` percent below the baseline's.
+fn cmd_perf(mut flags: HashMap<String, String>) -> Result<(), String> {
+    // the perf fleet defaults to 32 machines; routing the default
+    // through load_spec keeps its autoscale-bounds adjustment
+    if !flags.contains_key("machines") && !flags.contains_key("config") {
+        flags.insert("machines".to_string(), "32".to_string());
+    }
+    let spec = load_spec(&flags)?;
+    let jobs: usize = flag(&flags, "jobs", 100_000usize)?;
+    let tenants: u64 = flag(&flags, "tenants", 10_000u64)?;
+    let shards: usize = flag(&flags, "shards", 4usize)?;
+    let seed: u64 = flag(&flags, "seed", 42u64)?;
+    let duration: u64 = flag(&flags, "duration", 1800u64)?;
+    let out: String = flag(&flags, "out", "BENCH_perf.json".to_string())?;
+    let gate: f64 = flag(&flags, "gate", 15.0f64)?;
+
+    let machines = spec.machines;
+    let spec = crate::cluster::perf::perf_spec(spec, machines, seed);
+    println!(
+        "perf: {jobs} jobs / {tenants} tenants over {duration}s virtual, {} machines, {shards} shards, seed {seed}",
+        spec.machines
+    );
+    let o = crate::cluster::run_perf_trace(spec, jobs, tenants, shards, seed, duration)?;
+    for p in &o.phases {
+        println!(
+            "phase {:<16} {:>10} units  {:>8.3}s wall  p50 {:.2}ms  p99 {:.2}ms  max {:.2}ms",
+            p.name, p.units, p.wall_secs, p.latency.p50_ms, p.latency.p99_ms, p.latency.max_ms
+        );
+    }
+    println!(
+        "engine: calendar {:.0} ev/s vs heap {:.0} ev/s — {:.2}x",
+        o.engine.calendar_events_per_sec, o.engine.heap_events_per_sec, o.engine.speedup
+    );
+    println!(
+        "cluster: {} events in {:.2}s wall -> {:.0} events/sec  ({} submitted, {} done, makespan {:.0}s)",
+        o.events,
+        o.phases.last().map(|p| p.wall_secs).unwrap_or(0.0),
+        o.events_per_sec,
+        o.jobs_submitted,
+        o.jobs_completed,
+        o.makespan_secs
+    );
+    println!("arrival-stream fingerprint: {:016x}", o.arrivals_fingerprint);
+    println!(
+        "counter fingerprint: {:016x} ({} counters) — identical for any --shards at this seed",
+        o.counter_digest,
+        o.counters.len()
+    );
+    let json = crate::cluster::perf::render_json(&o);
+    std::fs::write(&out, &json).map_err(|e| format!("{out}: {e}"))?;
+    println!("wrote {out}");
+    if let Some(base_path) = flags.get("baseline") {
+        let base_text =
+            std::fs::read_to_string(base_path).map_err(|e| format!("{base_path}: {e}"))?;
+        let base = crate::cluster::perf::parse_events_per_sec(&base_text)
+            .ok_or_else(|| format!("{base_path}: no events_per_sec field"))?;
+        let floor = base * (1.0 - gate / 100.0);
+        println!(
+            "gate: current {:.0} ev/s vs baseline {base:.0} ev/s (floor {floor:.0}, -{gate}%)",
+            o.events_per_sec
+        );
+        if o.events_per_sec < floor {
+            return Err(format!(
+                "perf regression: {:.0} events/sec is more than {gate}% below the baseline's {base:.0}",
+                o.events_per_sec
+            ));
+        }
+    }
+    Ok(())
+}
+
 fn cmd_build(flags: HashMap<String, String>) -> Result<(), String> {
     let text = match flags.get("dockerfile") {
         Some(path) => std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?,
@@ -580,6 +660,7 @@ pub fn main() -> i32 {
         "tenants" => parse_flags(rest).and_then(cmd_tenants),
         "chaos" => parse_flags(rest).and_then(cmd_chaos),
         "ha" => parse_flags(rest).and_then(cmd_ha),
+        "perf" => parse_flags(rest).and_then(cmd_perf),
         "build" => parse_flags(rest).and_then(cmd_build),
         "bench-net" => parse_flags(rest).and_then(cmd_bench_net),
         "lint" => return crate::lint::cli_main(rest),
@@ -592,6 +673,7 @@ pub fn main() -> i32 {
                  vhpc tenants   [--tenants N] [--policy fifo|easy|priority|fairshare] [--duration S] [--rate R] [--skew S] [--seed S] [--max-queued N] [--defer-over-quota true|false] [--sim-seconds S] [--shards N] [--crash-at S]\n  \
                  vhpc chaos     [--jobs N] [--machines M] [--seed S] [--mtbf SECS] [--max-retries K] [--sim-seconds S] [--shards N]\n  \
                  vhpc ha        [--jobs N] [--machines M] [--crash-at S] [--lock-ttl S] [--snapshot-every N] [--ticks T]\n  \
+                 vhpc perf      [--jobs N] [--tenants N] [--machines M] [--shards N] [--seed S] [--duration S] [--out F] [--baseline F] [--gate PCT]\n  \
                  vhpc build     [--dockerfile F]\n  \
                  vhpc bench-net [--bridge docker0|bridge0|host]\n  \
                  vhpc lint      [--fix-waivers] [paths…]   (determinism static analysis; see lint.toml)\n  \

@@ -195,6 +195,28 @@ pub enum LossOutcome {
     NotRunning,
 }
 
+/// Memoized policy-facing queue view (see [`Head::refresh_queue_view`]).
+///
+/// `eligible[i]` is the index into `Head::queue` that `view[i]`
+/// describes, so a `Decision::Start { idx }` maps back to the real
+/// queue through `eligible[idx]` exactly as the uncached code did.
+struct QueueViewCache {
+    /// False until first build and after any mutation of the view's
+    /// structural inputs (see [`Head::dirty_queue_view`]).
+    valid: bool,
+    /// Decision time the cached `usage` figures were computed at.
+    as_of: SimTime,
+    /// [`UsageLedger::version`] the `usage` figures were computed from.
+    ledger_version: u64,
+    /// Running-slot quota the eligibility filter was computed under.
+    quota_cap: u32,
+    /// Indices into `Head::queue` of the quota-eligible jobs, in queue
+    /// order.
+    eligible: Vec<usize>,
+    /// The policy-facing view of those jobs.
+    view: Vec<crate::cluster::policy::QueuedJob>,
+}
+
 /// The head container's state.
 pub struct Head {
     pub watcher: TemplateWatcher,
@@ -279,6 +301,12 @@ pub struct Head {
     /// replicated log at the end of every engine event via
     /// [`Head::take_journal`].
     journal: Option<Vec<crate::ha::wal::WalEvent>>,
+    /// Cached policy queue view, rebuilt lazily by
+    /// [`Head::refresh_queue_view`] and invalidated by
+    /// [`Head::dirty_queue_view`] wherever the queue, the running pool
+    /// or the deferral pens change. Ledger drift and the passage of
+    /// time refresh in place (usage only) instead of invalidating.
+    view_cache: QueueViewCache,
 }
 
 impl Default for Head {
@@ -318,6 +346,14 @@ impl Head {
             first_failed_at: HashMap::new(),
             last_arrival_cursor: None,
             journal: None,
+            view_cache: QueueViewCache {
+                valid: false,
+                as_of: SimTime::ZERO,
+                ledger_version: 0,
+                quota_cap: u32::MAX,
+                eligible: Vec::new(),
+                view: Vec::new(),
+            },
         }
     }
 
@@ -485,6 +521,7 @@ impl Head {
             return SubmitOutcome::Deferred;
         }
         self.queue.push_back((spec, now));
+        self.dirty_queue_view();
         SubmitOutcome::Queued
     }
 
@@ -545,6 +582,9 @@ impl Head {
                 self.deferred.remove(&t);
             }
         }
+        if admitted > 0 {
+            self.dirty_queue_view();
+        }
         admitted
     }
 
@@ -601,6 +641,121 @@ impl Head {
         }
     }
 
+    /// Invalidate the cached policy queue view. Every mutation of the
+    /// view's *structural* inputs must call this: queue membership or
+    /// order (submit, admit, dispatch, requeue, restore) and the
+    /// running pool (finish, preempt, unlaunch, loss — it feeds the
+    /// quota eligibility filter). Ledger drift and the passage of time
+    /// are deliberately **not** dirty events: the cache tracks those
+    /// through [`UsageLedger::version`] and its `as_of` stamp and
+    /// refreshes the usage figures in place.
+    fn dirty_queue_view(&mut self) {
+        self.view_cache.valid = false;
+    }
+
+    /// Bring the cached policy queue view up to date for a decision at
+    /// `now`. Three tiers, cheapest first:
+    ///
+    /// 1. **Reuse** — skeleton valid, same decision time, same ledger
+    ///    version: nothing to do. This is the steady-state hit for the
+    ///    dispatch loop's repeated `start_next` calls within one tick.
+    /// 2. **Usage refresh** — skeleton valid but time moved or the
+    ///    ledger changed: recompute only the per-job `usage` figures,
+    ///    memoizing [`UsageLedger::normalized_usage_at`] per distinct
+    ///    tenant. The memoized value is the same pure function of
+    ///    `(ledger, tenant, now)` a rebuild would call per job, so the
+    ///    refreshed view is bit-identical to a full rebuild.
+    /// 3. **Full rebuild** — the cache was dirtied or the running-slot
+    ///    quota changed: recompute the eligibility filter and the whole
+    ///    view, exactly the computation `start_next` historically did
+    ///    inline on every call.
+    fn refresh_queue_view(&mut self, now: SimTime) {
+        let ledger_version = self.ledger.version();
+        let quota_cap = self.quotas.max_running_slots;
+        if self.view_cache.valid && self.view_cache.quota_cap == quota_cap {
+            if self.view_cache.as_of == now
+                && self.view_cache.ledger_version == ledger_version
+            {
+                return;
+            }
+            let ledger = &self.ledger;
+            let mut usage_of: HashMap<u64, f64> = HashMap::new();
+            for q in self.view_cache.view.iter_mut() {
+                let tenant = q.tenant;
+                q.usage = *usage_of
+                    .entry(tenant)
+                    .or_insert_with(|| ledger.normalized_usage_at(tenant, now));
+            }
+            self.view_cache.as_of = now;
+            self.view_cache.ledger_version = ledger_version;
+            return;
+        }
+        // Per-tenant running-slot quota gate: filter the view, keep the
+        // index map back into the real queue. The default unlimited
+        // quota takes the identity fast path — no per-tenant
+        // bookkeeping on pre-tenancy workloads.
+        let eligible: Vec<usize> = if quota_cap == u32::MAX {
+            (0..self.queue.len()).collect()
+        } else {
+            let running_by_tenant = self.running_slots_by_tenant();
+            let slot_cap = quota_cap as u64;
+            (0..self.queue.len())
+                .filter(|&i| {
+                    let j = &self.queue[i].0;
+                    running_by_tenant.get(&j.tenant).copied().unwrap_or(0) as u64
+                        + j.ranks as u64
+                        <= slot_cap
+                })
+                .collect()
+        };
+        let mut usage_of: HashMap<u64, f64> = HashMap::new();
+        let view: Vec<crate::cluster::policy::QueuedJob> = eligible
+            .iter()
+            .map(|&i| {
+                let j = &self.queue[i].0;
+                crate::cluster::policy::QueuedJob {
+                    id: j.id,
+                    ranks: j.ranks,
+                    priority: j.priority,
+                    est: j.estimated_duration(),
+                    tenant: j.tenant,
+                    usage: *usage_of
+                        .entry(j.tenant)
+                        .or_insert_with(|| self.ledger.normalized_usage_at(j.tenant, now)),
+                }
+            })
+            .collect();
+        self.view_cache = QueueViewCache {
+            valid: true,
+            as_of: now,
+            ledger_version,
+            quota_cap,
+            eligible,
+            view,
+        };
+    }
+
+    /// Test-only: whether the cached policy queue view is currently
+    /// valid (i.e. no structural invalidation since the last build).
+    #[doc(hidden)]
+    pub fn queue_view_cache_valid(&self) -> bool {
+        self.view_cache.valid
+    }
+
+    /// Test-only stale-cache injection: stamp the cached view as fresh
+    /// for a decision at `now` *without* rebuilding it. The cache
+    /// invalidation tests use this to prove they have teeth — after a
+    /// mutation, forcing the stale cache clean must visibly change
+    /// scheduling, so a missed [`Head::dirty_queue_view`] call cannot
+    /// slip through the suite undetected. Never call outside tests.
+    #[doc(hidden)]
+    pub fn force_queue_view_clean(&mut self, now: SimTime) {
+        self.view_cache.valid = true;
+        self.view_cache.as_of = now;
+        self.view_cache.ledger_version = self.ledger.version();
+        self.view_cache.quota_cap = self.quotas.max_running_slots;
+    }
+
     /// Dispatch the next startable job under the configured policy,
     /// reserving its slots. Call in a loop until `None` — each call
     /// starts at most one job (possibly preempting lower-priority
@@ -642,41 +797,14 @@ impl Head {
             if self.queue.is_empty() {
                 return None;
             }
-            // Per-tenant running-slot quota gate: filter the view, keep
-            // the index map back into the real queue. The default
-            // unlimited quota takes the identity fast path — no
-            // per-tenant bookkeeping on pre-tenancy workloads.
-            let eligible: Vec<usize> = if self.quotas.max_running_slots == u32::MAX {
-                (0..self.queue.len()).collect()
-            } else {
-                let running_by_tenant = self.running_slots_by_tenant();
-                let slot_cap = self.quotas.max_running_slots as u64;
-                (0..self.queue.len())
-                    .filter(|&i| {
-                        let j = &self.queue[i].0;
-                        running_by_tenant.get(&j.tenant).copied().unwrap_or(0) as u64
-                            + j.ranks as u64
-                            <= slot_cap
-                    })
-                    .collect()
-            };
-            if eligible.is_empty() {
+            // the policy's queue view is memoized: untouched state hits
+            // the cache, ledger/time drift refreshes usage in place, and
+            // any structural mutation since the last build triggers the
+            // full recompute this used to do inline
+            self.refresh_queue_view(now);
+            if self.view_cache.eligible.is_empty() {
                 return None;
             }
-            let queue_view: Vec<crate::cluster::policy::QueuedJob> = eligible
-                .iter()
-                .map(|&i| {
-                    let j = &self.queue[i].0;
-                    crate::cluster::policy::QueuedJob {
-                        id: j.id,
-                        ranks: j.ranks,
-                        priority: j.priority,
-                        est: j.estimated_duration(),
-                        tenant: j.tenant,
-                        usage: self.ledger.normalized_usage_at(j.tenant, now),
-                    }
-                })
-                .collect();
             // sorted by id so every policy sees a deterministic view of
             // the (hash-ordered) running pool
             let mut running_view: Vec<crate::cluster::policy::RunningJob> = self
@@ -691,7 +819,8 @@ impl Head {
                 })
                 .collect();
             running_view.sort_by_key(|r| r.id);
-            match self.policy.decide(now, &queue_view, &running_view, free_total, total) {
+            match self.policy.decide(now, &self.view_cache.view, &running_view, free_total, total)
+            {
                 Decision::Wait => return None,
                 Decision::Preempt { victim } => {
                     let (_, wasted) = self.preempt(victim, now)?;
@@ -703,13 +832,19 @@ impl Head {
                     if self.running.len() >= self.max_concurrent {
                         return None;
                     }
-                    let Some((spec, queued_at)) = self.queue.remove(eligible[idx]) else {
+                    let queue_idx = self.view_cache.eligible.get(idx).copied();
+                    let Some((spec, queued_at)) =
+                        queue_idx.and_then(|qi| self.queue.remove(qi))
+                    else {
                         // Policy handed back an index the queue no longer
                         // has. A desync here means a scheduler bug, but the
                         // head must degrade (skip the cycle), not die.
                         log::warn!("start_next: policy index out of range, skipping cycle");
                         return None;
                     };
+                    // the job left the queue: whatever happens below
+                    // (start or carve-fail requeue), the view is stale
+                    self.dirty_queue_view();
                     let carved = if self.policy.topo_aware {
                         crate::cluster::policy::carve_topo(&mut free, spec.ranks, &self.rack_of)
                     } else {
@@ -773,6 +908,8 @@ impl Head {
     pub fn finish(&mut self, id: JobId) -> Option<JobRecord> {
         self.reserved.remove(&id);
         let mut rec = self.running.remove(&id)?;
+        // the running pool feeds the quota eligibility filter
+        self.dirty_queue_view();
         self.retries.remove(&id);
         self.attempts.remove(&id);
         if let Some(prior) = self.jacobi_progress.remove(&id) {
@@ -871,6 +1008,7 @@ impl Head {
             self.reserved.remove(&id);
             self.first_failed_at.entry(id).or_insert(now);
             self.queue.push_front((rec.spec, rec.queued_at));
+            self.dirty_queue_view();
             self.log(crate::ha::wal::WalEvent::Unlaunched { at: now, id });
         }
     }
@@ -975,6 +1113,7 @@ impl Head {
         let attempt = self.bump_attempt(id);
         let spec = JobSpec { kind, ..rec.spec.clone() };
         self.queue.push_back((spec, rec.queued_at));
+        self.dirty_queue_view();
         self.log(crate::ha::wal::WalEvent::Preempted { at: now, id });
         Some((attempt, wasted))
     }
@@ -1024,6 +1163,7 @@ impl Head {
         let attempt = self.bump_attempt(id);
         let spec = JobSpec { kind, ..rec.spec.clone() };
         self.queue.push_front((spec, rec.queued_at));
+        self.dirty_queue_view();
         LossOutcome::Requeued { id, attempt, wasted }
     }
 
@@ -1115,6 +1255,7 @@ impl Head {
                 planned_duration: None,
             },
         );
+        self.dirty_queue_view();
     }
 
     /// Export the head's complete dynamic state for an HA snapshot.
@@ -1177,6 +1318,7 @@ impl Head {
         self.last_accrued = d.last_accrued;
         self.ledger.restore_accounts(&d.ledger_accounts);
         self.last_arrival_cursor = d.last_arrival_cursor;
+        self.dirty_queue_view();
     }
 }
 
@@ -2025,5 +2167,148 @@ mod tests {
             (usage - 400.0).abs() < 1e-6,
             "8 slots x 50s must charge tenant 3: {usage}"
         );
+    }
+
+    /// Meta-test for the queue-view cache suite: a deliberately stale
+    /// cache must visibly change scheduling. If this stops failing-on-
+    /// stale (i.e. `start_next` dispatches anyway), every invalidation
+    /// test below loses its teeth — a missed `dirty_queue_view` call
+    /// would become unobservable.
+    #[test]
+    fn stale_queue_view_injection_visibly_breaks_scheduling() {
+        let mut h = Head::new();
+        h.hostfile_text = "10.10.0.2 slots=24\n".into();
+        // build a valid (empty) cached view, then sneak a job in and
+        // stamp the stale cache clean again
+        assert!(h.start_next(SimTime::ZERO).is_none());
+        h.submit(job(0, 4), SimTime::ZERO);
+        assert!(!h.queue_view_cache_valid(), "submit must dirty the view");
+        h.force_queue_view_clean(SimTime::ZERO);
+        assert!(
+            h.start_next(SimTime::ZERO).is_none(),
+            "a stale empty view must hide the startable job — otherwise \
+             the invalidation tests cannot detect missed dirty calls"
+        );
+        // without the injection the same state dispatches immediately
+        h.dirty_queue_view();
+        assert!(h.start_next(SimTime::ZERO).is_some());
+    }
+
+    /// Preemption mutates the queue (victim requeued) mid-dispatch:
+    /// the cache must be invalidated so the re-decide loop and the next
+    /// tick see the victim.
+    #[test]
+    fn preemption_dirties_the_queue_view_cache() {
+        let mut h = Head::new();
+        h.policy = crate::cluster::policy::SchedulePolicy::priority();
+        h.hostfile_text = "10.10.0.2 slots=24\n".into();
+        h.submit(jobp(0, 24, 100, 0), SimTime::ZERO);
+        h.start_next(SimTime::ZERO).unwrap();
+        h.submit(jobp(1, 24, 30, 5), SimTime::from_secs(10));
+        let r = h.start_next(SimTime::from_secs(10)).unwrap();
+        assert_eq!(r.spec.id, JobId::new(1));
+        assert_eq!(r.preempted, vec![JobId::new(0)]);
+        assert!(
+            !h.queue_view_cache_valid(),
+            "the requeued victim must invalidate the cached view"
+        );
+        // and the victim is actually schedulable again once slots free
+        h.finish(JobId::new(1));
+        assert_eq!(h.start_next(SimTime::from_secs(50)).unwrap().spec.id, JobId::new(0));
+    }
+
+    /// Quota re-admission from the deferral pen changes queue
+    /// membership: `admit_deferred` must dirty the cache.
+    #[test]
+    fn quota_readmission_dirties_the_queue_view_cache() {
+        let mut h = Head::new();
+        h.quotas.max_queued_jobs = 1;
+        h.quotas.over_quota = QuotaAction::Defer;
+        h.hostfile_text = "10.10.0.2 slots=24\n".into();
+        assert!(matches!(h.submit(jobt(0, 8, 10, 1), SimTime::ZERO), SubmitOutcome::Queued));
+        assert!(matches!(h.submit(jobt(1, 8, 10, 1), SimTime::ZERO), SubmitOutcome::Deferred));
+        // dispatch job 0: the queue drains below quota, so the next
+        // start_next admits job 1 from the pen and must rebuild the view
+        assert_eq!(h.start_next(SimTime::ZERO).unwrap().spec.id, JobId::new(0));
+        assert_eq!(h.deferred_jobs(), 1);
+        let r = h.start_next(SimTime::from_secs(1)).unwrap();
+        assert_eq!(r.spec.id, JobId::new(1), "re-admitted job must be visible");
+        assert_eq!(h.deferred_jobs(), 0);
+    }
+
+    /// A weighted-share change moves only the ledger version — no
+    /// structural invalidation — so the cached view's usage figures
+    /// must refresh in place. If the tier-2 refresh were skipped, the
+    /// stale usage order would dispatch the wrong tenant.
+    #[test]
+    fn weight_change_refreshes_cached_usage_for_fairshare() {
+        let mut h = Head::new();
+        h.policy = SchedulePolicy::fairshare();
+        // neither 24-rank job fits one 12-slot host: the first dispatch
+        // attempt decides Wait, leaving a valid cached view behind
+        h.hostfile_text = "10.10.0.2 slots=12\n".into();
+        h.ledger.charge(1, 1000.0, SimTime::ZERO);
+        h.ledger.charge(2, 400.0, SimTime::ZERO);
+        h.submit(jobt(0, 24, 10, 1), SimTime::ZERO);
+        h.submit(jobt(1, 24, 10, 2), SimTime::ZERO);
+        assert!(h.start_next(SimTime::from_secs(1)).is_none(), "no room yet");
+        assert!(h.queue_view_cache_valid());
+        // weight 4 quarters tenant 1's normalized usage (250 < 400);
+        // only the ledger version moved, the skeleton stays cached
+        h.ledger.set_weight(1, 4.0);
+        assert!(h.queue_view_cache_valid(), "weight change is not structural");
+        // capacity arrives (the hostfile is read fresh, not cached)
+        h.hostfile_text = "10.10.0.2 slots=12\n10.10.0.3 slots=12\n".into();
+        let r = h.start_next(SimTime::from_secs(1)).unwrap();
+        assert_eq!(
+            r.spec.id,
+            JobId::new(0),
+            "the in-place usage refresh must apply the new weights"
+        );
+    }
+
+    /// A fault requeue (push_front) changes queue order: the cache must
+    /// be dirtied so the requeued job is dispatched next, not the
+    /// stale head.
+    #[test]
+    fn fault_requeue_dirties_the_queue_view_cache() {
+        let mut h = Head::new();
+        h.hostfile_text = "10.10.0.2 slots=12\n10.10.0.3 slots=12\n".into();
+        h.submit(job(0, 16), SimTime::ZERO);
+        h.submit(job(1, 16), SimTime::ZERO);
+        h.start_next(SimTime::ZERO).unwrap();
+        // an idle attempt (job 1 cannot fit in the 8 free slots)
+        // rebuilds the cache, so the loss below is what invalidates it
+        assert!(h.start_next(SimTime::ZERO).is_none());
+        assert!(h.queue_view_cache_valid());
+        let out = h.handle_lost_job(JobId::new(0), SimTime::from_secs(4), "node died");
+        assert!(matches!(out, LossOutcome::Requeued { .. }), "{out:?}");
+        assert!(
+            !h.queue_view_cache_valid(),
+            "fault requeue must invalidate the cached view"
+        );
+        let r = h.start_next(SimTime::from_secs(5)).unwrap();
+        assert_eq!(r.spec.id, JobId::new(0), "requeued job goes to the head");
+        assert_eq!(r.attempt, 1);
+    }
+
+    /// Steady state: two dispatch attempts against unchanged structure
+    /// at the same tick keep the cache valid (the whole point of the
+    /// memoization), while a plain submit invalidates it.
+    #[test]
+    fn queue_view_cache_survives_idle_redecisions() {
+        let mut h = Head::new();
+        h.hostfile_text = "10.10.0.2 slots=4\n".into();
+        h.submit(job(0, 4), SimTime::ZERO);
+        h.submit(job(1, 4), SimTime::ZERO);
+        assert!(h.start_next(SimTime::ZERO).is_some());
+        // job 1 cannot fit: the decide ran and cached the view
+        assert!(h.start_next(SimTime::ZERO).is_none());
+        assert!(h.queue_view_cache_valid());
+        // a second no-op attempt leaves it valid (tier-1 reuse)
+        assert!(h.start_next(SimTime::ZERO).is_none());
+        assert!(h.queue_view_cache_valid());
+        h.submit(job(2, 1), SimTime::from_secs(1));
+        assert!(!h.queue_view_cache_valid(), "submit must dirty the view");
     }
 }

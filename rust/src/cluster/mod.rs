@@ -24,6 +24,7 @@ pub mod autoscaler;
 pub mod head;
 pub mod metrics;
 pub mod mix;
+pub mod perf;
 pub mod policy;
 pub mod shard;
 pub mod vcluster;
@@ -35,6 +36,7 @@ pub use mix::{
     bursty_trace, mix_spec, prioritized_trace, run_job_trace, run_policy_trace,
     run_tenant_trace, run_tenant_trace_ha, JobReq, TenantTraceOutcome, TraceOutcome,
 };
+pub use perf::{run_perf_trace, EngineBench, PerfOutcome, PhaseStats};
 pub use policy::{PolicyKind, SchedulePolicy};
 pub use shard::{
     run_sharded_chaos, run_sharded_mix, run_sharded_tenants, ComputeProfile, ShardMsg,

@@ -1,0 +1,593 @@
+//! `vhpc perf` — the large-trace throughput harness.
+//!
+//! Drives the canonical open-loop multi-tenant trace (up to a million
+//! arrivals over 100k tenants, `--machines`-many nodes) through the
+//! sharded control plane and reports wall-clock throughput alongside
+//! the determinism witnesses the rest of the suite pins:
+//!
+//! 1. **arrivals** — synthesize the full arrival stream standalone
+//!    (`tenancy/arrivals.rs`), bounded by the same virtual horizon the
+//!    cluster phase uses, timing fixed-size chunks so the phase gets
+//!    real latency percentiles, and fingerprint it.
+//! 2. **engine** — a head-to-head microbench of the calendar-queue
+//!    [`Engine`](crate::sim::Engine) against the boxed-closure
+//!    [`ClosureHeapEngine`](crate::sim::ClosureHeapEngine) it replaced,
+//!    on an identical seeded hop workload (same delays, same event
+//!    count, asserted equal) — the speedup figure the rewrite is
+//!    accountable for.
+//! 3. **cluster** — the full sharded control-plane run
+//!    ([`run_sharded_tenants`](crate::cluster::shard::run_sharded_tenants)):
+//!    events/sec end to end, plus the merged counter fingerprint that
+//!    must not move when the engine gets faster.
+//!
+//! The CLI (`cli.rs`) renders the outcome as `BENCH_perf.json` and can
+//! gate against a committed baseline (`--baseline F --gate PCT`),
+//! failing the run when events/sec regresses past the threshold.
+//!
+//! Wall-clock readings live only in the reported stats — nothing the
+//! simulation computes depends on them, so the virtual-time results
+//! and every fingerprint stay deterministic.
+
+use crate::cluster::policy::SchedulePolicy;
+use crate::cluster::shard::{run_sharded_tenants, ShardRunConfig};
+use crate::config::ClusterSpec;
+use crate::sim::{ClosureHeapEngine, Engine, SimEvent, SimTime};
+use crate::tenancy::{
+    stream_fingerprint, ArrivalGen, JobArrival, PopulationSpec, TenantQuotas,
+};
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Arrivals per timing chunk in the synthesis phase.
+const ARRIVAL_CHUNK: usize = 8192;
+/// Interleaved timing rounds for the engine microbench.
+const ENGINE_ROUNDS: usize = 4;
+/// Initial walkers per engine-microbench round.
+const ENGINE_WALKERS: u32 = 2048;
+/// Reschedules per walker (so one round fires `WALKERS * (HOPS + 1)`).
+const ENGINE_HOPS: u32 = 31;
+
+/// Latency percentiles over one phase's timing samples, milliseconds.
+#[derive(Debug, Clone, Copy)]
+pub struct Percentiles {
+    pub p50_ms: f64,
+    pub p90_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+}
+
+/// Nearest-rank percentiles of `samples` (milliseconds). One sample
+/// degenerates to that sample across the board; empty input reads 0.
+pub fn percentiles(samples: &[f64]) -> Percentiles {
+    if samples.is_empty() {
+        return Percentiles { p50_ms: 0.0, p90_ms: 0.0, p99_ms: 0.0, max_ms: 0.0 };
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let at = |p: f64| {
+        let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+        sorted[idx.min(sorted.len() - 1)]
+    };
+    Percentiles {
+        p50_ms: at(50.0),
+        p90_ms: at(90.0),
+        p99_ms: at(99.0),
+        max_ms: sorted[sorted.len() - 1],
+    }
+}
+
+/// One harness phase: what ran, how long, and its chunk latencies.
+#[derive(Debug, Clone)]
+pub struct PhaseStats {
+    pub name: &'static str,
+    /// Work units processed (arrivals, events fired, …).
+    pub units: u64,
+    pub wall_secs: f64,
+    pub latency: Percentiles,
+}
+
+/// The engine microbench half of the harness.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineBench {
+    /// Events fired per engine (identical by construction, asserted).
+    pub events: u64,
+    pub calendar_events_per_sec: f64,
+    pub heap_events_per_sec: f64,
+    /// `calendar / heap` — the figure the calendar rewrite must keep
+    /// above 1.0 (target: >= 2x on the large trace).
+    pub speedup: f64,
+}
+
+/// Everything one `vhpc perf` run measured.
+#[derive(Debug, Clone)]
+pub struct PerfOutcome {
+    pub jobs: usize,
+    pub tenants: u64,
+    pub machines: u32,
+    pub shards: usize,
+    pub seed: u64,
+    /// Virtual seconds the arrival stream spans.
+    pub duration_secs: u64,
+    pub jobs_submitted: usize,
+    pub jobs_completed: u64,
+    /// Engine events fired by the cluster phase, all shards.
+    pub events: u64,
+    /// Cluster-phase events/sec — the headline (and gated) figure.
+    pub events_per_sec: f64,
+    pub makespan_secs: f64,
+    pub windows: u64,
+    pub arrivals_fingerprint: u64,
+    /// FNV-1a digest of the merged counter snapshot (same digest the
+    /// other sharded CLI drivers print).
+    pub counter_digest: u64,
+    pub counters: BTreeMap<String, u64>,
+    pub engine: EngineBench,
+    pub phases: Vec<PhaseStats>,
+}
+
+// ---------------------------------------------------------------------
+// Phase 1: arrival-stream synthesis
+// ---------------------------------------------------------------------
+
+/// Synthesize every arrival `pop` emits before `duration_secs` of
+/// virtual time, timing fixed-size chunks. This is the exact stream the
+/// cluster phase will submit — the conductor's pump keeps pulling while
+/// `at < horizon` and the generator emits in time order, so the same
+/// cut here reproduces its log arrival for arrival (the fingerprints
+/// are compared in [`run_perf_trace`]). Returns the stream and the
+/// phase stats.
+pub fn synth_arrivals(pop: PopulationSpec, duration_secs: u64) -> (Vec<JobArrival>, PhaseStats) {
+    let horizon = SimTime::from_secs(duration_secs);
+    let mut gen = ArrivalGen::new(pop);
+    let mut log = Vec::new();
+    let mut samples = Vec::new();
+    let t0 = Instant::now();
+    let mut next = gen.next();
+    while next.at < horizon {
+        let c0 = Instant::now();
+        let mut pulled = 0;
+        while pulled < ARRIVAL_CHUNK && next.at < horizon {
+            log.push(std::mem::replace(&mut next, gen.next()));
+            pulled += 1;
+        }
+        samples.push(c0.elapsed().as_secs_f64() * 1e3);
+    }
+    let stats = PhaseStats {
+        name: "arrivals",
+        units: log.len() as u64,
+        wall_secs: t0.elapsed().as_secs_f64(),
+        latency: percentiles(&samples),
+    };
+    (log, stats)
+}
+
+// ---------------------------------------------------------------------
+// Phase 2: engine microbench (calendar queue vs boxed-closure heap)
+// ---------------------------------------------------------------------
+
+/// Advance the walker's private LCG (Knuth MMIX constants).
+fn lcg(x: u64) -> u64 {
+    x.wrapping_mul(6_364_136_223_846_793_005).wrapping_add(1_442_695_040_888_963_407)
+}
+
+/// Map an LCG draw onto a delay that exercises every calendar path:
+/// mostly sub-second (in-bucket appends), a band of minutes (ring
+/// traversal), and a far tail (overflow map past the ring horizon).
+fn hop_delay(draw: u64) -> SimTime {
+    let pick = (draw >> 56) & 0xff;
+    let spread = (draw >> 8) & 0xffff_ffff;
+    if pick < 179 {
+        // ~70%: 0..1s
+        SimTime::from_nanos(spread % 1_000_000_000)
+    } else if pick < 243 {
+        // ~25%: 0..120s
+        SimTime::from_nanos((spread % 120_000) * 1_000_000)
+    } else {
+        // ~5%: 0..2000s — far beyond the 512-bucket ring
+        SimTime::from_millis(spread % 2_000_000)
+    }
+}
+
+/// The typed-event walker: no allocation per hop.
+struct Hop {
+    rng: u64,
+    hops_left: u32,
+}
+
+impl SimEvent<u64> for Hop {
+    fn fire(self, fired: &mut u64, eng: &mut Engine<u64, Hop>) {
+        *fired += 1;
+        if self.hops_left > 0 {
+            let rng = lcg(self.rng);
+            eng.schedule_after(hop_delay(rng), Hop { rng, hops_left: self.hops_left - 1 });
+        }
+    }
+}
+
+/// The same walker as a recursive boxed closure on the reference heap.
+fn heap_hop(fired: &mut u64, eng: &mut ClosureHeapEngine<u64>, rng: u64, hops_left: u32) {
+    *fired += 1;
+    if hops_left > 0 {
+        let rng = lcg(rng);
+        eng.schedule_after(hop_delay(rng), move |s, e| heap_hop(s, e, rng, hops_left - 1));
+    }
+}
+
+fn seed_walker(seed: u64, i: u32) -> (u64, SimTime) {
+    let rng = lcg(seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    (rng, hop_delay(rng))
+}
+
+fn run_calendar_round(seed: u64) -> (u64, f64) {
+    let mut eng: Engine<u64, Hop> = Engine::new();
+    let mut fired = 0u64;
+    let t0 = Instant::now();
+    for i in 0..ENGINE_WALKERS {
+        let (rng, at) = seed_walker(seed, i);
+        eng.schedule_at(at, Hop { rng, hops_left: ENGINE_HOPS });
+    }
+    eng.run_to_completion(&mut fired);
+    (fired, t0.elapsed().as_secs_f64())
+}
+
+fn run_heap_round(seed: u64) -> (u64, f64) {
+    let mut eng: ClosureHeapEngine<u64> = ClosureHeapEngine::new();
+    let mut fired = 0u64;
+    let t0 = Instant::now();
+    for i in 0..ENGINE_WALKERS {
+        let (rng, at) = seed_walker(seed, i);
+        eng.schedule_at(at, move |s: &mut u64, e| heap_hop(s, e, rng, ENGINE_HOPS));
+    }
+    eng.run_to_completion(&mut fired);
+    (fired, t0.elapsed().as_secs_f64())
+}
+
+/// Run the calendar engine and the reference heap over identical
+/// seeded hop schedules (interleaved rounds so neither side benefits
+/// from cache warm-up order) and compare events/sec. Returns the bench
+/// plus per-engine phase stats. Panics if the two engines disagree on
+/// the fired-event count — they execute the same schedule by
+/// construction, so a mismatch is an ordering bug the differential
+/// suite exists to catch.
+pub fn bench_engines(seed: u64) -> (EngineBench, PhaseStats, PhaseStats) {
+    let mut cal_events = 0u64;
+    let mut heap_events = 0u64;
+    let mut cal_secs = 0.0f64;
+    let mut heap_secs = 0.0f64;
+    let mut cal_samples = Vec::new();
+    let mut heap_samples = Vec::new();
+    for round in 0..ENGINE_ROUNDS {
+        let rseed = seed ^ ((round as u64 + 1) << 32);
+        let (hf, ht) = run_heap_round(rseed);
+        heap_events += hf;
+        heap_secs += ht;
+        heap_samples.push(ht * 1e3);
+        let (cf, ct) = run_calendar_round(rseed);
+        cal_events += cf;
+        cal_secs += ct;
+        cal_samples.push(ct * 1e3);
+        assert_eq!(
+            cf, hf,
+            "engine microbench diverged: calendar fired {cf}, heap fired {hf}"
+        );
+    }
+    let cal_eps = cal_events as f64 / cal_secs.max(1e-9);
+    let heap_eps = heap_events as f64 / heap_secs.max(1e-9);
+    let bench = EngineBench {
+        events: cal_events,
+        calendar_events_per_sec: cal_eps,
+        heap_events_per_sec: heap_eps,
+        speedup: cal_eps / heap_eps.max(1e-9),
+    };
+    let cal_stats = PhaseStats {
+        name: "engine_calendar",
+        units: cal_events,
+        wall_secs: cal_secs,
+        latency: percentiles(&cal_samples),
+    };
+    let heap_stats = PhaseStats {
+        name: "engine_heap",
+        units: heap_events,
+        wall_secs: heap_secs,
+        latency: percentiles(&heap_samples),
+    };
+    (bench, cal_stats, heap_stats)
+}
+
+// ---------------------------------------------------------------------
+// Phase 3: the sharded control-plane trace
+// ---------------------------------------------------------------------
+
+/// Shape `spec` into the perf fleet: `machines` nodes, fast boots, the
+/// whole pool pre-provisioned (min = max) so throughput measures the
+/// scheduler, not the autoscaler's ramp.
+pub fn perf_spec(mut spec: ClusterSpec, machines: u32, seed: u64) -> ClusterSpec {
+    spec.machines = machines.max(2);
+    spec.machine_spec.boot_time = SimTime::from_secs(5);
+    spec.autoscale.max_nodes = spec.machines - 1;
+    spec.autoscale.min_nodes = spec.autoscale.max_nodes;
+    spec.seed = seed;
+    spec
+}
+
+/// The population whose open-loop stream carries ~`jobs` arrivals in
+/// `duration_secs` of virtual time over `tenants` tenants.
+pub fn perf_population(jobs: usize, tenants: u64, seed: u64, duration_secs: u64) -> PopulationSpec {
+    let mut pop = PopulationSpec::new(tenants, seed);
+    pop.rate_per_sec = jobs as f64 / duration_secs.max(1) as f64;
+    pop
+}
+
+/// Run the whole harness: arrival synthesis, the engine microbench,
+/// then the sharded cluster trace. `duration_secs` is the virtual span
+/// of the arrival stream (the drain deadline is 4x that).
+pub fn run_perf_trace(
+    spec: ClusterSpec,
+    jobs: usize,
+    tenants: u64,
+    shards: usize,
+    seed: u64,
+    duration_secs: u64,
+) -> Result<PerfOutcome, String> {
+    let machines = spec.machines;
+    let pop = perf_population(jobs, tenants, seed, duration_secs);
+    let (stream, arrivals_stats) = synth_arrivals(pop, duration_secs);
+    let arrivals_fingerprint = stream_fingerprint(&stream);
+    drop(stream);
+
+    let (engine, cal_stats, heap_stats) = bench_engines(seed);
+
+    let cap_slots = spec.max_advertisable_slots();
+    if cap_slots == 0 {
+        return Err("cluster has no compute capacity (needs >= 2 machines)".into());
+    }
+    let warmup = (spec.autoscale.min_nodes * spec.slots_per_node).clamp(1, cap_slots);
+    let cfg = ShardRunConfig {
+        shards: shards.max(1),
+        warmup_slots: warmup,
+        deadline_secs: duration_secs.saturating_mul(4).max(3600),
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let o = run_sharded_tenants(
+        spec,
+        pop,
+        SchedulePolicy::fairshare(),
+        TenantQuotas::default(),
+        duration_secs,
+        &cfg,
+    )
+    .map_err(|e| e.to_string())?;
+    let cluster_secs = t0.elapsed().as_secs_f64().max(1e-9);
+    if o.arrivals_fingerprint != arrivals_fingerprint {
+        return Err(format!(
+            "arrival stream diverged between synthesis ({arrivals_fingerprint:016x}) \
+             and the cluster run ({:016x})",
+            o.arrivals_fingerprint
+        ));
+    }
+    let cluster_stats = PhaseStats {
+        name: "cluster",
+        units: o.events,
+        wall_secs: cluster_secs,
+        latency: percentiles(&[cluster_secs * 1e3]),
+    };
+    Ok(PerfOutcome {
+        jobs,
+        tenants,
+        machines,
+        shards: o.shards,
+        seed,
+        duration_secs,
+        jobs_submitted: o.jobs_submitted,
+        jobs_completed: o.jobs_completed,
+        events: o.events,
+        events_per_sec: o.events as f64 / cluster_secs,
+        makespan_secs: o.makespan_secs,
+        windows: o.windows,
+        arrivals_fingerprint,
+        counter_digest: fingerprint_digest(&o.fingerprint),
+        counters: o.fingerprint,
+        engine,
+        phases: vec![arrivals_stats, cal_stats, heap_stats, cluster_stats],
+    })
+}
+
+/// Order-stable FNV-1a digest of a merged counter snapshot — the same
+/// construction every sharded CLI driver prints, factored here so the
+/// JSON record and the console agree.
+pub fn fingerprint_digest(fp: &BTreeMap<String, u64>) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for (k, v) in fp {
+        for b in k.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        h ^= *v;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------
+// BENCH_perf.json (hand-rolled — no serde in the offline crate set)
+// ---------------------------------------------------------------------
+
+/// Render the outcome as the `BENCH_perf.json` record. The top-level
+/// `events_per_sec` key is the gated figure and deliberately comes
+/// first, so [`parse_events_per_sec`] reads it without a JSON parser.
+pub fn render_json(o: &PerfOutcome) -> String {
+    let mut j = String::from("{\n");
+    j.push_str("  \"bench\": \"perf\",\n");
+    j.push_str(&format!("  \"events_per_sec\": {:.0},\n", o.events_per_sec));
+    j.push_str(&format!("  \"jobs\": {},\n", o.jobs));
+    j.push_str(&format!("  \"tenants\": {},\n", o.tenants));
+    j.push_str(&format!("  \"machines\": {},\n", o.machines));
+    j.push_str(&format!("  \"shards\": {},\n", o.shards));
+    j.push_str(&format!("  \"seed\": {},\n", o.seed));
+    j.push_str(&format!("  \"duration_secs\": {},\n", o.duration_secs));
+    j.push_str(&format!("  \"jobs_submitted\": {},\n", o.jobs_submitted));
+    j.push_str(&format!("  \"jobs_completed\": {},\n", o.jobs_completed));
+    j.push_str(&format!("  \"events\": {},\n", o.events));
+    j.push_str(&format!("  \"windows\": {},\n", o.windows));
+    j.push_str(&format!("  \"makespan_secs\": {:.1},\n", o.makespan_secs));
+    j.push_str(&format!(
+        "  \"arrivals_fingerprint\": \"{:016x}\",\n",
+        o.arrivals_fingerprint
+    ));
+    j.push_str(&format!("  \"counter_digest\": \"{:016x}\",\n", o.counter_digest));
+    j.push_str("  \"engine\": {\n");
+    j.push_str(&format!("    \"events\": {},\n", o.engine.events));
+    j.push_str(&format!(
+        "    \"calendar_events_per_sec\": {:.0},\n",
+        o.engine.calendar_events_per_sec
+    ));
+    j.push_str(&format!(
+        "    \"heap_events_per_sec\": {:.0},\n",
+        o.engine.heap_events_per_sec
+    ));
+    j.push_str(&format!("    \"speedup\": {:.3}\n", o.engine.speedup));
+    j.push_str("  },\n");
+    j.push_str("  \"phases\": [\n");
+    for (i, p) in o.phases.iter().enumerate() {
+        j.push_str(&format!(
+            "    {{\"phase\": \"{}\", \"units\": {}, \"wall_secs\": {:.4}, \
+             \"p50_ms\": {:.3}, \"p90_ms\": {:.3}, \"p99_ms\": {:.3}, \"max_ms\": {:.3}}}{}\n",
+            p.name,
+            p.units,
+            p.wall_secs,
+            p.latency.p50_ms,
+            p.latency.p90_ms,
+            p.latency.p99_ms,
+            p.latency.max_ms,
+            if i + 1 < o.phases.len() { "," } else { "" }
+        ));
+    }
+    j.push_str("  ]\n}\n");
+    j
+}
+
+/// Pull the top-level `events_per_sec` out of a `BENCH_perf.json`
+/// (current or baseline). Key-prefix scan, not a JSON parser: the
+/// renderer guarantees the key is top-level and first, and nested keys
+/// like `calendar_events_per_sec` cannot match the quoted pattern.
+pub fn parse_events_per_sec(json: &str) -> Option<f64> {
+    let key = "\"events_per_sec\":";
+    let at = json.find(key)?;
+    let rest = json[at + key.len()..].trim_start();
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || matches!(c, '.' | '-' | '+' | 'e' | 'E')))
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_degenerate_and_ranked() {
+        let p = percentiles(&[]);
+        assert_eq!(p.p99_ms, 0.0);
+        let p = percentiles(&[7.0]);
+        assert_eq!((p.p50_ms, p.p99_ms, p.max_ms), (7.0, 7.0, 7.0));
+        let samples: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let p = percentiles(&samples);
+        assert_eq!(p.p50_ms, 50.0);
+        assert_eq!(p.p90_ms, 90.0);
+        assert_eq!(p.p99_ms, 98.0);
+        assert_eq!(p.max_ms, 100.0);
+    }
+
+    /// The two engines must fire identical event counts on the shared
+    /// seeded schedule — the microbench's own sanity check, at a size
+    /// small enough for the unit suite.
+    #[test]
+    fn engine_microbench_rounds_agree() {
+        for seed in [1u64, 42, 0xDEAD_BEEF] {
+            let (cf, _) = run_calendar_round(seed);
+            let (hf, _) = run_heap_round(seed);
+            assert_eq!(cf, hf, "seed {seed}");
+            assert_eq!(cf, (ENGINE_WALKERS as u64) * (ENGINE_HOPS as u64 + 1));
+        }
+    }
+
+    #[test]
+    fn hop_delay_spans_all_calendar_paths() {
+        let (mut short, mut mid, mut far) = (0u32, 0u32, 0u32);
+        let mut rng = 99u64;
+        for _ in 0..4096 {
+            rng = lcg(rng);
+            let d = hop_delay(rng);
+            if d < SimTime::from_secs(1) {
+                short += 1;
+            } else if d < SimTime::from_secs(120) {
+                mid += 1;
+            } else {
+                far += 1;
+            }
+        }
+        assert!(short > 2000, "sub-second draws dominate: {short}");
+        assert!(mid > 300, "ring-range draws present: {mid}");
+        assert!(far > 50, "overflow-range draws present: {far}");
+    }
+
+    #[test]
+    fn json_roundtrips_the_gated_figure() {
+        let o = PerfOutcome {
+            jobs: 10,
+            tenants: 2,
+            machines: 4,
+            shards: 1,
+            seed: 7,
+            duration_secs: 60,
+            jobs_submitted: 10,
+            jobs_completed: 10,
+            events: 1234,
+            events_per_sec: 56789.0,
+            makespan_secs: 61.5,
+            windows: 70,
+            arrivals_fingerprint: 0xABCD,
+            counter_digest: 0x1234,
+            counters: BTreeMap::new(),
+            engine: EngineBench {
+                events: 100,
+                calendar_events_per_sec: 2e6,
+                heap_events_per_sec: 1e6,
+                speedup: 2.0,
+            },
+            phases: vec![PhaseStats {
+                name: "arrivals",
+                units: 10,
+                wall_secs: 0.01,
+                latency: percentiles(&[1.0, 2.0]),
+            }],
+        };
+        let json = render_json(&o);
+        assert_eq!(parse_events_per_sec(&json), Some(56789.0));
+        // the nested engine figures must not shadow the gated key
+        assert!(json.find("\"events_per_sec\"").unwrap() < json.find("calendar_events_per_sec").unwrap());
+    }
+
+    /// End-to-end smoke at unit-test scale: the harness runs, the
+    /// stream fingerprint matches between synthesis and the cluster
+    /// run, and the JSON renders with all four phases.
+    #[test]
+    fn tiny_perf_trace_runs_and_renders() {
+        let spec = perf_spec(ClusterSpec::paper_testbed(), 4, 11);
+        let o = run_perf_trace(spec, 40, 8, 1, 11, 120).expect("perf trace");
+        // the open-loop stream targets ~40 arrivals over the horizon;
+        // the exact count is whatever the seeded generator emits
+        assert!(
+            o.jobs_submitted > 0 && o.jobs_submitted < 400,
+            "stream size near the target: {}",
+            o.jobs_submitted
+        );
+        assert!(o.jobs_completed > 0);
+        assert!(o.events > 0);
+        assert!(o.events_per_sec > 0.0);
+        assert_eq!(o.phases.len(), 4);
+        let json = render_json(&o);
+        assert_eq!(parse_events_per_sec(&json), Some(o.events_per_sec.round()));
+    }
+}

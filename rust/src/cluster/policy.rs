@@ -35,10 +35,16 @@
 //! switches reservation carving from hostfile order (width-only) to
 //! [`carve_topo`], which packs a job onto the fewest racks, then the
 //! fewest hosts — cutting the cross-rack traffic the interconnect
-//! benches charge for. The scheduler recomputes every decision from
-//! live state (nothing is cached), so a fault that kills a running job
+//! benches charge for. [`SchedulePolicy::decide`] itself is pure: it
+//! holds no state between calls, so a fault that kills a running job
 //! implicitly invalidates any reservation derived from its predicted
-//! finish — the next dispatch attempt sees the new truth.
+//! finish — the next dispatch attempt sees the new truth. The *queue
+//! view* handed to it is memoized by the head behind a dirty flag
+//! (invalidated on every submit/dispatch/requeue/preempt/quota change,
+//! with per-tenant usage refreshed in place when only the ledger or
+//! the clock moved — see `Head::refresh_queue_view`); the memoized
+//! view is bit-identical to the one the head historically rebuilt per
+//! decision, so caching changes cost, never outcomes.
 
 use crate::mpi::hostfile::HostSlot;
 use crate::sim::SimTime;

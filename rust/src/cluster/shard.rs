@@ -33,7 +33,7 @@ use crate::cluster::mix::JobReq;
 use crate::cluster::policy::SchedulePolicy;
 use crate::config::ClusterSpec;
 use crate::sim::partition::{run_lockstep, Outbox, Partitioned, ShardPlan};
-use crate::sim::{Engine, SimTime};
+use crate::sim::{Engine, SimEvent, SimTime};
 use crate::tenancy::arrivals::{stream_fingerprint, ArrivalGen, JobArrival, PopulationSpec};
 use crate::tenancy::ledger::TenantQuotas;
 use crate::util::ids::JobId;
@@ -314,62 +314,113 @@ fn sweep(grid: &mut [f32], n: usize) {
     }
 }
 
-fn heartbeat_event(
-    machine: u32,
-    generation: u32,
-) -> impl FnOnce(&mut ShardCore, &mut Engine<ShardCore>) + 'static {
-    move |core, eng| {
-        if core.draining {
-            return;
-        }
-        let alive = core
-            .nodes
-            .get(&machine)
-            .map(|nd| nd.status == NodeStatus::Up && nd.generation == generation)
-            .unwrap_or(false);
-        if !alive {
-            return;
-        }
-        let seq = eng.now().as_nanos() / HEARTBEAT.as_nanos().max(1);
-        core.bump("gossip_tx", 1);
-        if let Some(peer) = core.gossip_peer(machine, seq) {
-            let bytes = 64 + ((machine as u64) * 131 + seq * 17) % 192;
-            let to_rank = core.plan.shard_of(peer) + 1;
-            let at = eng.now();
-            core.send(to_rank, ShardMsg::Gossip { at, from: machine, to: peer, bytes });
-        }
-        eng.schedule_after(HEARTBEAT, heartbeat_event(machine, generation));
-    }
+/// Shard-local engine events: the typed, allocation-free form of what
+/// used to be boxed closures. Timer identity (machine + boot
+/// generation, job + attempt) is carried in the variant fields so a
+/// stale timer fences itself against the current state.
+enum ShardEvent {
+    /// Periodic heartbeat + gossip for `machine`, alive only while the
+    /// node stays `Up` in the same boot `generation`.
+    Heartbeat { machine: u32, generation: u32 },
+    /// The boot pipeline finished (scheduled at boot time + jitter).
+    BootDone { machine: u32, generation: u32 },
+    /// Per-window Jacobi sweeps for attempt `attempt` of job `id`.
+    ComputeTick { id: JobId, attempt: u32 },
+    /// Attempt `attempt` of job `id` ran its full duration.
+    JobDone { id: JobId, attempt: u32 },
+    /// A crashed node's health TTL ran out.
+    TtlExpired,
 }
 
-fn compute_tick(
-    id: JobId,
-    attempt: u32,
-) -> impl FnOnce(&mut ShardCore, &mut Engine<ShardCore>) + 'static {
-    move |core, eng| {
-        let sweeps = core.compute.sweeps_per_tick;
-        let alive = match core.jobs.get_mut(&id) {
-            Some(run) if run.attempt == attempt => {
-                let n = run.n;
-                for _ in 0..sweeps {
-                    sweep(&mut run.grid, n);
+impl SimEvent<ShardCore> for ShardEvent {
+    fn fire(self, core: &mut ShardCore, eng: &mut Engine<ShardCore, ShardEvent>) {
+        match self {
+            ShardEvent::Heartbeat { machine, generation } => {
+                if core.draining {
+                    return;
                 }
-                true
+                let alive = core
+                    .nodes
+                    .get(&machine)
+                    .map(|nd| nd.status == NodeStatus::Up && nd.generation == generation)
+                    .unwrap_or(false);
+                if !alive {
+                    return;
+                }
+                let seq = eng.now().as_nanos() / HEARTBEAT.as_nanos().max(1);
+                core.bump("gossip_tx", 1);
+                if let Some(peer) = core.gossip_peer(machine, seq) {
+                    let bytes = 64 + ((machine as u64) * 131 + seq * 17) % 192;
+                    let to_rank = core.plan.shard_of(peer) + 1;
+                    let at = eng.now();
+                    core.send(to_rank, ShardMsg::Gossip { at, from: machine, to: peer, bytes });
+                }
+                eng.schedule_after(HEARTBEAT, ShardEvent::Heartbeat { machine, generation });
             }
-            _ => false,
-        };
-        if alive {
-            core.bump("shard_sweeps", sweeps as u64);
-            let window = core.window;
-            eng.schedule_after(window, compute_tick(id, attempt));
+            ShardEvent::BootDone { machine, generation } => {
+                let now = eng.now();
+                let up = match core.nodes.get_mut(&machine) {
+                    Some(nd)
+                        if nd.status == NodeStatus::Booting && nd.generation == generation =>
+                    {
+                        nd.status = NodeStatus::Up;
+                        true
+                    }
+                    _ => false,
+                };
+                if up {
+                    core.send(0, ShardMsg::Ready { at: now, machine });
+                    eng.schedule_after(
+                        HEARTBEAT,
+                        ShardEvent::Heartbeat { machine, generation },
+                    );
+                }
+            }
+            ShardEvent::ComputeTick { id, attempt } => {
+                let sweeps = core.compute.sweeps_per_tick;
+                let alive = match core.jobs.get_mut(&id) {
+                    Some(run) if run.attempt == attempt => {
+                        let n = run.n;
+                        for _ in 0..sweeps {
+                            sweep(&mut run.grid, n);
+                        }
+                        true
+                    }
+                    _ => false,
+                };
+                if alive {
+                    core.bump("shard_sweeps", sweeps as u64);
+                    let window = core.window;
+                    eng.schedule_after(window, ShardEvent::ComputeTick { id, attempt });
+                }
+            }
+            ShardEvent::JobDone { id, attempt } => {
+                let now = eng.now();
+                let done = match core.jobs.get(&id) {
+                    Some(run) if run.attempt == attempt => {
+                        let probe = run.grid[run.n * run.n / 2];
+                        Some(probe.to_bits())
+                    }
+                    _ => None,
+                };
+                if let Some(residual_bits) = done {
+                    core.jobs.remove(&id);
+                    core.bump("shard_jobs_done", 1);
+                    core.send(0, ShardMsg::Done { at: now, id, attempt, residual_bits });
+                }
+            }
+            ShardEvent::TtlExpired => {
+                core.bump("ttl_expired", 1);
+            }
         }
     }
 }
 
-/// One shard: an [`Engine`] over [`ShardCore`].
+/// One shard: an [`Engine`] over [`ShardCore`], driven by
+/// [`ShardEvent`]s.
 struct ShardSim {
     core: ShardCore,
-    eng: Engine<ShardCore>,
+    eng: Engine<ShardCore, ShardEvent>,
     counters_sent: bool,
 }
 
@@ -410,35 +461,15 @@ impl ShardSim {
                         .insert(machine, Node { status: NodeStatus::Booting, generation });
                     self.core.bump("nodes_booted", 1);
                     let done_at = at + self.core.boot_time + jitter;
-                    self.eng.schedule_at(done_at, move |core: &mut ShardCore, eng| {
-                        let now = eng.now();
-                        let up = match core.nodes.get_mut(&machine) {
-                            Some(nd)
-                                if nd.status == NodeStatus::Booting
-                                    && nd.generation == generation =>
-                            {
-                                nd.status = NodeStatus::Up;
-                                true
-                            }
-                            _ => false,
-                        };
-                        if up {
-                            core.send(0, ShardMsg::Ready { at: now, machine });
-                            eng.schedule_after(HEARTBEAT, heartbeat_event(machine, generation));
-                        }
-                    });
+                    self.eng
+                        .schedule_at(done_at, ShardEvent::BootDone { machine, generation });
                 }
                 ShardMsg::Kill { at, machine } => {
                     if let Some(nd) = self.core.nodes.get_mut(&machine) {
                         if matches!(nd.status, NodeStatus::Booting | NodeStatus::Up) {
                             nd.status = NodeStatus::Dead;
                             self.core.bump("nodes_crashed_shard", 1);
-                            self.eng.schedule_at(
-                                at + HEALTH_TTL,
-                                move |core: &mut ShardCore, _| {
-                                    core.bump("ttl_expired", 1);
-                                },
-                            );
+                            self.eng.schedule_at(at + HEALTH_TTL, ShardEvent::TtlExpired);
                         }
                     }
                 }
@@ -457,25 +488,9 @@ impl ShardSim {
                         .jobs
                         .insert(id, JobRun { attempt, grid: init_grid(id, n), n });
                     self.core.bump("jobs_launched_shard", 1);
-                    self.eng.schedule_at(at, compute_tick(id, attempt));
-                    self.eng.schedule_at(at + duration, move |core: &mut ShardCore, eng| {
-                        let now = eng.now();
-                        let done = match core.jobs.get(&id) {
-                            Some(run) if run.attempt == attempt => {
-                                let probe = run.grid[run.n * run.n / 2];
-                                Some(probe.to_bits())
-                            }
-                            _ => None,
-                        };
-                        if let Some(residual_bits) = done {
-                            core.jobs.remove(&id);
-                            core.bump("shard_jobs_done", 1);
-                            core.send(
-                                0,
-                                ShardMsg::Done { at: now, id, attempt, residual_bits },
-                            );
-                        }
-                    });
+                    self.eng.schedule_at(at, ShardEvent::ComputeTick { id, attempt });
+                    self.eng
+                        .schedule_at(at + duration, ShardEvent::JobDone { id, attempt });
                 }
                 ShardMsg::CancelJob { at: _, id, attempt } => {
                     let cancel = matches!(

@@ -29,7 +29,7 @@ use crate::hw::PowerState;
 use crate::mpi::hostfile::Hostfile;
 use crate::mpi::launcher::LaunchPlan;
 use crate::runtime::Runtime;
-use crate::sim::{Engine, SimTime};
+use crate::sim::{Engine, SimEvent, SimTime};
 use crate::util::ids::{AgentId, ContainerId, JobId, MachineId};
 use crate::vnet::addr::Ipv4;
 use crate::vnet::fabric::Fabric;
@@ -101,10 +101,75 @@ pub struct ClusterState {
 /// The facade: state + event engine.
 pub struct VirtualCluster {
     pub state: ClusterState,
-    engine: Engine<ClusterState>,
+    engine: Engine<ClusterState, ClusterEvent>,
 }
 
-type Ev = Engine<ClusterState>;
+/// Every event the cluster's control plane schedules, as plain data:
+/// the calendar-queue engine stores these inline (no per-event heap
+/// allocation, unlike the boxed closures they replaced). Variants fire
+/// the exact same handler functions the closures called, in the same
+/// `(time, seq)` order, so every determinism fingerprint is unchanged.
+#[derive(Debug, Clone)]
+pub enum ClusterEvent {
+    /// consul-template's periodic hostfile render.
+    TemplatePoll,
+    /// The head's 1 s scheduling tick (reap lost jobs, dispatch).
+    SchedulerTick,
+    /// The autoscaler's periodic observe/decide cycle.
+    AutoscaleTick,
+    /// Machine BIOS+kernel boot finished.
+    BootDone(MachineId),
+    /// dockerd is up on the machine.
+    EngineUp(MachineId),
+    /// The node container finished pull+start and has its address.
+    ContainerUp { machine: MachineId, container: ContainerId, ip: Ipv4 },
+    /// A node agent's TTL refresh.
+    Heartbeat(MachineId),
+    /// A running attempt's predicted completion (epoch-fenced).
+    JobDone { id: JobId, attempt: u32, epoch: u64 },
+    /// One expanded fault-plan entry firing through the injector.
+    Fault(crate::faults::FaultKind),
+    /// Heal timer for the gossip partition with this epoch token.
+    HealPartition(u64),
+    /// Heal timer for the partial partition with this epoch token.
+    HealPartialPartition(u64),
+    /// The HA standby's lease-watch poll.
+    StandbyMonitor,
+    /// One poll after a multi-standby CAS claim round: read the winner.
+    ConcludeClaim,
+}
+
+impl SimEvent<ClusterState> for ClusterEvent {
+    fn fire(self, st: &mut ClusterState, eng: &mut Ev) {
+        match self {
+            ClusterEvent::TemplatePoll => VirtualCluster::template_poll_event(st, eng),
+            ClusterEvent::SchedulerTick => VirtualCluster::scheduler_event(st, eng),
+            ClusterEvent::AutoscaleTick => VirtualCluster::autoscale_event(st, eng),
+            ClusterEvent::BootDone(m) => VirtualCluster::boot_done(st, eng, m),
+            ClusterEvent::EngineUp(m) => VirtualCluster::engine_up(st, eng, m),
+            ClusterEvent::ContainerUp { machine, container, ip } => {
+                VirtualCluster::container_up(st, eng, machine, container, ip)
+            }
+            ClusterEvent::Heartbeat(m) => {
+                VirtualCluster::heartbeat(st, eng, m, m.raw() as usize)
+            }
+            ClusterEvent::JobDone { id, attempt, epoch } => {
+                VirtualCluster::job_done(st, eng, id, attempt, epoch)
+            }
+            ClusterEvent::Fault(kind) => crate::faults::injector::apply(st, eng, &kind),
+            ClusterEvent::HealPartition(epoch) => {
+                VirtualCluster::chaos_heal_partition(st, epoch)
+            }
+            ClusterEvent::HealPartialPartition(epoch) => {
+                VirtualCluster::chaos_heal_partial_partition(st, epoch)
+            }
+            ClusterEvent::StandbyMonitor => crate::ha::failover::standby_monitor(st, eng),
+            ClusterEvent::ConcludeClaim => crate::ha::failover::conclude_claim(st, eng),
+        }
+    }
+}
+
+type Ev = Engine<ClusterState, ClusterEvent>;
 
 impl VirtualCluster {
     pub fn new(spec: ClusterSpec) -> Result<Self> {
@@ -195,11 +260,11 @@ impl VirtualCluster {
         }
         // control loops
         let poll = self.state.head.poll_interval;
-        self.engine.schedule_after(poll, Self::template_poll_event);
+        self.engine.schedule_after(poll, ClusterEvent::TemplatePoll);
         self.engine
-            .schedule_after(SimTime::from_secs(1), Self::scheduler_event);
+            .schedule_after(SimTime::from_secs(1), ClusterEvent::SchedulerTick);
         let interval = self.state.spec.autoscale.interval;
-        self.engine.schedule_after(interval, Self::autoscale_event);
+        self.engine.schedule_after(interval, ClusterEvent::AutoscaleTick);
         if self.state.ha.config.enabled {
             // leadership lease + leader record + the standby's monitor
             crate::ha::failover::install(&mut self.state, &mut self.engine);
@@ -248,7 +313,7 @@ impl VirtualCluster {
         st.node_states[idx] = NodeState::Booting;
         st.provision_started[idx] = Some(eng.now());
         st.metrics.inc("machines_powered_on");
-        eng.schedule_after(boot, move |st, eng| Self::boot_done(st, eng, m));
+        eng.schedule_after(boot, ClusterEvent::BootDone(m));
     }
 
     fn boot_done(st: &mut ClusterState, eng: &mut Ev, m: MachineId) {
@@ -261,9 +326,7 @@ impl VirtualCluster {
         }
         st.node_states[idx] = NodeState::StartingEngine;
         // dockerd startup
-        eng.schedule_after(SimTime::from_secs(2), move |st, eng| {
-            Self::engine_up(st, eng, m)
-        });
+        eng.schedule_after(SimTime::from_secs(2), ClusterEvent::EngineUp(m));
     }
 
     fn engine_up(st: &mut ClusterState, eng: &mut Ev, m: MachineId) {
@@ -320,9 +383,10 @@ impl VirtualCluster {
         st.containers[idx] = Some(cid);
         st.ip_to_container.insert(ip, cid);
         st.fabric.lock().unwrap_or_else(|e| e.into_inner()).place(cid, m);
-        eng.schedule_after(receipt.total(), move |st, eng| {
-            Self::container_up(st, eng, m, cid, ip)
-        });
+        eng.schedule_after(
+            receipt.total(),
+            ClusterEvent::ContainerUp { machine: m, container: cid, ip },
+        );
     }
 
     fn container_up(st: &mut ClusterState, eng: &mut Ev, m: MachineId, cid: ContainerId, ip: Ipv4) {
@@ -365,7 +429,7 @@ impl VirtualCluster {
         let ttl = st.health_ttl;
         eng.schedule_after(
             SimTime::from_nanos(ttl.as_nanos() / 3),
-            move |st, eng| Self::heartbeat(st, eng, m, idx),
+            ClusterEvent::Heartbeat(m),
         );
     }
 
@@ -421,7 +485,7 @@ impl VirtualCluster {
         let ttl = st.health_ttl;
         eng.schedule_after(
             SimTime::from_nanos(ttl.as_nanos() / 3),
-            move |st, eng| Self::heartbeat(st, eng, m, idx),
+            ClusterEvent::Heartbeat(m),
         );
     }
 
@@ -434,7 +498,7 @@ impl VirtualCluster {
             Self::refresh_hostfile(st, eng.now());
         }
         let poll = st.head.poll_interval;
-        eng.schedule_after(poll, Self::template_poll_event);
+        eng.schedule_after(poll, ClusterEvent::TemplatePoll);
     }
 
     pub(crate) fn refresh_hostfile(st: &mut ClusterState, now: SimTime) {
@@ -463,7 +527,7 @@ impl VirtualCluster {
                 // the head process is down: nothing schedules until the
                 // standby takes over, but the tick keeps itself armed so
                 // the loop resumes on the replayed head
-                eng.schedule_after(SimTime::from_secs(1), Self::scheduler_event);
+                eng.schedule_after(SimTime::from_secs(1), ClusterEvent::SchedulerTick);
                 return;
             }
             // the active head's leadership lease: the refreshes stop the
@@ -473,7 +537,7 @@ impl VirtualCluster {
         Self::reap_lost_jobs(st, eng);
         Self::dispatch_jobs(st, eng);
         crate::ha::wal::flush(st);
-        eng.schedule_after(SimTime::from_secs(1), Self::scheduler_event);
+        eng.schedule_after(SimTime::from_secs(1), ClusterEvent::SchedulerTick);
     }
 
     /// Recovery pipeline, detection step: cross-check every running
@@ -612,9 +676,7 @@ impl VirtualCluster {
         st.metrics.observe("concurrent_jobs", st.head.running.len() as f64);
         let attempt = started.attempt;
         let epoch = st.ha.epoch;
-        eng.schedule_after(duration, move |st: &mut ClusterState, eng: &mut Ev| {
-            Self::job_done(st, eng, id, attempt, epoch);
-        });
+        eng.schedule_after(duration, ClusterEvent::JobDone { id, attempt, epoch });
         true
     }
 
@@ -709,7 +771,7 @@ impl VirtualCluster {
             // it has no demand signal, so decisions freeze until the
             // standby takes over (the loop keeps itself armed)
             let interval = st.spec.spec_autoscale_interval();
-            eng.schedule_after(interval, Self::autoscale_event);
+            eng.schedule_after(interval, ClusterEvent::AutoscaleTick);
             return;
         }
         // capacity is health-gated: a Ready node whose check went
@@ -802,7 +864,7 @@ impl VirtualCluster {
         }
         crate::ha::wal::flush(st);
         let interval = st.spec.spec_autoscale_interval();
-        eng.schedule_after(interval, Self::autoscale_event);
+        eng.schedule_after(interval, ClusterEvent::AutoscaleTick);
     }
 
     fn retire_node(st: &mut ClusterState, now: SimTime, m: MachineId) {
@@ -1127,10 +1189,7 @@ impl VirtualCluster {
         let events = plan.expanded();
         let n = events.len() as u64;
         for ev in events {
-            let kind = ev.kind;
-            self.engine.schedule_after(ev.at, move |st: &mut ClusterState, eng: &mut Ev| {
-                crate::faults::injector::apply(st, eng, &kind);
-            });
+            self.engine.schedule_after(ev.at, ClusterEvent::Fault(ev.kind));
         }
         self.state.metrics.add("faults_scheduled", n);
     }

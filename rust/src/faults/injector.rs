@@ -8,7 +8,7 @@
 //! budgets. Everything runs inside the deterministic event engine, so a
 //! seeded plan always replays the same way.
 
-use crate::cluster::vcluster::{ClusterState, VirtualCluster};
+use crate::cluster::vcluster::{ClusterEvent, ClusterState, VirtualCluster};
 use crate::faults::plan::FaultKind;
 use crate::sim::Engine;
 use crate::util::ids::MachineId;
@@ -16,7 +16,7 @@ use crate::util::ids::MachineId;
 /// Apply one fault to the cluster. Faults aimed at machine 0 (the head)
 /// or out-of-range machines are ignored — chaos never decapitates the
 /// control plane.
-pub fn apply(st: &mut ClusterState, eng: &mut Engine<ClusterState>, kind: &FaultKind) {
+pub fn apply(st: &mut ClusterState, eng: &mut Engine<ClusterState, ClusterEvent>, kind: &FaultKind) {
     match kind {
         FaultKind::Crash { machine } => {
             if target_ok(st, *machine) {
@@ -41,13 +41,7 @@ pub fn apply(st: &mut ClusterState, eng: &mut Engine<ClusterState>, kind: &Fault
                 // the heal timer carries the partition's epoch: if a later
                 // partition replaces this split, the stale timer is a no-op
                 // and the newer partition runs its full duration
-                let d = *duration;
-                eng.schedule_after(
-                    d,
-                    move |st: &mut ClusterState, _eng: &mut Engine<ClusterState>| {
-                        VirtualCluster::chaos_heal_partition(st, epoch);
-                    },
-                );
+                eng.schedule_after(*duration, ClusterEvent::HealPartition(epoch));
             }
         }
         FaultKind::DeployFail { machine, failures } => {
@@ -60,13 +54,7 @@ pub fn apply(st: &mut ClusterState, eng: &mut Engine<ClusterState>, kind: &Fault
             if let Some(epoch) = VirtualCluster::chaos_partial_partition(st, &safe, servers) {
                 // epoch-guarded heal, exactly like the full partition: a
                 // later partial partition invalidates this timer
-                let d = *duration;
-                eng.schedule_after(
-                    d,
-                    move |st: &mut ClusterState, _eng: &mut Engine<ClusterState>| {
-                        VirtualCluster::chaos_heal_partial_partition(st, epoch);
-                    },
-                );
+                eng.schedule_after(*duration, ClusterEvent::HealPartialPartition(epoch));
             }
         }
         // the head *process* crash: machine 0 stays up, only the

@@ -27,7 +27,7 @@
 //!   same head, one process later.
 
 use crate::cluster::head::{Head, JobState};
-use crate::cluster::vcluster::{ClusterState, VirtualCluster};
+use crate::cluster::vcluster::{ClusterEvent, ClusterState, VirtualCluster};
 use crate::consul::health::CheckStatus;
 use crate::consul::raft::Command;
 use crate::consul::ConsulCluster;
@@ -93,7 +93,7 @@ impl HaState {
 /// Arm the HA machinery at cluster start: register the head's lease,
 /// record epoch 0 in the KV leadership key, and start the standby
 /// monitor loop.
-pub(crate) fn install(st: &mut ClusterState, eng: &mut Engine<ClusterState>) {
+pub(crate) fn install(st: &mut ClusterState, eng: &mut Engine<ClusterState, ClusterEvent>) {
     let now = st.consul.now();
     st.consul
         .health
@@ -103,14 +103,14 @@ pub(crate) fn install(st: &mut ClusterState, eng: &mut Engine<ClusterState>) {
         value: format!("epoch 0 at {}", now.as_nanos()),
     });
     let poll = st.ha.config.standby_poll;
-    eng.schedule_after(poll, standby_monitor);
+    eng.schedule_after(poll, ClusterEvent::StandbyMonitor);
 }
 
 /// The standby's monitor loop: watch the active head's lease; once the
 /// head is down *and* the lease has expired, take over. The double
 /// condition mirrors a real lock — a healthy head's lease never
 /// expires, and a dead head cannot refresh.
-pub(crate) fn standby_monitor(st: &mut ClusterState, eng: &mut Engine<ClusterState>) {
+pub(crate) fn standby_monitor(st: &mut ClusterState, eng: &mut Engine<ClusterState, ClusterEvent>) {
     if !st.ha.config.enabled {
         return;
     }
@@ -128,7 +128,7 @@ pub(crate) fn standby_monitor(st: &mut ClusterState, eng: &mut Engine<ClusterSta
         }
     }
     let poll = st.ha.config.standby_poll;
-    eng.schedule_after(poll, standby_monitor);
+    eng.schedule_after(poll, ClusterEvent::StandbyMonitor);
 }
 
 fn claim_token(standby: u32, epoch: u64, now: SimTime) -> String {
@@ -149,7 +149,7 @@ fn parse_claim(value: &str) -> Option<u32> {
 /// match, so the first claim flips the record and every later one
 /// no-ops — exactly one standby wins, on every replica, regardless of
 /// arrival order.
-pub(crate) fn start_claim(st: &mut ClusterState, eng: &mut Engine<ClusterState>) {
+pub(crate) fn start_claim(st: &mut ClusterState, eng: &mut Engine<ClusterState, ClusterEvent>) {
     let now = eng.now();
     let expected = st.consul.kv().get(LEADER_KEY).map(String::from);
     let epoch = st.ha.epoch + 1;
@@ -164,13 +164,13 @@ pub(crate) fn start_claim(st: &mut ClusterState, eng: &mut Engine<ClusterState>)
     st.metrics
         .add("ha_claims_submitted", st.ha.config.standbys as u64);
     let poll = st.ha.config.standby_poll;
-    eng.schedule_after(poll, conclude_claim);
+    eng.schedule_after(poll, ClusterEvent::ConcludeClaim);
 }
 
 /// One poll after the claims went in: the raft quorum has committed
 /// them, the leadership record names the winner. The winner promotes;
 /// the losers count their loss and re-enter the monitor loop.
-pub(crate) fn conclude_claim(st: &mut ClusterState, eng: &mut Engine<ClusterState>) {
+pub(crate) fn conclude_claim(st: &mut ClusterState, eng: &mut Engine<ClusterState, ClusterEvent>) {
     st.consul.advance(eng.now());
     st.ha.claiming = false;
     let standbys = st.ha.config.standbys;
@@ -203,41 +203,63 @@ fn read_log(consul: &ConsulCluster) -> (Option<HeadDump>, Vec<WalEvent>, u64) {
         }
         None => (None, 0),
     };
-    let mut events: Vec<(u64, WalEvent)> = Vec::new();
+    let (events, decode_errors) = decode_wal_listing(&kv.list_prefix(WAL_PREFIX), start_seq);
+    (dump, events, decode_errors)
+}
+
+/// Decode a key-sorted WAL listing into replayable events, skipping
+/// entries below `start_seq` (covered by the snapshot but not yet
+/// truncated). Returns the events plus a decode-error count.
+///
+/// One KV entry is one flush batch: the newline-joined mutations of a
+/// single engine event (a lone event for the direct-append path), so
+/// decoding walks line by line, in order. A corrupt record truncates
+/// the log HERE — the bad line and everything after it, including
+/// every later batch: replaying past a hole could resurrect state the
+/// durable log cannot vouch for (e.g. re-dispatch a job whose
+/// Dispatched entry was lost, double-running it). A batch torn
+/// mid-write therefore replays as a clean prefix of one engine event's
+/// mutations, never as a prefix with later events spliced behind the
+/// tear. Nothing in the simulation corrupts the KV — this is the
+/// recovery posture, not a live code path.
+///
+/// Factored out of [`read_log`] so the batch-boundary crash tests can
+/// drive it against deliberately torn listings.
+#[doc(hidden)]
+pub fn decode_wal_listing(entries: &[(&str, &str)], start_seq: u64) -> (Vec<WalEvent>, u64) {
+    let mut events: Vec<(u64, u64, WalEvent)> = Vec::new();
     let mut decode_errors = 0u64;
-    // list_prefix is key-sorted and keys are zero-padded, so this walks
-    // the log in sequence order
-    for (key, value) in kv.list_prefix(WAL_PREFIX) {
+    // the caller's listing is key-sorted and keys are zero-padded, so
+    // this walks the log in sequence order
+    'entries: for (key, value) in entries {
         let seq: u64 = match key[WAL_PREFIX.len()..].parse() {
             Ok(s) => s,
             Err(_) => continue,
         };
         if seq < start_seq {
-            continue; // covered by the snapshot but not yet truncated
+            continue;
         }
-        match WalEvent::decode(value) {
-            Ok(ev) => events.push((seq, ev)),
-            Err(e) => {
-                // A corrupt record truncates the log HERE: replaying
-                // past a hole could resurrect state the durable log
-                // cannot vouch for (e.g. re-dispatch a job whose
-                // Dispatched entry was lost, double-running it).
-                // Nothing in the simulation corrupts the KV — this is
-                // the recovery posture, not a live code path.
-                decode_errors += 1;
-                log::error!("ha: corrupt wal entry {key}, truncating replay: {e}");
-                break;
+        for (line_no, line) in value.lines().enumerate() {
+            match WalEvent::decode(line) {
+                Ok(ev) => events.push((seq, line_no as u64, ev)),
+                Err(e) => {
+                    decode_errors += 1;
+                    log::error!(
+                        "ha: corrupt wal entry {key} line {line_no}, truncating replay: {e}"
+                    );
+                    break 'entries;
+                }
             }
         }
     }
-    events.sort_by_key(|&(seq, _)| seq);
-    (dump, events.into_iter().map(|(_, ev)| ev).collect(), decode_errors)
+    events.sort_by_key(|&(seq, line, _)| (seq, line));
+    (events.into_iter().map(|(_, _, ev)| ev).collect(), decode_errors)
 }
 
 /// Promote the standby: rebuild the head from snapshot + WAL, install
 /// it, fence the dead epoch, re-render derived state and re-arm
 /// completion timers for the work that kept running through the outage.
-pub(crate) fn takeover(st: &mut ClusterState, eng: &mut Engine<ClusterState>) {
+pub(crate) fn takeover(st: &mut ClusterState, eng: &mut Engine<ClusterState, ClusterEvent>) {
     let now = eng.now();
     st.consul.advance(now);
     let (dump, events, decode_errors) = read_log(&st.consul);
@@ -353,9 +375,7 @@ pub(crate) fn takeover(st: &mut ClusterState, eng: &mut Engine<ClusterState>) {
     crate::ha::wal::flush(st);
     rearm.sort_by_key(|&(id, _, _)| id);
     for (id, attempt, at) in rearm {
-        eng.schedule_at(at, move |st: &mut ClusterState, eng: &mut Engine<ClusterState>| {
-            VirtualCluster::job_done(st, eng, id, attempt, epoch);
-        });
+        eng.schedule_at(at, ClusterEvent::JobDone { id, attempt, epoch });
     }
     log::info!(
         "ha: standby took over at {now} (epoch {}, snapshot: {had_snapshot}, replayed {replayed} wal events)",

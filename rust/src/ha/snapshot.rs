@@ -279,8 +279,11 @@ pub(crate) fn write_snapshot(st: &mut ClusterState) {
     st.consul
         .submit(Command::Set { key: SNAPSHOT_KEY.into(), value: text });
     // the snapshot serializes after the appends it covers in the raft
-    // log, so a reader never sees the truncation before the snapshot
-    let truncated = st.ha.next_seq.saturating_sub(st.ha.truncated_below);
+    // log, so a reader never sees the truncation before the snapshot.
+    // The truncated range holds exactly the events appended since the
+    // last snapshot — counted in events, not batch keys, so the counter
+    // (and the fingerprints over it) is invariant under WAL batching.
+    let truncated = st.ha.appends_since_snapshot;
     for seq in st.ha.truncated_below..st.ha.next_seq {
         st.consul.submit(Command::Delete { key: wal_key(seq) });
     }

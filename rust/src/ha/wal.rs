@@ -4,11 +4,15 @@
 //! The head buffers [`WalEvent`]s in an in-memory journal as its
 //! mutation methods run (`Head::submit`, `start_next`, `accrue_usage`,
 //! `preempt`, `handle_lost_job`, …); the cluster drains the buffer at
-//! the end of every engine event that touched the head and appends each
-//! entry to the replicated KV store under `vhpc/ha/wal/<seq>`. Because
-//! the KV store is applied from the Raft log, the WAL survives exactly
-//! what the server quorum survives — a head-process crash loses only
-//! the in-memory `Head`, never the log.
+//! the end of every engine event that touched the head and writes the
+//! whole drain — one engine event's batch of mutations, newline-joined
+//! — as a single entry under `vhpc/ha/wal/<seq>`. Because the KV store
+//! is applied from the Raft log, the WAL survives exactly what the
+//! server quorum survives — a head-process crash loses only the
+//! in-memory `Head`, never the log. Batching per engine event (not per
+//! mutation) cuts raft submissions by the average batch size and makes
+//! the event boundary atomic on disk: replay applies all of an event's
+//! mutations or, on a torn entry, stops cleanly at the hole.
 //!
 //! Replay ([`replay`]) rebuilds a `Head` by feeding the events back
 //! through the *same* mutation methods (submissions re-run the quota
@@ -513,12 +517,37 @@ pub(crate) fn append_direct(st: &mut ClusterState, ev: WalEvent) {
 /// at the end of every engine event that mutated the head — nothing is
 /// ever left buffered across events, so a head crash (which is itself
 /// an event) can only lose mutations that were never applied.
+///
+/// The whole drain goes out as **one** KV write: the batch of events a
+/// single engine event produced, newline-joined under a single
+/// sequence number (the codec is one-line-per-event by construction —
+/// free text is hex-armored). One raft submission per engine event
+/// instead of one per mutation is the WAL's main throughput lever, and
+/// it makes the engine-event boundary atomic in the log: replay sees
+/// all of an event's mutations or none (a torn batch truncates at the
+/// hole, see `failover::read_log`).
 pub(crate) fn flush(st: &mut ClusterState) {
     if !st.ha.config.enabled {
         return;
     }
-    for ev in st.head.take_journal() {
-        append_direct(st, ev);
+    let batch = st.head.take_journal();
+    if !batch.is_empty() {
+        let n = batch.len() as u64;
+        let seq = st.ha.next_seq;
+        st.ha.next_seq += 1;
+        st.ha.appends_since_snapshot += n;
+        let mut value = String::new();
+        for (i, ev) in batch.iter().enumerate() {
+            if i > 0 {
+                value.push('\n');
+            }
+            value.push_str(&ev.encode());
+        }
+        st.consul.submit(Command::Set { key: wal_key(seq), value });
+        // counted per event, not per write: the counter (and every
+        // fingerprint built on it) means "durable log entries", which
+        // batching must not change
+        st.metrics.add("ha_wal_appends", n);
     }
     if st.ha.head_alive
         && st.ha.config.snapshot_every > 0

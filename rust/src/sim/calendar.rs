@@ -1,0 +1,305 @@
+//! Calendar queue: the event engine's priority queue, keyed on
+//! `(time, insertion-seq)` with exact global ascending pop order.
+//!
+//! A classic binary heap pays `O(log n)` per operation and scatters
+//! entries across the allocation; at million-event traces the engine
+//! spends most of its time in heap sift and cache misses. A calendar
+//! queue exploits the structure simulation schedules actually have —
+//! most events land a short, bounded distance in the future — by
+//! hashing each event into a ring of time buckets:
+//!
+//! * the **ring**: `2^k` unsorted buckets, each `2^shift` ns wide, so
+//!   pushes within the ring's horizon are an append (`O(1)`, no
+//!   comparisons);
+//! * the **active bucket**: when the cursor reaches a non-empty
+//!   bucket, its events are sorted *once* (descending, so pops are
+//!   `Vec::pop` from the tail) — the classic "sort one day's events
+//!   when you tear the page off the calendar";
+//! * the **overflow map**: events beyond the ring's horizon go to a
+//!   `BTreeMap` keyed on `(time, seq)`; when the ring drains, the
+//!   cursor jumps straight to the earliest overflow bucket instead of
+//!   scanning empty slots.
+//!
+//! Each ring slot holds events of exactly one absolute bucket at a
+//! time (the cursor never advances past a non-empty slot, and pushes
+//! land only inside the current horizon), so a slot never mixes
+//! events from different wrap-arounds of the ring.
+//!
+//! Ties break on `seq` — the engine's global insertion counter — so
+//! same-instant events pop FIFO, byte-identical to the binary-heap
+//! engine this structure replaced (see `sim/reference.rs` and the
+//! differential suite in `tests/event_engine.rs`).
+
+use std::collections::BTreeMap;
+
+/// Default bucket width exponent: `2^29` ns ≈ 0.54 s, on the order of
+/// the engine's densest periodic rates (1 s scheduler ticks, sub-2 s
+/// heartbeats).
+const DEFAULT_SHIFT: u32 = 29;
+/// Default ring size exponent: `2^9 = 512` buckets ≈ 275 s of horizon.
+const DEFAULT_BUCKETS_LOG2: u32 = 9;
+
+/// A monotonically-popped priority queue over `(t_ns, seq)` keys.
+///
+/// Contract (matched to the engine's use): keys pushed after a pop are
+/// never smaller than the last popped key (the engine clamps schedule
+/// times to `now` and `seq` grows monotonically), and every `(t, seq)`
+/// key is unique. Under that contract `pop` yields keys in exact
+/// ascending `(t, seq)` order.
+pub struct CalendarQueue<T> {
+    /// Bucket width is `2^shift` nanoseconds.
+    shift: u32,
+    /// `ring.len()` is a power of two; `mask = ring.len() - 1`.
+    ring: Vec<Vec<(u64, u64, T)>>,
+    mask: u64,
+    /// Absolute bucket number the cursor has reached (its ring slot is
+    /// already drained into `active`).
+    cur_bucket: u64,
+    /// Events currently resident in the ring.
+    ring_count: usize,
+    /// The activated bucket, sorted descending by `(t, seq)` so the
+    /// next event pops from the tail. Late pushes at or before the
+    /// cursor's bucket are merge-inserted here.
+    active: Vec<(u64, u64, T)>,
+    /// Events beyond the ring horizon, globally ordered.
+    overflow: BTreeMap<(u64, u64), T>,
+    len: usize,
+}
+
+impl<T> Default for CalendarQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> CalendarQueue<T> {
+    /// A queue with the default geometry (512 buckets × ~0.54 s).
+    pub fn new() -> Self {
+        Self::with_geometry(DEFAULT_SHIFT, DEFAULT_BUCKETS_LOG2)
+    }
+
+    /// A queue with `2^buckets_log2` buckets of `2^shift` ns each.
+    /// Exposed so the differential tests can shrink the horizon enough
+    /// to force overflow jumps and ring wrap-around.
+    pub fn with_geometry(shift: u32, buckets_log2: u32) -> Self {
+        let shift = shift.min(48);
+        let n = 1usize << buckets_log2.min(16);
+        let mut ring = Vec::with_capacity(n);
+        ring.resize_with(n, Vec::new);
+        Self {
+            shift,
+            mask: (n as u64) - 1,
+            ring,
+            cur_bucket: 0,
+            ring_count: 0,
+            active: Vec::new(),
+            overflow: BTreeMap::new(),
+            len: 0,
+        }
+    }
+
+    /// Number of queued events.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when no events are queued.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Queue `value` under key `(t_ns, seq)`.
+    pub fn push(&mut self, t_ns: u64, seq: u64, value: T) {
+        let bucket = t_ns >> self.shift;
+        if bucket <= self.cur_bucket {
+            // The cursor already tore this page off: merge-insert into
+            // the sorted active bucket (descending, unique keys).
+            let key = (t_ns, seq);
+            let pos = self.active.partition_point(|&(t, s, _)| (t, s) > key);
+            self.active.insert(pos, (t_ns, seq, value));
+        } else if bucket < self.cur_bucket + (self.mask + 1) {
+            self.ring[(bucket & self.mask) as usize].push((t_ns, seq, value));
+            self.ring_count += 1;
+        } else {
+            self.overflow.insert((t_ns, seq), value);
+        }
+        self.len += 1;
+    }
+
+    /// Key of the earliest queued event, without removing it. Needs
+    /// `&mut self`: peeking may tear off the next calendar page.
+    pub fn peek_key(&mut self) -> Option<(u64, u64)> {
+        if self.active.is_empty() {
+            self.advance();
+        }
+        self.active.last().map(|&(t, s, _)| (t, s))
+    }
+
+    /// Remove and return the earliest event as `(t_ns, seq, value)`.
+    pub fn pop(&mut self) -> Option<(u64, u64, T)> {
+        if self.active.is_empty() {
+            self.advance();
+        }
+        let popped = self.active.pop();
+        if popped.is_some() {
+            self.len -= 1;
+        }
+        popped
+    }
+
+    /// Move the cursor to the next non-empty bucket (ring or overflow,
+    /// whichever is earlier) and sort it into `active`. No-op when
+    /// nothing is queued beyond the (empty) active bucket.
+    fn advance(&mut self) {
+        if self.ring_count == 0 && self.overflow.is_empty() {
+            return;
+        }
+        let overflow_bucket =
+            self.overflow.keys().next().map(|&(t, _)| t >> self.shift);
+        let mut next = match overflow_bucket {
+            Some(b) if self.ring_count == 0 => b,
+            _ => {
+                // The ring holds at least one event, strictly inside
+                // (cur_bucket, cur_bucket + ring_len): scan forward.
+                // Bounded by the ring length.
+                let mut b = self.cur_bucket + 1;
+                while self.ring[(b & self.mask) as usize].is_empty() {
+                    b += 1;
+                }
+                b
+            }
+        };
+        if let Some(ob) = overflow_bucket {
+            // An overflow event may predate everything in the ring
+            // (pushed beyond an older, lower horizon).
+            next = next.min(ob);
+        }
+        self.activate(next);
+    }
+
+    /// Tear off bucket `b`: take its ring slot plus any overflow
+    /// entries falling inside it, and sort them descending.
+    fn activate(&mut self, b: u64) {
+        self.cur_bucket = b;
+        let slot = &mut self.ring[(b & self.mask) as usize];
+        self.ring_count -= slot.len();
+        self.active = std::mem::take(slot);
+        if !self.overflow.is_empty() {
+            let lo = (b << self.shift, 0u64);
+            // Inclusive upper key avoids the `(b + 1) << shift` wrap at
+            // the top of the time domain.
+            let hi = ((b << self.shift) | ((1u64 << self.shift) - 1), u64::MAX);
+            let keys: Vec<(u64, u64)> =
+                self.overflow.range(lo..=hi).map(|(&k, _)| k).collect();
+            for k in keys {
+                if let Some(v) = self.overflow.remove(&k) {
+                    self.active.push((k.0, k.1, v));
+                }
+            }
+        }
+        self.active.sort_unstable_by(|a, b| (b.0, b.1).cmp(&(a.0, a.1)));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(q: &mut CalendarQueue<u32>) -> Vec<(u64, u64)> {
+        let mut out = Vec::new();
+        while let Some((t, s, _)) = q.pop() {
+            out.push((t, s));
+        }
+        out
+    }
+
+    #[test]
+    fn pops_in_time_then_seq_order() {
+        let mut q = CalendarQueue::new();
+        q.push(30, 0, 0);
+        q.push(10, 1, 0);
+        q.push(10, 2, 0);
+        q.push(20, 3, 0);
+        assert_eq!(q.len(), 4);
+        assert_eq!(drain(&mut q), vec![(10, 1), (10, 2), (20, 3), (30, 0)]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn far_future_goes_through_overflow_and_back() {
+        // 2 buckets of 2 ns each: anything past 4 ns overflows.
+        let mut q = CalendarQueue::with_geometry(1, 1);
+        q.push(1_000_000, 0, 7);
+        q.push(1, 1, 8);
+        q.push(500, 2, 9);
+        assert_eq!(drain(&mut q), vec![(1, 1), (500, 2), (1_000_000, 0)]);
+    }
+
+    #[test]
+    fn ring_wraps_without_mixing_buckets() {
+        // 4 buckets of 4 ns: buckets 0 and 4 share ring slot 0.
+        let mut q = CalendarQueue::with_geometry(2, 2);
+        q.push(1, 0, 0);
+        q.push(6, 1, 0);
+        assert_eq!(q.pop().map(|(t, s, _)| (t, s)), Some((1, 0)));
+        assert_eq!(q.pop().map(|(t, s, _)| (t, s)), Some((6, 1)));
+        // Cursor now at bucket 1, horizon [1, 5): t=17 (bucket 4)
+        // lands in ring slot 0 — the slot bucket 0 vacated.
+        q.push(17, 2, 0);
+        q.push(9, 3, 0);
+        assert_eq!(drain(&mut q), vec![(9, 3), (17, 2)]);
+    }
+
+    #[test]
+    fn late_pushes_into_the_active_bucket_keep_order() {
+        let mut q = CalendarQueue::with_geometry(4, 2);
+        q.push(10, 0, 0);
+        q.push(12, 1, 0);
+        // Activate the bucket by peeking, then push into it.
+        assert_eq!(q.peek_key(), Some((10, 0)));
+        q.push(11, 2, 0);
+        q.push(10, 3, 0);
+        assert_eq!(drain(&mut q), vec![(10, 0), (10, 3), (11, 2), (12, 1)]);
+    }
+
+    #[test]
+    fn overflow_predating_ring_entries_wins() {
+        // 2 buckets of 2 ns. Push far future (overflow), advance the
+        // cursor there, then push a ring event beyond it and an
+        // overflow event between.
+        let mut q = CalendarQueue::with_geometry(1, 1);
+        q.push(100, 0, 0); // overflow (bucket 50)
+        q.push(1, 1, 0); // ring
+        assert_eq!(q.pop().map(|(t, s, _)| (t, s)), Some((1, 1)));
+        // Cursor still at bucket 0: 100 is overflow, 3 is in-ring.
+        q.push(3, 2, 0);
+        assert_eq!(drain(&mut q), vec![(3, 2), (100, 0)]);
+    }
+
+    #[test]
+    fn empty_queue_behaves() {
+        let mut q: CalendarQueue<u32> = CalendarQueue::new();
+        assert!(q.is_empty());
+        assert_eq!(q.peek_key(), None);
+        assert_eq!(q.pop().map(|(t, s, _)| (t, s)), None);
+    }
+
+    #[test]
+    fn interleaved_push_pop_stays_sorted() {
+        let mut q = CalendarQueue::with_geometry(3, 3);
+        let mut seq = 0u64;
+        let mut push = |q: &mut CalendarQueue<u32>, t: u64, seq: &mut u64| {
+            q.push(t, *seq, 0);
+            *seq += 1;
+        };
+        push(&mut q, 5, &mut seq);
+        push(&mut q, 900, &mut seq);
+        assert_eq!(q.pop().map(|(t, _, _)| t), Some(5));
+        // now >= 5: schedule same-tick and near-future events
+        push(&mut q, 5, &mut seq);
+        push(&mut q, 6, &mut seq);
+        push(&mut q, 400, &mut seq);
+        let order = drain(&mut q);
+        assert_eq!(order, vec![(5, 2), (6, 3), (400, 4), (900, 1)]);
+    }
+}

@@ -1,59 +1,78 @@
-//! Event engine: a time-ordered queue of closures over a state `S`.
+//! Event engine: a time-ordered queue of typed events over a state `S`.
 //!
-//! Events fire in `(time, insertion-seq)` order, so same-timestamp events
-//! run FIFO and runs are fully deterministic. Handlers receive
-//! `(&mut S, &mut Engine<S>)` and may schedule further events.
+//! Events fire in `(time, insertion-seq)` order, so same-timestamp
+//! events run FIFO and runs are fully deterministic. The queue behind
+//! the engine is a [`CalendarQueue`] (ring of time buckets + overflow
+//! map) rather than a binary heap: pushes inside the ring horizon are
+//! an append, and each bucket is sorted once when the cursor reaches
+//! it. The ordering contract is pinned byte-for-byte to the original
+//! heap implementation, kept in [`crate::sim::reference`] and enforced
+//! by the differential suite in `tests/event_engine.rs`.
+//!
+//! An event type implements [`SimEvent`]: a plain `enum` dispatched in
+//! `fire`, so scheduling allocates nothing per event. The legacy
+//! boxed-closure style is still available through the default event
+//! type [`Thunk`] (used by small tests and one-off simulations);
+//! production state machines (`cluster::vcluster`, `cluster::shard`)
+//! define their own enums.
 
+use super::calendar::CalendarQueue;
 use super::time::SimTime;
-use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use std::marker::PhantomData;
 
-type Handler<S> = Box<dyn FnOnce(&mut S, &mut Engine<S>)>;
-
-struct Entry<S> {
-    at: SimTime,
-    seq: u64,
-    handler: Handler<S>,
+/// A schedulable event over state `S`. Implementors are typically
+/// fieldful enums; `fire` consumes the event and may schedule more.
+pub trait SimEvent<S>: Sized {
+    /// Handle the event. The engine has already advanced `now` to the
+    /// event's timestamp and counted it as fired.
+    fn fire(self, state: &mut S, eng: &mut Engine<S, Self>);
 }
 
-impl<S> PartialEq for Entry<S> {
-    fn eq(&self, other: &Self) -> bool {
-        self.at == other.at && self.seq == other.seq
-    }
-}
-impl<S> Eq for Entry<S> {}
-impl<S> PartialOrd for Entry<S> {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl<S> Ord for Entry<S> {
-    // Reverse order: BinaryHeap is a max-heap, we want earliest first.
-    fn cmp(&self, other: &Self) -> Ordering {
-        other
-            .at
-            .cmp(&self.at)
-            .then_with(|| other.seq.cmp(&self.seq))
+/// The default event type: a boxed closure, one allocation per event.
+/// This is the pre-enum engine's scheduling style, kept for tests and
+/// one-off drivers where ergonomics beat throughput.
+pub struct Thunk<S>(Box<dyn FnOnce(&mut S, &mut Engine<S, Thunk<S>>)>);
+
+impl<S> Thunk<S> {
+    /// Wrap a closure as a schedulable event.
+    pub fn new<F>(f: F) -> Self
+    where
+        F: FnOnce(&mut S, &mut Engine<S, Thunk<S>>) + 'static,
+    {
+        Thunk(Box::new(f))
     }
 }
 
-/// Discrete-event engine over state `S`.
-pub struct Engine<S> {
+impl<S> SimEvent<S> for Thunk<S> {
+    fn fire(self, state: &mut S, eng: &mut Engine<S, Thunk<S>>) {
+        (self.0)(state, eng)
+    }
+}
+
+/// Discrete-event engine over state `S` with event type `E`.
+pub struct Engine<S, E = Thunk<S>> {
     now: SimTime,
     seq: u64,
     fired: u64,
-    queue: BinaryHeap<Entry<S>>,
+    queue: CalendarQueue<E>,
+    _state: PhantomData<fn(&mut S)>,
 }
 
-impl<S> Default for Engine<S> {
+impl<S, E> Default for Engine<S, E> {
     fn default() -> Self {
         Self::new()
     }
 }
 
-impl<S> Engine<S> {
+impl<S, E> Engine<S, E> {
     pub fn new() -> Self {
-        Self { now: SimTime::ZERO, seq: 0, fired: 0, queue: BinaryHeap::new() }
+        Self {
+            now: SimTime::ZERO,
+            seq: 0,
+            fired: 0,
+            queue: CalendarQueue::new(),
+            _state: PhantomData,
+        }
     }
 
     /// Current virtual time.
@@ -71,33 +90,58 @@ impl<S> Engine<S> {
         self.queue.len()
     }
 
-    /// Schedule at an absolute time (clamped to now if in the past).
-    pub fn schedule_at<F>(&mut self, at: SimTime, f: F)
-    where
-        F: FnOnce(&mut S, &mut Engine<S>) + 'static,
-    {
+    /// Schedule an event at an absolute time (clamped to now if in the
+    /// past).
+    pub fn schedule_at(&mut self, at: SimTime, ev: E) {
         let at = at.max(self.now);
         let seq = self.seq;
         self.seq += 1;
-        self.queue.push(Entry { at, seq, handler: Box::new(f) });
+        self.queue.push(at.as_nanos(), seq, ev);
     }
 
-    /// Schedule after a delay from now.
-    pub fn schedule_after<F>(&mut self, delay: SimTime, f: F)
+    /// Schedule an event after a delay from now.
+    pub fn schedule_after(&mut self, delay: SimTime, ev: E) {
+        self.schedule_at(self.now + delay, ev);
+    }
+
+    /// Time of the next pending event, if any. The partitioned runner
+    /// uses this to tell an idle window from one with work left.
+    /// `&mut self` because peeking may activate the next calendar
+    /// bucket.
+    pub fn next_event_at(&mut self) -> Option<SimTime> {
+        self.queue.peek_key().map(|(t, _)| SimTime::from_nanos(t))
+    }
+}
+
+impl<S> Engine<S, Thunk<S>> {
+    /// Closure-flavored [`Engine::schedule_at`]: wraps `f` in a
+    /// [`Thunk`].
+    pub fn schedule_at_fn<F>(&mut self, at: SimTime, f: F)
     where
-        F: FnOnce(&mut S, &mut Engine<S>) + 'static,
+        F: FnOnce(&mut S, &mut Engine<S, Thunk<S>>) + 'static,
     {
-        self.schedule_at(self.now + delay, f);
+        self.schedule_at(at, Thunk::new(f));
     }
 
+    /// Closure-flavored [`Engine::schedule_after`].
+    pub fn schedule_after_fn<F>(&mut self, delay: SimTime, f: F)
+    where
+        F: FnOnce(&mut S, &mut Engine<S, Thunk<S>>) + 'static,
+    {
+        self.schedule_after(delay, Thunk::new(f));
+    }
+}
+
+impl<S, E: SimEvent<S>> Engine<S, E> {
     /// Fire the next event. Returns false when the queue is empty.
     pub fn step(&mut self, state: &mut S) -> bool {
         match self.queue.pop() {
-            Some(Entry { at, handler, .. }) => {
+            Some((at, _seq, ev)) => {
+                let at = SimTime::from_nanos(at);
                 debug_assert!(at >= self.now, "time went backwards");
                 self.now = at;
                 self.fired += 1;
-                handler(state, self);
+                ev.fire(state, self);
                 true
             }
             None => false,
@@ -108,8 +152,8 @@ impl<S> Engine<S> {
     /// at exactly `until` still fire. Returns the number fired.
     pub fn run_until(&mut self, state: &mut S, until: SimTime) -> u64 {
         let mut n = 0;
-        while let Some(e) = self.queue.peek() {
-            if e.at > until {
+        while let Some((t, _)) = self.queue.peek_key() {
+            if t > until.as_nanos() {
                 break;
             }
             self.step(state);
@@ -120,12 +164,6 @@ impl<S> Engine<S> {
         n
     }
 
-    /// Time of the next pending event, if any. The partitioned runner
-    /// uses this to tell an idle window from one with work left.
-    pub fn next_event_at(&self) -> Option<SimTime> {
-        self.queue.peek().map(|e| e.at)
-    }
-
     /// Advance one lock-step window: fire every event strictly before
     /// `end`, then set the clock to `end`. The strict bound is the
     /// window contract — an event scheduled exactly at `end` belongs to
@@ -134,8 +172,8 @@ impl<S> Engine<S> {
     /// Returns the number fired.
     pub fn run_window(&mut self, state: &mut S, end: SimTime) -> u64 {
         let mut n = 0;
-        while let Some(e) = self.queue.peek() {
-            if e.at >= end {
+        while let Some((t, _)) = self.queue.peek_key() {
+            if t >= end.as_nanos() {
                 break;
             }
             self.step(state);
@@ -181,9 +219,9 @@ mod tests {
     fn fires_in_time_order() {
         let mut eng: Engine<Vec<u32>> = Engine::new();
         let mut log = Vec::new();
-        eng.schedule_at(SimTime::from_millis(30), |s: &mut Vec<u32>, _| s.push(3));
-        eng.schedule_at(SimTime::from_millis(10), |s, _| s.push(1));
-        eng.schedule_at(SimTime::from_millis(20), |s, _| s.push(2));
+        eng.schedule_at_fn(SimTime::from_millis(30), |s: &mut Vec<u32>, _| s.push(3));
+        eng.schedule_at_fn(SimTime::from_millis(10), |s, _| s.push(1));
+        eng.schedule_at_fn(SimTime::from_millis(20), |s, _| s.push(2));
         eng.run_to_completion(&mut log);
         assert_eq!(log, vec![1, 2, 3]);
         assert_eq!(eng.now(), SimTime::from_millis(30));
@@ -194,7 +232,7 @@ mod tests {
         let mut eng: Engine<Vec<u32>> = Engine::new();
         let mut log = Vec::new();
         for i in 0..10 {
-            eng.schedule_at(SimTime::from_millis(5), move |s: &mut Vec<u32>, _| {
+            eng.schedule_at_fn(SimTime::from_millis(5), move |s: &mut Vec<u32>, _| {
                 s.push(i)
             });
         }
@@ -210,12 +248,12 @@ mod tests {
         fn tick(s: &mut St, eng: &mut Engine<St>) {
             s.count += 1;
             if s.count < 5 {
-                eng.schedule_after(SimTime::from_secs(1), tick);
+                eng.schedule_after_fn(SimTime::from_secs(1), tick);
             }
         }
         let mut eng = Engine::new();
         let mut st = St { count: 0 };
-        eng.schedule_after(SimTime::from_secs(1), tick);
+        eng.schedule_after_fn(SimTime::from_secs(1), tick);
         eng.run_to_completion(&mut st);
         assert_eq!(st.count, 5);
         assert_eq!(eng.now(), SimTime::from_secs(5));
@@ -225,8 +263,8 @@ mod tests {
     fn run_until_stops_and_advances_clock() {
         let mut eng: Engine<u32> = Engine::new();
         let mut s = 0u32;
-        eng.schedule_at(SimTime::from_secs(1), |s: &mut u32, _| *s += 1);
-        eng.schedule_at(SimTime::from_secs(10), |s: &mut u32, _| *s += 1);
+        eng.schedule_at_fn(SimTime::from_secs(1), |s: &mut u32, _| *s += 1);
+        eng.schedule_at_fn(SimTime::from_secs(10), |s: &mut u32, _| *s += 1);
         let fired = eng.run_until(&mut s, SimTime::from_secs(5));
         assert_eq!(fired, 1);
         assert_eq!(s, 1);
@@ -238,9 +276,9 @@ mod tests {
     fn past_schedules_clamp_to_now() {
         let mut eng: Engine<Vec<u64>> = Engine::new();
         let mut log = Vec::new();
-        eng.schedule_at(SimTime::from_secs(2), |s: &mut Vec<u64>, eng| {
+        eng.schedule_at_fn(SimTime::from_secs(2), |s: &mut Vec<u64>, eng| {
             // scheduled "in the past" — must fire at now, not before
-            eng.schedule_at(SimTime::from_secs(1), |s2: &mut Vec<u64>, e2| {
+            eng.schedule_at_fn(SimTime::from_secs(1), |s2: &mut Vec<u64>, e2| {
                 s2.push(e2.now().as_nanos());
             });
             s.push(eng.now().as_nanos());
@@ -254,9 +292,9 @@ mod tests {
     fn run_window_is_half_open() {
         let mut eng: Engine<Vec<u64>> = Engine::new();
         let mut log = Vec::new();
-        eng.schedule_at(SimTime::from_secs(1), |s: &mut Vec<u64>, _| s.push(1));
-        eng.schedule_at(SimTime::from_secs(2), |s: &mut Vec<u64>, _| s.push(2));
-        eng.schedule_at(SimTime::from_secs(3), |s: &mut Vec<u64>, _| s.push(3));
+        eng.schedule_at_fn(SimTime::from_secs(1), |s: &mut Vec<u64>, _| s.push(1));
+        eng.schedule_at_fn(SimTime::from_secs(2), |s: &mut Vec<u64>, _| s.push(2));
+        eng.schedule_at_fn(SimTime::from_secs(3), |s: &mut Vec<u64>, _| s.push(3));
         assert_eq!(eng.next_event_at(), Some(SimTime::from_secs(1)));
         // [0, 2): the event at exactly 2s belongs to the next window
         let fired = eng.run_window(&mut log, SimTime::from_secs(2));
@@ -279,11 +317,47 @@ mod tests {
         let mut eng: Engine<u32> = Engine::new();
         let mut s = 0u32;
         for i in 1..=10u64 {
-            eng.schedule_at(SimTime::from_secs(i), |s: &mut u32, _| *s += 1);
+            eng.schedule_at_fn(SimTime::from_secs(i), |s: &mut u32, _| *s += 1);
         }
         let ok = eng.run_until_pred(&mut s, |s| *s == 3);
         assert!(ok);
         assert_eq!(s, 3);
         assert_eq!(eng.now(), SimTime::from_secs(3));
+    }
+
+    /// The typed-event path: a fieldful enum scheduled with no per-event
+    /// allocation, dispatching through [`SimEvent::fire`].
+    #[test]
+    fn enum_events_fire_and_reschedule() {
+        enum Ev {
+            Add(u32),
+            Tick,
+        }
+        struct St {
+            sum: u32,
+            ticks: u32,
+        }
+        impl SimEvent<St> for Ev {
+            fn fire(self, st: &mut St, eng: &mut Engine<St, Ev>) {
+                match self {
+                    Ev::Add(n) => st.sum += n,
+                    Ev::Tick => {
+                        st.ticks += 1;
+                        if st.ticks < 3 {
+                            eng.schedule_after(SimTime::from_secs(1), Ev::Tick);
+                        }
+                    }
+                }
+            }
+        }
+        let mut eng: Engine<St, Ev> = Engine::new();
+        let mut st = St { sum: 0, ticks: 0 };
+        eng.schedule_at(SimTime::from_secs(1), Ev::Tick);
+        eng.schedule_at(SimTime::from_secs(2), Ev::Add(5));
+        eng.run_to_completion(&mut st);
+        assert_eq!(st.sum, 5);
+        assert_eq!(st.ticks, 3);
+        assert_eq!(eng.now(), SimTime::from_secs(3));
+        assert_eq!(eng.fired(), 4);
     }
 }

@@ -3,11 +3,20 @@
 //! The cluster's control plane (machine boot, image pulls, gossip, raft,
 //! autoscaling) runs entirely on virtual time, so protocol benches are
 //! deterministic and independent of host speed. See DESIGN.md §Time model.
+//!
+//! The engine is a calendar queue ([`calendar`]) over typed events
+//! ([`engine::SimEvent`]); the original boxed-closure binary-heap
+//! engine survives in [`reference`] as the executable ordering
+//! specification the differential tests pin the rewrite to.
 
+pub mod calendar;
 pub mod engine;
 pub mod partition;
+pub mod reference;
 pub mod time;
 
-pub use engine::Engine;
+pub use calendar::CalendarQueue;
+pub use engine::{Engine, SimEvent, Thunk};
 pub use partition::{run_lockstep, Outbox, Partitioned, ShardPlan};
+pub use reference::ClosureHeapEngine;
 pub use time::SimTime;

@@ -1,0 +1,194 @@
+//! Reference event engine: the original boxed-closure `BinaryHeap`
+//! implementation, preserved byte-for-byte in behavior.
+//!
+//! [`crate::sim::Engine`] replaced this with a calendar queue over a
+//! typed event enum; this copy stays as the executable specification
+//! of the ordering contract — events fire in `(time, insertion-seq)`
+//! order, same-timestamp events run FIFO. The differential suite in
+//! `tests/event_engine.rs` drives both engines through seeded random
+//! schedules and asserts identical pop order and fired counts, and the
+//! `vhpc perf` harness measures the calendar engine's speedup against
+//! this baseline.
+
+use super::time::SimTime;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+type Handler<S> = Box<dyn FnOnce(&mut S, &mut ClosureHeapEngine<S>)>;
+
+struct Entry<S> {
+    at: SimTime,
+    seq: u64,
+    handler: Handler<S>,
+}
+
+impl<S> PartialEq for Entry<S> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<S> Eq for Entry<S> {}
+impl<S> PartialOrd for Entry<S> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<S> Ord for Entry<S> {
+    // Reverse order: BinaryHeap is a max-heap, we want earliest first.
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .at
+            .cmp(&self.at)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// The pre-calendar-queue discrete-event engine over state `S`:
+/// a max-`BinaryHeap` of reverse-ordered boxed closures.
+pub struct ClosureHeapEngine<S> {
+    now: SimTime,
+    seq: u64,
+    fired: u64,
+    queue: BinaryHeap<Entry<S>>,
+}
+
+impl<S> Default for ClosureHeapEngine<S> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<S> ClosureHeapEngine<S> {
+    pub fn new() -> Self {
+        Self { now: SimTime::ZERO, seq: 0, fired: 0, queue: BinaryHeap::new() }
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Number of events fired so far.
+    pub fn fired(&self) -> u64 {
+        self.fired
+    }
+
+    /// Pending event count.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Schedule at an absolute time (clamped to now if in the past).
+    pub fn schedule_at<F>(&mut self, at: SimTime, f: F)
+    where
+        F: FnOnce(&mut S, &mut ClosureHeapEngine<S>) + 'static,
+    {
+        let at = at.max(self.now);
+        let seq = self.seq;
+        self.seq += 1;
+        self.queue.push(Entry { at, seq, handler: Box::new(f) });
+    }
+
+    /// Schedule after a delay from now.
+    pub fn schedule_after<F>(&mut self, delay: SimTime, f: F)
+    where
+        F: FnOnce(&mut S, &mut ClosureHeapEngine<S>) + 'static,
+    {
+        self.schedule_at(self.now + delay, f);
+    }
+
+    /// Fire the next event. Returns false when the queue is empty.
+    pub fn step(&mut self, state: &mut S) -> bool {
+        match self.queue.pop() {
+            Some(Entry { at, handler, .. }) => {
+                debug_assert!(at >= self.now, "time went backwards");
+                self.now = at;
+                self.fired += 1;
+                handler(state, self);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Run until the queue drains or `until` is reached. Events scheduled
+    /// at exactly `until` still fire. Returns the number fired.
+    pub fn run_until(&mut self, state: &mut S, until: SimTime) -> u64 {
+        let mut n = 0;
+        while let Some(e) = self.queue.peek() {
+            if e.at > until {
+                break;
+            }
+            self.step(state);
+            n += 1;
+        }
+        // Advance the clock even if nothing fired at `until`.
+        self.now = self.now.max(until);
+        n
+    }
+
+    /// Time of the next pending event, if any.
+    pub fn next_event_at(&self) -> Option<SimTime> {
+        self.queue.peek().map(|e| e.at)
+    }
+
+    /// Advance one lock-step window: fire every event strictly before
+    /// `end`, then set the clock to `end`. Returns the number fired.
+    pub fn run_window(&mut self, state: &mut S, end: SimTime) -> u64 {
+        let mut n = 0;
+        while let Some(e) = self.queue.peek() {
+            if e.at >= end {
+                break;
+            }
+            self.step(state);
+            n += 1;
+        }
+        self.now = self.now.max(end);
+        n
+    }
+
+    /// Run until the queue is fully drained. Returns events fired.
+    pub fn run_to_completion(&mut self, state: &mut S) -> u64 {
+        let mut n = 0;
+        while self.step(state) {
+            n += 1;
+        }
+        n
+    }
+
+    /// Run until `pred(state)` holds (checked after each event) or the
+    /// queue drains. Returns true if the predicate was satisfied.
+    pub fn run_until_pred(
+        &mut self,
+        state: &mut S,
+        mut pred: impl FnMut(&S) -> bool,
+    ) -> bool {
+        if pred(state) {
+            return true;
+        }
+        while self.step(state) {
+            if pred(state) {
+                return true;
+            }
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fires_in_time_order_with_fifo_ties() {
+        let mut eng: ClosureHeapEngine<Vec<u32>> = ClosureHeapEngine::new();
+        let mut log = Vec::new();
+        eng.schedule_at(SimTime::from_millis(30), |s: &mut Vec<u32>, _| s.push(3));
+        eng.schedule_at(SimTime::from_millis(10), |s, _| s.push(1));
+        eng.schedule_at(SimTime::from_millis(10), |s, _| s.push(2));
+        eng.run_to_completion(&mut log);
+        assert_eq!(log, vec![1, 2, 3]);
+        assert_eq!(eng.now(), SimTime::from_millis(30));
+        assert_eq!(eng.fired(), 3);
+    }
+}

@@ -15,8 +15,15 @@
 //! computed from the running jobs' predicted finishes, and other jobs
 //! (in fair-share order) may jump ahead only if they are predicted to
 //! finish before that reservation or fit the slots it leaves spare. As
-//! with EASY, nothing is cached — every decision recomputes from live
-//! state, so a fault that kills a prediction cannot wedge the head.
+//! with EASY, the decision itself holds no state between calls, so a
+//! fault that kills a prediction cannot wedge the head. The usage
+//! figures the decision orders by arrive through the head's memoized
+//! queue view: structural changes invalidate it outright, while ledger
+//! drift (a charge, a weight change, decay with the clock) only
+//! refreshes the per-tenant usage in place — computed by the same pure
+//! [`UsageLedger::normalized_usage_at`](crate::tenancy::ledger::UsageLedger::normalized_usage_at)
+//! call per distinct tenant, so the ordering is bit-identical to an
+//! uncached rebuild.
 
 use crate::cluster::policy::{shadow_time, Decision, QueuedJob, RunningJob};
 use crate::sim::SimTime;

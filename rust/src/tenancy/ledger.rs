@@ -79,6 +79,10 @@ pub struct UsageLedger {
     /// usage normalizes to half, so fair-share grants it twice the
     /// service, and the autoscaler's share cap scales the same way.
     weights: HashMap<u64, f64>,
+    /// Bumped on every mutation (charge, weight change, gc, restore).
+    /// Caches built over ledger reads — the head's policy queue view —
+    /// compare versions instead of subscribing to each mutator.
+    version: u64,
 }
 
 impl Default for UsageLedger {
@@ -91,7 +95,18 @@ impl Default for UsageLedger {
 
 impl UsageLedger {
     pub fn new(half_life: SimTime) -> Self {
-        Self { half_life, accounts: HashMap::new(), weights: HashMap::new() }
+        Self {
+            half_life,
+            accounts: HashMap::new(),
+            weights: HashMap::new(),
+            version: 0,
+        }
+    }
+
+    /// The ledger's mutation counter: changes if and only if a read at
+    /// a fixed `now` could return something different than before.
+    pub fn version(&self) -> u64 {
+        self.version
     }
 
     /// Set a tenant's fair-share weight multiplier (must be positive;
@@ -100,6 +115,7 @@ impl UsageLedger {
     pub fn set_weight(&mut self, tenant: u64, weight: f64) {
         if weight > 0.0 && weight.is_finite() {
             self.weights.insert(tenant, weight);
+            self.version += 1;
         }
     }
 
@@ -123,6 +139,7 @@ impl UsageLedger {
             half_life: self.half_life,
             accounts: HashMap::new(),
             weights: self.weights.clone(),
+            version: 0,
         }
     }
 
@@ -145,6 +162,7 @@ impl UsageLedger {
             .iter()
             .map(|&(t, usage, as_of)| (t, Account { usage, as_of }))
             .collect();
+        self.version += 1;
     }
 
     /// Add `slot_seconds` of usage for a tenant at `now`, decaying the
@@ -158,6 +176,7 @@ impl UsageLedger {
         let dt = now.saturating_sub(acct.as_of);
         acct.usage = acct.usage * decay(hl, dt) + slot_seconds.max(0.0);
         acct.as_of = now;
+        self.version += 1;
     }
 
     /// The tenant's decayed usage as seen at `now` (0 for tenants that
@@ -184,6 +203,7 @@ impl UsageLedger {
         self.accounts.retain(|_, a| {
             a.usage * decay(hl, now.saturating_sub(a.as_of)) > threshold
         });
+        self.version += 1;
     }
 }
 
@@ -277,6 +297,30 @@ mod tests {
                 "restored balance must read bit-identically for tenant {t}"
             );
         }
+    }
+
+    #[test]
+    fn version_bumps_on_every_mutation_and_only_mutations() {
+        let mut l = UsageLedger::new(SimTime::from_secs(600));
+        let v0 = l.version();
+        // pure reads must not move the version
+        let _ = l.usage_at(1, SimTime::from_secs(5));
+        let _ = l.normalized_usage_at(1, SimTime::from_secs(5));
+        let _ = l.export_accounts();
+        assert_eq!(l.version(), v0);
+        l.charge(1, 10.0, SimTime::ZERO);
+        let v1 = l.version();
+        assert_ne!(v1, v0, "charge must bump the version");
+        l.set_weight(1, 2.0);
+        let v2 = l.version();
+        assert_ne!(v2, v1, "weight change must bump the version");
+        l.set_weight(1, -1.0); // ignored weight: no observable change
+        assert_eq!(l.version(), v2);
+        l.gc(SimTime::from_secs(1_000_000), 0.0);
+        let v3 = l.version();
+        assert_ne!(v3, v2, "gc must bump the version");
+        l.restore_accounts(&[(9, 5.0, SimTime::ZERO)]);
+        assert_ne!(l.version(), v3, "restore must bump the version");
     }
 
     #[test]

@@ -14,6 +14,7 @@
 
 use std::collections::BTreeMap;
 use vhpc::cluster::mix::{mix_spec, prioritized_trace, run_job_trace, run_tenant_trace};
+use vhpc::cluster::perf::{perf_spec, run_perf_trace};
 use vhpc::cluster::policy::SchedulePolicy;
 use vhpc::cluster::{run_sharded_chaos, run_sharded_mix, run_sharded_tenants, ShardRunConfig};
 use vhpc::config::ClusterSpec;
@@ -194,6 +195,39 @@ fn sharded_chaos_is_shard_count_invariant() {
     for shards in [2usize, 4] {
         let o = run(shards);
         assert_identical(&o.fingerprint, &base.fingerprint, &format!("chaos @ {shards} shards"));
+    }
+}
+
+/// The `vhpc perf` driver, scaled down: the throughput harness reads
+/// wall clocks for its stats, but everything the simulation computes —
+/// the arrival-stream fingerprint, the merged counter snapshot and its
+/// digest — must double-run byte-identically on the calendar-queue
+/// engine, and stay invariant across shard counts 1, 2 and 4. (The
+/// harness also self-checks the engine microbench internally: the
+/// calendar and reference-heap sides panic on a fired-count mismatch.)
+#[test]
+fn perf_driver_fingerprints_are_deterministic_and_shard_count_invariant() {
+    let spec = || perf_spec(ClusterSpec::paper_testbed(), 6, 23);
+    let run = |shards| {
+        run_perf_trace(spec(), 150, 16, shards, 23, 240).expect("perf trace must drain")
+    };
+    let base = run(1);
+    assert!(base.jobs_submitted > 0, "the scaled-down stream must produce work");
+    assert!(base.jobs_completed > 0);
+    let again = run(1);
+    assert_eq!(
+        base.arrivals_fingerprint, again.arrivals_fingerprint,
+        "same-seed arrival streams diverged"
+    );
+    assert_identical(&base.counters, &again.counters, "perf double run");
+    assert_eq!(base.counter_digest, again.counter_digest);
+    for shards in [2usize, 4] {
+        let o = run(shards);
+        assert_eq!(
+            o.arrivals_fingerprint, base.arrivals_fingerprint,
+            "arrival stream changed at {shards} shards"
+        );
+        assert_identical(&o.counters, &base.counters, &format!("perf @ {shards} shards"));
     }
 }
 

@@ -1,0 +1,301 @@
+//! Differential suite pinning the calendar-queue [`Engine`] to the
+//! boxed-closure [`ClosureHeapEngine`] it replaced.
+//!
+//! Both engines promise the same contract: events fire in `(time,
+//! insertion seq)` order, `schedule_after(0)` lands on the current tick
+//! behind everything already queued there, and past-dated events clamp
+//! to `now`. The reference heap implements that contract with
+//! `BinaryHeap<Reverse<(SimTime, u64)>>` — small enough to be obviously
+//! correct — so here we drive both through the same seeded random
+//! schedules (same-tick ties, zero-delay self-reschedules, far-future
+//! delays that land in the calendar's overflow map) and demand the pop
+//! orders match event for event.
+//!
+//! On divergence the failure printout carries the seed, the first
+//! divergent index, and a window of ops around it — enough to replay
+//! and shrink by hand without a property-testing framework.
+
+use vhpc::sim::{CalendarQueue, ClosureHeapEngine, Engine, SimEvent, SimTime};
+use vhpc::util::Rng;
+
+/// One fired event, as both engines must observe it.
+type Fired = (u64, u32, u32); // (now_ns, op id, hop index)
+
+/// A differential program: op `i` first fires at `starts[i]` and then
+/// self-reschedules once per entry of `hops[i]` (a 0 entry is a
+/// zero-delay reschedule: same tick, new seq).
+struct Program {
+    seed: u64,
+    starts: Vec<u64>,
+    hops: Vec<Vec<u64>>,
+}
+
+/// Delay classes that exercise every scheduling path: exact ties and
+/// zero delays, sub-bucket nanoseconds, multi-bucket seconds, and
+/// far-future draws past the default calendar ring (~275s horizon).
+fn draw_delay(rng: &mut Rng) -> u64 {
+    match rng.gen_range(10) {
+        0 | 1 => 0,                                      // zero-delay reschedule
+        2 | 3 | 4 => rng.gen_range(1_000_000),           // intra-bucket (<1ms)
+        5 | 6 | 7 => rng.gen_range(20_000_000_000),      // ring range (<20s)
+        8 => 1_000_000_000 * (200 + rng.gen_range(400)), // 200..600s: wraps / overflow
+        _ => 1_000_000_000_000 + rng.gen_range(1_000_000_000_000), // deep overflow
+    }
+}
+
+fn gen_program(seed: u64, ops: usize) -> Program {
+    let mut rng = Rng::new(seed);
+    let mut starts = Vec::with_capacity(ops);
+    let mut hops = Vec::with_capacity(ops);
+    for i in 0..ops {
+        // cluster start times onto a coarse grid so unrelated ops
+        // collide on the same tick and the seq tiebreak does real work
+        let at = rng.gen_range(50) * 1_000_000;
+        // every 7th op starts at an already-used instant verbatim
+        let at = if i % 7 == 3 && !starts.is_empty() {
+            starts[i / 2]
+        } else {
+            at
+        };
+        starts.push(at);
+        let n = rng.gen_range(4) as usize;
+        hops.push((0..n).map(|_| draw_delay(&mut rng)).collect());
+    }
+    Program { seed, starts, hops }
+}
+
+struct DiffState {
+    log: Vec<Fired>,
+    hops: Vec<Vec<u64>>,
+}
+
+struct Op {
+    id: u32,
+    hop: u32,
+}
+
+impl SimEvent<DiffState> for Op {
+    fn fire(self, st: &mut DiffState, eng: &mut Engine<DiffState, Op>) {
+        st.log.push((eng.now().as_nanos(), self.id, self.hop));
+        if let Some(&delay) = st.hops[self.id as usize].get(self.hop as usize) {
+            eng.schedule_after(
+                SimTime::from_nanos(delay),
+                Op { id: self.id, hop: self.hop + 1 },
+            );
+        }
+    }
+}
+
+fn run_calendar(p: &Program) -> (Vec<Fired>, u64) {
+    let mut st = DiffState { log: Vec::new(), hops: p.hops.clone() };
+    let mut eng: Engine<DiffState, Op> = Engine::new();
+    for (i, &at) in p.starts.iter().enumerate() {
+        eng.schedule_at(SimTime::from_nanos(at), Op { id: i as u32, hop: 0 });
+    }
+    eng.run_to_completion(&mut st);
+    (st.log, eng.fired())
+}
+
+fn heap_fire(st: &mut DiffState, eng: &mut ClosureHeapEngine<DiffState>, id: u32, hop: u32) {
+    st.log.push((eng.now().as_nanos(), id, hop));
+    if let Some(&delay) = st.hops[id as usize].get(hop as usize) {
+        eng.schedule_after(SimTime::from_nanos(delay), move |s, e| {
+            heap_fire(s, e, id, hop + 1)
+        });
+    }
+}
+
+fn run_heap(p: &Program) -> (Vec<Fired>, u64) {
+    let mut st = DiffState { log: Vec::new(), hops: p.hops.clone() };
+    let mut eng: ClosureHeapEngine<DiffState> = ClosureHeapEngine::new();
+    for (i, &at) in p.starts.iter().enumerate() {
+        let id = i as u32;
+        eng.schedule_at(SimTime::from_nanos(at), move |s, e| heap_fire(s, e, id, 0));
+    }
+    eng.run_to_completion(&mut st);
+    (st.log, eng.fired())
+}
+
+/// Assert identical pop order, with a shrink-friendly printout on the
+/// first divergence.
+fn assert_same_order(p: &Program, cal: &[Fired], heap: &[Fired]) {
+    if cal == heap {
+        return;
+    }
+    let i = cal
+        .iter()
+        .zip(heap.iter())
+        .position(|(a, b)| a != b)
+        .unwrap_or_else(|| cal.len().min(heap.len()));
+    let lo = i.saturating_sub(3);
+    let hi = (i + 4).min(cal.len().max(heap.len()));
+    let mut ctx = String::new();
+    for j in lo..hi {
+        ctx.push_str(&format!(
+            "  [{j}] calendar {:?}  heap {:?}{}\n",
+            cal.get(j),
+            heap.get(j),
+            if j == i { "   <-- first divergence" } else { "" }
+        ));
+    }
+    panic!(
+        "engines diverged (seed {}, {} ops): calendar fired {}, heap fired {}, \
+         first divergence at event {i}\n{ctx}\
+         replay: gen_program({}, {})",
+        p.seed,
+        p.starts.len(),
+        cal.len(),
+        heap.len(),
+        p.seed,
+        p.starts.len(),
+    );
+}
+
+fn check_seed(seed: u64, ops: usize) {
+    let p = gen_program(seed, ops);
+    let (cal, cal_fired) = run_calendar(&p);
+    let (heap, heap_fired) = run_heap(&p);
+    assert_same_order(&p, &cal, &heap);
+    assert_eq!(cal_fired, heap_fired, "fired counters diverged (seed {seed})");
+    assert_eq!(cal.len() as u64, cal_fired, "log length is the fired count");
+    // times must be monotone — both engines, same contract
+    for w in cal.windows(2) {
+        assert!(w[0].0 <= w[1].0, "time went backwards: {w:?} (seed {seed})");
+    }
+}
+
+#[test]
+fn differential_random_schedules() {
+    for seed in 0..24u64 {
+        check_seed(seed * 7919 + 1, 60);
+    }
+}
+
+#[test]
+fn differential_tie_heavy_schedules() {
+    // a tiny time grid forces nearly everything onto shared ticks, so
+    // ordering is carried almost entirely by the insertion seq
+    for seed in [3u64, 17, 404, 9001] {
+        let mut p = gen_program(seed, 80);
+        for at in p.starts.iter_mut() {
+            *at %= 3_000_000; // 3 grid points at the 1ms cluster step
+        }
+        for hops in p.hops.iter_mut() {
+            for d in hops.iter_mut() {
+                *d %= 2_000_000; // reschedules collide too
+            }
+        }
+        let (cal, _) = run_calendar(&p);
+        let (heap, _) = run_heap(&p);
+        assert_same_order(&p, &cal, &heap);
+    }
+}
+
+#[test]
+fn differential_overflow_heavy_schedules() {
+    // bias everything far past the calendar ring so the overflow map
+    // and its drain-back path carry the whole schedule
+    for seed in [5u64, 88, 123456] {
+        let mut p = gen_program(seed, 40);
+        for (i, at) in p.starts.iter_mut().enumerate() {
+            *at += (i as u64 % 5) * 400_000_000_000; // 0..1600s spread
+        }
+        let (cal, _) = run_calendar(&p);
+        let (heap, _) = run_heap(&p);
+        assert_same_order(&p, &cal, &heap);
+    }
+}
+
+#[test]
+fn zero_delay_chains_fire_in_seq_order_on_one_tick() {
+    // two ops at the same instant, each rescheduling itself twice with
+    // zero delay: the contract interleaves them by seq, never batches
+    let p = Program {
+        seed: 0,
+        starts: vec![1_000, 1_000],
+        hops: vec![vec![0, 0], vec![0, 0]],
+    };
+    let (cal, _) = run_calendar(&p);
+    let (heap, _) = run_heap(&p);
+    assert_same_order(&p, &cal, &heap);
+    // op 0 was inserted first: hop 0 of each op in id order, then the
+    // zero-delay hops in the order they were (re)scheduled
+    assert_eq!(
+        cal,
+        vec![
+            (1_000, 0, 0),
+            (1_000, 1, 0),
+            (1_000, 0, 1),
+            (1_000, 1, 1),
+            (1_000, 0, 2),
+            (1_000, 1, 2),
+        ]
+    );
+}
+
+// ---------------------------------------------------------------------
+// CalendarQueue direct tests at tiny geometry, where wrap-around and
+// overflow drain are hit constantly instead of at the 275s horizon
+// ---------------------------------------------------------------------
+
+#[test]
+fn tiny_geometry_pops_sorted_with_seq_ties() {
+    // 8 buckets x 16ns: a 128ns ring horizon
+    let mut q: CalendarQueue<u32> = CalendarQueue::with_geometry(4, 3);
+    let mut rng = Rng::new(42);
+    let mut expect: Vec<(u64, u64, u32)> = Vec::new();
+    for seq in 0..200u64 {
+        let t = rng.gen_range(1_000); // ~8x the ring horizon: heavy overflow
+        q.push(t, seq, seq as u32);
+        expect.push((t, seq, seq as u32));
+    }
+    expect.sort();
+    let mut got = Vec::new();
+    while let Some(e) = q.pop() {
+        got.push(e);
+    }
+    assert_eq!(got, expect, "tiny-geometry pop order is (key, seq) sorted");
+}
+
+#[test]
+fn tiny_geometry_interleaves_pushes_with_pops() {
+    let mut q: CalendarQueue<u32> = CalendarQueue::with_geometry(4, 3);
+    let mut rng = Rng::new(7);
+    let mut reference: Vec<(u64, u64)> = Vec::new();
+    let mut now = 0u64;
+    let mut seq = 0u64;
+    let mut popped = Vec::new();
+    let mut expected = Vec::new();
+    for _ in 0..500 {
+        if rng.gen_range(3) > 0 || reference.is_empty() {
+            // push at or after the cursor, sometimes exactly at it
+            let t = now + rng.gen_range(300);
+            q.push(t, seq, seq as u32);
+            reference.push((t, seq));
+            seq += 1;
+        } else {
+            reference.sort();
+            let (t, s) = reference.remove(0);
+            expected.push((t, s));
+            let got = q.pop().expect("queue and reference agree on length");
+            popped.push((got.0, got.1));
+            now = t.max(now);
+        }
+    }
+    assert_eq!(popped, expected, "interleaved pops follow the sorted reference");
+}
+
+#[test]
+fn peek_matches_pop_across_bucket_advances() {
+    let mut q: CalendarQueue<u8> = CalendarQueue::with_geometry(4, 2);
+    for (seq, t) in [500u64, 3, 3, 64, 17, 1000, 64].into_iter().enumerate() {
+        q.push(t, seq as u64, 0);
+    }
+    while !q.is_empty() {
+        let peeked = q.peek_key().expect("non-empty");
+        let (t, s, _) = q.pop().expect("non-empty");
+        assert_eq!(peeked, (t, s), "peek_key must preview exactly the next pop");
+    }
+    assert_eq!(q.pop(), None);
+    assert_eq!(q.peek_key(), None);
+}

@@ -5,11 +5,13 @@
 //! `--no-default-features` CI configuration.
 
 use std::collections::BTreeMap;
-use vhpc::cluster::head::{JobKind, JobState};
+use vhpc::cluster::head::{Head, JobKind, JobState};
 use vhpc::cluster::vcluster::VirtualCluster;
 use vhpc::config::ClusterSpec;
 use vhpc::faults::FaultPlan;
+use vhpc::ha::failover::decode_wal_listing;
 use vhpc::ha::run_ha_trace;
+use vhpc::ha::wal::{replay, WAL_PREFIX};
 use vhpc::sim::SimTime;
 use vhpc::util::ids::MachineId;
 
@@ -271,6 +273,109 @@ fn machine_death_during_the_outage_is_not_a_phantom_completion() {
     // the zombie attempt's original timer fired into the new epoch and
     // was fenced — never completing the rerun early
     assert!(vc.metrics().counter("ha_dropped_completions") >= 1);
+}
+
+/// A finished run's replicated WAL, as owned `(key, value)` pairs in
+/// key (= sequence) order, plus the run's full decoded event list.
+fn finished_wal() -> (Vec<(String, String)>, Vec<vhpc::ha::WalEvent>) {
+    let (_o, vc) = run_ha_trace(spec(), &trace(), None, 36, 2400).expect("must drain");
+    let listing: Vec<(String, String)> = vc
+        .state
+        .consul
+        .kv()
+        .list_prefix(WAL_PREFIX)
+        .into_iter()
+        .map(|(k, v)| (k.to_string(), v.to_string()))
+        .collect();
+    let refs: Vec<(&str, &str)> = listing.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
+    let (full, errs) = decode_wal_listing(&refs, 0);
+    assert_eq!(errs, 0, "a healthy log must decode clean");
+    assert!(!listing.is_empty());
+    (listing, full)
+}
+
+fn lines_of(listing: &[(String, String)]) -> usize {
+    listing.iter().map(|(_, v)| v.lines().count()).sum()
+}
+
+/// A crash that lands *between* flush batches loses whole engine
+/// events only: the surviving log decodes byte-identically to a prefix
+/// of the full run's event list, with zero decode errors.
+#[test]
+fn crash_between_wal_batches_replays_a_byte_identical_prefix() {
+    let (listing, full) = finished_wal();
+    assert!(
+        listing.iter().any(|(_, v)| v.lines().count() >= 2),
+        "the flush path must batch multiple mutations per engine event"
+    );
+    assert_eq!(lines_of(&listing), full.len(), "one event per line, all decoded");
+    // chop off the last 1..=3 batches wholesale — each is everything a
+    // single engine event journaled, so each cut is a valid crash point
+    for cut in 1..=listing.len().min(3) {
+        let survived = &listing[..listing.len() - cut];
+        let refs: Vec<(&str, &str)> =
+            survived.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
+        let (events, errs) = decode_wal_listing(&refs, 0);
+        assert_eq!(errs, 0, "batch boundaries are clean crash points");
+        assert_eq!(events.len(), lines_of(survived));
+        assert_eq!(
+            events[..],
+            full[..events.len()],
+            "the surviving log is byte-identical to a prefix of the full log"
+        );
+    }
+}
+
+/// A write torn *mid-batch* must truncate replay at the hole: the
+/// decoded log is the clean per-line prefix of the torn engine event,
+/// and nothing from any later batch is spliced in behind the tear —
+/// the half-flushed event's missing mutations can never be papered
+/// over by subsequent entries.
+#[test]
+fn torn_mid_batch_wal_write_truncates_at_the_hole_and_splices_nothing() {
+    let (listing, full) = finished_wal();
+    // a multi-line batch with later batches behind it, so a splice —
+    // were the reader willing to skip the hole — would have material
+    let b = listing
+        .iter()
+        .enumerate()
+        .position(|(i, (_, v))| v.lines().count() >= 2 && i + 1 < listing.len())
+        .expect("need a multi-event batch that is not the final entry");
+    let batch_lines: Vec<&str> = listing[b].1.lines().collect();
+    let keep = batch_lines.len() / 2; // >= 1: the tear lands mid-batch
+    let mut torn_value = batch_lines[..keep].join("\n");
+    torn_value.push('\n');
+    // the torn tail: the next line's first few bytes, as a partial
+    // write would leave them — guaranteed undecodable (truncated tag)
+    torn_value.push_str(&batch_lines[keep][..batch_lines[keep].len().min(3)]);
+    let mut torn = listing.clone();
+    torn[b].1 = torn_value;
+
+    let refs: Vec<(&str, &str)> = torn.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
+    let (events, errs) = decode_wal_listing(&refs, 0);
+    assert_eq!(errs, 1, "exactly the torn line fails to decode");
+    let expect = lines_of(&listing[..b]) + keep;
+    assert_eq!(
+        events.len(),
+        expect,
+        "replay is the full batches before the tear plus the torn batch's clean lines"
+    );
+    assert_eq!(
+        events[..],
+        full[..expect],
+        "the truncated replay is a clean prefix — nothing reordered, nothing spliced"
+    );
+    // in particular: not a single event from the batches behind the
+    // tear survived, even though they decode fine in isolation
+    let behind: Vec<(&str, &str)> =
+        listing[b + 1..].iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
+    let (behind_events, behind_errs) = decode_wal_listing(&behind, 0);
+    assert_eq!(behind_errs, 0);
+    assert!(!behind_events.is_empty(), "there was real work behind the tear");
+    // and the truncated log replays into a head without tripping any
+    // invariant — the takeover path accepts a torn log as-is
+    let mut head = Head::new();
+    assert_eq!(replay(&mut head, &events), events.len());
 }
 
 /// The partial-partition satellite: an agent that can reach only a
