@@ -18,6 +18,8 @@ struct Outcome {
     all_done_at: Option<f64>,
     peak_nodes: usize,
     final_nodes: usize,
+    /// `autoscale_reason_*` decision counters at the end of the run.
+    reasons: std::collections::BTreeMap<String, u64>,
 }
 
 fn run(boot_secs: u64, autoscale: bool, min_nodes: u32) -> Outcome {
@@ -64,11 +66,18 @@ fn run(boot_secs: u64, autoscale: bool, min_nodes: u32) -> Outcome {
     }
     // drain the idle period to observe scale-down
     vc.advance(SimTime::from_secs(400));
+    let reasons = vc
+        .metrics()
+        .counters_snapshot()
+        .into_iter()
+        .filter(|(k, _)| k.starts_with("autoscale_reason_"))
+        .collect();
     Outcome {
         time_to_capacity,
         all_done_at,
         peak_nodes: peak,
         final_nodes: vc.ready_compute_nodes(),
+        reasons,
     }
 }
 
@@ -126,6 +135,35 @@ fn main() {
     assert!(static1.all_done_at.is_none(), "1 static node must starve the burst");
     // autoscaler returns to min after idleness
     assert_eq!(auto90.final_nodes, 1, "must scale back to min after idle");
+
+    // every decision is accounted for by reason: the burst forces
+    // queued-demand scale-ups, the idle drain forces a low-util
+    // scale-down, and a disabled autoscaler never decides at all
+    for o in [auto90, auto30] {
+        assert!(
+            o.reasons.get("autoscale_reason_queued_demand").copied().unwrap_or(0) > 0,
+            "burst must register queued-demand decisions, got {:?}",
+            o.reasons
+        );
+        assert!(
+            o.reasons.get("autoscale_reason_low_util").copied().unwrap_or(0) > 0,
+            "idle drain must register a low-util scale-down, got {:?}",
+            o.reasons
+        );
+    }
+    // boot latency (90s) spans several 5s policy ticks after the first
+    // scale-up: the cooldown must be seen holding at least once
+    assert!(
+        auto90.reasons.get("autoscale_reason_cooldown_held").copied().unwrap_or(0) > 0,
+        "slow boot must register cooldown-held decisions, got {:?}",
+        auto90.reasons
+    );
+    assert!(
+        static1.reasons.is_empty() && static3.reasons.is_empty(),
+        "a disabled autoscaler must emit no reason counters: {:?} / {:?}",
+        static1.reasons,
+        static3.reasons
+    );
 
     banner("Ext-B2 — mixed-width trace: serial (seed) head vs slot-aware backfill");
     let serial = run_mix(1);

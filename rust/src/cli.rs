@@ -17,6 +17,9 @@
 //!                 [--max-retries K] [--sim-seconds S] [--shards N]
 //! vhpc ha         [--jobs N] [--machines M] [--crash-at S] [--lock-ttl S]
 //!                 [--snapshot-every N] [--ticks T]   (drain deadline, 1s ticks)
+//! vhpc acct       TRACE_FILE [--format json|table] [--tenant T]
+//!                 [--state S] [--since SECS]   (sacct-style accounting
+//!                 over a `--trace` event log)
 //! vhpc perf       [--jobs N] [--tenants N] [--machines M] [--shards N]
 //!                 [--seed S] [--duration S] [--out F]
 //!                 [--baseline F] [--gate PCT]   (large-trace throughput
@@ -27,6 +30,11 @@
 //! vhpc lint       [--fix-waivers] [paths…]
 //! vhpc version
 //! ```
+//!
+//! The in-process drivers (`up`, `run`, `mix`, `tenants`, `chaos`,
+//! `ha`) all take `--trace FILE` to stream the structured event log
+//! ([`crate::obs`]) to a JSON-lines file; `--trace` cannot be combined
+//! with `--shards` (the partitioned conductor path is untraced).
 
 use crate::cluster::head::JobKind;
 use crate::cluster::policy::{PolicyKind, SchedulePolicy};
@@ -99,7 +107,24 @@ fn load_spec(flags: &HashMap<String, String>) -> Result<ClusterSpec, String> {
             other => return Err(format!("unknown bridge mode {other}")),
         };
     }
+    if let Some(path) = flags.get("trace") {
+        spec.trace_path = Some(path.clone());
+    }
     Ok(spec)
+}
+
+/// Sharded (conductor) runs don't carry a trace bus — the in-process
+/// drivers do. Reject the combination loudly instead of silently
+/// writing an empty file.
+fn reject_sharded_trace(spec: &ClusterSpec) -> Result<(), String> {
+    if spec.trace_path.is_some() {
+        return Err(
+            "--trace is not supported together with --shards (the partitioned \
+             conductor path emits no trace events); drop one of the flags"
+                .into(),
+        );
+    }
+    Ok(())
 }
 
 fn cmd_up(flags: HashMap<String, String>) -> Result<(), String> {
@@ -203,6 +228,7 @@ fn cmd_mix(flags: HashMap<String, String>) -> Result<(), String> {
     // sharded runs only — mirrors `vhpc ha --ticks`
     let ticks: u64 = flag(&flags, "ticks", 0u64)?;
     if shards > 0 {
+        reject_sharded_trace(&spec)?;
         let cfg = crate::cluster::ShardRunConfig {
             shards,
             warmup_slots: warmup,
@@ -284,6 +310,7 @@ fn cmd_tenants(flags: HashMap<String, String>) -> Result<(), String> {
     let policy = SchedulePolicy::new(kind);
     let shards: usize = flag(&flags, "shards", 0usize)?;
     if shards > 0 {
+        reject_sharded_trace(&spec)?;
         let cap_slots = spec.max_advertisable_slots();
         if cap_slots == 0 {
             return Err("cluster has no compute capacity (needs >= 2 machines)".into());
@@ -392,6 +419,7 @@ fn cmd_chaos(flags: HashMap<String, String>) -> Result<(), String> {
     let warmup = (spec.autoscale.min_nodes * spec.slots_per_node).clamp(1, cap_slots);
     let shards: usize = flag(&flags, "shards", 0usize)?;
     if shards > 0 {
+        reject_sharded_trace(&spec)?;
         // the sharded driver draws its own kill schedule from the spec seed
         spec.seed = seed;
         let reqs: Vec<crate::cluster::mix::JobReq> = trace
@@ -526,6 +554,7 @@ fn cmd_perf(mut flags: HashMap<String, String>) -> Result<(), String> {
         flags.insert("machines".to_string(), "32".to_string());
     }
     let spec = load_spec(&flags)?;
+    reject_sharded_trace(&spec)?;
     let jobs: usize = flag(&flags, "jobs", 100_000usize)?;
     let tenants: u64 = flag(&flags, "tenants", 10_000u64)?;
     let shards: usize = flag(&flags, "shards", 4usize)?;
@@ -585,6 +614,65 @@ fn cmd_perf(mut flags: HashMap<String, String>) -> Result<(), String> {
                 o.events_per_sec
             ));
         }
+    }
+    Ok(())
+}
+
+/// `vhpc acct` — sacct-style accounting over a structured trace file
+/// (written by any driver run with `--trace FILE`). Replays the event
+/// log into per-job and per-tenant history: waits, runtimes,
+/// slot-seconds, attempts, preemptions and final states. Unparseable
+/// lines are counted and skipped — a truncated or corrupt trace
+/// degrades to a partial report, never an error.
+fn cmd_acct(rest: &[String]) -> Result<(), String> {
+    // one positional operand (the trace file) plus --key value flags
+    let mut positional: Vec<String> = Vec::new();
+    let mut flag_args: Vec<String> = Vec::new();
+    let mut it = rest.iter();
+    while let Some(a) = it.next() {
+        if a.starts_with("--") {
+            flag_args.push(a.clone());
+            match it.next() {
+                Some(v) => flag_args.push(v.clone()),
+                None => return Err(format!("{a} needs a value")),
+            }
+        } else {
+            positional.push(a.clone());
+        }
+    }
+    let flags = parse_flags(&flag_args)?;
+    let path = match positional.as_slice() {
+        [p] => p,
+        _ => {
+            return Err(
+                "usage: vhpc acct TRACE_FILE [--format json|table] [--tenant T] \
+                 [--state S] [--since SECS]"
+                    .into(),
+            )
+        }
+    };
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    let report = crate::obs::acct::from_trace_lines(text.lines());
+    let filter = crate::obs::acct::AcctFilter {
+        tenant: match flags.get("tenant") {
+            Some(v) => Some(v.parse().map_err(|_| format!("bad --tenant: {v}"))?),
+            None => None,
+        },
+        state: flags.get("state").cloned(),
+        since: match flags.get("since") {
+            Some(v) => {
+                let secs: u64 = v.parse().map_err(|_| format!("bad --since: {v}"))?;
+                Some(SimTime::from_secs(secs))
+            }
+            None => None,
+        },
+    };
+    let report = report.filtered(&filter);
+    let format: String = flag(&flags, "format", "table".to_string())?;
+    match format.as_str() {
+        "json" => print!("{}", crate::obs::acct::render_json(&report)),
+        "table" => print!("{}", crate::obs::acct::render_table(&report)),
+        other => return Err(format!("unknown --format {other} (expected json or table)")),
     }
     Ok(())
 }
@@ -660,6 +748,7 @@ pub fn main() -> i32 {
         "tenants" => parse_flags(rest).and_then(cmd_tenants),
         "chaos" => parse_flags(rest).and_then(cmd_chaos),
         "ha" => parse_flags(rest).and_then(cmd_ha),
+        "acct" => cmd_acct(rest),
         "perf" => parse_flags(rest).and_then(cmd_perf),
         "build" => parse_flags(rest).and_then(cmd_build),
         "bench-net" => parse_flags(rest).and_then(cmd_bench_net),
@@ -673,11 +762,14 @@ pub fn main() -> i32 {
                  vhpc tenants   [--tenants N] [--policy fifo|easy|priority|fairshare] [--duration S] [--rate R] [--skew S] [--seed S] [--max-queued N] [--defer-over-quota true|false] [--sim-seconds S] [--shards N] [--crash-at S]\n  \
                  vhpc chaos     [--jobs N] [--machines M] [--seed S] [--mtbf SECS] [--max-retries K] [--sim-seconds S] [--shards N]\n  \
                  vhpc ha        [--jobs N] [--machines M] [--crash-at S] [--lock-ttl S] [--snapshot-every N] [--ticks T]\n  \
+                 vhpc acct      TRACE_FILE [--format json|table] [--tenant T] [--state S] [--since SECS]\n  \
                  vhpc perf      [--jobs N] [--tenants N] [--machines M] [--shards N] [--seed S] [--duration S] [--out F] [--baseline F] [--gate PCT]\n  \
                  vhpc build     [--dockerfile F]\n  \
                  vhpc bench-net [--bridge docker0|bridge0|host]\n  \
                  vhpc lint      [--fix-waivers] [paths…]   (determinism static analysis; see lint.toml)\n  \
-                 vhpc version"
+                 vhpc version\n\n\
+                 in-process drivers (up/run/mix/tenants/chaos/ha) also take --trace FILE\n\
+                 (JSON-lines event log, queryable with `vhpc acct`; incompatible with --shards)"
             );
             Ok(())
         }

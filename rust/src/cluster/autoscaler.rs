@@ -67,6 +67,72 @@ pub enum ScaleAction {
     Down(u32),
 }
 
+/// Why the policy decided what it decided — the part of an autoscale
+/// verdict that used to vanish. Surfaced as a trace-event field and as
+/// the `autoscale_reason_*` counter family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleReason {
+    /// `Up`: queued demand outran ready + provisioning capacity.
+    QueuedDemand,
+    /// `Up`: part of the powered pool is unhealthy, so a replacement
+    /// boots even though enough machines are nominally on.
+    UnhealthyReplacement,
+    /// Held: raw queue demand wanted more nodes, but the tenant
+    /// share cap trimmed the weighted figure — one hog cannot force
+    /// unbounded scale-up.
+    ShareCap,
+    /// `Down`: sustained low utilization (hysteresis satisfied).
+    LowUtil,
+    /// Held: the policy wanted to act but a cooldown (or the
+    /// scale-down hysteresis window) is still running.
+    CooldownHeld,
+    /// Nothing to do: capacity matches demand.
+    Steady,
+}
+
+impl ScaleReason {
+    /// The stable kebab-case code used in trace lines.
+    pub fn code(self) -> &'static str {
+        match self {
+            ScaleReason::QueuedDemand => "queued-demand",
+            ScaleReason::UnhealthyReplacement => "unhealthy-replacement",
+            ScaleReason::ShareCap => "share-cap",
+            ScaleReason::LowUtil => "low-util",
+            ScaleReason::CooldownHeld => "cooldown-held",
+            ScaleReason::Steady => "steady",
+        }
+    }
+
+    /// Inverse of [`ScaleReason::code`] (trace parsing).
+    pub fn from_code(code: &str) -> Option<ScaleReason> {
+        match code {
+            "queued-demand" => Some(ScaleReason::QueuedDemand),
+            "unhealthy-replacement" => Some(ScaleReason::UnhealthyReplacement),
+            "share-cap" => Some(ScaleReason::ShareCap),
+            "low-util" => Some(ScaleReason::LowUtil),
+            "cooldown-held" => Some(ScaleReason::CooldownHeld),
+            "steady" => Some(ScaleReason::Steady),
+            _ => None,
+        }
+    }
+
+    /// The `Metrics` counter this reason increments, or `None` for
+    /// `Steady` (an uneventful interval is not a decision worth a
+    /// counter — the five named codes are).
+    pub fn counter_name(self) -> Option<&'static str> {
+        match self {
+            ScaleReason::QueuedDemand => Some("autoscale_reason_queued_demand"),
+            ScaleReason::UnhealthyReplacement => {
+                Some("autoscale_reason_unhealthy_replacement")
+            }
+            ScaleReason::ShareCap => Some("autoscale_reason_share_cap"),
+            ScaleReason::LowUtil => Some("autoscale_reason_low_util"),
+            ScaleReason::CooldownHeld => Some("autoscale_reason_cooldown_held"),
+            ScaleReason::Steady => None,
+        }
+    }
+}
+
 /// Stateful policy wrapper (per-direction cooldowns + low-utilization
 /// tracking).
 #[derive(Debug, Clone)]
@@ -120,8 +186,16 @@ impl Autoscaler {
 
     /// Evaluate the policy.
     pub fn decide(&mut self, obs: Observation) -> ScaleAction {
+        self.decide_with_reason(obs).0
+    }
+
+    /// Evaluate the policy, returning both the action and *why* — the
+    /// reason rides into trace events and the `autoscale_reason_*`
+    /// counters. Behaviour is identical to [`Autoscaler::decide`] (which
+    /// delegates here).
+    pub fn decide_with_reason(&mut self, obs: Observation) -> (ScaleAction, ScaleReason) {
         if !self.config.enabled {
-            return ScaleAction::None;
+            return (ScaleAction::None, ScaleReason::Steady);
         }
         let target = self.target_nodes(obs.demanded_slots(), obs.slots_per_node);
 
@@ -139,11 +213,13 @@ impl Autoscaler {
         }
 
         let have = obs.ready_nodes + obs.provisioning_nodes;
-        let action = if have < target {
+        let (action, reason) = if have < target {
             if self.up_in_cooldown(obs.now) {
-                ScaleAction::None
+                (ScaleAction::None, ScaleReason::CooldownHeld)
+            } else if obs.unhealthy_nodes > 0 {
+                (ScaleAction::Up(target - have), ScaleReason::UnhealthyReplacement)
             } else {
-                ScaleAction::Up(target - have)
+                (ScaleAction::Up(target - have), ScaleReason::QueuedDemand)
             }
         } else if obs.ready_nodes > target {
             // scale down only after sustained low utilization (hysteresis)
@@ -152,12 +228,21 @@ impl Autoscaler {
                 .map(|t| obs.now.saturating_sub(t) >= self.config.idle_timeout)
                 .unwrap_or(false);
             if low_long_enough && !self.down_in_cooldown(obs.now) {
-                ScaleAction::Down(obs.ready_nodes - target)
+                (ScaleAction::Down(obs.ready_nodes - target), ScaleReason::LowUtil)
             } else {
-                ScaleAction::None
+                (ScaleAction::None, ScaleReason::CooldownHeld)
             }
         } else {
-            ScaleAction::None
+            // capacity matches the *weighted* demand. If the raw queue
+            // wanted more and the share cap trimmed it, that cap — not
+            // satisfied demand — is what's holding the pool size.
+            let raw_target =
+                self.target_nodes(obs.queued_slots + obs.reserved_slots, obs.slots_per_node);
+            if have < raw_target {
+                (ScaleAction::None, ScaleReason::ShareCap)
+            } else {
+                (ScaleAction::None, ScaleReason::Steady)
+            }
         };
 
         match action {
@@ -168,7 +253,7 @@ impl Autoscaler {
         if action != ScaleAction::None {
             self.actions.push((obs.now, action));
         }
-        action
+        (action, reason)
     }
 
     /// Re-arm the per-direction cooldowns from WAL-replayed marks: a
@@ -394,6 +479,71 @@ mod tests {
         assert_eq!(a.decide(obs(0, 0, 0, 0)), ScaleAction::None);
         // demand clamps into the normalized [1, 2] band
         assert_eq!(a.decide(obs(5, 0, 0, 999)), ScaleAction::Up(2));
+    }
+
+    #[test]
+    fn reasons_name_the_decision() {
+        let mut a = Autoscaler::new(config());
+        // scale-up for queued work
+        assert_eq!(
+            a.decide_with_reason(obs(0, 1, 0, 40)),
+            (ScaleAction::Up(3), ScaleReason::QueuedDemand)
+        );
+        // same demand inside the Up cooldown: held
+        assert_eq!(
+            a.decide_with_reason(obs(5, 1, 1, 40)),
+            (ScaleAction::None, ScaleReason::CooldownHeld)
+        );
+
+        // an unhealthy node demanding a replacement boot
+        let mut b = Autoscaler::new(config());
+        assert_eq!(
+            b.decide_with_reason(obs_u(0, 2, 1, 0, 12, 24)),
+            (ScaleAction::Up(1), ScaleReason::UnhealthyReplacement)
+        );
+
+        // share-capped demand: raw queue wants 5 nodes, weighted is
+        // satisfied by the 2 we have — the cap is the binding reason
+        let mut c = Autoscaler::new(config());
+        let mut o = obs(0, 2, 0, 24);
+        o.queued_slots = 60;
+        assert_eq!(c.decide_with_reason(o), (ScaleAction::None, ScaleReason::ShareCap));
+
+        // sustained low utilization names the Down; steady is steady
+        let mut d = Autoscaler::new(config());
+        assert_eq!(d.decide_with_reason(obs(0, 3, 0, 0)).1, ScaleReason::CooldownHeld);
+        assert_eq!(
+            d.decide_with_reason(obs(121, 3, 0, 0)),
+            (ScaleAction::Down(2), ScaleReason::LowUtil)
+        );
+        let mut e = Autoscaler::new(config());
+        assert_eq!(
+            e.decide_with_reason(obs_r(0, 3, 0, 0, 36)),
+            (ScaleAction::None, ScaleReason::Steady)
+        );
+    }
+
+    #[test]
+    fn reason_codes_roundtrip_and_map_to_counters() {
+        let all = [
+            ScaleReason::QueuedDemand,
+            ScaleReason::UnhealthyReplacement,
+            ScaleReason::ShareCap,
+            ScaleReason::LowUtil,
+            ScaleReason::CooldownHeld,
+            ScaleReason::Steady,
+        ];
+        for r in all {
+            assert_eq!(ScaleReason::from_code(r.code()), Some(r));
+            match r {
+                ScaleReason::Steady => assert!(r.counter_name().is_none()),
+                _ => {
+                    let name = r.counter_name().unwrap();
+                    assert!(name.starts_with("autoscale_reason_"), "{name}");
+                }
+            }
+        }
+        assert_eq!(ScaleReason::from_code("nope"), None);
     }
 
     #[test]

@@ -764,6 +764,9 @@ impl Head {
     /// its running-slot quota are invisible to the policy, so an
     /// over-quota job never blocks other tenants' work behind it.
     pub fn start_next(&mut self, now: SimTime) -> Option<StartedJob> {
+        // wall-clock phase timer: inert unless the perf harness enabled
+        // profiling (virtual time and scheduling are untouched either way)
+        let _policy_timer = crate::obs::profiling::scoped("policy_sort");
         if self.admit_deferred() > 0 {
             self.log(crate::ha::wal::WalEvent::Admitted { at: now });
         }

@@ -241,6 +241,24 @@ mod tests {
     }
 
     #[test]
+    fn observe_after_render_invalidates_the_registry_cache_too() {
+        // render() warms every histogram's sorted cache through &self;
+        // a later observe() on the registry must still invalidate it
+        let mut m = Metrics::new();
+        m.observe("lat", 1.0);
+        assert!(m.render().contains("p99=1.000"));
+        m.observe("lat", 9.0);
+        assert_eq!(m.histogram("lat").unwrap().percentile(99.0), 9.0);
+        assert!(m.render().contains("p99=9.000"), "{}", m.render());
+        // same rule for the per-tenant breakdowns
+        let mut b = TenantBreakdown::default();
+        b.observe(7, 1.0);
+        assert_eq!(b.histogram(7).unwrap().percentile(99.0), 1.0);
+        b.observe(7, 4.0);
+        assert_eq!(b.histogram(7).unwrap().percentile(99.0), 4.0);
+    }
+
+    #[test]
     fn counters_snapshot_is_stable_and_complete() {
         let mut m = Metrics::new();
         m.inc("b");

@@ -123,6 +123,10 @@ pub struct PerfOutcome {
     pub counters: BTreeMap<String, u64>,
     pub engine: EngineBench,
     pub phases: Vec<PhaseStats>,
+    /// Per-phase wall-time breakdown from the scoped profiling timers
+    /// (`policy_sort`, `wal_flush`, `gossip_tick`, `window_merge`,
+    /// `jacobi_sweep`), captured over the cluster phase.
+    pub profile: Vec<crate::obs::profiling::PhaseProfile>,
 }
 
 // ---------------------------------------------------------------------
@@ -348,6 +352,11 @@ pub fn run_perf_trace(
         deadline_secs: duration_secs.saturating_mul(4).max(3600),
         ..Default::default()
     };
+    // hold the profiling session for the cluster phase only: the scoped
+    // timers in the scheduler/WAL/shard paths light up here and nowhere
+    // else, and the lock keeps parallel perf tests from cross-draining
+    let profiling_session = crate::obs::profiling::session();
+    crate::obs::profiling::enable();
     let t0 = Instant::now();
     let o = run_sharded_tenants(
         spec,
@@ -357,8 +366,12 @@ pub fn run_perf_trace(
         duration_secs,
         &cfg,
     )
-    .map_err(|e| e.to_string())?;
+    .map_err(|e| e.to_string());
     let cluster_secs = t0.elapsed().as_secs_f64().max(1e-9);
+    // drain before propagating any error so ENABLED never leaks on
+    let profile = crate::obs::profiling::drain();
+    drop(profiling_session);
+    let o = o?;
     if o.arrivals_fingerprint != arrivals_fingerprint {
         return Err(format!(
             "arrival stream diverged between synthesis ({arrivals_fingerprint:016x}) \
@@ -390,6 +403,7 @@ pub fn run_perf_trace(
         counters: o.fingerprint,
         engine,
         phases: vec![arrivals_stats, cal_stats, heap_stats, cluster_stats],
+        profile,
     })
 }
 
@@ -461,6 +475,22 @@ pub fn render_json(o: &PerfOutcome) -> String {
             p.latency.p99_ms,
             p.latency.max_ms,
             if i + 1 < o.phases.len() { "," } else { "" }
+        ));
+    }
+    j.push_str("  ],\n");
+    j.push_str("  \"profile\": [\n");
+    for (i, p) in o.profile.iter().enumerate() {
+        j.push_str(&format!(
+            "    {{\"phase\": \"{}\", \"count\": {}, \"total_secs\": {:.4}, \
+             \"mean_us\": {:.3}, \"p50_us\": {:.3}, \"p99_us\": {:.3}, \"max_us\": {:.3}}}{}\n",
+            p.phase,
+            p.count,
+            p.total_secs,
+            p.mean_us,
+            p.p50_us,
+            p.p99_us,
+            p.max_us,
+            if i + 1 < o.profile.len() { "," } else { "" }
         ));
     }
     j.push_str("  ]\n}\n");
@@ -562,6 +592,7 @@ mod tests {
                 wall_secs: 0.01,
                 latency: percentiles(&[1.0, 2.0]),
             }],
+            profile: Vec::new(),
         };
         let json = render_json(&o);
         assert_eq!(parse_events_per_sec(&json), Some(56789.0));
@@ -587,7 +618,12 @@ mod tests {
         assert!(o.events > 0);
         assert!(o.events_per_sec > 0.0);
         assert_eq!(o.phases.len(), 4);
+        // the scoped timers in the shard/scheduler paths ran under the
+        // harness's profiling session: the breakdown must not be empty
+        assert!(!o.profile.is_empty(), "per-phase profile missing");
+        assert!(o.profile.iter().any(|p| p.phase == "window_merge"));
         let json = render_json(&o);
         assert_eq!(parse_events_per_sec(&json), Some(o.events_per_sec.round()));
+        assert!(json.contains("\"profile\": ["));
     }
 }

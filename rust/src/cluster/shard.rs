@@ -136,6 +136,7 @@ impl ShardMsg {
 }
 
 fn sort_batch(batch: &mut Vec<(usize, ShardMsg)>) {
+    let _t = crate::obs::profiling::scoped("window_merge");
     // stable: same-key messages (none in practice) keep sender order
     batch.sort_by_key(|(_, m)| m.merge_key());
 }
@@ -336,6 +337,7 @@ impl SimEvent<ShardCore> for ShardEvent {
     fn fire(self, core: &mut ShardCore, eng: &mut Engine<ShardCore, ShardEvent>) {
         match self {
             ShardEvent::Heartbeat { machine, generation } => {
+                let _t = crate::obs::profiling::scoped("gossip_tick");
                 if core.draining {
                     return;
                 }
@@ -377,6 +379,7 @@ impl SimEvent<ShardCore> for ShardEvent {
                 }
             }
             ShardEvent::ComputeTick { id, attempt } => {
+                let _t = crate::obs::profiling::scoped("jacobi_sweep");
                 let sweeps = core.compute.sweeps_per_tick;
                 let alive = match core.jobs.get_mut(&id) {
                     Some(run) if run.attempt == attempt => {
@@ -944,7 +947,11 @@ impl Conductor {
             reserved_slots: self.head.reserved_slots(),
             slots_per_node: self.spec.slots_per_node,
         };
-        match self.autoscaler.decide(obs) {
+        let (action, reason) = self.autoscaler.decide_with_reason(obs);
+        if let Some(name) = reason.counter_name() {
+            self.metrics.inc(name);
+        }
+        match action {
             ScaleAction::None => {}
             ScaleAction::Up(n) => {
                 let picks: Vec<u32> = self.off.iter().copied().take(n as usize).collect();

@@ -13,7 +13,7 @@
 //! MPI jobs run with *real* PJRT compute on rank threads; their duration
 //! (virtual comm + real compute) is charged back into virtual time.
 
-use crate::cluster::autoscaler::{Autoscaler, Observation, ScaleAction};
+use crate::cluster::autoscaler::{Autoscaler, Observation, ScaleAction, ScaleReason};
 use crate::cluster::head::{
     Head, JobKind, JobRecord, JobSpec, JobState, LossOutcome, StartedJob, SubmitOutcome,
 };
@@ -28,6 +28,7 @@ use crate::hw::rack::Plant;
 use crate::hw::PowerState;
 use crate::mpi::hostfile::Hostfile;
 use crate::mpi::launcher::LaunchPlan;
+use crate::obs::{FileSink, TraceBus, TraceEvent, TraceSink};
 use crate::runtime::Runtime;
 use crate::sim::{Engine, SimEvent, SimTime};
 use crate::util::ids::{AgentId, ContainerId, JobId, MachineId};
@@ -96,6 +97,14 @@ pub struct ClusterState {
     /// Head-availability runtime state (WAL cursor, lease, epoch).
     /// Inert when `spec.ha.enabled` is false.
     pub ha: crate::ha::HaState,
+    /// Structured trace bus: lifecycle events buffer here and drain to
+    /// the configured sink at engine-event boundaries (the same cadence
+    /// as WAL batching). Inert — a single branch per emit — unless
+    /// `spec.trace_path` (or [`VirtualCluster::set_trace_sink`])
+    /// installed a sink. Its drop/write counters live on the bus, never
+    /// in [`Metrics`], so traced and untraced runs fingerprint
+    /// identically.
+    pub trace: TraceBus,
 }
 
 /// The facade: state + event engine.
@@ -232,7 +241,14 @@ impl VirtualCluster {
             partitioned_machines: vec![false; n],
             partial_machines: vec![false; n],
             partial_servers: Vec::new(),
+            trace: TraceBus::disabled(),
         };
+        if let Some(path) = state.spec.trace_path.clone() {
+            // an unopenable trace path is a configuration error reported
+            // up front; only mid-run sink failures degrade to drops
+            let sink = FileSink::create(&path).map_err(|e| anyhow!(e))?;
+            state.trace = TraceBus::with_sink(Box::new(sink));
+        }
         let ckpt = state.spec.jacobi_checkpoint_steps.max(1);
         state.head.checkpoint_every_steps = ckpt;
         state.head.completed_retention = state.spec.completed_retention;
@@ -537,6 +553,7 @@ impl VirtualCluster {
         Self::reap_lost_jobs(st, eng);
         Self::dispatch_jobs(st, eng);
         crate::ha::wal::flush(st);
+        st.trace.flush();
         eng.schedule_after(SimTime::from_secs(1), ClusterEvent::SchedulerTick);
     }
 
@@ -556,13 +573,26 @@ impl VirtualCluster {
     /// head's retry budget and record what happened. Also called by the
     /// HA takeover for jobs whose machine died during the head outage.
     pub(crate) fn job_lost(st: &mut ClusterState, now: SimTime, id: JobId, reason: &str) {
+        // tenant attribution must be read before the head moves the
+        // record out of the running pool
+        let tenant = st.head.running.get(&id).map(|r| r.spec.tenant).unwrap_or(0);
         match st.head.handle_lost_job(id, now, reason) {
-            LossOutcome::Requeued { wasted, .. } => {
+            LossOutcome::Requeued { attempt, wasted, .. } => {
                 st.metrics.inc("jobs_requeued");
                 st.metrics.observe("job_wasted_seconds", wasted.as_secs_f64());
+                st.trace.emit(TraceEvent::Requeue {
+                    at: now,
+                    epoch: st.ha.epoch,
+                    job: id,
+                    attempt,
+                    tenant,
+                    wasted,
+                });
             }
             LossOutcome::Abandoned { .. } => {
                 st.metrics.inc("jobs_lost");
+                st.trace
+                    .emit(TraceEvent::Abandon { at: now, epoch: st.ha.epoch, job: id, tenant });
             }
             LossOutcome::NotRunning => {}
         }
@@ -571,6 +601,7 @@ impl VirtualCluster {
     /// Start every currently startable job (FIFO + conservative
     /// backfill), each on its own reserved hostfile slice.
     fn dispatch_jobs(st: &mut ClusterState, eng: &mut Ev) {
+        let deferred_before = st.head.deferred_jobs();
         loop {
             let Some(started) = st.head.start_next(eng.now()) else { break };
             // preemptions already happened inside start_next — account
@@ -579,12 +610,48 @@ impl VirtualCluster {
                 st.metrics.add("jobs_preempted", started.preempted.len() as u64);
                 st.metrics
                     .observe("preempt_wasted_seconds", started.preempt_wasted.as_secs_f64());
+                for pid in &started.preempted {
+                    // the preempted job is already checkpointed back in
+                    // the queue: attribute it from there
+                    let tenant = st
+                        .head
+                        .queue
+                        .iter()
+                        .find(|(s, _)| s.id == *pid)
+                        .map(|(s, _)| s.tenant)
+                        .unwrap_or(0);
+                    st.trace.emit(TraceEvent::Preempt {
+                        at: eng.now(),
+                        epoch: st.ha.epoch,
+                        job: *pid,
+                        tenant,
+                    });
+                }
             }
+            st.trace.emit(TraceEvent::Dispatch {
+                at: eng.now(),
+                epoch: st.ha.epoch,
+                job: started.spec.id,
+                attempt: started.attempt,
+                tenant: started.spec.tenant,
+                ranks: started.spec.ranks,
+                backfilled: started.backfilled,
+            });
             if !Self::launch_job(st, eng, started) {
                 // launch aborted on a stale hostfile: wait for the next
                 // tick so the quarantine deregistration can commit
                 break;
             }
+        }
+        // quota re-admissions happen inside `start_next` (the head owns
+        // the pens): surface them as the net pen drain this round
+        let readmitted = deferred_before.saturating_sub(st.head.deferred_jobs());
+        if readmitted > 0 {
+            st.trace.emit(TraceEvent::QuotaAdmit {
+                at: eng.now(),
+                epoch: st.ha.epoch,
+                admitted: readmitted as u64,
+            });
         }
         st.metrics.set_gauge("running_jobs", st.head.running.len() as f64);
     }
@@ -607,6 +674,16 @@ impl VirtualCluster {
             let bad_addr = bad.addr;
             st.head.unlaunch(id, t0);
             st.metrics.inc("launch_aborts");
+            // mirrors the WAL's `Unlaunched`: the dispatch is undone and
+            // the job is back at the queue head with nothing charged
+            st.trace.emit(TraceEvent::Requeue {
+                at: t0,
+                epoch: st.ha.epoch,
+                job: id,
+                attempt: started.attempt,
+                tenant: started.spec.tenant,
+                wasted: SimTime::ZERO,
+            });
             if let Some(entry) = Catalog::list(st.consul.kv(), "hpc")
                 .into_iter()
                 .find(|e| e.address == bad_addr)
@@ -636,6 +713,15 @@ impl VirtualCluster {
                                 reason: reason.clone(),
                             });
                         }
+                        if st.trace.enabled() {
+                            st.trace.emit(TraceEvent::Fail {
+                                at: t0,
+                                epoch: st.ha.epoch,
+                                job: id,
+                                tenant: started.spec.tenant,
+                                reason: reason.clone(),
+                            });
+                        }
                         st.head.fail(id, reason);
                         return true;
                     }
@@ -657,6 +743,13 @@ impl VirtualCluster {
                 result,
             });
         }
+        st.trace.emit(TraceEvent::Launch {
+            at: t0,
+            epoch: st.ha.epoch,
+            job: id,
+            attempt: started.attempt,
+            planned: duration,
+        });
         st.metrics.inc("jobs_started");
         if started.backfilled {
             st.metrics.inc("backfill_starts");
@@ -704,6 +797,14 @@ impl VirtualCluster {
             };
             record.state = JobState::Done { started, finished: eng.now() };
             st.metrics.inc("jobs_completed");
+            st.trace.emit(TraceEvent::Complete {
+                at: eng.now(),
+                epoch: st.ha.epoch,
+                job: id,
+                attempt,
+                tenant: record.spec.tenant,
+                started,
+            });
             st.head.record_terminal(record);
             if let Some(t0) = st.head.first_failed_at.remove(&id) {
                 st.metrics
@@ -720,6 +821,7 @@ impl VirtualCluster {
         // freed slots: start waiting jobs now, not at the next tick
         Self::dispatch_jobs(st, eng);
         crate::ha::wal::flush(st);
+        st.trace.flush();
     }
 
     fn run_jacobi_job(
@@ -804,8 +906,22 @@ impl VirtualCluster {
             reserved_slots: st.head.reserved_slots(),
             slots_per_node: st.spec.slots_per_node,
         };
-        match st.autoscaler.decide(obs) {
+        let (action, reason) = st.autoscaler.decide_with_reason(obs);
+        // decision-level accounting: the reason counters fire whether or
+        // not the executor below finds machines to act on (a Down that
+        // retires nothing is still a low-util decision). Deterministic,
+        // so part of the counter fingerprint by design.
+        if let Some(name) = reason.counter_name() {
+            st.metrics.inc(name);
+        }
+        match action {
             ScaleAction::Up(n) => {
+                st.trace.emit(TraceEvent::ScaleUp {
+                    at: eng.now(),
+                    epoch: st.ha.epoch,
+                    nodes: n,
+                    reason,
+                });
                 let mut started = 0;
                 for i in 1..st.spec.machines {
                     if started == n {
@@ -822,6 +938,12 @@ impl VirtualCluster {
                 st.metrics.add("scale_up_nodes", started as u64);
             }
             ScaleAction::Down(n) => {
+                st.trace.emit(TraceEvent::ScaleDown {
+                    at: eng.now(),
+                    epoch: st.ha.epoch,
+                    nodes: n,
+                    reason,
+                });
                 // never retire a node whose slots are reserved by a
                 // running job — a retired host would orphan its ranks
                 let busy = st.head.reserved_addrs();
@@ -860,9 +982,20 @@ impl VirtualCluster {
                 }
                 st.metrics.add("scale_down_nodes", stopped as u64);
             }
-            ScaleAction::None => {}
+            ScaleAction::None => {
+                // a held decision is observable; a steady interval is
+                // noise and stays out of the trace
+                if matches!(reason, ScaleReason::CooldownHeld | ScaleReason::ShareCap) {
+                    st.trace.emit(TraceEvent::ScaleHold {
+                        at: eng.now(),
+                        epoch: st.ha.epoch,
+                        reason,
+                    });
+                }
+            }
         }
         crate::ha::wal::flush(st);
+        st.trace.flush();
         let interval = st.spec.spec_autoscale_interval();
         eng.schedule_after(interval, ClusterEvent::AutoscaleTick);
     }
@@ -933,6 +1066,15 @@ impl VirtualCluster {
                 "job needs {ranks} slots but the cluster can advertise at most {max_slots}"
             );
             self.state.metrics.inc("jobs_rejected");
+            if self.state.trace.enabled() {
+                self.state.trace.emit(TraceEvent::SubmitRejected {
+                    at: now,
+                    epoch: self.state.ha.epoch,
+                    job: id,
+                    tenant,
+                    reason: reason.clone(),
+                });
+            }
             if self.state.ha.head_down() {
                 // no head to record the rejection: write it straight to
                 // the WAL, the standby materializes the record at replay
@@ -940,6 +1082,7 @@ impl VirtualCluster {
                     &mut self.state,
                     crate::ha::wal::WalEvent::SubmitFailed { at: now, spec, reason },
                 );
+                self.state.trace.flush();
                 return id;
             }
             if self.state.head.journal_enabled() {
@@ -958,31 +1101,59 @@ impl VirtualCluster {
                 planned_duration: None,
             });
             crate::ha::wal::flush(&mut self.state);
+            self.state.trace.flush();
             return id;
         }
+        let submit_ev = TraceEvent::Submit {
+            at: now,
+            epoch: self.state.ha.epoch,
+            job: id,
+            tenant,
+            ranks,
+            priority,
+        };
         if self.state.ha.head_down() {
             // the head is down: a client's retry loop lands the
             // submission in the replicated WAL and the standby replays
             // it at takeover — no submitted work is ever lost to a head
             // crash
             self.state.metrics.inc("jobs_submitted");
+            self.state.trace.emit(submit_ev);
             crate::ha::wal::append_direct(
                 &mut self.state,
                 crate::ha::wal::WalEvent::Submitted { at: now, spec },
             );
+            self.state.trace.flush();
             return id;
         }
         match self.state.head.submit(spec, now) {
             SubmitOutcome::Queued => {
                 self.state.metrics.inc("jobs_submitted");
+                self.state.trace.emit(submit_ev);
             }
             SubmitOutcome::Deferred => {
                 self.state.metrics.inc("jobs_submitted");
                 self.state.metrics.inc("jobs_deferred_quota");
+                self.state.trace.emit(submit_ev);
+                self.state.trace.emit(TraceEvent::QuotaDefer {
+                    at: now,
+                    epoch: self.state.ha.epoch,
+                    job: id,
+                    tenant,
+                });
             }
             SubmitOutcome::Rejected { spec, reason } => {
                 self.state.metrics.inc("jobs_rejected");
                 self.state.metrics.inc("jobs_rejected_quota");
+                if self.state.trace.enabled() {
+                    self.state.trace.emit(TraceEvent::SubmitRejected {
+                        at: now,
+                        epoch: self.state.ha.epoch,
+                        job: id,
+                        tenant,
+                        reason: reason.clone(),
+                    });
+                }
                 self.state.head.record_terminal(JobRecord {
                     spec,
                     state: JobState::Failed { reason },
@@ -994,6 +1165,7 @@ impl VirtualCluster {
             }
         }
         crate::ha::wal::flush(&mut self.state);
+        self.state.trace.flush();
         id
     }
 
@@ -1050,6 +1222,7 @@ impl VirtualCluster {
                 Self::job_lost(st, now, id, &format!("machine {m} died under the job"));
             }
             crate::ha::wal::flush(st);
+            st.trace.flush();
         }
     }
 
@@ -1229,6 +1402,19 @@ impl VirtualCluster {
 
     pub fn metrics(&self) -> &Metrics {
         &self.state.metrics
+    }
+
+    /// Install (or replace) a trace sink programmatically — the
+    /// in-process equivalent of setting `spec.trace_path` (tests and
+    /// embedders use a [`MemSink`](crate::obs::MemSink) here).
+    pub fn set_trace_sink(&mut self, sink: Box<dyn TraceSink>) {
+        self.state.trace = TraceBus::with_sink(sink);
+    }
+
+    /// Drain the trace bus and push the sink's buffers durable (end of
+    /// run; also happens automatically when the cluster drops).
+    pub fn finish_trace(&mut self) {
+        self.state.trace.finish();
     }
 
     /// Journal the tenant arrival generator's resume cursor into the

@@ -193,6 +193,11 @@ pub struct ClusterSpec {
     /// keeps ~10k terminal records, far above any driver trace.
     pub completed_retention: usize,
     pub seed: u64,
+    /// Structured trace output: when set, the cluster opens a JSON-lines
+    /// [`TraceSink`](crate::obs::TraceSink) at this path and emits the
+    /// full lifecycle event stream into it (`--trace FILE` on the
+    /// drivers). `None` (the default) leaves the trace bus inert.
+    pub trace_path: Option<String>,
     pub autoscale: AutoscaleConfig,
     /// Per-tenant fair-share weight multipliers (`[tenant_weights]`
     /// section: `<tenant id> = <weight>`; a weight-2 tenant earns twice
@@ -226,6 +231,7 @@ impl ClusterSpec {
             jacobi_checkpoint_steps: crate::cluster::head::JACOBI_CHECKPOINT_STEPS,
             completed_retention: crate::cluster::head::DEFAULT_COMPLETED_RETENTION,
             seed: 42,
+            trace_path: None,
             autoscale: AutoscaleConfig::default(),
             tenant_weights: Vec::new(),
             ha: crate::ha::HaConfig::default(),
@@ -294,6 +300,9 @@ impl ClusterSpec {
             }
             if let Some(v) = c.get("image") {
                 spec.image = req_str("cluster", "image", v)?;
+            }
+            if let Some(v) = c.get("trace_path") {
+                spec.trace_path = Some(req_str("cluster", "trace_path", v)?);
             }
         }
         if let Some(m) = raw.get("machine") {

@@ -17,6 +17,13 @@ use crate::util::ids::MachineId;
 /// or out-of-range machines are ignored — chaos never decapitates the
 /// control plane.
 pub fn apply(st: &mut ClusterState, eng: &mut Engine<ClusterState, ClusterEvent>, kind: &FaultKind) {
+    if st.trace.enabled() {
+        st.trace.emit(crate::obs::TraceEvent::FaultInjected {
+            at: eng.now(),
+            epoch: st.ha.epoch,
+            kind: kind.label().into(),
+        });
+    }
     match kind {
         FaultKind::Crash { machine } => {
             if target_ok(st, *machine) {
@@ -84,6 +91,9 @@ pub fn apply(st: &mut ClusterState, eng: &mut Engine<ClusterState, ClusterEvent>
             }
         }
     }
+    // fault application is an engine-event boundary: drain the buffer
+    // here like the scheduler/WAL paths do
+    st.trace.flush();
 }
 
 fn target_ok(st: &ClusterState, machine: u32) -> bool {

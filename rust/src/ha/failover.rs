@@ -118,6 +118,11 @@ pub(crate) fn standby_monitor(st: &mut ClusterState, eng: &mut Engine<ClusterSta
     if !st.ha.head_alive && !st.ha.claiming {
         let lease = st.consul.health.status(HEAD_LEASE, eng.now());
         if lease != Some(CheckStatus::Passing) {
+            // observed from the standby's side: the dead head's epoch
+            st.trace.emit(crate::obs::TraceEvent::LeaseLost {
+                at: eng.now(),
+                epoch: st.ha.epoch,
+            });
             if st.ha.config.standbys > 1 {
                 start_claim(st, eng);
             } else {
@@ -310,6 +315,11 @@ pub(crate) fn takeover(st: &mut ClusterState, eng: &mut Engine<ClusterState, Clu
     st.ha.epoch += 1;
     st.ha.head_alive = true;
     st.ha.last_replayed = replayed as u64;
+    st.trace.emit(crate::obs::TraceEvent::Takeover {
+        at: now,
+        epoch: st.ha.epoch,
+        replayed: replayed as u64,
+    });
     st.metrics.inc("ha_takeovers");
     st.metrics.add("ha_replayed_events", replayed as u64);
     if had_snapshot {
@@ -373,6 +383,7 @@ pub(crate) fn takeover(st: &mut ClusterState, eng: &mut Engine<ClusterState, Clu
     }
     // the Lost entries from the validation above must reach the log
     crate::ha::wal::flush(st);
+    st.trace.flush();
     rearm.sort_by_key(|&(id, _, _)| id);
     for (id, attempt, at) in rearm {
         eng.schedule_at(at, ClusterEvent::JobDone { id, attempt, epoch });

@@ -274,8 +274,9 @@ pub fn decode(text: &str) -> Result<(HeadDump, u64), String> {
 /// Write a snapshot of the live head into the KV store and truncate the
 /// WAL entries it covers. Called from the WAL flush path once the log
 /// since the last snapshot reaches the configured length.
-pub(crate) fn write_snapshot(st: &mut ClusterState) {
-    let text = encode(&st.head.dump(), st.ha.next_seq);
+pub(crate) fn write_snapshot(st: &mut ClusterState, at: SimTime) {
+    let seq = st.ha.next_seq;
+    let text = encode(&st.head.dump(), seq);
     st.consul
         .submit(Command::Set { key: SNAPSHOT_KEY.into(), value: text });
     // the snapshot serializes after the appends it covers in the raft
@@ -291,6 +292,10 @@ pub(crate) fn write_snapshot(st: &mut ClusterState) {
     st.ha.appends_since_snapshot = 0;
     st.metrics.inc("ha_snapshots");
     st.metrics.add("ha_wal_truncated", truncated);
+    if st.trace.enabled() {
+        st.trace
+            .emit(crate::obs::TraceEvent::SnapshotWritten { at, epoch: st.ha.epoch, seq });
+    }
 }
 
 #[cfg(test)]

@@ -527,10 +527,12 @@ pub(crate) fn append_direct(st: &mut ClusterState, ev: WalEvent) {
 /// all of an event's mutations or none (a torn batch truncates at the
 /// hole, see `failover::read_log`).
 pub(crate) fn flush(st: &mut ClusterState) {
+    let _t = crate::obs::profiling::scoped("wal_flush");
     if !st.ha.config.enabled {
         return;
     }
     let batch = st.head.take_journal();
+    let flush_at = batch.last().map(|ev| ev.at()).unwrap_or(SimTime::ZERO);
     if !batch.is_empty() {
         let n = batch.len() as u64;
         let seq = st.ha.next_seq;
@@ -548,12 +550,19 @@ pub(crate) fn flush(st: &mut ClusterState) {
         // fingerprint built on it) means "durable log entries", which
         // batching must not change
         st.metrics.add("ha_wal_appends", n);
+        if st.trace.enabled() {
+            st.trace.emit(crate::obs::TraceEvent::WalFlush {
+                at: flush_at,
+                epoch: st.ha.epoch,
+                events: n,
+            });
+        }
     }
     if st.ha.head_alive
         && st.ha.config.snapshot_every > 0
         && st.ha.appends_since_snapshot >= st.ha.config.snapshot_every
     {
-        crate::ha::snapshot::write_snapshot(st);
+        crate::ha::snapshot::write_snapshot(st, flush_at);
     }
 }
 

@@ -18,6 +18,7 @@ pub mod ha;
 pub mod hw;
 pub mod lint;
 pub mod mpi;
+pub mod obs;
 pub mod runtime;
 pub mod sim;
 pub mod tenancy;

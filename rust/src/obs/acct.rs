@@ -1,0 +1,683 @@
+//! `sacct`-style accounting: fold a trace (or a replayed WAL) into
+//! per-job and per-tenant history.
+//!
+//! The fold consumes [`TraceEvent`]s. Two front-ends feed it:
+//!
+//! * [`from_trace_lines`] — a JSON-lines trace written by a `--trace`
+//!   run. Unparseable lines are **counted and skipped**
+//!   (`skipped_lines`), so a truncated or corrupt file degrades to a
+//!   partial report instead of erroring — the same posture as WAL
+//!   replay's `decode_wal_listing`.
+//! * [`from_wal`] — a decoded HA WAL, converted event-for-event via
+//!   [`wal_to_trace`]. The WAL does not journal autoscale sizing,
+//!   quota-admit counts, or backfill flags (it never needed them to
+//!   rebuild scheduler state), so those fields degrade to defaults;
+//!   everything billing-relevant — submits, dispatch attempts,
+//!   completions, losses, preemptions — converts exactly.
+//!
+//! Charging rule: an attempt is charged `ranks x (end - start)` slot
+//! time from its dispatch to its completion, loss, preemption, or
+//! failure — interrupted attempts bill like the live tenant ledger
+//! does. An attempt still running when the trace ends is *not*
+//! charged (its end is unknown), and the job reports state `running`.
+
+use super::events::{esc, TraceEvent};
+use crate::ha::wal::WalEvent;
+use crate::sim::SimTime;
+use std::collections::BTreeMap;
+
+/// Accounting history for one job across all its attempts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobAcct {
+    pub job: u32,
+    pub tenant: u64,
+    pub ranks: u32,
+    /// Virtual time the submission reached the head (None when the
+    /// trace starts mid-life, e.g. a WAL truncated by a snapshot).
+    pub submitted: Option<SimTime>,
+    /// First dispatch across all attempts.
+    pub first_start: Option<SimTime>,
+    /// Terminal timestamp (complete/fail/abandon/reject).
+    pub finished: Option<SimTime>,
+    /// Dispatch count — exact, every requeue and preemption rerun
+    /// included.
+    pub attempts: u32,
+    pub preemptions: u32,
+    /// Fault-driven requeues (node loss, unlaunched dispatch).
+    pub requeues: u32,
+    /// Virtual seconds spent queued before the first dispatch.
+    pub wait_secs: f64,
+    /// Charged runtime summed over ended attempts, virtual seconds.
+    pub run_secs: f64,
+    /// `ranks x run_secs` — the billing quantity.
+    pub slot_seconds: f64,
+    /// `completed | failed | abandoned | rejected | running | queued`.
+    pub state: &'static str,
+    /// Last event observed for the job (drives `--since`).
+    pub last_event: SimTime,
+}
+
+/// Per-tenant rollup over the (filtered) job set.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantAcct {
+    pub tenant: u64,
+    pub jobs: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub abandoned: u64,
+    pub attempts: u64,
+    pub preemptions: u64,
+    pub slot_seconds: f64,
+}
+
+/// The folded report: jobs in id order plus the tenant rollup.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct AcctReport {
+    pub jobs: Vec<JobAcct>,
+    pub tenants: Vec<TenantAcct>,
+    /// Trace events consumed by the fold.
+    pub events: u64,
+    /// Input lines that failed to parse and were skipped (partial
+    /// report when > 0).
+    pub skipped_lines: u64,
+}
+
+/// Query filters for the `vhpc acct` surface. `Default` selects
+/// everything.
+#[derive(Debug, Clone, Default)]
+pub struct AcctFilter {
+    pub tenant: Option<u64>,
+    pub state: Option<String>,
+    /// Keep jobs still active at or after this virtual time (their
+    /// last observed event is >= `since`).
+    pub since: Option<SimTime>,
+}
+
+#[derive(Debug, Clone, Default)]
+struct JobBuild {
+    tenant: u64,
+    ranks: u32,
+    submitted: Option<SimTime>,
+    first_start: Option<SimTime>,
+    finished: Option<SimTime>,
+    attempts: u32,
+    preemptions: u32,
+    requeues: u32,
+    run_ns: u64,
+    cur_start: Option<SimTime>,
+    state: &'static str,
+    last_event: SimTime,
+}
+
+impl JobBuild {
+    fn touch(&mut self, at: SimTime) {
+        self.last_event = self.last_event.max(at);
+    }
+    /// Charge the in-flight attempt up to `at` and clear it.
+    fn end_attempt(&mut self, at: SimTime) {
+        if let Some(start) = self.cur_start.take() {
+            self.run_ns += at.saturating_sub(start).as_nanos();
+        }
+    }
+}
+
+/// Fold a stream of trace events into an accounting report.
+pub fn fold_events<I: IntoIterator<Item = TraceEvent>>(events: I) -> AcctReport {
+    let mut jobs: BTreeMap<u32, JobBuild> = BTreeMap::new();
+    let mut n = 0u64;
+    for ev in events {
+        n += 1;
+        let at = ev.at();
+        match ev {
+            TraceEvent::Submit { job, tenant, ranks, .. } => {
+                let b = jobs.entry(job.raw()).or_default();
+                b.tenant = tenant;
+                b.ranks = ranks;
+                b.submitted = Some(at);
+                b.state = "queued";
+                b.touch(at);
+            }
+            TraceEvent::SubmitRejected { job, tenant, .. } => {
+                let b = jobs.entry(job.raw()).or_default();
+                b.tenant = tenant;
+                b.finished = Some(at);
+                b.state = "rejected";
+                b.touch(at);
+            }
+            TraceEvent::QuotaDefer { job, tenant, .. } => {
+                let b = jobs.entry(job.raw()).or_default();
+                b.tenant = tenant;
+                b.state = "queued";
+                b.touch(at);
+            }
+            TraceEvent::Dispatch { job, tenant, ranks, .. } => {
+                let b = jobs.entry(job.raw()).or_default();
+                b.tenant = tenant;
+                if b.ranks == 0 {
+                    b.ranks = ranks;
+                }
+                b.attempts += 1;
+                b.first_start.get_or_insert(at);
+                b.cur_start = Some(at);
+                b.state = "running";
+                b.touch(at);
+            }
+            TraceEvent::Complete { job, tenant, started, .. } => {
+                let b = jobs.entry(job.raw()).or_default();
+                b.tenant = tenant;
+                // a WAL truncated below the dispatch still bills the
+                // final attempt: the event carries its start
+                if b.cur_start.is_none() {
+                    b.cur_start = Some(started);
+                    b.first_start.get_or_insert(started);
+                }
+                b.end_attempt(at);
+                b.finished = Some(at);
+                b.state = "completed";
+                b.touch(at);
+            }
+            TraceEvent::Fail { job, tenant, .. } => {
+                let b = jobs.entry(job.raw()).or_default();
+                b.tenant = tenant;
+                b.end_attempt(at);
+                b.finished = Some(at);
+                b.state = "failed";
+                b.touch(at);
+            }
+            TraceEvent::Requeue { job, tenant, .. } => {
+                let b = jobs.entry(job.raw()).or_default();
+                b.tenant = tenant;
+                b.end_attempt(at);
+                b.requeues += 1;
+                b.state = "queued";
+                b.touch(at);
+            }
+            TraceEvent::Abandon { job, tenant, .. } => {
+                let b = jobs.entry(job.raw()).or_default();
+                b.tenant = tenant;
+                b.end_attempt(at);
+                b.finished = Some(at);
+                b.state = "abandoned";
+                b.touch(at);
+            }
+            TraceEvent::Preempt { job, tenant, .. } => {
+                let b = jobs.entry(job.raw()).or_default();
+                b.tenant = tenant;
+                b.end_attempt(at);
+                b.preemptions += 1;
+                b.state = "queued";
+                b.touch(at);
+            }
+            // cluster-level events carry no per-job charge
+            TraceEvent::Launch { .. }
+            | TraceEvent::QuotaAdmit { .. }
+            | TraceEvent::ScaleUp { .. }
+            | TraceEvent::ScaleDown { .. }
+            | TraceEvent::ScaleHold { .. }
+            | TraceEvent::FaultInjected { .. }
+            | TraceEvent::LeaseLost { .. }
+            | TraceEvent::Takeover { .. }
+            | TraceEvent::SnapshotWritten { .. }
+            | TraceEvent::WalFlush { .. } => {}
+        }
+    }
+
+    let jobs: Vec<JobAcct> = jobs
+        .into_iter()
+        .map(|(id, b)| {
+            let wait_secs = match (b.submitted, b.first_start) {
+                (Some(sub), Some(start)) => start.saturating_sub(sub).as_secs_f64(),
+                _ => 0.0,
+            };
+            let run_secs = b.run_ns as f64 / 1e9;
+            JobAcct {
+                job: id,
+                tenant: b.tenant,
+                ranks: b.ranks,
+                submitted: b.submitted,
+                first_start: b.first_start,
+                finished: b.finished,
+                attempts: b.attempts,
+                preemptions: b.preemptions,
+                requeues: b.requeues,
+                wait_secs,
+                run_secs,
+                slot_seconds: b.ranks as f64 * run_secs,
+                state: if b.state.is_empty() { "queued" } else { b.state },
+                last_event: b.last_event,
+            }
+        })
+        .collect();
+
+    AcctReport { tenants: rollup(&jobs), jobs, events: n, skipped_lines: 0 }
+}
+
+fn rollup(jobs: &[JobAcct]) -> Vec<TenantAcct> {
+    let mut map: BTreeMap<u64, TenantAcct> = BTreeMap::new();
+    for j in jobs {
+        let t = map.entry(j.tenant).or_insert_with(|| TenantAcct {
+            tenant: j.tenant,
+            jobs: 0,
+            completed: 0,
+            failed: 0,
+            abandoned: 0,
+            attempts: 0,
+            preemptions: 0,
+            slot_seconds: 0.0,
+        });
+        t.jobs += 1;
+        match j.state {
+            "completed" => t.completed += 1,
+            "failed" | "rejected" => t.failed += 1,
+            "abandoned" => t.abandoned += 1,
+            _ => {}
+        }
+        t.attempts += j.attempts as u64;
+        t.preemptions += j.preemptions as u64;
+        t.slot_seconds += j.slot_seconds;
+    }
+    map.into_values().collect()
+}
+
+impl AcctReport {
+    /// Apply query filters, recomputing the tenant rollup over the
+    /// surviving jobs.
+    pub fn filtered(&self, f: &AcctFilter) -> AcctReport {
+        let jobs: Vec<JobAcct> = self
+            .jobs
+            .iter()
+            .filter(|j| f.tenant.map_or(true, |t| j.tenant == t))
+            .filter(|j| f.state.as_deref().map_or(true, |s| j.state == s))
+            .filter(|j| f.since.map_or(true, |s| j.last_event >= s))
+            .cloned()
+            .collect();
+        AcctReport {
+            tenants: rollup(&jobs),
+            jobs,
+            events: self.events,
+            skipped_lines: self.skipped_lines,
+        }
+    }
+}
+
+/// Parse a JSON-lines trace, skipping (and counting) lines that do not
+/// parse — a truncated or corrupt trace yields a partial report.
+pub fn from_trace_lines<'a, I: IntoIterator<Item = &'a str>>(lines: I) -> AcctReport {
+    let mut events = Vec::new();
+    let mut skipped = 0u64;
+    for line in lines {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        match TraceEvent::parse_json_line(line) {
+            Ok(ev) => events.push(ev),
+            Err(_) => skipped += 1,
+        }
+    }
+    let mut report = fold_events(events);
+    report.skipped_lines = skipped;
+    report
+}
+
+/// Convert decoded WAL events into the trace taxonomy (see module docs
+/// for what the WAL does and does not journal). `Lost`/`Unlaunched`
+/// convert to [`TraceEvent::Requeue`]: whether the live run's retry
+/// budget then abandoned the job is visible as a job that never
+/// re-dispatched.
+pub fn wal_to_trace(events: &[WalEvent]) -> Vec<TraceEvent> {
+    let mut meta: BTreeMap<u32, (u64, u32)> = BTreeMap::new(); // job -> (tenant, ranks)
+    let mut cur: BTreeMap<u32, (SimTime, u32)> = BTreeMap::new(); // job -> (dispatch at, attempt)
+    let mut out = Vec::with_capacity(events.len());
+    for ev in events {
+        match ev {
+            WalEvent::Submitted { at, spec } => {
+                meta.insert(spec.id.raw(), (spec.tenant, spec.ranks));
+                out.push(TraceEvent::Submit {
+                    at: *at,
+                    epoch: 0,
+                    job: spec.id,
+                    tenant: spec.tenant,
+                    ranks: spec.ranks,
+                    priority: spec.priority,
+                });
+            }
+            WalEvent::SubmitFailed { at, spec, reason } => {
+                out.push(TraceEvent::SubmitRejected {
+                    at: *at,
+                    epoch: 0,
+                    job: spec.id,
+                    tenant: spec.tenant,
+                    reason: reason.clone(),
+                });
+            }
+            WalEvent::Dispatched { at, id, attempt, slice } => {
+                let (tenant, ranks) = meta
+                    .get(&id.raw())
+                    .copied()
+                    .unwrap_or((0, slice.len() as u32));
+                cur.insert(id.raw(), (*at, *attempt));
+                out.push(TraceEvent::Dispatch {
+                    at: *at,
+                    epoch: 0,
+                    job: *id,
+                    attempt: *attempt,
+                    tenant,
+                    ranks,
+                    backfilled: false,
+                });
+            }
+            WalEvent::Launched { at, id, attempt, planned, .. } => {
+                out.push(TraceEvent::Launch {
+                    at: *at,
+                    epoch: 0,
+                    job: *id,
+                    attempt: *attempt,
+                    planned: *planned,
+                });
+            }
+            WalEvent::Preempted { at, id } => {
+                let (tenant, _) = meta.get(&id.raw()).copied().unwrap_or((0, 0));
+                cur.remove(&id.raw());
+                out.push(TraceEvent::Preempt { at: *at, epoch: 0, job: *id, tenant });
+            }
+            WalEvent::Lost { at, id, .. } | WalEvent::Unlaunched { at, id } => {
+                let (tenant, _) = meta.get(&id.raw()).copied().unwrap_or((0, 0));
+                let (started, attempt) = cur.remove(&id.raw()).unwrap_or((*at, 0));
+                out.push(TraceEvent::Requeue {
+                    at: *at,
+                    epoch: 0,
+                    job: *id,
+                    attempt,
+                    tenant,
+                    wasted: at.saturating_sub(started),
+                });
+            }
+            WalEvent::Completed { at, id, attempt } => {
+                let (tenant, _) = meta.get(&id.raw()).copied().unwrap_or((0, 0));
+                let (started, _) = cur.remove(&id.raw()).unwrap_or((*at, *attempt));
+                out.push(TraceEvent::Complete {
+                    at: *at,
+                    epoch: 0,
+                    job: *id,
+                    attempt: *attempt,
+                    tenant,
+                    started,
+                });
+            }
+            WalEvent::Failed { at, id, reason } => {
+                let (tenant, _) = meta.get(&id.raw()).copied().unwrap_or((0, 0));
+                cur.remove(&id.raw());
+                out.push(TraceEvent::Fail {
+                    at: *at,
+                    epoch: 0,
+                    job: *id,
+                    tenant,
+                    reason: reason.clone(),
+                });
+            }
+            // scheduler-internal bookkeeping with no accounting weight:
+            // the WAL journals these to rebuild head state, not to bill
+            WalEvent::Admitted { .. }
+            | WalEvent::Accrued { .. }
+            | WalEvent::ScaleUp { .. }
+            | WalEvent::ScaleDown { .. }
+            | WalEvent::ArrivalCursor { .. } => {}
+        }
+    }
+    out
+}
+
+/// Fold a decoded WAL directly.
+pub fn from_wal(events: &[WalEvent]) -> AcctReport {
+    fold_events(wal_to_trace(events))
+}
+
+// ---------- rendering ----------
+
+fn opt_secs(t: Option<SimTime>) -> String {
+    match t {
+        Some(t) => format!("{:.3}", t.as_secs_f64()),
+        None => "null".into(),
+    }
+}
+
+/// Render the report as one JSON object (jobs array, tenants array,
+/// summary) for machine consumers.
+pub fn render_json(r: &AcctReport) -> String {
+    let mut s = String::from("{\n  \"jobs\": [\n");
+    for (i, j) in r.jobs.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"job\":{},\"tenant\":{},\"ranks\":{},\"state\":\"{}\",\"submitted_s\":{},\"first_start_s\":{},\"finished_s\":{},\"wait_s\":{:.3},\"run_s\":{:.3},\"slot_seconds\":{:.3},\"attempts\":{},\"preemptions\":{},\"requeues\":{}}}{}\n",
+            j.job,
+            j.tenant,
+            j.ranks,
+            esc(j.state),
+            opt_secs(j.submitted),
+            opt_secs(j.first_start),
+            opt_secs(j.finished),
+            j.wait_secs,
+            j.run_secs,
+            j.slot_seconds,
+            j.attempts,
+            j.preemptions,
+            j.requeues,
+            if i + 1 < r.jobs.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n  \"tenants\": [\n");
+    for (i, t) in r.tenants.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"tenant\":{},\"jobs\":{},\"completed\":{},\"failed\":{},\"abandoned\":{},\"attempts\":{},\"preemptions\":{},\"slot_seconds\":{:.3}}}{}\n",
+            t.tenant,
+            t.jobs,
+            t.completed,
+            t.failed,
+            t.abandoned,
+            t.attempts,
+            t.preemptions,
+            t.slot_seconds,
+            if i + 1 < r.tenants.len() { "," } else { "" }
+        ));
+    }
+    s.push_str(&format!(
+        "  ],\n  \"summary\": {{\"jobs\":{},\"events\":{},\"skipped_lines\":{}}}\n}}\n",
+        r.jobs.len(),
+        r.events,
+        r.skipped_lines
+    ));
+    s
+}
+
+/// Render the report as an `sacct`-style fixed-width table.
+pub fn render_table(r: &AcctReport) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{:>6} {:>6} {:>5} {:>10} {:>10} {:>10} {:>12} {:>8} {:>6} {:>4}\n",
+        "JOB", "TENANT", "RANKS", "STATE", "WAIT_S", "RUN_S", "SLOT_SEC", "ATTEMPTS", "PREEMPT", "REQ"
+    ));
+    for j in &r.jobs {
+        s.push_str(&format!(
+            "{:>6} {:>6} {:>5} {:>10} {:>10.3} {:>10.3} {:>12.3} {:>8} {:>6} {:>4}\n",
+            j.job,
+            j.tenant,
+            j.ranks,
+            j.state,
+            j.wait_secs,
+            j.run_secs,
+            j.slot_seconds,
+            j.attempts,
+            j.preemptions,
+            j.requeues
+        ));
+    }
+    s.push('\n');
+    s.push_str(&format!(
+        "{:>6} {:>6} {:>9} {:>6} {:>9} {:>8} {:>7} {:>12}\n",
+        "TENANT", "JOBS", "COMPLETED", "FAILED", "ABANDONED", "ATTEMPTS", "PREEMPT", "SLOT_SEC"
+    ));
+    for t in &r.tenants {
+        s.push_str(&format!(
+            "{:>6} {:>6} {:>9} {:>6} {:>9} {:>8} {:>7} {:>12.3}\n",
+            t.tenant, t.jobs, t.completed, t.failed, t.abandoned, t.attempts, t.preemptions, t.slot_seconds
+        ));
+    }
+    if r.skipped_lines > 0 {
+        s.push_str(&format!(
+            "\nwarning: {} unparseable line(s) skipped — partial report\n",
+            r.skipped_lines
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ids::JobId;
+
+    fn secs(s: u64) -> SimTime {
+        SimTime::from_secs(s)
+    }
+
+    /// j1: waits 10s, runs 20s on 4 ranks. j2: dispatched, lost at +5s,
+    /// re-dispatched, completes after 10s more. j3: preempted once then
+    /// abandoned.
+    fn sample_events() -> Vec<TraceEvent> {
+        let j1 = JobId::new(1);
+        let j2 = JobId::new(2);
+        let j3 = JobId::new(3);
+        vec![
+            TraceEvent::Submit { at: secs(0), epoch: 0, job: j1, tenant: 7, ranks: 4, priority: 0 },
+            TraceEvent::Submit { at: secs(1), epoch: 0, job: j2, tenant: 7, ranks: 2, priority: 0 },
+            TraceEvent::Submit { at: secs(2), epoch: 0, job: j3, tenant: 9, ranks: 1, priority: 0 },
+            TraceEvent::Dispatch { at: secs(10), epoch: 0, job: j1, attempt: 0, tenant: 7, ranks: 4, backfilled: false },
+            TraceEvent::Dispatch { at: secs(10), epoch: 0, job: j2, attempt: 0, tenant: 7, ranks: 2, backfilled: true },
+            TraceEvent::Dispatch { at: secs(10), epoch: 0, job: j3, attempt: 0, tenant: 9, ranks: 1, backfilled: false },
+            TraceEvent::Requeue { at: secs(15), epoch: 0, job: j2, attempt: 1, tenant: 7, wasted: secs(5) },
+            TraceEvent::Preempt { at: secs(18), epoch: 0, job: j3, tenant: 9 },
+            TraceEvent::Dispatch { at: secs(20), epoch: 0, job: j2, attempt: 1, tenant: 7, ranks: 2, backfilled: false },
+            TraceEvent::Complete { at: secs(30), epoch: 0, job: j1, attempt: 0, tenant: 7, started: secs(10) },
+            TraceEvent::Complete { at: secs(30), epoch: 0, job: j2, attempt: 1, tenant: 7, started: secs(20) },
+            TraceEvent::Abandon { at: secs(31), epoch: 0, job: j3, tenant: 9 },
+        ]
+    }
+
+    #[test]
+    fn fold_charges_attempts_and_tracks_states() {
+        let r = fold_events(sample_events());
+        assert_eq!(r.jobs.len(), 3);
+        let j1 = &r.jobs[0];
+        assert_eq!((j1.state, j1.attempts, j1.preemptions), ("completed", 1, 0));
+        assert_eq!(j1.wait_secs, 10.0);
+        assert_eq!(j1.run_secs, 20.0);
+        assert_eq!(j1.slot_seconds, 80.0);
+        let j2 = &r.jobs[1];
+        assert_eq!((j2.state, j2.attempts, j2.requeues), ("completed", 2, 1));
+        // interrupted attempt (5s) bills alongside the final one (10s)
+        assert_eq!(j2.run_secs, 15.0);
+        assert_eq!(j2.slot_seconds, 30.0);
+        let j3 = &r.jobs[2];
+        assert_eq!((j3.state, j3.attempts, j3.preemptions), ("abandoned", 1, 1));
+        assert_eq!(j3.run_secs, 8.0);
+
+        assert_eq!(r.tenants.len(), 2);
+        assert_eq!(r.tenants[0].tenant, 7);
+        assert_eq!(r.tenants[0].completed, 2);
+        assert_eq!(r.tenants[0].slot_seconds, 110.0);
+        assert_eq!(r.tenants[1].abandoned, 1);
+    }
+
+    #[test]
+    fn running_tail_is_not_charged() {
+        let j = JobId::new(4);
+        let r = fold_events(vec![
+            TraceEvent::Submit { at: secs(0), epoch: 0, job: j, tenant: 1, ranks: 2, priority: 0 },
+            TraceEvent::Dispatch { at: secs(5), epoch: 0, job: j, attempt: 0, tenant: 1, ranks: 2, backfilled: false },
+        ]);
+        assert_eq!(r.jobs[0].state, "running");
+        assert_eq!(r.jobs[0].slot_seconds, 0.0);
+        assert!(r.jobs[0].finished.is_none());
+    }
+
+    #[test]
+    fn filters_select_by_tenant_state_and_since() {
+        let r = fold_events(sample_events());
+        let t7 = r.filtered(&AcctFilter { tenant: Some(7), ..Default::default() });
+        assert_eq!(t7.jobs.len(), 2);
+        assert_eq!(t7.tenants.len(), 1);
+        let done = r.filtered(&AcctFilter { state: Some("abandoned".into()), ..Default::default() });
+        assert_eq!(done.jobs.len(), 1);
+        assert_eq!(done.jobs[0].job, 3);
+        // j1 and j2 finish at 30s, j3 at 31s
+        let late = r.filtered(&AcctFilter { since: Some(secs(31)), ..Default::default() });
+        assert_eq!(late.jobs.len(), 1);
+        assert_eq!(late.jobs[0].job, 3);
+    }
+
+    #[test]
+    fn corrupt_lines_skip_to_a_partial_report() {
+        let good: Vec<String> = sample_events().iter().map(|e| e.to_json_line()).collect();
+        let mut lines: Vec<&str> = good.iter().map(|s| s.as_str()).collect();
+        lines.insert(3, "{\"ev\":\"submit\",\"t_ns\":garbage");
+        lines.push("half a li");
+        let r = from_trace_lines(lines);
+        assert_eq!(r.skipped_lines, 2);
+        assert_eq!(r.jobs.len(), 3, "good lines still fold");
+        assert_eq!(r.jobs[0].state, "completed");
+    }
+
+    #[test]
+    fn wal_conversion_matches_the_native_fold_on_the_billing_columns() {
+        use crate::cluster::head::{JobKind, JobSpec};
+        let spec = |id: u32, tenant: u64, ranks: u32| JobSpec {
+            id: JobId::new(id),
+            name: format!("j{id}"),
+            ranks,
+            kind: JobKind::Synthetic { duration: secs(20) },
+            priority: 0,
+            tenant,
+        };
+        let wal = vec![
+            WalEvent::Submitted { at: secs(0), spec: spec(1, 7, 4) },
+            WalEvent::Dispatched { at: secs(10), id: JobId::new(1), attempt: 0, slice: Vec::new() },
+            WalEvent::Lost { at: secs(15), id: JobId::new(1), reason: "node died".into() },
+            WalEvent::Dispatched { at: secs(20), id: JobId::new(1), attempt: 1, slice: Vec::new() },
+            WalEvent::Completed { at: secs(40), id: JobId::new(1), attempt: 1 },
+        ];
+        let r = from_wal(&wal);
+        assert_eq!(r.jobs.len(), 1);
+        let j = &r.jobs[0];
+        assert_eq!(j.tenant, 7);
+        assert_eq!(j.ranks, 4, "ranks come from the Submitted spec");
+        assert_eq!(j.attempts, 2);
+        assert_eq!(j.requeues, 1);
+        assert_eq!(j.state, "completed");
+        // 5s wasted attempt + 20s final attempt, x4 ranks
+        assert_eq!(j.run_secs, 25.0);
+        assert_eq!(j.slot_seconds, 100.0);
+    }
+
+    #[test]
+    fn renderers_cover_the_report() {
+        let r = from_trace_lines(
+            sample_events()
+                .iter()
+                .map(|e| e.to_json_line())
+                .collect::<Vec<_>>()
+                .iter()
+                .map(|s| s.as_str()),
+        );
+        let json = render_json(&r);
+        assert!(json.contains("\"jobs\": ["));
+        assert!(json.contains("\"slot_seconds\":80.000"));
+        assert!(json.contains("\"summary\": {\"jobs\":3,\"events\":12,\"skipped_lines\":0}"));
+        let table = render_table(&r);
+        assert!(table.contains("JOB"));
+        assert!(table.contains("completed"));
+        assert!(!table.contains("partial report"));
+        let mut partial = r.clone();
+        partial.skipped_lines = 1;
+        assert!(render_table(&partial).contains("partial report"));
+    }
+}

@@ -1,0 +1,627 @@
+//! The trace-event taxonomy: every observable job/node/head lifecycle
+//! transition as typed, serializable data.
+//!
+//! Events are emitted into the cluster's [`TraceBus`](super::writer::TraceBus)
+//! at the site of the transition and stamped with the virtual time and
+//! head epoch they happened under; job events additionally carry the
+//! owning tenant and the attempt generation, so a trace line is enough
+//! to attribute the transition without replaying anything. The JSON
+//! codec is hand-rolled (no serde in the offline crate set), one object
+//! per line with a fixed key order — the same greppable-and-parseable
+//! posture as the WAL's text codec, and the input format `vhpc acct`
+//! consumes.
+//!
+//! Free-text fields (failure reasons, fault labels) are JSON-escaped;
+//! the parser is the exact inverse of the renderer, pinned by
+//! roundtrip tests.
+
+use crate::cluster::autoscaler::ScaleReason;
+use crate::sim::SimTime;
+use crate::util::ids::JobId;
+
+/// One observable lifecycle transition. `at` is the virtual time the
+/// transition happened; `epoch` is the head incarnation it happened
+/// under (0 until a HA takeover bumps it).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEvent {
+    /// A submission reached the head's queue (or its quota pens).
+    Submit { at: SimTime, epoch: u64, job: JobId, tenant: u64, ranks: u32, priority: i32 },
+    /// A submission was rejected before queueing (too wide, or an
+    /// over-quota tenant under the reject policy).
+    SubmitRejected { at: SimTime, epoch: u64, job: JobId, tenant: u64, reason: String },
+    /// An over-quota submission was parked in the tenant's holding pen.
+    QuotaDefer { at: SimTime, epoch: u64, job: JobId, tenant: u64 },
+    /// Deferred jobs were re-admitted from the quota pens.
+    QuotaAdmit { at: SimTime, epoch: u64, admitted: u64 },
+    /// A queued job moved to the running pool on a reserved slice.
+    Dispatch {
+        at: SimTime,
+        epoch: u64,
+        job: JobId,
+        attempt: u32,
+        tenant: u64,
+        ranks: u32,
+        backfilled: bool,
+    },
+    /// The dispatcher pinned the attempt's planned virtual duration.
+    Launch { at: SimTime, epoch: u64, job: JobId, attempt: u32, planned: SimTime },
+    /// A running attempt completed.
+    Complete {
+        at: SimTime,
+        epoch: u64,
+        job: JobId,
+        attempt: u32,
+        tenant: u64,
+        started: SimTime,
+    },
+    /// A job failed terminally (launch error or exhausted retries are
+    /// reported separately as [`TraceEvent::Abandon`]).
+    Fail { at: SimTime, epoch: u64, job: JobId, tenant: u64, reason: String },
+    /// A running job lost a node and went back to the queue head.
+    Requeue { at: SimTime, epoch: u64, job: JobId, attempt: u32, tenant: u64, wasted: SimTime },
+    /// A lost job exhausted its retry budget.
+    Abandon { at: SimTime, epoch: u64, job: JobId, tenant: u64 },
+    /// A running job was checkpointed-and-requeued to make room for a
+    /// higher-priority one.
+    Preempt { at: SimTime, epoch: u64, job: JobId, tenant: u64 },
+    /// The autoscaler powered `nodes` machines up.
+    ScaleUp { at: SimTime, epoch: u64, nodes: u32, reason: ScaleReason },
+    /// The autoscaler retired `nodes` machines.
+    ScaleDown { at: SimTime, epoch: u64, nodes: u32, reason: ScaleReason },
+    /// The autoscaler wanted to act but was held back (cooldown, or
+    /// demand already capped at the policy ceiling).
+    ScaleHold { at: SimTime, epoch: u64, reason: ScaleReason },
+    /// One fault-plan entry fired through the injector.
+    FaultInjected { at: SimTime, epoch: u64, kind: String },
+    /// The standby observed the active head's lease expire.
+    LeaseLost { at: SimTime, epoch: u64 },
+    /// A standby promoted itself, replaying `replayed` WAL events.
+    Takeover { at: SimTime, epoch: u64, replayed: u64 },
+    /// The head wrote a snapshot truncating the WAL below `seq`.
+    SnapshotWritten { at: SimTime, epoch: u64, seq: u64 },
+    /// One engine event's journal batch reached the durable WAL.
+    WalFlush { at: SimTime, epoch: u64, events: u64 },
+}
+
+impl TraceEvent {
+    /// The event's virtual timestamp.
+    pub fn at(&self) -> SimTime {
+        match self {
+            TraceEvent::Submit { at, .. }
+            | TraceEvent::SubmitRejected { at, .. }
+            | TraceEvent::QuotaDefer { at, .. }
+            | TraceEvent::QuotaAdmit { at, .. }
+            | TraceEvent::Dispatch { at, .. }
+            | TraceEvent::Launch { at, .. }
+            | TraceEvent::Complete { at, .. }
+            | TraceEvent::Fail { at, .. }
+            | TraceEvent::Requeue { at, .. }
+            | TraceEvent::Abandon { at, .. }
+            | TraceEvent::Preempt { at, .. }
+            | TraceEvent::ScaleUp { at, .. }
+            | TraceEvent::ScaleDown { at, .. }
+            | TraceEvent::ScaleHold { at, .. }
+            | TraceEvent::FaultInjected { at, .. }
+            | TraceEvent::LeaseLost { at, .. }
+            | TraceEvent::Takeover { at, .. }
+            | TraceEvent::SnapshotWritten { at, .. }
+            | TraceEvent::WalFlush { at, .. } => *at,
+        }
+    }
+
+    /// The `"ev"` discriminator this event renders with.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TraceEvent::Submit { .. } => "submit",
+            TraceEvent::SubmitRejected { .. } => "reject",
+            TraceEvent::QuotaDefer { .. } => "defer",
+            TraceEvent::QuotaAdmit { .. } => "admit",
+            TraceEvent::Dispatch { .. } => "dispatch",
+            TraceEvent::Launch { .. } => "launch",
+            TraceEvent::Complete { .. } => "complete",
+            TraceEvent::Fail { .. } => "fail",
+            TraceEvent::Requeue { .. } => "requeue",
+            TraceEvent::Abandon { .. } => "abandon",
+            TraceEvent::Preempt { .. } => "preempt",
+            TraceEvent::ScaleUp { .. } => "scale_up",
+            TraceEvent::ScaleDown { .. } => "scale_down",
+            TraceEvent::ScaleHold { .. } => "scale_hold",
+            TraceEvent::FaultInjected { .. } => "fault",
+            TraceEvent::LeaseLost { .. } => "lease_lost",
+            TraceEvent::Takeover { .. } => "takeover",
+            TraceEvent::SnapshotWritten { .. } => "snapshot",
+            TraceEvent::WalFlush { .. } => "wal_flush",
+        }
+    }
+
+    /// Render the event as one JSON object (no trailing newline).
+    /// Timestamps are exact virtual nanoseconds (`t_ns`), never floats,
+    /// so a parsed trace reproduces the run's instants bit for bit.
+    pub fn to_json_line(&self) -> String {
+        let head = |ev: &str, at: &SimTime, epoch: &u64| {
+            format!("{{\"ev\":\"{ev}\",\"t_ns\":{},\"epoch\":{epoch}", at.as_nanos())
+        };
+        let mut s = head(self.kind(), &self.at(), &self.epoch());
+        match self {
+            TraceEvent::Submit { job, tenant, ranks, priority, .. } => {
+                s.push_str(&format!(
+                    ",\"job\":{},\"tenant\":{tenant},\"ranks\":{ranks},\"prio\":{priority}",
+                    job.raw()
+                ));
+            }
+            TraceEvent::SubmitRejected { job, tenant, reason, .. } => {
+                s.push_str(&format!(
+                    ",\"job\":{},\"tenant\":{tenant},\"reason\":\"{}\"",
+                    job.raw(),
+                    esc(reason)
+                ));
+            }
+            TraceEvent::QuotaDefer { job, tenant, .. } => {
+                s.push_str(&format!(",\"job\":{},\"tenant\":{tenant}", job.raw()));
+            }
+            TraceEvent::QuotaAdmit { admitted, .. } => {
+                s.push_str(&format!(",\"admitted\":{admitted}"));
+            }
+            TraceEvent::Dispatch { job, attempt, tenant, ranks, backfilled, .. } => {
+                s.push_str(&format!(
+                    ",\"job\":{},\"attempt\":{attempt},\"tenant\":{tenant},\"ranks\":{ranks},\"backfilled\":{backfilled}",
+                    job.raw()
+                ));
+            }
+            TraceEvent::Launch { job, attempt, planned, .. } => {
+                s.push_str(&format!(
+                    ",\"job\":{},\"attempt\":{attempt},\"planned_ns\":{}",
+                    job.raw(),
+                    planned.as_nanos()
+                ));
+            }
+            TraceEvent::Complete { job, attempt, tenant, started, .. } => {
+                s.push_str(&format!(
+                    ",\"job\":{},\"attempt\":{attempt},\"tenant\":{tenant},\"started_ns\":{}",
+                    job.raw(),
+                    started.as_nanos()
+                ));
+            }
+            TraceEvent::Fail { job, tenant, reason, .. } => {
+                s.push_str(&format!(
+                    ",\"job\":{},\"tenant\":{tenant},\"reason\":\"{}\"",
+                    job.raw(),
+                    esc(reason)
+                ));
+            }
+            TraceEvent::Requeue { job, attempt, tenant, wasted, .. } => {
+                s.push_str(&format!(
+                    ",\"job\":{},\"attempt\":{attempt},\"tenant\":{tenant},\"wasted_ns\":{}",
+                    job.raw(),
+                    wasted.as_nanos()
+                ));
+            }
+            TraceEvent::Abandon { job, tenant, .. } => {
+                s.push_str(&format!(",\"job\":{},\"tenant\":{tenant}", job.raw()));
+            }
+            TraceEvent::Preempt { job, tenant, .. } => {
+                s.push_str(&format!(",\"job\":{},\"tenant\":{tenant}", job.raw()));
+            }
+            TraceEvent::ScaleUp { nodes, reason, .. }
+            | TraceEvent::ScaleDown { nodes, reason, .. } => {
+                s.push_str(&format!(",\"nodes\":{nodes},\"reason\":\"{}\"", reason.code()));
+            }
+            TraceEvent::ScaleHold { reason, .. } => {
+                s.push_str(&format!(",\"reason\":\"{}\"", reason.code()));
+            }
+            TraceEvent::FaultInjected { kind, .. } => {
+                s.push_str(&format!(",\"kind\":\"{}\"", esc(kind)));
+            }
+            TraceEvent::LeaseLost { .. } => {}
+            TraceEvent::Takeover { replayed, .. } => {
+                s.push_str(&format!(",\"replayed\":{replayed}"));
+            }
+            TraceEvent::SnapshotWritten { seq, .. } => {
+                s.push_str(&format!(",\"seq\":{seq}"));
+            }
+            TraceEvent::WalFlush { events, .. } => {
+                s.push_str(&format!(",\"events\":{events}"));
+            }
+        }
+        s.push('}');
+        s
+    }
+
+    /// The head epoch stamp.
+    pub fn epoch(&self) -> u64 {
+        match self {
+            TraceEvent::Submit { epoch, .. }
+            | TraceEvent::SubmitRejected { epoch, .. }
+            | TraceEvent::QuotaDefer { epoch, .. }
+            | TraceEvent::QuotaAdmit { epoch, .. }
+            | TraceEvent::Dispatch { epoch, .. }
+            | TraceEvent::Launch { epoch, .. }
+            | TraceEvent::Complete { epoch, .. }
+            | TraceEvent::Fail { epoch, .. }
+            | TraceEvent::Requeue { epoch, .. }
+            | TraceEvent::Abandon { epoch, .. }
+            | TraceEvent::Preempt { epoch, .. }
+            | TraceEvent::ScaleUp { epoch, .. }
+            | TraceEvent::ScaleDown { epoch, .. }
+            | TraceEvent::ScaleHold { epoch, .. }
+            | TraceEvent::FaultInjected { epoch, .. }
+            | TraceEvent::LeaseLost { epoch, .. }
+            | TraceEvent::Takeover { epoch, .. }
+            | TraceEvent::SnapshotWritten { epoch, .. }
+            | TraceEvent::WalFlush { epoch, .. } => *epoch,
+        }
+    }
+
+    /// Parse one JSON trace line back into an event — the exact inverse
+    /// of [`TraceEvent::to_json_line`]. Anything else errors (and `vhpc
+    /// acct` counts-and-skips it rather than aborting the report).
+    pub fn parse_json_line(line: &str) -> Result<TraceEvent, String> {
+        let ev = str_field(line, "ev")?;
+        let at = SimTime::from_nanos(u64_field(line, "t_ns")?);
+        let epoch = u64_field(line, "epoch")?;
+        let job = |l: &str| -> Result<JobId, String> {
+            Ok(JobId::new(u64_field(l, "job")? as u32))
+        };
+        match ev.as_str() {
+            "submit" => Ok(TraceEvent::Submit {
+                at,
+                epoch,
+                job: job(line)?,
+                tenant: u64_field(line, "tenant")?,
+                ranks: u64_field(line, "ranks")? as u32,
+                priority: i64_field(line, "prio")? as i32,
+            }),
+            "reject" => Ok(TraceEvent::SubmitRejected {
+                at,
+                epoch,
+                job: job(line)?,
+                tenant: u64_field(line, "tenant")?,
+                reason: str_field(line, "reason")?,
+            }),
+            "defer" => Ok(TraceEvent::QuotaDefer {
+                at,
+                epoch,
+                job: job(line)?,
+                tenant: u64_field(line, "tenant")?,
+            }),
+            "admit" => Ok(TraceEvent::QuotaAdmit {
+                at,
+                epoch,
+                admitted: u64_field(line, "admitted")?,
+            }),
+            "dispatch" => Ok(TraceEvent::Dispatch {
+                at,
+                epoch,
+                job: job(line)?,
+                attempt: u64_field(line, "attempt")? as u32,
+                tenant: u64_field(line, "tenant")?,
+                ranks: u64_field(line, "ranks")? as u32,
+                backfilled: bool_field(line, "backfilled")?,
+            }),
+            "launch" => Ok(TraceEvent::Launch {
+                at,
+                epoch,
+                job: job(line)?,
+                attempt: u64_field(line, "attempt")? as u32,
+                planned: SimTime::from_nanos(u64_field(line, "planned_ns")?),
+            }),
+            "complete" => Ok(TraceEvent::Complete {
+                at,
+                epoch,
+                job: job(line)?,
+                attempt: u64_field(line, "attempt")? as u32,
+                tenant: u64_field(line, "tenant")?,
+                started: SimTime::from_nanos(u64_field(line, "started_ns")?),
+            }),
+            "fail" => Ok(TraceEvent::Fail {
+                at,
+                epoch,
+                job: job(line)?,
+                tenant: u64_field(line, "tenant")?,
+                reason: str_field(line, "reason")?,
+            }),
+            "requeue" => Ok(TraceEvent::Requeue {
+                at,
+                epoch,
+                job: job(line)?,
+                attempt: u64_field(line, "attempt")? as u32,
+                tenant: u64_field(line, "tenant")?,
+                wasted: SimTime::from_nanos(u64_field(line, "wasted_ns")?),
+            }),
+            "abandon" => Ok(TraceEvent::Abandon {
+                at,
+                epoch,
+                job: job(line)?,
+                tenant: u64_field(line, "tenant")?,
+            }),
+            "preempt" => Ok(TraceEvent::Preempt {
+                at,
+                epoch,
+                job: job(line)?,
+                tenant: u64_field(line, "tenant")?,
+            }),
+            "scale_up" => Ok(TraceEvent::ScaleUp {
+                at,
+                epoch,
+                nodes: u64_field(line, "nodes")? as u32,
+                reason: reason_field(line)?,
+            }),
+            "scale_down" => Ok(TraceEvent::ScaleDown {
+                at,
+                epoch,
+                nodes: u64_field(line, "nodes")? as u32,
+                reason: reason_field(line)?,
+            }),
+            "scale_hold" => Ok(TraceEvent::ScaleHold { at, epoch, reason: reason_field(line)? }),
+            "fault" => Ok(TraceEvent::FaultInjected {
+                at,
+                epoch,
+                kind: str_field(line, "kind")?,
+            }),
+            "lease_lost" => Ok(TraceEvent::LeaseLost { at, epoch }),
+            "takeover" => Ok(TraceEvent::Takeover {
+                at,
+                epoch,
+                replayed: u64_field(line, "replayed")?,
+            }),
+            "snapshot" => Ok(TraceEvent::SnapshotWritten {
+                at,
+                epoch,
+                seq: u64_field(line, "seq")?,
+            }),
+            "wal_flush" => Ok(TraceEvent::WalFlush {
+                at,
+                epoch,
+                events: u64_field(line, "events")?,
+            }),
+            other => Err(format!("unknown trace event kind: {other}")),
+        }
+    }
+}
+
+// ---------- JSON helpers ----------
+//
+// The renderer always escapes `"` and `\` inside string values, so the
+// literal byte sequence `"<key>":` can never occur inside a value —
+// key scanning is unambiguous on well-formed lines.
+
+/// Escape a free-text value for embedding in a JSON string.
+pub(crate) fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn unesc(s: &str) -> Result<String, String> {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('"') => out.push('"'),
+            Some('\\') => out.push('\\'),
+            Some('n') => out.push('\n'),
+            Some('r') => out.push('\r'),
+            Some('t') => out.push('\t'),
+            Some('u') => {
+                let hex: String = chars.by_ref().take(4).collect();
+                let v = u32::from_str_radix(&hex, 16)
+                    .map_err(|_| format!("bad \\u escape in: {s}"))?;
+                out.push(char::from_u32(v).ok_or_else(|| format!("bad codepoint in: {s}"))?);
+            }
+            other => return Err(format!("bad escape \\{other:?} in: {s}")),
+        }
+    }
+    Ok(out)
+}
+
+/// The raw text after `"key":`, up to (not including) the value's end.
+fn raw_value<'a>(line: &'a str, key: &str) -> Result<&'a str, String> {
+    let pat = format!("\"{key}\":");
+    let start = line
+        .find(&pat)
+        .ok_or_else(|| format!("missing field {key} in: {line}"))?
+        + pat.len();
+    Ok(&line[start..])
+}
+
+fn u64_field(line: &str, key: &str) -> Result<u64, String> {
+    let rest = raw_value(line, key)?;
+    let end = rest
+        .find(|c: char| !c.is_ascii_digit())
+        .unwrap_or(rest.len());
+    rest[..end]
+        .parse()
+        .map_err(|_| format!("bad integer for {key} in: {line}"))
+}
+
+fn i64_field(line: &str, key: &str) -> Result<i64, String> {
+    let rest = raw_value(line, key)?;
+    let end = rest
+        .char_indices()
+        .find(|&(i, c)| !(c.is_ascii_digit() || (i == 0 && c == '-')))
+        .map(|(i, _)| i)
+        .unwrap_or(rest.len());
+    rest[..end]
+        .parse()
+        .map_err(|_| format!("bad integer for {key} in: {line}"))
+}
+
+fn bool_field(line: &str, key: &str) -> Result<bool, String> {
+    let rest = raw_value(line, key)?;
+    if rest.starts_with("true") {
+        Ok(true)
+    } else if rest.starts_with("false") {
+        Ok(false)
+    } else {
+        Err(format!("bad bool for {key} in: {line}"))
+    }
+}
+
+fn str_field(line: &str, key: &str) -> Result<String, String> {
+    let rest = raw_value(line, key)?;
+    let rest = rest
+        .strip_prefix('"')
+        .ok_or_else(|| format!("{key} is not a string in: {line}"))?;
+    // find the closing quote, skipping escaped ones
+    let mut prev_backslash = false;
+    for (i, c) in rest.char_indices() {
+        match c {
+            '\\' if !prev_backslash => prev_backslash = true,
+            '"' if !prev_backslash => return unesc(&rest[..i]),
+            _ => prev_backslash = false,
+        }
+    }
+    Err(format!("unterminated string for {key} in: {line}"))
+}
+
+fn reason_field(line: &str) -> Result<ScaleReason, String> {
+    let code = str_field(line, "reason")?;
+    ScaleReason::from_code(&code).ok_or_else(|| format!("unknown scale reason: {code}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn samples() -> Vec<TraceEvent> {
+        let t = SimTime::from_millis(1234);
+        vec![
+            TraceEvent::Submit {
+                at: t,
+                epoch: 0,
+                job: JobId::new(1),
+                tenant: 7,
+                ranks: 8,
+                priority: -2,
+            },
+            TraceEvent::SubmitRejected {
+                at: t,
+                epoch: 0,
+                job: JobId::new(2),
+                tenant: 7,
+                reason: "too wide: needs 99 \"slots\"\nsecond line".into(),
+            },
+            TraceEvent::QuotaDefer { at: t, epoch: 0, job: JobId::new(3), tenant: 4 },
+            TraceEvent::QuotaAdmit { at: t, epoch: 0, admitted: 2 },
+            TraceEvent::Dispatch {
+                at: t,
+                epoch: 1,
+                job: JobId::new(1),
+                attempt: 2,
+                tenant: 7,
+                ranks: 8,
+                backfilled: true,
+            },
+            TraceEvent::Launch {
+                at: t,
+                epoch: 1,
+                job: JobId::new(1),
+                attempt: 2,
+                planned: SimTime::from_secs(30),
+            },
+            TraceEvent::Complete {
+                at: t,
+                epoch: 1,
+                job: JobId::new(1),
+                attempt: 2,
+                tenant: 7,
+                started: SimTime::from_secs(2),
+            },
+            TraceEvent::Fail {
+                at: t,
+                epoch: 0,
+                job: JobId::new(4),
+                tenant: 0,
+                reason: "launch: boom".into(),
+            },
+            TraceEvent::Requeue {
+                at: t,
+                epoch: 0,
+                job: JobId::new(5),
+                attempt: 1,
+                tenant: 3,
+                wasted: SimTime::from_secs(12),
+            },
+            TraceEvent::Abandon { at: t, epoch: 0, job: JobId::new(5), tenant: 3 },
+            TraceEvent::Preempt { at: t, epoch: 0, job: JobId::new(6), tenant: 2 },
+            TraceEvent::ScaleUp {
+                at: t,
+                epoch: 0,
+                nodes: 2,
+                reason: ScaleReason::QueuedDemand,
+            },
+            TraceEvent::ScaleDown { at: t, epoch: 0, nodes: 1, reason: ScaleReason::LowUtil },
+            TraceEvent::ScaleHold { at: t, epoch: 0, reason: ScaleReason::CooldownHeld },
+            TraceEvent::FaultInjected { at: t, epoch: 0, kind: "crash".into() },
+            TraceEvent::LeaseLost { at: t, epoch: 0 },
+            TraceEvent::Takeover { at: t, epoch: 1, replayed: 42 },
+            TraceEvent::SnapshotWritten { at: t, epoch: 1, seq: 9 },
+            TraceEvent::WalFlush { at: t, epoch: 1, events: 3 },
+        ]
+    }
+
+    #[test]
+    fn every_event_kind_roundtrips() {
+        for ev in samples() {
+            let line = ev.to_json_line();
+            let back = TraceEvent::parse_json_line(&line)
+                .unwrap_or_else(|e| panic!("{line}: {e}"));
+            assert_eq!(back, ev, "roundtrip drift for {line}");
+        }
+    }
+
+    #[test]
+    fn lines_start_with_the_pinned_header_keys() {
+        for ev in samples() {
+            let line = ev.to_json_line();
+            assert!(
+                line.starts_with(&format!("{{\"ev\":\"{}\",\"t_ns\":", ev.kind())),
+                "header key order drifted: {line}"
+            );
+            assert!(line.ends_with('}'), "{line}");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(TraceEvent::parse_json_line("").is_err());
+        assert!(TraceEvent::parse_json_line("not json").is_err());
+        assert!(TraceEvent::parse_json_line("{\"ev\":\"warp\",\"t_ns\":1,\"epoch\":0}").is_err());
+        assert!(
+            TraceEvent::parse_json_line("{\"ev\":\"submit\",\"t_ns\":1,\"epoch\":0}").is_err(),
+            "missing job fields must fail"
+        );
+    }
+
+    #[test]
+    fn escaping_keeps_key_scans_unambiguous() {
+        let ev = TraceEvent::Fail {
+            at: SimTime::from_secs(1),
+            epoch: 0,
+            job: JobId::new(1),
+            tenant: 5,
+            reason: "evil \"tenant\":999 injection".into(),
+        };
+        let line = ev.to_json_line();
+        let back = TraceEvent::parse_json_line(&line).unwrap();
+        assert_eq!(back, ev);
+        // the tenant scan still finds the real field, not the payload
+        if let TraceEvent::Fail { tenant, .. } = back {
+            assert_eq!(tenant, 5);
+        }
+    }
+}

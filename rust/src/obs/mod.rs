@@ -1,0 +1,20 @@
+//! Observability: the structured trace bus, phase profiling, and the
+//! `vhpc acct` accounting surface.
+//!
+//! The engine emits typed [`events::TraceEvent`]s into a
+//! [`writer::TraceBus`] owned by the cluster state; the bus buffers
+//! them and drains to a [`writer::TraceSink`] at engine-event
+//! boundaries (the same cadence as WAL batching). Sink failures
+//! degrade to counted drops — observability may go dark, scheduling
+//! never notices, and traced runs fingerprint identically to untraced
+//! ones. [`profiling`] adds opt-in wall-clock phase timers for the
+//! perf harness, and [`acct`] folds a trace or a replayed WAL into
+//! per-job/per-tenant accounting.
+
+pub mod acct;
+pub mod events;
+pub mod profiling;
+pub mod writer;
+
+pub use events::TraceEvent;
+pub use writer::{FailAfterSink, FileSink, MemSink, TraceBus, TraceSink};

@@ -1,0 +1,189 @@
+//! Scoped wall-clock phase timers for the perf harness.
+//!
+//! This is the **only** obs file on the `vhpc lint` R2 wall-clock
+//! allowlist: every `Instant` read in the observability layer lives
+//! here, behind an enable gate, and the measurements feed *reported
+//! stats only* — nothing the simulation computes ever depends on them,
+//! so determinism fingerprints are untouched whether profiling is on
+//! or off.
+//!
+//! Usage: instrumented sites call [`scoped`] with a static phase name
+//! (`policy_sort`, `wal_flush`, `gossip_tick`, `window_merge`,
+//! `jacobi_sweep`); the returned guard records the elapsed wall time
+//! into a global per-phase histogram when it drops. When profiling is
+//! disabled (the default, and the case for every normal run) `scoped`
+//! is a single relaxed atomic load — no clock read, no lock.
+//!
+//! The perf harness brackets a run with [`session`] + [`enable`] and
+//! collects the result with [`drain`]. The session lock serializes
+//! concurrent harness runs (parallel tests) so one run's drain cannot
+//! steal another's samples.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard};
+use std::time::Instant;
+
+/// Per-phase sample cap: enough for stable p99s without letting a
+/// million-sweep perf run hoard memory. Count/total/max stay exact
+/// beyond the cap; percentiles come from the first `SAMPLE_CAP`
+/// samples.
+const SAMPLE_CAP: usize = 8192;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static REGISTRY: Mutex<Option<BTreeMap<&'static str, Accum>>> = Mutex::new(None);
+static SESSION: Mutex<()> = Mutex::new(());
+
+#[derive(Debug, Clone, Default)]
+struct Accum {
+    count: u64,
+    total_ns: u64,
+    max_ns: u64,
+    samples: Vec<u64>,
+}
+
+/// Exclusive profiling session (held by the perf harness for the
+/// duration of an instrumented run).
+pub struct Session {
+    _guard: MutexGuard<'static, ()>,
+}
+
+/// Acquire the profiling session lock. Concurrent callers (parallel
+/// perf tests) serialize here instead of corrupting each other's
+/// histograms.
+pub fn session() -> Session {
+    Session { _guard: SESSION.lock().unwrap_or_else(|e| e.into_inner()) }
+}
+
+/// Reset the registry and start timing. Call under a [`session`].
+pub fn enable() {
+    let mut reg = REGISTRY.lock().unwrap_or_else(|e| e.into_inner());
+    *reg = Some(BTreeMap::new());
+    drop(reg);
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Stop timing and take the accumulated per-phase profiles, keyed and
+/// sorted by phase name. Empty when nothing ran (or profiling was
+/// never enabled).
+pub fn drain() -> Vec<PhaseProfile> {
+    ENABLED.store(false, Ordering::Relaxed);
+    let map = {
+        let mut reg = REGISTRY.lock().unwrap_or_else(|e| e.into_inner());
+        reg.take()
+    };
+    let Some(map) = map else { return Vec::new() };
+    map.into_iter()
+        .map(|(phase, mut a)| {
+            a.samples.sort_unstable();
+            let pct = |p: f64| -> f64 {
+                if a.samples.is_empty() {
+                    return 0.0;
+                }
+                let idx = ((p / 100.0) * (a.samples.len() - 1) as f64).round() as usize;
+                a.samples[idx.min(a.samples.len() - 1)] as f64 / 1_000.0
+            };
+            PhaseProfile {
+                phase: phase.to_string(),
+                count: a.count,
+                total_secs: a.total_ns as f64 / 1e9,
+                mean_us: if a.count == 0 {
+                    0.0
+                } else {
+                    a.total_ns as f64 / a.count as f64 / 1_000.0
+                },
+                p50_us: pct(50.0),
+                p99_us: pct(99.0),
+                max_us: a.max_ns as f64 / 1_000.0,
+            }
+        })
+        .collect()
+}
+
+/// One phase's accumulated wall-time histogram.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhaseProfile {
+    pub phase: String,
+    /// Times the phase ran.
+    pub count: u64,
+    /// Total wall time across all runs, seconds.
+    pub total_secs: f64,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    /// Largest single run, microseconds (exact even past the sample cap).
+    pub max_us: f64,
+}
+
+/// A scoped timer: records the elapsed wall time for `phase` when it
+/// drops. A no-op guard (no clock read) when profiling is disabled.
+pub struct PhaseTimer {
+    phase: &'static str,
+    start: Option<Instant>,
+}
+
+/// Start timing `phase` until the returned guard drops.
+pub fn scoped(phase: &'static str) -> PhaseTimer {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return PhaseTimer { phase, start: None };
+    }
+    PhaseTimer { phase, start: Some(Instant::now()) }
+}
+
+impl Drop for PhaseTimer {
+    fn drop(&mut self) {
+        let Some(start) = self.start.take() else { return };
+        let ns = start.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+        let mut reg = REGISTRY.lock().unwrap_or_else(|e| e.into_inner());
+        // the registry may have been drained while this guard was live
+        // (another thread finishing the run): drop the sample quietly
+        let Some(map) = reg.as_mut() else { return };
+        let a = map.entry(self.phase).or_default();
+        a.count += 1;
+        a.total_ns = a.total_ns.saturating_add(ns);
+        a.max_ns = a.max_ns.max(ns);
+        if a.samples.len() < SAMPLE_CAP {
+            a.samples.push(ns);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_timers_record_nothing() {
+        let _s = session();
+        // not enabled: the guard must not touch the registry
+        {
+            let _t = scoped("phase_a");
+        }
+        assert!(drain().is_empty());
+    }
+
+    #[test]
+    fn enabled_timers_accumulate_per_phase() {
+        let _s = session();
+        enable();
+        for _ in 0..5 {
+            let _t = scoped("phase_b");
+        }
+        {
+            let _t = scoped("phase_a");
+        }
+        let profiles = drain();
+        assert_eq!(profiles.len(), 2);
+        // BTreeMap order: sorted by phase name
+        assert_eq!(profiles[0].phase, "phase_a");
+        assert_eq!(profiles[0].count, 1);
+        assert_eq!(profiles[1].phase, "phase_b");
+        assert_eq!(profiles[1].count, 5);
+        assert!(profiles[1].max_us >= profiles[1].p50_us);
+        // drained: later timers land nowhere
+        {
+            let _t = scoped("phase_b");
+        }
+        assert!(drain().is_empty(), "drain must reset the registry");
+    }
+}

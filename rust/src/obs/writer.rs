@@ -1,0 +1,276 @@
+//! Buffered JSON-lines trace sinks and the bus the cluster emits into.
+//!
+//! The contract mirrors the WAL's batching posture (PR 8): event
+//! handlers push typed events into an in-memory buffer as they run, and
+//! the buffer drains to the sink at engine-event boundaries — the same
+//! places `ha::wal::flush` runs — so serialization and I/O stay off the
+//! per-mutation hot path.
+//!
+//! **Degradation rule:** a sink error never propagates into scheduling.
+//! Events that could not be written are counted and dropped
+//! (`obs_events_dropped`), the run continues, and — because the drop
+//! counters live on the bus, not in [`Metrics`](crate::cluster::metrics::Metrics)
+//! — a traced run's counter fingerprint stays byte-identical to an
+//! untraced run no matter how the sink behaves.
+
+use super::events::TraceEvent;
+use std::io::Write;
+
+/// A destination for rendered trace lines. Implementations may buffer;
+/// `flush` pushes everything durable.
+pub trait TraceSink {
+    /// Write one JSON line (no trailing newline in `line`).
+    fn write_line(&mut self, line: &str) -> Result<(), String>;
+    /// Make previously written lines durable.
+    fn flush(&mut self) -> Result<(), String>;
+}
+
+/// File-backed sink: buffered JSON lines, flushed at end of run.
+pub struct FileSink {
+    out: std::io::BufWriter<std::fs::File>,
+}
+
+impl FileSink {
+    /// Create (truncating) the trace file. An unopenable path is a
+    /// configuration error and reported to the caller — only *mid-run*
+    /// write failures degrade to counted drops.
+    pub fn create(path: &str) -> Result<Self, String> {
+        let file = std::fs::File::create(path)
+            .map_err(|e| format!("cannot create trace file {path}: {e}"))?;
+        Ok(Self { out: std::io::BufWriter::new(file) })
+    }
+}
+
+impl TraceSink for FileSink {
+    fn write_line(&mut self, line: &str) -> Result<(), String> {
+        writeln!(self.out, "{line}").map_err(|e| format!("trace write: {e}"))
+    }
+    fn flush(&mut self) -> Result<(), String> {
+        self.out.flush().map_err(|e| format!("trace flush: {e}"))
+    }
+}
+
+/// The shared line buffer a [`MemSink`] writes into. Kept behind an
+/// `Arc` so a test (or `vhpc acct`) can hold a handle to the lines
+/// while the boxed sink lives inside the bus.
+pub type SharedLines = std::sync::Arc<std::sync::Mutex<Vec<String>>>;
+
+/// In-memory sink (tests, programmatic consumers).
+#[derive(Debug, Default)]
+pub struct MemSink {
+    lines: SharedLines,
+}
+
+impl MemSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    /// A handle to the line buffer that outlives the boxed sink.
+    pub fn shared(&self) -> SharedLines {
+        self.lines.clone()
+    }
+}
+
+impl TraceSink for MemSink {
+    fn write_line(&mut self, line: &str) -> Result<(), String> {
+        self.lines
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .push(line.to_string());
+        Ok(())
+    }
+    fn flush(&mut self) -> Result<(), String> {
+        Ok(())
+    }
+}
+
+/// A sink that accepts the first `budget` writes and errors on every
+/// write after that — the graceful-degradation test double (a full
+/// disk, a dead pipe). Accepted lines stay readable.
+#[derive(Debug, Default)]
+pub struct FailAfterSink {
+    budget: usize,
+    accepted: Vec<String>,
+}
+
+impl FailAfterSink {
+    pub fn new(budget: usize) -> Self {
+        Self { budget, accepted: Vec::new() }
+    }
+    pub fn accepted(&self) -> &[String] {
+        &self.accepted
+    }
+}
+
+impl TraceSink for FailAfterSink {
+    fn write_line(&mut self, line: &str) -> Result<(), String> {
+        if self.accepted.len() >= self.budget {
+            return Err("injected sink failure".into());
+        }
+        self.accepted.push(line.to_string());
+        Ok(())
+    }
+    fn flush(&mut self) -> Result<(), String> {
+        Ok(())
+    }
+}
+
+/// The cluster's trace bus: buffers typed events between engine-event
+/// boundaries and drains them to the configured sink. With no sink
+/// installed (the default) `emit` is a single branch — untraced runs
+/// pay nothing.
+#[derive(Default)]
+pub struct TraceBus {
+    sink: Option<Box<dyn TraceSink>>,
+    buf: Vec<TraceEvent>,
+    written: u64,
+    dropped: u64,
+}
+
+impl TraceBus {
+    /// The inert bus: no sink, every `emit` is a no-op.
+    pub fn disabled() -> Self {
+        Self::default()
+    }
+
+    /// A bus draining into `sink`.
+    pub fn with_sink(sink: Box<dyn TraceSink>) -> Self {
+        Self { sink: Some(sink), buf: Vec::new(), written: 0, dropped: 0 }
+    }
+
+    /// True when a sink is installed. Emission sites that would allocate
+    /// to build an event should check this first.
+    pub fn enabled(&self) -> bool {
+        self.sink.is_some()
+    }
+
+    /// Buffer one event (dropped silently when no sink is installed).
+    pub fn emit(&mut self, ev: TraceEvent) {
+        if self.sink.is_some() {
+            self.buf.push(ev);
+        }
+    }
+
+    /// Drain the buffer to the sink. Write errors degrade to counted
+    /// drops — never an `Err`, never a panic, nothing the caller has to
+    /// handle on the scheduling path.
+    pub fn flush(&mut self) {
+        let Some(sink) = self.sink.as_mut() else {
+            self.buf.clear();
+            return;
+        };
+        for ev in self.buf.drain(..) {
+            match sink.write_line(&ev.to_json_line()) {
+                Ok(()) => self.written += 1,
+                Err(_) => self.dropped += 1,
+            }
+        }
+    }
+
+    /// Flush the buffer and push the sink's own buffers durable. Called
+    /// at end of run (and from `Drop`, so a bus going out of scope never
+    /// strands buffered events).
+    pub fn finish(&mut self) {
+        self.flush();
+        if let Some(sink) = self.sink.as_mut() {
+            let _ = sink.flush();
+        }
+    }
+
+    /// Events successfully written to the sink.
+    pub fn events_written(&self) -> u64 {
+        self.written
+    }
+
+    /// `obs_events_dropped`: events lost to sink errors. Reported next
+    /// to the run outcome, never folded into the determinism
+    /// fingerprint.
+    pub fn events_dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Take the sink back out (tests inspect MemSink contents).
+    pub fn take_sink(&mut self) -> Option<Box<dyn TraceSink>> {
+        self.finish();
+        self.sink.take()
+    }
+}
+
+impl Drop for TraceBus {
+    fn drop(&mut self) {
+        self.finish();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimTime;
+    use crate::util::ids::JobId;
+
+    fn ev(n: u32) -> TraceEvent {
+        TraceEvent::Submit {
+            at: SimTime::from_secs(n as u64),
+            epoch: 0,
+            job: JobId::new(n),
+            tenant: 0,
+            ranks: 1,
+            priority: 0,
+        }
+    }
+
+    #[test]
+    fn disabled_bus_buffers_and_writes_nothing() {
+        let mut bus = TraceBus::disabled();
+        assert!(!bus.enabled());
+        bus.emit(ev(0));
+        bus.flush();
+        assert_eq!(bus.events_written(), 0);
+        assert_eq!(bus.events_dropped(), 0);
+    }
+
+    #[test]
+    fn events_buffer_until_flush_then_reach_the_sink() {
+        let sink = MemSink::new();
+        let lines = sink.shared();
+        let mut bus = TraceBus::with_sink(Box::new(sink));
+        bus.emit(ev(0));
+        bus.emit(ev(1));
+        assert_eq!(bus.events_written(), 0, "nothing written before the boundary");
+        assert!(lines.lock().unwrap().is_empty());
+        bus.flush();
+        assert_eq!(bus.events_written(), 2);
+        let got = lines.lock().unwrap().clone();
+        assert_eq!(got.len(), 2);
+        assert_eq!(TraceEvent::parse_json_line(&got[0]).unwrap(), ev(0));
+        assert_eq!(TraceEvent::parse_json_line(&got[1]).unwrap(), ev(1));
+    }
+
+    #[test]
+    fn sink_errors_degrade_to_counted_drops() {
+        let mut bus = TraceBus::with_sink(Box::new(FailAfterSink::new(3)));
+        for i in 0..10 {
+            bus.emit(ev(i));
+        }
+        bus.flush();
+        assert_eq!(bus.events_written(), 3);
+        assert_eq!(bus.events_dropped(), 7);
+        // the bus keeps accepting (and counting) after the sink died
+        bus.emit(ev(99));
+        bus.flush();
+        assert_eq!(bus.events_dropped(), 8);
+    }
+
+    #[test]
+    fn drop_flushes_the_tail() {
+        let sink = MemSink::new();
+        let lines = sink.shared();
+        {
+            let mut bus = TraceBus::with_sink(Box::new(sink));
+            bus.emit(ev(7));
+            // no explicit flush: the bus goes out of scope with a
+            // buffered event, which Drop must not strand
+        }
+        assert_eq!(lines.lock().unwrap().len(), 1);
+    }
+}

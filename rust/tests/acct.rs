@@ -1,0 +1,195 @@
+//! End-to-end `vhpc acct` coverage: accounting derived from a chaos
+//! run's replicated WAL must agree with the live cluster's own records
+//! — attempt counts exactly, slot-seconds within decay tolerance — and
+//! a truncated or corrupt log must degrade to a partial report, never
+//! an error.
+//!
+//! Pure control-plane (synthetic jobs only): runs under
+//! `--no-default-features` in CI.
+
+use vhpc::cluster::head::JobKind;
+use vhpc::cluster::vcluster::VirtualCluster;
+use vhpc::config::ClusterSpec;
+use vhpc::ha::failover::decode_wal_listing;
+use vhpc::ha::wal::WAL_PREFIX;
+use vhpc::obs::acct::{from_trace_lines, from_wal, AcctFilter};
+use vhpc::obs::MemSink;
+use vhpc::sim::SimTime;
+use vhpc::util::ids::MachineId;
+
+/// Drive an HA-journaled cluster (full WAL retained: snapshots off)
+/// with a live trace attached, through a mid-run machine kill, to
+/// completion of every job. Returns the cluster plus the captured
+/// trace lines.
+fn chaos_run_with_wal() -> (VirtualCluster, Vec<String>) {
+    let mut spec = ClusterSpec::paper_testbed();
+    spec.machines = 4;
+    spec.machine_spec.boot_time = SimTime::from_secs(5);
+    spec.autoscale.min_nodes = 3;
+    spec.autoscale.max_nodes = 3;
+    spec.autoscale.interval = SimTime::from_secs(2);
+    spec.autoscale.cooldown = SimTime::from_secs(4);
+    spec.autoscale.idle_timeout = SimTime::from_secs(600);
+    spec.ha.enabled = true;
+    spec.ha.snapshot_every = 0; // keep the whole log: acct replays it
+
+    let mut vc = VirtualCluster::new(spec).expect("cluster");
+    // near-flat decay so the ledger comparison below is tight: over a
+    // run of a few hundred virtual seconds the balance loses < 0.01%
+    vc.state.head.ledger.half_life = SimTime::from_secs(10_000_000);
+    let sink = MemSink::new();
+    let lines = sink.shared();
+    vc.set_trace_sink(Box::new(sink));
+
+    vc.start();
+    assert!(
+        vc.advance_until(SimTime::from_secs(600), |st| st.head.slots_available() >= 24),
+        "pool never warmed up"
+    );
+    let jobs: [(u32, u64, u64); 5] =
+        [(8, 120, 1), (12, 90, 2), (4, 60, 1), (16, 150, 2), (8, 45, 1)];
+    for (i, (ranks, secs, tenant)) in jobs.iter().enumerate() {
+        vc.submit_job(
+            &format!("acct-job-{i}"),
+            *ranks,
+            JobKind::Synthetic { duration: SimTime::from_secs(*secs) },
+            0,
+            *tenant,
+        );
+    }
+    // let work start, then kill a compute machine: at least one running
+    // job loses its reservation and requeues (budget is 3, so nothing
+    // abandons — keeping the WAL-derived and live folds comparable)
+    vc.advance(SimTime::from_secs(20));
+    vc.kill_machine(MachineId::new(2));
+    assert!(
+        vc.advance_until(SimTime::from_secs(3600), |st| st.head.completed.len() >= 5),
+        "jobs never drained"
+    );
+    vc.finish_trace();
+    let captured = lines.lock().unwrap().clone();
+    (vc, captured)
+}
+
+#[test]
+fn wal_accounting_matches_live_trace_and_ledger() {
+    let (vc, lines) = chaos_run_with_wal();
+    let now = vc.now();
+
+    let live = from_trace_lines(lines.iter().map(|s| s.as_str()));
+    assert_eq!(live.skipped_lines, 0, "every emitted line must parse");
+    assert_eq!(live.jobs.len(), 5);
+    assert!(
+        live.jobs.iter().any(|j| j.requeues > 0),
+        "the machine kill must have requeued at least one job"
+    );
+
+    let kv = vc.state.consul.kv();
+    let entries = kv.list_prefix(WAL_PREFIX);
+    assert!(!entries.is_empty(), "the HA run must have journaled a WAL");
+    let (events, decode_errors) = decode_wal_listing(&entries, 0);
+    assert_eq!(decode_errors, 0, "the live WAL must decode cleanly");
+    let replayed = from_wal(&events);
+
+    // attempt counts exact; billing columns agree between the two
+    // derivations (the WAL journals the same dispatch/loss boundaries
+    // the live trace stamps)
+    assert_eq!(replayed.jobs.len(), live.jobs.len());
+    for (w, l) in replayed.jobs.iter().zip(live.jobs.iter()) {
+        assert_eq!(w.job, l.job);
+        assert_eq!(w.tenant, l.tenant);
+        assert_eq!(w.attempts, l.attempts, "job {} attempts", w.job);
+        assert_eq!(w.requeues, l.requeues, "job {} requeues", w.job);
+        assert_eq!(w.state, l.state, "job {} state", w.job);
+        assert!(
+            (w.slot_seconds - l.slot_seconds).abs() < 1e-6,
+            "job {}: wal {} vs live {} slot-seconds",
+            w.job,
+            w.slot_seconds,
+            l.slot_seconds
+        );
+    }
+    // completed records pin the attempt counts independently: the
+    // record's attempt field is the 0-based final generation (bumped by
+    // losses and preemptions but not by aborted launches, which
+    // re-dispatch under the same generation — hence >=), and every
+    // dispatch in the report is one initial start plus one per return
+    // to the queue
+    for rec in vc.state.head.completed.iter() {
+        let j = replayed
+            .jobs
+            .iter()
+            .find(|j| j.job == rec.spec.id.raw())
+            .expect("every terminal record must appear in the report");
+        assert!(j.attempts >= rec.attempt + 1, "job {}", rec.spec.id.raw());
+        assert_eq!(
+            j.attempts,
+            1 + j.requeues + j.preemptions,
+            "job {}",
+            rec.spec.id.raw()
+        );
+    }
+    // and the per-tenant rollup matches the head's own ledger within
+    // the (near-flat) decay
+    for t in &replayed.tenants {
+        let ledger = vc.state.head.ledger.usage_at(t.tenant, now);
+        let diff = (ledger - t.slot_seconds).abs();
+        assert!(
+            diff <= ledger.max(t.slot_seconds) * 0.01 + 1e-6,
+            "tenant {}: ledger {ledger} vs acct {}",
+            t.tenant,
+            t.slot_seconds
+        );
+    }
+}
+
+#[test]
+fn truncated_or_corrupt_wal_degrades_to_partial_report() {
+    let (vc, _) = chaos_run_with_wal();
+    let kv = vc.state.consul.kv();
+    let entries = kv.list_prefix(WAL_PREFIX);
+    let (full_events, _) = decode_wal_listing(&entries, 0);
+    let full = from_wal(&full_events);
+    assert_eq!(full.jobs.len(), 5);
+
+    // corrupt a mid-log batch: decode truncates at the tear and the
+    // fold reports whatever the clean prefix supports — no panic, no Err
+    let mut owned: Vec<(String, String)> =
+        entries.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+    let mid = owned.len() / 2;
+    owned[mid].1 = "not a wal record".to_string();
+    let refs: Vec<(&str, &str)> =
+        owned.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
+    let (prefix_events, errors) = decode_wal_listing(&refs, 0);
+    assert_eq!(errors, 1, "the tear must be counted");
+    assert!(prefix_events.len() < full_events.len(), "replay must truncate at the tear");
+    let partial = from_wal(&prefix_events);
+    assert!(partial.events < full.events);
+    assert!(partial.jobs.len() <= full.jobs.len());
+    // the partial report is a prefix view, not a reshuffle: every job
+    // it knows exists in the full report under the same tenant
+    for p in &partial.jobs {
+        let f = full.jobs.iter().find(|f| f.job == p.job).expect("prefix job");
+        assert_eq!(p.tenant, f.tenant);
+    }
+}
+
+#[test]
+fn corrupt_trace_lines_are_counted_and_skipped() {
+    let (_, mut lines) = chaos_run_with_wal();
+    let n = lines.len();
+    lines.insert(n / 2, "{\"ev\":\"garbage".to_string());
+    lines.push("not json at all".to_string());
+    let report = from_trace_lines(lines.iter().map(|s| s.as_str()));
+    assert_eq!(report.skipped_lines, 2, "bad lines are counted, not fatal");
+    assert_eq!(report.jobs.len(), 5, "good lines still fold");
+
+    // filters compose on the degraded report too
+    let t1 = report.filtered(&AcctFilter {
+        tenant: Some(1),
+        state: None,
+        since: None,
+    });
+    assert!(t1.jobs.iter().all(|j| j.tenant == 1));
+    assert_eq!(t1.jobs.len(), 3);
+}

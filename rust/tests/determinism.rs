@@ -13,7 +13,10 @@
 //! `--no-default-features` in CI.
 
 use std::collections::BTreeMap;
+use vhpc::cluster::head::JobKind;
 use vhpc::cluster::mix::{mix_spec, prioritized_trace, run_job_trace, run_tenant_trace};
+use vhpc::cluster::vcluster::VirtualCluster;
+use vhpc::obs::{FailAfterSink, MemSink, TraceSink};
 use vhpc::cluster::perf::{perf_spec, run_perf_trace};
 use vhpc::cluster::policy::SchedulePolicy;
 use vhpc::cluster::{run_sharded_chaos, run_sharded_mix, run_sharded_tenants, ShardRunConfig};
@@ -228,6 +231,71 @@ fn perf_driver_fingerprints_are_deterministic_and_shard_count_invariant() {
             "arrival stream changed at {shards} shards"
         );
         assert_identical(&o.counters, &base.counters, &format!("perf @ {shards} shards"));
+    }
+}
+
+/// Drive one fixed synthetic workload through a cluster with the given
+/// trace sink (or none), returning the counter fingerprint plus the
+/// bus's written/dropped tallies.
+fn run_with_sink(sink: Option<Box<dyn TraceSink>>) -> (Fingerprint, u64, u64) {
+    let mut vc = VirtualCluster::new(fast_spec(4)).expect("cluster");
+    if let Some(s) = sink {
+        vc.set_trace_sink(s);
+    }
+    vc.start();
+    assert!(
+        vc.advance_until(SimTime::from_secs(600), |st| st.head.slots_available() >= 24),
+        "pool never warmed up"
+    );
+    for (i, (ranks, secs)) in [(8u32, 40u64), (16, 60), (4, 20), (12, 50)].iter().enumerate() {
+        vc.submit(
+            &format!("trace-job-{i}"),
+            *ranks,
+            JobKind::Synthetic { duration: SimTime::from_secs(*secs) },
+        );
+    }
+    assert!(
+        vc.advance_until(SimTime::from_secs(3600), |st| st.head.completed.len() >= 4),
+        "jobs never drained"
+    );
+    vc.finish_trace();
+    let written = vc.state.trace.events_written();
+    let dropped = vc.state.trace.events_dropped();
+    (vc.metrics().counters_snapshot(), written, dropped)
+}
+
+/// Observability must be a pure observer: the counter fingerprint of a
+/// traced run — even one whose sink starts failing mid-run — is
+/// byte-identical to the untraced run's. The drop counter lives on the
+/// bus, outside [`Metrics`], and this is the test that keeps it there.
+#[test]
+fn traced_and_untraced_runs_fingerprint_byte_identical() {
+    let (untraced, w0, d0) = run_with_sink(None);
+    assert_eq!((w0, d0), (0, 0), "the disabled bus must write nothing");
+
+    let sink = MemSink::new();
+    let lines = sink.shared();
+    let (traced, w1, d1) = run_with_sink(Some(Box::new(sink)));
+    assert!(w1 > 0, "the healthy sink must have received events");
+    assert_eq!(d1, 0, "the healthy sink must drop nothing");
+    assert_eq!(
+        lines.lock().unwrap().len() as u64,
+        w1,
+        "written count must match the sink's line count"
+    );
+    assert_identical(&untraced, &traced, "traced vs untraced");
+
+    // the sink dies after 5 writes: the run must complete identically,
+    // with the loss visible only in obs_events_dropped
+    let (degraded, w2, d2) = run_with_sink(Some(Box::new(FailAfterSink::new(5))));
+    assert_eq!(w2, 5, "the failing sink accepts exactly its budget");
+    assert!(d2 > 0, "obs_events_dropped must count the lost events");
+    assert_identical(&untraced, &degraded, "failing-sink vs untraced");
+    for fp in [&traced, &degraded] {
+        assert!(
+            fp.keys().all(|k| !k.starts_with("obs_")),
+            "obs drop/write tallies must never enter the Metrics fingerprint"
+        );
     }
 }
 
