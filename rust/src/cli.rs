@@ -20,11 +20,16 @@
 //! vhpc acct       TRACE_FILE [--format json|table] [--tenant T]
 //!                 [--state S] [--since SECS]   (sacct-style accounting
 //!                 over a `--trace` event log)
+//! vhpc trace      TRACE_FILE [--format json|table] [--job J]
+//!                 [--series csv|json]   (per-job timelines, the
+//!                 scale-decision audit and the sampled gauge
+//!                 time-series from a `--trace` event log)
 //! vhpc perf       [--jobs N] [--tenants N] [--machines M] [--shards N]
-//!                 [--seed S] [--duration S] [--out F]
+//!                 [--seed S] [--duration S] [--out F] [--trace F]
 //!                 [--baseline F] [--gate PCT]   (large-trace throughput
 //!                 harness; writes BENCH_perf.json, optionally gated
-//!                 against a baseline's events/sec)
+//!                 against a baseline's events/sec; --trace reruns the
+//!                 cluster phase traced and records the overhead)
 //! vhpc build      [--dockerfile F]
 //! vhpc bench-net  [--bridge MODE]
 //! vhpc lint       [--fix-waivers] [paths…]
@@ -33,8 +38,11 @@
 //!
 //! The in-process drivers (`up`, `run`, `mix`, `tenants`, `chaos`,
 //! `ha`) all take `--trace FILE` to stream the structured event log
-//! ([`crate::obs`]) to a JSON-lines file; `--trace` cannot be combined
-//! with `--shards` (the partitioned conductor path is untraced).
+//! ([`crate::obs`]) to a JSON-lines file. Sharded runs (`--shards N`)
+//! trace too: each rank buffers locally and the conductor merges the
+//! per-window batches in canonical order, so the file is byte-identical
+//! at any shard count. Every traced driver reports the bus's
+//! written/dropped counts at the end of the run.
 
 use crate::cluster::head::JobKind;
 use crate::cluster::policy::{PolicyKind, SchedulePolicy};
@@ -113,18 +121,23 @@ fn load_spec(flags: &HashMap<String, String>) -> Result<ClusterSpec, String> {
     Ok(spec)
 }
 
-/// Sharded (conductor) runs don't carry a trace bus — the in-process
-/// drivers do. Reject the combination loudly instead of silently
-/// writing an empty file.
-fn reject_sharded_trace(spec: &ClusterSpec) -> Result<(), String> {
-    if spec.trace_path.is_some() {
-        return Err(
-            "--trace is not supported together with --shards (the partitioned \
-             conductor path emits no trace events); drop one of the flags"
-                .into(),
-        );
+/// Finish the trace bus and print its end-of-run I/O counts (traced
+/// runs only). A non-zero drop count means the sink failed mid-run and
+/// the trace file is partial.
+fn print_trace_summary(vc: &mut VirtualCluster) {
+    vc.finish_trace();
+    let (written, dropped) = vc.trace_io();
+    if written > 0 || dropped > 0 {
+        println!("trace: {written} events written, {dropped} events dropped");
     }
-    Ok(())
+}
+
+/// Sharded-run counterpart of [`print_trace_summary`]: the conductor
+/// already finished the bus, so the counts ride on the outcome.
+fn print_sharded_trace_summary(written: u64, dropped: u64) {
+    if written > 0 || dropped > 0 {
+        println!("trace: {written} events written, {dropped} events dropped");
+    }
 }
 
 fn cmd_up(flags: HashMap<String, String>) -> Result<(), String> {
@@ -137,6 +150,7 @@ fn cmd_up(flags: HashMap<String, String>) -> Result<(), String> {
     vc.advance(SimTime::from_secs(sim_secs));
     println!("t={} ready compute nodes: {}", vc.now(), vc.ready_compute_nodes());
     println!("--- hostfile ---\n{}", vc.hostfile());
+    print_trace_summary(&mut vc);
     println!("--- metrics ---\n{}", vc.metrics().render());
     Ok(())
 }
@@ -172,6 +186,7 @@ fn cmd_run(flags: HashMap<String, String>) -> Result<(), String> {
     if let Some((steps_run, residual)) = rec.result {
         println!("jacobi: {steps_run} steps, final residual {residual:.3e}");
     }
+    print_trace_summary(&mut vc);
     println!("--- metrics ---\n{}", vc.metrics().render());
     Ok(())
 }
@@ -228,7 +243,6 @@ fn cmd_mix(flags: HashMap<String, String>) -> Result<(), String> {
     // sharded runs only — mirrors `vhpc ha --ticks`
     let ticks: u64 = flag(&flags, "ticks", 0u64)?;
     if shards > 0 {
-        reject_sharded_trace(&spec)?;
         let cfg = crate::cluster::ShardRunConfig {
             shards,
             warmup_slots: warmup,
@@ -243,6 +257,7 @@ fn cmd_mix(flags: HashMap<String, String>) -> Result<(), String> {
             o.shards, o.windows, kind.name(), o.jobs_completed, o.jobs_submitted,
             o.makespan_secs, o.events
         );
+        print_sharded_trace_summary(o.trace_events_written, o.trace_events_dropped);
         println!(
             "counter fingerprint: {:016x} ({} counters) — identical for any --shards at this seed",
             counter_digest(&o.fingerprint),
@@ -250,7 +265,7 @@ fn cmd_mix(flags: HashMap<String, String>) -> Result<(), String> {
         );
         return Ok(());
     }
-    let (outcome, vc) =
+    let (outcome, mut vc) =
         crate::cluster::mix::run_policy_trace(spec, &trace, policy, cap, warmup, sim_secs)
             .map_err(|e| e.to_string())?;
     println!(
@@ -265,6 +280,7 @@ fn cmd_mix(flags: HashMap<String, String>) -> Result<(), String> {
         "mean queue wait: {:.1}s  max queue wait: {:.1}s  makespan: {:.1}s  mean rack spread: {:.2}",
         outcome.mean_wait, outcome.max_wait, outcome.makespan, outcome.mean_rack_spread
     );
+    print_trace_summary(&mut vc);
     println!("--- metrics ---\n{}", vc.metrics().render());
     Ok(())
 }
@@ -310,7 +326,6 @@ fn cmd_tenants(flags: HashMap<String, String>) -> Result<(), String> {
     let policy = SchedulePolicy::new(kind);
     let shards: usize = flag(&flags, "shards", 0usize)?;
     if shards > 0 {
-        reject_sharded_trace(&spec)?;
         let cap_slots = spec.max_advertisable_slots();
         if cap_slots == 0 {
             return Err("cluster has no compute capacity (needs >= 2 machines)".into());
@@ -329,6 +344,7 @@ fn cmd_tenants(flags: HashMap<String, String>) -> Result<(), String> {
             o.shards, o.windows, kind.name(), o.jobs_submitted, o.jobs_completed,
             o.makespan_secs, o.events
         );
+        print_sharded_trace_summary(o.trace_events_written, o.trace_events_dropped);
         println!("arrival-stream fingerprint: {:016x}", o.arrivals_fingerprint);
         println!(
             "counter fingerprint: {:016x} ({} counters) — identical for any --shards at this seed",
@@ -338,7 +354,7 @@ fn cmd_tenants(flags: HashMap<String, String>) -> Result<(), String> {
         return Ok(());
     }
     let crash_at: u64 = flag(&flags, "crash-at", 0u64)?;
-    let (o, vc) = if crash_at > 0 {
+    let (o, mut vc) = if crash_at > 0 {
         // HA run with a mid-stream head crash: the arrival cursor is
         // WAL-shipped, so the stream resumes byte-identically after the
         // standby takes over
@@ -381,6 +397,7 @@ fn cmd_tenants(flags: HashMap<String, String>) -> Result<(), String> {
         o.fairness_slowdown, o.fairness_wait
     );
     println!("arrival-stream fingerprint: {:016x}", o.arrivals_fingerprint);
+    print_trace_summary(&mut vc);
     println!("--- metrics ---\n{}", vc.metrics().render());
     Ok(())
 }
@@ -419,7 +436,6 @@ fn cmd_chaos(flags: HashMap<String, String>) -> Result<(), String> {
     let warmup = (spec.autoscale.min_nodes * spec.slots_per_node).clamp(1, cap_slots);
     let shards: usize = flag(&flags, "shards", 0usize)?;
     if shards > 0 {
-        reject_sharded_trace(&spec)?;
         // the sharded driver draws its own kill schedule from the spec seed
         spec.seed = seed;
         let reqs: Vec<crate::cluster::mix::JobReq> = trace
@@ -439,6 +455,7 @@ fn cmd_chaos(flags: HashMap<String, String>) -> Result<(), String> {
             "sharded chaos: {} shards  {} windows  jobs done: {}/{}  makespan {:.1}s  events {}",
             o.shards, o.windows, o.jobs_completed, o.jobs_submitted, o.makespan_secs, o.events
         );
+        print_sharded_trace_summary(o.trace_events_written, o.trace_events_dropped);
         println!(
             "counter fingerprint: {:016x} ({} counters) — identical for any --shards at this seed",
             counter_digest(&o.fingerprint),
@@ -456,7 +473,7 @@ fn cmd_chaos(flags: HashMap<String, String>) -> Result<(), String> {
         "chaos: {} crashes scheduled over {sim_secs}s (seed {seed}, per-machine mtbf {mtbf}s)",
         plan.len()
     );
-    let (o, vc) =
+    let (o, mut vc) =
         crate::faults::run_chaos_trace(spec, &trace, &plan, warmup, max_retries, sim_secs)
             .map_err(|e| e.to_string())?;
     println!(
@@ -471,6 +488,7 @@ fn cmd_chaos(flags: HashMap<String, String>) -> Result<(), String> {
         "MTTR mean {:.1}s  max {:.1}s  wasted work {:.1}s  goodput {:.1} slot-s/s  makespan {:.1}s",
         o.mttr_mean, o.mttr_max, o.wasted_seconds, o.goodput, o.makespan
     );
+    print_trace_summary(&mut vc);
     println!("--- metrics ---\n{}", vc.metrics().render());
     Ok(())
 }
@@ -516,7 +534,7 @@ fn cmd_ha(flags: HashMap<String, String>) -> Result<(), String> {
         "ha drill: {jobs} jobs, head crash at +{crash_at}s, lock ttl {lock_ttl}s, \
          snapshot every {snapshot_every} wal appends"
     );
-    let (o, vc) = crate::ha::run_ha_trace(
+    let (o, mut vc) = crate::ha::run_ha_trace(
         spec,
         &trace,
         Some(SimTime::from_secs(crash_at)),
@@ -538,6 +556,7 @@ fn cmd_ha(flags: HashMap<String, String>) -> Result<(), String> {
         o.failover_mean, o.failover_max, o.wal_appends, o.snapshots, o.replayed_events
     );
     println!("makespan {:.1}s", o.makespan);
+    print_trace_summary(&mut vc);
     println!("--- metrics ---\n{}", vc.metrics().render());
     Ok(())
 }
@@ -554,7 +573,6 @@ fn cmd_perf(mut flags: HashMap<String, String>) -> Result<(), String> {
         flags.insert("machines".to_string(), "32".to_string());
     }
     let spec = load_spec(&flags)?;
-    reject_sharded_trace(&spec)?;
     let jobs: usize = flag(&flags, "jobs", 100_000usize)?;
     let tenants: u64 = flag(&flags, "tenants", 10_000u64)?;
     let shards: usize = flag(&flags, "shards", 4usize)?;
@@ -589,6 +607,15 @@ fn cmd_perf(mut flags: HashMap<String, String>) -> Result<(), String> {
         o.jobs_completed,
         o.makespan_secs
     );
+    if o.traced_events_per_sec > 0.0 {
+        println!(
+            "traced rerun: {:.0} events/sec ({:+.2}% overhead)  trace: {} events written, {} events dropped",
+            o.traced_events_per_sec,
+            o.trace_overhead_pct,
+            o.trace_events_written,
+            o.trace_events_dropped
+        );
+    }
     println!("arrival-stream fingerprint: {:016x}", o.arrivals_fingerprint);
     println!(
         "counter fingerprint: {:016x} ({} counters) — identical for any --shards at this seed",
@@ -677,6 +704,65 @@ fn cmd_acct(rest: &[String]) -> Result<(), String> {
     Ok(())
 }
 
+/// `vhpc trace` — timeline analysis over a structured trace file:
+/// per-job lifecycles (submit→dispatch→launch→terminal with the
+/// wait/run/requeue breakdown and the critical attempt), the
+/// scale-decision audit (every up/down/hold with its reason code and
+/// the demand signal sampled around it), and the gauge time-series.
+/// `--series csv|json` exports just the sampled time-series. Shares
+/// `vhpc acct`'s torn-input posture: unparseable lines are counted and
+/// skipped, so a truncated trace degrades to a partial report.
+fn cmd_trace(rest: &[String]) -> Result<(), String> {
+    // one positional operand (the trace file) plus --key value flags,
+    // same shape as `vhpc acct`
+    let mut positional: Vec<String> = Vec::new();
+    let mut flag_args: Vec<String> = Vec::new();
+    let mut it = rest.iter();
+    while let Some(a) = it.next() {
+        if a.starts_with("--") {
+            flag_args.push(a.clone());
+            match it.next() {
+                Some(v) => flag_args.push(v.clone()),
+                None => return Err(format!("{a} needs a value")),
+            }
+        } else {
+            positional.push(a.clone());
+        }
+    }
+    let flags = parse_flags(&flag_args)?;
+    let path = match positional.as_slice() {
+        [p] => p,
+        _ => {
+            return Err(
+                "usage: vhpc trace TRACE_FILE [--format json|table] [--job J] \
+                 [--series csv|json]"
+                    .into(),
+            )
+        }
+    };
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    let mut report = crate::obs::analyze::from_trace_lines(text.lines());
+    if let Some(series) = flags.get("series") {
+        match series.as_str() {
+            "csv" => print!("{}", crate::obs::analyze::render_series_csv(&report)),
+            "json" => print!("{}", crate::obs::analyze::render_series_json(&report)),
+            other => return Err(format!("unknown --series {other} (expected csv or json)")),
+        }
+        return Ok(());
+    }
+    if let Some(v) = flags.get("job") {
+        let job: u64 = v.parse().map_err(|_| format!("bad --job: {v}"))?;
+        report.retain_job(job);
+    }
+    let format: String = flag(&flags, "format", "table".to_string())?;
+    match format.as_str() {
+        "json" => print!("{}", crate::obs::analyze::render_json(&report)),
+        "table" => print!("{}", crate::obs::analyze::render_table(&report)),
+        other => return Err(format!("unknown --format {other} (expected json or table)")),
+    }
+    Ok(())
+}
+
 fn cmd_build(flags: HashMap<String, String>) -> Result<(), String> {
     let text = match flags.get("dockerfile") {
         Some(path) => std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?,
@@ -749,6 +835,7 @@ pub fn main() -> i32 {
         "chaos" => parse_flags(rest).and_then(cmd_chaos),
         "ha" => parse_flags(rest).and_then(cmd_ha),
         "acct" => cmd_acct(rest),
+        "trace" => cmd_trace(rest),
         "perf" => parse_flags(rest).and_then(cmd_perf),
         "build" => parse_flags(rest).and_then(cmd_build),
         "bench-net" => parse_flags(rest).and_then(cmd_bench_net),
@@ -763,13 +850,15 @@ pub fn main() -> i32 {
                  vhpc chaos     [--jobs N] [--machines M] [--seed S] [--mtbf SECS] [--max-retries K] [--sim-seconds S] [--shards N]\n  \
                  vhpc ha        [--jobs N] [--machines M] [--crash-at S] [--lock-ttl S] [--snapshot-every N] [--ticks T]\n  \
                  vhpc acct      TRACE_FILE [--format json|table] [--tenant T] [--state S] [--since SECS]\n  \
-                 vhpc perf      [--jobs N] [--tenants N] [--machines M] [--shards N] [--seed S] [--duration S] [--out F] [--baseline F] [--gate PCT]\n  \
+                 vhpc trace     TRACE_FILE [--format json|table] [--job J] [--series csv|json]\n  \
+                 vhpc perf      [--jobs N] [--tenants N] [--machines M] [--shards N] [--seed S] [--duration S] [--out F] [--trace F] [--baseline F] [--gate PCT]\n  \
                  vhpc build     [--dockerfile F]\n  \
                  vhpc bench-net [--bridge docker0|bridge0|host]\n  \
                  vhpc lint      [--fix-waivers] [paths…]   (determinism static analysis; see lint.toml)\n  \
                  vhpc version\n\n\
-                 in-process drivers (up/run/mix/tenants/chaos/ha) also take --trace FILE\n\
-                 (JSON-lines event log, queryable with `vhpc acct`; incompatible with --shards)"
+                 drivers (up/run/mix/tenants/chaos/ha, sharded or not) also take --trace FILE\n\
+                 (JSON-lines event log, queryable with `vhpc acct` and `vhpc trace`;\n\
+                 sharded traces are byte-identical at any --shards)"
             );
             Ok(())
         }

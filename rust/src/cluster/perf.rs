@@ -112,8 +112,17 @@ pub struct PerfOutcome {
     pub jobs_completed: u64,
     /// Engine events fired by the cluster phase, all shards.
     pub events: u64,
-    /// Cluster-phase events/sec — the headline (and gated) figure.
+    /// Cluster-phase events/sec — the headline (and gated) figure,
+    /// always measured untraced.
     pub events_per_sec: f64,
+    /// Events/sec of the traced rerun (0 when the harness ran without
+    /// `--trace`).
+    pub traced_events_per_sec: f64,
+    /// `(untraced - traced) / untraced * 100` — positive when tracing
+    /// costs throughput. The `ext_perf` bench gates this under 5%.
+    pub trace_overhead_pct: f64,
+    pub trace_events_written: u64,
+    pub trace_events_dropped: u64,
     pub makespan_secs: f64,
     pub windows: u64,
     pub arrivals_fingerprint: u64,
@@ -326,13 +335,17 @@ pub fn perf_population(jobs: usize, tenants: u64, seed: u64, duration_secs: u64)
 /// then the sharded cluster trace. `duration_secs` is the virtual span
 /// of the arrival stream (the drain deadline is 4x that).
 pub fn run_perf_trace(
-    spec: ClusterSpec,
+    mut spec: ClusterSpec,
     jobs: usize,
     tenants: u64,
     shards: usize,
     seed: u64,
     duration_secs: u64,
 ) -> Result<PerfOutcome, String> {
+    // the gated figure is always measured untraced; a `--trace` path
+    // requests a traced rerun afterwards so the overhead is a
+    // like-for-like comparison of the same deterministic run
+    let trace_path = spec.trace_path.take();
     let machines = spec.machines;
     let pop = perf_population(jobs, tenants, seed, duration_secs);
     let (stream, arrivals_stats) = synth_arrivals(pop, duration_secs);
@@ -359,7 +372,7 @@ pub fn run_perf_trace(
     crate::obs::profiling::enable();
     let t0 = Instant::now();
     let o = run_sharded_tenants(
-        spec,
+        spec.clone(),
         pop,
         SchedulePolicy::fairshare(),
         TenantQuotas::default(),
@@ -379,12 +392,56 @@ pub fn run_perf_trace(
             o.arrivals_fingerprint
         ));
     }
+    let events_per_sec = o.events as f64 / cluster_secs;
     let cluster_stats = PhaseStats {
         name: "cluster",
         units: o.events,
         wall_secs: cluster_secs,
         latency: percentiles(&[cluster_secs * 1e3]),
     };
+    let mut phases = vec![arrivals_stats, cal_stats, heap_stats, cluster_stats];
+
+    // the traced rerun: identical spec + stream, trace bus on. Its
+    // counter fingerprint must byte-match the untraced run's — the
+    // fingerprint-neutrality witness at perf scale.
+    let (traced_eps, overhead_pct, tr_written, tr_dropped) = match trace_path {
+        Some(path) => {
+            spec.trace_path = Some(path);
+            let t1 = Instant::now();
+            let tr = run_sharded_tenants(
+                spec,
+                pop,
+                SchedulePolicy::fairshare(),
+                TenantQuotas::default(),
+                duration_secs,
+                &cfg,
+            )
+            .map_err(|e| e.to_string())?;
+            let traced_secs = t1.elapsed().as_secs_f64().max(1e-9);
+            if tr.fingerprint != o.fingerprint {
+                return Err(format!(
+                    "traced rerun drifted: counter digest {:016x} vs untraced {:016x}",
+                    fingerprint_digest(&tr.fingerprint),
+                    fingerprint_digest(&o.fingerprint)
+                ));
+            }
+            let traced_eps = tr.events as f64 / traced_secs;
+            phases.push(PhaseStats {
+                name: "cluster_traced",
+                units: tr.events,
+                wall_secs: traced_secs,
+                latency: percentiles(&[traced_secs * 1e3]),
+            });
+            (
+                traced_eps,
+                (events_per_sec - traced_eps) / events_per_sec.max(1e-9) * 100.0,
+                tr.trace_events_written,
+                tr.trace_events_dropped,
+            )
+        }
+        None => (0.0, 0.0, 0, 0),
+    };
+
     Ok(PerfOutcome {
         jobs,
         tenants,
@@ -395,14 +452,18 @@ pub fn run_perf_trace(
         jobs_submitted: o.jobs_submitted,
         jobs_completed: o.jobs_completed,
         events: o.events,
-        events_per_sec: o.events as f64 / cluster_secs,
+        events_per_sec,
+        traced_events_per_sec: traced_eps,
+        trace_overhead_pct: overhead_pct,
+        trace_events_written: tr_written,
+        trace_events_dropped: tr_dropped,
         makespan_secs: o.makespan_secs,
         windows: o.windows,
         arrivals_fingerprint,
         counter_digest: fingerprint_digest(&o.fingerprint),
         counters: o.fingerprint,
         engine,
-        phases: vec![arrivals_stats, cal_stats, heap_stats, cluster_stats],
+        phases,
         profile,
     })
 }
@@ -443,6 +504,13 @@ pub fn render_json(o: &PerfOutcome) -> String {
     j.push_str(&format!("  \"jobs_submitted\": {},\n", o.jobs_submitted));
     j.push_str(&format!("  \"jobs_completed\": {},\n", o.jobs_completed));
     j.push_str(&format!("  \"events\": {},\n", o.events));
+    j.push_str(&format!(
+        "  \"traced_events_per_sec\": {:.0},\n",
+        o.traced_events_per_sec
+    ));
+    j.push_str(&format!("  \"trace_overhead_pct\": {:.2},\n", o.trace_overhead_pct));
+    j.push_str(&format!("  \"trace_events_written\": {},\n", o.trace_events_written));
+    j.push_str(&format!("  \"trace_events_dropped\": {},\n", o.trace_events_dropped));
     j.push_str(&format!("  \"windows\": {},\n", o.windows));
     j.push_str(&format!("  \"makespan_secs\": {:.1},\n", o.makespan_secs));
     j.push_str(&format!(
@@ -575,6 +643,10 @@ mod tests {
             jobs_completed: 10,
             events: 1234,
             events_per_sec: 56789.0,
+            traced_events_per_sec: 54321.0,
+            trace_overhead_pct: 4.35,
+            trace_events_written: 99,
+            trace_events_dropped: 0,
             makespan_secs: 61.5,
             windows: 70,
             arrivals_fingerprint: 0xABCD,
@@ -596,8 +668,32 @@ mod tests {
         };
         let json = render_json(&o);
         assert_eq!(parse_events_per_sec(&json), Some(56789.0));
-        // the nested engine figures must not shadow the gated key
+        // the nested engine figures must not shadow the gated key, and
+        // neither may the traced-rerun keys (none contains the quoted
+        // `"events_per_sec"` pattern)
         assert!(json.find("\"events_per_sec\"").unwrap() < json.find("calendar_events_per_sec").unwrap());
+        assert!(json.find("\"events_per_sec\"").unwrap() < json.find("traced_events_per_sec").unwrap());
+        assert!(json.contains("\"trace_overhead_pct\": 4.35"));
+        assert!(json.contains("\"trace_events_written\": 99"));
+    }
+
+    /// With a trace path set, the harness reruns the cluster phase
+    /// traced: the overhead figures fill in, the trace file matches the
+    /// written count line for line, and the rerun's counter fingerprint
+    /// byte-matches the untraced run (run_perf_trace errors otherwise).
+    #[test]
+    fn traced_perf_rerun_records_overhead() {
+        let mut spec = perf_spec(ClusterSpec::paper_testbed(), 4, 13);
+        let path = std::env::temp_dir().join("vhpc_perf_trace_unit.jsonl");
+        spec.trace_path = Some(path.to_string_lossy().into_owned());
+        let o = run_perf_trace(spec, 40, 8, 2, 13, 120).expect("traced perf trace");
+        assert!(o.traced_events_per_sec > 0.0);
+        assert!(o.trace_events_written > 0, "traced rerun wrote no events");
+        assert_eq!(o.trace_events_dropped, 0);
+        assert!(o.phases.iter().any(|p| p.name == "cluster_traced"));
+        let text = std::fs::read_to_string(&path).expect("trace file");
+        assert_eq!(text.lines().count() as u64, o.trace_events_written);
+        let _ = std::fs::remove_file(&path);
     }
 
     /// End-to-end smoke at unit-test scale: the harness runs, the

@@ -23,8 +23,20 @@
 //! final [`Metrics::counters_snapshot`] fingerprint byte-identical at
 //! any `--shards` count for the same seed, which `tests/determinism.rs`
 //! pins at 1/2/4 shards for the mix, tenants and chaos drivers.
+//!
+//! **Tracing** rides the same machinery: every rank owns a
+//! rank-local buffering [`TraceBus`]; shards ship each window's batch
+//! to the conductor as a [`ShardMsg::Trace`], the conductor holds its
+//! own emissions back one window so same-window batches meet at the
+//! merge, and the merged batch is stable-sorted by
+//! [`TraceEvent::sort_key`] before it reaches the sink. The write
+//! order is therefore a pure function of virtual time — the trace
+//! file is byte-identical at any shard count — and because `Trace`
+//! messages only exist when a sink is configured, a traced run's
+//! message stream (and counter fingerprint) is identical to an
+//! untraced one.
 
-use crate::cluster::autoscaler::{Autoscaler, Observation, ScaleAction};
+use crate::cluster::autoscaler::{Autoscaler, Observation, ScaleAction, ScaleReason};
 use crate::cluster::head::{
     Head, JobKind, JobRecord, JobSpec, JobState, LossOutcome, SubmitOutcome,
 };
@@ -32,6 +44,7 @@ use crate::cluster::metrics::Metrics;
 use crate::cluster::mix::JobReq;
 use crate::cluster::policy::SchedulePolicy;
 use crate::config::ClusterSpec;
+use crate::obs::{FileSink, GaugeSnapshot, MetricsRecorder, TraceBus, TraceEvent};
 use crate::sim::partition::{run_lockstep, Outbox, Partitioned, ShardPlan};
 use crate::sim::{Engine, SimEvent, SimTime};
 use crate::tenancy::arrivals::{stream_fingerprint, ArrivalGen, JobArrival, PopulationSpec};
@@ -103,6 +116,10 @@ pub enum ShardMsg {
     /// the *target* machine's owner; `from`'s shard counts the tx, the
     /// owner counts rx or drop depending on the target's liveness.
     Gossip { at: SimTime, from: u32, to: u32, bytes: u64 },
+    /// Shard -> conductor: the shard's trace-event batch for the window
+    /// it just executed, in emission order. Only ever sent on traced
+    /// runs, so tracing cannot perturb the untraced message stream.
+    Trace(Vec<TraceEvent>),
     /// Shard -> conductor: final counter totals, sent once after
     /// `Finish`. Merged additively, so ordering cannot matter.
     Counters(Vec<(String, u64)>),
@@ -127,8 +144,12 @@ impl ShardMsg {
             ShardMsg::Ready { at, machine } => (at.as_nanos(), 6, *machine as u64),
             ShardMsg::Retired { at, machine } => (at.as_nanos(), 7, *machine as u64),
             ShardMsg::Done { at, id, .. } => (at.as_nanos(), 8, id.raw() as u64),
-            // Finish and Counters close a window exchange: they always
-            // apply after every timed message in the same batch.
+            // Trace batches, Finish and Counters close a window
+            // exchange: they always apply after every timed message in
+            // the same batch. Equal-key Trace batches keep sender-rank
+            // order under the stable sort, which the conductor's merge
+            // relies on.
+            ShardMsg::Trace(_) => (u64::MAX, 253, 0),
             ShardMsg::Finish => (u64::MAX, 254, 0),
             ShardMsg::Counters(_) => (u64::MAX, 255, 0),
         }
@@ -137,8 +158,38 @@ impl ShardMsg {
 
 fn sort_batch(batch: &mut Vec<(usize, ShardMsg)>) {
     let _t = crate::obs::profiling::scoped("window_merge");
-    // stable: same-key messages (none in practice) keep sender order
+    // stable: same-key messages (trace batches) keep sender order
     batch.sort_by_key(|(_, m)| m.merge_key());
+}
+
+/// Per-rank profiling phase names. The profiling registry keys are
+/// `&'static str`, so per-rank scopes come from fixed tables; runs
+/// wider than the table clamp onto the last entry rather than losing
+/// the samples.
+const JACOBI_PHASES: [&str; 8] = [
+    "jacobi_sweep_r1",
+    "jacobi_sweep_r2",
+    "jacobi_sweep_r3",
+    "jacobi_sweep_r4",
+    "jacobi_sweep_r5",
+    "jacobi_sweep_r6",
+    "jacobi_sweep_r7",
+    "jacobi_sweep_r8",
+];
+const MERGE_PHASES: [&str; 8] = [
+    "window_merge_r1",
+    "window_merge_r2",
+    "window_merge_r3",
+    "window_merge_r4",
+    "window_merge_r5",
+    "window_merge_r6",
+    "window_merge_r7",
+    "window_merge_r8",
+];
+
+/// The table entry for 1-based shard rank `rank` (clamped).
+fn per_rank_phase(table: &'static [&'static str], rank: usize) -> &'static str {
+    table[rank.saturating_sub(1).min(table.len() - 1)]
 }
 
 /// Per-job synthetic compute load on the shards: each running job owns
@@ -208,6 +259,11 @@ pub struct ShardOutcome {
     /// Stable merged counter snapshot: byte-identical for the same
     /// seed at any shard count.
     pub fingerprint: BTreeMap<String, u64>,
+    /// Trace events that reached the sink (0 on untraced runs).
+    pub trace_events_written: u64,
+    /// Trace events lost to sink errors — surfaced in every driver's
+    /// end-of-run summary, never folded into the fingerprint.
+    pub trace_events_dropped: u64,
 }
 
 // ---------------------------------------------------------------------
@@ -240,6 +296,9 @@ struct JobRun {
 /// feeds event scheduling and must not depend on hashing.
 struct ShardCore {
     plan: ShardPlan,
+    /// This shard's 1-based participant rank (0 is the conductor);
+    /// names the per-rank profiling scopes.
+    rank: usize,
     seed: u64,
     total_machines: u32,
     boot_time: SimTime,
@@ -250,6 +309,9 @@ struct ShardCore {
     counters: BTreeMap<String, u64>,
     outgoing: Vec<(usize, ShardMsg)>,
     draining: bool,
+    /// Rank-local trace buffer (buffering mode on traced runs, inert
+    /// otherwise); drained to the conductor once per window.
+    trace: TraceBus,
 }
 
 impl ShardCore {
@@ -379,7 +441,7 @@ impl SimEvent<ShardCore> for ShardEvent {
                 }
             }
             ShardEvent::ComputeTick { id, attempt } => {
-                let _t = crate::obs::profiling::scoped("jacobi_sweep");
+                let _t = crate::obs::profiling::scoped(per_rank_phase(&JACOBI_PHASES, core.rank));
                 let sweeps = core.compute.sweeps_per_tick;
                 let alive = match core.jobs.get_mut(&id) {
                     Some(run) if run.attempt == attempt => {
@@ -430,13 +492,16 @@ struct ShardSim {
 impl ShardSim {
     fn new(
         plan: ShardPlan,
+        rank: usize,
         spec: &ClusterSpec,
         window: SimTime,
         compute: ComputeProfile,
+        traced: bool,
     ) -> Self {
         Self {
             core: ShardCore {
                 plan,
+                rank,
                 seed: spec.seed,
                 total_machines: spec.machines,
                 boot_time: spec.machine_spec.boot_time,
@@ -447,6 +512,7 @@ impl ShardSim {
                 counters: BTreeMap::new(),
                 outgoing: Vec::new(),
                 draining: false,
+                trace: if traced { TraceBus::buffering() } else { TraceBus::disabled() },
             },
             eng: Engine::new(),
             counters_sent: false,
@@ -491,6 +557,16 @@ impl ShardSim {
                         .jobs
                         .insert(id, JobRun { attempt, grid: init_grid(id, n), n });
                     self.core.bump("jobs_launched_shard", 1);
+                    // the launch is the one lifecycle transition that
+                    // happens *on* a shard: emitted here (not by the
+                    // conductor) so the trace records where ranks run
+                    self.core.trace.emit(TraceEvent::Launch {
+                        at,
+                        epoch: 0,
+                        job: id,
+                        attempt,
+                        planned: duration,
+                    });
                     self.eng.schedule_at(at, ShardEvent::ComputeTick { id, attempt });
                     self.eng
                         .schedule_at(at + duration, ShardEvent::JobDone { id, attempt });
@@ -525,6 +601,7 @@ impl ShardSim {
                 ShardMsg::Ready { .. }
                 | ShardMsg::Retired { .. }
                 | ShardMsg::Done { .. }
+                | ShardMsg::Trace(_)
                 | ShardMsg::Counters(_) => {}
             }
         }
@@ -541,9 +618,18 @@ impl Partitioned for ShardSim {
         mut incoming: Vec<(usize, ShardMsg)>,
         out: &mut Outbox<ShardMsg>,
     ) -> bool {
-        sort_batch(&mut incoming);
+        {
+            let _t = crate::obs::profiling::scoped(per_rank_phase(&MERGE_PHASES, self.core.rank));
+            incoming.sort_by_key(|(_, m)| m.merge_key());
+        }
         self.apply(incoming);
         self.eng.run_window(&mut self.core, end);
+        // ship this window's trace batch (traced runs only: an inert
+        // bus buffers nothing, so no message materializes)
+        let batch = self.core.trace.take_buffered();
+        if !batch.is_empty() {
+            self.core.send(0, ShardMsg::Trace(batch));
+        }
         if self.core.draining && !self.counters_sent {
             self.counters_sent = true;
             self.core.bump("shard_events", self.eng.fired());
@@ -613,6 +699,15 @@ struct Conductor {
     finish_sent: bool,
     counters_pending: usize,
     error: Option<String>,
+    /// Sink-backed bus the canonical merged trace is written through
+    /// (inert on untraced runs).
+    trace: TraceBus,
+    /// The conductor's own emissions for the in-flight window. Held
+    /// back one window so they merge with the shard batches for the
+    /// same logical window, which arrive one exchange later.
+    own: TraceBus,
+    /// Gauge sampler; fires on the window grid (shard-count-invariant).
+    recorder: MetricsRecorder,
 }
 
 impl Conductor {
@@ -624,6 +719,7 @@ impl Conductor {
         workload: Workload,
         kills: Vec<(SimTime, u32)>,
         cfg: &ShardRunConfig,
+        trace: TraceBus,
     ) -> Self {
         let mut head = Head::new();
         head.policy = policy;
@@ -641,6 +737,13 @@ impl Conductor {
             off.insert(m);
         }
         let shards = plan.shards();
+        let own =
+            if trace.enabled() { TraceBus::buffering() } else { TraceBus::disabled() };
+        let recorder = if trace.enabled() {
+            MetricsRecorder::new(spec.sample_every)
+        } else {
+            MetricsRecorder::disabled()
+        };
         Self {
             autoscaler: Autoscaler::new(spec.autoscale.clone()),
             max_slots: spec.max_advertisable_slots().max(1),
@@ -667,7 +770,77 @@ impl Conductor {
             finish_sent: false,
             counters_pending: shards,
             error: None,
+            trace,
+            own,
+            recorder,
         }
+    }
+
+    /// Merge this window's trace material — the conductor's held-back
+    /// emissions plus every shard batch from the inbox (already in rank
+    /// order: equal merge keys keep sender order under the stable
+    /// sort) — into the canonical `(t_ns, kind, entity, rank, seq)`
+    /// order and write it through the sink. Concatenating rank 0's
+    /// batch before the shard batches and stable-sorting by
+    /// [`TraceEvent::sort_key`] *is* that order: rank and sequence are
+    /// exactly the ties the stable sort preserves.
+    fn merge_trace_window(&mut self, shard_batches: Vec<Vec<TraceEvent>>) {
+        if !self.trace.enabled() {
+            return;
+        }
+        let _t = crate::obs::profiling::scoped("trace_merge");
+        let mut merged = self.own.take_buffered();
+        for batch in shard_batches {
+            merged.extend(batch);
+        }
+        if merged.is_empty() {
+            return;
+        }
+        merged.sort_by_key(|ev| ev.sort_key());
+        for ev in merged {
+            self.trace.emit(ev);
+        }
+        self.trace.flush();
+    }
+
+    /// Gauge snapshot + sample emission on the window grid. Mirrors the
+    /// live cluster's scheduler-tick sampling; pool counts stand in for
+    /// the consul health census (a dead machine leaves `ready`
+    /// immediately here — the shards simulate the TTL lag locally).
+    fn sample_gauges(&mut self, start: SimTime) {
+        if !self.own.enabled() || !self.recorder.due(start) {
+            return;
+        }
+        let usage: Vec<(u64, f64)> = self
+            .head
+            .ledger
+            .export_accounts()
+            .iter()
+            .map(|&(tenant, _, _)| (tenant, self.head.ledger.usage_at(tenant, start)))
+            .collect();
+        let ready = self.ready.len() as u64;
+        let provisioning = self.booting.len() as u64;
+        let g = GaugeSnapshot {
+            queued_jobs: self.head.queue.len() as u64,
+            queued_slots: self.head.queued_slots() as u64,
+            running_jobs: self.head.running.len() as u64,
+            reserved_slots: self.head.reserved_slots() as u64,
+            total_slots: ready * self.spec.slots_per_node as u64,
+            nodes_ready: ready,
+            nodes_unhealthy: self.dead.len() as u64,
+            nodes_provisioning: provisioning,
+            scale_target: ready + provisioning,
+            usage,
+        };
+        self.recorder.record(start, 0, &g, &mut self.own);
+    }
+
+    /// End-of-run trace finalize: flush whatever the last window left
+    /// behind and make the sink durable. Returns `(written, dropped)`.
+    fn finish_trace(&mut self) -> (u64, u64) {
+        self.merge_trace_window(Vec::new());
+        self.trace.finish();
+        (self.trace.events_written(), self.trace.events_dropped())
     }
 
     fn rank_of_machine(&self, m: u32) -> usize {
@@ -739,6 +912,14 @@ impl Conductor {
                         self.head.first_failed_at.remove(&id);
                         let wait = started.saturating_sub(rec.queued_at).as_secs_f64();
                         self.metrics.observe("job_wait_secs", wait);
+                        self.own.emit(TraceEvent::Complete {
+                            at,
+                            epoch: 0,
+                            job: id,
+                            attempt,
+                            tenant: rec.spec.tenant,
+                            started,
+                        });
                         self.head.record_terminal(rec);
                         self.metrics.inc("jobs_completed");
                         self.metrics.add("jacobi_residual_checksum", residual_bits as u64);
@@ -767,15 +948,30 @@ impl Conductor {
             tenant,
         };
         self.next_id += 1;
+        let (id, tenant, ranks, priority) = (spec.id, spec.tenant, spec.ranks, spec.priority);
+        let submit_ev =
+            TraceEvent::Submit { at: now, epoch: 0, job: id, tenant, ranks, priority };
         match self.head.submit(spec, now) {
             SubmitOutcome::Queued => {
                 self.metrics.inc("jobs_submitted");
+                self.own.emit(submit_ev);
             }
             SubmitOutcome::Deferred => {
                 self.metrics.inc("jobs_deferred_quota");
+                self.own.emit(submit_ev);
+                self.own.emit(TraceEvent::QuotaDefer { at: now, epoch: 0, job: id, tenant });
             }
             SubmitOutcome::Rejected { spec, reason } => {
                 self.metrics.inc("jobs_rejected_quota");
+                if self.own.enabled() {
+                    self.own.emit(TraceEvent::SubmitRejected {
+                        at: now,
+                        epoch: 0,
+                        job: id,
+                        tenant,
+                        reason: reason.clone(),
+                    });
+                }
                 self.head.record_terminal(JobRecord {
                     spec,
                     state: JobState::Failed { reason },
@@ -853,23 +1049,53 @@ impl Conductor {
                 if self.booting.remove(&m) {
                     self.dead.insert(m);
                     self.metrics.inc("machines_crashed");
+                    if self.own.enabled() {
+                        self.own.emit(TraceEvent::FaultInjected {
+                            at: t,
+                            epoch: 0,
+                            kind: "crash".to_string(),
+                        });
+                    }
                     out.send(self.rank_of_machine(m), ShardMsg::Kill { at: t, machine: m });
                 }
                 continue;
             }
             self.dead.insert(m);
             self.metrics.inc("machines_crashed");
+            if self.own.enabled() {
+                self.own.emit(TraceEvent::FaultInjected {
+                    at: t,
+                    epoch: 0,
+                    kind: "crash".to_string(),
+                });
+            }
             self.render_hostfile(t);
             out.send(self.rank_of_machine(m), ShardMsg::Kill { at: t, machine: m });
             let addr = machine_addr(m);
             for id in self.head.jobs_on_addr(addr) {
                 let prior = self.running.remove(&id);
+                let tenant =
+                    self.head.running.get(&id).map(|r| r.spec.tenant).unwrap_or(0);
                 match self.head.handle_lost_job(id, t, "node crashed") {
-                    LossOutcome::Requeued { .. } => {
+                    LossOutcome::Requeued { attempt, wasted, .. } => {
                         self.metrics.inc("jobs_requeued");
+                        self.own.emit(TraceEvent::Requeue {
+                            at: t,
+                            epoch: 0,
+                            job: id,
+                            attempt,
+                            tenant,
+                            wasted,
+                        });
                     }
                     LossOutcome::Abandoned { .. } => {
                         self.metrics.inc("jobs_abandoned");
+                        self.own.emit(TraceEvent::Abandon {
+                            at: t,
+                            epoch: 0,
+                            job: id,
+                            tenant,
+                        });
                     }
                     LossOutcome::NotRunning => {}
                 }
@@ -886,6 +1112,7 @@ impl Conductor {
     }
 
     fn dispatch(&mut self, start: SimTime, out: &mut Outbox<ShardMsg>) {
+        let deferred_before = self.head.deferred_jobs();
         while let Some(started) = self.head.start_next(start) {
             let id = started.spec.id;
             self.metrics.inc("jobs_dispatched");
@@ -894,6 +1121,23 @@ impl Conductor {
             }
             for pid in &started.preempted {
                 self.metrics.inc("jobs_preempted");
+                if self.own.enabled() {
+                    // the preempted job is already checkpointed back in
+                    // the queue: attribute it from there
+                    let tenant = self
+                        .head
+                        .queue
+                        .iter()
+                        .find(|(s, _)| s.id == *pid)
+                        .map(|(s, _)| s.tenant)
+                        .unwrap_or(0);
+                    self.own.emit(TraceEvent::Preempt {
+                        at: start,
+                        epoch: 0,
+                        job: *pid,
+                        tenant,
+                    });
+                }
                 if let Some((attempt, home)) = self.running.remove(pid) {
                     out.send(
                         self.rank_of_machine(home),
@@ -901,6 +1145,15 @@ impl Conductor {
                     );
                 }
             }
+            self.own.emit(TraceEvent::Dispatch {
+                at: start,
+                epoch: 0,
+                job: id,
+                attempt: started.attempt,
+                tenant: started.spec.tenant,
+                ranks: started.spec.ranks,
+                backfilled: started.backfilled,
+            });
             let duration = started.spec.estimated_duration();
             if let Some(rec) = self.head.running.get_mut(&id) {
                 rec.planned_duration = Some(duration);
@@ -928,6 +1181,16 @@ impl Conductor {
                 },
             );
         }
+        // quota re-admissions happen inside `start_next` (the head owns
+        // the pens): surface them as the net pen drain this round
+        let readmitted = deferred_before.saturating_sub(self.head.deferred_jobs());
+        if readmitted > 0 {
+            self.own.emit(TraceEvent::QuotaAdmit {
+                at: start,
+                epoch: 0,
+                admitted: readmitted as u64,
+            });
+        }
     }
 
     fn autoscale(&mut self, start: SimTime, out: &mut Outbox<ShardMsg>) {
@@ -952,8 +1215,15 @@ impl Conductor {
             self.metrics.inc(name);
         }
         match action {
-            ScaleAction::None => {}
+            ScaleAction::None => {
+                // a held decision is observable; a steady interval is
+                // noise and stays out of the trace
+                if matches!(reason, ScaleReason::CooldownHeld | ScaleReason::ShareCap) {
+                    self.own.emit(TraceEvent::ScaleHold { at: start, epoch: 0, reason });
+                }
+            }
             ScaleAction::Up(n) => {
+                self.own.emit(TraceEvent::ScaleUp { at: start, epoch: 0, nodes: n, reason });
                 let picks: Vec<u32> = self.off.iter().copied().take(n as usize).collect();
                 if !picks.is_empty() {
                     self.head.note_scale_up(start);
@@ -973,6 +1243,7 @@ impl Conductor {
                 }
             }
             ScaleAction::Down(n) => {
+                self.own.emit(TraceEvent::ScaleDown { at: start, epoch: 0, nodes: n, reason });
                 let held = self.head.reserved_per_host();
                 let picks: Vec<u32> = self
                     .ready
@@ -1032,6 +1303,19 @@ impl Partitioned for Conductor {
         out: &mut Outbox<ShardMsg>,
     ) -> bool {
         sort_batch(&mut incoming);
+        // peel this window's shard trace batches off the inbox *before*
+        // applying — apply() emits new events that belong to the *next*
+        // merge — then write the previous window's canonical merge
+        let mut shard_batches: Vec<Vec<TraceEvent>> = Vec::new();
+        incoming.retain_mut(|(_, m)| {
+            if let ShardMsg::Trace(evs) = m {
+                shard_batches.push(std::mem::take(evs));
+                false
+            } else {
+                true
+            }
+        });
+        self.merge_trace_window(shard_batches);
         self.apply(incoming);
         if self.finish_sent {
             // drain phase: only waiting for shard counter reports
@@ -1070,6 +1354,7 @@ impl Partitioned for Conductor {
         self.head.accrue_usage(start);
         self.dispatch(start, out);
         self.autoscale(start, out);
+        self.sample_gauges(start);
         if self.drained() {
             self.send_finish(out);
         }
@@ -1098,6 +1383,16 @@ fn run_sharded(
     if window == SimTime::ZERO {
         bail!("window must be positive");
     }
+    // an unopenable trace path is a configuration error (mirrors the
+    // live cluster); mid-run write failures degrade to counted drops
+    let trace = match &spec.trace_path {
+        Some(path) => {
+            let sink = FileSink::create(path).map_err(|e| anyhow::anyhow!(e))?;
+            TraceBus::with_sink(Box::new(sink))
+        }
+        None => TraceBus::disabled(),
+    };
+    let traced = trace.enabled();
     let conductor = Conductor::new(
         spec.clone(),
         plan.clone(),
@@ -1106,14 +1401,17 @@ fn run_sharded(
         workload,
         kills,
         cfg,
+        trace,
     );
     let mut parts: Vec<ClusterPart> = vec![ClusterPart::Conductor(Box::new(conductor))];
-    for _ in 0..shards {
+    for s in 0..shards {
         parts.push(ClusterPart::Shard(Box::new(ShardSim::new(
             plan.clone(),
+            s + 1,
             &spec,
             window,
             cfg.compute,
+            traced,
         ))));
     }
     // seatbelt: warmup + trace + drain handshake, in windows, plus slack
@@ -1122,10 +1420,13 @@ fn run_sharded(
             / window.as_nanos().max(1)
             + 64;
     let (done, windows) = run_lockstep(parts, window, max_windows);
-    let conductor = match done.into_iter().next() {
+    let mut conductor = match done.into_iter().next() {
         Some(ClusterPart::Conductor(c)) => *c,
         _ => bail!("lock-step run lost its conductor"),
     };
+    // finalize the trace before any early exit so even a failed run
+    // leaves a flushed (torn but parseable) trace behind
+    let (trace_events_written, trace_events_dropped) = conductor.finish_trace();
     if let Some(err) = conductor.error {
         bail!(err);
     }
@@ -1146,6 +1447,8 @@ fn run_sharded(
         events: conductor.metrics.counter("shard_events"),
         arrivals_fingerprint,
         fingerprint: conductor.metrics.counters_snapshot(),
+        trace_events_written,
+        trace_events_dropped,
     })
 }
 
@@ -1311,6 +1614,7 @@ mod tests {
     fn gossip_peer_never_picks_self_and_is_pure() {
         let core = ShardCore {
             plan: ShardPlan::split(1, 8, 2),
+            rank: 1,
             seed: 1,
             total_machines: 8,
             boot_time: SimTime::from_secs(1),
@@ -1321,6 +1625,7 @@ mod tests {
             counters: BTreeMap::new(),
             outgoing: Vec::new(),
             draining: false,
+            trace: TraceBus::disabled(),
         };
         for m in 1..8u32 {
             for seq in 0..50u64 {

@@ -28,7 +28,7 @@ use crate::hw::rack::Plant;
 use crate::hw::PowerState;
 use crate::mpi::hostfile::Hostfile;
 use crate::mpi::launcher::LaunchPlan;
-use crate::obs::{FileSink, TraceBus, TraceEvent, TraceSink};
+use crate::obs::{FileSink, GaugeSnapshot, MetricsRecorder, TraceBus, TraceEvent, TraceSink};
 use crate::runtime::Runtime;
 use crate::sim::{Engine, SimEvent, SimTime};
 use crate::util::ids::{AgentId, ContainerId, JobId, MachineId};
@@ -105,6 +105,11 @@ pub struct ClusterState {
     /// in [`Metrics`], so traced and untraced runs fingerprint
     /// identically.
     pub trace: TraceBus,
+    /// Gauge time-series sampler: emits `sample` trace events from the
+    /// scheduler tick at the `spec.sample_every` cadence. Reads state,
+    /// writes only into the trace bus — fingerprint-neutral like the
+    /// bus itself.
+    pub recorder: MetricsRecorder,
 }
 
 /// The facade: state + event engine.
@@ -217,6 +222,7 @@ impl VirtualCluster {
         }
 
         let n = spec.machines as usize;
+        let sample_every = spec.sample_every;
         let mut state = ClusterState {
             autoscaler: Autoscaler::new(spec.autoscale.clone()),
             ha: crate::ha::HaState::new(spec.ha.clone()),
@@ -242,6 +248,7 @@ impl VirtualCluster {
             partial_machines: vec![false; n],
             partial_servers: Vec::new(),
             trace: TraceBus::disabled(),
+            recorder: MetricsRecorder::new(sample_every),
         };
         if let Some(path) = state.spec.trace_path.clone() {
             // an unopenable trace path is a configuration error reported
@@ -552,9 +559,65 @@ impl VirtualCluster {
         }
         Self::reap_lost_jobs(st, eng);
         Self::dispatch_jobs(st, eng);
+        Self::sample_gauges(st, eng.now());
         crate::ha::wal::flush(st);
         st.trace.flush();
         eng.schedule_after(SimTime::from_secs(1), ClusterEvent::SchedulerTick);
+    }
+
+    /// Health-gated compute-node census: `(ready, unhealthy,
+    /// provisioning)` — a Ready node whose check went critical is not
+    /// usable capacity. Shared by the autoscaler's observation and the
+    /// metrics recorder so both report the same signal.
+    fn node_counts(st: &mut ClusterState, now: SimTime) -> (u32, u32, u32) {
+        let mut ready = 0u32;
+        let mut unhealthy = 0u32;
+        let mut provisioning = 0u32;
+        for (idx, s) in st.node_states.iter().enumerate().skip(1) {
+            match s {
+                NodeState::Ready => {
+                    let node = crate::cluster::node_name(idx, st.spec.machines);
+                    match st.consul.health.status(&node, now) {
+                        Some(CheckStatus::Passing) => ready += 1,
+                        _ => unhealthy += 1,
+                    }
+                }
+                s if s.is_provisioning() => provisioning += 1,
+                _ => {}
+            }
+        }
+        (ready, unhealthy, provisioning)
+    }
+
+    /// Emit one `sample` trace event when the recorder's cadence is
+    /// due. Reads scheduler/consul/ledger state, writes only into the
+    /// trace bus — costs nothing on untraced runs.
+    fn sample_gauges(st: &mut ClusterState, now: SimTime) {
+        if !st.trace.enabled() || !st.recorder.due(now) {
+            return;
+        }
+        let (ready, unhealthy, provisioning) = Self::node_counts(st, now);
+        let usage: Vec<(u64, f64)> = st
+            .head
+            .ledger
+            .export_accounts()
+            .iter()
+            .map(|&(tenant, _, _)| (tenant, st.head.ledger.usage_at(tenant, now)))
+            .collect();
+        let g = GaugeSnapshot {
+            queued_jobs: st.head.queue.len() as u64,
+            queued_slots: st.head.queued_slots() as u64,
+            running_jobs: st.head.running.len() as u64,
+            reserved_slots: st.head.reserved_slots() as u64,
+            total_slots: ready as u64 * st.spec.slots_per_node as u64,
+            nodes_ready: ready as u64,
+            nodes_unhealthy: unhealthy as u64,
+            nodes_provisioning: provisioning as u64,
+            scale_target: (ready + provisioning) as u64,
+            usage,
+        };
+        let epoch = st.ha.epoch;
+        st.recorder.record(now, epoch, &g, &mut st.trace);
     }
 
     /// Recovery pipeline, detection step: cross-check every running
@@ -880,22 +943,7 @@ impl VirtualCluster {
         // critical (hung agent, partition) is not capacity the scheduler
         // can use — counting it separately lets the policy boot a
         // replacement while suppressing scale-down mid-incident
-        let mut ready = 0u32;
-        let mut unhealthy = 0u32;
-        let mut provisioning = 0u32;
-        for (idx, s) in st.node_states.iter().enumerate().skip(1) {
-            match s {
-                NodeState::Ready => {
-                    let node = crate::cluster::node_name(idx, st.spec.machines);
-                    match st.consul.health.status(&node, eng.now()) {
-                        Some(CheckStatus::Passing) => ready += 1,
-                        _ => unhealthy += 1,
-                    }
-                }
-                s if s.is_provisioning() => provisioning += 1,
-                _ => {}
-            }
-        }
+        let (ready, unhealthy, provisioning) = Self::node_counts(st, eng.now());
         let obs = Observation {
             now: eng.now(),
             ready_nodes: ready,
@@ -1415,6 +1463,16 @@ impl VirtualCluster {
     /// run; also happens automatically when the cluster drops).
     pub fn finish_trace(&mut self) {
         self.state.trace.finish();
+    }
+
+    /// `(events_written, events_dropped)` on the trace bus. Drivers
+    /// surface the drop count in their end-of-run summary — a non-zero
+    /// value means the sink failed mid-run and the trace is partial.
+    pub fn trace_io(&self) -> (u64, u64) {
+        (
+            self.state.trace.events_written(),
+            self.state.trace.events_dropped(),
+        )
     }
 
     /// Journal the tenant arrival generator's resume cursor into the

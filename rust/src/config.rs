@@ -198,6 +198,12 @@ pub struct ClusterSpec {
     /// full lifecycle event stream into it (`--trace FILE` on the
     /// drivers). `None` (the default) leaves the trace bus inert.
     pub trace_path: Option<String>,
+    /// Metrics-recorder cadence: how often (virtual time) a traced run
+    /// samples a gauge snapshot (queue depth, slots, node health,
+    /// per-tenant top-K usage, autoscale target) into the trace as a
+    /// `sample` event (`[cluster] sample_every`, seconds; `0` disables).
+    /// Inert unless a trace sink is installed.
+    pub sample_every: SimTime,
     pub autoscale: AutoscaleConfig,
     /// Per-tenant fair-share weight multipliers (`[tenant_weights]`
     /// section: `<tenant id> = <weight>`; a weight-2 tenant earns twice
@@ -232,6 +238,7 @@ impl ClusterSpec {
             completed_retention: crate::cluster::head::DEFAULT_COMPLETED_RETENTION,
             seed: 42,
             trace_path: None,
+            sample_every: SimTime::from_secs(30),
             autoscale: AutoscaleConfig::default(),
             tenant_weights: Vec::new(),
             ha: crate::ha::HaConfig::default(),
@@ -303,6 +310,10 @@ impl ClusterSpec {
             }
             if let Some(v) = c.get("trace_path") {
                 spec.trace_path = Some(req_str("cluster", "trace_path", v)?);
+            }
+            if let Some(v) = c.get("sample_every") {
+                spec.sample_every =
+                    SimTime::from_secs(req_int("cluster", "sample_every", v)?.max(0) as u64);
             }
         }
         if let Some(m) = raw.get("machine") {

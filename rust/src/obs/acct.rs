@@ -218,7 +218,8 @@ pub fn fold_events<I: IntoIterator<Item = TraceEvent>>(events: I) -> AcctReport 
             | TraceEvent::LeaseLost { .. }
             | TraceEvent::Takeover { .. }
             | TraceEvent::SnapshotWritten { .. }
-            | TraceEvent::WalFlush { .. } => {}
+            | TraceEvent::WalFlush { .. }
+            | TraceEvent::Sample { .. } => {}
         }
     }
 

@@ -1,0 +1,773 @@
+//! `vhpc trace` — timeline analysis over a structured trace.
+//!
+//! Where [`acct`](super::acct) answers "what does each tenant owe",
+//! this module answers "what happened, when, and why":
+//!
+//! * **Per-job timelines** — every attempt's
+//!   dispatch→launch→end span plus the job-level
+//!   submit→first-dispatch→terminal instants, with the job's life
+//!   split into wait (submit to first dispatch), run (dispatched
+//!   attempt time) and requeue (re-queued between attempts) seconds,
+//!   and the *critical attempt* — the one that reached the terminal
+//!   state.
+//! * **Scale-decision audit** — every autoscaler up/down/hold with its
+//!   [`ScaleReason`] code and the demand signal sampled around it (the
+//!   nearest [`TraceEvent::Sample`] at or before, and at or after, the
+//!   decision), so a scaling decision can be checked against the
+//!   demand that provoked it without replaying the run.
+//! * **Time-series export** — the sampled gauge stream as CSV or JSON
+//!   for plotting.
+//!
+//! Same torn-input posture as `vhpc acct`: unparseable lines are
+//! counted and skipped, so a truncated or corrupt trace (e.g. from a
+//! crashed run) degrades to a partial report, never an error.
+
+use super::events::{esc, TraceEvent};
+use crate::cluster::autoscaler::ScaleReason;
+use crate::sim::SimTime;
+use std::collections::BTreeMap;
+
+/// One dispatch attempt's span within a job timeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AttemptSpan {
+    pub attempt: u32,
+    pub dispatched: SimTime,
+    /// When the dispatcher pinned the planned duration (None when the
+    /// trace truncates between dispatch and launch).
+    pub launched: Option<SimTime>,
+    pub planned: Option<SimTime>,
+    /// When the attempt stopped running (completion, requeue,
+    /// preemption or failure); None while still running at trace end.
+    pub ended: Option<SimTime>,
+    /// `completed | requeued | preempted | failed | running`.
+    pub outcome: &'static str,
+}
+
+/// The reconstructed lifecycle of one job.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobTimeline {
+    pub job: u32,
+    pub tenant: u64,
+    pub ranks: u32,
+    pub submitted: Option<SimTime>,
+    pub first_dispatch: Option<SimTime>,
+    /// Terminal timestamp (complete/fail/abandon/reject).
+    pub finished: Option<SimTime>,
+    /// `completed | failed | abandoned | rejected | running | queued`.
+    pub state: &'static str,
+    /// Submit → first dispatch, virtual seconds.
+    pub wait_secs: f64,
+    /// Dispatched attempt time summed over ended attempts.
+    pub run_secs: f64,
+    /// Re-queued time between attempts (after a requeue or preemption,
+    /// before the next dispatch).
+    pub requeue_secs: f64,
+    pub attempts: Vec<AttemptSpan>,
+    /// The attempt that reached the terminal state (None if the job
+    /// never got there within the trace).
+    pub critical_attempt: Option<u32>,
+}
+
+/// The demand/capacity signal at one sampled instant, as it relates to
+/// a scale decision.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DemandPoint {
+    pub at: SimTime,
+    pub queued_slots: u64,
+    pub nodes_ready: u64,
+    pub scale_target: u64,
+}
+
+/// One autoscaler decision with the demand signal around it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScaleDecision {
+    pub at: SimTime,
+    pub epoch: u64,
+    /// `up | down | hold`.
+    pub action: &'static str,
+    /// Nodes acted on (0 for holds).
+    pub nodes: u32,
+    pub reason: ScaleReason,
+    /// Nearest sample at or before the decision.
+    pub before: Option<DemandPoint>,
+    /// Nearest sample at or after the decision.
+    pub after: Option<DemandPoint>,
+}
+
+/// One recorder sample, verbatim from the trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SeriesPoint {
+    pub at: SimTime,
+    pub epoch: u64,
+    pub queued_jobs: u64,
+    pub queued_slots: u64,
+    pub running_jobs: u64,
+    pub reserved_slots: u64,
+    pub total_slots: u64,
+    pub nodes_ready: u64,
+    pub nodes_unhealthy: u64,
+    pub nodes_provisioning: u64,
+    pub scale_target: u64,
+    pub top_usage: String,
+}
+
+/// The folded analysis: job timelines in id order, the scale audit and
+/// the sample series in trace order.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TraceReport {
+    pub jobs: Vec<JobTimeline>,
+    pub scale: Vec<ScaleDecision>,
+    pub series: Vec<SeriesPoint>,
+    /// Trace events consumed by the fold.
+    pub events: u64,
+    /// Input lines that failed to parse and were skipped (partial
+    /// report when > 0).
+    pub skipped_lines: u64,
+}
+
+#[derive(Debug, Default)]
+struct TlBuild {
+    tenant: u64,
+    ranks: u32,
+    submitted: Option<SimTime>,
+    first_dispatch: Option<SimTime>,
+    finished: Option<SimTime>,
+    state: &'static str,
+    attempts: Vec<AttemptSpan>,
+    /// Set while the job sits in the queue after a requeue/preemption.
+    requeued_since: Option<SimTime>,
+    run_ns: u64,
+    requeue_ns: u64,
+    critical: Option<u32>,
+}
+
+impl TlBuild {
+    /// Close the open attempt at `at` with `outcome`, charging its run
+    /// time. Returns the closed attempt's id.
+    fn end_attempt(&mut self, at: SimTime, outcome: &'static str) -> Option<u32> {
+        let open = self.attempts.iter_mut().rev().find(|a| a.ended.is_none())?;
+        open.ended = Some(at);
+        open.outcome = outcome;
+        self.run_ns += at.saturating_sub(open.dispatched).as_nanos();
+        Some(open.attempt)
+    }
+}
+
+/// Fold a stream of trace events into a timeline report.
+pub fn fold_events<I: IntoIterator<Item = TraceEvent>>(events: I) -> TraceReport {
+    let mut jobs: BTreeMap<u32, TlBuild> = BTreeMap::new();
+    let mut scale: Vec<ScaleDecision> = Vec::new();
+    let mut series: Vec<SeriesPoint> = Vec::new();
+    let mut n = 0u64;
+    for ev in events {
+        n += 1;
+        let at = ev.at();
+        match ev {
+            TraceEvent::Submit { job, tenant, ranks, .. } => {
+                let b = jobs.entry(job.raw()).or_default();
+                b.tenant = tenant;
+                b.ranks = ranks;
+                b.submitted = Some(at);
+                b.state = "queued";
+            }
+            TraceEvent::SubmitRejected { job, tenant, .. } => {
+                let b = jobs.entry(job.raw()).or_default();
+                b.tenant = tenant;
+                b.finished = Some(at);
+                b.state = "rejected";
+            }
+            TraceEvent::QuotaDefer { job, tenant, .. } => {
+                let b = jobs.entry(job.raw()).or_default();
+                b.tenant = tenant;
+                b.state = "queued";
+            }
+            TraceEvent::Dispatch { job, attempt, tenant, ranks, .. } => {
+                let b = jobs.entry(job.raw()).or_default();
+                b.tenant = tenant;
+                if b.ranks == 0 {
+                    b.ranks = ranks;
+                }
+                b.first_dispatch.get_or_insert(at);
+                if let Some(since) = b.requeued_since.take() {
+                    b.requeue_ns += at.saturating_sub(since).as_nanos();
+                }
+                b.attempts.push(AttemptSpan {
+                    attempt,
+                    dispatched: at,
+                    launched: None,
+                    planned: None,
+                    ended: None,
+                    outcome: "running",
+                });
+                b.state = "running";
+            }
+            TraceEvent::Launch { job, attempt, planned, .. } => {
+                let b = jobs.entry(job.raw()).or_default();
+                if let Some(a) = b
+                    .attempts
+                    .iter_mut()
+                    .rev()
+                    .find(|a| a.attempt == attempt && a.ended.is_none())
+                {
+                    a.launched = Some(at);
+                    a.planned = Some(planned);
+                }
+            }
+            TraceEvent::Complete { job, attempt, tenant, started, .. } => {
+                let b = jobs.entry(job.raw()).or_default();
+                b.tenant = tenant;
+                // a trace truncated below the dispatch still shows the
+                // final attempt: the event carries its start
+                if !b.attempts.iter().any(|a| a.ended.is_none()) {
+                    b.first_dispatch.get_or_insert(started);
+                    b.attempts.push(AttemptSpan {
+                        attempt,
+                        dispatched: started,
+                        launched: None,
+                        planned: None,
+                        ended: None,
+                        outcome: "running",
+                    });
+                }
+                b.end_attempt(at, "completed");
+                b.critical = Some(attempt);
+                b.finished = Some(at);
+                b.state = "completed";
+            }
+            TraceEvent::Fail { job, tenant, .. } => {
+                let b = jobs.entry(job.raw()).or_default();
+                b.tenant = tenant;
+                b.critical = b.end_attempt(at, "failed").or(b.critical);
+                b.finished = Some(at);
+                b.state = "failed";
+            }
+            TraceEvent::Requeue { job, tenant, .. } => {
+                let b = jobs.entry(job.raw()).or_default();
+                b.tenant = tenant;
+                b.end_attempt(at, "requeued");
+                b.requeued_since = Some(at);
+                b.state = "queued";
+            }
+            TraceEvent::Abandon { job, tenant, .. } => {
+                let b = jobs.entry(job.raw()).or_default();
+                b.tenant = tenant;
+                b.finished = Some(at);
+                b.state = "abandoned";
+            }
+            TraceEvent::Preempt { job, tenant, .. } => {
+                let b = jobs.entry(job.raw()).or_default();
+                b.tenant = tenant;
+                b.end_attempt(at, "preempted");
+                b.requeued_since = Some(at);
+                b.state = "queued";
+            }
+            TraceEvent::ScaleUp { at, epoch, nodes, reason } => {
+                scale.push(ScaleDecision {
+                    at, epoch, action: "up", nodes, reason, before: None, after: None,
+                });
+            }
+            TraceEvent::ScaleDown { at, epoch, nodes, reason } => {
+                scale.push(ScaleDecision {
+                    at, epoch, action: "down", nodes, reason, before: None, after: None,
+                });
+            }
+            TraceEvent::ScaleHold { at, epoch, reason } => {
+                scale.push(ScaleDecision {
+                    at, epoch, action: "hold", nodes: 0, reason, before: None, after: None,
+                });
+            }
+            TraceEvent::Sample {
+                at,
+                epoch,
+                queued_jobs,
+                queued_slots,
+                running_jobs,
+                reserved_slots,
+                total_slots,
+                nodes_ready,
+                nodes_unhealthy,
+                nodes_provisioning,
+                scale_target,
+                top_usage,
+            } => {
+                series.push(SeriesPoint {
+                    at,
+                    epoch,
+                    queued_jobs,
+                    queued_slots,
+                    running_jobs,
+                    reserved_slots,
+                    total_slots,
+                    nodes_ready,
+                    nodes_unhealthy,
+                    nodes_provisioning,
+                    scale_target,
+                    top_usage,
+                });
+            }
+            // head-lifecycle and cluster bookkeeping with no timeline
+            // weight
+            TraceEvent::QuotaAdmit { .. }
+            | TraceEvent::FaultInjected { .. }
+            | TraceEvent::LeaseLost { .. }
+            | TraceEvent::Takeover { .. }
+            | TraceEvent::SnapshotWritten { .. }
+            | TraceEvent::WalFlush { .. } => {}
+        }
+    }
+
+    attach_demand(&mut scale, &series);
+
+    let jobs: Vec<JobTimeline> = jobs
+        .into_iter()
+        .map(|(id, b)| {
+            let wait_secs = match (b.submitted, b.first_dispatch) {
+                (Some(sub), Some(start)) => start.saturating_sub(sub).as_secs_f64(),
+                _ => 0.0,
+            };
+            JobTimeline {
+                job: id,
+                tenant: b.tenant,
+                ranks: b.ranks,
+                submitted: b.submitted,
+                first_dispatch: b.first_dispatch,
+                finished: b.finished,
+                state: if b.state.is_empty() { "queued" } else { b.state },
+                wait_secs,
+                run_secs: b.run_ns as f64 / 1e9,
+                requeue_secs: b.requeue_ns as f64 / 1e9,
+                attempts: b.attempts,
+                critical_attempt: b.critical,
+            }
+        })
+        .collect();
+
+    TraceReport { jobs, scale, series, events: n, skipped_lines: 0 }
+}
+
+/// Attach to every decision the nearest sample at or before it and the
+/// nearest at or after it. Both vectors are in trace (time) order.
+fn attach_demand(scale: &mut [ScaleDecision], series: &[SeriesPoint]) {
+    let point = |s: &SeriesPoint| DemandPoint {
+        at: s.at,
+        queued_slots: s.queued_slots,
+        nodes_ready: s.nodes_ready,
+        scale_target: s.scale_target,
+    };
+    for d in scale.iter_mut() {
+        d.before = series.iter().rev().find(|s| s.at <= d.at).map(point);
+        d.after = series.iter().find(|s| s.at >= d.at).map(point);
+    }
+}
+
+/// Parse a JSON-lines trace, skipping (and counting) lines that do not
+/// parse — a truncated or corrupt trace yields a partial report.
+pub fn from_trace_lines<'a, I: IntoIterator<Item = &'a str>>(lines: I) -> TraceReport {
+    let mut events = Vec::new();
+    let mut skipped = 0u64;
+    for line in lines {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        match TraceEvent::parse_json_line(line) {
+            Ok(ev) => events.push(ev),
+            Err(_) => skipped += 1,
+        }
+    }
+    let mut report = fold_events(events);
+    report.skipped_lines = skipped;
+    report
+}
+
+impl TraceReport {
+    /// Narrow the job-timeline section to one job (`--job J`); the
+    /// scale audit and the series are cluster-level and stay.
+    pub fn retain_job(&mut self, job: u64) {
+        self.jobs.retain(|j| j.job as u64 == job);
+    }
+}
+
+// ---------- rendering ----------
+
+fn opt_secs(t: Option<SimTime>) -> String {
+    match t {
+        Some(t) => format!("{:.3}", t.as_secs_f64()),
+        None => "null".into(),
+    }
+}
+
+fn demand_json(p: &Option<DemandPoint>) -> String {
+    match p {
+        Some(p) => format!(
+            "{{\"t_s\":{:.3},\"queued_slots\":{},\"nodes_ready\":{},\"scale_target\":{}}}",
+            p.at.as_secs_f64(),
+            p.queued_slots,
+            p.nodes_ready,
+            p.scale_target
+        ),
+        None => "null".into(),
+    }
+}
+
+/// Render the full report as one JSON object (jobs, scale audit,
+/// series, summary) for machine consumers.
+pub fn render_json(r: &TraceReport) -> String {
+    let mut s = String::from("{\n  \"jobs\": [\n");
+    for (i, j) in r.jobs.iter().enumerate() {
+        let attempts: Vec<String> = j
+            .attempts
+            .iter()
+            .map(|a| {
+                format!(
+                    "{{\"attempt\":{},\"dispatched_s\":{:.3},\"launched_s\":{},\"ended_s\":{},\"outcome\":\"{}\"}}",
+                    a.attempt,
+                    a.dispatched.as_secs_f64(),
+                    opt_secs(a.launched),
+                    opt_secs(a.ended),
+                    a.outcome
+                )
+            })
+            .collect();
+        s.push_str(&format!(
+            "    {{\"job\":{},\"tenant\":{},\"ranks\":{},\"state\":\"{}\",\"submitted_s\":{},\"first_dispatch_s\":{},\"finished_s\":{},\"wait_s\":{:.3},\"run_s\":{:.3},\"requeue_s\":{:.3},\"critical_attempt\":{},\"attempts\":[{}]}}{}\n",
+            j.job,
+            j.tenant,
+            j.ranks,
+            esc(j.state),
+            opt_secs(j.submitted),
+            opt_secs(j.first_dispatch),
+            opt_secs(j.finished),
+            j.wait_secs,
+            j.run_secs,
+            j.requeue_secs,
+            j.critical_attempt.map_or("null".into(), |a| a.to_string()),
+            attempts.join(","),
+            if i + 1 < r.jobs.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n  \"scale\": [\n");
+    for (i, d) in r.scale.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"t_s\":{:.3},\"epoch\":{},\"action\":\"{}\",\"nodes\":{},\"reason\":\"{}\",\"before\":{},\"after\":{}}}{}\n",
+            d.at.as_secs_f64(),
+            d.epoch,
+            d.action,
+            d.nodes,
+            d.reason.code(),
+            demand_json(&d.before),
+            demand_json(&d.after),
+            if i + 1 < r.scale.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n  \"series\": [\n");
+    for (i, p) in r.series.iter().enumerate() {
+        s.push_str(&format!(
+            "    {}{}\n",
+            series_point_json(p),
+            if i + 1 < r.series.len() { "," } else { "" }
+        ));
+    }
+    s.push_str(&format!(
+        "  ],\n  \"summary\": {{\"jobs\":{},\"scale_decisions\":{},\"samples\":{},\"events\":{},\"skipped_lines\":{}}}\n}}\n",
+        r.jobs.len(),
+        r.scale.len(),
+        r.series.len(),
+        r.events,
+        r.skipped_lines
+    ));
+    s
+}
+
+fn series_point_json(p: &SeriesPoint) -> String {
+    format!(
+        "{{\"t_ns\":{},\"t_s\":{:.3},\"epoch\":{},\"queued_jobs\":{},\"queued_slots\":{},\"running_jobs\":{},\"reserved_slots\":{},\"total_slots\":{},\"nodes_ready\":{},\"nodes_unhealthy\":{},\"nodes_provisioning\":{},\"scale_target\":{},\"top_usage\":\"{}\"}}",
+        p.at.as_nanos(),
+        p.at.as_secs_f64(),
+        p.epoch,
+        p.queued_jobs,
+        p.queued_slots,
+        p.running_jobs,
+        p.reserved_slots,
+        p.total_slots,
+        p.nodes_ready,
+        p.nodes_unhealthy,
+        p.nodes_provisioning,
+        p.scale_target,
+        esc(&p.top_usage)
+    )
+}
+
+/// Render the per-job timelines and the scale audit as fixed-width
+/// tables (the series is summarized; export it with `--series`).
+pub fn render_table(r: &TraceReport) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{:>6} {:>6} {:>5} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10} {:>9} {:>4}\n",
+        "JOB", "TENANT", "RANKS", "STATE", "SUBMIT_S", "START_S", "WAIT_S", "RUN_S", "REQUEUE_S", "ATTEMPTS", "CRIT"
+    ));
+    for j in &r.jobs {
+        s.push_str(&format!(
+            "{:>6} {:>6} {:>5} {:>10} {:>10} {:>10} {:>10.3} {:>10.3} {:>10.3} {:>9} {:>4}\n",
+            j.job,
+            j.tenant,
+            j.ranks,
+            j.state,
+            opt_secs(j.submitted),
+            opt_secs(j.first_dispatch),
+            j.wait_secs,
+            j.run_secs,
+            j.requeue_secs,
+            j.attempts.len(),
+            j.critical_attempt.map_or("-".into(), |a| a.to_string()),
+        ));
+        // attempt detail only where the lifecycle had more than one act
+        if j.attempts.len() > 1 {
+            for a in &j.attempts {
+                s.push_str(&format!(
+                    "       attempt {}: dispatched {:>10} launched {:>10} ended {:>10}  {}\n",
+                    a.attempt,
+                    format!("{:.3}", a.dispatched.as_secs_f64()),
+                    opt_secs(a.launched),
+                    opt_secs(a.ended),
+                    a.outcome
+                ));
+            }
+        }
+    }
+    s.push('\n');
+    s.push_str(&format!(
+        "{:>10} {:>6} {:>5} {:>14} {:>24} {:>24}\n",
+        "T_S", "ACTION", "NODES", "REASON", "QUEUED_SLOTS(B->A)", "READY(B->A)"
+    ));
+    let fmt_demand = |p: &Option<DemandPoint>, f: fn(&DemandPoint) -> u64| -> String {
+        p.as_ref().map_or("-".into(), |p| f(p).to_string())
+    };
+    for d in &r.scale {
+        s.push_str(&format!(
+            "{:>10.3} {:>6} {:>5} {:>14} {:>24} {:>24}\n",
+            d.at.as_secs_f64(),
+            d.action,
+            d.nodes,
+            d.reason.code(),
+            format!(
+                "{} -> {}",
+                fmt_demand(&d.before, |p| p.queued_slots),
+                fmt_demand(&d.after, |p| p.queued_slots)
+            ),
+            format!(
+                "{} -> {}",
+                fmt_demand(&d.before, |p| p.nodes_ready),
+                fmt_demand(&d.after, |p| p.nodes_ready)
+            ),
+        ));
+    }
+    s.push_str(&format!(
+        "\n{} sample(s){}; export the time-series with --series csv|json\n",
+        r.series.len(),
+        match (r.series.first(), r.series.last()) {
+            (Some(a), Some(b)) => format!(
+                " from {:.0}s to {:.0}s",
+                a.at.as_secs_f64(),
+                b.at.as_secs_f64()
+            ),
+            _ => String::new(),
+        }
+    ));
+    if r.skipped_lines > 0 {
+        s.push_str(&format!(
+            "\nwarning: {} unparseable line(s) skipped — partial report\n",
+            r.skipped_lines
+        ));
+    }
+    s
+}
+
+/// Export the sampled gauge series as CSV (exact `t_ns` plus a
+/// human-friendly `t_s`, one row per sample).
+pub fn render_series_csv(r: &TraceReport) -> String {
+    let mut s = String::from(
+        "t_ns,t_s,epoch,queued_jobs,queued_slots,running_jobs,reserved_slots,total_slots,nodes_ready,nodes_unhealthy,nodes_provisioning,scale_target,top_usage\n",
+    );
+    for p in &r.series {
+        s.push_str(&format!(
+            "{},{:.3},{},{},{},{},{},{},{},{},{},{},\"{}\"\n",
+            p.at.as_nanos(),
+            p.at.as_secs_f64(),
+            p.epoch,
+            p.queued_jobs,
+            p.queued_slots,
+            p.running_jobs,
+            p.reserved_slots,
+            p.total_slots,
+            p.nodes_ready,
+            p.nodes_unhealthy,
+            p.nodes_provisioning,
+            p.scale_target,
+            p.top_usage.replace('"', "\"\"")
+        ));
+    }
+    s
+}
+
+/// Export the sampled gauge series as one JSON object.
+pub fn render_series_json(r: &TraceReport) -> String {
+    let mut s = String::from("{\n  \"series\": [\n");
+    for (i, p) in r.series.iter().enumerate() {
+        s.push_str(&format!(
+            "    {}{}\n",
+            series_point_json(p),
+            if i + 1 < r.series.len() { "," } else { "" }
+        ));
+    }
+    s.push_str(&format!(
+        "  ],\n  \"summary\": {{\"samples\":{},\"events\":{},\"skipped_lines\":{}}}\n}}\n",
+        r.series.len(),
+        r.events,
+        r.skipped_lines
+    ));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ids::JobId;
+
+    fn secs(s: u64) -> SimTime {
+        SimTime::from_secs(s)
+    }
+
+    fn sample(at: u64, queued_slots: u64, ready: u64) -> TraceEvent {
+        TraceEvent::Sample {
+            at: secs(at),
+            epoch: 0,
+            queued_jobs: queued_slots / 4,
+            queued_slots,
+            running_jobs: 1,
+            reserved_slots: 4,
+            total_slots: ready * 4,
+            nodes_ready: ready,
+            nodes_unhealthy: 0,
+            nodes_provisioning: 0,
+            scale_target: ready,
+            top_usage: "7:1000".into(),
+        }
+    }
+
+    /// j1 completes first try; j2 is requeued at +15s, re-dispatched at
+    /// +20s and completes; a scale-up fires at +12s between samples at
+    /// +10s and +40s.
+    fn sample_events() -> Vec<TraceEvent> {
+        let j1 = JobId::new(1);
+        let j2 = JobId::new(2);
+        vec![
+            TraceEvent::Submit { at: secs(0), epoch: 0, job: j1, tenant: 7, ranks: 4, priority: 0 },
+            TraceEvent::Submit { at: secs(1), epoch: 0, job: j2, tenant: 7, ranks: 2, priority: 0 },
+            sample(10, 24, 2),
+            TraceEvent::Dispatch { at: secs(10), epoch: 0, job: j1, attempt: 0, tenant: 7, ranks: 4, backfilled: false },
+            TraceEvent::Launch { at: secs(10), epoch: 0, job: j1, attempt: 0, planned: secs(20) },
+            TraceEvent::Dispatch { at: secs(10), epoch: 0, job: j2, attempt: 0, tenant: 7, ranks: 2, backfilled: false },
+            TraceEvent::ScaleUp { at: secs(12), epoch: 0, nodes: 2, reason: ScaleReason::QueuedDemand },
+            TraceEvent::Requeue { at: secs(15), epoch: 0, job: j2, attempt: 1, tenant: 7, wasted: secs(5) },
+            TraceEvent::Dispatch { at: secs(20), epoch: 0, job: j2, attempt: 1, tenant: 7, ranks: 2, backfilled: false },
+            TraceEvent::Complete { at: secs(30), epoch: 0, job: j1, attempt: 0, tenant: 7, started: secs(10) },
+            TraceEvent::Complete { at: secs(30), epoch: 0, job: j2, attempt: 1, tenant: 7, started: secs(20) },
+            sample(40, 0, 4),
+            TraceEvent::ScaleHold { at: secs(50), epoch: 0, reason: ScaleReason::CooldownHeld },
+        ]
+    }
+
+    #[test]
+    fn timelines_split_wait_run_and_requeue() {
+        let r = fold_events(sample_events());
+        assert_eq!(r.jobs.len(), 2);
+        let j1 = &r.jobs[0];
+        assert_eq!((j1.state, j1.attempts.len()), ("completed", 1));
+        assert_eq!(j1.wait_secs, 10.0);
+        assert_eq!(j1.run_secs, 20.0);
+        assert_eq!(j1.requeue_secs, 0.0);
+        assert_eq!(j1.critical_attempt, Some(0));
+        assert_eq!(j1.attempts[0].launched, Some(secs(10)));
+        assert_eq!(j1.attempts[0].planned, Some(secs(20)));
+
+        let j2 = &r.jobs[1];
+        assert_eq!((j2.state, j2.attempts.len()), ("completed", 2));
+        assert_eq!(j2.wait_secs, 9.0);
+        // attempt 0 ran 10→15 (requeued), attempt 1 ran 20→30
+        assert_eq!(j2.run_secs, 15.0);
+        assert_eq!(j2.requeue_secs, 5.0);
+        assert_eq!(j2.critical_attempt, Some(1));
+        assert_eq!(j2.attempts[0].outcome, "requeued");
+        assert_eq!(j2.attempts[1].outcome, "completed");
+    }
+
+    #[test]
+    fn scale_audit_carries_the_surrounding_demand() {
+        let r = fold_events(sample_events());
+        assert_eq!(r.scale.len(), 2);
+        let up = &r.scale[0];
+        assert_eq!((up.action, up.nodes), ("up", 2));
+        assert_eq!(up.reason, ScaleReason::QueuedDemand);
+        assert_eq!(up.before.unwrap().queued_slots, 24);
+        assert_eq!(up.after.unwrap().queued_slots, 0);
+        // the hold at +50s has no later sample
+        let hold = &r.scale[1];
+        assert_eq!(hold.action, "hold");
+        assert_eq!(hold.before.unwrap().at, secs(40));
+        assert!(hold.after.is_none());
+    }
+
+    #[test]
+    fn truncated_complete_still_builds_an_attempt() {
+        let j = JobId::new(9);
+        let r = fold_events(vec![TraceEvent::Complete {
+            at: secs(30),
+            epoch: 0,
+            job: j,
+            attempt: 3,
+            tenant: 1,
+            started: secs(20),
+        }]);
+        let tl = &r.jobs[0];
+        assert_eq!(tl.state, "completed");
+        assert_eq!(tl.run_secs, 10.0);
+        assert_eq!(tl.critical_attempt, Some(3));
+        assert_eq!(tl.attempts[0].dispatched, secs(20));
+    }
+
+    #[test]
+    fn corrupt_lines_skip_to_a_partial_report() {
+        let good: Vec<String> = sample_events().iter().map(|e| e.to_json_line()).collect();
+        let mut lines: Vec<&str> = good.iter().map(|s| s.as_str()).collect();
+        lines.insert(2, "{\"ev\":\"sample\",\"t_ns\":garbage");
+        let r = from_trace_lines(lines);
+        assert_eq!(r.skipped_lines, 1);
+        assert_eq!(r.jobs.len(), 2, "good lines still fold");
+        assert!(render_table(&r).contains("partial report"));
+    }
+
+    #[test]
+    fn renderers_cover_the_report() {
+        let mut r = fold_events(sample_events());
+        let json = render_json(&r);
+        assert!(json.contains("\"critical_attempt\":1"));
+        assert!(json.contains("\"action\":\"up\""));
+        assert!(json.contains("\"summary\": {\"jobs\":2,\"scale_decisions\":2,\"samples\":2,"));
+        let table = render_table(&r);
+        assert!(table.contains("JOB"));
+        assert!(table.contains("attempt 1: "), "multi-attempt jobs get detail rows");
+        assert!(table.contains("queued-demand"));
+
+        let csv = render_series_csv(&r);
+        assert_eq!(csv.lines().count(), 3, "header + 2 samples");
+        assert!(csv.starts_with("t_ns,t_s,"));
+        let sj = render_series_json(&r);
+        assert!(sj.contains("\"queued_slots\":24"));
+        assert!(sj.contains("\"summary\": {\"samples\":2,"));
+
+        r.retain_job(2);
+        assert_eq!(r.jobs.len(), 1);
+        assert_eq!(r.scale.len(), 2, "scale audit is cluster-level and stays");
+    }
+}

@@ -81,6 +81,28 @@ pub enum TraceEvent {
     SnapshotWritten { at: SimTime, epoch: u64, seq: u64 },
     /// One engine event's journal batch reached the durable WAL.
     WalFlush { at: SimTime, epoch: u64, events: u64 },
+    /// A periodic gauge snapshot from the metrics recorder: the
+    /// cluster's demand and capacity signal at one instant, sampled at
+    /// a configurable sim-time cadence (`[cluster] sample_every`).
+    /// Every field is an exact integer so the codec roundtrips bit for
+    /// bit; `top_usage` is the top-K tenants by decayed usage as
+    /// `tenant:milli_slot_seconds` pairs, comma-joined, descending.
+    Sample {
+        at: SimTime,
+        epoch: u64,
+        queued_jobs: u64,
+        queued_slots: u64,
+        running_jobs: u64,
+        reserved_slots: u64,
+        total_slots: u64,
+        nodes_ready: u64,
+        nodes_unhealthy: u64,
+        nodes_provisioning: u64,
+        /// Node count the autoscaler is converging to (ready +
+        /// provisioning at sample time).
+        scale_target: u64,
+        top_usage: String,
+    },
 }
 
 impl TraceEvent {
@@ -105,7 +127,8 @@ impl TraceEvent {
             | TraceEvent::LeaseLost { at, .. }
             | TraceEvent::Takeover { at, .. }
             | TraceEvent::SnapshotWritten { at, .. }
-            | TraceEvent::WalFlush { at, .. } => *at,
+            | TraceEvent::WalFlush { at, .. }
+            | TraceEvent::Sample { at, .. } => *at,
         }
     }
 
@@ -131,6 +154,40 @@ impl TraceEvent {
             TraceEvent::Takeover { .. } => "takeover",
             TraceEvent::SnapshotWritten { .. } => "snapshot",
             TraceEvent::WalFlush { .. } => "wal_flush",
+            TraceEvent::Sample { .. } => "sample",
+        }
+    }
+
+    /// Canonical within-window ordering key for the sharded trace
+    /// merge: `(t_ns, kind rank, entity id)` — the same shape as
+    /// `ShardMsg::merge_key`, extended by the emitting rank and the
+    /// rank-local sequence at the merge site. The kind rank follows the
+    /// enum declaration order; the entity id is the job where the event
+    /// has one (cluster-level events use 0 — they are only ever emitted
+    /// by one rank, so rank + sequence already orders them).
+    pub fn sort_key(&self) -> (u64, u8, u64) {
+        let t = self.at().as_nanos();
+        match self {
+            TraceEvent::Submit { job, .. } => (t, 0, job.raw() as u64),
+            TraceEvent::SubmitRejected { job, .. } => (t, 1, job.raw() as u64),
+            TraceEvent::QuotaDefer { job, .. } => (t, 2, job.raw() as u64),
+            TraceEvent::QuotaAdmit { .. } => (t, 3, 0),
+            TraceEvent::Dispatch { job, .. } => (t, 4, job.raw() as u64),
+            TraceEvent::Launch { job, .. } => (t, 5, job.raw() as u64),
+            TraceEvent::Complete { job, .. } => (t, 6, job.raw() as u64),
+            TraceEvent::Fail { job, .. } => (t, 7, job.raw() as u64),
+            TraceEvent::Requeue { job, .. } => (t, 8, job.raw() as u64),
+            TraceEvent::Abandon { job, .. } => (t, 9, job.raw() as u64),
+            TraceEvent::Preempt { job, .. } => (t, 10, job.raw() as u64),
+            TraceEvent::ScaleUp { .. } => (t, 11, 0),
+            TraceEvent::ScaleDown { .. } => (t, 12, 0),
+            TraceEvent::ScaleHold { .. } => (t, 13, 0),
+            TraceEvent::FaultInjected { .. } => (t, 14, 0),
+            TraceEvent::LeaseLost { .. } => (t, 15, 0),
+            TraceEvent::Takeover { .. } => (t, 16, 0),
+            TraceEvent::SnapshotWritten { .. } => (t, 17, 0),
+            TraceEvent::WalFlush { .. } => (t, 18, 0),
+            TraceEvent::Sample { .. } => (t, 19, 0),
         }
     }
 
@@ -222,6 +279,24 @@ impl TraceEvent {
             TraceEvent::WalFlush { events, .. } => {
                 s.push_str(&format!(",\"events\":{events}"));
             }
+            TraceEvent::Sample {
+                queued_jobs,
+                queued_slots,
+                running_jobs,
+                reserved_slots,
+                total_slots,
+                nodes_ready,
+                nodes_unhealthy,
+                nodes_provisioning,
+                scale_target,
+                top_usage,
+                ..
+            } => {
+                s.push_str(&format!(
+                    ",\"queued_jobs\":{queued_jobs},\"queued_slots\":{queued_slots},\"running_jobs\":{running_jobs},\"reserved_slots\":{reserved_slots},\"total_slots\":{total_slots},\"nodes_ready\":{nodes_ready},\"nodes_unhealthy\":{nodes_unhealthy},\"nodes_provisioning\":{nodes_provisioning},\"scale_target\":{scale_target},\"top_usage\":\"{}\"",
+                    esc(top_usage)
+                ));
+            }
         }
         s.push('}');
         s
@@ -248,7 +323,8 @@ impl TraceEvent {
             | TraceEvent::LeaseLost { epoch, .. }
             | TraceEvent::Takeover { epoch, .. }
             | TraceEvent::SnapshotWritten { epoch, .. }
-            | TraceEvent::WalFlush { epoch, .. } => *epoch,
+            | TraceEvent::WalFlush { epoch, .. }
+            | TraceEvent::Sample { epoch, .. } => *epoch,
         }
     }
 
@@ -373,6 +449,20 @@ impl TraceEvent {
                 at,
                 epoch,
                 events: u64_field(line, "events")?,
+            }),
+            "sample" => Ok(TraceEvent::Sample {
+                at,
+                epoch,
+                queued_jobs: u64_field(line, "queued_jobs")?,
+                queued_slots: u64_field(line, "queued_slots")?,
+                running_jobs: u64_field(line, "running_jobs")?,
+                reserved_slots: u64_field(line, "reserved_slots")?,
+                total_slots: u64_field(line, "total_slots")?,
+                nodes_ready: u64_field(line, "nodes_ready")?,
+                nodes_unhealthy: u64_field(line, "nodes_unhealthy")?,
+                nodes_provisioning: u64_field(line, "nodes_provisioning")?,
+                scale_target: u64_field(line, "scale_target")?,
+                top_usage: str_field(line, "top_usage")?,
             }),
             other => Err(format!("unknown trace event kind: {other}")),
         }
@@ -571,6 +661,20 @@ mod tests {
             TraceEvent::Takeover { at: t, epoch: 1, replayed: 42 },
             TraceEvent::SnapshotWritten { at: t, epoch: 1, seq: 9 },
             TraceEvent::WalFlush { at: t, epoch: 1, events: 3 },
+            TraceEvent::Sample {
+                at: t,
+                epoch: 0,
+                queued_jobs: 4,
+                queued_slots: 48,
+                running_jobs: 3,
+                reserved_slots: 36,
+                total_slots: 96,
+                nodes_ready: 8,
+                nodes_unhealthy: 1,
+                nodes_provisioning: 2,
+                scale_target: 10,
+                top_usage: "7:125000,0:3100".into(),
+            },
         ]
     }
 
@@ -594,6 +698,29 @@ mod tests {
             );
             assert!(line.ends_with('}'), "{line}");
         }
+    }
+
+    #[test]
+    fn sort_key_is_time_major_and_distinct_per_kind() {
+        let evs = samples();
+        // kind ranks are distinct, so same-time same-entity events from
+        // different kinds never tie in the shard merge
+        let mut ranks: Vec<u8> = evs.iter().map(|e| e.sort_key().1).collect();
+        ranks.sort_unstable();
+        ranks.dedup();
+        assert_eq!(ranks.len(), evs.len(), "duplicate kind rank");
+        // time dominates: a later event of the lowest-ranked kind sorts
+        // after an earlier event of the highest-ranked kind
+        let early = TraceEvent::WalFlush { at: SimTime::from_secs(1), epoch: 0, events: 1 };
+        let late = TraceEvent::Submit {
+            at: SimTime::from_secs(2),
+            epoch: 0,
+            job: JobId::new(0),
+            tenant: 0,
+            ranks: 1,
+            priority: 0,
+        };
+        assert!(early.sort_key() < late.sort_key());
     }
 
     #[test]

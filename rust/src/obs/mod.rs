@@ -1,20 +1,28 @@
-//! Observability: the structured trace bus, phase profiling, and the
-//! `vhpc acct` accounting surface.
+//! Observability: the structured trace bus, phase profiling, the
+//! metrics recorder, and the `vhpc acct`/`vhpc trace` query surfaces.
 //!
 //! The engine emits typed [`events::TraceEvent`]s into a
 //! [`writer::TraceBus`] owned by the cluster state; the bus buffers
 //! them and drains to a [`writer::TraceSink`] at engine-event
-//! boundaries (the same cadence as WAL batching). Sink failures
-//! degrade to counted drops — observability may go dark, scheduling
-//! never notices, and traced runs fingerprint identically to untraced
-//! ones. [`profiling`] adds opt-in wall-clock phase timers for the
-//! perf harness, and [`acct`] folds a trace or a replayed WAL into
-//! per-job/per-tenant accounting.
+//! boundaries (the same cadence as WAL batching). On the sharded
+//! engine each rank owns a buffering bus and the conductor merges the
+//! per-window batches in canonical order before writing, so a sharded
+//! trace is byte-identical at any shard count. Sink failures degrade
+//! to counted drops — observability may go dark, scheduling never
+//! notices, and traced runs fingerprint identically to untraced ones.
+//! [`profiling`] adds opt-in wall-clock phase timers for the perf
+//! harness, [`record`] samples gauge time-series into the trace,
+//! [`acct`] folds a trace or a replayed WAL into per-job/per-tenant
+//! accounting, and [`analyze`] turns a trace into job timelines, a
+//! scale-decision audit and exportable time-series.
 
 pub mod acct;
+pub mod analyze;
 pub mod events;
 pub mod profiling;
+pub mod record;
 pub mod writer;
 
 pub use events::TraceEvent;
+pub use record::{GaugeSnapshot, MetricsRecorder};
 pub use writer::{FailAfterSink, FileSink, MemSink, TraceBus, TraceSink};

@@ -1,0 +1,185 @@
+//! The metrics recorder: periodic gauge snapshots into the trace.
+//!
+//! Counters ([`Metrics`](crate::cluster::metrics::Metrics)) tell you
+//! what happened over a whole run; they cannot show how queue depth,
+//! capacity or per-tenant share *evolved*. The recorder closes that gap
+//! by sampling a [`GaugeSnapshot`] at a configurable sim-time cadence
+//! (`[cluster] sample_every`, default 30 s) and emitting it as a
+//! [`TraceEvent::Sample`] through the same bus, sink and flush contract
+//! as every lifecycle event — so `vhpc trace --series` can export the
+//! time-series from any trace file.
+//!
+//! Determinism posture: sampling is driven by virtual time only (the
+//! scheduler tick on the live cluster, the window grid on the sharded
+//! conductor), reads state, and writes nothing back — a sampled run's
+//! counter fingerprint is byte-identical to an unsampled one, and the
+//! sample stream itself is byte-identical at any shard count.
+
+use super::events::TraceEvent;
+use super::writer::TraceBus;
+use crate::sim::SimTime;
+
+/// How many tenants the `top_usage` field carries, ranked by decayed
+/// usage descending (ties broken by tenant id ascending).
+pub const TOP_USAGE_K: usize = 4;
+
+/// One instant's demand/capacity gauges, assembled by whoever owns the
+/// scheduler state (the live [`VirtualCluster`](crate::cluster::VirtualCluster)
+/// or the sharded conductor) — the recorder itself never reaches into
+/// cluster internals.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct GaugeSnapshot {
+    pub queued_jobs: u64,
+    pub queued_slots: u64,
+    pub running_jobs: u64,
+    pub reserved_slots: u64,
+    pub total_slots: u64,
+    pub nodes_ready: u64,
+    pub nodes_unhealthy: u64,
+    pub nodes_provisioning: u64,
+    /// Node count the autoscaler is converging to (ready +
+    /// provisioning at sample time).
+    pub scale_target: u64,
+    /// `(tenant, decayed slot-seconds)`, descending by usage. The
+    /// recorder truncates to [`TOP_USAGE_K`] and renders milli-slot-
+    /// second integers so the trace codec stays exact.
+    pub usage: Vec<(u64, f64)>,
+}
+
+/// Emits a [`TraceEvent::Sample`] whenever virtual time crosses the
+/// next cadence boundary. `every == 0` disables sampling entirely.
+#[derive(Debug, Clone)]
+pub struct MetricsRecorder {
+    every: SimTime,
+    next_at: SimTime,
+}
+
+impl MetricsRecorder {
+    pub fn new(every: SimTime) -> Self {
+        Self { every, next_at: SimTime::ZERO }
+    }
+
+    /// A recorder that never samples.
+    pub fn disabled() -> Self {
+        Self::new(SimTime::ZERO)
+    }
+
+    /// True when a sample is owed at `now`. Callers check this (plus
+    /// `bus.enabled()`) before paying to assemble a [`GaugeSnapshot`].
+    pub fn due(&self, now: SimTime) -> bool {
+        self.every > SimTime::ZERO && now >= self.next_at
+    }
+
+    /// Emit one sample and advance the cadence clock past `now`. The
+    /// next sample is owed at the first cadence boundary after `now`,
+    /// so a stalled caller (e.g. a long engine gap) yields one catch-up
+    /// sample, not a burst.
+    pub fn record(&mut self, now: SimTime, epoch: u64, g: &GaugeSnapshot, bus: &mut TraceBus) {
+        if !self.due(now) {
+            return;
+        }
+        while self.next_at <= now {
+            self.next_at = self.next_at + self.every;
+        }
+        bus.emit(TraceEvent::Sample {
+            at: now,
+            epoch,
+            queued_jobs: g.queued_jobs,
+            queued_slots: g.queued_slots,
+            running_jobs: g.running_jobs,
+            reserved_slots: g.reserved_slots,
+            total_slots: g.total_slots,
+            nodes_ready: g.nodes_ready,
+            nodes_unhealthy: g.nodes_unhealthy,
+            nodes_provisioning: g.nodes_provisioning,
+            scale_target: g.scale_target,
+            top_usage: render_top_usage(&g.usage),
+        });
+    }
+}
+
+/// Rank the usage list (descending usage, tenant id tiebreak), keep the
+/// top [`TOP_USAGE_K`], render `tenant:milli_slot_seconds` pairs. The
+/// f64 usage is deterministic (the ledger sums in tenant order), so the
+/// rounded integer — and therefore the trace byte stream — is too.
+fn render_top_usage(usage: &[(u64, f64)]) -> String {
+    let mut ranked: Vec<(u64, f64)> = usage.to_vec();
+    ranked.sort_by(|a, b| {
+        b.1.partial_cmp(&a.1)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.0.cmp(&b.0))
+    });
+    ranked
+        .iter()
+        .take(TOP_USAGE_K)
+        .map(|&(tenant, used)| format!("{tenant}:{}", (used * 1000.0).round() as u64))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::MemSink;
+
+    fn snap(queued_jobs: u64) -> GaugeSnapshot {
+        GaugeSnapshot { queued_jobs, ..GaugeSnapshot::default() }
+    }
+
+    #[test]
+    fn disabled_recorder_never_samples() {
+        let mut rec = MetricsRecorder::disabled();
+        let mut bus = TraceBus::buffering();
+        assert!(!rec.due(SimTime::from_secs(1_000_000)));
+        rec.record(SimTime::from_secs(5), 0, &snap(1), &mut bus);
+        assert!(bus.take_buffered().is_empty());
+    }
+
+    #[test]
+    fn samples_land_on_the_cadence_grid_without_bursts() {
+        let mut rec = MetricsRecorder::new(SimTime::from_secs(10));
+        let mut bus = TraceBus::buffering();
+        // tick cadence 1 s: samples at 0, 10, 20...
+        for s in 0..25u64 {
+            let now = SimTime::from_secs(s);
+            if rec.due(now) {
+                rec.record(now, 0, &snap(s), &mut bus);
+            }
+        }
+        let evs = bus.take_buffered();
+        let stamps: Vec<u64> = evs.iter().map(|e| e.at().as_nanos() / 1_000_000_000).collect();
+        assert_eq!(stamps, vec![0, 10, 20]);
+        // a long stall yields one catch-up sample, not a burst
+        rec.record(SimTime::from_secs(95), 0, &snap(9), &mut bus);
+        rec.record(SimTime::from_secs(96), 0, &snap(9), &mut bus);
+        assert_eq!(bus.take_buffered().len(), 1, "no burst after a stall");
+        assert!(rec.due(SimTime::from_secs(100)));
+    }
+
+    #[test]
+    fn top_usage_ranks_truncates_and_roundtrips() {
+        let usage = vec![(3, 1.5), (0, 42.25), (9, 42.25), (2, 7.0), (5, 0.0)];
+        let s = render_top_usage(&usage);
+        // descending usage, tenant-id tiebreak, K=4 cap
+        assert_eq!(s, "0:42250,9:42250,2:7000,3:1500");
+        let mut rec = MetricsRecorder::new(SimTime::from_secs(1));
+        let sink = MemSink::new();
+        let lines = sink.shared();
+        let mut bus = TraceBus::with_sink(Box::new(sink));
+        let g = GaugeSnapshot { usage, queued_jobs: 2, total_slots: 96, ..Default::default() };
+        rec.record(SimTime::from_secs(3), 1, &g, &mut bus);
+        bus.finish();
+        let got = lines.lock().unwrap().clone();
+        assert_eq!(got.len(), 1);
+        let back = TraceEvent::parse_json_line(&got[0]).expect("sample parses");
+        match back {
+            TraceEvent::Sample { queued_jobs, total_slots, top_usage, epoch, .. } => {
+                assert_eq!(queued_jobs, 2);
+                assert_eq!(total_slots, 96);
+                assert_eq!(epoch, 1);
+                assert_eq!(top_usage, "0:42250,9:42250,2:7000,3:1500");
+            }
+            other => panic!("expected a sample, got {other:?}"),
+        }
+    }
+}

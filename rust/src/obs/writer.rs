@@ -125,6 +125,10 @@ pub struct TraceBus {
     buf: Vec<TraceEvent>,
     written: u64,
     dropped: u64,
+    /// Rank-local mode for the sharded engine: emits accumulate with no
+    /// sink and are periodically taken by [`TraceBus::take_buffered`]
+    /// for the conductor's canonical merge.
+    buffering: bool,
 }
 
 impl TraceBus {
@@ -135,28 +139,46 @@ impl TraceBus {
 
     /// A bus draining into `sink`.
     pub fn with_sink(sink: Box<dyn TraceSink>) -> Self {
-        Self { sink: Some(sink), buf: Vec::new(), written: 0, dropped: 0 }
+        Self { sink: Some(sink), ..Self::default() }
     }
 
-    /// True when a sink is installed. Emission sites that would allocate
+    /// A rank-local buffering bus (shard threads): no sink, but `emit`
+    /// still buffers. The shard ships each window's batch to the
+    /// conductor via [`TraceBus::take_buffered`]; the conductor's
+    /// sink-backed bus writes the merged order.
+    pub fn buffering() -> Self {
+        Self { buffering: true, ..Self::default() }
+    }
+
+    /// True when emits are retained (a sink is installed, or the bus is
+    /// in rank-local buffering mode). Emission sites that would allocate
     /// to build an event should check this first.
     pub fn enabled(&self) -> bool {
-        self.sink.is_some()
+        self.sink.is_some() || self.buffering
     }
 
-    /// Buffer one event (dropped silently when no sink is installed).
+    /// Buffer one event (dropped silently when the bus is disabled).
     pub fn emit(&mut self, ev: TraceEvent) {
-        if self.sink.is_some() {
+        if self.enabled() {
             self.buf.push(ev);
         }
     }
 
+    /// Take the buffered events (rank-local buffering mode): the
+    /// shard's per-window trace batch, in emission order.
+    pub fn take_buffered(&mut self) -> Vec<TraceEvent> {
+        std::mem::take(&mut self.buf)
+    }
+
     /// Drain the buffer to the sink. Write errors degrade to counted
     /// drops — never an `Err`, never a panic, nothing the caller has to
-    /// handle on the scheduling path.
+    /// handle on the scheduling path. A buffering bus keeps its events
+    /// (they belong to the conductor's merge, not a sink).
     pub fn flush(&mut self) {
         let Some(sink) = self.sink.as_mut() else {
-            self.buf.clear();
+            if !self.buffering {
+                self.buf.clear();
+            }
             return;
         };
         for ev in self.buf.drain(..) {

@@ -8,11 +8,14 @@
 //! `--no-default-features` in CI.
 
 use vhpc::cluster::head::JobKind;
+use vhpc::cluster::mix::{mix_spec, prioritized_trace};
+use vhpc::cluster::policy::SchedulePolicy;
 use vhpc::cluster::vcluster::VirtualCluster;
+use vhpc::cluster::{run_sharded_chaos, ShardRunConfig};
 use vhpc::config::ClusterSpec;
 use vhpc::ha::failover::decode_wal_listing;
 use vhpc::ha::wal::WAL_PREFIX;
-use vhpc::obs::acct::{from_trace_lines, from_wal, AcctFilter};
+use vhpc::obs::acct::{from_trace_lines, from_wal, wal_to_trace, AcctFilter};
 use vhpc::obs::MemSink;
 use vhpc::sim::SimTime;
 use vhpc::util::ids::MachineId;
@@ -137,6 +140,104 @@ fn wal_accounting_matches_live_trace_and_ledger() {
         assert!(
             diff <= ledger.max(t.slot_seconds) * 0.01 + 1e-6,
             "tenant {}: ledger {ledger} vs acct {}",
+            t.tenant,
+            t.slot_seconds
+        );
+    }
+}
+
+/// WAL-vs-sharded-trace agreement through a mid-run chaos kill. The
+/// sharded engine journals no WAL — its merged trace file IS the
+/// durable accounting record — so the agreement is pinned from both
+/// ends. (1) On the live HA fixture, which has both representations of
+/// the same history, the WAL fold and the WAL *bridged into trace form*
+/// and folded through `from_trace_lines` must produce field-identical
+/// reports: the two derivations are the same accounting. (2) A sharded
+/// chaos run's trace, folded through that same trace path, must then
+/// agree exactly with the run's authoritative counter fingerprint —
+/// the same counters the WAL-backed cluster journals — on completions,
+/// requeues and preemptions, and satisfy the per-job attempt identity
+/// the WAL fold pins.
+#[test]
+fn wal_and_sharded_trace_accounting_agree_through_a_chaos_kill() {
+    // -- (1) same history, two representations, one report --
+    let (vc, _) = chaos_run_with_wal();
+    let kv = vc.state.consul.kv();
+    let entries = kv.list_prefix(WAL_PREFIX);
+    let (wal_events, errors) = decode_wal_listing(&entries, 0);
+    assert_eq!(errors, 0, "the live WAL must decode cleanly");
+    let direct = from_wal(&wal_events);
+    let bridged_lines: Vec<String> =
+        wal_to_trace(&wal_events).iter().map(|e| e.to_json_line()).collect();
+    let bridged = from_trace_lines(bridged_lines.iter().map(|s| s.as_str()));
+    assert_eq!(bridged.skipped_lines, 0, "bridged WAL lines must all parse");
+    assert_eq!(bridged.jobs.len(), direct.jobs.len());
+    for (b, d) in bridged.jobs.iter().zip(direct.jobs.iter()) {
+        assert_eq!(b.job, d.job);
+        assert_eq!(b.tenant, d.tenant);
+        assert_eq!(b.attempts, d.attempts, "job {} attempts", b.job);
+        assert_eq!(b.requeues, d.requeues, "job {} requeues", b.job);
+        assert_eq!(b.preemptions, d.preemptions, "job {} preemptions", b.job);
+        assert_eq!(b.state, d.state, "job {} state", b.job);
+        assert!(
+            (b.slot_seconds - d.slot_seconds).abs() < 1e-9,
+            "job {}: bridged {} vs direct {} slot-seconds",
+            b.job,
+            b.slot_seconds,
+            d.slot_seconds
+        );
+    }
+
+    // -- (2) the sharded trace through the identical fold --
+    let mut spec = mix_spec(SimTime::from_secs(5));
+    spec.seed = 7; // first kill ~98s in: mid-run, inside the makespan
+    let trace_path = std::env::temp_dir()
+        .join("vhpc_acct_sharded_chaos_trace.jsonl")
+        .to_string_lossy()
+        .into_owned();
+    spec.trace_path = Some(trace_path.clone());
+    let jobs = prioritized_trace(16, 32);
+    let cfg = ShardRunConfig { shards: 4, warmup_slots: 24, ..ShardRunConfig::default() };
+    let o = run_sharded_chaos(spec, &jobs, SchedulePolicy::default(), 900.0, &cfg)
+        .expect("sharded chaos trace must drain");
+    assert!(
+        o.fingerprint.get("machines_crashed").copied().unwrap_or(0) > 0,
+        "the kill schedule must actually crash a machine"
+    );
+    let text = std::fs::read_to_string(&trace_path).expect("sharded trace file");
+    let _ = std::fs::remove_file(&trace_path);
+    let report = from_trace_lines(text.lines());
+    assert_eq!(report.skipped_lines, 0, "every merged line must parse");
+    assert_eq!(report.jobs.len(), o.jobs_submitted, "every submission must appear");
+
+    let counter = |k: &str| o.fingerprint.get(k).copied().unwrap_or(0);
+    let completed = report.jobs.iter().filter(|j| j.state == "completed").count() as u64;
+    let requeues: u64 = report.jobs.iter().map(|j| j.requeues as u64).sum();
+    let preemptions: u64 = report.jobs.iter().map(|j| j.preemptions as u64).sum();
+    assert_eq!(completed, counter("jobs_completed"), "completions: trace fold vs counters");
+    assert_eq!(requeues, counter("jobs_requeued"), "requeues: trace fold vs counters");
+    assert_eq!(preemptions, counter("jobs_preempted"), "preemptions: trace fold vs counters");
+    assert!(requeues > 0, "the mid-run kill must have requeued at least one job");
+    for j in &report.jobs {
+        assert_eq!(
+            j.attempts,
+            1 + j.requeues + j.preemptions,
+            "job {}: the WAL fold's attempt identity must hold on the sharded trace",
+            j.job
+        );
+    }
+    // the per-tenant rollup is exactly the per-job sums, as it is for
+    // the WAL fold
+    for t in &report.tenants {
+        let sum: f64 = report
+            .jobs
+            .iter()
+            .filter(|j| j.tenant == t.tenant)
+            .map(|j| j.slot_seconds)
+            .sum();
+        assert!(
+            (t.slot_seconds - sum).abs() < 1e-6,
+            "tenant {}: rollup {} vs job sum {sum}",
             t.tenant,
             t.slot_seconds
         );

@@ -234,6 +234,118 @@ fn perf_driver_fingerprints_are_deterministic_and_shard_count_invariant() {
     }
 }
 
+/// The sharded trace file is an observable, so it inherits the shard-
+/// invariance contract: `--shards N --trace F` must write the same
+/// *bytes* at shards 1, 2 and 4 (per-rank buffers merge in canonical
+/// `(t_ns, kind, entity)` order at the barrier), and turning tracing on
+/// must leave the counter fingerprint byte-identical to the untraced
+/// run — on the sharded path, not just the single-process one.
+#[test]
+fn sharded_trace_files_are_byte_identical_across_shard_counts() {
+    let spec = |trace: Option<String>| {
+        let mut s = mix_spec(SimTime::from_secs(5));
+        s.seed = 13;
+        s.trace_path = trace;
+        s
+    };
+    let mut pop = PopulationSpec::new(12, 31);
+    pop.rate_per_sec = 0.08;
+    let run = |shards, trace: Option<String>| {
+        run_sharded_tenants(
+            spec(trace),
+            pop,
+            SchedulePolicy::fairshare(),
+            TenantQuotas::default(),
+            180,
+            &shard_cfg(shards),
+        )
+        .expect("sharded tenant trace must drain")
+    };
+
+    let untraced = run(1, None);
+    assert_eq!((untraced.trace_events_written, untraced.trace_events_dropped), (0, 0));
+
+    let path = |shards: usize| {
+        std::env::temp_dir()
+            .join(format!("vhpc_det_sharded_trace_{shards}shards.jsonl"))
+            .to_string_lossy()
+            .into_owned()
+    };
+    let base_path = path(1);
+    let base = run(1, Some(base_path.clone()));
+    let base_bytes = std::fs::read(&base_path).expect("1-shard trace file");
+    assert!(base.trace_events_written > 0, "traced run wrote no events");
+    assert_eq!(base.trace_events_dropped, 0);
+    assert_eq!(
+        base_bytes.iter().filter(|b| **b == b'\n').count() as u64,
+        base.trace_events_written,
+        "written count must match the file's line count"
+    );
+    assert_identical(&base.fingerprint, &untraced.fingerprint, "sharded traced vs untraced");
+
+    for shards in [2usize, 4] {
+        let p = path(shards);
+        let o = run(shards, Some(p.clone()));
+        let bytes = std::fs::read(&p).expect("sharded trace file");
+        assert_identical(&o.fingerprint, &base.fingerprint, &format!("traced @ {shards} shards"));
+        assert_eq!(o.trace_events_written, base.trace_events_written);
+        assert!(
+            bytes == base_bytes,
+            "trace file diverged at {shards} shards ({} vs {} bytes)",
+            bytes.len(),
+            base_bytes.len()
+        );
+        let _ = std::fs::remove_file(&p);
+    }
+    let _ = std::fs::remove_file(&base_path);
+}
+
+/// Same property through the chaos driver: kills land on the window
+/// grid as boundary messages, and the resulting NodeDown/Requeue event
+/// flow must still serialize to the same bytes at any shard count.
+#[test]
+fn sharded_chaos_trace_files_are_byte_identical() {
+    let spec = |trace: Option<String>| {
+        let mut s = mix_spec(SimTime::from_secs(5));
+        s.seed = 7;
+        s.trace_path = trace;
+        s
+    };
+    let jobs = prioritized_trace(16, 32);
+    let path = |shards: usize| {
+        std::env::temp_dir()
+            .join(format!("vhpc_det_chaos_trace_{shards}shards.jsonl"))
+            .to_string_lossy()
+            .into_owned()
+    };
+    let run = |shards, trace: Option<String>| {
+        run_sharded_chaos(spec(trace), &jobs, SchedulePolicy::default(), 900.0, &shard_cfg(shards))
+            .expect("sharded chaos trace must drain")
+    };
+    let base_path = path(1);
+    let base = run(1, Some(base_path.clone()));
+    assert!(
+        base.fingerprint.get("machines_crashed").copied().unwrap_or(0) > 0,
+        "the kill schedule must actually crash a machine"
+    );
+    assert!(base.trace_events_written > 0);
+    let base_bytes = std::fs::read(&base_path).expect("1-shard chaos trace file");
+    for shards in [2usize, 4] {
+        let p = path(shards);
+        let o = run(shards, Some(p.clone()));
+        let bytes = std::fs::read(&p).expect("sharded chaos trace file");
+        assert_identical(&o.fingerprint, &base.fingerprint, &format!("chaos traced @ {shards} shards"));
+        assert!(
+            bytes == base_bytes,
+            "chaos trace file diverged at {shards} shards ({} vs {} bytes)",
+            bytes.len(),
+            base_bytes.len()
+        );
+        let _ = std::fs::remove_file(&p);
+    }
+    let _ = std::fs::remove_file(&base_path);
+}
+
 /// Drive one fixed synthetic workload through a cluster with the given
 /// trace sink (or none), returning the counter fingerprint plus the
 /// bus's written/dropped tallies.
